@@ -1,0 +1,120 @@
+//! In-situ inference serving (paper Fig 1b + §4's deployment phase): the
+//! simulation streams flow snapshots, the trained encoder runs *inside* the
+//! database (RedisAI-analogue) on the node's GPU slots, and only the latent
+//! codes are kept — the "much richer time history" use case.
+//!
+//! Reports per-request latency percentiles, throughput, and the achieved
+//! compression factor.
+//!
+//! Run: `cargo run --release --example inference_serving -- [ranks] [steps]`
+
+use std::time::Duration;
+
+use situ::ai::ModelRuntime;
+use situ::client::{tensor_key, Client};
+use situ::db::{DbServer, ServerConfig};
+use situ::runtime::Manifest;
+use situ::sim::cfd::{ChannelFlow, Grid, MeshSampler};
+use situ::telemetry::{StatAccum, Stopwatch, Table};
+use situ::util::fmt;
+
+fn main() -> situ::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let ranks: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(30);
+
+    let artifacts = situ::db::server::artifacts_dir();
+    let manifest = Manifest::load_dir(&artifacts)?;
+    let server = DbServer::start(ServerConfig::default())?;
+    println!("database up at {}; loading encoder into the model registry", server.addr);
+    {
+        let mut c = Client::connect(server.addr)?;
+        c.put_model_from_file("encoder", &artifacts.join(&manifest.artifact("encoder").unwrap().file))?;
+        // Stage the encoder parameters once; every rank references them.
+        let state = situ::ml::ParamState::load_init(&manifest, &artifacts)?;
+        for name in &manifest.enc_param_order {
+            let i = manifest.param_order.iter().position(|p| p == name).unwrap();
+            c.put_tensor(&format!("param_{name}"), &state.params[i])?;
+        }
+    }
+
+    // Producer: one shared flow, per-rank partitions (as in the e2e driver).
+    let sampler = MeshSampler::load(&artifacts.join("mesh_coords.bin"))?;
+    let mut flow = ChannelFlow::new(Grid::channel(20, 14, 10), 2e-3, 1, 0.1);
+    let addr = server.addr;
+
+    let mut handles = Vec::new();
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(ranks));
+    // Pre-generate snapshots per step so rank threads only measure the
+    // serving path.
+    let mut snaps = Vec::new();
+    for _ in 0..steps {
+        flow.step();
+        snaps.push(sampler.snapshot(&flow));
+    }
+    let snaps = std::sync::Arc::new(snaps);
+
+    let t0 = Stopwatch::start();
+    for rank in 0..ranks {
+        let snaps = std::sync::Arc::clone(&snaps);
+        let barrier = std::sync::Arc::clone(&barrier);
+        let enc_params: Vec<String> = manifest
+            .enc_param_order
+            .iter()
+            .map(|n| format!("param_{n}"))
+            .collect();
+        handles.push(std::thread::spawn(move || -> situ::Result<(StatAccum, usize, usize)> {
+            let mut c = Client::connect_retry(addr, 50, Duration::from_millis(10))?;
+            let device = ModelRuntime::device_for_rank(rank);
+            let mut lat = StatAccum::new();
+            let mut in_bytes = 0;
+            let mut out_bytes = 0;
+            barrier.wait();
+            for (step, snap) in snaps.iter().enumerate() {
+                let in_key = tensor_key("snap", rank, step as u64);
+                let z_key = tensor_key("latent", rank, step as u64);
+                let sw = Stopwatch::start();
+                c.put_tensor(&in_key, snap)?;
+                let mut keys = enc_params.clone();
+                keys.push(in_key.clone());
+                c.run_model("encoder", &keys, &[z_key.clone()], device)?;
+                let z = c.get_tensor(&z_key)?;
+                lat.add(sw.stop());
+                in_bytes += snap.nbytes();
+                out_bytes += z.nbytes();
+                // The raw snapshot is dropped; only the latent is kept.
+                c.del_tensor(&in_key)?;
+            }
+            Ok((lat, in_bytes, out_bytes))
+        }));
+    }
+
+    let mut all = StatAccum::new();
+    let (mut tot_in, mut tot_out) = (0usize, 0usize);
+    for h in handles {
+        let (lat, ib, ob) = h.join().expect("rank panicked")?;
+        all.merge(&lat);
+        tot_in += ib;
+        tot_out += ob;
+    }
+    let wall = t0.stop();
+
+    let mut table = Table::new(
+        "in situ inference serving (encoder inside the DB)",
+        &["metric", "value"],
+    );
+    table.row(&["ranks".into(), ranks.to_string()]);
+    table.row(&["requests".into(), format!("{}", all.count())]);
+    table.row(&["latency mean".into(), fmt::duration(all.mean())]);
+    table.row(&["latency σ".into(), fmt::duration(all.std())]);
+    table.row(&["latency min/max".into(), format!("{} / {}", fmt::duration(all.min()), fmt::duration(all.max()))]);
+    table.row(&["throughput".into(), format!("{:.1} req/s", all.count() as f64 / wall)]);
+    table.row(&["data ingested".into(), fmt::bytes(tot_in as u64)]);
+    table.row(&["latents kept".into(), fmt::bytes(tot_out as u64)]);
+    table.row(&[
+        "compression".into(),
+        format!("{:.0}x (manifest: {:.0}x)", tot_in as f64 / tot_out as f64, manifest.model.compression_factor),
+    ]);
+    table.print();
+    Ok(())
+}

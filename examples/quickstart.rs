@@ -1,0 +1,48 @@
+//! Quickstart: the paper's "one line per operation" coupling claim.
+//!
+//! Launches a co-located database, connects a client, sends and retrieves a
+//! tensor, uploads a model and runs in-database inference — the complete
+//! SmartRedis-analogue surface in a dozen lines of user code.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use situ::client::Client;
+use situ::db::{DbServer, ServerConfig};
+use situ::proto::Device;
+use situ::tensor::Tensor;
+
+fn main() -> situ::Result<()> {
+    // -- deployment: one co-located database -----------------------------
+    let server = DbServer::start(ServerConfig::default())?;
+    println!("database up at {} (engine={})", server.addr, server.config.engine.name());
+
+    // -- the one-line client API ------------------------------------------
+    let mut client = Client::connect(server.addr)?; // 1 line: init
+    let field = Tensor::from_f32(&[4, 8], (0..32).map(|i| i as f32).collect())?;
+    client.put_tensor("field_rank0_step0", &field)?; // 1 line: send
+    let back = client.get_tensor("field_rank0_step0")?; // 1 line: retrieve
+    assert_eq!(back, field);
+    println!("send/retrieve round trip OK ({} bytes)", field.nbytes());
+
+    // -- metadata ----------------------------------------------------------
+    client.put_meta("latest_step", "0")?;
+    println!("latest_step = {:?}", client.get_meta("latest_step")?);
+
+    // -- in-database inference (RedisAI-analogue, 3 lines) ----------------
+    let artifacts = situ::db::server::artifacts_dir();
+    if artifacts.join("resnet_lite_b1.hlo.txt").exists() {
+        client.put_model_from_file("resnet", &artifacts.join("resnet_lite_b1.hlo.txt"))?;
+        let x = Tensor::from_f32(&[1, 3, 64, 64], vec![0.1; 3 * 64 * 64])?;
+        client.put_tensor("img", &x)?; // step 1: send input
+        client.run_model("resnet", &["img".into()], &["logits".into()], Device::Gpu(0))?; // step 2
+        let logits = client.get_tensor("logits")?; // step 3: retrieve
+        let (mean, mn, mx) = logits.f32_stats()?;
+        println!("inference OK: logits {:?} mean={mean:.4} min={mn:.4} max={mx:.4}", logits.shape);
+    } else {
+        println!("(artifacts not built — run `make artifacts` to enable the inference demo)");
+    }
+
+    let (keys, bytes, ops, models, _) = client.info()?;
+    println!("db: {keys} keys, {bytes} bytes, {ops} ops, {models} models");
+    Ok(())
+}

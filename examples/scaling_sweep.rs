@@ -1,0 +1,93 @@
+//! Scaling sweep across deployments and engines on the simulated Polaris
+//! substrate — prints the paper-style series for Figs 3-6 in one run.
+//!
+//! Run: `cargo run --release --example scaling_sweep`
+
+use situ::cluster::netmodel::CostModel;
+use situ::cluster::scaling::sim_data_transfer;
+use situ::config::{Deployment, RunConfig};
+use situ::db::Engine;
+use situ::telemetry::Table;
+use situ::util::fmt;
+
+fn main() {
+    let model = CostModel::default();
+
+    // Fig 3: DB core sweep, co-located, both engines.
+    let mut t = Table::new(
+        "Fig 3 — send+retrieve vs DB cores (co-located, 24 ranks x 256KB)",
+        &["db cores", "redis", "keydb"],
+    );
+    for cores in [2usize, 4, 8, 16, 32] {
+        let mut row = vec![cores.to_string()];
+        for engine in [Engine::Redis, Engine::KeyDb] {
+            let mut cfg = RunConfig::default();
+            cfg.db_cores = cores;
+            cfg.engine = engine;
+            let st = sim_data_transfer(&cfg, &model, 42);
+            row.push(fmt::duration(st.send.mean() + st.retrieve.mean()));
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    // Fig 5a: weak scaling co-located.
+    let mut t = Table::new(
+        "Fig 5a — weak scaling, co-located (256KB/rank, 24 ranks/node)",
+        &["nodes", "ranks", "redis send", "redis retr", "keydb send", "keydb retr"],
+    );
+    for nodes in [1usize, 4, 16, 64, 192, 448] {
+        let mut row = vec![nodes.to_string(), (nodes * 24).to_string()];
+        for engine in [Engine::Redis, Engine::KeyDb] {
+            let mut cfg = RunConfig::default();
+            cfg.nodes = nodes;
+            cfg.engine = engine;
+            let st = sim_data_transfer(&cfg, &model, 42);
+            row.push(fmt::duration(st.send.mean()));
+            row.push(fmt::duration(st.retrieve.mean()));
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    // Fig 5b: clustered with fixed and proportional DB sizes.
+    let mut t = Table::new(
+        "Fig 5b — weak scaling, clustered (redis; rows: ranks, cols: DB nodes)",
+        &["sim nodes", "ranks", "1 DB node", "4 DB nodes", "16 DB nodes"],
+    );
+    for nodes in [1usize, 4, 16, 64] {
+        let mut row = vec![nodes.to_string(), (nodes * 24).to_string()];
+        for db_nodes in [1usize, 4, 16] {
+            let mut cfg = RunConfig::default();
+            cfg.nodes = nodes;
+            cfg.deployment = Deployment::Clustered { db_nodes };
+            let st = sim_data_transfer(&cfg, &model, 42);
+            row.push(fmt::duration(st.send.mean()));
+        }
+        t.row(&row);
+    }
+    t.print();
+
+    // Fig 6: strong scaling, 384MB total.
+    let total = 384usize << 20;
+    let mut t = Table::new(
+        "Fig 6 — strong scaling, co-located redis (384MB total)",
+        &["nodes", "ranks", "bytes/rank", "send", "retrieve"],
+    );
+    for nodes in [1usize, 4, 16, 64, 192, 448] {
+        let mut cfg = RunConfig::default();
+        cfg.nodes = nodes;
+        cfg.bytes_per_rank = (total / cfg.total_ranks()).max(1024);
+        let st = sim_data_transfer(&cfg, &model, 42);
+        t.row(&[
+            nodes.to_string(),
+            cfg.total_ranks().to_string(),
+            fmt::bytes(cfg.bytes_per_rank as u64),
+            fmt::duration(st.send.mean()),
+            fmt::duration(st.retrieve.mean()),
+        ]);
+    }
+    t.print();
+
+    println!("(constants from CostModel::default(); run `situ calibrate` to refit on this host)");
+}

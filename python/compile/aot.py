@@ -1,0 +1,309 @@
+"""AOT compile path: lower every L2 graph to HLO *text* + emit the manifest.
+
+This is the only place Python touches the pipeline; ``make artifacts`` runs it
+once and the rust binary is self-contained afterwards.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects with
+``proto.id() <= INT_MAX``.  The HLO text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --outdir, default ../artifacts):
+
+  train_step.hlo.txt     params+m+v+step+batch -> params'+m'+v'+step'+loss
+  grad_step.hlo.txt      params+batch          -> loss+grads       (DDP path)
+  apply_adam.hlo.txt     params+m+v+step+grads -> params'+m'+v'+step'
+  eval_step.hlo.txt      params+batch          -> loss+rel_err     (Eq. 1)
+  encoder.hlo.txt        enc_params+f          -> z                (Pallas path)
+  decoder.hlo.txt        dec_params+z          -> f~               (Pallas path)
+  autoencoder.hlo.txt    params+f              -> f~               (Pallas path)
+  resnet_lite_b{N}.hlo.txt  x[N,3,64,64] -> logits[N,1000] (weights baked)
+  params_init.bin        f32-LE concat of initial params (canonical order)
+  mesh_coords.bin        f32-LE level-0 coords [N,3] (rust CFD sampler input)
+  mesh_weights.bin       f32-LE level-0 quadrature weights [N]
+  manifest.json          signatures, param table, hyperparams, mesh info
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import mesh as mesh_mod
+from compile import model as model_mod
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default text form elides
+    # big literals as ``constant({...})``, which the rust-side parser would
+    # happily re-materialize as zeros — silently corrupting baked weights and
+    # mesh tables.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _sig(args) -> list[dict]:
+    out = []
+    for name, a in args:
+        out.append(
+            {
+                "name": name,
+                "dtype": str(a.dtype),
+                "shape": [int(s) for s in a.shape],
+            }
+        )
+    return out
+
+
+class Emitter:
+    def __init__(self, outdir: str):
+        self.outdir = outdir
+        self.artifacts = {}
+        os.makedirs(outdir, exist_ok=True)
+
+    def emit(self, name: str, fn, in_args: list[tuple[str, jax.ShapeDtypeStruct]],
+             out_names: list[str]):
+        """Lower ``fn(*specs)`` and record its signature in the manifest."""
+        t0 = time.time()
+        specs = [a for _, a in in_args]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        # Output signature from abstract evaluation.
+        out_shapes = jax.eval_shape(fn, *specs)
+        flat, _ = jax.tree.flatten(out_shapes)
+        assert len(flat) == len(out_names), (name, len(flat), len(out_names))
+        self.artifacts[name] = {
+            "file": fname,
+            "inputs": _sig(in_args),
+            "outputs": _sig(list(zip(out_names, flat))),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "bytes": len(text),
+        }
+        print(f"  {fname:28s} {len(text)/1e6:7.2f} MB  ({time.time()-t0:.1f}s)")
+
+
+def spec_like(x) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--latent", type=int, default=model_mod.LATENT_DEFAULT)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=model_mod.LEARNING_RATE)
+    ap.add_argument("--resnet-batches", default="1,4,16",
+                    help="comma list of resnet_lite batch sizes to lower")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = model_mod.ModelConfig(latent=args.latent, batch=args.batch, lr=args.lr)
+    hier = mesh_mod.build_hierarchy()
+    params = model_mod.init_params(cfg, hier, seed=args.seed)
+    order = model_mod.param_order(params)
+    enc_order = [k for k in order if k.startswith(("enc0_mlp", "enc1_mlp", "enc_lin"))]
+    dec_order = [k for k in order if k.startswith(("dec0_mlp", "dec1_mlp", "dec_lin"))]
+
+    n0 = hier.levels[0].n
+    c = model_mod.CHANNELS
+    f_spec = jax.ShapeDtypeStruct((c, n0), jnp.float32)
+    batch_spec = jax.ShapeDtypeStruct((cfg.batch, c, n0), jnp.float32)
+    z_spec = jax.ShapeDtypeStruct((cfg.latent,), jnp.float32)
+    step_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    p_specs = [(k, spec_like(params[k])) for k in order]
+
+    em = Emitter(args.outdir)
+    print(f"AOT lowering to {args.outdir} (latent={cfg.latent}, batch={cfg.batch})")
+
+    # --- train_step: the fully fused fwd+bwd+Adam artifact ------------------
+    np_ = len(order)
+
+    def train_step_flat(*flat):
+        p = dict(zip(order, flat[:np_]))
+        m = dict(zip(order, flat[np_: 2 * np_]))
+        v = dict(zip(order, flat[2 * np_: 3 * np_]))
+        step, batch = flat[3 * np_], flat[3 * np_ + 1]
+        new_p, new_m, new_v, new_step, loss = model_mod.train_step(
+            p, m, v, step, batch, hier, lr=cfg.lr
+        )
+        return (
+            tuple(new_p[k] for k in order)
+            + tuple(new_m[k] for k in order)
+            + tuple(new_v[k] for k in order)
+            + (new_step, loss)
+        )
+
+    train_in = (
+        p_specs
+        + [(f"m.{k}", s) for k, s in p_specs]
+        + [(f"v.{k}", s) for k, s in p_specs]
+        + [("step", step_spec), ("batch", batch_spec)]
+    )
+    train_out = (
+        order
+        + [f"m.{k}" for k in order]
+        + [f"v.{k}" for k in order]
+        + ["step", "loss"]
+    )
+    em.emit("train_step", train_step_flat, train_in, train_out)
+
+    # --- grad_step / apply_adam: DDP-style allreduce decomposition ----------
+    def grad_step_flat(*flat):
+        p = dict(zip(order, flat[:np_]))
+        batch = flat[np_]
+        loss, grads = model_mod.grad_flat(p, batch, hier)
+        return (loss,) + tuple(grads[k] for k in order)
+
+    em.emit(
+        "grad_step",
+        grad_step_flat,
+        p_specs + [("batch", batch_spec)],
+        ["loss"] + [f"g.{k}" for k in order],
+    )
+
+    def apply_adam_flat(*flat):
+        p = dict(zip(order, flat[:np_]))
+        m = dict(zip(order, flat[np_: 2 * np_]))
+        v = dict(zip(order, flat[2 * np_: 3 * np_]))
+        step = flat[3 * np_]
+        g = dict(zip(order, flat[3 * np_ + 1:]))
+        new_p, new_m, new_v, new_step = model_mod.apply_adam(p, m, v, step, g, lr=cfg.lr)
+        return (
+            tuple(new_p[k] for k in order)
+            + tuple(new_m[k] for k in order)
+            + tuple(new_v[k] for k in order)
+            + (new_step,)
+        )
+
+    em.emit(
+        "apply_adam",
+        apply_adam_flat,
+        p_specs
+        + [(f"m.{k}", s) for k, s in p_specs]
+        + [(f"v.{k}", s) for k, s in p_specs]
+        + [("step", step_spec)]
+        + [(f"g.{k}", s) for k, s in p_specs],
+        order + [f"m.{k}" for k in order] + [f"v.{k}" for k in order] + ["step"],
+    )
+
+    # --- eval_step: val loss + Eq.(1) relative error -------------------------
+    def eval_step_flat(*flat):
+        p = dict(zip(order, flat[:np_]))
+        batch = flat[np_]
+        return model_mod.eval_step(p, batch, hier)
+
+    em.emit("eval_step", eval_step_flat, p_specs + [("batch", batch_spec)],
+            ["loss", "rel_err"])
+
+    # --- inference artifacts (Pallas kernel path) ----------------------------
+    def encoder_flat(*flat):
+        p = dict(zip(enc_order, flat[:-1]))
+        return (model_mod.encode(p, flat[-1], hier, use_pallas=True),)
+
+    em.emit(
+        "encoder",
+        encoder_flat,
+        [(k, spec_like(params[k])) for k in enc_order] + [("f", f_spec)],
+        ["z"],
+    )
+
+    def decoder_flat(*flat):
+        p = dict(zip(dec_order, flat[:-1]))
+        return (model_mod.decode(p, flat[-1], hier, use_pallas=True),)
+
+    em.emit(
+        "decoder",
+        decoder_flat,
+        [(k, spec_like(params[k])) for k in dec_order] + [("z", z_spec)],
+        ["f_recon"],
+    )
+
+    def autoencoder_flat(*flat):
+        p = dict(zip(order, flat[:-1]))
+        return (model_mod.autoencode(p, flat[-1], hier, use_pallas=True),)
+
+    em.emit("autoencoder", autoencoder_flat, p_specs + [("f", f_spec)], ["f_recon"])
+
+    # --- resnet_lite inference models (weights baked as constants) ----------
+    rparams = model_mod.init_resnet_params()
+    for b in [int(x) for x in args.resnet_batches.split(",") if x]:
+        x_spec = jax.ShapeDtypeStruct((b, 3, model_mod.RESNET_HW, model_mod.RESNET_HW),
+                                      jnp.float32)
+        em.emit(
+            f"resnet_lite_b{b}",
+            lambda x: (model_mod.resnet_lite(rparams, x),),
+            [("x", x_spec)],
+            ["logits"],
+        )
+
+    # --- binary blobs for the rust side --------------------------------------
+    def write_bin(name: str, arr: np.ndarray):
+        path = os.path.join(args.outdir, name)
+        np.asarray(arr, dtype="<f4").tofile(path)
+        print(f"  {name:28s} {os.path.getsize(path)/1e3:7.1f} KB")
+
+    flat_init = np.concatenate([np.asarray(params[k]).ravel() for k in order])
+    write_bin("params_init.bin", flat_init)
+    write_bin("mesh_coords.bin", hier.levels[0].coords)
+    write_bin("mesh_weights.bin", hier.levels[0].weights)
+
+    param_table, off = [], 0
+    for k in order:
+        n = int(np.prod(params[k].shape))
+        param_table.append(
+            {"name": k, "shape": [int(s) for s in params[k].shape], "offset": off, "len": n}
+        )
+        off += n
+
+    manifest = {
+        "format": 1,
+        "generated_unix": int(time.time()),
+        "model": {
+            "channels": c,
+            "n_points": n0,
+            "latent": cfg.latent,
+            "batch": cfg.batch,
+            "lr": cfg.lr,
+            "adam": {"b1": model_mod.ADAM_B1, "b2": model_mod.ADAM_B2,
+                      "eps": model_mod.ADAM_EPS},
+            "n_param_tensors": np_,
+            "n_params_total": int(off),
+            "compression_factor": (c * n0) / cfg.latent,
+        },
+        "mesh": {
+            "levels": [list(l.shape) for l in hier.levels],
+            "domain": [mesh_mod.LX, mesh_mod.LY, mesh_mod.LZ],
+            "beta": mesh_mod.BETA,
+            "k_enc": hier.k_enc,
+            "k_dec": hier.k_dec,
+        },
+        "param_order": order,
+        "enc_param_order": enc_order,
+        "dec_param_order": dec_order,
+        "param_table": param_table,
+        "artifacts": em.artifacts,
+    }
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  manifest.json                ({len(em.artifacts)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

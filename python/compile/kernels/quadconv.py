@@ -1,0 +1,191 @@
+"""L1 Pallas kernels: the QuadConv quadrature contraction (and the MLP filter
+evaluation) as explicit TPU-style blocked kernels.
+
+HARDWARE ADAPTATION (see DESIGN.md §Hardware-Adaptation).  The original
+PyTorch-QuadConv package targets GPUs: one CUDA threadblock per output-point
+tile, features staged through shared memory, the channel contraction on the
+tensor cores.  The TPU re-think:
+
+  * the output-point axis ``J`` becomes the Pallas *grid*; each grid step owns
+    a ``BLOCK_J`` tile whose operand slices (``g``, ``fg``, ``wq``) are staged
+    HBM->VMEM by ``BlockSpec`` (VMEM plays the scratchpad role shared memory
+    played on the GPU);
+  * the (k, ci) reduction is flattened so the inner contraction is a single
+    ``dot_general`` of shape [BLOCK_J, CO, K*CI] x [BLOCK_J, K*CI] — a batched
+    matrix-vector product the MXU executes as (CO x K*CI) matmuls;
+  * neighbor gathering is *hoisted out* of the kernel: the mesh is static, so
+    the gather indices are AOT constants and XLA performs one fused gather
+    feeding the kernel.  The kernel body is branch-free and fully vectorized
+    (no scatter/atomics, unlike the GPU scatter-based implementation).
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.  Numerics are validated
+against ``ref.py``; TPU VMEM/MXU estimates live in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile along the output-point axis.  At CO=CI=16, K=16 this stages
+#   g:  64*16*16*16*4B = 1.0 MiB
+#   fg: 64*16*16*4B    = 64 KiB
+#   wq: 64*16*4B       = 4 KiB
+# per step — comfortably inside a TPU core's ~16 MiB VMEM with double
+# buffering (DESIGN.md §Perf).
+DEFAULT_BLOCK_J = 64
+
+
+def _contract_kernel(g_ref, v_ref, o_ref):
+    """out[j, co] = sum_l g[j, co, l] * v[j, l]   (l = flattened (k, ci))."""
+    g = g_ref[...]  # [BJ, CO, L]
+    v = v_ref[...]  # [BJ, L]
+    # Batched mat-vec on the MXU: contract l, batch j.
+    o_ref[...] = jax.lax.dot_general(
+        g,
+        v,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def quadconv_contract(
+    g: jnp.ndarray,  # [J, K, CO, CI]
+    fg: jnp.ndarray,  # [J, K, CI]
+    wq: jnp.ndarray,  # [J, K]
+    *,
+    block_j: int = DEFAULT_BLOCK_J,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas quadrature contraction; semantics == ref.quadconv_contract_ref.
+
+    Returns [J, CO].
+    """
+    j, k, co, ci = g.shape
+    bj = min(block_j, j)
+    if j % bj != 0:
+        # Pad the output-point axis up to a tile multiple; padded rows compute
+        # garbage that is sliced off (weights are NOT consulted there).
+        pad = (-j) % bj
+        g = jnp.pad(g, ((0, pad), (0, 0), (0, 0), (0, 0)))
+        fg = jnp.pad(fg, ((0, pad), (0, 0), (0, 0)))
+        wq = jnp.pad(wq, ((0, pad), (0, 0)))
+        out = quadconv_contract(g, fg, wq, block_j=bj, interpret=interpret)
+        return out[:j]
+
+    # Pre-scale the gathered features by the quadrature weights and flatten
+    # the reduction axis:  v[j, k*ci] = wq[j,k] * fg[j,k,ci].
+    v = (fg * wq[:, :, None]).reshape(j, k * ci)
+    gf = jnp.transpose(g, (0, 2, 1, 3)).reshape(j, co, k * ci)
+
+    grid = (j // bj,)
+    return pl.pallas_call(
+        _contract_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bj, co, k * ci), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bj, k * ci), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bj, co), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((j, co), jnp.float32),
+        interpret=interpret,
+    )(gf, v)
+
+
+def _mlp_tile_kernel(n_layers: int, d_ref, *refs):
+    """Five-layer MLP filter evaluated on a tile of coordinate offsets.
+
+    refs = (w0, b0, w1, b1, ..., o_ref).  Hidden activations live in VMEM for
+    the whole tile; the matmuls hit the MXU.
+    """
+    o_ref = refs[-1]
+    h = d_ref[...]  # [T, 3]
+    for i in range(n_layers):
+        w = refs[2 * i][...]
+        b = refs[2 * i + 1][...]
+        h = (
+            jax.lax.dot_general(
+                h, w, dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            + b
+        )
+        if i + 1 < n_layers:
+            h = jnp.tanh(h)
+    o_ref[...] = h
+
+
+def mlp_filter(
+    params: dict,
+    dcoords: jnp.ndarray,  # [..., 3]
+    c_out: int,
+    c_in: int,
+    *,
+    block_t: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas MLP filter evaluation; semantics == ref.mlp_filter_ref.
+
+    The leading axes are flattened into a point axis tiled by ``block_t``.
+    Returns [..., c_out, c_in].
+    """
+    n_layers = len([kk for kk in params if kk.startswith("w")])
+    lead = dcoords.shape[:-1]
+    t = 1
+    for s in lead:
+        t *= s
+    d = dcoords.reshape(t, 3)
+    bt = min(block_t, t)
+    pad = (-t) % bt
+    if pad:
+        d = jnp.pad(d, ((0, pad), (0, 0)))
+    tp = d.shape[0]
+
+    ws = [params[f"w{i}"] for i in range(n_layers)]
+    bs = [params[f"b{i}"] for i in range(n_layers)]
+    out_dim = ws[-1].shape[1]
+
+    in_specs = [pl.BlockSpec((bt, 3), lambda i: (i, 0))]
+    for w, b in zip(ws, bs):
+        in_specs.append(pl.BlockSpec(w.shape, lambda i: (0, 0)))
+        in_specs.append(pl.BlockSpec(b.shape, lambda i: (0,)))
+
+    out = pl.pallas_call(
+        functools.partial(_mlp_tile_kernel, n_layers),
+        grid=(tp // bt,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bt, out_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, out_dim), jnp.float32),
+        interpret=interpret,
+    )(d, *[x for pair in zip(ws, bs) for x in pair])
+    out = out[:t]
+    return out.reshape(lead + (c_out, c_in))
+
+
+def quadconv(
+    f: jnp.ndarray,  # [CI, N_in]
+    mlp_params: dict,
+    out_coords: jnp.ndarray,  # [J, 3]
+    in_coords: jnp.ndarray,  # [N_in, 3]
+    weights: jnp.ndarray,  # [N_in]
+    idx: jnp.ndarray,  # [J, K] int32
+    c_out: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Full QuadConv layer on the Pallas path; semantics == ref.quadconv_ref.
+
+    Gather is hoisted to XLA (static mesh => fused gather); the MLP filter and
+    the quadrature contraction are Pallas kernels.  Returns [c_out, J].
+    """
+    c_in = f.shape[0]
+    dcoords = in_coords[idx] - out_coords[:, None, :]  # [J, K, 3]
+    g = mlp_filter(mlp_params, dcoords, c_out, c_in, interpret=interpret)
+    fg = jnp.transpose(f, (1, 0))[idx]  # [J, K, CI]
+    wq = weights[idx]  # [J, K]
+    out = quadconv_contract(g, fg, wq, interpret=interpret)  # [J, CO]
+    return jnp.transpose(out, (1, 0))

@@ -1,0 +1,304 @@
+"""L2: the paper's compute graphs in JAX, AOT-lowered for the rust runtime.
+
+Two model families:
+
+* **QuadConv autoencoder** (paper §4, adapted from Doherty et al. 2023): a
+  2-block encoder / mirrored decoder over the static mesh hierarchy built in
+  ``mesh.py``.  Filters are 5-layer coordinate MLPs (spectral norm removed for
+  traceability, exactly as the paper did).  The *training* graph
+  (``train_step``: fwd + bwd + fused Adam) uses the differentiable reference
+  QuadConv path; the *inference* graphs (``encode``/``decode``/``autoencoder``)
+  call the L1 Pallas kernels, which pytest proves bit-compatible (to fp32
+  tolerance) with the reference path.
+
+* **resnet_lite**: the inference-benchmark model standing in for ResNet50
+  (substitution documented in DESIGN.md): a 3-stage residual CNN with the same
+  (n, 3, H, W) -> (n, 1000) signature.
+
+Everything here runs at build time only; the lowered HLO text is the
+interchange artifact executed by ``rust/src/runtime``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import mesh as mesh_mod
+from compile.kernels import quadconv as qc
+from compile.kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+CHANNELS = 4  # (p, u, v, w) — pressure + three velocity components
+HIDDEN_CH = 16  # internal data channels (paper: 16)
+MLP_HIDDEN = 32  # width of the filter MLPs
+MLP_LAYERS = 5  # paper: "five layer MLP"
+LATENT_DEFAULT = 100  # paper: latent dimension 100 (1700x compression study)
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+LEARNING_RATE = 1e-4  # paper: 0.0001, scaled linearly with ranks by the caller
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    latent: int = LATENT_DEFAULT
+    batch: int = 4
+    lr: float = LEARNING_RATE
+
+    @property
+    def n_points(self) -> int:
+        return int(np.prod(mesh_mod.LEVELS[0]))
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _init_mlp(key, c_out: int, c_in: int) -> dict:
+    """Filter MLP: 3 -> MLP_HIDDEN^(L-1) -> c_out*c_in, Glorot init."""
+    dims = [3] + [MLP_HIDDEN] * (MLP_LAYERS - 1) + [c_out * c_in]
+    params = {}
+    for i in range(MLP_LAYERS):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / (dims[i] + dims[i + 1]))
+        params[f"w{i}"] = scale * jax.random.normal(
+            sub, (dims[i], dims[i + 1]), jnp.float32
+        )
+        params[f"b{i}"] = jnp.zeros((dims[i + 1],), jnp.float32)
+    return params
+
+
+def init_params(cfg: ModelConfig, hier: mesh_mod.MeshHierarchy, seed: int = 0) -> dict:
+    """Flat ``{name: array}`` parameter dict (flatness keeps the AOT manifest
+    and the rust-side buffer management trivially ordered)."""
+    key = jax.random.key(seed)
+    n2 = hier.levels[2].n
+    flat_dim = HIDDEN_CH * n2
+    keys = jax.random.split(key, 8)
+    params = {}
+    # Encoder block 0: CHANNELS -> HIDDEN_CH, level0 -> level1.
+    for name, p in _init_mlp(keys[0], HIDDEN_CH, CHANNELS).items():
+        params[f"enc0_mlp.{name}"] = p
+    # Encoder block 1: HIDDEN_CH -> HIDDEN_CH, level1 -> level2.
+    for name, p in _init_mlp(keys[1], HIDDEN_CH, HIDDEN_CH).items():
+        params[f"enc1_mlp.{name}"] = p
+    scale = jnp.sqrt(2.0 / (flat_dim + cfg.latent))
+    params["enc_lin.w"] = scale * jax.random.normal(
+        keys[2], (flat_dim, cfg.latent), jnp.float32
+    )
+    params["enc_lin.b"] = jnp.zeros((cfg.latent,), jnp.float32)
+    params["dec_lin.w"] = scale * jax.random.normal(
+        keys[3], (cfg.latent, flat_dim), jnp.float32
+    )
+    params["dec_lin.b"] = jnp.zeros((flat_dim,), jnp.float32)
+    # Decoder block 1: HIDDEN_CH -> HIDDEN_CH, level2 -> level1.
+    for name, p in _init_mlp(keys[4], HIDDEN_CH, HIDDEN_CH).items():
+        params[f"dec1_mlp.{name}"] = p
+    # Decoder block 0: HIDDEN_CH -> CHANNELS, level1 -> level0.
+    for name, p in _init_mlp(keys[5], CHANNELS, HIDDEN_CH).items():
+        params[f"dec0_mlp.{name}"] = p
+    return params
+
+
+def param_order(params: dict) -> list[str]:
+    """Canonical (sorted) parameter ordering shared with the rust runtime."""
+    return sorted(params.keys())
+
+
+def _sub(params: dict, prefix: str) -> dict:
+    return {k.split(".", 1)[1]: v for k, v in params.items() if k.startswith(prefix + ".")}
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _quadconv_layer(use_pallas: bool) -> Callable:
+    return qc.quadconv if use_pallas else kref.quadconv_ref
+
+
+def encode(params: dict, f: jnp.ndarray, hier: mesh_mod.MeshHierarchy,
+           *, use_pallas: bool) -> jnp.ndarray:
+    """f: [CHANNELS, N0] -> latent [latent]."""
+    layer = _quadconv_layer(use_pallas)
+    l0, l1, l2 = hier.levels
+    h = layer(f, _sub(params, "enc0_mlp"), l1.coords, l0.coords, l0.weights,
+              hier.enc_idx[0], HIDDEN_CH)
+    h = jax.nn.gelu(h)
+    h = layer(h, _sub(params, "enc1_mlp"), l2.coords, l1.coords, l1.weights,
+              hier.enc_idx[1], HIDDEN_CH)
+    h = jax.nn.gelu(h)
+    z = h.reshape(-1) @ params["enc_lin.w"] + params["enc_lin.b"]
+    return z
+
+
+def decode(params: dict, z: jnp.ndarray, hier: mesh_mod.MeshHierarchy,
+           *, use_pallas: bool) -> jnp.ndarray:
+    """latent [latent] -> reconstruction [CHANNELS, N0]."""
+    layer = _quadconv_layer(use_pallas)
+    l0, l1, l2 = hier.levels
+    h = z @ params["dec_lin.w"] + params["dec_lin.b"]
+    h = jax.nn.gelu(h).reshape(HIDDEN_CH, l2.n)
+    h = layer(h, _sub(params, "dec1_mlp"), l1.coords, l2.coords, l2.weights,
+              hier.dec_idx[1], HIDDEN_CH)
+    h = jax.nn.gelu(h)
+    h = layer(h, _sub(params, "dec0_mlp"), l0.coords, l1.coords, l1.weights,
+              hier.dec_idx[0], CHANNELS)
+    return h
+
+
+def autoencode(params: dict, f: jnp.ndarray, hier: mesh_mod.MeshHierarchy,
+               *, use_pallas: bool) -> jnp.ndarray:
+    return decode(params, encode(params, f, hier, use_pallas=use_pallas), hier,
+                  use_pallas=use_pallas)
+
+
+def batch_loss(params: dict, batch: jnp.ndarray, hier: mesh_mod.MeshHierarchy,
+               *, use_pallas: bool = False) -> jnp.ndarray:
+    """MSE over a batch [B, CHANNELS, N0] (paper: standard MSE loss)."""
+    recon = jax.vmap(lambda f: autoencode(params, f, hier, use_pallas=use_pallas))(batch)
+    return jnp.mean((recon - batch) ** 2)
+
+
+def relative_error(params: dict, batch: jnp.ndarray, hier: mesh_mod.MeshHierarchy,
+                   *, use_pallas: bool = False) -> jnp.ndarray:
+    """Paper Eq. (1): mean over samples of ||F - F~||_F / ||F||_F."""
+    recon = jax.vmap(lambda f: autoencode(params, f, hier, use_pallas=use_pallas))(batch)
+    num = jnp.sqrt(jnp.sum((batch - recon) ** 2, axis=(1, 2)))
+    den = jnp.sqrt(jnp.sum(batch ** 2, axis=(1, 2)))
+    return jnp.mean(num / den)
+
+
+# ---------------------------------------------------------------------------
+# Training step (fwd + bwd + Adam, one fused artifact)
+# ---------------------------------------------------------------------------
+
+
+def train_step(params: dict, m: dict, v: dict, step: jnp.ndarray,
+               batch: jnp.ndarray, hier: mesh_mod.MeshHierarchy,
+               lr: float = LEARNING_RATE):
+    """One Adam step on the MSE loss.  Entirely inside one HLO module so the
+    rust trainer performs a step with a single PJRT execute (no per-layer
+    dispatch on the request path)."""
+    loss, grads = jax.value_and_grad(batch_loss)(params, batch, hier)
+    step = step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        new_m[k] = ADAM_B1 * m[k] + (1.0 - ADAM_B1) * g
+        new_v[k] = ADAM_B2 * v[k] + (1.0 - ADAM_B2) * g * g
+        mh = new_m[k] / bc1
+        vh = new_v[k] / bc2
+        new_p[k] = params[k] - lr * mh / (jnp.sqrt(vh) + ADAM_EPS)
+    return new_p, new_m, new_v, step, loss
+
+
+def eval_step(params: dict, batch: jnp.ndarray, hier: mesh_mod.MeshHierarchy):
+    """Validation loss + paper-Eq.(1) relative error, one artifact."""
+    return (
+        batch_loss(params, batch, hier),
+        relative_error(params, batch, hier),
+    )
+
+
+def grad_flat(params: dict, batch: jnp.ndarray, hier: mesh_mod.MeshHierarchy):
+    """(loss, grads) — exported separately so the rust trainer can implement
+    data-parallel gradient allreduce across ranks before applying Adam."""
+    loss, grads = jax.value_and_grad(batch_loss)(params, batch, hier)
+    return loss, grads
+
+
+def apply_adam(params: dict, m: dict, v: dict, step: jnp.ndarray, grads: dict,
+               lr: float = LEARNING_RATE):
+    """Adam update given externally-reduced gradients (DDP-style)."""
+    step = step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        new_m[k] = ADAM_B1 * m[k] + (1.0 - ADAM_B1) * g
+        new_v[k] = ADAM_B2 * v[k] + (1.0 - ADAM_B2) * g * g
+        mh = new_m[k] / bc1
+        vh = new_v[k] / bc2
+        new_p[k] = params[k] - lr * mh / (jnp.sqrt(vh) + ADAM_EPS)
+    return new_p, new_m, new_v, step
+
+
+# ---------------------------------------------------------------------------
+# resnet_lite — the ResNet50 stand-in for the inference benchmarks (Figs 7-8)
+# ---------------------------------------------------------------------------
+
+RESNET_STAGES = (16, 32, 64)  # channels per stage, 2 residual blocks each
+RESNET_CLASSES = 1000
+RESNET_HW = 64  # input is (n, 3, 64, 64); see DESIGN.md substitutions
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def init_resnet_params(seed: int = 7) -> dict:
+    key = jax.random.key(seed)
+    params = {}
+
+    def conv_w(key, c_out, c_in, kh=3, kw=3):
+        scale = jnp.sqrt(2.0 / (c_in * kh * kw))
+        return scale * jax.random.normal(key, (c_out, c_in, kh, kw), jnp.float32)
+
+    keys = iter(jax.random.split(key, 64))
+    params["stem.w"] = conv_w(next(keys), RESNET_STAGES[0], 3)
+    c_prev = RESNET_STAGES[0]
+    for s, c in enumerate(RESNET_STAGES):
+        for b in range(2):
+            cin = c_prev if b == 0 else c
+            params[f"s{s}b{b}.w1"] = conv_w(next(keys), c, cin)
+            params[f"s{s}b{b}.b1"] = jnp.zeros((c,), jnp.float32)
+            params[f"s{s}b{b}.w2"] = conv_w(next(keys), c, c)
+            params[f"s{s}b{b}.b2"] = jnp.zeros((c,), jnp.float32)
+            if cin != c:
+                params[f"s{s}b{b}.proj"] = conv_w(next(keys), c, cin, 1, 1)
+        c_prev = c
+    scale = jnp.sqrt(2.0 / (RESNET_STAGES[-1] + RESNET_CLASSES))
+    params["head.w"] = scale * jax.random.normal(
+        next(keys), (RESNET_STAGES[-1], RESNET_CLASSES), jnp.float32
+    )
+    params["head.b"] = jnp.zeros((RESNET_CLASSES,), jnp.float32)
+    return params
+
+
+def resnet_lite(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [n, 3, 64, 64] -> logits [n, 1000]."""
+    h = _conv(x, params["stem.w"], stride=2)  # 32x32
+    for s, c in enumerate(RESNET_STAGES):
+        stride = 1 if s == 0 else 2
+        for b in range(2):
+            inp = h
+            st = stride if b == 0 else 1
+            h = _conv(h, params[f"s{s}b{b}.w1"], stride=st)
+            h = jax.nn.relu(h + params[f"s{s}b{b}.b1"][None, :, None, None])
+            h = _conv(h, params[f"s{s}b{b}.w2"])
+            h = h + params[f"s{s}b{b}.b2"][None, :, None, None]
+            if f"s{s}b{b}.proj" in params:
+                inp = _conv(inp, params[f"s{s}b{b}.proj"], stride=st)
+            elif st != 1:
+                inp = _conv(inp, jnp.eye(h.shape[1], inp.shape[1])[:, :, None, None], stride=st)
+            h = jax.nn.relu(h + inp)
+    h = h.mean(axis=(2, 3))  # global average pool
+    return h @ params["head.w"] + params["head.b"]

@@ -1,0 +1,25 @@
+import numpy as np
+import pytest
+
+from compile import mesh as mesh_mod
+from compile import model as model_mod
+
+
+@pytest.fixture(scope="session")
+def hier():
+    return mesh_mod.build_hierarchy()
+
+
+@pytest.fixture(scope="session")
+def cfg():
+    return model_mod.ModelConfig()
+
+
+@pytest.fixture(scope="session")
+def params(cfg, hier):
+    return model_mod.init_params(cfg, hier, seed=0)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)

@@ -1,0 +1,135 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the kernel layer.  Hypothesis sweeps
+shapes and data; every property asserts allclose against the reference
+semantics that the differentiable training graph uses.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quadconv as qc
+from compile.kernels import ref
+
+
+def _np(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    j=st.integers(1, 96),
+    k=st.integers(1, 16),
+    co=st.integers(1, 8),
+    ci=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_contract_matches_ref(j, k, co, ci, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(_np(rng, j, k, co, ci))
+    fg = jnp.asarray(_np(rng, j, k, ci))
+    wq = jnp.asarray(_np(rng, j, k))
+    want = ref.quadconv_contract_ref(g, fg, wq)
+    got = qc.quadconv_contract(g, fg, wq)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    j=st.integers(1, 40),
+    block=st.sampled_from([1, 2, 8, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_contract_block_size_invariance(j, block, seed):
+    """Result must not depend on the tile size (incl. padding path)."""
+    rng = np.random.default_rng(seed)
+    k, co, ci = 4, 3, 2
+    g = jnp.asarray(_np(rng, j, k, co, ci))
+    fg = jnp.asarray(_np(rng, j, k, ci))
+    wq = jnp.asarray(_np(rng, j, k))
+    want = ref.quadconv_contract_ref(g, fg, wq)
+    got = qc.quadconv_contract(g, fg, wq, block_j=block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_contract_zero_weights_zero_output(rng):
+    g = jnp.asarray(_np(rng, 8, 4, 3, 2))
+    fg = jnp.asarray(_np(rng, 8, 4, 2))
+    wq = jnp.zeros((8, 4), jnp.float32)
+    got = qc.quadconv_contract(g, fg, wq)
+    assert float(jnp.abs(got).max()) == 0.0
+
+
+def test_contract_linearity(rng):
+    """Contraction is linear in the features."""
+    g = jnp.asarray(_np(rng, 16, 4, 3, 2))
+    f1 = jnp.asarray(_np(rng, 16, 4, 2))
+    f2 = jnp.asarray(_np(rng, 16, 4, 2))
+    wq = jnp.asarray(_np(rng, 16, 4))
+    lhs = qc.quadconv_contract(g, f1 + 2.0 * f2, wq)
+    rhs = qc.quadconv_contract(g, f1, wq) + 2.0 * qc.quadconv_contract(g, f2, wq)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=3e-5, rtol=3e-5)
+
+
+def _mlp_params(rng, co, ci, hidden=16, layers=5):
+    dims = [3] + [hidden] * (layers - 1) + [co * ci]
+    p = {}
+    for i in range(layers):
+        p[f"w{i}"] = jnp.asarray(_np(rng, dims[i], dims[i + 1]) * 0.5)
+        p[f"b{i}"] = jnp.asarray(_np(rng, dims[i + 1]) * 0.1)
+    return p
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 300),
+    co=st.integers(1, 6),
+    ci=st.integers(1, 6),
+    block=st.sampled_from([32, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mlp_filter_matches_ref(t, co, ci, block, seed):
+    rng = np.random.default_rng(seed)
+    p = _mlp_params(rng, co, ci)
+    d = jnp.asarray(_np(rng, t, 3))
+    want = ref.mlp_filter_ref(p, d, co, ci)
+    got = qc.mlp_filter(p, d, co, ci, block_t=block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5, rtol=3e-5)
+
+
+def test_mlp_filter_leading_axes(rng):
+    """Filter evaluation must be shape-polymorphic over leading axes."""
+    p = _mlp_params(rng, 4, 3)
+    d = jnp.asarray(_np(rng, 5, 7, 3))
+    want = ref.mlp_filter_ref(p, d, 4, 3)
+    got = qc.mlp_filter(p, d, 4, 3)
+    assert got.shape == (5, 7, 4, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5, rtol=3e-5)
+
+
+def test_full_quadconv_layer_on_mesh(hier, rng):
+    """Gather + filter + contraction on the real mesh hierarchy."""
+    l0, l1 = hier.levels[0], hier.levels[1]
+    p = _mlp_params(rng, 8, 4)
+    f = jnp.asarray(_np(rng, 4, l0.n))
+    want = ref.quadconv_ref(
+        f, p, jnp.asarray(l1.coords), jnp.asarray(l0.coords),
+        jnp.asarray(l0.weights), jnp.asarray(hier.enc_idx[0]), 8,
+    )
+    got = qc.quadconv(
+        f, p, jnp.asarray(l1.coords), jnp.asarray(l0.coords),
+        jnp.asarray(l0.weights), jnp.asarray(hier.enc_idx[0]), 8,
+    )
+    assert got.shape == (8, l1.n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_contract_bf16_loose(rng):
+    """bf16 inputs run and stay within bf16-appropriate tolerance."""
+    g = jnp.asarray(_np(rng, 32, 8, 4, 4)).astype(jnp.bfloat16).astype(jnp.float32)
+    fg = jnp.asarray(_np(rng, 32, 8, 4)).astype(jnp.bfloat16).astype(jnp.float32)
+    wq = jnp.asarray(_np(rng, 32, 8)).astype(jnp.bfloat16).astype(jnp.float32)
+    want = ref.quadconv_contract_ref(g, fg, wq)
+    got = qc.quadconv_contract(g, fg, wq)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-3)

@@ -1,0 +1,110 @@
+"""Mesh hierarchy invariants: quadrature exactness, neighbor-table sanity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import mesh as mesh_mod
+
+
+def test_level_sizes(hier):
+    assert [l.n for l in hier.levels] == [1024, 256, 64]
+
+
+def test_weights_integrate_constants_exactly(hier):
+    """Trapezoid weights must integrate 1 to the exact domain volume."""
+    for l in hier.levels:
+        np.testing.assert_allclose(l.weights.sum(), mesh_mod.volume(), rtol=1e-5)
+
+
+def test_weights_positive(hier):
+    for l in hier.levels:
+        assert (l.weights > 0).all()
+
+
+def test_coords_inside_domain(hier):
+    for l in hier.levels:
+        assert (l.coords[:, 0] >= 0).all() and (l.coords[:, 0] <= mesh_mod.LX).all()
+        assert (l.coords[:, 1] >= 0).all() and (l.coords[:, 1] <= mesh_mod.LY).all()
+        assert (l.coords[:, 2] >= 0).all() and (l.coords[:, 2] <= mesh_mod.LZ).all()
+
+
+def test_wall_normal_stretching(hier):
+    """y-spacings must be monotonically increasing away from the wall
+    (tanh clustering toward y=0... actually tanh(beta s)/tanh(beta) clusters
+    toward the far end; verify spacing is monotone, i.e. genuinely
+    non-uniform in one direction)."""
+    ny = hier.levels[0].shape[1]
+    ys = np.unique(hier.levels[0].coords[:, 1])
+    assert len(ys) == ny
+    dys = np.diff(ys)
+    assert (dys > 0).all()
+    # Non-uniform: the largest spacing is materially bigger than the smallest.
+    assert dys.max() / dys.min() > 1.5
+
+
+def test_knn_indices_valid(hier):
+    for l, idx in enumerate(hier.enc_idx):
+        n_in = hier.levels[l].n
+        assert idx.min() >= 0 and idx.max() < n_in
+        assert idx.shape == (hier.levels[l + 1].n, hier.k_enc)
+    for l, idx in enumerate(hier.dec_idx):
+        n_in = hier.levels[l + 1].n
+        assert idx.min() >= 0 and idx.max() < n_in
+        assert idx.shape == (hier.levels[l].n, hier.k_dec)
+
+
+def test_knn_rows_unique(hier):
+    """A neighbor must not appear twice for one output point."""
+    for idx in list(hier.enc_idx) + list(hier.dec_idx):
+        for row in idx:
+            assert len(set(row.tolist())) == len(row)
+
+
+def test_knn_first_is_nearest(hier):
+    """Column 0 must hold the true nearest input point."""
+    out_c = hier.levels[1].coords
+    in_c = hier.levels[0].coords
+    d2 = ((out_c[:, None, :] - in_c[None, :, :]) ** 2).sum(axis=2)
+    np.testing.assert_array_equal(hier.enc_idx[0][:, 0], d2.argmin(axis=1))
+
+
+def test_knn_sorted_by_distance(hier):
+    out_c = hier.levels[1].coords
+    in_c = hier.levels[0].coords
+    idx = hier.enc_idx[0]
+    for j in range(0, out_c.shape[0], 37):
+        d = ((in_c[idx[j]] - out_c[j]) ** 2).sum(axis=1)
+        assert (np.diff(d) >= -1e-12).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_out=st.integers(1, 30),
+    n_in=st.integers(1, 60),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_knn_property_random_clouds(n_out, n_in, seed):
+    rng = np.random.default_rng(seed)
+    k = min(4, n_in)
+    a = rng.normal(size=(n_out, 3))
+    b = rng.normal(size=(n_in, 3))
+    idx = mesh_mod.knn_indices(a, b, k)
+    d2 = ((a[:, None, :] - b[None, :, :]) ** 2).sum(axis=2)
+    # Every selected neighbor is at least as close as every non-selected one.
+    for j in range(n_out):
+        sel = set(idx[j].tolist())
+        dmax = d2[j, idx[j]].max()
+        others = [d2[j, i] for i in range(n_in) if i not in sel]
+        if others:
+            assert dmax <= min(others) + 1e-12
+
+
+def test_quadrature_linear_exactness(hier):
+    """Tensor-trapezoid weights on these node sets integrate linears to a few
+    percent (they are cell-measure weights, not interpolatory weights)."""
+    l = hier.levels[0]
+    f = 2.0 + 3.0 * l.coords[:, 0]
+    exact = (2.0 + 3.0 * mesh_mod.LX / 2.0) * mesh_mod.volume()
+    approx = (f * l.weights).sum()
+    assert abs(approx - exact) / abs(exact) < 0.05

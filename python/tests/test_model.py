@@ -1,0 +1,123 @@
+"""L2 model correctness: shapes, pallas-vs-ref parity, training dynamics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as model_mod
+
+
+def _snapshot(rng, hier, b=None):
+    """Synthetic smooth + fluctuating (p,u,v,w) field batch."""
+    n = hier.levels[0].n
+    c = model_mod.CHANNELS
+    shape = (c, n) if b is None else (b, c, n)
+    x = hier.levels[0].coords
+    base = np.stack(
+        [np.sin(2 * np.pi * x[:, 0] / 4.0 + i) * np.cos(np.pi * x[:, 1]) for i in range(c)]
+    ).astype(np.float32)
+    if b is not None:
+        base = np.stack([base] * b)
+    noise = 0.1 * rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(base + noise)
+
+
+def test_encode_decode_shapes(params, hier, cfg, rng):
+    f = _snapshot(rng, hier)
+    z = model_mod.encode(params, f, hier, use_pallas=False)
+    assert z.shape == (cfg.latent,)
+    f2 = model_mod.decode(params, z, hier, use_pallas=False)
+    assert f2.shape == f.shape
+
+
+def test_pallas_matches_ref_end_to_end(params, hier, rng):
+    """The inference (Pallas) path must agree with the training (ref) path."""
+    f = _snapshot(rng, hier)
+    a = model_mod.autoencode(params, f, hier, use_pallas=False)
+    b = model_mod.autoencode(params, f, hier, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4)
+
+
+def test_relative_error_zero_for_identity(params, hier, rng):
+    f = _snapshot(rng, hier, b=2)
+    num = jnp.sqrt(jnp.sum((f - f) ** 2, axis=(1, 2)))
+    den = jnp.sqrt(jnp.sum(f ** 2, axis=(1, 2)))
+    assert float(jnp.mean(num / den)) == 0.0
+
+
+def test_relative_error_range(params, hier, rng):
+    f = _snapshot(rng, hier, b=2)
+    err = model_mod.relative_error(params, f, hier)
+    assert 0.0 < float(err) < 10.0
+
+
+def test_train_step_decreases_loss(params, hier, cfg, rng):
+    """A few Adam steps on a fixed batch must reduce the MSE."""
+    batch = _snapshot(rng, hier, b=cfg.batch)
+    p = params
+    m = {k: jnp.zeros_like(v) for k, v in p.items()}
+    v = {k: jnp.zeros_like(x) for k, x in p.items()}
+    step = jnp.int32(0)
+    ts = jax.jit(lambda p, m, v, s, b: model_mod.train_step(p, m, v, s, b, hier, lr=3e-3))
+    losses = []
+    for _ in range(30):
+        p, m, v, step, loss = ts(p, m, v, step, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.95, losses
+    # The tail of the trajectory should be consistently below the head.
+    assert max(losses[-5:]) < min(losses[:3]), losses
+    assert int(step) == 30
+
+
+def test_grad_plus_apply_matches_train_step(params, hier, cfg, rng):
+    """The DDP decomposition (grad_step + apply_adam) must equal the fused
+    train_step after one step."""
+    batch = _snapshot(rng, hier, b=cfg.batch)
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(x) for k, x in params.items()}
+    step = jnp.int32(0)
+    p1, m1, v1, s1, loss1 = model_mod.train_step(params, m, v, step, batch, hier)
+    loss2, grads = model_mod.grad_flat(params, batch, hier)
+    p2, m2, v2, s2 = model_mod.apply_adam(params, m, v, step, grads)
+    np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-6)
+    for k in params:
+        np.testing.assert_allclose(
+            np.asarray(p1[k]), np.asarray(p2[k]), atol=1e-6, rtol=1e-6
+        )
+
+
+def test_adam_bias_correction_first_step(params, hier, cfg, rng):
+    """After one step from zero moments, update direction == -lr * sign-ish:
+    |Δp| <= lr * (1 + eps slack) elementwise (Adam's step-size bound)."""
+    batch = _snapshot(rng, hier, b=cfg.batch)
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(x) for k, x in params.items()}
+    p1, _, _, _, _ = model_mod.train_step(params, m, v, jnp.int32(0), batch, hier,
+                                          lr=model_mod.LEARNING_RATE)
+    for k in params:
+        dp = np.abs(np.asarray(p1[k] - params[k]))
+        assert dp.max() <= model_mod.LEARNING_RATE * 1.01
+
+
+def test_param_order_stable(params):
+    order = model_mod.param_order(params)
+    assert order == sorted(order)
+    assert len(order) == len(params)
+
+
+def test_resnet_lite_shapes():
+    p = model_mod.init_resnet_params()
+    for b in (1, 2):
+        x = jnp.zeros((b, 3, model_mod.RESNET_HW, model_mod.RESNET_HW), jnp.float32)
+        y = model_mod.resnet_lite(p, x)
+        assert y.shape == (b, model_mod.RESNET_CLASSES)
+
+
+def test_resnet_lite_batch_consistency(rng):
+    """Per-sample results must be independent of batching."""
+    p = model_mod.init_resnet_params()
+    x = jnp.asarray(rng.normal(size=(4, 3, 64, 64)).astype(np.float32))
+    full = model_mod.resnet_lite(p, x)
+    single = jnp.concatenate([model_mod.resnet_lite(p, x[i : i + 1]) for i in range(4)])
+    np.testing.assert_allclose(np.asarray(full), np.asarray(single), atol=2e-4, rtol=2e-4)

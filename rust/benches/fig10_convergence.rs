@@ -1,0 +1,59 @@
+//! Fig 10 — convergence of the training loss, validation loss and
+//! validation relative reconstruction error (Eq. 1) during in-situ training
+//! of the QuadConv autoencoder.
+//!
+//! Paper shape: train and validation losses decrease smoothly by ~2 orders
+//! of magnitude over 500 epochs; the validation error decreases by ~1 order
+//! to ~10%.  This bench runs a shortened schedule and checks monotone-ish
+//! decrease; the full run is examples/insitu_training.rs (EXPERIMENTS.md).
+
+use situ::orchestrator::driver::{run_insitu_training, InSituTrainingConfig};
+use situ::telemetry::Table;
+
+fn main() {
+    let artifacts = situ::db::server::artifacts_dir();
+    if !artifacts.join("manifest.json").exists() {
+        println!("fig10 SKIPPED: artifacts not built");
+        return;
+    }
+    let cfg = InSituTrainingConfig {
+        artifacts_dir: artifacts,
+        grid: (20, 14, 10),
+        nu: 2e-3,
+        sim_ranks: 4,
+        ml_ranks: 1, // fused train_step fast path
+        epochs: 50,
+        snapshot_every: 2,
+        solver_steps: 50,
+        seed: 0,
+    };
+    let report = run_insitu_training(&cfg).expect("in situ run");
+
+    let mut t = Table::new(
+        "Fig 10: convergence during in situ training (shortened schedule)",
+        &["epoch", "train_loss", "val_loss", "val_rel_err"],
+    );
+    for log in report.history.iter().step_by(5) {
+        t.row(&[
+            log.epoch.to_string(),
+            format!("{:.6}", log.train_loss),
+            format!("{:.6}", log.val_loss),
+            format!("{:.4}", log.val_rel_err),
+        ]);
+    }
+    t.print();
+
+    let first = &report.history[0];
+    let last = report.history.last().unwrap();
+    println!(
+        "train loss: {:.4} -> {:.4} ({:.1}x); val err: {:.1}% -> {:.1}%",
+        first.train_loss,
+        last.train_loss,
+        first.train_loss / last.train_loss,
+        first.val_rel_err * 100.0,
+        last.val_rel_err * 100.0
+    );
+    assert!(last.train_loss < first.train_loss, "training must converge");
+    assert!(last.val_loss.is_finite() && last.val_rel_err.is_finite());
+    println!("fig10 OK (full 2-orders-of-magnitude run: examples/insitu_training.rs)");
+}

@@ -1,0 +1,56 @@
+//! Fig 3 — cost of data send/retrieve vs CPU cores assigned to the
+//! co-located database, Redis vs KeyDB (24 ranks × 256KB × 40 iterations).
+//!
+//! Paper shape: both engines flat for ≥8 cores with similar plateaus; KeyDB
+//! already performant at 4 cores; Redis degraded below 8.
+
+use situ::cluster::netmodel::CostModel;
+use situ::cluster::scaling::sim_data_transfer;
+use situ::config::RunConfig;
+use situ::db::Engine;
+use situ::telemetry::Table;
+use situ::util::fmt;
+
+fn main() {
+    let model = CostModel::default();
+    let mut table = Table::new(
+        "Fig 3: send + retrieve cost vs DB cores (co-located, 24 ranks x 256KB x 40 iters)",
+        &["db cores", "redis send", "redis retrieve", "keydb send", "keydb retrieve"],
+    );
+    let mut plateau = std::collections::BTreeMap::new();
+    for cores in [2usize, 4, 8, 16, 32] {
+        let mut row = vec![cores.to_string()];
+        for engine in [Engine::Redis, Engine::KeyDb] {
+            let mut cfg = RunConfig::default();
+            cfg.db_cores = cores;
+            cfg.engine = engine;
+            let st = sim_data_transfer(&cfg, &model, 42);
+            row.push(fmt::duration(st.send.mean()));
+            row.push(fmt::duration(st.retrieve.mean()));
+            plateau.insert((engine.name(), cores), st.send.mean() + st.retrieve.mean());
+        }
+        table.row(&row);
+    }
+    table.print();
+
+    // Shape assertions (the paper's qualitative claims).
+    let r = |c: usize| plateau[&("redis", c)];
+    let k = |c: usize| plateau[&("keydb", c)];
+    println!("shape checks:");
+    println!(
+        "  redis flat >=8 cores: 8c/16c ratio = {:.3} (paper: ~1.0)",
+        r(8) / r(16)
+    );
+    println!(
+        "  redis degraded at 4 cores: 4c/8c ratio = {:.2} (paper: >1)",
+        r(4) / r(8)
+    );
+    println!(
+        "  keydb performant at 4 cores: keydb4/redis8 = {:.3} (paper: ~1.0)",
+        k(4) / r(8)
+    );
+    assert!((r(8) / r(16) - 1.0).abs() < 0.05);
+    assert!(r(4) / r(8) > 1.5);
+    assert!((k(4) / r(8) - 1.0).abs() < 0.1);
+    println!("fig3 OK");
+}

@@ -1,0 +1,86 @@
+//! Fig 4 — send/retrieve time and throughput vs per-rank data size, for
+//! both deployments and both engines (24 ranks, 40 iterations).
+//!
+//! Paper shape: (i) send ≈ retrieve, redis ≈ keydb; (ii) co-located ≈
+//! clustered at this scale (network not a bottleneck on Slingshot);
+//! (iii) cost ~constant below 256KB (fixed request cost) and ~linear above
+//! (constant throughput, most efficient 256KB–16MB).
+//!
+//! The DES sweep is additionally grounded by REAL TCP-server measurements
+//! on this host for the sizes that fit a single machine.
+
+use situ::cluster::netmodel::CostModel;
+use situ::cluster::scaling::sim_data_transfer;
+use situ::config::{Deployment, RunConfig};
+use situ::db::{DbServer, Engine, ServerConfig};
+use situ::sim::reproducer::{run_data_loop, ReproducerConfig};
+use situ::telemetry::Table;
+use situ::util::fmt;
+
+fn main() {
+    let model = CostModel::default();
+    let sizes: Vec<usize> = (0..=14).map(|p| 1024usize << p).collect(); // 1KB..16MB
+
+    let mut time_t = Table::new(
+        "Fig 4a: transfer time vs size/rank (24 ranks, 40 iters)",
+        &["size/rank", "coloc redis send", "coloc keydb send", "clustered redis send", "coloc redis retr"],
+    );
+    let mut thr_t = Table::new(
+        "Fig 4b: throughput vs size/rank",
+        &["size/rank", "co-located redis", "clustered redis"],
+    );
+    for &bytes in &sizes {
+        let mut cfg = RunConfig::default();
+        cfg.bytes_per_rank = bytes;
+        let coloc_redis = sim_data_transfer(&cfg, &model, 1);
+        cfg.engine = Engine::KeyDb;
+        let coloc_keydb = sim_data_transfer(&cfg, &model, 1);
+        cfg.engine = Engine::Redis;
+        cfg.deployment = Deployment::Clustered { db_nodes: 1 };
+        let clustered = sim_data_transfer(&cfg, &model, 1);
+        time_t.row(&[
+            fmt::bytes(bytes as u64),
+            fmt::duration(coloc_redis.send.mean()),
+            fmt::duration(coloc_keydb.send.mean()),
+            fmt::duration(clustered.send.mean()),
+            fmt::duration(coloc_redis.retrieve.mean()),
+        ]);
+        thr_t.row(&[
+            fmt::bytes(bytes as u64),
+            fmt::throughput(coloc_redis.throughput_per_rank(bytes)),
+            fmt::throughput(clustered.throughput_per_rank(bytes)),
+        ]);
+    }
+    time_t.print();
+    thr_t.print();
+
+    // --- real-host grounding (single node, scaled-down rank count) --------
+    let server = DbServer::start(ServerConfig { with_models: false, ..Default::default() })
+        .expect("server");
+    let mut real_t = Table::new(
+        "Fig 4 (real TCP server on this host, 4 ranks x 10 iters)",
+        &["size/rank", "send", "retrieve", "throughput"],
+    );
+    for bytes in [1024usize, 16 * 1024, 256 * 1024, 4 << 20] {
+        let times = run_data_loop(&ReproducerConfig {
+            addr: server.addr,
+            ranks: 4,
+            bytes_per_rank: bytes,
+            iterations: 10,
+            warmup: 2,
+            compute_secs: 0.0,
+        })
+        .expect("reproducer");
+        let snap = times.snapshot();
+        let send = snap["send"].mean();
+        let retr = snap["retrieve"].mean();
+        real_t.row(&[
+            fmt::bytes(bytes as u64),
+            fmt::duration(send),
+            fmt::duration(retr),
+            fmt::throughput(2.0 * bytes as f64 / (send + retr)),
+        ]);
+    }
+    real_t.print();
+    println!("fig4 OK");
+}

@@ -1,0 +1,94 @@
+//! Fig 5 — weak scaling of send/retrieve to the full machine (448 nodes,
+//! 10 752 ranks; 256KB/rank, 24 ranks/node).
+//!
+//! Paper shape: (5a) co-located = horizontal lines for both ops and both
+//! engines (the headline "perfect scaling efficiency"); (5b) clustered with
+//! a fixed DB degrades ~linearly beyond a threshold, restored by sharding
+//! the DB proportionally.
+
+use situ::cluster::netmodel::CostModel;
+use situ::cluster::scaling::sim_data_transfer;
+use situ::config::{Deployment, RunConfig};
+use situ::db::Engine;
+use situ::telemetry::Table;
+use situ::util::fmt;
+
+fn main() {
+    let model = CostModel::default();
+    let node_counts = [1usize, 2, 4, 8, 16, 48, 112, 224, 448];
+
+    // --- 5a: co-located ----------------------------------------------------
+    let mut t = Table::new(
+        "Fig 5a: weak scaling, co-located DB (256KB/rank)",
+        &["nodes", "ranks", "redis send", "redis retr", "keydb send", "keydb retr"],
+    );
+    let mut base = None;
+    let mut worst_ratio: f64 = 1.0;
+    for &nodes in &node_counts {
+        let mut row = vec![nodes.to_string(), (nodes * 24).to_string()];
+        for engine in [Engine::Redis, Engine::KeyDb] {
+            let mut cfg = RunConfig::default();
+            cfg.nodes = nodes;
+            cfg.engine = engine;
+            let st = sim_data_transfer(&cfg, &model, 42);
+            if engine == Engine::Redis {
+                let total = st.send.mean() + st.retrieve.mean();
+                let b = *base.get_or_insert(total);
+                worst_ratio = worst_ratio.max(total / b).max(b / total);
+            }
+            row.push(fmt::duration(st.send.mean()));
+            row.push(fmt::duration(st.retrieve.mean()));
+        }
+        t.row(&row);
+    }
+    t.print();
+    println!(
+        "co-located scaling efficiency: worst deviation from flat = {:.2}% (paper: perfect)",
+        (worst_ratio - 1.0) * 100.0
+    );
+    assert!(worst_ratio < 1.05, "co-located weak scaling must be flat");
+
+    // --- 5b: clustered -------------------------------------------------------
+    let mut t = Table::new(
+        "Fig 5b: weak scaling, clustered DB (redis, send; columns = DB nodes)",
+        &["sim nodes", "ranks", "1 DB", "4 DB", "16 DB"],
+    );
+    let mut fixed_small = 0.0;
+    let mut fixed_big = 0.0;
+    let mut prop = Vec::new();
+    for &nodes in &[1usize, 4, 16, 64] {
+        let mut row = vec![nodes.to_string(), (nodes * 24).to_string()];
+        for db_nodes in [1usize, 4, 16] {
+            let mut cfg = RunConfig::default();
+            cfg.nodes = nodes;
+            cfg.deployment = Deployment::Clustered { db_nodes };
+            let st = sim_data_transfer(&cfg, &model, 42);
+            let v = st.send.mean();
+            row.push(fmt::duration(v));
+            if db_nodes == 1 && nodes == 1 {
+                fixed_small = v;
+            }
+            if db_nodes == 1 && nodes == 64 {
+                fixed_big = v;
+            }
+            if db_nodes == nodes {
+                prop.push(v);
+            }
+        }
+        t.row(&row);
+    }
+    t.print();
+    println!(
+        "fixed 1-node DB degradation at 64 nodes: {:.1}x (paper: ~linear in ranks)",
+        fixed_big / fixed_small
+    );
+    let prop_dev = prop.iter().cloned().fold(0.0f64, f64::max)
+        / prop.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "proportional sharding (1:1 DB:sim nodes) deviation from flat: {:.2}%",
+        (prop_dev - 1.0) * 100.0
+    );
+    assert!(fixed_big / fixed_small > 10.0, "fixed DB must bottleneck");
+    assert!(prop_dev < 1.15, "proportional sharding restores scaling");
+    println!("fig5 OK");
+}

@@ -1,0 +1,63 @@
+//! Fig 6 — strong scaling of send/retrieve with the co-located deployment:
+//! total payload fixed at 384MB (a 230³ grid's pressure+velocity fields),
+//! per-rank size shrinking as the run scales out.
+//!
+//! Paper shape: times fall linearly with rank count while the per-rank size
+//! stays ≥256KB, then flatten toward the fixed-request-cost floor.
+
+use situ::cluster::netmodel::CostModel;
+use situ::cluster::scaling::sim_data_transfer;
+use situ::config::RunConfig;
+use situ::telemetry::Table;
+use situ::util::fmt;
+
+fn main() {
+    let model = CostModel::default();
+    let total = 384usize << 20;
+    let mut t = Table::new(
+        "Fig 6: strong scaling, co-located redis (384MB total)",
+        &["nodes", "ranks", "bytes/rank", "send", "retrieve", "ideal send"],
+    );
+    let node_counts = [1usize, 2, 4, 8, 16, 48, 112, 224, 448];
+    let mut first = None;
+    let mut series = Vec::new();
+    for &nodes in &node_counts {
+        let mut cfg = RunConfig::default();
+        cfg.nodes = nodes;
+        cfg.bytes_per_rank = (total / cfg.total_ranks()).max(256);
+        let st = sim_data_transfer(&cfg, &model, 9);
+        let send = st.send.mean();
+        let (n0, s0) = *first.get_or_insert((nodes, send));
+        let ideal = s0 * n0 as f64 / nodes as f64;
+        series.push((nodes, cfg.bytes_per_rank, send, ideal));
+        t.row(&[
+            nodes.to_string(),
+            cfg.total_ranks().to_string(),
+            fmt::bytes(cfg.bytes_per_rank as u64),
+            fmt::duration(send),
+            fmt::duration(st.retrieve.mean()),
+            fmt::duration(ideal),
+        ]);
+    }
+    t.print();
+
+    // Shape checks: near-ideal while bytes/rank is clearly above the 256KB
+    // knee; the knee itself is soft (fixed cost ~ byte cost there); floor
+    // below.
+    for &(nodes, bytes, send, ideal) in &series {
+        let eff = ideal / send;
+        if bytes >= 1024 * 1024 {
+            println!("  nodes={nodes}: efficiency {:.2} (>=1MB regime)", eff);
+            assert!(eff > 0.75, "strong scaling efficiency at {nodes} nodes: {eff}");
+        } else if bytes >= 256 * 1024 {
+            println!("  nodes={nodes}: efficiency {:.2} (knee region)", eff);
+            assert!(eff > 0.4, "knee efficiency at {nodes} nodes: {eff}");
+        }
+    }
+    let last = series.last().unwrap();
+    assert!(
+        last.2 > last.3,
+        "sub-256KB regime must sit above the ideal line (fixed-cost floor)"
+    );
+    println!("fig6 OK");
+}

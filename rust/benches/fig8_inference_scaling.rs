@@ -1,0 +1,130 @@
+//! Fig 8 — weak and strong scaling of in-situ inference (co-located Redis,
+//! ResNet-lite, 4 GPU slots per node, 6 ranks pinned per GPU).
+//!
+//! The GPU service times come from REAL PJRT executions measured on this
+//! host at each batch size; the cluster is the calibrated DES.
+//!
+//! Paper shape: weak scaling perfectly flat for both model-evaluation and
+//! total cost; strong scaling: eval degrades at small batch but the faster
+//! transfers amortize it — total cost still scales perfectly.
+
+use std::collections::BTreeMap;
+
+use situ::cluster::netmodel::CostModel;
+use situ::cluster::scaling::sim_inference;
+use situ::config::RunConfig;
+use situ::runtime::Executor;
+use situ::sim::reproducer::run_inline_baseline;
+use situ::telemetry::Table;
+use situ::util::fmt;
+
+fn main() {
+    let artifacts = situ::db::server::artifacts_dir();
+    // Measure real eval times per batch (falls back to a linear model if
+    // artifacts are missing).
+    let mut eval_times: BTreeMap<usize, f64> = BTreeMap::new();
+    if artifacts.join("manifest.json").exists() {
+        let exec = Executor::new().expect("executor");
+        for b in [1usize, 4, 16] {
+            let name = format!("resnet_lite_b{b}");
+            exec.load_artifact(&name, &artifacts.join(format!("{name}.hlo.txt"))).expect("load");
+            let t = run_inline_baseline(&exec, &name, &[b, 3, 64, 64], 6, 2).expect("bench").mean();
+            eval_times.insert(b, t);
+            println!("measured eval time batch {b}: {}", fmt::duration(t));
+        }
+    } else {
+        println!("(artifacts missing; using analytic eval model)");
+        for b in [1usize, 4, 16] {
+            eval_times.insert(b, 1.5e-3 + 0.8e-3 * b as f64);
+        }
+    }
+    let eval = |b: usize| -> f64 {
+        // Piecewise-linear interpolation over measured points (sub-linear in
+        // batch, exactly the paper's observation).
+        if let Some(t) = eval_times.get(&b) {
+            return *t;
+        }
+        let (b0, t0) = eval_times.range(..b).next_back().map(|(k, v)| (*k, *v)).unwrap_or((1, eval_times[&1]));
+        let (b1, t1) = eval_times.range(b..).next().map(|(k, v)| (*k, *v)).unwrap_or((16, eval_times[&16]));
+        if b1 == b0 {
+            t0
+        } else {
+            t0 + (t1 - t0) * (b - b0) as f64 / (b1 - b0) as f64
+        }
+    };
+
+    let model = CostModel::default();
+    let nodes_list = [1usize, 4, 16, 64, 192, 448];
+
+    // --- weak scaling: batch fixed at 4 ---------------------------------
+    let mut t = Table::new(
+        "Fig 8 (weak): batch 4 per rank, co-located redis",
+        &["nodes", "ranks", "eval", "total"],
+    );
+    let mut base_total = None;
+    let mut worst: f64 = 1.0;
+    for &nodes in &nodes_list {
+        let mut cfg = RunConfig::default();
+        cfg.nodes = nodes;
+        let batch = 4usize;
+        let st = sim_inference(
+            &cfg,
+            &model,
+            batch,
+            batch * 3 * 64 * 64 * 4,
+            batch * 1000 * 4,
+            &eval,
+            3,
+        );
+        let total = st.total.mean();
+        let b = *base_total.get_or_insert(total);
+        worst = worst.max(total / b).max(b / total);
+        t.row(&[
+            nodes.to_string(),
+            cfg.total_ranks().to_string(),
+            fmt::duration(st.eval.mean()),
+            fmt::duration(total),
+        ]);
+    }
+    t.print();
+    println!("weak-scaling deviation from flat: {:.2}% (paper: perfect)", (worst - 1.0) * 100.0);
+    assert!(worst < 1.05);
+
+    // --- strong scaling: total batch fixed, per-rank batch shrinks -------
+    let mut t = Table::new(
+        "Fig 8 (strong): total batch 16*24 fixed, per-rank batch = 16/nodes",
+        &["nodes", "ranks", "batch/rank", "eval", "total", "ideal total"],
+    );
+    let mut first = None;
+    for &nodes in &[1usize, 2, 4, 8, 16] {
+        let mut cfg = RunConfig::default();
+        cfg.nodes = nodes;
+        let batch = (16 / nodes).max(1);
+        let st = sim_inference(
+            &cfg,
+            &model,
+            batch,
+            batch * 3 * 64 * 64 * 4,
+            batch * 1000 * 4,
+            &eval,
+            3,
+        );
+        let total = st.total.mean();
+        let (n0, t0) = *first.get_or_insert((nodes, total));
+        let ideal = t0 * n0 as f64 / nodes as f64 * 1.0_f64.max(batch as f64 * nodes as f64 / 16.0);
+        t.row(&[
+            nodes.to_string(),
+            cfg.total_ranks().to_string(),
+            batch.to_string(),
+            fmt::duration(st.eval.mean()),
+            fmt::duration(total),
+            fmt::duration(ideal),
+        ]);
+    }
+    t.print();
+    println!(
+        "paper: eval departs from ideal at small batch; total stays near-linear\n\
+         because the shrinking transfers amortize the eval degradation"
+    );
+    println!("fig8 OK");
+}

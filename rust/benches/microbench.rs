@@ -1,0 +1,119 @@
+//! Microbenchmarks of the framework hot paths (the §Perf instrument):
+//! protocol codec, store ops, DES event rate, literal conversion, and the
+//! end-to-end TCP round trip.  Before/after numbers live in
+//! EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use situ::cluster::des::Server;
+use situ::db::Store;
+use situ::proto::{Request, Response};
+use situ::telemetry::Table;
+use situ::tensor::Tensor;
+use situ::util::fmt;
+use situ::util::rng::Rng;
+
+fn bench(name: &str, table: &mut Table, mut f: impl FnMut() -> usize) {
+    // Warm up, then time enough iterations for >=0.2s.
+    let mut iters = 1usize;
+    loop {
+        let t0 = Instant::now();
+        let mut work = 0usize;
+        for _ in 0..iters {
+            work += f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt > 0.2 || iters > 1 << 22 {
+            let per = dt / iters as f64;
+            table.row(&[
+                name.to_string(),
+                fmt::duration(per),
+                format!("{:.2e} ops/s", iters as f64 / dt),
+                if work > 0 {
+                    fmt::throughput(work as f64 / dt)
+                } else {
+                    "-".into()
+                },
+            ]);
+            return;
+        }
+        iters = (iters as f64 * (0.25 / dt.max(1e-9))).ceil() as usize;
+        iters = iters.clamp(1, 1 << 22);
+    }
+}
+
+fn main() {
+    let mut table = Table::new(
+        "framework microbenchmarks (hot paths)",
+        &["path", "per-op", "rate", "payload throughput"],
+    );
+    let mut rng = Rng::new(1);
+
+    // Protocol codec, 256KB tensor (the paper's canonical size).
+    let payload = Tensor::from_f32(&[65536], rng.normal_vec_f32(65536)).unwrap();
+    let req = Request::PutTensor { key: "field_rank0_step0".into(), tensor: payload.clone() };
+    let mut buf = Vec::with_capacity(300 * 1024);
+    bench("proto encode 256KB", &mut table, || {
+        buf.clear();
+        req.encode(&mut buf);
+        buf.len()
+    });
+    let encoded = buf.clone();
+    bench("proto decode 256KB", &mut table, || {
+        let r = Request::decode(&encoded).unwrap();
+        match r {
+            Request::PutTensor { tensor, .. } => tensor.nbytes(),
+            _ => 0,
+        }
+    });
+    let resp = Response::Tensor(payload.clone());
+    bench("proto encode resp 256KB", &mut table, || {
+        buf.clear();
+        resp.encode(&mut buf);
+        buf.len()
+    });
+
+    // Store ops.
+    let store = Store::new();
+    store.put_tensor("k", payload.clone()).unwrap();
+    bench("store put 256KB", &mut table, || {
+        store.put_tensor("k", payload.clone()).unwrap();
+        payload.nbytes()
+    });
+    bench("store get 256KB", &mut table, || store.get_tensor("k").unwrap().nbytes());
+    let small = Tensor::from_f32(&[16], vec![0.0; 16]).unwrap();
+    store.put_tensor("s", small.clone()).unwrap();
+    bench("store get 64B", &mut table, || store.get_tensor("s").unwrap().nbytes());
+
+    // DES reservation rate.
+    bench("des reserve x1000", &mut table, || {
+        let mut s = Server::new(4);
+        for i in 0..1000 {
+            s.reserve(i as f64 * 1e-6, 3e-6);
+        }
+        0
+    });
+
+    // Tensor <-> f32 conversion (the client-side pack/unpack cost).
+    bench("tensor to_f32 256KB", &mut table, || payload.to_f32().unwrap().len() * 4);
+
+    // Real TCP round trip (client + server on this host).
+    let server = situ::db::DbServer::start(situ::db::ServerConfig {
+        with_models: false,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut client = situ::client::Client::connect(server.addr).unwrap();
+    bench("tcp put+get 256KB", &mut table, || {
+        client.put_tensor("b", &payload).unwrap();
+        client.get_tensor("b").unwrap();
+        2 * payload.nbytes()
+    });
+    bench("tcp put+get 1KB", &mut table, || {
+        client.put_tensor("c", &small).unwrap();
+        client.get_tensor("c").unwrap();
+        2 * small.nbytes()
+    });
+
+    table.print();
+}

@@ -1,0 +1,44 @@
+//! Table 1 — PHASTA(-standin) solver components during in situ training,
+//! averaged across ranks: equation formation, equation solution, client
+//! initialization, metadata transfer, training data send.
+//!
+//! Paper numbers (36M elements, 960 ranks): formation 45.4s, solution
+//! 453.4s, client init 0.002s, metadata 0.065s, send 0.120s — framework
+//! overhead ≪1% of PDE integration.  Here the solver is the real in-repo
+//! NS solver at host scale; the claim under test is the *ratio*.
+
+use situ::orchestrator::driver::{run_insitu_training, InSituTrainingConfig};
+
+fn main() {
+    let artifacts = situ::db::server::artifacts_dir();
+    if !artifacts.join("manifest.json").exists() {
+        println!("table1 SKIPPED: artifacts not built");
+        return;
+    }
+    let cfg = InSituTrainingConfig {
+        artifacts_dir: artifacts,
+        grid: (32, 24, 16), // big enough that the solve dominates
+        nu: 2e-3,
+        sim_ranks: 4,
+        ml_ranks: 1,
+        epochs: 10,
+        snapshot_every: 2,
+        solver_steps: 30,
+        seed: 0,
+    };
+    let report = run_insitu_training(&cfg).expect("in situ run");
+    report.solver_table.print();
+    println!(
+        "framework overhead on solver: {:.4}% of PDE integration (paper: <<1%)",
+        report.solver_overhead_frac * 100.0
+    );
+    // The paper's claim scaled to this host: overhead well under the PDE
+    // integration cost.  (The absolute floor differs — our solver step is
+    // milliseconds, not minutes — so the bound is looser here.)
+    assert!(
+        report.solver_overhead_frac < 0.25,
+        "framework overhead too large: {:.3}",
+        report.solver_overhead_frac
+    );
+    println!("table1 OK");
+}

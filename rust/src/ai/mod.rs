@@ -1,0 +1,157 @@
+//! RedisAI analogue: the model registry and in-database model execution.
+//!
+//! The paper's in situ inference flow (Fig 1b) is three client calls:
+//! `put_tensor(input)` → `run_model(key, in, out, device)` →
+//! `unpack_tensor(output)`.  The model itself lives *inside* the database
+//! process and executes on a node-local device pool (Polaris: 4 A100s, with
+//! 6 simulation ranks pinned per GPU).  Here the registry compiles uploaded
+//! HLO-text artifacts through the PJRT [`crate::runtime::Executor`] and the
+//! device pool tracks per-slot queueing exactly like RedisAI's GPU contexts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::db::Store;
+use crate::error::{Error, Result};
+use crate::proto::Device;
+use crate::runtime::Executor;
+use crate::telemetry::StatAccum;
+
+/// Number of GPU slots per node (Polaris nodes carry 4 A100s).
+pub const GPUS_PER_NODE: usize = 4;
+
+/// Per-device execution statistics.
+#[derive(Debug, Default)]
+pub struct DeviceStats {
+    pub executions: AtomicU64,
+    pub eval: Mutex<StatAccum>,
+    pub queue_wait: Mutex<StatAccum>,
+}
+
+/// Model registry + device pool living inside one DB server.
+pub struct ModelRuntime {
+    exec: Executor,
+    /// One lock per GPU slot; executions targeting a slot serialize on it,
+    /// reproducing RedisAI's per-device run queue.
+    gpu_slots: Vec<Arc<Mutex<()>>>,
+    pub cpu_stats: DeviceStats,
+    pub gpu_stats: Vec<DeviceStats>,
+    models: Mutex<Vec<String>>,
+}
+
+impl ModelRuntime {
+    pub fn new(exec: Executor) -> ModelRuntime {
+        ModelRuntime {
+            exec,
+            gpu_slots: (0..GPUS_PER_NODE).map(|_| Arc::new(Mutex::new(()))).collect(),
+            cpu_stats: DeviceStats::default(),
+            gpu_stats: (0..GPUS_PER_NODE).map(|_| DeviceStats::default()).collect(),
+            models: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Upload + compile a model from HLO text (the `AI.MODELSET` analogue).
+    pub fn put_model(&self, key: &str, hlo_text: &str) -> Result<()> {
+        self.exec.load_hlo_text(key, hlo_text)?;
+        let mut m = self.models.lock().unwrap();
+        if !m.iter().any(|k| k == key) {
+            m.push(key.to_string());
+        }
+        Ok(())
+    }
+
+    /// Load + compile a model from an artifact file (driver-side upload).
+    pub fn put_model_from_file(&self, key: &str, path: &std::path::Path) -> Result<()> {
+        self.exec.load_artifact(key, path)?;
+        let mut m = self.models.lock().unwrap();
+        if !m.iter().any(|k| k == key) {
+            m.push(key.to_string());
+        }
+        Ok(())
+    }
+
+    pub fn n_models(&self) -> u64 {
+        self.models.lock().unwrap().len() as u64
+    }
+
+    pub fn has_model(&self, key: &str) -> bool {
+        self.models.lock().unwrap().iter().any(|k| k == key)
+    }
+
+    /// The `AI.MODELRUN` analogue: gather inputs from the store, execute on
+    /// the requested device slot, scatter outputs back into the store.
+    pub fn run_model(
+        &self,
+        store: &Store,
+        key: &str,
+        in_keys: &[String],
+        out_keys: &[String],
+        device: Device,
+    ) -> Result<()> {
+        if !self.has_model(key) {
+            return Err(Error::ModelNotFound(key.to_string()));
+        }
+        let inputs = in_keys
+            .iter()
+            .map(|k| store.get_tensor(k))
+            .collect::<Result<Vec<_>>>()?;
+
+        let (stats, _slot_guard) = match device {
+            Device::Cpu => (&self.cpu_stats, None),
+            Device::Gpu(i) => {
+                let i = i as usize;
+                if i >= self.gpu_slots.len() {
+                    return Err(Error::Invalid(format!("gpu slot {i} out of range")));
+                }
+                let qw = crate::telemetry::Stopwatch::start();
+                let guard = self.gpu_slots[i].lock().unwrap();
+                self.gpu_stats[i]
+                    .queue_wait
+                    .lock()
+                    .unwrap()
+                    .add(qw.stop());
+                (&self.gpu_stats[i], Some(guard))
+            }
+        };
+
+        let sw = crate::telemetry::Stopwatch::start();
+        let outputs = self.exec.execute(key, inputs)?;
+        stats.eval.lock().unwrap().add(sw.stop());
+        stats.executions.fetch_add(1, Ordering::Relaxed);
+
+        if outputs.len() != out_keys.len() {
+            return Err(Error::Shape(format!(
+                "model '{key}' produced {} outputs, client named {}",
+                outputs.len(),
+                out_keys.len()
+            )));
+        }
+        for (k, t) in out_keys.iter().zip(outputs) {
+            store.put_tensor(k, t)?;
+        }
+        Ok(())
+    }
+
+    /// Round-robin device assignment used by clients: the paper pins 6
+    /// simulation ranks to each of the 4 GPUs.
+    pub fn device_for_rank(rank: usize) -> Device {
+        Device::Gpu((rank % GPUS_PER_NODE) as u8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_pinning_balances() {
+        let mut counts = [0usize; GPUS_PER_NODE];
+        for r in 0..24 {
+            match ModelRuntime::device_for_rank(r) {
+                Device::Gpu(i) => counts[i as usize] += 1,
+                Device::Cpu => panic!("rank must map to a gpu"),
+            }
+        }
+        assert_eq!(counts, [6, 6, 6, 6], "paper: 6 clients pinned per GPU");
+    }
+}

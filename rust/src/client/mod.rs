@@ -1,0 +1,277 @@
+//! SmartRedis-analogue client library.
+//!
+//! The paper's integration claim is that coupling a simulation to the
+//! framework costs *one line per operation*: initialize a client, send a
+//! tensor, retrieve a tensor, run a model.  This module keeps that surface:
+//!
+//! ```no_run
+//! use situ::client::Client;
+//! use situ::tensor::Tensor;
+//! let mut c = Client::connect("127.0.0.1:7700".parse().unwrap()).unwrap();
+//! c.put_tensor("field_rank0_step2", &Tensor::from_f32(&[4], vec![0.;4]).unwrap()).unwrap();
+//! let t = c.get_tensor("field_rank0_step2").unwrap();
+//! ```
+//!
+//! [`ClusterClient`] adds redis-cluster-style routing across sharded
+//! databases for the clustered deployment.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use crate::db::cluster::SlotMap;
+use crate::error::{Error, Result};
+use crate::proto::{read_frame, write_frame, Device, Request, Response};
+use crate::tensor::Tensor;
+
+/// Key scheme used across the framework: tensors are unique per rank and
+/// step so nothing is overwritten (paper §2.2).
+pub fn tensor_key(field: &str, rank: usize, step: u64) -> String {
+    format!("{field}_rank{rank}_step{step}")
+}
+
+/// A connection to one database instance.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    buf: Vec<u8>,
+    pub addr: SocketAddr,
+}
+
+impl Client {
+    /// Connect (the paper's `SmartRedis client initialization`, measured at
+    /// ~2 ms in Table 1).
+    pub fn connect(addr: SocketAddr) -> Result<Client> {
+        let sock = TcpStream::connect(addr)?;
+        sock.set_nodelay(true)?;
+        let writer = sock.try_clone()?;
+        Ok(Client {
+            reader: BufReader::with_capacity(256 * 1024, sock),
+            writer,
+            buf: Vec::with_capacity(64 * 1024),
+            addr,
+        })
+    }
+
+    /// Connect with retries (components race the DB at startup).
+    pub fn connect_retry(addr: SocketAddr, tries: usize, delay: Duration) -> Result<Client> {
+        let mut last = None;
+        for _ in 0..tries.max(1) {
+            match Client::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    last = Some(e);
+                    std::thread::sleep(delay);
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| Error::Invalid("connect_retry with 0 tries".into())))
+    }
+
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        self.buf.clear();
+        req.encode(&mut self.buf);
+        write_frame(&mut self.writer, &self.buf)?;
+        match read_frame(&mut self.reader)? {
+            Some(body) => Response::decode(&body),
+            None => Err(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed connection",
+            ))),
+        }
+    }
+
+    fn expect_ok(&mut self, req: &Request) -> Result<()> {
+        match self.call(req)? {
+            Response::Ok => Ok(()),
+            Response::Error(m) => Err(Error::Remote(m)),
+            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Send a tensor (`put_tensor`).  Encodes straight from the borrowed
+    /// tensor — no payload clone on the hot path.
+    pub fn put_tensor(&mut self, key: &str, t: &Tensor) -> Result<()> {
+        self.buf.clear();
+        crate::proto::message::encode_put_tensor_into(&mut self.buf, key, t);
+        write_frame(&mut self.writer, &self.buf)?;
+        match read_frame(&mut self.reader)? {
+            Some(body) => match Response::decode(&body)? {
+                Response::Ok => Ok(()),
+                Response::Error(m) => Err(Error::Remote(m)),
+                other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
+            },
+            None => Err(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed connection",
+            ))),
+        }
+    }
+
+    /// Retrieve a tensor (`unpack_tensor`).
+    pub fn get_tensor(&mut self, key: &str) -> Result<Tensor> {
+        match self.call(&Request::GetTensor { key: key.to_string() })? {
+            Response::Tensor(t) => Ok(t),
+            Response::NotFound => Err(Error::KeyNotFound(key.to_string())),
+            Response::Error(m) => Err(Error::Remote(m)),
+            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn del_tensor(&mut self, key: &str) -> Result<bool> {
+        match self.call(&Request::DelTensor { key: key.to_string() })? {
+            Response::Ok => Ok(true),
+            Response::NotFound => Ok(false),
+            Response::Error(m) => Err(Error::Remote(m)),
+            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn exists(&mut self, key: &str) -> Result<bool> {
+        match self.call(&Request::Exists { key: key.to_string() })? {
+            Response::Bool(b) => Ok(b),
+            Response::Error(m) => Err(Error::Remote(m)),
+            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Block until a key exists (the trainer waiting for the first snapshot
+    /// — the paper's "metadata transfer" overhead in Table 2).
+    pub fn poll_key(&mut self, key: &str, interval: Duration, max_wait: Duration) -> Result<()> {
+        let sw = crate::telemetry::Stopwatch::start();
+        loop {
+            if self.exists(key)? {
+                return Ok(());
+            }
+            if sw.stop() > max_wait.as_secs_f64() {
+                return Err(Error::Timeout(format!(
+                    "key '{key}' not present after {:?}",
+                    max_wait
+                )));
+            }
+            std::thread::sleep(interval);
+        }
+    }
+
+    pub fn put_meta(&mut self, key: &str, value: &str) -> Result<()> {
+        self.expect_ok(&Request::PutMeta { key: key.to_string(), value: value.to_string() })
+    }
+
+    pub fn get_meta(&mut self, key: &str) -> Result<Option<String>> {
+        match self.call(&Request::GetMeta { key: key.to_string() })? {
+            Response::Meta(v) => Ok(Some(v)),
+            Response::NotFound => Ok(None),
+            Response::Error(m) => Err(Error::Remote(m)),
+            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn list_keys(&mut self, prefix: &str) -> Result<Vec<String>> {
+        match self.call(&Request::ListKeys { prefix: prefix.to_string() })? {
+            Response::Keys(ks) => Ok(ks),
+            Response::Error(m) => Err(Error::Remote(m)),
+            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    /// Upload a model artifact (HLO text) into the database.
+    pub fn put_model(&mut self, key: &str, hlo_text: &str) -> Result<()> {
+        self.expect_ok(&Request::PutModel { key: key.to_string(), hlo_text: hlo_text.to_string() })
+    }
+
+    /// Upload a model from an artifact file.
+    pub fn put_model_from_file(&mut self, key: &str, path: &std::path::Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Parse(format!("read {}: {e}", path.display())))?;
+        self.put_model(key, &text)
+    }
+
+    /// RedisAI-style in-database inference.
+    pub fn run_model(
+        &mut self,
+        key: &str,
+        in_keys: &[String],
+        out_keys: &[String],
+        device: Device,
+    ) -> Result<()> {
+        self.expect_ok(&Request::RunModel {
+            key: key.to_string(),
+            in_keys: in_keys.to_vec(),
+            out_keys: out_keys.to_vec(),
+            device,
+        })
+    }
+
+    pub fn info(&mut self) -> Result<(u64, u64, u64, u64, String)> {
+        match self.call(&Request::Info)? {
+            Response::Info { keys, bytes, ops, models, engine } => {
+                Ok((keys, bytes, ops, models, engine))
+            }
+            Response::Error(m) => Err(Error::Remote(m)),
+            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
+        }
+    }
+
+    pub fn flush_all(&mut self) -> Result<()> {
+        self.expect_ok(&Request::FlushAll)
+    }
+}
+
+/// Client for the clustered deployment: routes each key to the owning shard
+/// via the redis-cluster hash-slot map.
+pub struct ClusterClient {
+    shards: Vec<Client>,
+    slots: SlotMap,
+}
+
+impl ClusterClient {
+    pub fn connect(addrs: &[SocketAddr]) -> Result<ClusterClient> {
+        let shards = addrs
+            .iter()
+            .map(|a| Client::connect(*a))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ClusterClient { slots: SlotMap::new(shards.len()), shards })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn route(&mut self, key: &str) -> &mut Client {
+        let i = self.slots.shard_for_key(key);
+        &mut self.shards[i]
+    }
+
+    pub fn put_tensor(&mut self, key: &str, t: &Tensor) -> Result<()> {
+        self.route(key).put_tensor(key, t)
+    }
+
+    pub fn get_tensor(&mut self, key: &str) -> Result<Tensor> {
+        self.route(key).get_tensor(key)
+    }
+
+    pub fn del_tensor(&mut self, key: &str) -> Result<bool> {
+        self.route(key).del_tensor(key)
+    }
+
+    pub fn exists(&mut self, key: &str) -> Result<bool> {
+        self.route(key).exists(key)
+    }
+
+    /// Keys across all shards (merged + sorted).
+    pub fn list_keys(&mut self, prefix: &str) -> Result<Vec<String>> {
+        let mut all = Vec::new();
+        for c in &mut self.shards {
+            all.extend(c.list_keys(prefix)?);
+        }
+        all.sort();
+        Ok(all)
+    }
+
+    pub fn flush_all(&mut self) -> Result<()> {
+        for c in &mut self.shards {
+            c.flush_all()?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,21 @@
+//! Simulated Polaris substrate for the scaling studies (Figs 3-6, 8).
+//!
+//! The paper's scaling results are queueing/locality phenomena on a machine
+//! we do not have (448+ nodes, Slingshot-10, 4×A100 per node).  Per the
+//! substitution rule in DESIGN.md we rebuild the substrate:
+//!
+//! * [`topology`] — node/cluster shapes and component placement,
+//! * [`netmodel`] — the transfer + service cost model, with constants
+//!   calibrated against the *real* in-repo TCP database on this host,
+//! * [`des`]      — a deterministic FIFO-reservation discrete-event core,
+//! * [`scaling`]  — the workload runners that produce every scaling series.
+
+pub mod des;
+pub mod netmodel;
+pub mod scaling;
+pub mod topology;
+
+pub use des::Server;
+pub use netmodel::CostModel;
+pub use scaling::{InferenceStats, TransferStats};
+pub use topology::Placement;

@@ -1,0 +1,162 @@
+//! Transfer + service cost model for the simulated cluster.
+//!
+//! Defaults approximate the Polaris numbers quoted in the paper (Slingshot
+//! 10, two 200 Gb/s NICs per node) and the request-handling costs of the
+//! in-repo TCP database measured on this host (`situ calibrate`); the bench
+//! harnesses may override them with measured values so the DES and the real
+//! single-node runs agree where they overlap.
+//!
+//! The model captures exactly the mechanisms the paper reasons about:
+//!
+//! * a **fixed per-request cost** that dominates below 256 KB (paper §3.1.1
+//!   hypothesizes "a fixed cost to handle an I/O request ... that, for small
+//!   message sizes, dominates"),
+//! * a **linear-in-size** component (memcpy + TCP streaming) that dominates
+//!   above 256 KB, giving the constant-throughput regime,
+//! * an **engine service fraction** reproducing the Redis (8-core) vs KeyDB
+//!   (4-core) saturation plateaus of Fig 3,
+//! * **locality**: co-located traffic pays loopback latency/bandwidth,
+//!   clustered traffic pays the NIC.
+
+use crate::db::Engine;
+
+/// All tunables of the simulated data path.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Client-side fixed cost per request (serialize + syscall).
+    pub client_overhead: f64,
+    /// One-way latency, same-node loopback.
+    pub local_latency: f64,
+    /// One-way latency across the interconnect.
+    pub net_latency: f64,
+    /// Intra-node effective bandwidth (loopback/shared memory), bytes/s.
+    pub local_bw: f64,
+    /// Inter-node effective bandwidth (2x200 Gb/s Slingshot), bytes/s.
+    pub net_bw: f64,
+    /// Server fixed cost per request at full service capacity.
+    pub req_fixed: f64,
+    /// Server per-byte processing cost (parse + memcpy into the store).
+    pub byte_cost: f64,
+    /// Uniform jitter fraction applied to client issue times.
+    pub jitter_frac: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            client_overhead: 5e-6,
+            local_latency: 2e-6,
+            net_latency: 5e-6,
+            local_bw: 2.4e10,  // ~24 GB/s loopback
+            net_bw: 2.2e10,    // ~22 GB/s effective NIC (paper: 2 x 200Gbps)
+            // Fixed and per-byte costs are tied by the paper's observed
+            // knee: the fixed cost dominates below 256KB and the byte cost
+            // above, so req_fixed ~= 256KB * byte_cost.
+            req_fixed: 3.0e-5,
+            byte_cost: 1.0 / 9.0e9, // ~9 GB/s in-server processing
+            jitter_frac: 0.03,
+        }
+    }
+}
+
+impl CostModel {
+    /// One-way wire time for `bytes`.
+    pub fn transfer(&self, bytes: usize, cross_node: bool) -> f64 {
+        if cross_node {
+            self.net_latency + bytes as f64 / self.net_bw
+        } else {
+            self.local_latency + bytes as f64 / self.local_bw
+        }
+    }
+
+    /// In-server service time for one request carrying `bytes`, under the
+    /// given engine and core allocation.  The engine's service fraction
+    /// scales the *rate*: fewer cores than the saturation point stretch
+    /// every request proportionally (Fig 3).
+    pub fn service(&self, bytes: usize, engine: Engine, cores: usize) -> f64 {
+        (self.req_fixed + bytes as f64 * self.byte_cost) / engine.service_fraction(cores)
+    }
+
+    /// Ideal no-queueing round trip (client overhead + 2 transfers +
+    /// service) — the single-client floor.
+    pub fn round_trip_floor(
+        &self,
+        bytes: usize,
+        engine: Engine,
+        cores: usize,
+        cross_node: bool,
+    ) -> f64 {
+        self.client_overhead
+            + self.transfer(bytes, cross_node)
+            + self.service(bytes, engine, cores)
+            + self.transfer(64, cross_node) // ack frame
+    }
+
+    /// Calibrate `req_fixed`/`byte_cost` from two measured round-trip points
+    /// of the real database: `(small_bytes, t_small)` and `(big_bytes,
+    /// t_big)`.  Linear fit through the two points.
+    pub fn calibrate(&mut self, small: (usize, f64), big: (usize, f64)) {
+        let (b0, t0) = small;
+        let (b1, t1) = big;
+        if b1 > b0 && t1 > t0 {
+            let slope = (t1 - t0) / (b1 - b0) as f64;
+            // Split the slope between the wire and the server evenly: the
+            // figures only depend on the sum for single-client runs; the
+            // split shifts queueing slightly and 50/50 matches loopback
+            // (memcpy-bound both sides).
+            self.byte_cost = slope / 2.0;
+            self.local_bw = 2.0 / slope;
+            self.req_fixed = (t0 - b0 as f64 * slope).max(1e-6);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_requests_are_fixed_cost_dominated() {
+        let m = CostModel::default();
+        let t1k = m.round_trip_floor(1024, Engine::Redis, 8, false);
+        let t64k = m.round_trip_floor(64 * 1024, Engine::Redis, 8, false);
+        // Below 256KB the paper sees a near-constant floor.
+        assert!(t64k / t1k < 1.3, "{t1k} vs {t64k}");
+    }
+
+    #[test]
+    fn large_requests_are_linear() {
+        let m = CostModel::default();
+        let t1m = m.round_trip_floor(1 << 20, Engine::Redis, 8, false);
+        let t16m = m.round_trip_floor(16 << 20, Engine::Redis, 8, false);
+        let ratio = t16m / t1m;
+        assert!(ratio > 6.0 && ratio < 16.0, "approximately linear: {ratio}");
+    }
+
+    #[test]
+    fn engine_plateaus() {
+        let m = CostModel::default();
+        let b = 256 * 1024;
+        // Redis: flat >= 8 cores, slower below.
+        let r8 = m.service(b, Engine::Redis, 8);
+        assert_eq!(m.service(b, Engine::Redis, 16), r8);
+        assert!(m.service(b, Engine::Redis, 4) > 1.9 * r8);
+        // KeyDB: already at peak with 4 cores, equal to redis's plateau.
+        assert_eq!(m.service(b, Engine::KeyDb, 4), r8);
+    }
+
+    #[test]
+    fn cross_node_pays_latency() {
+        let m = CostModel::default();
+        assert!(m.transfer(0, true) > m.transfer(0, false));
+    }
+
+    #[test]
+    fn calibrate_fits_two_points() {
+        let mut m = CostModel::default();
+        m.calibrate((1024, 3.0e-4), (1 << 20, 1.0e-3));
+        let slope = (1.0e-3 - 3.0e-4) / ((1 << 20) - 1024) as f64;
+        assert!((m.byte_cost - slope / 2.0).abs() < 1e-18);
+        assert!(m.req_fixed > 0.0);
+    }
+}

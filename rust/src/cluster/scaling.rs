@@ -1,0 +1,392 @@
+//! Scaling workload runners: the data-transfer and inference scenarios the
+//! paper measures in §3, executed on the simulated cluster.
+//!
+//! Every run reproduces the paper's measurement protocol: per-rank costs are
+//! averaged over the measured iterations (default 40) after discarding
+//! warmup iterations (default 2), with iterations barrier-synchronized by
+//! the reproducer's compute phase.
+
+use crate::cluster::des::Server;
+use crate::cluster::netmodel::CostModel;
+use crate::cluster::topology::Placement;
+use crate::config::{Deployment, RunConfig};
+use crate::telemetry::StatAccum;
+use crate::util::rng::Rng;
+
+/// Cores a clustered (dedicated-node) DB uses: the paper lets it take the
+/// full socket.
+pub const CLUSTERED_DB_CORES: usize = 32;
+
+/// Small frame size for requests/acks that carry no payload.
+const CTRL_BYTES: usize = 64;
+
+/// Result of a data-transfer scaling run (Figs 3-6).
+#[derive(Debug, Clone)]
+pub struct TransferStats {
+    pub send: StatAccum,
+    pub retrieve: StatAccum,
+    /// Virtual wall-clock of the measured window.
+    pub wall: f64,
+}
+
+impl TransferStats {
+    /// Aggregate throughput (bytes moved per second of send+retrieve time,
+    /// per rank) — the paper's loose "throughput" metric of Fig 4b.
+    pub fn throughput_per_rank(&self, bytes: usize) -> f64 {
+        let t = self.send.mean() + self.retrieve.mean();
+        if t <= 0.0 {
+            0.0
+        } else {
+            2.0 * bytes as f64 / t
+        }
+    }
+}
+
+/// One phase: every rank issues one request; returns per-rank response
+/// times and records per-rank durations.
+#[allow(clippy::too_many_arguments)]
+fn run_phase(
+    servers: &mut [Server],
+    placement: &Placement,
+    model: &CostModel,
+    engine: crate::db::Engine,
+    db_cores: usize,
+    ready: &[f64],
+    req_bytes: usize,
+    resp_bytes: usize,
+    service_bytes: usize,
+    rng: &mut Rng,
+    record: Option<&mut StatAccum>,
+) -> Vec<f64> {
+    let n = placement.n_ranks;
+    let cross = placement.cross_node;
+    // Issue with a small jitter (ranks never fire in perfect lockstep).
+    // Jitter scales with the *local* client count at the rank's DB — OS
+    // scheduling noise among the clients sharing one server — never with
+    // total machine size (which would unphysically de-synchronize the
+    // co-located deployment at scale).
+    let mut arrivals: Vec<(f64, usize, f64)> = Vec::with_capacity(n); // (arrival, rank, issue)
+    for rank in 0..n {
+        let local = placement.ranks_per_db[placement.db_of_rank[rank]] as f64;
+        let jitter = model.client_overhead * rng.f64() * (1.0 + model.jitter_frac * local);
+        let issue = ready[rank] + jitter;
+        let arrival = issue + model.client_overhead + model.transfer(req_bytes, cross);
+        arrivals.push((arrival, rank, issue));
+    }
+    // FIFO order at each server = arrival order.
+    arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut response = vec![0.0f64; n];
+    let mut durations = vec![0.0f64; n];
+    let service = model.service(service_bytes, engine, db_cores);
+    for (arrival, rank, issue) in arrivals {
+        let db = placement.db_of_rank[rank];
+        let (_start, end) = servers[db].reserve(arrival, service);
+        let resp = end + model.transfer(resp_bytes, cross);
+        response[rank] = resp;
+        durations[rank] = resp - issue;
+    }
+    if let Some(acc) = record {
+        for d in &durations {
+            acc.add(*d);
+        }
+    }
+    response
+}
+
+/// Simulate the paper's Fortran reproducer data-transfer loop: sleep
+/// (compute), send `bytes_per_rank`, retrieve it back; repeat.
+pub fn sim_data_transfer(cfg: &RunConfig, model: &CostModel, seed: u64) -> TransferStats {
+    let placement = Placement::new(cfg);
+    let db_cores = match cfg.deployment {
+        Deployment::CoLocated => cfg.db_cores,
+        Deployment::Clustered { .. } => CLUSTERED_DB_CORES,
+    };
+    let mut servers: Vec<Server> = (0..placement.n_db).map(|_| Server::new(1)).collect();
+    let mut rng = Rng::new(seed);
+    let mut send = StatAccum::new();
+    let mut retrieve = StatAccum::new();
+    let mut ready = vec![0.0f64; placement.n_ranks];
+    let mut measured_start = 0.0;
+    for iter in 0..cfg.warmup + cfg.iterations {
+        let measuring = iter >= cfg.warmup;
+        if iter == cfg.warmup {
+            measured_start = ready.iter().cloned().fold(0.0, f64::max);
+        }
+        // Compute phase (the reproducer sleeps to emulate PDE integration).
+        for r in ready.iter_mut() {
+            *r += cfg.compute_secs;
+        }
+        // Send: payload on the request, ack back; server pays payload cost.
+        let resp = run_phase(
+            &mut servers,
+            &placement,
+            model,
+            cfg.engine,
+            db_cores,
+            &ready,
+            cfg.bytes_per_rank,
+            CTRL_BYTES,
+            cfg.bytes_per_rank,
+            &mut rng,
+            if measuring { Some(&mut send) } else { None },
+        );
+        // Retrieve: small request, payload on the response.
+        let resp2 = run_phase(
+            &mut servers,
+            &placement,
+            model,
+            cfg.engine,
+            db_cores,
+            &resp,
+            CTRL_BYTES,
+            cfg.bytes_per_rank,
+            cfg.bytes_per_rank,
+            &mut rng,
+            if measuring { Some(&mut retrieve) } else { None },
+        );
+        // Iteration barrier (the reproducer loop is bulk-synchronous).
+        let iter_end = resp2.iter().cloned().fold(0.0, f64::max);
+        for r in ready.iter_mut() {
+            *r = iter_end;
+        }
+    }
+    let wall = ready[0] - measured_start;
+    TransferStats { send, retrieve, wall }
+}
+
+/// Result of an inference scaling run (Figs 7-8): the three RedisAI steps
+/// plus their sum.
+#[derive(Debug, Clone)]
+pub struct InferenceStats {
+    pub send: StatAccum,
+    pub eval: StatAccum,
+    pub retrieve: StatAccum,
+    pub total: StatAccum,
+    pub wall: f64,
+}
+
+/// Simulate in-situ inference with the co-located deployment: every rank
+/// sends a batch, the model runs on the rank's pinned GPU (6 ranks per
+/// GPU), the prediction is retrieved.
+///
+/// `eval_time(batch)` supplies the device execution time — measured from the
+/// real PJRT runtime by the calibration pass so the simulated GPUs inherit
+/// genuine model costs.
+pub fn sim_inference(
+    cfg: &RunConfig,
+    model: &CostModel,
+    batch: usize,
+    in_bytes: usize,
+    out_bytes: usize,
+    eval_time: &dyn Fn(usize) -> f64,
+    seed: u64,
+) -> InferenceStats {
+    let placement = Placement::new(cfg);
+    let db_cores = cfg.db_cores;
+    let gpus = crate::ai::GPUS_PER_NODE;
+    let mut db_servers: Vec<Server> = (0..placement.n_db).map(|_| Server::new(1)).collect();
+    let mut gpu_servers: Vec<Server> = (0..cfg.nodes * gpus).map(|_| Server::new(1)).collect();
+    let mut rng = Rng::new(seed);
+    let (mut send, mut eval, mut retrieve, mut total) =
+        (StatAccum::new(), StatAccum::new(), StatAccum::new(), StatAccum::new());
+    let mut ready = vec![0.0f64; placement.n_ranks];
+    let mut measured_start = 0.0;
+    let t_eval = eval_time(batch);
+
+    for iter in 0..cfg.warmup + cfg.iterations {
+        let measuring = iter >= cfg.warmup;
+        if iter == cfg.warmup {
+            measured_start = ready.iter().cloned().fold(0.0, f64::max);
+        }
+        for r in ready.iter_mut() {
+            *r += cfg.compute_secs;
+        }
+        let issue: Vec<f64> = ready.clone();
+        // 1) send inference data.
+        let sent = run_phase(
+            &mut db_servers,
+            &placement,
+            model,
+            cfg.engine,
+            db_cores,
+            &ready,
+            in_bytes,
+            CTRL_BYTES,
+            in_bytes,
+            &mut rng,
+            if measuring { Some(&mut send) } else { None },
+        );
+        // 2) model evaluation on the pinned GPU (arrival order per GPU).
+        let mut by_gpu: Vec<(f64, usize)> = sent.iter().cloned().zip(0..).collect();
+        by_gpu.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut evaled = vec![0.0f64; placement.n_ranks];
+        for (arr, rank) in by_gpu {
+            let (node, gpu) = Placement::gpu_of_rank(cfg, rank);
+            let srv = &mut gpu_servers[node * gpus + gpu];
+            // run_model request itself is a small command to the DB-side
+            // runtime; the dominant cost is the device execution.
+            let (_s, end) = srv.reserve(arr + model.local_latency, t_eval);
+            evaled[rank] = end;
+            if measuring {
+                eval.add(end - arr);
+            }
+        }
+        // 3) retrieve predictions.
+        let done = run_phase(
+            &mut db_servers,
+            &placement,
+            model,
+            cfg.engine,
+            db_cores,
+            &evaled,
+            CTRL_BYTES,
+            out_bytes,
+            out_bytes,
+            &mut rng,
+            if measuring { Some(&mut retrieve) } else { None },
+        );
+        if measuring {
+            for r in 0..placement.n_ranks {
+                total.add(done[r] - issue[r]);
+            }
+        }
+        let iter_end = done.iter().cloned().fold(0.0, f64::max);
+        for r in ready.iter_mut() {
+            *r = iter_end;
+        }
+    }
+    let wall = ready[0] - measured_start;
+    InferenceStats { send, eval, retrieve, total, wall }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::Engine;
+
+    fn base_cfg() -> RunConfig {
+        let mut c = RunConfig::default();
+        c.iterations = 10;
+        c.warmup = 2;
+        c
+    }
+
+    #[test]
+    fn colocated_weak_scaling_is_flat() {
+        // The headline result (Fig 5a): per-rank cost independent of nodes.
+        let model = CostModel::default();
+        let mut costs = Vec::new();
+        for nodes in [1usize, 4, 16, 64] {
+            let mut cfg = base_cfg();
+            cfg.nodes = nodes;
+            let st = sim_data_transfer(&cfg, &model, 7);
+            costs.push(st.send.mean() + st.retrieve.mean());
+        }
+        let base = costs[0];
+        for c in &costs {
+            assert!(
+                (c / base - 1.0).abs() < 0.05,
+                "weak scaling not flat: {costs:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn clustered_fixed_db_degrades_linearly() {
+        // Fig 5b: fixed 1-node DB, growing ranks => cost grows ~linearly.
+        let model = CostModel::default();
+        let mut cfg = base_cfg();
+        cfg.deployment = Deployment::Clustered { db_nodes: 1 };
+        cfg.nodes = 1;
+        let c1 = sim_data_transfer(&cfg, &model, 7).send.mean();
+        cfg.nodes = 8;
+        let c8 = sim_data_transfer(&cfg, &model, 7).send.mean();
+        assert!(c8 > 4.0 * c1, "expected ~8x degradation, got {c1} -> {c8}");
+    }
+
+    #[test]
+    fn clustered_proportional_sharding_restores_scaling() {
+        // Fig 5b: DB nodes scaled with ranks => roughly constant cost.
+        let model = CostModel::default();
+        let mut costs = Vec::new();
+        for (nodes, db_nodes) in [(1usize, 1usize), (4, 4), (16, 16)] {
+            let mut cfg = base_cfg();
+            cfg.nodes = nodes;
+            cfg.deployment = Deployment::Clustered { db_nodes };
+            costs.push(sim_data_transfer(&cfg, &model, 7).send.mean());
+        }
+        let base = costs[0];
+        for c in &costs {
+            assert!((c / base - 1.0).abs() < 0.10, "sharded not flat: {costs:?}");
+        }
+    }
+
+    #[test]
+    fn strong_scaling_reduces_cost_linearly_until_floor() {
+        // Fig 6: fixed total data, more ranks => per-rank time drops.
+        let model = CostModel::default();
+        let total = 384usize << 20;
+        let mut prev = f64::INFINITY;
+        for nodes in [1usize, 2, 4] {
+            let mut cfg = base_cfg();
+            cfg.nodes = nodes;
+            cfg.bytes_per_rank = total / (nodes * cfg.ranks_per_node);
+            let t = sim_data_transfer(&cfg, &model, 7).send.mean();
+            assert!(t < prev, "strong scaling must reduce cost");
+            // Roughly linear (halving data never gives more than the ideal
+            // 2x plus slack) while >= 256KB/rank.
+            if prev.is_finite() && cfg.bytes_per_rank >= 512 * 1024 {
+                assert!(t > prev / 4.0);
+            }
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn redis_needs_8_cores_keydb_4() {
+        // Fig 3 shape.
+        let model = CostModel::default();
+        let mut cfg = base_cfg();
+        let at = |engine: Engine, cores: usize, cfg: &mut RunConfig| {
+            cfg.engine = engine;
+            cfg.db_cores = cores;
+            let s = sim_data_transfer(cfg, &model, 3);
+            s.send.mean() + s.retrieve.mean()
+        };
+        let r8 = at(Engine::Redis, 8, &mut cfg);
+        let r16 = at(Engine::Redis, 16, &mut cfg);
+        let r4 = at(Engine::Redis, 4, &mut cfg);
+        let k4 = at(Engine::KeyDb, 4, &mut cfg);
+        assert!((r16 / r8 - 1.0).abs() < 0.02, "redis flat >= 8 cores");
+        assert!(r4 > 1.5 * r8, "redis degraded at 4 cores");
+        assert!((k4 / r8 - 1.0).abs() < 0.05, "keydb already at peak with 4");
+    }
+
+    #[test]
+    fn inference_weak_scaling_flat() {
+        let model = CostModel::default();
+        let eval = |_b: usize| 3.0e-3;
+        let mut costs = Vec::new();
+        for nodes in [1usize, 8, 32] {
+            let mut cfg = base_cfg();
+            cfg.nodes = nodes;
+            let st = sim_inference(&cfg, &model, 4, 4 * 3 * 64 * 64 * 4, 4 * 1000 * 4, &eval, 5);
+            costs.push(st.total.mean());
+        }
+        let base = costs[0];
+        for c in &costs {
+            assert!((c / base - 1.0).abs() < 0.05, "inference weak scaling: {costs:?}");
+        }
+    }
+
+    #[test]
+    fn inference_components_sum_to_total() {
+        let model = CostModel::default();
+        let eval = |_b: usize| 2.0e-3;
+        let cfg = base_cfg();
+        let st = sim_inference(&cfg, &model, 4, 1 << 20, 16_000, &eval, 5);
+        let sum = st.send.mean() + st.eval.mean() + st.retrieve.mean();
+        let total = st.total.mean();
+        assert!((sum / total - 1.0).abs() < 0.05, "sum {sum} vs total {total}");
+    }
+}

@@ -1,0 +1,118 @@
+//! Cluster topology and component placement for both deployments (Fig 2).
+
+use crate::config::{Deployment, RunConfig};
+
+/// Hardware shape of one Polaris node (paper §2.3).
+#[derive(Debug, Clone, Copy)]
+pub struct NodeSpec {
+    /// Logical CPU cores (32 physical, 64 logical).
+    pub logical_cores: usize,
+    pub gpus: usize,
+}
+
+impl Default for NodeSpec {
+    fn default() -> Self {
+        NodeSpec { logical_cores: 64, gpus: 4 }
+    }
+}
+
+/// Resolved placement of every component for a run: which DB instance each
+/// simulation rank talks to, and whether that hop crosses the network.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// Total simulation ranks.
+    pub n_ranks: usize,
+    /// Number of independent DB instances.
+    pub n_db: usize,
+    /// DB instance index serving each rank (co-located: the rank's node;
+    /// clustered: hash-slot routing is per-key, so this is the *modal* shard
+    /// and `cross_node` below is what matters for the cost model).
+    pub db_of_rank: Vec<usize>,
+    /// Whether rank→DB traffic crosses the network.
+    pub cross_node: bool,
+    /// Ranks served by each DB instance.
+    pub ranks_per_db: Vec<usize>,
+}
+
+impl Placement {
+    pub fn new(cfg: &RunConfig) -> Placement {
+        let n_ranks = cfg.total_ranks();
+        match cfg.deployment {
+            Deployment::CoLocated => {
+                // One DB per node; each rank uses its node-local DB and no
+                // traffic leaves the node (the novel deployment).
+                let n_db = cfg.nodes;
+                let db_of_rank: Vec<usize> =
+                    (0..n_ranks).map(|r| r / cfg.ranks_per_node).collect();
+                let mut ranks_per_db = vec![0usize; n_db];
+                for &d in &db_of_rank {
+                    ranks_per_db[d] += 1;
+                }
+                Placement { n_ranks, n_db, db_of_rank, cross_node: false, ranks_per_db }
+            }
+            Deployment::Clustered { db_nodes } => {
+                // Dedicated DB nodes; keys hash-shard across them, so each
+                // rank's requests spread ~uniformly.  For the queueing model
+                // we assign ranks round-robin (the per-key expectation).
+                let n_db = db_nodes.max(1);
+                let db_of_rank: Vec<usize> = (0..n_ranks).map(|r| r % n_db).collect();
+                let mut ranks_per_db = vec![0usize; n_db];
+                for &d in &db_of_rank {
+                    ranks_per_db[d] += 1;
+                }
+                Placement { n_ranks, n_db, db_of_rank, cross_node: true, ranks_per_db }
+            }
+        }
+    }
+
+    /// GPU slot for a rank under the paper's pinning (6 ranks per GPU on a
+    /// 24-rank node with 4 GPUs); inference always runs node-local.
+    pub fn gpu_of_rank(cfg: &RunConfig, rank: usize) -> (usize, usize) {
+        let node = rank / cfg.ranks_per_node;
+        let local = rank % cfg.ranks_per_node;
+        let spec = NodeSpec::default();
+        (node, local % spec.gpus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    #[test]
+    fn colocated_is_node_local_and_balanced() {
+        let mut cfg = RunConfig::default();
+        cfg.nodes = 4;
+        let p = Placement::new(&cfg);
+        assert_eq!(p.n_db, 4);
+        assert!(!p.cross_node);
+        assert_eq!(p.ranks_per_db, vec![24, 24, 24, 24]);
+        // rank 25 is on node 1.
+        assert_eq!(p.db_of_rank[25], 1);
+    }
+
+    #[test]
+    fn clustered_crosses_network_and_spreads() {
+        let mut cfg = RunConfig::default();
+        cfg.nodes = 4;
+        cfg.deployment = Deployment::Clustered { db_nodes: 2 };
+        let p = Placement::new(&cfg);
+        assert_eq!(p.n_db, 2);
+        assert!(p.cross_node);
+        assert_eq!(p.ranks_per_db.iter().sum::<usize>(), 96);
+        assert_eq!(p.ranks_per_db[0], 48);
+    }
+
+    #[test]
+    fn gpu_pinning_six_per_gpu() {
+        let cfg = RunConfig::default();
+        let mut counts = [0usize; 4];
+        for r in 0..24 {
+            let (node, gpu) = Placement::gpu_of_rank(&cfg, r);
+            assert_eq!(node, 0);
+            counts[gpu] += 1;
+        }
+        assert_eq!(counts, [6, 6, 6, 6]);
+    }
+}

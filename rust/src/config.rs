@@ -1,0 +1,143 @@
+//! Run configuration shared by the orchestrator, the CLI and the benches.
+//!
+//! Mirrors the paper's experimental knobs: deployment strategy (co-located
+//! vs clustered), database engine and core allocation, ranks per node,
+//! per-rank payload size, iteration counts (paper: 40 measured + 2 warmup).
+
+use crate::db::Engine;
+use crate::error::{Error, Result};
+use crate::util::cli::Args;
+
+/// Where the database lives relative to the application (paper §2.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Deployment {
+    /// One database per node, sharing the node with simulation + ML ranks.
+    CoLocated,
+    /// Dedicated database nodes; keys sharded across them.
+    Clustered { db_nodes: usize },
+}
+
+impl Deployment {
+    pub fn name(&self) -> String {
+        match self {
+            Deployment::CoLocated => "co-located".into(),
+            Deployment::Clustered { db_nodes } => format!("clustered({db_nodes})"),
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Simulation nodes (the paper scales 1..448).
+    pub nodes: usize,
+    /// Simulation ranks per node (paper: 24; the CPU keeps 8 for the DB).
+    pub ranks_per_node: usize,
+    /// Logical cores bound to each co-located DB (paper: 8; Fig 3 sweeps it).
+    pub db_cores: usize,
+    pub engine: Engine,
+    pub deployment: Deployment,
+    /// Payload each rank sends per iteration (paper default: 256 KB).
+    pub bytes_per_rank: usize,
+    /// Measured iterations (paper: 40).
+    pub iterations: usize,
+    /// Discarded warmup iterations (paper: 2).
+    pub warmup: usize,
+    /// ML (training) ranks per node — one per GPU (paper: 4).
+    pub ml_ranks_per_node: usize,
+    /// Seconds each reproducer rank "integrates the equations" per step.
+    pub compute_secs: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            nodes: 1,
+            ranks_per_node: 24,
+            db_cores: 8,
+            engine: Engine::Redis,
+            deployment: Deployment::CoLocated,
+            bytes_per_rank: 256 * 1024,
+            iterations: 40,
+            warmup: 2,
+            ml_ranks_per_node: 4,
+            compute_secs: 0.0,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn total_ranks(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+
+    pub fn total_ml_ranks(&self) -> usize {
+        self.nodes * self.ml_ranks_per_node
+    }
+
+    /// Parse the shared experiment flags off a CLI invocation.
+    pub fn from_args(a: &Args) -> Result<RunConfig> {
+        let mut c = RunConfig::default();
+        c.nodes = a.usize_or("nodes", c.nodes)?;
+        c.ranks_per_node = a.usize_or("ranks-per-node", c.ranks_per_node)?;
+        c.db_cores = a.usize_or("db-cores", c.db_cores)?;
+        c.bytes_per_rank = a.usize_or("bytes", c.bytes_per_rank)?;
+        c.iterations = a.usize_or("iters", c.iterations)?;
+        c.warmup = a.usize_or("warmup", c.warmup)?;
+        c.ml_ranks_per_node = a.usize_or("ml-ranks-per-node", c.ml_ranks_per_node)?;
+        c.compute_secs = a.f64_or("compute-secs", c.compute_secs)?;
+        if let Some(e) = a.str_opt("engine") {
+            c.engine = Engine::parse(e)
+                .ok_or_else(|| Error::Invalid(format!("unknown engine '{e}'")))?;
+        }
+        match a.str_or("deployment", "colocated").as_str() {
+            "colocated" | "co-located" => c.deployment = Deployment::CoLocated,
+            "clustered" => {
+                c.deployment = Deployment::Clustered { db_nodes: a.usize_or("db-nodes", 1)? }
+            }
+            other => return Err(Error::Invalid(format!("unknown deployment '{other}'"))),
+        }
+        if c.ranks_per_node == 0 || c.nodes == 0 {
+            return Err(Error::Invalid("nodes and ranks-per-node must be > 0".into()));
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> RunConfig {
+        RunConfig::from_args(&Args::parse(s.split_whitespace().map(str::to_string)).unwrap())
+            .unwrap()
+    }
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = RunConfig::default();
+        assert_eq!(c.ranks_per_node, 24);
+        assert_eq!(c.db_cores, 8);
+        assert_eq!(c.bytes_per_rank, 256 * 1024);
+        assert_eq!(c.iterations, 40);
+        assert_eq!(c.warmup, 2);
+        assert_eq!(c.ml_ranks_per_node, 4);
+    }
+
+    #[test]
+    fn parses_flags() {
+        let c = parse("bench --nodes 16 --engine keydb --deployment clustered --db-nodes 4");
+        assert_eq!(c.nodes, 16);
+        assert_eq!(c.engine, Engine::KeyDb);
+        assert_eq!(c.deployment, Deployment::Clustered { db_nodes: 4 });
+        assert_eq!(c.total_ranks(), 16 * 24);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let a = Args::parse(["x", "--engine", "mongo"].map(String::from)).unwrap();
+        assert!(RunConfig::from_args(&a).is_err());
+        let a = Args::parse(["x", "--nodes", "0"].map(String::from)).unwrap();
+        assert!(RunConfig::from_args(&a).is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Redis-cluster-style hash-slot sharding for the *clustered* deployment
+//! (Fig 2 right panels; Fig 5b "sharded on multiple nodes").
+//!
+//! Keys map to one of 16384 slots via CRC16-CCITT (the actual redis-cluster
+//! function, including `{hash tag}` support) and slots are split evenly
+//! across the database shards.
+
+/// Number of hash slots (redis-cluster constant).
+pub const N_SLOTS: u16 = 16384;
+
+/// CRC16-CCITT (XModem), the redis cluster key-hash polynomial (0x1021).
+pub fn crc16(data: &[u8]) -> u16 {
+    let mut crc: u16 = 0;
+    for &b in data {
+        crc ^= (b as u16) << 8;
+        for _ in 0..8 {
+            if crc & 0x8000 != 0 {
+                crc = (crc << 1) ^ 0x1021;
+            } else {
+                crc <<= 1;
+            }
+        }
+    }
+    crc
+}
+
+/// The redis-cluster hash-tag rule: if the key contains `{...}` with a
+/// non-empty body, only the body is hashed (lets clients co-locate related
+/// keys on one shard).
+pub fn hash_slot(key: &str) -> u16 {
+    let bytes = key.as_bytes();
+    let tagged = key
+        .find('{')
+        .and_then(|open| key[open + 1..].find('}').map(|close| (open, open + 1 + close)))
+        .filter(|(open, close)| close > &(open + 1))
+        .map(|(open, close)| &bytes[open + 1..close]);
+    crc16(tagged.unwrap_or(bytes)) % N_SLOTS
+}
+
+/// Slot-to-shard routing table for a fixed number of shards.
+#[derive(Debug, Clone)]
+pub struct SlotMap {
+    n_shards: usize,
+}
+
+impl SlotMap {
+    pub fn new(n_shards: usize) -> SlotMap {
+        assert!(n_shards > 0, "cluster needs at least one shard");
+        SlotMap { n_shards }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Shard owning a slot: contiguous even ranges, like redis-cluster's
+    /// default `cluster create` split.
+    pub fn shard_for_slot(&self, slot: u16) -> usize {
+        ((slot as usize) * self.n_shards) / N_SLOTS as usize
+    }
+
+    pub fn shard_for_key(&self, key: &str) -> usize {
+        self.shard_for_slot(hash_slot(key))
+    }
+
+    /// Inclusive slot range served by a shard (exactly the preimage of
+    /// [`Self::shard_for_slot`], so ranges tile `[0, N_SLOTS)`).
+    pub fn slot_range(&self, shard: usize) -> (u16, u16) {
+        assert!(shard < self.n_shards);
+        let n = self.n_shards;
+        let ns = N_SLOTS as usize;
+        // shard_for_slot(slot) = floor(slot*n/ns) == s  <=>
+        // slot in [ceil(s*ns/n), ceil((s+1)*ns/n) - 1].
+        let lo = (shard * ns).div_ceil(n);
+        let hi = ((shard + 1) * ns).div_ceil(n) - 1;
+        (lo as u16, hi as u16)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Gen};
+
+    #[test]
+    fn crc16_known_vectors() {
+        // Redis cluster spec: HASH_SLOT("123456789") == 0x31C3 % 16384.
+        assert_eq!(crc16(b"123456789"), 0x31c3);
+        assert_eq!(hash_slot("123456789"), 0x31c3 % N_SLOTS);
+        assert_eq!(crc16(b""), 0);
+    }
+
+    #[test]
+    fn hash_tags_colocate() {
+        assert_eq!(hash_slot("{user1}.field_a"), hash_slot("{user1}.field_b"));
+        assert_eq!(hash_slot("{user1}"), hash_slot("prefix{user1}suffix"));
+        // Empty tag body falls back to whole-key hashing.
+        assert_ne!(hash_slot("{}a"), hash_slot("{}b"));
+    }
+
+    #[test]
+    fn prop_partition_complete_and_disjoint() {
+        // Every slot maps to exactly one shard and ranges tile [0, N_SLOTS).
+        check("slotmap partition", 50, |g: &mut Gen| {
+            let n = g.usize_in(1..=64);
+            let sm = SlotMap::new(n);
+            let mut covered = 0u32;
+            for s in 0..n {
+                let (lo, hi) = sm.slot_range(s);
+                assert!(lo <= hi);
+                covered += (hi - lo + 1) as u32;
+                assert_eq!(sm.shard_for_slot(lo), s);
+                assert_eq!(sm.shard_for_slot(hi), s);
+            }
+            assert_eq!(covered, N_SLOTS as u32);
+        });
+    }
+
+    #[test]
+    fn prop_key_routing_balanced() {
+        // Rank/step-structured keys (the framework's key scheme) must spread
+        // across shards within a loose balance bound.
+        check("slot balance", 10, |g: &mut Gen| {
+            let n = g.usize_in(2..=16);
+            let sm = SlotMap::new(n);
+            let mut counts = vec![0usize; n];
+            let keys = 4000;
+            for i in 0..keys {
+                counts[sm.shard_for_key(&format!("field_rank{}_step{}", i % 97, i / 97))] += 1;
+            }
+            let mean = keys as f64 / n as f64;
+            for c in counts {
+                assert!((c as f64) > mean * 0.5 && (c as f64) < mean * 1.5, "imbalance: {c} vs {mean}");
+            }
+        });
+    }
+
+    #[test]
+    fn shard_for_key_stable() {
+        let sm = SlotMap::new(16);
+        assert_eq!(sm.shard_for_key("x"), sm.shard_for_key("x"));
+    }
+}

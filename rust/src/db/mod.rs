@@ -1,0 +1,22 @@
+//! The in-memory tensor database — the Redis/KeyDB analogue at the center of
+//! the framework (DESIGN.md substitutions table).
+//!
+//! * [`store`] — sharded key-value tensor/metadata store (shared-nothing
+//!   within a node; the paper's "key-value store with a shared-nothing
+//!   architecture enabling low-latency access to many clients in parallel").
+//! * [`engine`] — the two execution disciplines reproduced from the paper's
+//!   Redis-vs-KeyDB comparison: a single serialized command thread fed by
+//!   I/O threads (redis) vs fully sharded multi-threaded execution (keydb).
+//! * [`server`] — TCP server speaking [`crate::proto`]; one thread per
+//!   connection (one SmartRedis client per simulation rank in the paper).
+//! * [`cluster`] — redis-cluster-style hash-slot sharding used by the
+//!   *clustered* deployment (Fig 2, right panels; Fig 5b sharded DB).
+
+pub mod cluster;
+pub mod engine;
+pub mod server;
+pub mod store;
+
+pub use engine::Engine;
+pub use server::{DbServer, ServerConfig};
+pub use store::Store;

@@ -1,0 +1,265 @@
+//! TCP database server: accepts SmartRedis-analogue clients and executes
+//! commands against the node-local [`Store`] and [`crate::ai::ModelRuntime`].
+//!
+//! Threading model mirrors the engines being reproduced: a reader thread per
+//! connection (redis io-threads / keydb server threads) with command
+//! execution passing through the engine's [`CommandGate`].
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::ai::ModelRuntime;
+use crate::db::engine::{CommandGate, Engine};
+use crate::db::store::Store;
+use crate::error::{Error, Result};
+use crate::proto::{read_frame, write_frame, Request, Response};
+use crate::runtime::Executor;
+
+/// Server configuration (one database instance; the clustered deployment
+/// launches several of these and routes with [`crate::db::cluster`]).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks a free port.
+    pub addr: SocketAddr,
+    pub engine: Engine,
+    /// Logical cores assigned to the DB (the Fig-3 knob).  Recorded in INFO
+    /// and used to parameterize the engine model; the real thread count is
+    /// connection-driven.
+    pub cores: usize,
+    /// Enable the model runtime (needs a PJRT executor thread).  Data-only
+    /// benches turn this off to skip PJRT startup.
+    pub with_models: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".parse().unwrap(),
+            engine: Engine::Redis,
+            cores: 8,
+            with_models: true,
+        }
+    }
+}
+
+/// A running database server.  Dropping the handle shuts it down.
+pub struct DbServer {
+    pub addr: SocketAddr,
+    store: Arc<Store>,
+    models: Option<Arc<ModelRuntime>>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    pub config: ServerConfig,
+}
+
+impl DbServer {
+    /// Start a server (with a fresh executor thread if models are enabled).
+    pub fn start(config: ServerConfig) -> Result<DbServer> {
+        let models = if config.with_models {
+            Some(Arc::new(ModelRuntime::new(Executor::new()?)))
+        } else {
+            None
+        };
+        Self::start_with(config, models)
+    }
+
+    /// Start a server sharing an existing model runtime (co-located
+    /// deployments reuse one PJRT executor across components).
+    pub fn start_with(config: ServerConfig, models: Option<Arc<ModelRuntime>>) -> Result<DbServer> {
+        let listener = TcpListener::bind(config.addr)?;
+        let addr = listener.local_addr()?;
+        let store = Arc::new(Store::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let gate = Arc::new(CommandGate::new(config.engine));
+
+        let accept_thread = {
+            let store = Arc::clone(&store);
+            let models = models.clone();
+            let stop = Arc::clone(&stop);
+            let engine = config.engine;
+            std::thread::Builder::new()
+                .name(format!("db-accept-{}", addr.port()))
+                .spawn(move || {
+                    listener.set_nonblocking(false).ok();
+                    // Poll for shutdown with a short accept timeout trick:
+                    // switch to nonblocking and sleep-loop.
+                    listener.set_nonblocking(true).ok();
+                    loop {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        match listener.accept() {
+                            Ok((sock, _peer)) => {
+                                sock.set_nodelay(true).ok();
+                                let store = Arc::clone(&store);
+                                let models = models.clone();
+                                let gate = Arc::clone(&gate);
+                                let stop = Arc::clone(&stop);
+                                std::thread::Builder::new()
+                                    .name("db-conn".into())
+                                    .spawn(move || {
+                                        let _ = serve_conn(sock, &store, models.as_deref(), &gate, &stop, engine);
+                                    })
+                                    .ok();
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(std::time::Duration::from_millis(2));
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                })
+                .map_err(Error::Io)?
+        };
+
+        Ok(DbServer {
+            addr,
+            store,
+            models,
+            stop,
+            accept_thread: Some(accept_thread),
+            config,
+        })
+    }
+
+    /// Node-local (in-process) access to the store — the co-located fast
+    /// path used by benches to inspect state without a socket round-trip.
+    pub fn store(&self) -> &Arc<Store> {
+        &self.store
+    }
+
+    pub fn models(&self) -> Option<&Arc<ModelRuntime>> {
+        self.models.as_ref()
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for DbServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_conn(
+    sock: TcpStream,
+    store: &Store,
+    models: Option<&ModelRuntime>,
+    gate: &CommandGate,
+    stop: &AtomicBool,
+    engine: Engine,
+) -> Result<()> {
+    sock.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = sock.try_clone()?;
+    let mut reader = BufReader::with_capacity(256 * 1024, sock);
+    let mut out_buf = Vec::with_capacity(64 * 1024);
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let body = match read_frame(&mut reader) {
+            Ok(Some(b)) => b,
+            Ok(None) => return Ok(()), // client closed
+            Err(Error::Io(ref e))
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // idle poll; re-check stop flag
+            }
+            Err(e) => return Err(e),
+        };
+        let resp = match Request::decode(&body) {
+            Err(e) => Response::Error(e.to_string()),
+            Ok(req) => {
+                let _g = gate.enter(); // redis: serialize command execution
+                execute(req, store, models, engine)
+            }
+        };
+        out_buf.clear();
+        resp.encode(&mut out_buf);
+        write_frame(&mut writer, &out_buf)?;
+    }
+}
+
+/// Execute one decoded command (shared by the TCP path and the unit tests).
+pub fn execute(
+    req: Request,
+    store: &Store,
+    models: Option<&ModelRuntime>,
+    engine: Engine,
+) -> Response {
+    match req {
+        Request::PutTensor { key, tensor } => match store.put_tensor(&key, tensor) {
+            Ok(()) => Response::Ok,
+            Err(e) => Response::Error(e.to_string()),
+        },
+        Request::GetTensor { key } => match store.get_tensor(&key) {
+            Ok(t) => Response::Tensor(t),
+            Err(Error::KeyNotFound(_)) => Response::NotFound,
+            Err(e) => Response::Error(e.to_string()),
+        },
+        Request::DelTensor { key } => {
+            if store.del_tensor(&key) {
+                Response::Ok
+            } else {
+                Response::NotFound
+            }
+        }
+        Request::Exists { key } => Response::Bool(store.exists(&key)),
+        Request::PutMeta { key, value } => {
+            store.put_meta(&key, &value);
+            Response::Ok
+        }
+        Request::GetMeta { key } => match store.get_meta(&key) {
+            Ok(v) => Response::Meta(v),
+            Err(Error::KeyNotFound(_)) => Response::NotFound,
+            Err(e) => Response::Error(e.to_string()),
+        },
+        Request::ListKeys { prefix } => Response::Keys(store.list_keys(&prefix)),
+        Request::PutModel { key, hlo_text } => match models {
+            None => Response::Error("model runtime disabled on this server".into()),
+            Some(m) => match m.put_model(&key, &hlo_text) {
+                Ok(()) => Response::Ok,
+                Err(e) => Response::Error(e.to_string()),
+            },
+        },
+        Request::RunModel { key, in_keys, out_keys, device } => match models {
+            None => Response::Error("model runtime disabled on this server".into()),
+            Some(m) => match m.run_model(store, &key, &in_keys, &out_keys, device) {
+                Ok(()) => Response::Ok,
+                Err(Error::KeyNotFound(k)) => Response::Error(format!("input key not found: {k}")),
+                Err(Error::ModelNotFound(k)) => Response::Error(format!("model not found: {k}")),
+                Err(e) => Response::Error(e.to_string()),
+            },
+        },
+        Request::Info => Response::Info {
+            keys: store.n_keys(),
+            bytes: store.n_bytes(),
+            ops: store.n_ops(),
+            models: models.map(|m| m.n_models()).unwrap_or(0),
+            engine: engine.name().to_string(),
+        },
+        Request::FlushAll => {
+            store.flush_all();
+            Response::Ok
+        }
+    }
+}
+
+/// Resolve the default artifacts directory (repo-root relative, overridable
+/// via SITU_ARTIFACTS).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SITU_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

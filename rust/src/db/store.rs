@@ -1,0 +1,293 @@
+//! Sharded in-memory key-value store holding tensors and metadata.
+//!
+//! Keys hash to one of `N_SHARDS` independently-locked shards, so concurrent
+//! clients (one per simulation rank) rarely contend — the property the paper
+//! relies on for "low-latency access to many clients in parallel".
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+const N_SHARDS: usize = 16;
+
+#[derive(Default)]
+struct Shard {
+    tensors: HashMap<String, Tensor>,
+    metas: HashMap<String, String>,
+}
+
+/// Operation counters exposed via `INFO` (and consumed by the benches).
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub ops: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+}
+
+/// The node-local store.
+pub struct Store {
+    shards: Vec<Mutex<Shard>>,
+    bytes: AtomicU64,
+    pub counters: Counters,
+}
+
+impl Default for Store {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Store {
+    pub fn new() -> Store {
+        Store {
+            shards: (0..N_SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            bytes: AtomicU64::new(0),
+            counters: Counters::default(),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &Mutex<Shard> {
+        // FNV-1a over the key.
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in key.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        &self.shards[(h % N_SHARDS as u64) as usize]
+    }
+
+    /// Insert or overwrite a tensor (the paper's `put_tensor`).
+    pub fn put_tensor(&self, key: &str, t: Tensor) -> Result<()> {
+        t.validate()?;
+        self.counters.ops.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .bytes_in
+            .fetch_add(t.nbytes() as u64, Ordering::Relaxed);
+        let mut s = self.shard(key).lock().unwrap();
+        let old = s.tensors.insert(key.to_string(), t);
+        let new_bytes = s.tensors[key].nbytes() as u64;
+        drop(s);
+        if let Some(o) = old {
+            self.bytes.fetch_sub(o.nbytes() as u64, Ordering::Relaxed);
+        }
+        self.bytes.fetch_add(new_bytes, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Fetch a tensor copy (the paper's `unpack_tensor`).
+    pub fn get_tensor(&self, key: &str) -> Result<Tensor> {
+        self.counters.ops.fetch_add(1, Ordering::Relaxed);
+        let s = self.shard(key).lock().unwrap();
+        let t = s
+            .tensors
+            .get(key)
+            .cloned()
+            .ok_or_else(|| Error::KeyNotFound(key.to_string()))?;
+        self.counters
+            .bytes_out
+            .fetch_add(t.nbytes() as u64, Ordering::Relaxed);
+        Ok(t)
+    }
+
+    pub fn del_tensor(&self, key: &str) -> bool {
+        self.counters.ops.fetch_add(1, Ordering::Relaxed);
+        let mut s = self.shard(key).lock().unwrap();
+        if let Some(t) = s.tensors.remove(key) {
+            self.bytes.fetch_sub(t.nbytes() as u64, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn exists(&self, key: &str) -> bool {
+        self.counters.ops.fetch_add(1, Ordering::Relaxed);
+        let s = self.shard(key).lock().unwrap();
+        s.tensors.contains_key(key) || s.metas.contains_key(key)
+    }
+
+    pub fn put_meta(&self, key: &str, value: &str) {
+        self.counters.ops.fetch_add(1, Ordering::Relaxed);
+        let mut s = self.shard(key).lock().unwrap();
+        s.metas.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get_meta(&self, key: &str) -> Result<String> {
+        self.counters.ops.fetch_add(1, Ordering::Relaxed);
+        let s = self.shard(key).lock().unwrap();
+        s.metas
+            .get(key)
+            .cloned()
+            .ok_or_else(|| Error::KeyNotFound(key.to_string()))
+    }
+
+    /// All tensor keys with a prefix, sorted (dataloader discovery).
+    pub fn list_keys(&self, prefix: &str) -> Vec<String> {
+        self.counters.ops.fetch_add(1, Ordering::Relaxed);
+        let mut out = Vec::new();
+        for sh in &self.shards {
+            let s = sh.lock().unwrap();
+            out.extend(s.tensors.keys().filter(|k| k.starts_with(prefix)).cloned());
+        }
+        out.sort();
+        out
+    }
+
+    pub fn flush_all(&self) {
+        self.counters.ops.fetch_add(1, Ordering::Relaxed);
+        for sh in &self.shards {
+            let mut s = sh.lock().unwrap();
+            s.tensors.clear();
+            s.metas.clear();
+        }
+        self.bytes.store(0, Ordering::Relaxed);
+    }
+
+    pub fn n_keys(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|sh| {
+                let s = sh.lock().unwrap();
+                (s.tensors.len() + s.metas.len()) as u64
+            })
+            .sum()
+    }
+
+    pub fn n_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn n_ops(&self) -> u64 {
+        self.counters.ops.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+    use crate::util::propcheck::{check, Gen};
+    use std::collections::HashMap;
+    use std::sync::Arc;
+
+    fn t(v: Vec<f32>) -> Tensor {
+        Tensor::from_f32(&[v.len()], v).unwrap()
+    }
+
+    #[test]
+    fn put_get_del() {
+        let s = Store::new();
+        s.put_tensor("a", t(vec![1.0, 2.0])).unwrap();
+        assert_eq!(s.get_tensor("a").unwrap().to_f32().unwrap(), vec![1.0, 2.0]);
+        assert!(s.exists("a"));
+        assert!(s.del_tensor("a"));
+        assert!(!s.del_tensor("a"));
+        assert!(matches!(s.get_tensor("a"), Err(Error::KeyNotFound(_))));
+    }
+
+    #[test]
+    fn byte_accounting_on_overwrite() {
+        let s = Store::new();
+        s.put_tensor("k", t(vec![0.0; 100])).unwrap();
+        assert_eq!(s.n_bytes(), 400);
+        s.put_tensor("k", t(vec![0.0; 10])).unwrap();
+        assert_eq!(s.n_bytes(), 40);
+        s.del_tensor("k");
+        assert_eq!(s.n_bytes(), 0);
+    }
+
+    #[test]
+    fn meta_namespace_is_separate() {
+        let s = Store::new();
+        s.put_meta("step", "41");
+        assert_eq!(s.get_meta("step").unwrap(), "41");
+        assert!(s.get_tensor("step").is_err());
+        assert!(s.exists("step"));
+    }
+
+    #[test]
+    fn list_keys_prefix_sorted() {
+        let s = Store::new();
+        for k in ["f_r1_s0", "f_r0_s0", "g_r0_s0"] {
+            s.put_tensor(k, t(vec![0.0])).unwrap();
+        }
+        assert_eq!(s.list_keys("f_"), vec!["f_r0_s0", "f_r1_s0"]);
+        assert_eq!(s.list_keys(""), vec!["f_r0_s0", "f_r1_s0", "g_r0_s0"]);
+    }
+
+    #[test]
+    fn flush_resets_everything() {
+        let s = Store::new();
+        s.put_tensor("a", t(vec![1.0])).unwrap();
+        s.put_meta("m", "x");
+        s.flush_all();
+        assert_eq!(s.n_keys(), 0);
+        assert_eq!(s.n_bytes(), 0);
+    }
+
+    #[test]
+    fn prop_store_matches_hashmap_model() {
+        // Model-based property test: random op interleavings agree with a
+        // plain HashMap reference model.
+        check("store vs model", 100, |g: &mut Gen| {
+            let s = Store::new();
+            let mut model: HashMap<String, Vec<f32>> = HashMap::new();
+            let keys: Vec<String> = (0..g.usize_in(1..=8)).map(|i| format!("k{i}")).collect();
+            for _ in 0..g.usize_in(1..=60) {
+                let key = g.choose(&keys).clone();
+                match g.usize_in(0..=3) {
+                    0 => {
+                        let v: Vec<f32> = g.vec(1..=16, |g| g.normal_f32());
+                        s.put_tensor(&key, t(v.clone())).unwrap();
+                        model.insert(key, v);
+                    }
+                    1 => {
+                        let got = s.get_tensor(&key).ok().map(|x| x.to_f32().unwrap());
+                        assert_eq!(got, model.get(&key).cloned(), "get {key}");
+                    }
+                    2 => {
+                        assert_eq!(s.del_tensor(&key), model.remove(&key).is_some());
+                    }
+                    _ => {
+                        assert_eq!(s.exists(&key), model.contains_key(&key));
+                    }
+                }
+            }
+            let want_bytes: u64 = model.values().map(|v| 4 * v.len() as u64).sum();
+            assert_eq!(s.n_bytes(), want_bytes);
+            assert_eq!(s.n_keys(), model.len() as u64);
+        });
+    }
+
+    #[test]
+    fn concurrent_distinct_keys() {
+        let s = Arc::new(Store::new());
+        let mut handles = Vec::new();
+        for r in 0..8 {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    let key = format!("rank{r}_step{i}");
+                    s.put_tensor(&key, t(vec![r as f32, i as f32])).unwrap();
+                    let back = s.get_tensor(&key).unwrap().to_f32().unwrap();
+                    assert_eq!(back, vec![r as f32, i as f32]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.n_keys(), 8 * 50);
+    }
+
+    #[test]
+    fn rejects_invalid_tensor() {
+        let s = Store::new();
+        let bad = Tensor { dtype: DType::F32, shape: vec![4], data: vec![0u8; 3] };
+        assert!(s.put_tensor("x", bad).is_err());
+        assert_eq!(s.n_keys(), 0);
+    }
+}

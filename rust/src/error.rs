@@ -1,0 +1,69 @@
+//! Crate-wide error type.  Hand-rolled (the build is offline and
+//! dependency-light); semantically equivalent to a `thiserror` enum.
+
+use std::fmt;
+
+/// All failure modes surfaced by the framework.
+#[derive(Debug)]
+pub enum Error {
+    /// Underlying socket / file I/O failure.
+    Io(std::io::Error),
+    /// Malformed frame or message on the wire.
+    Protocol(String),
+    /// Key not present in the database.
+    KeyNotFound(String),
+    /// Model not present in the database model registry.
+    ModelNotFound(String),
+    /// Tensor shape/dtype mismatch.
+    Shape(String),
+    /// PJRT / XLA failure.
+    Xla(String),
+    /// Manifest or config parse failure.
+    Parse(String),
+    /// Remote side reported an error.
+    Remote(String),
+    /// Component misuse or invariant violation.
+    Invalid(String),
+    /// Operation timed out (e.g. polling for a key).
+    Timeout(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::KeyNotFound(k) => write!(f, "key not found: {k}"),
+            Error::ModelNotFound(k) => write!(f, "model not found: {k}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Remote(m) => write!(f, "remote error: {m}"),
+            Error::Invalid(m) => write!(f, "invalid: {m}"),
+            Error::Timeout(m) => write!(f, "timeout: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

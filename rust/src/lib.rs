@@ -1,0 +1,40 @@
+//! # situ — in situ framework for coupling simulation and machine learning
+//!
+//! A reproduction of *"In Situ Framework for Coupling Simulation and Machine
+//! Learning with Application to CFD"* (Balin et al., 2023) as a three-layer
+//! rust + JAX/Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: an in-memory tensor
+//!   database ([`db`], the Redis/KeyDB analogue) with co-located and
+//!   clustered deployments, a one-line-per-op client library ([`client`],
+//!   the SmartRedis analogue), in-database model execution ([`ai`], the
+//!   RedisAI analogue), and an orchestrator ([`orchestrator`], the
+//!   SmartSim-IL analogue).  The scaling substrate (Polaris-like topology and
+//!   a discrete-event simulator) lives in [`cluster`]; the data producers
+//!   (a real Navier-Stokes solver and the paper's §3 reproducer) in [`sim`];
+//!   the data consumer (distributed in-situ trainer) in [`ml`].
+//! * **L2** — `python/compile/model.py`: the QuadConv autoencoder and its
+//!   fused `train_step` (fwd+bwd+Adam), AOT-lowered to HLO text.
+//! * **L1** — `python/compile/kernels/quadconv.py`: the QuadConv quadrature
+//!   contraction as Pallas kernels.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the graphs
+//! once; [`runtime`] loads and executes them through the PJRT C API.
+
+pub mod ai;
+pub mod client;
+pub mod cluster;
+pub mod config;
+pub mod db;
+pub mod error;
+pub mod ml;
+pub mod orchestrator;
+pub mod proto;
+pub mod runtime;
+pub mod sim;
+pub mod telemetry;
+pub mod tensor;
+pub mod util;
+
+pub use error::{Error, Result};
+pub use tensor::{DType, Tensor};

@@ -1,0 +1,264 @@
+//! `situ` — command-line entrypoint for the in-situ coupling framework.
+//!
+//! Subcommands:
+//!   serve        run a database server
+//!   info         query a running database
+//!   calibrate    measure real DB + PJRT costs, print CostModel constants
+//!   train        end-to-end in-situ training (paper §4, scaled)
+//!   bench-transfer / bench-inference   DES scaling sweeps (Figs 3-6, 8)
+
+use std::net::SocketAddr;
+use std::time::Duration;
+
+use situ::client::Client;
+use situ::cluster::netmodel::CostModel;
+use situ::cluster::scaling;
+use situ::config::RunConfig;
+use situ::db::{DbServer, Engine, ServerConfig};
+use situ::error::{Error, Result};
+use situ::orchestrator::driver::{run_insitu_training, InSituTrainingConfig};
+use situ::runtime::Executor;
+use situ::sim::reproducer::{self, ReproducerConfig};
+use situ::telemetry::Table;
+use situ::util::cli::Args;
+use situ::util::fmt;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("serve") => cmd_serve(args),
+        Some("info") => cmd_info(args),
+        Some("calibrate") => cmd_calibrate(args),
+        Some("train") => cmd_train(args),
+        Some("bench-transfer") => cmd_bench_transfer(args),
+        Some("bench-inference") => cmd_bench_inference(args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => Err(Error::Invalid(format!("unknown command '{other}'"))),
+    }
+}
+
+fn print_help() {
+    println!(
+        "situ — in situ simulation/ML coupling framework (Balin et al. 2023 reproduction)
+
+USAGE: situ <command> [flags]
+
+  serve            --port 7700 --engine redis|keydb --cores 8 [--no-models]
+  info             --addr 127.0.0.1:7700
+  calibrate        [--artifacts DIR]   measure real costs, print CostModel
+  train            [--epochs N --sim-ranks R --ml-ranks M --steps S]
+  bench-transfer   --nodes-list 1,4,16 --deployment colocated|clustered ...
+  bench-inference  --nodes-list 1,4,16 --batch 4 ...
+"
+    );
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let port = args.usize_or("port", 7700)? as u16;
+    let engine = Engine::parse(&args.str_or("engine", "redis"))
+        .ok_or_else(|| Error::Invalid("bad --engine".into()))?;
+    let cfg = ServerConfig {
+        addr: SocketAddr::from(([127, 0, 0, 1], port)),
+        engine,
+        cores: args.usize_or("cores", 8)?,
+        with_models: !args.bool("no-models"),
+    };
+    let server = DbServer::start(cfg)?;
+    println!("situ db listening on {} (engine={})", server.addr, engine.name());
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let addr: SocketAddr = args
+        .str_or("addr", "127.0.0.1:7700")
+        .parse()
+        .map_err(|_| Error::Invalid("bad --addr".into()))?;
+    let mut c = Client::connect(addr)?;
+    let (keys, bytes, ops, models, engine) = c.info()?;
+    println!(
+        "engine={engine} keys={keys} bytes={} ops={ops} models={models}",
+        fmt::bytes(bytes)
+    );
+    Ok(())
+}
+
+/// Measure the real database and PJRT costs on this host and print the
+/// calibrated CostModel constants (consumed by the DES benches).
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        args.str_or("artifacts", situ::db::server::artifacts_dir().to_str().unwrap()),
+    );
+    println!("== situ calibrate ==");
+
+    // 1) DB round-trip costs at two sizes.
+    let server = DbServer::start(ServerConfig { with_models: false, ..Default::default() })?;
+    let small = measure_roundtrip(server.addr, 1024, 200)?;
+    let big = measure_roundtrip(server.addr, 1 << 20, 50)?;
+    println!("db round-trip   1KB: {}", fmt::duration(small));
+    println!("db round-trip   1MB: {}", fmt::duration(big));
+    let mut model = CostModel::default();
+    model.calibrate((1024, small), (1 << 20, big));
+    println!(
+        "calibrated: req_fixed={} byte_cost={:.3e} s/B",
+        fmt::duration(model.req_fixed),
+        model.byte_cost
+    );
+
+    // 2) PJRT eval times for the inference model (feeds Fig 7/8 DES).
+    if artifacts.join("manifest.json").exists() {
+        let exec = Executor::new()?;
+        let mut table =
+            Table::new("resnet_lite eval time (real PJRT)", &["batch", "mean", "per-sample"]);
+        for b in [1usize, 4, 16] {
+            let name = format!("resnet_lite_b{b}");
+            let path = artifacts.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                continue;
+            }
+            exec.load_artifact(&name, &path)?;
+            let acc = reproducer::run_inline_baseline(&exec, &name, &[b, 3, 64, 64], 10, 2)?;
+            table.row(&[
+                b.to_string(),
+                fmt::duration(acc.mean()),
+                fmt::duration(acc.mean() / b as f64),
+            ]);
+        }
+        table.print();
+    } else {
+        println!("(artifacts not built; skipping PJRT calibration)");
+    }
+    Ok(())
+}
+
+fn measure_roundtrip(addr: SocketAddr, bytes: usize, iters: usize) -> Result<f64> {
+    let times = reproducer::run_data_loop(&ReproducerConfig {
+        addr,
+        ranks: 1,
+        bytes_per_rank: bytes,
+        iterations: iters,
+        warmup: 3,
+        compute_secs: 0.0,
+    })?;
+    let snap = times.snapshot();
+    Ok(snap["send"].mean() + snap["retrieve"].mean())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = InSituTrainingConfig::default();
+    cfg.epochs = args.usize_or("epochs", cfg.epochs)?;
+    cfg.sim_ranks = args.usize_or("sim-ranks", cfg.sim_ranks)?;
+    cfg.ml_ranks = args.usize_or("ml-ranks", cfg.ml_ranks)?;
+    cfg.solver_steps = args.usize_or("steps", cfg.solver_steps as usize)? as u64;
+    if let Some(dir) = args.str_opt("artifacts") {
+        cfg.artifacts_dir = dir.into();
+    }
+    println!(
+        "== in situ training: {} epochs, {} sim ranks, {} ml ranks, {} solver steps ==",
+        cfg.epochs, cfg.sim_ranks, cfg.ml_ranks, cfg.solver_steps
+    );
+    let report = run_insitu_training(&cfg)?;
+    report.solver_table.print();
+    report.trainer_table.print();
+    let mut curve = Table::new(
+        "Fig 10: convergence during in situ training",
+        &["epoch", "train_loss", "val_loss", "val_rel_err"],
+    );
+    let stride = (report.history.len() / 20).max(1);
+    for log in report.history.iter().step_by(stride) {
+        curve.row(&[
+            log.epoch.to_string(),
+            format!("{:.6}", log.train_loss),
+            format!("{:.6}", log.val_loss),
+            format!("{:.4}", log.val_rel_err),
+        ]);
+    }
+    curve.print();
+    println!(
+        "framework overhead on solver: {:.4}%  (paper: <<1%)",
+        report.solver_overhead_frac * 100.0
+    );
+    println!("spatial compression factor: {:.0}x", report.compression_factor);
+    Ok(())
+}
+
+fn cmd_bench_transfer(args: &Args) -> Result<()> {
+    let cfg0 = RunConfig::from_args(args)?;
+    let nodes_list = args.usize_list_or("nodes-list", &[cfg0.nodes])?;
+    let model = CostModel::default();
+    let mut table = Table::new(
+        &format!(
+            "data transfer scaling ({} / {}, {} per rank)",
+            cfg0.deployment.name(),
+            cfg0.engine.name(),
+            fmt::bytes(cfg0.bytes_per_rank as u64)
+        ),
+        &["nodes", "ranks", "send mean", "send σ", "retrieve mean", "throughput/rank"],
+    );
+    for nodes in nodes_list {
+        let mut cfg = cfg0.clone();
+        cfg.nodes = nodes;
+        let st = scaling::sim_data_transfer(&cfg, &model, 42);
+        table.row(&[
+            nodes.to_string(),
+            cfg.total_ranks().to_string(),
+            fmt::duration(st.send.mean()),
+            fmt::duration(st.send.std()),
+            fmt::duration(st.retrieve.mean()),
+            fmt::throughput(st.throughput_per_rank(cfg.bytes_per_rank)),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_bench_inference(args: &Args) -> Result<()> {
+    let cfg0 = RunConfig::from_args(args)?;
+    let nodes_list = args.usize_list_or("nodes-list", &[cfg0.nodes])?;
+    let batch = args.usize_or("batch", 4)?;
+    let eval_ms = args.f64_or("eval-ms", 3.0)?;
+    let model = CostModel::default();
+    let eval = move |_b: usize| eval_ms * 1e-3;
+    let in_bytes = batch * 3 * 64 * 64 * 4;
+    let out_bytes = batch * 1000 * 4;
+    let mut table = Table::new(
+        &format!("inference scaling (batch {batch})"),
+        &["nodes", "ranks", "send", "eval", "retrieve", "total"],
+    );
+    for nodes in nodes_list {
+        let mut cfg = cfg0.clone();
+        cfg.nodes = nodes;
+        let st = scaling::sim_inference(&cfg, &model, batch, in_bytes, out_bytes, &eval, 17);
+        table.row(&[
+            nodes.to_string(),
+            cfg.total_ranks().to_string(),
+            fmt::duration(st.send.mean()),
+            fmt::duration(st.eval.mean()),
+            fmt::duration(st.retrieve.mean()),
+            fmt::duration(st.total.mean()),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

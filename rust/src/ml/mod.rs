@@ -1,0 +1,18 @@
+//! The data consumer: distributed in-situ training of the QuadConv
+//! autoencoder from live simulation data (paper §4).
+//!
+//! Python never appears here — the fused `train_step` (fwd + bwd + Adam) and
+//! `eval_step` artifacts are executed through PJRT.  Rank parallelism follows
+//! the paper's DDP setup: each ML rank gathers its share of snapshots from
+//! the (co-located) database, computes gradients on its mini-batch, the
+//! gradients are allreduce-averaged, and one Adam update is applied — the
+//! `grad_step`/`apply_adam` artifact pair mirrors exactly that
+//! decomposition.
+
+pub mod dataloader;
+pub mod state;
+pub mod trainer;
+
+pub use dataloader::DataLoader;
+pub use state::ParamState;
+pub use trainer::{EpochLog, Trainer, TrainerConfig};

@@ -1,0 +1,202 @@
+//! Parameter + optimizer state management, manifest-ordered.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::Manifest;
+use crate::tensor::{DType, Tensor};
+
+/// Flat, canonically-ordered model parameters plus Adam moments.
+#[derive(Debug, Clone)]
+pub struct ParamState {
+    /// Parameter tensors in `manifest.param_order`.
+    pub params: Vec<Tensor>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub step: i32,
+}
+
+impl ParamState {
+    /// Load the initial parameters exported by `aot.py`
+    /// (`params_init.bin`) and zero moments.
+    pub fn load_init(manifest: &Manifest, artifacts_dir: &Path) -> Result<ParamState> {
+        let bytes = std::fs::read(artifacts_dir.join("params_init.bin"))
+            .map_err(|e| Error::Parse(format!("params_init.bin: {e}")))?;
+        if bytes.len() != manifest.model.n_params_total * 4 {
+            return Err(Error::Parse(format!(
+                "params_init.bin is {} bytes, manifest wants {}",
+                bytes.len(),
+                manifest.model.n_params_total * 4
+            )));
+        }
+        let mut params = Vec::with_capacity(manifest.param_table.len());
+        let mut m = Vec::with_capacity(manifest.param_table.len());
+        let mut v = Vec::with_capacity(manifest.param_table.len());
+        for row in &manifest.param_table {
+            let start = row.offset * 4;
+            let end = start + row.len * 4;
+            params.push(Tensor {
+                dtype: DType::F32,
+                shape: row.shape.clone(),
+                data: bytes[start..end].to_vec(),
+            });
+            m.push(Tensor::zeros(DType::F32, &row.shape));
+            v.push(Tensor::zeros(DType::F32, &row.shape));
+        }
+        Ok(ParamState { params, m, v, step: 0 })
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Inputs for the fused `train_step` artifact:
+    /// `params..., m..., v..., step, batch`.
+    pub fn train_step_inputs(&self, batch: Tensor) -> Vec<Tensor> {
+        let mut v: Vec<Tensor> = Vec::with_capacity(3 * self.params.len() + 2);
+        v.extend(self.params.iter().cloned());
+        v.extend(self.m.iter().cloned());
+        v.extend(self.v.iter().cloned());
+        v.push(Tensor::scalar_i32(self.step));
+        v.push(batch);
+        v
+    }
+
+    /// Absorb the outputs of `train_step`:
+    /// `params'..., m'..., v'..., step', loss`.  Returns the loss.
+    pub fn absorb_train_step(&mut self, mut out: Vec<Tensor>) -> Result<f32> {
+        let p = self.params.len();
+        if out.len() != 3 * p + 2 {
+            return Err(Error::Shape(format!(
+                "train_step returned {} tensors, wanted {}",
+                out.len(),
+                3 * p + 2
+            )));
+        }
+        let loss = out.pop().unwrap().first_f32()?;
+        let step = out.pop().unwrap().to_i32()?[0];
+        self.v = out.split_off(2 * p);
+        self.m = out.split_off(p);
+        self.params = out;
+        self.step = step;
+        Ok(loss)
+    }
+
+    /// Inputs for `grad_step`: `params..., batch`.
+    pub fn grad_step_inputs(&self, batch: Tensor) -> Vec<Tensor> {
+        let mut v: Vec<Tensor> = Vec::with_capacity(self.params.len() + 1);
+        v.extend(self.params.iter().cloned());
+        v.push(batch);
+        v
+    }
+
+    /// Inputs for `apply_adam`: `params..., m..., v..., step, grads...`.
+    pub fn apply_adam_inputs(&self, grads: Vec<Tensor>) -> Vec<Tensor> {
+        let mut v: Vec<Tensor> = Vec::with_capacity(4 * self.params.len() + 1);
+        v.extend(self.params.iter().cloned());
+        v.extend(self.m.iter().cloned());
+        v.extend(self.v.iter().cloned());
+        v.push(Tensor::scalar_i32(self.step));
+        v.extend(grads);
+        v
+    }
+
+    /// Absorb `apply_adam` outputs: `params'..., m'..., v'..., step'`.
+    pub fn absorb_apply_adam(&mut self, mut out: Vec<Tensor>) -> Result<()> {
+        let p = self.params.len();
+        if out.len() != 3 * p + 1 {
+            return Err(Error::Shape(format!(
+                "apply_adam returned {} tensors, wanted {}",
+                out.len(),
+                3 * p + 1
+            )));
+        }
+        let step = out.pop().unwrap().to_i32()?[0];
+        self.v = out.split_off(2 * p);
+        self.m = out.split_off(p);
+        self.params = out;
+        self.step = step;
+        Ok(())
+    }
+}
+
+/// Element-wise mean of per-rank gradient sets — the allreduce of DDP.
+pub fn allreduce_mean(per_rank: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
+    let r = per_rank.len();
+    if r == 0 {
+        return Err(Error::Invalid("allreduce over zero ranks".into()));
+    }
+    let n = per_rank[0].len();
+    let mut out = Vec::with_capacity(n);
+    for t in 0..n {
+        let first = &per_rank[0][t];
+        let mut acc = first.to_f32()?;
+        for rank in per_rank.iter().skip(1) {
+            if rank.len() != n || rank[t].shape != first.shape {
+                return Err(Error::Shape("gradient shape mismatch across ranks".into()));
+            }
+            for (a, b) in acc.iter_mut().zip(rank[t].to_f32()?) {
+                *a += b;
+            }
+        }
+        let inv = 1.0 / r as f32;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+        out.push(Tensor::from_f32(&first.shape, acc)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], v: Vec<f32>) -> Tensor {
+        Tensor::from_f32(shape, v).unwrap()
+    }
+
+    #[test]
+    fn allreduce_means_elementwise() {
+        let r0 = vec![t(&[2], vec![1.0, 2.0]), t(&[1], vec![10.0])];
+        let r1 = vec![t(&[2], vec![3.0, 6.0]), t(&[1], vec![-10.0])];
+        let avg = allreduce_mean(&[r0, r1]).unwrap();
+        assert_eq!(avg[0].to_f32().unwrap(), vec![2.0, 4.0]);
+        assert_eq!(avg[1].to_f32().unwrap(), vec![0.0]);
+    }
+
+    #[test]
+    fn allreduce_single_rank_is_identity() {
+        let r0 = vec![t(&[3], vec![1.0, -1.0, 5.0])];
+        let avg = allreduce_mean(std::slice::from_ref(&r0)).unwrap();
+        assert_eq!(avg[0].to_f32().unwrap(), vec![1.0, -1.0, 5.0]);
+    }
+
+    #[test]
+    fn allreduce_rejects_mismatch() {
+        let r0 = vec![t(&[2], vec![1.0, 2.0])];
+        let r1 = vec![t(&[3], vec![1.0, 2.0, 3.0])];
+        assert!(allreduce_mean(&[r0, r1]).is_err());
+    }
+
+    #[test]
+    fn train_step_io_roundtrip_shapes() {
+        let mut st = ParamState {
+            params: vec![t(&[2], vec![1.0, 2.0]), t(&[1], vec![3.0])],
+            m: vec![Tensor::zeros(DType::F32, &[2]), Tensor::zeros(DType::F32, &[1])],
+            v: vec![Tensor::zeros(DType::F32, &[2]), Tensor::zeros(DType::F32, &[1])],
+            step: 0,
+        };
+        let batch = t(&[1, 4], vec![0.0; 4]);
+        let inputs = st.train_step_inputs(batch);
+        assert_eq!(inputs.len(), 8);
+        // Fake outputs: shift params by 1.
+        let mut out: Vec<Tensor> = inputs[..6].to_vec();
+        out.push(Tensor::scalar_i32(1));
+        out.push(Tensor::scalar_f32(0.5));
+        let loss = st.absorb_train_step(out).unwrap();
+        assert_eq!(loss, 0.5);
+        assert_eq!(st.step, 1);
+        assert_eq!(st.params[0].to_f32().unwrap(), vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,103 @@
+//! Deployment planning: how many database instances, with which engine and
+//! core binding, for a given run configuration (paper Fig 2).
+
+use crate::config::{Deployment, RunConfig};
+use crate::db::{Engine, ServerConfig};
+
+/// One database instance to launch.
+#[derive(Debug, Clone)]
+pub struct DbSpec {
+    /// Logical node hosting this instance.
+    pub node: usize,
+    pub engine: Engine,
+    pub cores: usize,
+    pub with_models: bool,
+}
+
+/// The resolved plan.
+#[derive(Debug, Clone)]
+pub struct DeploymentPlan {
+    pub dbs: Vec<DbSpec>,
+    pub deployment: Deployment,
+    /// Sim ranks per node and total.
+    pub ranks_per_node: usize,
+    pub nodes: usize,
+}
+
+impl DeploymentPlan {
+    pub fn new(cfg: &RunConfig, with_models: bool) -> DeploymentPlan {
+        let dbs = match cfg.deployment {
+            Deployment::CoLocated => (0..cfg.nodes)
+                .map(|node| DbSpec {
+                    node,
+                    engine: cfg.engine,
+                    cores: cfg.db_cores,
+                    with_models,
+                })
+                .collect(),
+            Deployment::Clustered { db_nodes } => (0..db_nodes.max(1))
+                .map(|i| DbSpec {
+                    node: cfg.nodes + i, // dedicated nodes after the sim nodes
+                    engine: cfg.engine,
+                    cores: crate::cluster::scaling::CLUSTERED_DB_CORES,
+                    with_models,
+                })
+                .collect(),
+        };
+        DeploymentPlan {
+            dbs,
+            deployment: cfg.deployment,
+            ranks_per_node: cfg.ranks_per_node,
+            nodes: cfg.nodes,
+        }
+    }
+
+    /// Total nodes the job occupies (clustered pays for extra DB nodes —
+    /// the paper's argument for preferring co-location).
+    pub fn total_nodes(&self) -> usize {
+        match self.deployment {
+            Deployment::CoLocated => self.nodes,
+            Deployment::Clustered { db_nodes } => self.nodes + db_nodes,
+        }
+    }
+
+    pub fn server_configs(&self) -> Vec<ServerConfig> {
+        self.dbs
+            .iter()
+            .map(|d| ServerConfig {
+                addr: "127.0.0.1:0".parse().unwrap(),
+                engine: d.engine,
+                cores: d.cores,
+                with_models: d.with_models,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn colocated_one_db_per_node() {
+        let mut cfg = RunConfig::default();
+        cfg.nodes = 3;
+        let plan = DeploymentPlan::new(&cfg, false);
+        assert_eq!(plan.dbs.len(), 3);
+        assert_eq!(plan.total_nodes(), 3);
+        assert_eq!(plan.dbs[1].node, 1);
+        assert_eq!(plan.dbs[0].cores, 8);
+    }
+
+    #[test]
+    fn clustered_dedicated_nodes_full_socket() {
+        let mut cfg = RunConfig::default();
+        cfg.nodes = 4;
+        cfg.deployment = Deployment::Clustered { db_nodes: 2 };
+        let plan = DeploymentPlan::new(&cfg, false);
+        assert_eq!(plan.dbs.len(), 2);
+        assert_eq!(plan.total_nodes(), 6, "clustered costs extra nodes");
+        assert_eq!(plan.dbs[0].node, 4);
+        assert_eq!(plan.dbs[0].cores, 32);
+    }
+}

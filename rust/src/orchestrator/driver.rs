@@ -1,0 +1,250 @@
+//! The driver: launches database instances, the CFD producer and the
+//! in-situ trainer, wires them together, and reports the paper's Tables 1-2
+//! and Fig-10 curves.
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::client::{tensor_key, Client};
+use crate::config::RunConfig;
+use crate::db::{DbServer, ServerConfig};
+use crate::error::{Error, Result};
+use crate::ml::{Trainer, TrainerConfig};
+use crate::orchestrator::deployment::DeploymentPlan;
+use crate::runtime::Executor;
+use crate::sim::cfd::{ChannelFlow, Grid, MeshSampler};
+use crate::telemetry::{ComponentTimes, Stopwatch, Table};
+
+/// A launched deployment: the database instances and their addresses.
+pub struct Driver {
+    pub servers: Vec<DbServer>,
+    pub plan: DeploymentPlan,
+}
+
+impl Driver {
+    /// Launch every database in the plan (in-process; each server carries
+    /// its own threads, which is the single-host analogue of the IL
+    /// launching jobs through the scheduler).
+    pub fn launch(cfg: &RunConfig, with_models: bool) -> Result<Driver> {
+        let plan = DeploymentPlan::new(cfg, with_models);
+        let mut servers = Vec::with_capacity(plan.dbs.len());
+        for sc in plan.server_configs() {
+            servers.push(DbServer::start(sc)?);
+        }
+        Ok(Driver { servers, plan })
+    }
+
+    /// Launch with an externally shared PJRT executor (so DB-side inference
+    /// and the trainer share one compiled-artifact cache).
+    pub fn launch_shared_exec(
+        cfg: &RunConfig,
+        exec: &Executor,
+    ) -> Result<Driver> {
+        let plan = DeploymentPlan::new(cfg, true);
+        let mut servers = Vec::with_capacity(plan.dbs.len());
+        for sc in plan.server_configs() {
+            let models = Some(Arc::new(crate::ai::ModelRuntime::new(exec.clone())));
+            servers.push(DbServer::start_with(
+                ServerConfig { with_models: true, ..sc },
+                models,
+            )?);
+        }
+        Ok(Driver { servers, plan })
+    }
+
+    pub fn addrs(&self) -> Vec<SocketAddr> {
+        self.servers.iter().map(|s| s.addr).collect()
+    }
+
+    pub fn primary_addr(&self) -> SocketAddr {
+        self.servers[0].addr
+    }
+
+    pub fn shutdown(&mut self) {
+        for s in &mut self.servers {
+            s.shutdown();
+        }
+    }
+}
+
+/// Configuration of the end-to-end in-situ training run (paper §4 scaled to
+/// this host — the knobs keep the paper's ratios: 24 sim ranks : 4 ML ranks
+/// per node, snapshots every 2 steps, ~20 epochs per snapshot).
+#[derive(Debug, Clone)]
+pub struct InSituTrainingConfig {
+    pub artifacts_dir: PathBuf,
+    /// Solver grid (PHASTA stand-in).
+    pub grid: (usize, usize, usize),
+    pub nu: f64,
+    /// Simulated "PHASTA ranks" publishing partitions (each samples the
+    /// shared flow onto its own mesh offset).
+    pub sim_ranks: usize,
+    pub ml_ranks: usize,
+    pub epochs: usize,
+    /// Publish a snapshot every `snapshot_every` solver steps (paper: 2).
+    pub snapshot_every: u64,
+    /// Total solver steps to integrate.
+    pub solver_steps: u64,
+    pub seed: u64,
+}
+
+impl Default for InSituTrainingConfig {
+    fn default() -> Self {
+        InSituTrainingConfig {
+            artifacts_dir: crate::db::server::artifacts_dir(),
+            grid: (24, 16, 12),
+            nu: 2e-3,
+            sim_ranks: 4,
+            ml_ranks: 2,
+            epochs: 60,
+            snapshot_every: 2,
+            solver_steps: 40,
+            seed: 0,
+        }
+    }
+}
+
+/// Everything the e2e run reports.
+pub struct InSituTrainingReport {
+    pub solver_table: Table,
+    pub trainer_table: Table,
+    pub history: Vec<crate::ml::EpochLog>,
+    pub compression_factor: f64,
+    /// Fractional overhead of the framework on the solver
+    /// (client init + metadata + sends vs equation formation + solution).
+    pub solver_overhead_frac: f64,
+}
+
+/// Run the full §4 workflow: co-located DB + CFD producer + in-situ trainer.
+pub fn run_insitu_training(cfg: &InSituTrainingConfig) -> Result<InSituTrainingReport> {
+    // --- deployment: one co-located DB ---------------------------------
+    let mut run_cfg = RunConfig::default();
+    run_cfg.nodes = 1;
+    run_cfg.ranks_per_node = cfg.sim_ranks;
+    run_cfg.ml_ranks_per_node = cfg.ml_ranks;
+    let mut driver = Driver::launch(&run_cfg, false)?;
+    let addr = driver.primary_addr();
+
+    // --- producer: the CFD solver thread --------------------------------
+    let solver_times = Arc::new(ComponentTimes::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let producer = {
+        let times = Arc::clone(&solver_times);
+        let stop = Arc::clone(&stop);
+        let cfg = cfg.clone();
+        std::thread::Builder::new()
+            .name("cfd-producer".into())
+            .spawn(move || -> Result<()> {
+                let sampler = MeshSampler::load(&cfg.artifacts_dir.join("mesh_coords.bin"))?;
+                let (nx, ny, nz) = cfg.grid;
+                let mut flow = ChannelFlow::new(Grid::channel(nx, ny, nz), cfg.nu, cfg.seed, 0.12);
+
+                let sw = Stopwatch::start();
+                let mut clients: Vec<Client> = (0..cfg.sim_ranks)
+                    .map(|_| Client::connect_retry(addr, 100, Duration::from_millis(10)))
+                    .collect::<Result<_>>()?;
+                times.record("client_init", sw.stop() / cfg.sim_ranks as f64);
+
+                // Per-rank samplers: each "PHASTA rank" owns a partition; we
+                // emulate partitions by jittering the mesh points per rank so
+                // every rank publishes distinct data.
+                let mut rank_samplers = Vec::with_capacity(cfg.sim_ranks);
+                for r in 0..cfg.sim_ranks {
+                    let mut rng = crate::util::rng::Rng::new(cfg.seed ^ (r as u64 + 1));
+                    let coords = sampler
+                        .coords
+                        .iter()
+                        .map(|c| {
+                            [
+                                (c[0] + 0.05 * rng.f64()).min(3.99),
+                                (c[1] + 0.02 * rng.f64()).min(1.99),
+                                (c[2] + 0.05 * rng.f64()).min(1.99),
+                            ]
+                        })
+                        .collect();
+                    rank_samplers.push(MeshSampler::from_coords(coords));
+                }
+
+                let mut published = 0u64;
+                for step in 0..cfg.solver_steps {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    flow.step(); // formation+solution recorded in flow.timings
+                    if (step + 1) % cfg.snapshot_every == 0 {
+                        for (r, (client, rs)) in
+                            clients.iter_mut().zip(&rank_samplers).enumerate()
+                        {
+                            let snap = rs.snapshot(&flow);
+                            let sw = Stopwatch::start();
+                            client.put_tensor(&tensor_key("field", r, published), &snap)?;
+                            times.record("send", sw.stop());
+                        }
+                        let sw = Stopwatch::start();
+                        clients[0].put_meta("latest_step", &published.to_string())?;
+                        times.record("metadata", sw.stop());
+                        published += 1;
+                    }
+                }
+                // Fold the solver's internal timings in.
+                for (name, acc) in [
+                    ("equation_formation", &flow.timings.formation),
+                    ("equation_solution", &flow.timings.solution),
+                ] {
+                    // Re-record sample-by-sample statistics are lost; record
+                    // mean per step with the count preserved via repeats.
+                    for _ in 0..acc.count() {
+                        times.record(name, acc.mean());
+                    }
+                }
+                Ok(())
+            })
+            .map_err(Error::Io)?
+    };
+
+    // --- consumer: the trainer ------------------------------------------
+    let t_cfg = TrainerConfig {
+        db_addr: addr,
+        ml_ranks: cfg.ml_ranks,
+        sim_ranks: cfg.sim_ranks,
+        epochs: cfg.epochs,
+        field: "field".into(),
+        poll_interval: Duration::from_millis(5),
+        poll_max_wait: Duration::from_secs(300),
+    };
+    let exec = Executor::new()?;
+    let mut trainer = Trainer::new(t_cfg, &cfg.artifacts_dir, exec)?;
+    let train_result = trainer.run();
+
+    stop.store(true, Ordering::Relaxed);
+    producer.join().expect("producer thread panicked")?;
+    train_result?;
+
+    // --- report -----------------------------------------------------------
+    let solver_table =
+        solver_times.to_table("PHASTA-standin solver components during in situ training");
+    let trainer_table = trainer.table();
+    let snap = solver_times.snapshot();
+    let solver_work: f64 = ["equation_formation", "equation_solution"]
+        .iter()
+        .filter_map(|k| snap.get(*k))
+        .map(|s| s.sum())
+        .sum();
+    let overhead: f64 = ["client_init", "send", "metadata"]
+        .iter()
+        .filter_map(|k| snap.get(*k))
+        .map(|s| s.sum())
+        .sum();
+    let report = InSituTrainingReport {
+        solver_table,
+        trainer_table,
+        history: trainer.history.clone(),
+        compression_factor: trainer.manifest.model.compression_factor,
+        solver_overhead_frac: if solver_work > 0.0 { overhead / solver_work } else { 0.0 },
+    };
+    driver.shutdown();
+    Ok(report)
+}

@@ -1,0 +1,9 @@
+//! The SmartSim-IL analogue: the driver that deploys the database(s), the
+//! data producer and the data consumer according to a deployment plan, then
+//! monitors and tears them down.
+
+pub mod deployment;
+pub mod driver;
+
+pub use deployment::DeploymentPlan;
+pub use driver::{Driver, InSituTrainingConfig, InSituTrainingReport};

@@ -1,0 +1,82 @@
+//! Length-prefixed framing over any `Read`/`Write` stream.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+
+/// Hard cap on a single frame (body) size.  The largest legitimate payload is
+/// a per-rank training tensor (hundreds of MB would indicate a protocol
+/// error or an attack, so we refuse it rather than OOM).
+pub const MAX_FRAME: usize = 1 << 30; // 1 GiB
+
+/// Write one frame: u32-LE length prefix, then the body.
+pub fn write_frame<W: Write>(w: &mut W, body: &[u8]) -> Result<()> {
+    if body.len() > MAX_FRAME {
+        return Err(Error::Protocol(format!("frame too large: {} bytes", body.len())));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame body; `Ok(None)` on a clean EOF at a frame boundary.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    // A clean shutdown arrives as EOF before any length byte.
+    match r.read(&mut len_buf[..1])? {
+        0 => return Ok(None),
+        1 => {}
+        _ => unreachable!(),
+    }
+    r.read_exact(&mut len_buf[1..])?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(Error::Protocol(format!("frame too large: {len} bytes")));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_frames() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[7u8; 1000]).unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), vec![7u8; 1000]);
+        assert!(read_frame(&mut c).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn truncated_body_is_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        buf.truncate(buf.len() - 2);
+        let mut c = Cursor::new(buf);
+        assert!(read_frame(&mut c).is_err());
+    }
+
+    #[test]
+    fn truncated_header_is_error() {
+        let mut c = Cursor::new(vec![5u8, 0u8]); // half a length prefix
+        assert!(read_frame(&mut c).is_err());
+    }
+
+    #[test]
+    fn oversize_frame_rejected_without_alloc() {
+        let mut buf = (u32::MAX).to_le_bytes().to_vec();
+        buf.extend_from_slice(b"x");
+        let mut c = Cursor::new(buf);
+        assert!(read_frame(&mut c).is_err());
+    }
+}

@@ -1,0 +1,379 @@
+//! Request/response message types and their binary codec.
+//!
+//! The request set mirrors the SmartRedis client API surface the paper's
+//! workflows use: tensor send/retrieve (`put_tensor`/`unpack_tensor`),
+//! metadata, model upload, and the RedisAI-style three-step inference
+//! (`put_tensor` → `run_model` → `unpack_tensor`).
+
+use crate::error::{Error, Result};
+use crate::tensor::{DType, Tensor};
+
+/// Placement of a model execution inside the database (RedisAI semantics:
+/// the client names the device; the DB owns the device pool).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Device {
+    Cpu,
+    /// Logical GPU ordinal on the node (Polaris: 0..=3).
+    Gpu(u8),
+}
+
+/// Client-to-database commands.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    PutTensor { key: String, tensor: Tensor },
+    GetTensor { key: String },
+    DelTensor { key: String },
+    Exists { key: String },
+    PutMeta { key: String, value: String },
+    GetMeta { key: String },
+    ListKeys { prefix: String },
+    /// Upload an AOT artifact (HLO text) into the model registry.
+    PutModel { key: String, hlo_text: String },
+    /// RedisAI-style in-database inference over stored tensors.
+    RunModel { key: String, in_keys: Vec<String>, out_keys: Vec<String>, device: Device },
+    Info,
+    FlushAll,
+}
+
+/// Database-to-client replies.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Ok,
+    Tensor(Tensor),
+    NotFound,
+    Bool(bool),
+    Meta(String),
+    Keys(Vec<String>),
+    Error(String),
+    Info { keys: u64, bytes: u64, ops: u64, models: u64, engine: String },
+}
+
+// --- encoding helpers -------------------------------------------------------
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) {
+    buf.push(t.dtype.tag());
+    buf.push(t.shape.len() as u8);
+    for d in &t.shape {
+        buf.extend_from_slice(&(*d as u32).to_le_bytes());
+    }
+    buf.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+    buf.extend_from_slice(&t.data);
+}
+
+/// Byte-cursor used for decoding.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cur { b, i: 0 }
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        let v = *self
+            .b
+            .get(self.i)
+            .ok_or_else(|| Error::Protocol("truncated message".into()))?;
+        self.i += 1;
+        Ok(v)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self
+            .b
+            .get(self.i..self.i + 4)
+            .ok_or_else(|| Error::Protocol("truncated u32".into()))?;
+        self.i += 4;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self
+            .b
+            .get(self.i..self.i + 8)
+            .ok_or_else(|| Error::Protocol("truncated u64".into()))?;
+        self.i += 8;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let s = self
+            .b
+            .get(self.i..self.i + n)
+            .ok_or_else(|| Error::Protocol("truncated payload".into()))?;
+        self.i += n;
+        Ok(s)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        if n > crate::proto::MAX_FRAME {
+            return Err(Error::Protocol("string too large".into()));
+        }
+        let s = self.bytes(n)?;
+        String::from_utf8(s.to_vec()).map_err(|_| Error::Protocol("bad utf8".into()))
+    }
+
+    fn tensor(&mut self) -> Result<Tensor> {
+        let dtype = DType::from_tag(self.u8()?)?;
+        let ndim = self.u8()? as usize;
+        if ndim > 16 {
+            return Err(Error::Protocol(format!("ndim {ndim} too large")));
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(self.u32()? as usize);
+        }
+        let len = self.u64()? as usize;
+        if len > crate::proto::MAX_FRAME {
+            return Err(Error::Protocol("tensor payload too large".into()));
+        }
+        let data = self.bytes(len)?.to_vec();
+        let t = Tensor { dtype, shape, data };
+        t.validate()?;
+        Ok(t)
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.i == self.b.len() {
+            Ok(())
+        } else {
+            Err(Error::Protocol(format!(
+                "{} trailing bytes after message",
+                self.b.len() - self.i
+            )))
+        }
+    }
+}
+
+/// Zero-clone encoding of a `PutTensor` request from a borrowed tensor —
+/// byte-identical to `Request::PutTensor { .. }.encode(..)` but without
+/// materializing an owned `Request` (saves a full payload copy on the
+/// client's hottest path; see EXPERIMENTS.md §Perf).
+pub fn encode_put_tensor_into(buf: &mut Vec<u8>, key: &str, t: &Tensor) {
+    buf.push(req_op::PUT_TENSOR);
+    put_str(buf, key);
+    put_tensor(buf, t);
+}
+
+// --- Request codec -----------------------------------------------------------
+
+mod req_op {
+    pub const PUT_TENSOR: u8 = 1;
+    pub const GET_TENSOR: u8 = 2;
+    pub const DEL_TENSOR: u8 = 3;
+    pub const EXISTS: u8 = 4;
+    pub const PUT_META: u8 = 5;
+    pub const GET_META: u8 = 6;
+    pub const LIST_KEYS: u8 = 7;
+    pub const PUT_MODEL: u8 = 8;
+    pub const RUN_MODEL: u8 = 9;
+    pub const INFO: u8 = 10;
+    pub const FLUSH_ALL: u8 = 11;
+}
+
+impl Request {
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Request::PutTensor { key, tensor } => {
+                buf.push(req_op::PUT_TENSOR);
+                put_str(buf, key);
+                put_tensor(buf, tensor);
+            }
+            Request::GetTensor { key } => {
+                buf.push(req_op::GET_TENSOR);
+                put_str(buf, key);
+            }
+            Request::DelTensor { key } => {
+                buf.push(req_op::DEL_TENSOR);
+                put_str(buf, key);
+            }
+            Request::Exists { key } => {
+                buf.push(req_op::EXISTS);
+                put_str(buf, key);
+            }
+            Request::PutMeta { key, value } => {
+                buf.push(req_op::PUT_META);
+                put_str(buf, key);
+                put_str(buf, value);
+            }
+            Request::GetMeta { key } => {
+                buf.push(req_op::GET_META);
+                put_str(buf, key);
+            }
+            Request::ListKeys { prefix } => {
+                buf.push(req_op::LIST_KEYS);
+                put_str(buf, prefix);
+            }
+            Request::PutModel { key, hlo_text } => {
+                buf.push(req_op::PUT_MODEL);
+                put_str(buf, key);
+                put_str(buf, hlo_text);
+            }
+            Request::RunModel { key, in_keys, out_keys, device } => {
+                buf.push(req_op::RUN_MODEL);
+                put_str(buf, key);
+                buf.extend_from_slice(&(in_keys.len() as u32).to_le_bytes());
+                for k in in_keys {
+                    put_str(buf, k);
+                }
+                buf.extend_from_slice(&(out_keys.len() as u32).to_le_bytes());
+                for k in out_keys {
+                    put_str(buf, k);
+                }
+                match device {
+                    Device::Cpu => buf.push(0xff),
+                    Device::Gpu(i) => buf.push(*i),
+                }
+            }
+            Request::Info => buf.push(req_op::INFO),
+            Request::FlushAll => buf.push(req_op::FLUSH_ALL),
+        }
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Request> {
+        let mut c = Cur::new(body);
+        let op = c.u8()?;
+        let req = match op {
+            req_op::PUT_TENSOR => Request::PutTensor { key: c.str()?, tensor: c.tensor()? },
+            req_op::GET_TENSOR => Request::GetTensor { key: c.str()? },
+            req_op::DEL_TENSOR => Request::DelTensor { key: c.str()? },
+            req_op::EXISTS => Request::Exists { key: c.str()? },
+            req_op::PUT_META => Request::PutMeta { key: c.str()?, value: c.str()? },
+            req_op::GET_META => Request::GetMeta { key: c.str()? },
+            req_op::LIST_KEYS => Request::ListKeys { prefix: c.str()? },
+            req_op::PUT_MODEL => Request::PutModel { key: c.str()?, hlo_text: c.str()? },
+            req_op::RUN_MODEL => {
+                let key = c.str()?;
+                let n_in = c.u32()? as usize;
+                if n_in > 4096 {
+                    return Err(Error::Protocol("too many input keys".into()));
+                }
+                let mut in_keys = Vec::with_capacity(n_in);
+                for _ in 0..n_in {
+                    in_keys.push(c.str()?);
+                }
+                let n_out = c.u32()? as usize;
+                if n_out > 4096 {
+                    return Err(Error::Protocol("too many output keys".into()));
+                }
+                let mut out_keys = Vec::with_capacity(n_out);
+                for _ in 0..n_out {
+                    out_keys.push(c.str()?);
+                }
+                let device = match c.u8()? {
+                    0xff => Device::Cpu,
+                    i if i < 16 => Device::Gpu(i),
+                    i => return Err(Error::Protocol(format!("bad device {i}"))),
+                };
+                Request::RunModel { key, in_keys, out_keys, device }
+            }
+            req_op::INFO => Request::Info,
+            req_op::FLUSH_ALL => Request::FlushAll,
+            _ => return Err(Error::Protocol(format!("unknown request opcode {op}"))),
+        };
+        c.done()?;
+        Ok(req)
+    }
+
+    /// Approximate wire size (used by the DES cost model and stats).
+    pub fn wire_size(&self) -> usize {
+        let mut buf = Vec::new();
+        self.encode(&mut buf);
+        buf.len() + 4
+    }
+}
+
+// --- Response codec ----------------------------------------------------------
+
+mod resp_op {
+    pub const OK: u8 = 1;
+    pub const TENSOR: u8 = 2;
+    pub const NOT_FOUND: u8 = 3;
+    pub const BOOL: u8 = 4;
+    pub const META: u8 = 5;
+    pub const KEYS: u8 = 6;
+    pub const ERROR: u8 = 7;
+    pub const INFO: u8 = 8;
+}
+
+impl Response {
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Response::Ok => buf.push(resp_op::OK),
+            Response::Tensor(t) => {
+                buf.push(resp_op::TENSOR);
+                put_tensor(buf, t);
+            }
+            Response::NotFound => buf.push(resp_op::NOT_FOUND),
+            Response::Bool(b) => {
+                buf.push(resp_op::BOOL);
+                buf.push(*b as u8);
+            }
+            Response::Meta(s) => {
+                buf.push(resp_op::META);
+                put_str(buf, s);
+            }
+            Response::Keys(ks) => {
+                buf.push(resp_op::KEYS);
+                buf.extend_from_slice(&(ks.len() as u32).to_le_bytes());
+                for k in ks {
+                    put_str(buf, k);
+                }
+            }
+            Response::Error(m) => {
+                buf.push(resp_op::ERROR);
+                put_str(buf, m);
+            }
+            Response::Info { keys, bytes, ops, models, engine } => {
+                buf.push(resp_op::INFO);
+                buf.extend_from_slice(&keys.to_le_bytes());
+                buf.extend_from_slice(&bytes.to_le_bytes());
+                buf.extend_from_slice(&ops.to_le_bytes());
+                buf.extend_from_slice(&models.to_le_bytes());
+                put_str(buf, engine);
+            }
+        }
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Response> {
+        let mut c = Cur::new(body);
+        let op = c.u8()?;
+        let resp = match op {
+            resp_op::OK => Response::Ok,
+            resp_op::TENSOR => Response::Tensor(c.tensor()?),
+            resp_op::NOT_FOUND => Response::NotFound,
+            resp_op::BOOL => Response::Bool(c.u8()? != 0),
+            resp_op::META => Response::Meta(c.str()?),
+            resp_op::KEYS => {
+                let n = c.u32()? as usize;
+                if n > 1 << 20 {
+                    return Err(Error::Protocol("too many keys".into()));
+                }
+                let mut ks = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    ks.push(c.str()?);
+                }
+                Response::Keys(ks)
+            }
+            resp_op::ERROR => Response::Error(c.str()?),
+            resp_op::INFO => Response::Info {
+                keys: c.u64()?,
+                bytes: c.u64()?,
+                ops: c.u64()?,
+                models: c.u64()?,
+                engine: c.str()?,
+            },
+            _ => return Err(Error::Protocol(format!("unknown response opcode {op}"))),
+        };
+        c.done()?;
+        Ok(resp)
+    }
+}

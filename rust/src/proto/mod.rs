@@ -1,0 +1,153 @@
+//! Wire protocol between SmartRedis-analogue clients and the tensor database.
+//!
+//! The paper's client library speaks RESP to Redis/KeyDB; we define an
+//! equivalent compact binary protocol:
+//!
+//! ```text
+//! frame   := u32-LE body_len | body
+//! body    := u8 opcode | fields...
+//! string  := u32-LE len | utf8 bytes
+//! tensor  := u8 dtype | u8 ndim | u32-LE dims[ndim] | payload bytes
+//! ```
+//!
+//! Requests and responses are symmetric frames.  The protocol is strictly
+//! request/response per connection (like RESP without pipelining; clients
+//! that want concurrency open more connections, exactly how the paper runs
+//! one SmartRedis client per simulation rank).
+
+pub mod frame;
+pub mod message;
+
+pub use frame::{read_frame, write_frame, MAX_FRAME};
+pub use message::{Device, Request, Response};
+
+#[cfg(test)]
+mod tests {
+    use super::message::*;
+    use crate::tensor::{DType, Tensor};
+    use crate::util::propcheck::{check, Gen};
+
+    fn roundtrip_req(r: &Request) -> Request {
+        let mut buf = Vec::new();
+        r.encode(&mut buf);
+        Request::decode(&buf).expect("decode")
+    }
+
+    fn roundtrip_resp(r: &Response) -> Response {
+        let mut buf = Vec::new();
+        r.encode(&mut buf);
+        Response::decode(&buf).expect("decode")
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        let t = Tensor::from_f32(&[2, 2], vec![1.0, -2.5, 3.0, 0.0]).unwrap();
+        let cases = vec![
+            Request::PutTensor { key: "f_rank0_step2".into(), tensor: t.clone() },
+            Request::GetTensor { key: "k".into() },
+            Request::DelTensor { key: "k".into() },
+            Request::Exists { key: "k".into() },
+            Request::PutMeta { key: "m".into(), value: "epoch=3".into() },
+            Request::GetMeta { key: "m".into() },
+            Request::ListKeys { prefix: "f_".into() },
+            Request::PutModel { key: "enc".into(), hlo_text: "HloModule m".into() },
+            Request::RunModel {
+                key: "enc".into(),
+                in_keys: vec!["a".into(), "b".into()],
+                out_keys: vec!["z".into()],
+                device: Device::Gpu(2),
+            },
+            Request::Info,
+            Request::FlushAll,
+        ];
+        for c in cases {
+            assert_eq!(roundtrip_req(&c), c);
+        }
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let t = Tensor::from_i32(&[3], vec![1, 2, 3]).unwrap();
+        let cases = vec![
+            Response::Ok,
+            Response::Tensor(t),
+            Response::NotFound,
+            Response::Bool(true),
+            Response::Meta("x".into()),
+            Response::Keys(vec!["a".into(), "b".into()]),
+            Response::Error("boom".into()),
+            Response::Info { keys: 10, bytes: 1 << 20, ops: 42, models: 2, engine: "redis".into() },
+        ];
+        for c in cases {
+            assert_eq!(roundtrip_resp(&c), c);
+        }
+    }
+
+    #[test]
+    fn borrowed_put_tensor_encoding_is_byte_identical() {
+        let t = Tensor::from_f32(&[3, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let owned = Request::PutTensor { key: "k1".into(), tensor: t.clone() };
+        let mut a = Vec::new();
+        owned.encode(&mut a);
+        let mut b = Vec::new();
+        encode_put_tensor_into(&mut b, "k1", &t);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Request::decode(&[]).is_err());
+        assert!(Request::decode(&[0xff]).is_err());
+        // Truncated string length.
+        assert!(Request::decode(&[1, 4, 0, 0]).is_err());
+        // String body shorter than its declared length.
+        assert!(Request::decode(&[1, 4, 0, 0, 0, b'a']).is_err());
+    }
+
+    #[test]
+    fn prop_arbitrary_tensor_roundtrip() {
+        check("proto tensor roundtrip", 200, |g: &mut Gen| {
+            let ndim = g.usize_in(0..=4);
+            let shape: Vec<usize> = (0..ndim).map(|_| g.usize_in(1..=8)).collect();
+            let n: usize = shape.iter().product();
+            let dt = *g.choose(&[DType::F32, DType::I32, DType::U8, DType::F64]);
+            let data: Vec<u8> = (0..n * dt.size()).map(|_| g.u32() as u8).collect();
+            let t = Tensor { dtype: dt, shape, data };
+            let r = Request::PutTensor { key: g.key(), tensor: t };
+            assert_eq!(roundtrip_req(&r), r);
+        });
+    }
+
+    #[test]
+    fn prop_decode_never_panics_on_fuzz() {
+        // Malformed bytes must produce Err, never a panic/abort.
+        check("proto fuzz decode", 500, |g: &mut Gen| {
+            let bytes = g.vec(0..=64, |g| g.u32() as u8);
+            let _ = Request::decode(&bytes);
+            let _ = Response::decode(&bytes);
+        });
+    }
+
+    #[test]
+    fn prop_mutated_valid_frame_never_panics() {
+        check("proto mutation decode", 300, |g: &mut Gen| {
+            let t = Tensor::from_f32(&[2], vec![1.0, 2.0]).unwrap();
+            let r = Request::RunModel {
+                key: g.key(),
+                in_keys: vec![g.key(), g.key()],
+                out_keys: vec![g.key()],
+                device: Device::Cpu,
+            };
+            let mut buf = Vec::new();
+            r.encode(&mut buf);
+            let r2 = Request::PutTensor { key: g.key(), tensor: t };
+            r2.encode(&mut buf);
+            // Flip a few bytes.
+            for _ in 0..g.usize_in(1..=8) {
+                let i = g.usize_in(0..=buf.len() - 1);
+                buf[i] ^= g.u32() as u8;
+            }
+            let _ = Request::decode(&buf);
+        });
+    }
+}

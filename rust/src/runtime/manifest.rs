@@ -1,0 +1,295 @@
+//! Parser for `artifacts/manifest.json`, the contract between the AOT
+//! compile path (python) and the rust runtime: artifact signatures, the
+//! canonical parameter ordering, and model/mesh hyperparameters.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+/// One input/output slot of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.numel() * self.dtype.size()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSig> {
+        Ok(TensorSig {
+            name: j
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| Error::Parse("sig name".into()))?
+                .to_string(),
+            dtype: DType::from_manifest(
+                j.req("dtype")?.as_str().ok_or_else(|| Error::Parse("sig dtype".into()))?,
+            )?,
+            shape: j.req("shape")?.usize_array()?,
+        })
+    }
+}
+
+/// One lowered HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// One row of the parameter table (offsets into `params_init.bin`).
+#[derive(Debug, Clone)]
+pub struct ParamRow {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Model hyperparameters recorded by `aot.py`.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub channels: usize,
+    pub n_points: usize,
+    pub latent: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub n_param_tensors: usize,
+    pub n_params_total: usize,
+    pub compression_factor: f64,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelInfo,
+    pub param_order: Vec<String>,
+    pub enc_param_order: Vec<String>,
+    pub dec_param_order: Vec<String>,
+    pub param_table: Vec<ParamRow>,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+    pub mesh_levels: Vec<Vec<usize>>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Parse(format!("read {}: {e}", path.display())))?;
+        Manifest::parse(&text)
+    }
+
+    /// Convenience: load from an artifacts directory.
+    pub fn load_dir(dir: &Path) -> Result<Manifest> {
+        Manifest::load(&dir.join("manifest.json"))
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let m = j.req("model")?;
+        let model = ModelInfo {
+            channels: m.req("channels")?.as_usize().unwrap_or(0),
+            n_points: m.req("n_points")?.as_usize().unwrap_or(0),
+            latent: m.req("latent")?.as_usize().unwrap_or(0),
+            batch: m.req("batch")?.as_usize().unwrap_or(0),
+            lr: m.req("lr")?.as_f64().unwrap_or(0.0),
+            n_param_tensors: m.req("n_param_tensors")?.as_usize().unwrap_or(0),
+            n_params_total: m.req("n_params_total")?.as_usize().unwrap_or(0),
+            compression_factor: m.req("compression_factor")?.as_f64().unwrap_or(0.0),
+        };
+        let str_arr = |key: &str| -> Result<Vec<String>> {
+            j.req(key)?
+                .as_arr()
+                .ok_or_else(|| Error::Parse(format!("{key} not an array")))?
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| Error::Parse(format!("{key}: non-string")))
+                })
+                .collect()
+        };
+        let param_order = str_arr("param_order")?;
+        let enc_param_order = str_arr("enc_param_order")?;
+        let dec_param_order = str_arr("dec_param_order")?;
+
+        let mut param_table = Vec::new();
+        for row in j
+            .req("param_table")?
+            .as_arr()
+            .ok_or_else(|| Error::Parse("param_table".into()))?
+        {
+            param_table.push(ParamRow {
+                name: row.req("name")?.as_str().unwrap_or("").to_string(),
+                shape: row.req("shape")?.usize_array()?,
+                offset: row.req("offset")?.as_usize().unwrap_or(0),
+                len: row.req("len")?.as_usize().unwrap_or(0),
+            });
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in j
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| Error::Parse("artifacts".into()))?
+        {
+            let inputs = art
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| Error::Parse("inputs".into()))?
+                .iter()
+                .map(TensorSig::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = art
+                .req("outputs")?
+                .as_arr()
+                .ok_or_else(|| Error::Parse("outputs".into()))?
+                .iter()
+                .map(TensorSig::parse)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    file: art.req("file")?.as_str().unwrap_or("").to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let mesh_levels = j
+            .req("mesh")?
+            .req("levels")?
+            .as_arr()
+            .ok_or_else(|| Error::Parse("mesh.levels".into()))?
+            .iter()
+            .map(|l| l.usize_array())
+            .collect::<Result<Vec<_>>>()?;
+
+        let out = Manifest {
+            model,
+            param_order,
+            enc_param_order,
+            dec_param_order,
+            param_table,
+            artifacts,
+            mesh_levels,
+        };
+        out.validate()?;
+        Ok(out)
+    }
+
+    /// Structural invariants the rust side depends on.
+    pub fn validate(&self) -> Result<()> {
+        if self.param_order.len() != self.model.n_param_tensors {
+            return Err(Error::Parse("param_order length mismatch".into()));
+        }
+        if self.param_table.len() != self.param_order.len() {
+            return Err(Error::Parse("param_table length mismatch".into()));
+        }
+        let mut off = 0usize;
+        for (row, name) in self.param_table.iter().zip(&self.param_order) {
+            if &row.name != name {
+                return Err(Error::Parse(format!(
+                    "param_table order mismatch: {} vs {}",
+                    row.name, name
+                )));
+            }
+            if row.offset != off {
+                return Err(Error::Parse(format!("param {} offset gap", row.name)));
+            }
+            let numel: usize = row.shape.iter().product();
+            if numel != row.len {
+                return Err(Error::Parse(format!("param {} len/shape mismatch", row.name)));
+            }
+            off += row.len;
+        }
+        if off != self.model.n_params_total {
+            return Err(Error::Parse("n_params_total mismatch".into()));
+        }
+        for key in ["train_step", "eval_step", "encoder", "decoder", "autoencoder"] {
+            if !self.artifacts.contains_key(key) {
+                return Err(Error::Parse(format!("manifest missing artifact '{key}'")));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSig> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::ModelNotFound(name.to_string()))
+    }
+
+    /// Total bytes of one training sample `[channels, n_points]` f32.
+    pub fn sample_nbytes(&self) -> usize {
+        self.model.channels * self.model.n_points * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "model": {"channels": 2, "n_points": 4, "latent": 3, "batch": 1,
+                 "lr": 0.001, "adam": {"b1":0.9,"b2":0.999,"eps":1e-8},
+                 "n_param_tensors": 2, "n_params_total": 10,
+                 "compression_factor": 2.67},
+      "mesh": {"levels": [[2,2,1]], "domain": [1,1,1], "beta": 2.0,
+                "k_enc": 2, "k_dec": 2},
+      "param_order": ["a", "b"],
+      "enc_param_order": ["a"],
+      "dec_param_order": ["b"],
+      "param_table": [
+        {"name": "a", "shape": [2,3], "offset": 0, "len": 6},
+        {"name": "b", "shape": [4], "offset": 6, "len": 4}
+      ],
+      "artifacts": {
+        "train_step": {"file": "t.hlo.txt", "inputs": [{"name":"a","dtype":"float32","shape":[2,3]}], "outputs": [{"name":"loss","dtype":"float32","shape":[]}]},
+        "eval_step": {"file": "e.hlo.txt", "inputs": [], "outputs": []},
+        "encoder": {"file": "en.hlo.txt", "inputs": [], "outputs": []},
+        "decoder": {"file": "de.hlo.txt", "inputs": [], "outputs": []},
+        "autoencoder": {"file": "ae.hlo.txt", "inputs": [], "outputs": []}
+      }
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.model.latent, 3);
+        assert_eq!(m.param_order, vec!["a", "b"]);
+        assert_eq!(m.artifact("train_step").unwrap().inputs[0].shape, vec![2, 3]);
+        assert_eq!(m.sample_nbytes(), 2 * 4 * 4);
+        assert_eq!(m.artifact("train_step").unwrap().outputs[0].nbytes(), 4);
+    }
+
+    #[test]
+    fn rejects_offset_gap() {
+        let bad = MINI.replace("\"offset\": 6", "\"offset\": 7");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_order_mismatch() {
+        let bad = MINI.replace("[\"a\", \"b\"]", "[\"b\", \"a\"]");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_artifact() {
+        let bad = MINI.replace("\"train_step\"", "\"train_stepX\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

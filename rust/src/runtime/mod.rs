@@ -1,0 +1,248 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and executes
+//! them on the request path.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (`!Send`), so the runtime
+//! owns one dedicated **executor thread** holding the client and every
+//! compiled executable; callers talk to it through a channel.  This matches
+//! the production PJRT threading model (client construction pinned to one
+//! thread, executions serialized per device) and keeps the rest of the crate
+//! free to be multi-threaded.
+//!
+//! Interchange format is HLO *text* — see `python/compile/aot.py` for why
+//! serialized protos are rejected by xla_extension 0.5.1.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSig, Manifest, TensorSig};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::tensor::{DType, Tensor};
+
+enum Job {
+    /// Compile HLO text from a file and cache under a name.
+    LoadFile { name: String, path: PathBuf, reply: mpsc::Sender<Result<()>> },
+    /// Compile HLO text provided inline (model upload over the wire).
+    LoadText { name: String, text: String, reply: mpsc::Sender<Result<()>> },
+    Execute { name: String, inputs: Vec<Tensor>, reply: mpsc::Sender<Result<Vec<Tensor>>> },
+    Unload { name: String, reply: mpsc::Sender<Result<()>> },
+    Loaded { reply: mpsc::Sender<Vec<String>> },
+}
+
+/// Handle to the executor thread.  Cheap to clone; all clones share the
+/// same compiled-executable cache.
+#[derive(Clone)]
+pub struct Executor {
+    tx: mpsc::Sender<Job>,
+    _shared: Arc<()>,
+}
+
+impl Executor {
+    /// Spawn the executor thread with a CPU PJRT client.
+    pub fn new() -> Result<Executor> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || worker(rx, ready_tx))
+            .map_err(Error::Io)?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Xla("executor thread died during init".into()))??;
+        Ok(Executor { tx, _shared: Arc::new(()) })
+    }
+
+    fn rpc<T>(&self, mk: impl FnOnce(mpsc::Sender<T>) -> Job) -> Result<T> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(mk(reply))
+            .map_err(|_| Error::Xla("executor thread gone".into()))?;
+        rx.recv().map_err(|_| Error::Xla("executor thread gone".into()))
+    }
+
+    /// Compile `path` (HLO text) and cache it under `name`.
+    pub fn load_artifact(&self, name: &str, path: &Path) -> Result<()> {
+        self.rpc(|reply| Job::LoadFile { name: name.into(), path: path.into(), reply })?
+    }
+
+    /// Compile inline HLO text (the `put_model` wire path).
+    pub fn load_hlo_text(&self, name: &str, text: &str) -> Result<()> {
+        self.rpc(|reply| Job::LoadText { name: name.into(), text: text.into(), reply })?
+    }
+
+    /// Execute a loaded artifact.  Inputs must match the artifact signature
+    /// (the manifest is the source of truth; the DB server validates).
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        self.rpc(|reply| Job::Execute { name: name.into(), inputs, reply })?
+    }
+
+    pub fn unload(&self, name: &str) -> Result<()> {
+        self.rpc(|reply| Job::Unload { name: name.into(), reply })?
+    }
+
+    pub fn loaded(&self) -> Result<Vec<String>> {
+        self.rpc(|reply| Job::Loaded { reply })
+    }
+
+    /// Load every artifact listed in a manifest from its directory.
+    pub fn load_manifest(&self, m: &Manifest, dir: &Path) -> Result<()> {
+        for (name, art) in &m.artifacts {
+            self.load_artifact(name, &dir.join(&art.file))?;
+        }
+        Ok(())
+    }
+}
+
+fn worker(rx: mpsc::Receiver<Job>, ready: mpsc::Sender<Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(Error::Xla(e.to_string())));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::LoadFile { name, path, reply } => {
+                let _ = reply.send(compile_file(&client, &path).map(|exe| {
+                    cache.insert(name, exe);
+                }));
+            }
+            Job::LoadText { name, text, reply } => {
+                let _ = reply.send(compile_text(&client, &text).map(|exe| {
+                    cache.insert(name, exe);
+                }));
+            }
+            Job::Execute { name, inputs, reply } => {
+                let out = match cache.get(&name) {
+                    None => Err(Error::ModelNotFound(name.clone())),
+                    Some(exe) => execute_one(exe, &inputs),
+                };
+                let _ = reply.send(out);
+            }
+            Job::Unload { name, reply } => {
+                cache.remove(&name);
+                let _ = reply.send(Ok(()));
+            }
+            Job::Loaded { reply } => {
+                let mut names: Vec<String> = cache.keys().cloned().collect();
+                names.sort();
+                let _ = reply.send(names);
+            }
+        }
+    }
+}
+
+fn compile_file(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| Error::Xla(format!("parse {}: {e}", path.display())))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| Error::Xla(format!("compile {}: {e}", path.display())))
+}
+
+fn compile_text(client: &xla::PjRtClient, text: &str) -> Result<xla::PjRtLoadedExecutable> {
+    // The crate only exposes a file-based text parser; stage through a
+    // uniquely-named temp file.
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let path = std::env::temp_dir().join(format!(
+        "situ-hlo-{}-{}.txt",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::write(&path, text)?;
+    let out = compile_file(client, &path);
+    let _ = std::fs::remove_file(&path);
+    out
+}
+
+fn execute_one(exe: &xla::PjRtLoadedExecutable, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    let literals: Vec<xla::Literal> = inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| Error::Xla(format!("execute: {e}")))?;
+    let first = result
+        .first()
+        .and_then(|r| r.first())
+        .ok_or_else(|| Error::Xla("empty execution result".into()))?;
+    let lit = first
+        .to_literal_sync()
+        .map_err(|e| Error::Xla(format!("to_literal: {e}")))?;
+    // aot.py lowers with return_tuple=True: the root is always a tuple.
+    let parts = lit
+        .to_tuple()
+        .map_err(|e| Error::Xla(format!("to_tuple: {e}")))?;
+    parts.iter().map(literal_to_tensor).collect()
+}
+
+fn dtype_to_element(dt: DType) -> xla::ElementType {
+    match dt {
+        DType::F32 => xla::ElementType::F32,
+        DType::F64 => xla::ElementType::F64,
+        DType::I32 => xla::ElementType::S32,
+        DType::U8 => xla::ElementType::U8,
+    }
+}
+
+fn element_to_dtype(e: xla::ElementType) -> Result<DType> {
+    Ok(match e {
+        xla::ElementType::F32 => DType::F32,
+        xla::ElementType::F64 => DType::F64,
+        xla::ElementType::S32 => DType::I32,
+        xla::ElementType::U8 => DType::U8,
+        other => return Err(Error::Xla(format!("unsupported output element type {other:?}"))),
+    })
+}
+
+/// Tensor -> PJRT literal (zero conversion: raw LE bytes move straight in).
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    t.validate()?;
+    xla::Literal::create_from_shape_and_untyped_data(dtype_to_element(t.dtype), &t.shape, &t.data)
+        .map_err(|e| Error::Xla(format!("literal: {e}")))
+}
+
+/// PJRT literal -> Tensor.
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| Error::Xla(format!("array_shape: {e}")))?;
+    let dtype = element_to_dtype(shape.ty())?;
+    let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+    let n: usize = dims.iter().product();
+    let mut data = vec![0u8; n * dtype.size()];
+    match dtype {
+        DType::F32 => {
+            let v = lit.to_vec::<f32>().map_err(|e| Error::Xla(e.to_string()))?;
+            for (c, x) in data.chunks_exact_mut(4).zip(&v) {
+                c.copy_from_slice(&x.to_le_bytes());
+            }
+        }
+        DType::F64 => {
+            let v = lit.to_vec::<f64>().map_err(|e| Error::Xla(e.to_string()))?;
+            for (c, x) in data.chunks_exact_mut(8).zip(&v) {
+                c.copy_from_slice(&x.to_le_bytes());
+            }
+        }
+        DType::I32 => {
+            let v = lit.to_vec::<i32>().map_err(|e| Error::Xla(e.to_string()))?;
+            for (c, x) in data.chunks_exact_mut(4).zip(&v) {
+                c.copy_from_slice(&x.to_le_bytes());
+            }
+        }
+        DType::U8 => {
+            let v = lit.to_vec::<u8>().map_err(|e| Error::Xla(e.to_string()))?;
+            data.copy_from_slice(&v);
+        }
+    }
+    Ok(Tensor { dtype, shape: dims, data })
+}

@@ -1,0 +1,139 @@
+//! Uniform collocated grid with periodic x/z and wall-bounded y.
+
+/// Grid geometry + flat scalar-field helpers.  Storage order is x-fastest
+/// (`idx = (k*ny + j)*nx + i`).
+#[derive(Debug, Clone)]
+pub struct Grid {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+    pub lx: f64,
+    pub ly: f64,
+    pub lz: f64,
+}
+
+impl Grid {
+    pub fn new(nx: usize, ny: usize, nz: usize, lx: f64, ly: f64, lz: f64) -> Grid {
+        assert!(nx >= 2 && ny >= 3 && nz >= 2, "grid too small");
+        Grid { nx, ny, nz, lx, ly, lz }
+    }
+
+    /// Channel default used by the in-situ training example: matches the
+    /// python mesh sampling box (mesh.py: LX=4, LY=2, LZ=2).
+    pub fn channel(nx: usize, ny: usize, nz: usize) -> Grid {
+        Grid::new(nx, ny, nz, 4.0, 2.0, 2.0)
+    }
+
+    pub fn n(&self) -> usize {
+        self.nx * self.ny * self.nz
+    }
+
+    pub fn dx(&self) -> f64 {
+        self.lx / self.nx as f64
+    }
+
+    /// Wall-normal spacing (cell-centered, first center at dy/2).
+    pub fn dy(&self) -> f64 {
+        self.ly / self.ny as f64
+    }
+
+    pub fn dz(&self) -> f64 {
+        self.lz / self.nz as f64
+    }
+
+    #[inline]
+    pub fn idx(&self, i: usize, j: usize, k: usize) -> usize {
+        (k * self.ny + j) * self.nx + i
+    }
+
+    /// Cell-center coordinates.
+    pub fn x(&self, i: usize) -> f64 {
+        (i as f64 + 0.5) * self.dx()
+    }
+
+    pub fn y(&self, j: usize) -> f64 {
+        (j as f64 + 0.5) * self.dy()
+    }
+
+    pub fn z(&self, k: usize) -> f64 {
+        (k as f64 + 0.5) * self.dz()
+    }
+
+    /// Periodic neighbor in x.
+    #[inline]
+    pub fn ip(&self, i: usize) -> usize {
+        if i + 1 == self.nx {
+            0
+        } else {
+            i + 1
+        }
+    }
+
+    #[inline]
+    pub fn im(&self, i: usize) -> usize {
+        if i == 0 {
+            self.nx - 1
+        } else {
+            i - 1
+        }
+    }
+
+    #[inline]
+    pub fn kp(&self, k: usize) -> usize {
+        if k + 1 == self.nz {
+            0
+        } else {
+            k + 1
+        }
+    }
+
+    #[inline]
+    pub fn km(&self, k: usize) -> usize {
+        if k == 0 {
+            self.nz - 1
+        } else {
+            k - 1
+        }
+    }
+
+    pub fn zeros(&self) -> Vec<f64> {
+        vec![0.0; self.n()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_bijective() {
+        let g = Grid::channel(6, 4, 5);
+        let mut seen = vec![false; g.n()];
+        for k in 0..g.nz {
+            for j in 0..g.ny {
+                for i in 0..g.nx {
+                    let id = g.idx(i, j, k);
+                    assert!(!seen[id]);
+                    seen[id] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn periodic_wrapping() {
+        let g = Grid::channel(4, 4, 4);
+        assert_eq!(g.ip(3), 0);
+        assert_eq!(g.im(0), 3);
+        assert_eq!(g.kp(3), 0);
+        assert_eq!(g.km(0), 3);
+    }
+
+    #[test]
+    fn coordinates_span_domain() {
+        let g = Grid::channel(8, 8, 8);
+        assert!(g.x(0) > 0.0 && g.x(7) < g.lx);
+        assert!((g.y(7) + g.dy() / 2.0 - g.ly).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,18 @@
+//! Incompressible Navier-Stokes solver (the PHASTA stand-in).
+//!
+//! Fractional-step (projection) method on a uniform collocated grid:
+//! periodic in x and z, no-slip walls in y, driven by a constant streamwise
+//! body force — a plane channel.  Explicit 2nd-order advection/diffusion,
+//! pressure Poisson via conjugate gradients.  The flow is initialized with a
+//! laminar profile plus synthetic turbulent fluctuations (the flat-plate DNS
+//! of the paper is seeded by synthetic turbulence generation the same way).
+
+pub mod grid;
+pub mod poisson;
+pub mod sampler;
+pub mod solver;
+pub mod turbulence;
+
+pub use grid::Grid;
+pub use sampler::MeshSampler;
+pub use solver::{ChannelFlow, SolverTimings};

@@ -1,0 +1,154 @@
+//! Samples solver fields onto the autoencoder's mesh points.
+//!
+//! The training mesh (python `mesh.py`, exported to `artifacts/
+//! mesh_coords.bin`) is a stretched near-wall point set inside the channel.
+//! Each "PHASTA rank" owns one such partition; the sampler trilinearly
+//! interpolates (p, u, v, w) from the solver grid onto those points and
+//! packs the `[4, N]` f32 tensor the training pipeline consumes.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::sim::cfd::grid::Grid;
+use crate::sim::cfd::solver::ChannelFlow;
+use crate::tensor::Tensor;
+
+/// Mesh points loaded from the AOT artifacts.
+#[derive(Debug, Clone)]
+pub struct MeshSampler {
+    /// [N][3] mesh coordinates.
+    pub coords: Vec<[f64; 3]>,
+}
+
+impl MeshSampler {
+    /// Load `mesh_coords.bin` (f32-LE, N*3).
+    pub fn load(path: &Path) -> Result<MeshSampler> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| Error::Parse(format!("read {}: {e}", path.display())))?;
+        if bytes.len() % 12 != 0 {
+            return Err(Error::Parse(format!(
+                "mesh_coords.bin length {} not divisible by 12",
+                bytes.len()
+            )));
+        }
+        let mut coords = Vec::with_capacity(bytes.len() / 12);
+        for c in bytes.chunks_exact(12) {
+            let x = f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64;
+            let y = f32::from_le_bytes([c[4], c[5], c[6], c[7]]) as f64;
+            let z = f32::from_le_bytes([c[8], c[9], c[10], c[11]]) as f64;
+            coords.push([x, y, z]);
+        }
+        Ok(MeshSampler { coords })
+    }
+
+    /// Build directly from coordinates (tests, rank offsetting).
+    pub fn from_coords(coords: Vec<[f64; 3]>) -> MeshSampler {
+        MeshSampler { coords }
+    }
+
+    pub fn n(&self) -> usize {
+        self.coords.len()
+    }
+
+    /// Trilinear interpolation of a cell-centered field at a point
+    /// (periodic x/z, clamped y).
+    fn interp(g: &Grid, f: &[f64], p: [f64; 3]) -> f64 {
+        let (dx, dy, dz) = (g.dx(), g.dy(), g.dz());
+        // Continuous cell-center index.
+        let fx = p[0] / dx - 0.5;
+        let fy = (p[1] / dy - 0.5).clamp(0.0, (g.ny - 1) as f64);
+        let fz = p[2] / dz - 0.5;
+        let i0 = fx.floor();
+        let j0 = fy.floor().min((g.ny - 2) as f64);
+        let k0 = fz.floor();
+        let (tx, ty, tz) = (fx - i0, fy - j0, fz - k0);
+        let iw = |ii: f64| -> usize {
+            let m = g.nx as isize;
+            (((ii as isize) % m + m) % m) as usize
+        };
+        let kw = |kk: f64| -> usize {
+            let m = g.nz as isize;
+            (((kk as isize) % m + m) % m) as usize
+        };
+        let (i0u, i1u) = (iw(i0), iw(i0 + 1.0));
+        let (j0u, j1u) = (j0 as usize, (j0 as usize + 1).min(g.ny - 1));
+        let (k0u, k1u) = (kw(k0), kw(k0 + 1.0));
+        let v = |i: usize, j: usize, k: usize| f[g.idx(i, j, k)];
+        let c00 = v(i0u, j0u, k0u) * (1.0 - tx) + v(i1u, j0u, k0u) * tx;
+        let c10 = v(i0u, j1u, k0u) * (1.0 - tx) + v(i1u, j1u, k0u) * tx;
+        let c01 = v(i0u, j0u, k1u) * (1.0 - tx) + v(i1u, j0u, k1u) * tx;
+        let c11 = v(i0u, j1u, k1u) * (1.0 - tx) + v(i1u, j1u, k1u) * tx;
+        let c0 = c00 * (1.0 - ty) + c10 * ty;
+        let c1 = c01 * (1.0 - ty) + c11 * ty;
+        c0 * (1.0 - tz) + c1 * tz
+    }
+
+    /// Sample the instantaneous (p, u, v, w) snapshot as the `[4, N]` f32
+    /// training tensor (channel order matches `model.py`).
+    pub fn snapshot(&self, flow: &ChannelFlow) -> Tensor {
+        let n = self.n();
+        let g = &flow.grid;
+        let mut out = Vec::with_capacity(4 * n);
+        for field in [&flow.p, &flow.u, &flow.v, &flow.w] {
+            for pt in &self.coords {
+                out.push(Self::interp(g, field, *pt) as f32);
+            }
+        }
+        Tensor::from_f32(&[4, n], out).expect("shape consistent by construction")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interpolates_linear_field_exactly() {
+        // f = 2y is linear => trilinear interpolation is exact in the
+        // interior (away from the clamped wall layer).
+        let g = Grid::channel(8, 16, 8);
+        let mut f = g.zeros();
+        for k in 0..g.nz {
+            for j in 0..g.ny {
+                for i in 0..g.nx {
+                    f[g.idx(i, j, k)] = 2.0 * g.y(j);
+                }
+            }
+        }
+        for &y in &[0.3, 0.7, 1.0, 1.5] {
+            let got = MeshSampler::interp(&g, &f, [1.0, y, 1.0]);
+            assert!((got - 2.0 * y).abs() < 1e-12, "y={y}: {got}");
+        }
+    }
+
+    #[test]
+    fn periodic_wraparound_in_x() {
+        let g = Grid::channel(8, 8, 8);
+        let mut f = g.zeros();
+        for k in 0..g.nz {
+            for j in 0..g.ny {
+                for i in 0..g.nx {
+                    f[g.idx(i, j, k)] = (2.0 * std::f64::consts::PI * g.x(i) / g.lx).cos();
+                }
+            }
+        }
+        // Point just past the last cell center wraps smoothly.
+        let a = MeshSampler::interp(&g, &f, [g.lx - 0.01, 1.0, 1.0]);
+        let b = MeshSampler::interp(&g, &f, [0.01, 1.0, 1.0]);
+        assert!((a - b).abs() < 0.1);
+        assert!(a.is_finite() && b.is_finite());
+    }
+
+    #[test]
+    fn snapshot_shape_and_channel_order() {
+        let coords = vec![[0.5, 0.5, 0.5], [1.0, 1.0, 1.0], [2.0, 1.5, 0.3]];
+        let s = MeshSampler::from_coords(coords);
+        let flow = ChannelFlow::new(Grid::channel(8, 8, 8), 1e-2, 2, 0.05);
+        let t = s.snapshot(&flow);
+        assert_eq!(t.shape, vec![4, 3]);
+        let v = t.to_f32().unwrap();
+        // Channel 1 (u) should carry the mean flow: larger than channel 0
+        // (p, ~0 at init).
+        assert!(v[3..6].iter().all(|x| x.abs() > 1e-3), "u nonzero: {v:?}");
+    }
+}

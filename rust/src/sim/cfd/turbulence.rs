@@ -1,0 +1,145 @@
+//! Synthetic turbulence generation: divergence-free random Fourier modes.
+//!
+//! The paper's DNS is seeded with synthetic turbulence generation (Wright et
+//! al. 2021).  We use the classical Kraichnan/Smirnov construction: a sum of
+//! random Fourier modes with amplitudes shaped by a model spectrum and
+//! directions projected to be divergence-free (`k · u_hat = 0` mode by
+//! mode), so the sampled field is solenoidal by construction.
+
+use crate::util::rng::Rng;
+
+/// One synthetic mode.
+#[derive(Debug, Clone)]
+struct Mode {
+    k: [f64; 3],
+    amp: [f64; 3],
+    phase: f64,
+}
+
+/// Divergence-free random velocity field generator.
+#[derive(Debug, Clone)]
+pub struct SyntheticTurbulence {
+    modes: Vec<Mode>,
+    pub intensity: f64,
+}
+
+impl SyntheticTurbulence {
+    /// `n_modes` random modes with wavenumbers in `[k_min, k_max]` and a
+    /// `k^-5/3` inertial-range amplitude envelope.
+    pub fn new(seed: u64, n_modes: usize, k_min: f64, k_max: f64, intensity: f64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut modes = Vec::with_capacity(n_modes);
+        for _ in 0..n_modes {
+            // Random direction on the sphere, random magnitude in range.
+            let mut k = [rng.normal(), rng.normal(), rng.normal()];
+            let kn = (k[0] * k[0] + k[1] * k[1] + k[2] * k[2]).sqrt().max(1e-12);
+            let mag = k_min + (k_max - k_min) * rng.f64();
+            for x in k.iter_mut() {
+                *x = *x / kn * mag;
+            }
+            // Random amplitude vector projected orthogonal to k (=> the mode
+            // u = a * cos(k·x + φ) satisfies ∇·u = -a·k sin(...) = 0).
+            let mut a = [rng.normal(), rng.normal(), rng.normal()];
+            let ak = (a[0] * k[0] + a[1] * k[1] + a[2] * k[2]) / (mag * mag);
+            for d in 0..3 {
+                a[d] -= ak * k[d];
+            }
+            // k^-5/3 energy envelope.
+            let env = (mag / k_min).powf(-5.0 / 6.0);
+            for x in a.iter_mut() {
+                *x *= env;
+            }
+            modes.push(Mode { k, amp: a, phase: rng.f64() * std::f64::consts::TAU });
+        }
+        // Normalize so the rms of each component is ~1 before scaling.
+        let mut s = SyntheticTurbulence { modes, intensity: 1.0 };
+        let rms = s.estimate_rms(seed ^ 0xabcd, 500);
+        if rms > 1e-12 {
+            for m in &mut s.modes {
+                for x in m.amp.iter_mut() {
+                    *x /= rms;
+                }
+            }
+        }
+        s.intensity = intensity;
+        s
+    }
+
+    fn estimate_rms(&self, seed: u64, samples: usize) -> f64 {
+        let mut rng = Rng::new(seed);
+        let mut acc = 0.0;
+        for _ in 0..samples {
+            let p = [rng.f64() * 4.0, rng.f64() * 2.0, rng.f64() * 2.0];
+            let v = self.eval_raw(p);
+            acc += v[0] * v[0] + v[1] * v[1] + v[2] * v[2];
+        }
+        (acc / (3.0 * samples as f64)).sqrt()
+    }
+
+    fn eval_raw(&self, x: [f64; 3]) -> [f64; 3] {
+        let mut u = [0.0; 3];
+        for m in &self.modes {
+            let ph = m.k[0] * x[0] + m.k[1] * x[1] + m.k[2] * x[2] + m.phase;
+            let c = ph.cos();
+            for d in 0..3 {
+                u[d] += m.amp[d] * c;
+            }
+        }
+        u
+    }
+
+    /// Velocity fluctuation at a point.
+    pub fn eval(&self, x: [f64; 3]) -> [f64; 3] {
+        let v = self.eval_raw(x);
+        [v[0] * self.intensity, v[1] * self.intensity, v[2] * self.intensity]
+    }
+
+    /// Analytic divergence at a point (testing hook; ~0 by construction).
+    pub fn divergence(&self, x: [f64; 3]) -> f64 {
+        let mut div = 0.0;
+        for m in &self.modes {
+            let ph = m.k[0] * x[0] + m.k[1] * x[1] + m.k[2] * x[2] + m.phase;
+            let s = -ph.sin();
+            div += s * (m.amp[0] * m.k[0] + m.amp[1] * m.k[1] + m.amp[2] * m.k[2]);
+        }
+        div * self.intensity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divergence_free_by_construction() {
+        let t = SyntheticTurbulence::new(11, 64, 1.0, 8.0, 0.1);
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let x = [rng.f64() * 4.0, rng.f64() * 2.0, rng.f64() * 2.0];
+            assert!(t.divergence(x).abs() < 1e-10, "div {}", t.divergence(x));
+        }
+    }
+
+    #[test]
+    fn rms_close_to_intensity() {
+        let t = SyntheticTurbulence::new(7, 128, 1.0, 8.0, 0.25);
+        let mut rng = Rng::new(3);
+        let mut acc = 0.0;
+        let n = 2000;
+        for _ in 0..n {
+            let x = [rng.f64() * 4.0, rng.f64() * 2.0, rng.f64() * 2.0];
+            let v = t.eval(x);
+            acc += (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]) / 3.0;
+        }
+        let rms = (acc / n as f64).sqrt();
+        assert!((rms / 0.25 - 1.0).abs() < 0.25, "rms {rms} target 0.25");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = SyntheticTurbulence::new(42, 32, 1.0, 4.0, 0.1);
+        let b = SyntheticTurbulence::new(42, 32, 1.0, 4.0, 0.1);
+        let x = [1.0, 0.5, 0.7];
+        assert_eq!(a.eval(x), b.eval(x));
+    }
+}

@@ -1,0 +1,15 @@
+//! Data producers.
+//!
+//! * [`cfd`] — a real (small) incompressible Navier-Stokes solver standing
+//!   in for PHASTA (DESIGN.md substitutions): fractional-step projection
+//!   with explicit advection/diffusion and a CG pressure Poisson solve, on a
+//!   channel with synthetic-turbulence initialization.  Its cost naturally
+//!   splits into the paper's Table-1 components ("equation formation" =
+//!   RHS/assembly, "equation solution" = the linear solve).
+//! * [`reproducer`] — the paper's §3 *simulation reproducer*: a rank that
+//!   sleeps to emulate PDE integration, then sends/retrieves data through
+//!   the SmartRedis-analogue client.  All scaling measurements use it,
+//!   exactly as in the paper.
+
+pub mod cfd;
+pub mod reproducer;

@@ -1,0 +1,165 @@
+//! The paper's §3 *simulation reproducer*, against the **real** database.
+//!
+//! A parallel program where every rank initializes a SmartRedis-analogue
+//! client, then loops: sleep (emulating PDE integration), send its tensor,
+//! retrieve it back.  For inference runs it additionally evaluates a model
+//! through the RedisAI-analogue path.  All real-host measurements (Fig 4
+//! small-scale points, Fig 7, and the CostModel calibration) come from here.
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::client::{tensor_key, Client};
+use crate::error::Result;
+use crate::telemetry::{ComponentTimes, Stopwatch};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Configuration of a reproducer run.
+#[derive(Debug, Clone)]
+pub struct ReproducerConfig {
+    pub addr: SocketAddr,
+    pub ranks: usize,
+    pub bytes_per_rank: usize,
+    pub iterations: usize,
+    pub warmup: usize,
+    /// Emulated PDE-integration time per step.
+    pub compute_secs: f64,
+}
+
+/// Component timings aggregated across all ranks (mean ± σ, Tables 1-2
+/// style).  Keys: `client_init`, `send`, `retrieve`.
+pub fn run_data_loop(cfg: &ReproducerConfig) -> Result<Arc<ComponentTimes>> {
+    let times = Arc::new(ComponentTimes::new());
+    let mut handles = Vec::new();
+    for rank in 0..cfg.ranks {
+        let cfg = cfg.clone();
+        let times = Arc::clone(&times);
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut rng = Rng::new(rank as u64 + 1);
+            let n = cfg.bytes_per_rank / 4;
+            let payload = Tensor::from_f32(&[n], rng.normal_vec_f32(n)).unwrap();
+
+            let sw = Stopwatch::start();
+            let mut client = Client::connect_retry(cfg.addr, 50, Duration::from_millis(20))?;
+            times.record("client_init", sw.stop());
+
+            for it in 0..cfg.warmup + cfg.iterations {
+                let measuring = it >= cfg.warmup;
+                if cfg.compute_secs > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(cfg.compute_secs));
+                }
+                let key = tensor_key("field", rank, it as u64);
+                let sw = Stopwatch::start();
+                client.put_tensor(&key, &payload)?;
+                if measuring {
+                    times.record("send", sw.stop());
+                }
+                let sw = Stopwatch::start();
+                let back = client.get_tensor(&key)?;
+                if measuring {
+                    times.record("retrieve", sw.stop());
+                }
+                debug_assert_eq!(back.nbytes(), payload.nbytes());
+                // Keep the DB size bounded across iterations.
+                client.del_tensor(&key)?;
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().expect("rank thread panicked")?;
+    }
+    Ok(times)
+}
+
+/// Inference reproducer: send input, `run_model`, retrieve predictions —
+/// the three-step RedisAI flow of Fig 7, per rank per iteration.
+#[derive(Debug, Clone)]
+pub struct InferenceConfig {
+    pub addr: SocketAddr,
+    pub ranks: usize,
+    pub model_key: String,
+    /// Input tensor shape per request (e.g. [b, 3, 64, 64]).
+    pub in_shape: Vec<usize>,
+    pub iterations: usize,
+    pub warmup: usize,
+}
+
+/// Keys: `client_init`, `send`, `eval`, `retrieve`, `total`.
+pub fn run_inference_loop(cfg: &InferenceConfig) -> Result<Arc<ComponentTimes>> {
+    let times = Arc::new(ComponentTimes::new());
+    let mut handles = Vec::new();
+    for rank in 0..cfg.ranks {
+        let cfg = cfg.clone();
+        let times = Arc::clone(&times);
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut rng = Rng::new(rank as u64 + 101);
+            let n: usize = cfg.in_shape.iter().product();
+            let input = Tensor::from_f32(&cfg.in_shape, rng.normal_vec_f32(n)).unwrap();
+            let device = crate::ai::ModelRuntime::device_for_rank(rank);
+
+            let sw = Stopwatch::start();
+            let mut client = Client::connect_retry(cfg.addr, 50, Duration::from_millis(20))?;
+            times.record("client_init", sw.stop());
+
+            for it in 0..cfg.warmup + cfg.iterations {
+                let measuring = it >= cfg.warmup;
+                let in_key = tensor_key("infer_in", rank, it as u64);
+                let out_key = tensor_key("infer_out", rank, it as u64);
+                let sw_total = Stopwatch::start();
+
+                let sw = Stopwatch::start();
+                client.put_tensor(&in_key, &input)?;
+                let t_send = sw.stop();
+
+                let sw = Stopwatch::start();
+                client.run_model(&cfg.model_key, &[in_key.clone()], &[out_key.clone()], device)?;
+                let t_eval = sw.stop();
+
+                let sw = Stopwatch::start();
+                let _pred = client.get_tensor(&out_key)?;
+                let t_retr = sw.stop();
+
+                if measuring {
+                    times.record("send", t_send);
+                    times.record("eval", t_eval);
+                    times.record("retrieve", t_retr);
+                    times.record("total", sw_total.stop());
+                }
+                client.del_tensor(&in_key)?;
+                client.del_tensor(&out_key)?;
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().expect("rank thread panicked")?;
+    }
+    Ok(times)
+}
+
+/// Tightly-coupled (in line) baseline for Fig 7: the simulation rank calls
+/// the PJRT executable **directly in-process** — our analogue of the paper's
+/// Fortran→C++ LibTorch bridge.  No database hop.
+pub fn run_inline_baseline(
+    exec: &crate::runtime::Executor,
+    model_key: &str,
+    in_shape: &[usize],
+    iterations: usize,
+    warmup: usize,
+) -> Result<crate::telemetry::StatAccum> {
+    let mut rng = Rng::new(7);
+    let n: usize = in_shape.iter().product();
+    let input = Tensor::from_f32(in_shape, rng.normal_vec_f32(n)).unwrap();
+    let mut acc = crate::telemetry::StatAccum::new();
+    for it in 0..warmup + iterations {
+        let sw = Stopwatch::start();
+        let _out = exec.execute(model_key, vec![input.clone()])?;
+        if it >= warmup {
+            acc.add(sw.stop());
+        }
+    }
+    Ok(acc)
+}

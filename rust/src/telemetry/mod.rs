@@ -1,0 +1,241 @@
+//! Timing and statistics instrumentation.
+//!
+//! The paper's evaluation reports per-component costs *averaged across ranks
+//! with standard deviations* (Tables 1-2) and scaling series (Figs 3-8).
+//! [`StatAccum`] accumulates one component's samples; [`ComponentTimes`]
+//! aggregates named components across ranks; [`Table`] renders the
+//! paper-style markdown/CSV rows the bench harnesses print.
+
+pub mod table;
+
+pub use table::Table;
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Streaming mean/variance/min/max accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct StatAccum {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    sum: f64,
+}
+
+impl StatAccum {
+    pub fn new() -> Self {
+        StatAccum { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY, sum: 0.0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn merge(&mut self, other: &StatAccum) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let d = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Population standard deviation.
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / self.n as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+/// Scope timer: `let _t = Stopwatch::start(); ...; let dt = _t.stop();`
+#[derive(Debug)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    /// Elapsed seconds.
+    pub fn stop(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Named per-component accumulators, shared across rank threads.
+///
+/// This is the Table-1/Table-2 instrument: every rank records its
+/// `client initialization`, `metadata transfer`, `training data send`, ...
+/// samples, and the report prints mean ± σ across ranks.
+#[derive(Debug, Default)]
+pub struct ComponentTimes {
+    inner: Mutex<BTreeMap<String, StatAccum>>,
+}
+
+impl ComponentTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, component: &str, seconds: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.entry(component.to_string()).or_default().add(seconds);
+    }
+
+    /// Time a closure and record it.
+    pub fn time<T>(&self, component: &str, f: impl FnOnce() -> T) -> T {
+        let sw = Stopwatch::start();
+        let out = f();
+        self.record(component, sw.stop());
+        out
+    }
+
+    pub fn get(&self, component: &str) -> Option<StatAccum> {
+        self.inner.lock().unwrap().get(component).cloned()
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, StatAccum> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// Paper-style table: component, average [sec], std-dev [sec].
+    pub fn to_table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &["Component", "Average [sec]", "Std Dev [sec]", "Samples"],
+        );
+        for (k, s) in self.snapshot() {
+            t.row(&[
+                k.clone(),
+                format!("{:.6}", s.mean()),
+                format!("{:.6}", s.std()),
+                format!("{}", s.count()),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stat_accum_basics() {
+        let mut s = StatAccum::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn merge_equals_concat() {
+        let xs: Vec<f64> = (0..50).map(|i| (i as f64).sin() * 3.0).collect();
+        let mut all = StatAccum::new();
+        for x in &xs {
+            all.add(*x);
+        }
+        let mut a = StatAccum::new();
+        let mut b = StatAccum::new();
+        for (i, x) in xs.iter().enumerate() {
+            if i % 2 == 0 {
+                a.add(*x)
+            } else {
+                b.add(*x)
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.mean() - all.mean()).abs() < 1e-12);
+        assert!((a.std() - all.std()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_accum_is_quiet() {
+        let s = StatAccum::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.count(), 0);
+    }
+
+    #[test]
+    fn component_times_records() {
+        let ct = ComponentTimes::new();
+        ct.record("send", 0.1);
+        ct.record("send", 0.3);
+        ct.record("retrieve", 0.2);
+        let snap = ct.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert!((snap["send"].mean() - 0.2).abs() < 1e-12);
+        let out = ct.to_table("t").render_markdown();
+        assert!(out.contains("send"));
+        assert!(out.contains("retrieve"));
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.stop() >= 0.004);
+    }
+}

@@ -1,0 +1,282 @@
+//! Dense tensor value type carried through the database and the wire
+//! protocol.  Row-major, little-endian payload; the dtype set matches what
+//! the AOT artifacts exchange (f32 everywhere, i32 for the step counter).
+
+use std::fmt;
+
+use crate::error::{Error, Result};
+
+/// Element type of a [`Tensor`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 => 8,
+            DType::U8 => 1,
+        }
+    }
+
+    pub fn tag(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::F64 => 1,
+            DType::I32 => 2,
+            DType::U8 => 3,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<DType> {
+        Ok(match t {
+            0 => DType::F32,
+            1 => DType::F64,
+            2 => DType::I32,
+            3 => DType::U8,
+            _ => return Err(Error::Protocol(format!("unknown dtype tag {t}"))),
+        })
+    }
+
+    /// Name as it appears in the AOT manifest (`numpy` dtype strings).
+    pub fn from_manifest(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" => DType::F32,
+            "float64" => DType::F64,
+            "int32" => DType::I32,
+            "uint8" => DType::U8,
+            _ => return Err(Error::Parse(format!("unsupported manifest dtype '{s}'"))),
+        })
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::I32 => "i32",
+            DType::U8 => "u8",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A dense, row-major tensor (shape + raw little-endian payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload size in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            dtype,
+            shape: shape.to_vec(),
+            data: vec![0u8; n * dtype.size()],
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], values: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != values.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                values.len()
+            )));
+        }
+        let mut data = Vec::with_capacity(n * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(Tensor { dtype: DType::F32, shape: shape.to_vec(), data })
+    }
+
+    pub fn from_i32(shape: &[usize], values: Vec<i32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != values.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                values.len()
+            )));
+        }
+        let mut data = Vec::with_capacity(n * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(Tensor { dtype: DType::I32, shape: shape.to_vec(), data })
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::from_f32(&[], vec![v]).unwrap()
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::from_i32(&[], vec![v]).unwrap()
+    }
+
+    /// Decode the payload as f32s (copies; the wire buffer is unaligned).
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            return Err(Error::Shape(format!("tensor is {}, wanted f32", self.dtype)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            return Err(Error::Shape(format!("tensor is {}, wanted i32", self.dtype)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// First element as f32 (scalars from model outputs).
+    pub fn first_f32(&self) -> Result<f32> {
+        let c = self
+            .data
+            .get(0..4)
+            .ok_or_else(|| Error::Shape("empty tensor".into()))?;
+        Ok(f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+    }
+
+    /// Mean/min/max of an f32 tensor (telemetry).
+    pub fn f32_stats(&self) -> Result<(f32, f32, f32)> {
+        let v = self.to_f32()?;
+        if v.is_empty() {
+            return Err(Error::Shape("empty tensor".into()));
+        }
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        let mut sum = 0.0f64;
+        for x in &v {
+            mn = mn.min(*x);
+            mx = mx.max(*x);
+            sum += *x as f64;
+        }
+        Ok(((sum / v.len() as f64) as f32, mn, mx))
+    }
+
+    /// Validate payload length against shape/dtype (wire ingress check).
+    pub fn validate(&self) -> Result<()> {
+        let want = self.len() * self.dtype.size();
+        if want != self.data.len() {
+            return Err(Error::Shape(format!(
+                "payload {} bytes, shape {:?} x {} wants {}",
+                self.data.len(),
+                self.shape,
+                self.dtype,
+                want
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Tensor<{}>{:?} ({})",
+            self.dtype,
+            self.shape,
+            crate::util::fmt::bytes(self.nbytes() as u64)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::from_f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.nbytes(), 24);
+        assert_eq!(t.to_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::from_f32(&[2, 2], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn scalar_shapes() {
+        let s = Tensor::scalar_f32(3.5);
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.first_f32().unwrap(), 3.5);
+        let i = Tensor::scalar_i32(-7);
+        assert_eq!(i.to_i32().unwrap(), vec![-7]);
+    }
+
+    #[test]
+    fn zeros_and_validate() {
+        let t = Tensor::zeros(DType::F64, &[4, 4]);
+        assert_eq!(t.nbytes(), 128);
+        t.validate().unwrap();
+        let mut bad = t.clone();
+        bad.data.pop();
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn stats() {
+        let t = Tensor::from_f32(&[4], vec![-1.0, 0.0, 1.0, 4.0]).unwrap();
+        let (mean, mn, mx) = t.f32_stats().unwrap();
+        assert_eq!(mean, 1.0);
+        assert_eq!(mn, -1.0);
+        assert_eq!(mx, 4.0);
+    }
+
+    #[test]
+    fn dtype_tags_roundtrip() {
+        for d in [DType::F32, DType::F64, DType::I32, DType::U8] {
+            assert_eq!(DType::from_tag(d.tag()).unwrap(), d);
+        }
+        assert!(DType::from_tag(99).is_err());
+    }
+
+    #[test]
+    fn wrong_dtype_decode_rejected() {
+        let t = Tensor::zeros(DType::I32, &[2]);
+        assert!(t.to_f32().is_err());
+        assert!(t.to_i32().is_ok());
+    }
+}

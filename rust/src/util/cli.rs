@@ -1,0 +1,137 @@
+//! Tiny CLI argument parser (offline substitute for `clap`): subcommand plus
+//! `--flag value` / `--flag=value` / boolean `--flag` options.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line: `situ <command> [--k v]... [positional]...`
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    return Err(Error::Invalid("bare '--' not supported".into()));
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--flag value` unless the next token is itself a flag
+                    // (then it's a boolean).
+                    let takes_value = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        out.flags.insert(body.to_string(), it.next().unwrap());
+                    } else {
+                        out.flags.insert(body.to_string(), "true".to_string());
+                    }
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Invalid(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Invalid(format!("--{key} expects a number, got '{v}'"))),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.str_opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list of usizes: `--sizes 1,4,16`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| Error::Invalid(format!("--{key}: bad integer '{s}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("serve --port 7700 --engine keydb --verbose");
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.str_opt("port"), Some("7700"));
+        assert_eq!(a.str_opt("engine"), Some("keydb"));
+        assert!(a.bool("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --nodes=16 --sizes=1,4,16");
+        assert_eq!(a.usize_or("nodes", 0).unwrap(), 16);
+        assert_eq!(a.usize_list_or("sizes", &[]).unwrap(), vec![1, 4, 16]);
+    }
+
+    #[test]
+    fn positional() {
+        let a = parse("run file1 file2");
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("x --n abc");
+        assert_eq!(a.usize_or("m", 7).unwrap(), 7);
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

@@ -1,0 +1,62 @@
+//! Human-readable formatting helpers shared by the CLI, telemetry tables and
+//! bench harnesses.
+
+/// `1536` -> `"1.5 KB"`, `268435456` -> `"256.0 MB"`.
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Seconds -> adaptive `"412 µs"` / `"1.23 ms"` / `"4.5 s"`.
+pub fn duration(secs: f64) -> String {
+    if secs < 0.0 {
+        return format!("-{}", duration(-secs));
+    }
+    if secs < 1e-6 {
+        format!("{:.0} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2} s")
+    } else {
+        format!("{:.1} min", secs / 60.0)
+    }
+}
+
+/// Rate in bytes/sec -> `"1.2 GB/s"`.
+pub fn throughput(bytes_per_sec: f64) -> String {
+    format!("{}/s", bytes(bytes_per_sec as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(12), "12 B");
+        assert_eq!(bytes(1536), "1.5 KB");
+        assert_eq!(bytes(256 * 1024 * 1024), "256.0 MB");
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(duration(0.000000412), "412 ns");
+        assert_eq!(duration(0.000412), "412.0 µs");
+        assert_eq!(duration(0.00123), "1.23 ms");
+        assert_eq!(duration(4.5), "4.50 s");
+        assert_eq!(duration(150.0), "2.5 min");
+    }
+}

@@ -1,0 +1,9 @@
+//! Dependency-free building blocks: JSON, RNG, CLI parsing, property-test
+//! harness, human formatting.  The build environment is offline, so the
+//! substrates a crates.io project would pull in are implemented here.
+
+pub mod cli;
+pub mod fmt;
+pub mod json;
+pub mod propcheck;
+pub mod rng;

@@ -1,0 +1,144 @@
+//! Mini property-testing harness (offline substitute for `proptest`).
+//!
+//! A property is a closure taking a [`Gen`]; the harness runs it over many
+//! seeded generators and, on failure, reports the seed so the case replays
+//! deterministically:
+//!
+//! ```
+//! use situ::util::propcheck::{check, Gen};
+//! check("reverse twice is identity", 200, |g: &mut Gen| {
+//!     let v: Vec<u32> = g.vec(0..=64, |g| g.u32());
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Value generator handed to each property-test case.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u64() as u32
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform usize within an inclusive range.
+    pub fn usize_in(&mut self, r: std::ops::RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*r.start(), *r.end());
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.rng.f32()
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    /// Standard-normal f32 (tensor payloads).
+    pub fn normal_f32(&mut self) -> f32 {
+        self.rng.normal() as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    /// Vector with length drawn from `len` and elements from `f`.
+    pub fn vec<T>(
+        &mut self,
+        len: std::ops::RangeInclusive<usize>,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// ASCII identifier-ish string (keys).
+    pub fn key(&mut self) -> String {
+        const CH: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_.:{}";
+        let n = self.usize_in(1..=32);
+        (0..n)
+            .map(|_| CH[self.rng.below(CH.len())] as char)
+            .collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` across `cases` seeded generators; panic (with the seed) on the
+/// first failing case.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    // Base seed is fixed: failures reproduce without environment plumbing.
+    for case in 0..cases {
+        let seed = 0x5157_u64.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(case);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("tautology", 50, |g| {
+            let x = g.u32();
+            assert_eq!(x, x);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsifiable' failed")]
+    fn failing_property_reports_seed() {
+        check("falsifiable", 50, |g| {
+            assert!(g.usize_in(0..=9) < 9, "hit the 10%");
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen::new(3);
+        for _ in 0..1000 {
+            let x = g.usize_in(5..=7);
+            assert!((5..=7).contains(&x));
+        }
+        let v = g.vec(2..=4, |g| g.bool());
+        assert!((2..=4).contains(&v.len()));
+        let k = g.key();
+        assert!(!k.is_empty() && k.len() <= 32);
+    }
+}

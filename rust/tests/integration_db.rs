@@ -1,0 +1,197 @@
+//! Integration tests: real TCP client ⇄ server round trips, both engines,
+//! concurrency, failure injection.
+
+use std::time::Duration;
+
+use situ::client::{tensor_key, Client, ClusterClient};
+use situ::db::{DbServer, Engine, ServerConfig};
+use situ::error::Error;
+use situ::tensor::{DType, Tensor};
+
+fn start(engine: Engine) -> DbServer {
+    DbServer::start(ServerConfig { engine, with_models: false, ..Default::default() }).unwrap()
+}
+
+fn t(v: Vec<f32>) -> Tensor {
+    Tensor::from_f32(&[v.len()], v).unwrap()
+}
+
+#[test]
+fn roundtrip_over_tcp_both_engines() {
+    for engine in [Engine::Redis, Engine::KeyDb] {
+        let server = start(engine);
+        let mut c = Client::connect(server.addr).unwrap();
+        let payload = t((0..1000).map(|i| i as f32).collect());
+        c.put_tensor("k", &payload).unwrap();
+        let back = c.get_tensor("k").unwrap();
+        assert_eq!(back, payload);
+        let (keys, bytes, _ops, models, name) = c.info().unwrap();
+        assert_eq!(keys, 1);
+        assert_eq!(bytes, 4000);
+        assert_eq!(models, 0);
+        assert_eq!(name, engine.name());
+    }
+}
+
+#[test]
+fn missing_key_and_delete_semantics() {
+    let server = start(Engine::Redis);
+    let mut c = Client::connect(server.addr).unwrap();
+    assert!(matches!(c.get_tensor("nope"), Err(Error::KeyNotFound(_))));
+    assert!(!c.del_tensor("nope").unwrap());
+    c.put_tensor("x", &t(vec![1.0])).unwrap();
+    assert!(c.del_tensor("x").unwrap());
+    assert!(!c.exists("x").unwrap());
+}
+
+#[test]
+fn metadata_and_list_keys() {
+    let server = start(Engine::Redis);
+    let mut c = Client::connect(server.addr).unwrap();
+    assert_eq!(c.get_meta("latest_step").unwrap(), None);
+    c.put_meta("latest_step", "17").unwrap();
+    assert_eq!(c.get_meta("latest_step").unwrap(), Some("17".into()));
+    for r in 0..3 {
+        c.put_tensor(&tensor_key("field", r, 0), &t(vec![0.0])).unwrap();
+    }
+    let keys = c.list_keys("field_").unwrap();
+    assert_eq!(keys.len(), 3);
+    assert!(keys.windows(2).all(|w| w[0] < w[1]), "sorted");
+}
+
+#[test]
+fn poll_key_waits_for_producer() {
+    let server = start(Engine::Redis);
+    let addr = server.addr;
+    let producer = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(120));
+        c.put_tensor("late", &t(vec![5.0])).unwrap();
+    });
+    let mut c = Client::connect(server.addr).unwrap();
+    c.poll_key("late", Duration::from_millis(10), Duration::from_secs(5)).unwrap();
+    assert!(c.exists("late").unwrap());
+    producer.join().unwrap();
+}
+
+#[test]
+fn poll_key_times_out() {
+    let server = start(Engine::Redis);
+    let mut c = Client::connect(server.addr).unwrap();
+    let err = c
+        .poll_key("never", Duration::from_millis(5), Duration::from_millis(60))
+        .unwrap_err();
+    assert!(matches!(err, Error::Timeout(_)));
+}
+
+#[test]
+fn many_concurrent_clients() {
+    // One client per "rank", all hammering the same server (the paper's
+    // one-SmartRedis-client-per-rank pattern).
+    let server = start(Engine::KeyDb);
+    let addr = server.addr;
+    let mut handles = Vec::new();
+    for rank in 0..12usize {
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect_retry(addr, 20, Duration::from_millis(10)).unwrap();
+            for step in 0..20u64 {
+                let key = tensor_key("f", rank, step);
+                let payload = t(vec![rank as f32, step as f32]);
+                c.put_tensor(&key, &payload).unwrap();
+                assert_eq!(c.get_tensor(&key).unwrap(), payload);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut c = Client::connect(server.addr).unwrap();
+    let (keys, ..) = c.info().unwrap();
+    assert_eq!(keys, 12 * 20);
+}
+
+#[test]
+fn flush_all_clears() {
+    let server = start(Engine::Redis);
+    let mut c = Client::connect(server.addr).unwrap();
+    c.put_tensor("a", &t(vec![1.0])).unwrap();
+    c.flush_all().unwrap();
+    let (keys, bytes, ..) = c.info().unwrap();
+    assert_eq!((keys, bytes), (0, 0));
+}
+
+#[test]
+fn cluster_client_shards_and_finds_keys() {
+    let s1 = start(Engine::Redis);
+    let s2 = start(Engine::Redis);
+    let s3 = start(Engine::Redis);
+    let mut cc = ClusterClient::connect(&[s1.addr, s2.addr, s3.addr]).unwrap();
+    let n = 60;
+    for i in 0..n {
+        cc.put_tensor(&format!("key_{i}"), &t(vec![i as f32])).unwrap();
+    }
+    // Every key is retrievable through routing.
+    for i in 0..n {
+        assert_eq!(
+            cc.get_tensor(&format!("key_{i}")).unwrap().to_f32().unwrap(),
+            vec![i as f32]
+        );
+    }
+    // Keys actually spread across shards.
+    let per_shard: Vec<u64> = [&s1, &s2, &s3].iter().map(|s| s.store().n_keys()).collect();
+    assert_eq!(per_shard.iter().sum::<u64>(), n as u64);
+    assert!(per_shard.iter().all(|&k| k > 0), "all shards used: {per_shard:?}");
+    // Merged listing sees everything.
+    assert_eq!(cc.list_keys("key_").unwrap().len(), n);
+}
+
+#[test]
+fn large_tensor_roundtrip() {
+    let server = start(Engine::Redis);
+    let mut c = Client::connect(server.addr).unwrap();
+    let n = 4 << 20; // 16 MB payload
+    let payload = Tensor {
+        dtype: DType::F32,
+        shape: vec![n],
+        data: (0..4 * n).map(|i| (i % 251) as u8).collect(),
+    };
+    c.put_tensor("big", &payload).unwrap();
+    assert_eq!(c.get_tensor("big").unwrap().data, payload.data);
+}
+
+#[test]
+fn server_survives_malformed_frames() {
+    use std::io::Write;
+    let server = start(Engine::Redis);
+    // Write garbage on a raw socket; the server answers with an error or
+    // drops that connection but keeps serving others.
+    {
+        let mut raw = std::net::TcpStream::connect(server.addr).unwrap();
+        raw.write_all(&[9, 0, 0, 0, 0xee, 1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    let mut c = Client::connect(server.addr).unwrap();
+    c.put_tensor("ok", &t(vec![1.0])).unwrap();
+    assert!(c.exists("ok").unwrap());
+}
+
+#[test]
+fn reconnect_after_drop() {
+    let server = start(Engine::Redis);
+    let mut c1 = Client::connect(server.addr).unwrap();
+    c1.put_tensor("persist", &t(vec![2.0])).unwrap();
+    drop(c1);
+    let mut c2 = Client::connect(server.addr).unwrap();
+    assert_eq!(c2.get_tensor("persist").unwrap().to_f32().unwrap(), vec![2.0]);
+}
+
+#[test]
+fn overwrite_is_last_writer_wins() {
+    let server = start(Engine::KeyDb);
+    let mut c = Client::connect(server.addr).unwrap();
+    c.put_tensor("k", &t(vec![1.0, 2.0])).unwrap();
+    c.put_tensor("k", &t(vec![9.0])).unwrap();
+    assert_eq!(c.get_tensor("k").unwrap().to_f32().unwrap(), vec![9.0]);
+    let (_, bytes, ..) = c.info().unwrap();
+    assert_eq!(bytes, 4);
+}

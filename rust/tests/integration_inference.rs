@@ -1,0 +1,162 @@
+//! Integration: the full RedisAI-analogue inference path over TCP —
+//! put_model → put_tensor → run_model → get_tensor (paper Fig 1b), plus
+//! failure injection on the model path.
+
+use situ::client::Client;
+use situ::db::{DbServer, Engine, ServerConfig};
+use situ::proto::Device;
+use situ::tensor::Tensor;
+use situ::util::rng::Rng;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = situ::db::server::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+#[test]
+fn three_step_inference_over_tcp() {
+    let Some(dir) = artifacts() else { return };
+    let server = DbServer::start(ServerConfig::default()).unwrap();
+    let mut c = Client::connect(server.addr).unwrap();
+
+    // Model upload from the client side (the paper allows driver- or
+    // simulation-side upload; we exercise the client path).
+    c.put_model_from_file("resnet", &dir.join("resnet_lite_b1.hlo.txt")).unwrap();
+
+    let mut rng = Rng::new(5);
+    let x = Tensor::from_f32(&[1, 3, 64, 64], rng.normal_vec_f32(3 * 64 * 64)).unwrap();
+    // Step 1: send inference data.
+    c.put_tensor("in_0", &x).unwrap();
+    // Step 2: evaluate on a GPU slot.
+    c.run_model("resnet", &["in_0".into()], &["out_0".into()], Device::Gpu(1)).unwrap();
+    // Step 3: retrieve predictions.
+    let pred = c.get_tensor("out_0").unwrap();
+    assert_eq!(pred.shape, vec![1, 1000]);
+    let (_, mn, mx) = pred.f32_stats().unwrap();
+    assert!(mn.is_finite() && mx.is_finite() && mx > mn);
+
+    let (_, _, _, models, _) = c.info().unwrap();
+    assert_eq!(models, 1);
+}
+
+#[test]
+fn encoder_inference_compresses_snapshot() {
+    // The paper's target use case: encode a flow snapshot in the DB, store
+    // only the latent (1700x-style compression).
+    let Some(dir) = artifacts() else { return };
+    let m = situ::runtime::Manifest::load_dir(&dir).unwrap();
+    let server = DbServer::start(ServerConfig::default()).unwrap();
+    let mut c = Client::connect(server.addr).unwrap();
+    c.put_model_from_file("encoder", &dir.join(&m.artifact("encoder").unwrap().file)).unwrap();
+
+    // Inputs: encoder params (from params_init.bin) then the snapshot.
+    let state = situ::ml::ParamState::load_init(&m, &dir).unwrap();
+    let mut in_keys = Vec::new();
+    for name in &m.enc_param_order {
+        let i = m.param_order.iter().position(|p| p == name).unwrap();
+        let key = format!("param_{name}");
+        c.put_tensor(&key, &state.params[i]).unwrap();
+        in_keys.push(key);
+    }
+    let mut rng = Rng::new(11);
+    let snap = Tensor::from_f32(
+        &[m.model.channels, m.model.n_points],
+        rng.normal_vec_f32(m.model.channels * m.model.n_points),
+    )
+    .unwrap();
+    c.put_tensor("snap_0", &snap).unwrap();
+    in_keys.push("snap_0".into());
+
+    c.run_model("encoder", &in_keys, &["latent_0".into()], Device::Gpu(0)).unwrap();
+    let z = c.get_tensor("latent_0").unwrap();
+    assert_eq!(z.shape, vec![m.model.latent]);
+    let factor = snap.nbytes() as f64 / z.nbytes() as f64;
+    assert!(
+        (factor - m.model.compression_factor).abs() < 1.0,
+        "compression factor {factor} vs manifest {}",
+        m.model.compression_factor
+    );
+}
+
+#[test]
+fn run_model_without_model_errors() {
+    let server = DbServer::start(ServerConfig::default()).unwrap();
+    let mut c = Client::connect(server.addr).unwrap();
+    c.put_tensor("x", &Tensor::from_f32(&[1], vec![0.0]).unwrap()).unwrap();
+    let err = c
+        .run_model("ghost", &["x".into()], &["y".into()], Device::Cpu)
+        .unwrap_err();
+    assert!(err.to_string().contains("model not found"), "{err}");
+}
+
+#[test]
+fn run_model_with_missing_input_errors() {
+    let Some(dir) = artifacts() else { return };
+    let server = DbServer::start(ServerConfig::default()).unwrap();
+    let mut c = Client::connect(server.addr).unwrap();
+    c.put_model_from_file("resnet", &dir.join("resnet_lite_b1.hlo.txt")).unwrap();
+    let err = c
+        .run_model("resnet", &["absent".into()], &["y".into()], Device::Cpu)
+        .unwrap_err();
+    assert!(err.to_string().contains("not found"), "{err}");
+}
+
+#[test]
+fn run_model_wrong_output_arity_errors() {
+    let Some(dir) = artifacts() else { return };
+    let server = DbServer::start(ServerConfig::default()).unwrap();
+    let mut c = Client::connect(server.addr).unwrap();
+    c.put_model_from_file("resnet", &dir.join("resnet_lite_b1.hlo.txt")).unwrap();
+    let mut rng = Rng::new(5);
+    let x = Tensor::from_f32(&[1, 3, 64, 64], rng.normal_vec_f32(3 * 64 * 64)).unwrap();
+    c.put_tensor("x", &x).unwrap();
+    let err = c
+        .run_model("resnet", &["x".into()], &["a".into(), "b".into()], Device::Cpu)
+        .unwrap_err();
+    assert!(err.to_string().contains("outputs"), "{err}");
+}
+
+#[test]
+fn model_runtime_disabled_reports_cleanly() {
+    let server =
+        DbServer::start(ServerConfig { with_models: false, ..Default::default() }).unwrap();
+    let mut c = Client::connect(server.addr).unwrap();
+    let err = c.put_model("m", "HloModule m").unwrap_err();
+    assert!(err.to_string().contains("disabled"), "{err}");
+}
+
+#[test]
+fn concurrent_inference_across_gpu_slots() {
+    let Some(dir) = artifacts() else { return };
+    let server = DbServer::start(ServerConfig::default()).unwrap();
+    let addr = server.addr;
+    {
+        let mut c = Client::connect(addr).unwrap();
+        c.put_model_from_file("resnet", &dir.join("resnet_lite_b1.hlo.txt")).unwrap();
+    }
+    let mut handles = Vec::new();
+    for rank in 0..4usize {
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let device = situ::ai::ModelRuntime::device_for_rank(rank);
+            let mut rng = Rng::new(rank as u64);
+            let x = Tensor::from_f32(&[1, 3, 64, 64], rng.normal_vec_f32(3 * 64 * 64)).unwrap();
+            for it in 0..3 {
+                let ik = format!("in_{rank}_{it}");
+                let ok = format!("out_{rank}_{it}");
+                c.put_tensor(&ik, &x).unwrap();
+                c.run_model("resnet", &[ik], &[ok.clone()], device).unwrap();
+                let out = c.get_tensor(&ok).unwrap();
+                assert_eq!(out.shape, vec![1, 1000]);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,126 @@
+//! Integration: orchestrator end-to-end — drivers, deployments, a miniature
+//! in-situ training run (the paper §4 workflow at test scale), and the
+//! reproducer loops.
+
+use situ::config::{Deployment, RunConfig};
+use situ::orchestrator::driver::{run_insitu_training, Driver, InSituTrainingConfig};
+use situ::sim::reproducer::{run_data_loop, ReproducerConfig};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = situ::db::server::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+#[test]
+fn driver_launches_colocated_plan() {
+    let mut cfg = RunConfig::default();
+    cfg.nodes = 2;
+    let mut driver = Driver::launch(&cfg, false).unwrap();
+    assert_eq!(driver.addrs().len(), 2, "one DB per node");
+    // Both instances reachable.
+    for addr in driver.addrs() {
+        let mut c = situ::client::Client::connect(addr).unwrap();
+        let (keys, ..) = c.info().unwrap();
+        assert_eq!(keys, 0);
+    }
+    driver.shutdown();
+}
+
+#[test]
+fn driver_launches_clustered_plan() {
+    let mut cfg = RunConfig::default();
+    cfg.deployment = Deployment::Clustered { db_nodes: 3 };
+    let mut driver = Driver::launch(&cfg, false).unwrap();
+    assert_eq!(driver.addrs().len(), 3, "dedicated DB shards");
+    assert_eq!(driver.plan.total_nodes(), cfg.nodes + 3);
+    driver.shutdown();
+}
+
+#[test]
+fn reproducer_measures_all_components() {
+    let mut cfg = RunConfig::default();
+    cfg.nodes = 1;
+    let mut driver = Driver::launch(&cfg, false).unwrap();
+    let times = run_data_loop(&ReproducerConfig {
+        addr: driver.primary_addr(),
+        ranks: 4,
+        bytes_per_rank: 64 * 1024,
+        iterations: 5,
+        warmup: 1,
+        compute_secs: 0.0,
+    })
+    .unwrap();
+    let snap = times.snapshot();
+    assert_eq!(snap["client_init"].count(), 4, "one init per rank");
+    assert_eq!(snap["send"].count(), 4 * 5, "warmup discarded");
+    assert_eq!(snap["retrieve"].count(), 4 * 5);
+    assert!(snap["send"].mean() > 0.0);
+    driver.shutdown();
+}
+
+#[test]
+fn insitu_training_end_to_end_miniature() {
+    // The §4 workflow at test scale: CFD producer + co-located DB + trainer.
+    // The full-scale run lives in examples/insitu_training.rs.
+    let Some(dir) = artifacts() else { return };
+    let cfg = InSituTrainingConfig {
+        artifacts_dir: dir,
+        grid: (12, 10, 8),
+        nu: 2e-3,
+        sim_ranks: 2,
+        ml_ranks: 1,
+        epochs: 6,
+        snapshot_every: 2,
+        solver_steps: 16,
+        seed: 3,
+    };
+    let report = run_insitu_training(&cfg).unwrap();
+    assert_eq!(report.history.len(), 6);
+    // Losses finite and the optimizer actually stepped.
+    for log in &report.history {
+        assert!(log.train_loss.is_finite());
+        assert!(log.val_loss.is_finite());
+        assert!(log.val_rel_err > 0.0);
+    }
+    assert!(report.history.last().unwrap().step >= 6);
+    // Overhead accounting present: solver table includes the paper's rows.
+    let md = report.solver_table.render_markdown();
+    for row in ["equation_formation", "equation_solution", "client_init", "send", "metadata"] {
+        assert!(md.contains(row), "missing solver component {row}:\n{md}");
+    }
+    let md2 = report.trainer_table.render_markdown();
+    for row in ["client_init", "metadata", "retrieve", "train", "total_training"] {
+        assert!(md2.contains(row), "missing trainer component {row}:\n{md2}");
+    }
+    // The paper's headline: framework overhead is a small fraction of the
+    // PDE integration cost.  At test scale the solver is tiny, so only
+    // sanity-bound it.
+    assert!(report.solver_overhead_frac < 5.0, "overhead {:.3}", report.solver_overhead_frac);
+}
+
+#[test]
+fn trainer_times_out_without_producer() {
+    let Some(dir) = artifacts() else { return };
+    let mut cfg = RunConfig::default();
+    cfg.nodes = 1;
+    let mut driver = Driver::launch(&cfg, false).unwrap();
+    let t_cfg = situ::ml::TrainerConfig {
+        db_addr: driver.primary_addr(),
+        ml_ranks: 1,
+        sim_ranks: 1,
+        epochs: 1,
+        field: "field".into(),
+        poll_interval: std::time::Duration::from_millis(5),
+        poll_max_wait: std::time::Duration::from_millis(100),
+    };
+    let exec = situ::runtime::Executor::new().unwrap();
+    let mut trainer = situ::ml::Trainer::new(t_cfg, &dir, exec).unwrap();
+    let err = trainer.run().unwrap_err();
+    assert!(matches!(err, situ::error::Error::Timeout(_)), "{err}");
+    driver.shutdown();
+}

@@ -1,0 +1,242 @@
+//! Integration: PJRT runtime executing the real AOT artifacts.
+//!
+//! Requires `make artifacts` (skipped otherwise).  These tests are the
+//! rust-side half of the L1/L2 correctness story: the python suite proves
+//! kernel == oracle; here we prove the lowered HLO text loads, compiles and
+//! produces sane numbers through the `xla` crate.
+
+use std::path::PathBuf;
+
+use situ::ml::{DataLoader, ParamState};
+use situ::runtime::{Executor, Manifest};
+use situ::tensor::Tensor;
+use situ::util::rng::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = situ::db::server::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built");
+        None
+    }
+}
+
+fn synth_batch(manifest: &Manifest, b: usize, seed: u64) -> Tensor {
+    // Smooth-ish field + noise, like the python test fixture.
+    let c = manifest.model.channels;
+    let n = manifest.model.n_points;
+    let mut rng = Rng::new(seed);
+    let mut data = Vec::with_capacity(b * c * n);
+    for _ in 0..b {
+        for ch in 0..c {
+            for i in 0..n {
+                let x = i as f32 / n as f32;
+                data.push(
+                    (2.0 * std::f32::consts::PI * x + ch as f32).sin()
+                        + 0.1 * rng.normal() as f32,
+                );
+            }
+        }
+    }
+    Tensor::from_f32(&[b, c, n], data).unwrap()
+}
+
+#[test]
+fn manifest_parses_and_validates() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load_dir(&dir).unwrap();
+    assert_eq!(m.model.channels, 4);
+    assert_eq!(m.model.latent, 100);
+    assert_eq!(m.param_order.len(), m.model.n_param_tensors);
+    // train_step signature: 3P+2 in, 3P+2 out.
+    let ts = m.artifact("train_step").unwrap();
+    assert_eq!(ts.inputs.len(), 3 * m.model.n_param_tensors + 2);
+    assert_eq!(ts.outputs.len(), 3 * m.model.n_param_tensors + 2);
+}
+
+#[test]
+fn encoder_runs_and_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load_dir(&dir).unwrap();
+    let exec = Executor::new().unwrap();
+    exec.load_artifact("encoder", &dir.join(&m.artifact("encoder").unwrap().file)).unwrap();
+    let state = ParamState::load_init(&m, &dir).unwrap();
+    // Encoder takes enc params (in enc_param_order) + f.
+    let enc_idx: Vec<usize> = m
+        .enc_param_order
+        .iter()
+        .map(|k| m.param_order.iter().position(|p| p == k).unwrap())
+        .collect();
+    let mut inputs: Vec<Tensor> = enc_idx.iter().map(|&i| state.params[i].clone()).collect();
+    let f = synth_batch(&m, 1, 3);
+    let sample = Tensor::from_f32(
+        &[m.model.channels, m.model.n_points],
+        f.to_f32().unwrap()[..m.model.channels * m.model.n_points].to_vec(),
+    )
+    .unwrap();
+    inputs.push(sample);
+    let out1 = exec.execute("encoder", inputs.clone()).unwrap();
+    let out2 = exec.execute("encoder", inputs).unwrap();
+    assert_eq!(out1.len(), 1);
+    assert_eq!(out1[0].shape, vec![m.model.latent]);
+    assert_eq!(out1[0].data, out2[0].data, "deterministic");
+    let (mean, mn, mx) = out1[0].f32_stats().unwrap();
+    assert!(mean.is_finite() && mn.is_finite() && mx.is_finite());
+    assert!(mx > mn, "latent is not constant");
+}
+
+#[test]
+fn autoencoder_roundtrip_reconstructs_scale() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load_dir(&dir).unwrap();
+    let exec = Executor::new().unwrap();
+    exec.load_artifact("autoencoder", &dir.join(&m.artifact("autoencoder").unwrap().file))
+        .unwrap();
+    let state = ParamState::load_init(&m, &dir).unwrap();
+    let mut inputs = state.params.clone();
+    let f = synth_batch(&m, 1, 5);
+    let sample = Tensor::from_f32(
+        &[m.model.channels, m.model.n_points],
+        f.to_f32().unwrap()[..m.model.channels * m.model.n_points].to_vec(),
+    )
+    .unwrap();
+    inputs.push(sample.clone());
+    let out = exec.execute("autoencoder", inputs).unwrap();
+    assert_eq!(out[0].shape, sample.shape);
+    // Untrained: reconstruction won't match, but must be finite and bounded.
+    let (_, mn, mx) = out[0].f32_stats().unwrap();
+    assert!(mn.is_finite() && mx.is_finite() && mx.abs() < 1e4);
+}
+
+#[test]
+fn train_step_decreases_loss_through_pjrt() {
+    // The core L2-through-L3 signal: repeated fused train_step executions
+    // from rust reduce the MSE on a fixed batch.
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load_dir(&dir).unwrap();
+    let exec = Executor::new().unwrap();
+    exec.load_artifact("train_step", &dir.join(&m.artifact("train_step").unwrap().file))
+        .unwrap();
+    let mut state = ParamState::load_init(&m, &dir).unwrap();
+    let batch = synth_batch(&m, m.model.batch, 7);
+    let mut losses = Vec::new();
+    for _ in 0..12 {
+        let out = exec.execute("train_step", state.train_step_inputs(batch.clone())).unwrap();
+        losses.push(state.absorb_train_step(out).unwrap());
+    }
+    assert_eq!(state.step, 12);
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss must decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn grad_step_plus_apply_adam_matches_fused() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load_dir(&dir).unwrap();
+    let exec = Executor::new().unwrap();
+    for name in ["train_step", "grad_step", "apply_adam"] {
+        exec.load_artifact(name, &dir.join(&m.artifact(name).unwrap().file)).unwrap();
+    }
+    let batch = synth_batch(&m, m.model.batch, 11);
+
+    let mut fused = ParamState::load_init(&m, &dir).unwrap();
+    let out = exec.execute("train_step", fused.train_step_inputs(batch.clone())).unwrap();
+    let loss_fused = fused.absorb_train_step(out).unwrap();
+
+    let mut ddp = ParamState::load_init(&m, &dir).unwrap();
+    let mut out = exec.execute("grad_step", ddp.grad_step_inputs(batch)).unwrap();
+    let grads = out.split_off(1);
+    let loss_ddp = out.pop().unwrap().first_f32().unwrap();
+    let out = exec.execute("apply_adam", ddp.apply_adam_inputs(grads)).unwrap();
+    ddp.absorb_apply_adam(out).unwrap();
+
+    assert!((loss_fused - loss_ddp).abs() < 1e-5, "{loss_fused} vs {loss_ddp}");
+    for (a, b) in fused.params.iter().zip(&ddp.params) {
+        let va = a.to_f32().unwrap();
+        let vb = b.to_f32().unwrap();
+        for (x, y) in va.iter().zip(&vb) {
+            assert!((x - y).abs() < 1e-5, "params diverge: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn eval_step_reports_loss_and_relative_error() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load_dir(&dir).unwrap();
+    let exec = Executor::new().unwrap();
+    exec.load_artifact("eval_step", &dir.join(&m.artifact("eval_step").unwrap().file)).unwrap();
+    let state = ParamState::load_init(&m, &dir).unwrap();
+    let mut inputs = state.params.clone();
+    inputs.push(synth_batch(&m, m.model.batch, 13));
+    let out = exec.execute("eval_step", inputs).unwrap();
+    let loss = out[0].first_f32().unwrap();
+    let rel = out[1].first_f32().unwrap();
+    assert!(loss > 0.0 && loss.is_finite());
+    assert!(rel > 0.0 && rel < 100.0, "relative error sane: {rel}");
+}
+
+#[test]
+fn resnet_lite_batches_agree() {
+    let Some(dir) = artifacts() else { return };
+    let exec = Executor::new().unwrap();
+    for b in [1usize, 4] {
+        let name = format!("resnet_lite_b{b}");
+        exec.load_artifact(&name, &dir.join(format!("{name}.hlo.txt"))).unwrap();
+    }
+    let mut rng = Rng::new(3);
+    let x1: Vec<f32> = rng.normal_vec_f32(3 * 64 * 64);
+    // batch-4 input = the same sample repeated.
+    let mut x4 = Vec::with_capacity(4 * x1.len());
+    for _ in 0..4 {
+        x4.extend_from_slice(&x1);
+    }
+    let o1 = exec
+        .execute("resnet_lite_b1", vec![Tensor::from_f32(&[1, 3, 64, 64], x1).unwrap()])
+        .unwrap();
+    let o4 = exec
+        .execute("resnet_lite_b4", vec![Tensor::from_f32(&[4, 3, 64, 64], x4).unwrap()])
+        .unwrap();
+    assert_eq!(o1[0].shape, vec![1, 1000]);
+    assert_eq!(o4[0].shape, vec![4, 1000]);
+    let v1 = o1[0].to_f32().unwrap();
+    let v4 = o4[0].to_f32().unwrap();
+    for i in 0..1000 {
+        assert!((v1[i] - v4[i]).abs() < 2e-4, "row 0 mismatch at {i}");
+        assert!((v1[i] - v4[3000 + i]).abs() < 2e-4, "row 3 mismatch at {i}");
+    }
+}
+
+#[test]
+fn missing_artifact_is_model_not_found() {
+    let exec = Executor::new().unwrap();
+    let err = exec.execute("never_loaded", vec![]).unwrap_err();
+    assert!(matches!(err, situ::error::Error::ModelNotFound(_)));
+}
+
+#[test]
+fn truncated_artifact_fails_to_compile() {
+    let Some(dir) = artifacts() else { return };
+    let text = std::fs::read_to_string(dir.join("encoder.hlo.txt")).unwrap();
+    let exec = Executor::new().unwrap();
+    let half = &text[..text.len() / 2];
+    assert!(exec.load_hlo_text("broken", half).is_err());
+}
+
+#[test]
+fn dataloader_stack_matches_trainstep_batch_shape() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load_dir(&dir).unwrap();
+    let sample = Tensor::from_f32(
+        &[m.model.channels, m.model.n_points],
+        vec![0.5; m.model.channels * m.model.n_points],
+    )
+    .unwrap();
+    let batch = DataLoader::stack_batch(&[&sample], m.model.batch).unwrap();
+    let want = &m.artifact("train_step").unwrap().inputs.last().unwrap().shape;
+    assert_eq!(&batch.shape, want);
+}
