@@ -61,7 +61,9 @@ fn main() {
         "Fig 4 (real TCP server on this host, 4 ranks x 10 iters)",
         &["size/rank", "send", "retrieve", "throughput"],
     );
-    for bytes in [1024usize, 16 * 1024, 256 * 1024, 4 << 20] {
+    // The upper sizes (16–64 MiB) are where the zero-copy data plane shows:
+    // payloads move socket→store→socket with one allocation per direction.
+    for bytes in [1024usize, 16 * 1024, 256 * 1024, 4 << 20, 16 << 20, 64 << 20] {
         let times = run_data_loop(&ReproducerConfig {
             addr: server.addr,
             ranks: 4,

@@ -1,7 +1,9 @@
 //! Microbenchmarks of the framework hot paths (the §Perf instrument):
 //! protocol codec, store ops, DES event rate, literal conversion, and the
 //! end-to-end TCP round trip.  Before/after numbers live in
-//! EXPERIMENTS.md §Perf.
+//! EXPERIMENTS.md §Perf; the zero-copy data-plane sweep (1–64 MiB put/get)
+//! is recorded in BENCH_PR1.json — set `SITU_BENCH_JSON=path.json` to dump
+//! machine-readable results.
 
 use std::time::Instant;
 
@@ -9,11 +11,23 @@ use situ::cluster::des::Server;
 use situ::db::Store;
 use situ::proto::{Request, Response};
 use situ::telemetry::Table;
-use situ::tensor::Tensor;
+use situ::tensor::{DType, Tensor};
 use situ::util::fmt;
 use situ::util::rng::Rng;
 
-fn bench(name: &str, table: &mut Table, mut f: impl FnMut() -> usize) {
+struct BenchResult {
+    name: String,
+    per_op_s: f64,
+    ops_per_s: f64,
+    bytes_per_s: f64,
+}
+
+fn bench(
+    name: &str,
+    table: &mut Table,
+    results: &mut Vec<BenchResult>,
+    mut f: impl FnMut() -> usize,
+) {
     // Warm up, then time enough iterations for >=0.2s.
     let mut iters = 1usize;
     loop {
@@ -25,16 +39,23 @@ fn bench(name: &str, table: &mut Table, mut f: impl FnMut() -> usize) {
         let dt = t0.elapsed().as_secs_f64();
         if dt > 0.2 || iters > 1 << 22 {
             let per = dt / iters as f64;
+            let bytes_per_s = work as f64 / dt;
             table.row(&[
                 name.to_string(),
                 fmt::duration(per),
                 format!("{:.2e} ops/s", iters as f64 / dt),
                 if work > 0 {
-                    fmt::throughput(work as f64 / dt)
+                    fmt::throughput(bytes_per_s)
                 } else {
                     "-".into()
                 },
             ]);
+            results.push(BenchResult {
+                name: name.to_string(),
+                per_op_s: per,
+                ops_per_s: iters as f64 / dt,
+                bytes_per_s: if work > 0 { bytes_per_s } else { 0.0 },
+            });
             return;
         }
         iters = (iters as f64 * (0.25 / dt.max(1e-9))).ceil() as usize;
@@ -47,27 +68,37 @@ fn main() {
         "framework microbenchmarks (hot paths)",
         &["path", "per-op", "rate", "payload throughput"],
     );
+    let mut results: Vec<BenchResult> = Vec::new();
     let mut rng = Rng::new(1);
 
     // Protocol codec, 256KB tensor (the paper's canonical size).
     let payload = Tensor::from_f32(&[65536], rng.normal_vec_f32(65536)).unwrap();
     let req = Request::PutTensor { key: "field_rank0_step0".into(), tensor: payload.clone() };
     let mut buf = Vec::with_capacity(300 * 1024);
-    bench("proto encode 256KB", &mut table, || {
+    bench("proto encode 256KB", &mut table, &mut results, || {
         buf.clear();
         req.encode(&mut buf);
         buf.len()
     });
     let encoded = buf.clone();
-    bench("proto decode 256KB", &mut table, || {
+    bench("proto decode 256KB", &mut table, &mut results, || {
         let r = Request::decode(&encoded).unwrap();
         match r {
             Request::PutTensor { tensor, .. } => tensor.nbytes(),
             _ => 0,
         }
     });
+    // The server-side path: decode sharing the frame body (view, no copy).
+    let shared_body = situ::Bytes::from_vec(encoded.clone());
+    bench("proto decode_shared 256KB", &mut table, &mut results, || {
+        let r = Request::decode_shared(&shared_body).unwrap();
+        match r {
+            Request::PutTensor { tensor, .. } => tensor.nbytes(),
+            _ => 0,
+        }
+    });
     let resp = Response::Tensor(payload.clone());
-    bench("proto encode resp 256KB", &mut table, || {
+    bench("proto encode resp 256KB", &mut table, &mut results, || {
         buf.clear();
         resp.encode(&mut buf);
         buf.len()
@@ -76,17 +107,21 @@ fn main() {
     // Store ops.
     let store = Store::new();
     store.put_tensor("k", payload.clone()).unwrap();
-    bench("store put 256KB", &mut table, || {
+    bench("store put 256KB", &mut table, &mut results, || {
         store.put_tensor("k", payload.clone()).unwrap();
         payload.nbytes()
     });
-    bench("store get 256KB", &mut table, || store.get_tensor("k").unwrap().nbytes());
+    bench("store get 256KB", &mut table, &mut results, || {
+        store.get_tensor("k").unwrap().nbytes()
+    });
     let small = Tensor::from_f32(&[16], vec![0.0; 16]).unwrap();
     store.put_tensor("s", small.clone()).unwrap();
-    bench("store get 64B", &mut table, || store.get_tensor("s").unwrap().nbytes());
+    bench("store get 64B", &mut table, &mut results, || {
+        store.get_tensor("s").unwrap().nbytes()
+    });
 
     // DES reservation rate.
-    bench("des reserve x1000", &mut table, || {
+    bench("des reserve x1000", &mut table, &mut results, || {
         let mut s = Server::new(4);
         for i in 0..1000 {
             s.reserve(i as f64 * 1e-6, 3e-6);
@@ -95,7 +130,9 @@ fn main() {
     });
 
     // Tensor <-> f32 conversion (the client-side pack/unpack cost).
-    bench("tensor to_f32 256KB", &mut table, || payload.to_f32().unwrap().len() * 4);
+    bench("tensor to_f32 256KB", &mut table, &mut results, || {
+        payload.to_f32().unwrap().len() * 4
+    });
 
     // Real TCP round trip (client + server on this host).
     let server = situ::db::DbServer::start(situ::db::ServerConfig {
@@ -104,16 +141,57 @@ fn main() {
     })
     .unwrap();
     let mut client = situ::client::Client::connect(server.addr).unwrap();
-    bench("tcp put+get 256KB", &mut table, || {
+    bench("tcp put+get 256KB", &mut table, &mut results, || {
         client.put_tensor("b", &payload).unwrap();
         client.get_tensor("b").unwrap();
         2 * payload.nbytes()
     });
-    bench("tcp put+get 1KB", &mut table, || {
+    bench("tcp put+get 1KB", &mut table, &mut results, || {
         client.put_tensor("c", &small).unwrap();
         client.get_tensor("c").unwrap();
         2 * small.nbytes()
     });
 
+    // Zero-copy data-plane sweep (the BENCH_PR1.json acceptance numbers):
+    // store and TCP put/get throughput on 1–64 MiB payloads, where the
+    // per-request memcpy/allocator traffic used to dominate.
+    for mib in [1usize, 4, 16, 64] {
+        let n = (mib << 20) / 4;
+        let big = Tensor::zeros(DType::F32, &[n]);
+        let key = format!("sweep_{mib}mib");
+        store.put_tensor(&key, big.clone()).unwrap();
+        bench(&format!("store put {mib}MiB"), &mut table, &mut results, || {
+            store.put_tensor(&key, big.clone()).unwrap();
+            big.nbytes()
+        });
+        bench(&format!("store get {mib}MiB"), &mut table, &mut results, || {
+            store.get_tensor(&key).unwrap().nbytes()
+        });
+        bench(&format!("tcp put {mib}MiB"), &mut table, &mut results, || {
+            client.put_tensor(&key, &big).unwrap();
+            big.nbytes()
+        });
+        bench(&format!("tcp get {mib}MiB"), &mut table, &mut results, || {
+            client.get_tensor(&key).unwrap().nbytes()
+        });
+    }
+
     table.print();
+
+    if let Ok(path) = std::env::var("SITU_BENCH_JSON") {
+        let mut s = String::from("{\n  \"bench\": \"microbench\",\n  \"results\": [\n");
+        for (i, r) in results.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"per_op_s\": {:.9}, \"ops_per_s\": {:.3}, \"bytes_per_s\": {:.3}}}{}\n",
+                r.name,
+                r.per_op_s,
+                r.ops_per_s,
+                r.bytes_per_s,
+                if i + 1 == results.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(&path, &s).expect("write SITU_BENCH_JSON");
+        println!("bench results written to {path}");
+    }
 }

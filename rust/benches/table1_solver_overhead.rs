@@ -6,6 +6,12 @@
 //! 453.4s, client init 0.002s, metadata 0.065s, send 0.120s — framework
 //! overhead ≪1% of PDE integration.  Here the solver is the real in-repo
 //! NS solver at host scale; the claim under test is the *ratio*.
+//!
+//! The "training data send" component exercises the zero-copy data plane
+//! end to end: the sampler packs the snapshot payload once, the client
+//! split-writes it from that same buffer, and the server stores the frame
+//! it read — so the overhead numerator contains one socket copy per
+//! direction and no allocator churn beyond it.
 
 use situ::orchestrator::driver::{run_insitu_training, InSituTrainingConfig};
 

@@ -80,6 +80,10 @@ impl ModelRuntime {
 
     /// The `AI.MODELRUN` analogue: gather inputs from the store, execute on
     /// the requested device slot, scatter outputs back into the store.
+    ///
+    /// The gather is zero-copy: each input is a refcount clone of the
+    /// stored payload, so model I/O never duplicates tensors in host
+    /// memory before they reach the PJRT literal conversion.
     pub fn run_model(
         &self,
         store: &Store,

@@ -21,8 +21,9 @@ use std::time::Duration;
 
 use crate::db::cluster::SlotMap;
 use crate::error::{Error, Result};
-use crate::proto::{read_frame, write_frame, Device, Request, Response};
-use crate::tensor::Tensor;
+use crate::proto::frame::{begin_split_frame, end_split_frame, read_frame, write_frame};
+use crate::proto::{Device, Request, Response};
+use crate::tensor::{Bytes, Tensor};
 
 /// Key scheme used across the framework: tensors are unique per rank and
 /// step so nothing is overwritten (paper §2.2).
@@ -68,17 +69,23 @@ impl Client {
         Err(last.unwrap_or_else(|| Error::Invalid("connect_retry with 0 tries".into())))
     }
 
-    fn call(&mut self, req: &Request) -> Result<Response> {
-        self.buf.clear();
-        req.encode(&mut self.buf);
-        write_frame(&mut self.writer, &self.buf)?;
+    /// Read one response frame and decode it sharing the frame body — a
+    /// tensor reply's payload aliases the freshly-read buffer (zero copy).
+    fn read_response(&mut self) -> Result<Response> {
         match read_frame(&mut self.reader)? {
-            Some(body) => Response::decode(&body),
+            Some(body) => Response::decode_shared(&Bytes::from_vec(body)),
             None => Err(Error::Io(std::io::Error::new(
                 std::io::ErrorKind::UnexpectedEof,
                 "server closed connection",
             ))),
         }
+    }
+
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        self.buf.clear();
+        req.encode(&mut self.buf);
+        write_frame(&mut self.writer, &self.buf)?;
+        self.read_response()
     }
 
     fn expect_ok(&mut self, req: &Request) -> Result<()> {
@@ -89,26 +96,23 @@ impl Client {
         }
     }
 
-    /// Send a tensor (`put_tensor`).  Encodes straight from the borrowed
-    /// tensor — no payload clone on the hot path.
+    /// Send a tensor (`put_tensor`).  Writes a split frame: the small
+    /// header is encoded into the reusable buffer, the payload goes from
+    /// the borrowed tensor straight to the socket — zero payload copies.
     pub fn put_tensor(&mut self, key: &str, t: &Tensor) -> Result<()> {
-        self.buf.clear();
-        crate::proto::message::encode_put_tensor_into(&mut self.buf, key, t);
-        write_frame(&mut self.writer, &self.buf)?;
-        match read_frame(&mut self.reader)? {
-            Some(body) => match Response::decode(&body)? {
-                Response::Ok => Ok(()),
-                Response::Error(m) => Err(Error::Remote(m)),
-                other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
-            },
-            None => Err(Error::Io(std::io::Error::new(
-                std::io::ErrorKind::UnexpectedEof,
-                "server closed connection",
-            ))),
+        begin_split_frame(&mut self.buf);
+        crate::proto::message::encode_put_tensor_header_into(&mut self.buf, key, t);
+        end_split_frame(&mut self.writer, &mut self.buf, &t.data)?;
+        match self.read_response()? {
+            Response::Ok => Ok(()),
+            Response::Error(m) => Err(Error::Remote(m)),
+            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
         }
     }
 
-    /// Retrieve a tensor (`unpack_tensor`).
+    /// Retrieve a tensor (`unpack_tensor`).  The returned tensor's payload
+    /// aliases the response frame read off the socket — one allocation, no
+    /// decode-time copy.
     pub fn get_tensor(&mut self, key: &str) -> Result<Tensor> {
         match self.call(&Request::GetTensor { key: key.to_string() })? {
             Response::Tensor(t) => Ok(t),

@@ -4,6 +4,11 @@
 //! Threading model mirrors the engines being reproduced: a reader thread per
 //! connection (redis io-threads / keydb server threads) with command
 //! execution passing through the engine's [`CommandGate`].
+//!
+//! The request path is zero-copy for tensor payloads: `put_tensor` frames
+//! are handed to the store wholesale (the stored tensor is a view into the
+//! frame read off the socket) and `get_tensor` replies are split frames
+//! that write the payload straight from the store's shared buffer.
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -16,8 +21,27 @@ use crate::ai::ModelRuntime;
 use crate::db::engine::{CommandGate, Engine};
 use crate::db::store::Store;
 use crate::error::{Error, Result};
-use crate::proto::{read_frame, write_frame, Request, Response};
+use crate::proto::frame::{begin_split_frame, end_split_frame, read_frame_into, write_frame};
+use crate::proto::{message, Request, Response};
 use crate::runtime::Executor;
+use crate::tensor::Bytes;
+
+/// Ceiling for the accept loop's adaptive idle backoff.  Tradeoff: a larger
+/// value means fewer idle wakeups but up to this much extra latency both
+/// for the first `accept` after an idle period and for `shutdown()` joining
+/// the accept thread.
+const ACCEPT_BACKOFF_MAX: std::time::Duration = std::time::Duration::from_millis(50);
+
+/// Floor the accept backoff restarts from after any successful accept.
+const ACCEPT_BACKOFF_MIN: std::time::Duration = std::time::Duration::from_millis(1);
+
+/// Read timeout on connection sockets.  Its only purpose is bounding how
+/// long an idle connection thread takes to notice the stop flag, so it is
+/// deliberately long: 1 s cuts idle wakeups 5x versus the previous 200 ms,
+/// at the cost of up to 1 s of shutdown latency per (detached) connection
+/// thread.  `shutdown()` does not join connection threads, so this latency
+/// only delays socket teardown, never the caller.
+const CONN_READ_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(1);
 
 /// Server configuration (one database instance; the clustered deployment
 /// launches several of these and routes with [`crate::db::cluster`]).
@@ -84,16 +108,21 @@ impl DbServer {
             std::thread::Builder::new()
                 .name(format!("db-accept-{}", addr.port()))
                 .spawn(move || {
-                    listener.set_nonblocking(false).ok();
-                    // Poll for shutdown with a short accept timeout trick:
-                    // switch to nonblocking and sleep-loop.
+                    // Poll for shutdown with a nonblocking accept loop.  The
+                    // sleep between polls backs off adaptively: a busy server
+                    // accepts with ~1 ms latency, an idle one decays to
+                    // ACCEPT_BACKOFF_MAX between wakeups (kernel backlog
+                    // still completes handshakes meanwhile, so connects are
+                    // never dropped, just served up to one backoff later).
                     listener.set_nonblocking(true).ok();
+                    let mut backoff = ACCEPT_BACKOFF_MIN;
                     loop {
                         if stop.load(Ordering::Relaxed) {
                             break;
                         }
                         match listener.accept() {
                             Ok((sock, _peer)) => {
+                                backoff = ACCEPT_BACKOFF_MIN;
                                 sock.set_nodelay(true).ok();
                                 let store = Arc::clone(&store);
                                 let models = models.clone();
@@ -107,7 +136,8 @@ impl DbServer {
                                     .ok();
                             }
                             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                                std::thread::sleep(std::time::Duration::from_millis(2));
+                                std::thread::sleep(backoff);
+                                backoff = (backoff * 2).min(ACCEPT_BACKOFF_MAX);
                             }
                             Err(_) => break,
                         }
@@ -158,16 +188,20 @@ fn serve_conn(
     stop: &AtomicBool,
     engine: Engine,
 ) -> Result<()> {
-    sock.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    sock.set_read_timeout(Some(CONN_READ_TIMEOUT))?;
     let mut writer = sock.try_clone()?;
     let mut reader = BufReader::with_capacity(256 * 1024, sock);
+    // Scratch frame buffer, reused across requests the server fully
+    // consumes; payload-carrying frames are handed over to the store
+    // instead (see below), which leaves a fresh buffer behind.
+    let mut scratch: Vec<u8> = Vec::new();
     let mut out_buf = Vec::with_capacity(64 * 1024);
     loop {
         if stop.load(Ordering::Relaxed) {
             return Ok(());
         }
-        let body = match read_frame(&mut reader) {
-            Ok(Some(b)) => b,
+        match read_frame_into(&mut reader, &mut scratch) {
+            Ok(Some(_)) => {}
             Ok(None) => return Ok(()), // client closed
             Err(Error::Io(ref e))
                 if e.kind() == std::io::ErrorKind::WouldBlock
@@ -176,17 +210,44 @@ fn serve_conn(
                 continue; // idle poll; re-check stop flag
             }
             Err(e) => return Err(e),
+        }
+        let decoded = if Request::frame_holds_payload(&scratch) {
+            // Take ownership of the frame: the decoded tensor's payload is
+            // a view into it and the store keeps that single allocation
+            // alive by refcount — zero copies between socket and store.
+            // (On put-heavy connections scratch is consumed every request,
+            // so the per-frame allocation moves to the store rather than
+            // being amortized — it is the tensor's own storage either way.)
+            // Shrink first so a capacity inherited from an earlier larger
+            // frame isn't pinned for the stored tensor's lifetime; this is
+            // a no-op when scratch was sized for this frame.
+            scratch.shrink_to_fit();
+            let body = Bytes::from_vec(std::mem::take(&mut scratch));
+            Request::decode_shared(&body)
+        } else {
+            Request::decode(&scratch)
         };
-        let resp = match Request::decode(&body) {
+        let resp = match decoded {
             Err(e) => Response::Error(e.to_string()),
             Ok(req) => {
                 let _g = gate.enter(); // redis: serialize command execution
                 execute(req, store, models, engine)
             }
         };
-        out_buf.clear();
-        resp.encode(&mut out_buf);
-        write_frame(&mut writer, &out_buf)?;
+        match resp {
+            // Tensor replies go out as a split frame: small header copied,
+            // payload written straight from the store's shared buffer.
+            Response::Tensor(t) => {
+                begin_split_frame(&mut out_buf);
+                message::encode_tensor_response_header_into(&mut out_buf, &t);
+                end_split_frame(&mut writer, &mut out_buf, &t.data)?;
+            }
+            other => {
+                out_buf.clear();
+                other.encode(&mut out_buf);
+                write_frame(&mut writer, &out_buf)?;
+            }
+        }
     }
 }
 

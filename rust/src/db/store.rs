@@ -60,24 +60,40 @@ impl Store {
     }
 
     /// Insert or overwrite a tensor (the paper's `put_tensor`).
+    ///
+    /// Zero-copy: the shard takes the tensor's shared payload buffer by
+    /// refcount — when the caller decoded it with `Request::decode_shared`,
+    /// the stored payload *is* the wire frame's allocation.
     pub fn put_tensor(&self, key: &str, t: Tensor) -> Result<()> {
         t.validate()?;
+        let new_bytes = t.nbytes() as u64;
         self.counters.ops.fetch_add(1, Ordering::Relaxed);
-        self.counters
-            .bytes_in
-            .fetch_add(t.nbytes() as u64, Ordering::Relaxed);
+        self.counters.bytes_in.fetch_add(new_bytes, Ordering::Relaxed);
         let mut s = self.shard(key).lock().unwrap();
-        let old = s.tensors.insert(key.to_string(), t);
-        let new_bytes = s.tensors[key].nbytes() as u64;
+        // Overwrite in place: the steady-state path (each rank republishing
+        // under a stable key) is one hash lookup with no post-insert
+        // re-hash and no key `String` re-allocation.
+        let mut incoming = Some(t);
+        let old_bytes = s
+            .tensors
+            .get_mut(key)
+            .map(|slot| std::mem::replace(slot, incoming.take().unwrap()).nbytes() as u64);
+        if let Some(t) = incoming {
+            s.tensors.insert(key.to_string(), t);
+        }
         drop(s);
-        if let Some(o) = old {
-            self.bytes.fetch_sub(o.nbytes() as u64, Ordering::Relaxed);
+        if let Some(o) = old_bytes {
+            self.bytes.fetch_sub(o, Ordering::Relaxed);
         }
         self.bytes.fetch_add(new_bytes, Ordering::Relaxed);
         Ok(())
     }
 
-    /// Fetch a tensor copy (the paper's `unpack_tensor`).
+    /// Fetch a tensor (the paper's `unpack_tensor`).
+    ///
+    /// The returned tensor shares the stored payload by refcount — no deep
+    /// copy under the shard lock.  A reader's view stays alive and valid
+    /// even if the key is overwritten or deleted afterwards.
     pub fn get_tensor(&self, key: &str) -> Result<Tensor> {
         self.counters.ops.fetch_add(1, Ordering::Relaxed);
         let s = self.shard(key).lock().unwrap();
@@ -284,9 +300,67 @@ mod tests {
     }
 
     #[test]
+    fn get_tensor_is_refcount_clone_not_deep_copy() {
+        let s = Store::new();
+        let t0 = t(vec![1.0, 2.0, 3.0]);
+        let put_handle = t0.data.clone();
+        s.put_tensor("k", t0).unwrap();
+        let a = s.get_tensor("k").unwrap();
+        let b = s.get_tensor("k").unwrap();
+        assert!(
+            a.data.shares_allocation(&put_handle),
+            "stored payload must be the exact buffer that was put"
+        );
+        assert!(a.data.shares_allocation(&b.data));
+        assert_eq!(a.data.as_ptr(), b.data.as_ptr(), "pointer-identical payloads");
+    }
+
+    #[test]
+    fn outstanding_views_survive_overwrite_and_delete() {
+        let s = Store::new();
+        s.put_tensor("k", t(vec![1.0, 2.0])).unwrap();
+        let old = s.get_tensor("k").unwrap();
+        s.put_tensor("k", t(vec![9.0])).unwrap();
+        assert_eq!(old.to_f32().unwrap(), vec![1.0, 2.0], "view valid after overwrite");
+        let newer = s.get_tensor("k").unwrap();
+        assert!(s.del_tensor("k"));
+        assert_eq!(newer.to_f32().unwrap(), vec![9.0], "view valid after delete");
+        assert_eq!(s.n_bytes(), 0, "accounting ignores outstanding views");
+    }
+
+    #[test]
+    fn concurrent_get_during_overwrite_no_torn_reads() {
+        // Readers hammer a key while a writer overwrites it with
+        // constant-valued tensors; aliasing semantics guarantee every read
+        // observes one complete buffer, never a mix.
+        let s = Arc::new(Store::new());
+        s.put_tensor("k", t(vec![0.0; 256])).unwrap();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut readers = Vec::new();
+        for _ in 0..4 {
+            let s = Arc::clone(&s);
+            let stop = Arc::clone(&stop);
+            readers.push(std::thread::spawn(move || {
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let v = s.get_tensor("k").unwrap().to_f32().unwrap();
+                    let first = v[0];
+                    assert!(v.iter().all(|&x| x == first), "torn read: {first} vs mix");
+                }
+            }));
+        }
+        for i in 1..=200 {
+            s.put_tensor("k", t(vec![i as f32; 256])).unwrap();
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        for h in readers {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
     fn rejects_invalid_tensor() {
         let s = Store::new();
-        let bad = Tensor { dtype: DType::F32, shape: vec![4], data: vec![0u8; 3] };
+        let bad = Tensor { dtype: DType::F32, shape: vec![4], data: vec![0u8; 3].into() };
         assert!(s.put_tensor("x", bad).is_err());
         assert_eq!(s.n_keys(), 0);
     }

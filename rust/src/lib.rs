@@ -20,6 +20,24 @@
 //!
 //! Python never runs on the request path: `make artifacts` lowers the graphs
 //! once; [`runtime`] loads and executes them through the PJRT C API.
+//!
+//! ## Zero-copy tensor data plane
+//!
+//! The crate's core value type, [`Tensor`], carries its payload in a
+//! shared, reference-counted [`Bytes`] buffer.  That single design choice
+//! removes every avoidable payload copy on the paper's hot path:
+//!
+//! * the client's `put_tensor` writes a split frame straight from the
+//!   borrowed tensor (no encode copy);
+//! * the server decodes the frame with `Request::decode_shared`, so the
+//!   stored tensor *is* a view into the frame read off the socket;
+//! * `Store::get_tensor` hands tensors out by refcount bump, and readers'
+//!   views stay valid across overwrites and deletes;
+//! * tensor replies are written as header + borrowed payload slice, never
+//!   re-materialized in an output buffer.
+//!
+//! One `put_tensor`/`get_tensor` round trip thus allocates the payload
+//! once per direction (the socket read) instead of copying it 4–5 times.
 
 pub mod ai;
 pub mod client;
@@ -37,4 +55,4 @@ pub mod tensor;
 pub mod util;
 
 pub use error::{Error, Result};
-pub use tensor::{DType, Tensor};
+pub use tensor::{Bytes, DType, Tensor};

@@ -37,7 +37,7 @@ impl DataLoader {
     /// Wait until the producer has published step `step` for all owned sim
     /// ranks (the "metadata transfer" wait of Table 2).
     pub fn wait_for_step(&mut self, step: u64, interval: Duration, max_wait: Duration) -> Result<()> {
-        for &r in &self.sim_ranks.clone() {
+        for &r in &self.sim_ranks {
             let key = tensor_key(&self.field, r, step);
             self.client.poll_key(&key, interval, max_wait)?;
         }
@@ -47,7 +47,7 @@ impl DataLoader {
     /// Gather every owned tensor at `step`; `[C, N]` each.
     pub fn gather(&mut self, step: u64) -> Result<Vec<Tensor>> {
         let mut out = Vec::with_capacity(self.sim_ranks.len());
-        for &r in &self.sim_ranks.clone() {
+        for &r in &self.sim_ranks {
             out.push(self.client.get_tensor(&tensor_key(&self.field, r, step))?)
         }
         Ok(out)
@@ -96,7 +96,7 @@ impl DataLoader {
         Ok(Tensor {
             dtype: DType::F32,
             shape: vec![b, shape[0], shape[1]],
-            data,
+            data: data.into(),
         })
     }
 }

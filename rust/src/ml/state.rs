@@ -20,8 +20,10 @@ impl ParamState {
     /// Load the initial parameters exported by `aot.py`
     /// (`params_init.bin`) and zero moments.
     pub fn load_init(manifest: &Manifest, artifacts_dir: &Path) -> Result<ParamState> {
-        let bytes = std::fs::read(artifacts_dir.join("params_init.bin"))
-            .map_err(|e| Error::Parse(format!("params_init.bin: {e}")))?;
+        let bytes = crate::tensor::Bytes::from_vec(
+            std::fs::read(artifacts_dir.join("params_init.bin"))
+                .map_err(|e| Error::Parse(format!("params_init.bin: {e}")))?,
+        );
         if bytes.len() != manifest.model.n_params_total * 4 {
             return Err(Error::Parse(format!(
                 "params_init.bin is {} bytes, manifest wants {}",
@@ -35,10 +37,13 @@ impl ParamState {
         for row in &manifest.param_table {
             let start = row.offset * 4;
             let end = start + row.len * 4;
+            // Every parameter tensor is a view into the one file read —
+            // zero-copy load, and `train_step_inputs`' clones stay refcount
+            // bumps from here on.
             params.push(Tensor {
                 dtype: DType::F32,
                 shape: row.shape.clone(),
-                data: bytes[start..end].to_vec(),
+                data: bytes.slice(start..end),
             });
             m.push(Tensor::zeros(DType::F32, &row.shape));
             v.push(Tensor::zeros(DType::F32, &row.shape));

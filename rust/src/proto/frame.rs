@@ -1,4 +1,15 @@
 //! Length-prefixed framing over any `Read`/`Write` stream.
+//!
+//! Two zero-copy additions over the classic read/write pair:
+//!
+//! * [`read_frame_into`] reads a frame body into a caller-owned scratch
+//!   buffer, so a connection serving many small requests performs no
+//!   per-request allocation at all.  When the decoded message needs to
+//!   *retain* the body (a `put_tensor` payload), the caller hands the
+//!   scratch `Vec` over wholesale instead (see `db::server`).
+//! * [`begin_split_frame`]/[`end_split_frame`] write a frame as a small
+//!   copied header plus a borrowed payload slice, so a `get_tensor` reply
+//!   never re-materializes the payload in an output buffer.
 
 use std::io::{Read, Write};
 
@@ -20,8 +31,50 @@ pub fn write_frame<W: Write>(w: &mut W, body: &[u8]) -> Result<()> {
     Ok(())
 }
 
+/// Start a split frame in `buf`: clears it and reserves the 4-byte length
+/// prefix.  The caller appends the (small) header bytes, then finishes with
+/// [`end_split_frame`], which supplies the payload from its owner.
+pub fn begin_split_frame(buf: &mut Vec<u8>) {
+    buf.clear();
+    buf.extend_from_slice(&[0u8; 4]);
+}
+
+/// Finish a split frame started with [`begin_split_frame`]: patch the
+/// length prefix and emit `buf` then `payload` as two writes.  The payload
+/// goes straight from its owning buffer to the socket — the frame is never
+/// materialized contiguously.
+pub fn end_split_frame<W: Write>(w: &mut W, buf: &mut Vec<u8>, payload: &[u8]) -> Result<()> {
+    debug_assert!(buf.len() >= 4, "begin_split_frame not called");
+    let body_len = buf.len() - 4 + payload.len();
+    if body_len > MAX_FRAME {
+        return Err(Error::Protocol(format!("frame too large: {body_len} bytes")));
+    }
+    buf[..4].copy_from_slice(&(body_len as u32).to_le_bytes());
+    w.write_all(buf)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
 /// Read one frame body; `Ok(None)` on a clean EOF at a frame boundary.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    let mut body = Vec::new();
+    match read_frame_into(r, &mut body)? {
+        Some(_) => Ok(Some(body)),
+        None => Ok(None),
+    }
+}
+
+/// Read one frame body into `scratch` (resized to exactly the body length),
+/// returning that length; `Ok(None)` on a clean EOF at a frame boundary.
+/// Reusing one scratch buffer across requests amortizes the allocation away.
+///
+/// A socket read timeout *before the first byte* surfaces as the
+/// `WouldBlock`/`TimedOut` io error (the idle-poll signal the server loop
+/// retries on).  A timeout *mid-frame* is not retryable — bytes are already
+/// consumed, so retrying would desync the stream — and surfaces as a
+/// protocol error instead, closing the connection.
+pub fn read_frame_into<R: Read>(r: &mut R, scratch: &mut Vec<u8>) -> Result<Option<usize>> {
     let mut len_buf = [0u8; 4];
     // A clean shutdown arrives as EOF before any length byte.
     match r.read(&mut len_buf[..1])? {
@@ -29,14 +82,29 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
         1 => {}
         _ => unreachable!(),
     }
-    r.read_exact(&mut len_buf[1..])?;
+    read_exact_mid_frame(r, &mut len_buf[1..])?;
     let len = u32::from_le_bytes(len_buf) as usize;
     if len > MAX_FRAME {
         return Err(Error::Protocol(format!("frame too large: {len} bytes")));
     }
-    let mut body = vec![0u8; len];
-    r.read_exact(&mut body)?;
-    Ok(Some(body))
+    scratch.resize(len, 0);
+    read_exact_mid_frame(r, &mut scratch[..])?;
+    Ok(Some(len))
+}
+
+/// `read_exact` that converts a read-timeout into a non-retryable protocol
+/// error: once frame bytes have been consumed, a timeout means the stream
+/// position is lost.
+fn read_exact_mid_frame<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<()> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::WouldBlock
+            || e.kind() == std::io::ErrorKind::TimedOut
+        {
+            Error::Protocol("read timeout mid-frame (stream desynced)".into())
+        } else {
+            Error::Io(e)
+        }
+    })
 }
 
 #[cfg(test)]
@@ -55,6 +123,53 @@ mod tests {
         assert_eq!(read_frame(&mut c).unwrap().unwrap(), b"");
         assert_eq!(read_frame(&mut c).unwrap().unwrap(), vec![7u8; 1000]);
         assert!(read_frame(&mut c).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn read_into_reuses_scratch() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &[1u8; 64]).unwrap();
+        write_frame(&mut buf, &[2u8; 8]).unwrap();
+        let mut c = Cursor::new(buf);
+        let mut scratch = Vec::new();
+        assert_eq!(read_frame_into(&mut c, &mut scratch).unwrap(), Some(64));
+        assert_eq!(scratch, vec![1u8; 64]);
+        let cap = scratch.capacity();
+        assert_eq!(read_frame_into(&mut c, &mut scratch).unwrap(), Some(8));
+        assert_eq!(scratch, vec![2u8; 8]);
+        assert_eq!(scratch.capacity(), cap, "no reallocation for smaller frame");
+        assert_eq!(read_frame_into(&mut c, &mut scratch).unwrap(), None, "clean EOF");
+    }
+
+    #[test]
+    fn split_frame_matches_contiguous_write() {
+        let header = [9u8, 8, 7];
+        let payload = [1u8; 100];
+        let mut contiguous = Vec::new();
+        let mut whole: Vec<u8> = header.to_vec();
+        whole.extend_from_slice(&payload);
+        write_frame(&mut contiguous, &whole).unwrap();
+
+        let mut split = Vec::new();
+        let mut head_buf = Vec::new();
+        begin_split_frame(&mut head_buf);
+        head_buf.extend_from_slice(&header);
+        end_split_frame(&mut split, &mut head_buf, &payload).unwrap();
+        assert_eq!(split, contiguous, "split write is byte-identical");
+
+        let mut c = Cursor::new(split);
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), whole);
+    }
+
+    #[test]
+    fn split_frame_empty_payload() {
+        let mut out = Vec::new();
+        let mut head = Vec::new();
+        begin_split_frame(&mut head);
+        head.push(42);
+        end_split_frame(&mut out, &mut head, &[]).unwrap();
+        let mut c = Cursor::new(out);
+        assert_eq!(read_frame(&mut c).unwrap().unwrap(), vec![42]);
     }
 
     #[test]

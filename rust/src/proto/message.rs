@@ -4,9 +4,19 @@
 //! workflows use: tensor send/retrieve (`put_tensor`/`unpack_tensor`),
 //! metadata, model upload, and the RedisAI-style three-step inference
 //! (`put_tensor` → `run_model` → `unpack_tensor`).
+//!
+//! Tensor payloads are zero-copy in both directions:
+//!
+//! * decoding with [`Request::decode_shared`]/[`Response::decode_shared`]
+//!   yields tensors whose [`Bytes`] payload is a *view into the frame body*
+//!   (a refcount bump), not an owned copy;
+//! * encoding a tensor-carrying message can emit just the small header via
+//!   [`encode_put_tensor_header_into`]/[`encode_tensor_response_header_into`]
+//!   and hand the borrowed payload slice straight to
+//!   [`crate::proto::frame::end_split_frame`].
 
 use crate::error::{Error, Result};
-use crate::tensor::{DType, Tensor};
+use crate::tensor::{Bytes, DType, Tensor};
 
 /// Placement of a model execution inside the database (RedisAI semantics:
 /// the client names the device; the DB owns the device pool).
@@ -55,25 +65,48 @@ fn put_str(buf: &mut Vec<u8>, s: &str) {
     buf.extend_from_slice(s.as_bytes());
 }
 
-fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) {
+/// Everything of a wire tensor except the payload bytes.
+fn put_tensor_header(buf: &mut Vec<u8>, t: &Tensor) {
     buf.push(t.dtype.tag());
     buf.push(t.shape.len() as u8);
     for d in &t.shape {
         buf.extend_from_slice(&(*d as u32).to_le_bytes());
     }
     buf.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+}
+
+fn put_tensor(buf: &mut Vec<u8>, t: &Tensor) {
+    put_tensor_header(buf, t);
     buf.extend_from_slice(&t.data);
 }
 
-/// Byte-cursor used for decoding.
+/// Wire size of a length-prefixed string field.
+fn str_wire_size(s: &str) -> usize {
+    4 + s.len()
+}
+
+/// Wire size of a tensor field: dtype tag, ndim, dims, u64 payload length,
+/// payload bytes.
+fn tensor_wire_size(t: &Tensor) -> usize {
+    1 + 1 + 4 * t.shape.len() + 8 + t.data.len()
+}
+
+/// Byte-cursor used for decoding.  When constructed over a shared frame
+/// body ([`Cur::shared`]), tensor payloads decode as zero-copy views into
+/// that body instead of owned copies.
 struct Cur<'a> {
     b: &'a [u8],
     i: usize,
+    backing: Option<&'a Bytes>,
 }
 
 impl<'a> Cur<'a> {
     fn new(b: &'a [u8]) -> Self {
-        Cur { b, i: 0 }
+        Cur { b, i: 0, backing: None }
+    }
+
+    fn shared(body: &'a Bytes) -> Self {
+        Cur { b: body.as_slice(), i: 0, backing: Some(body) }
     }
 
     fn u8(&mut self) -> Result<u8> {
@@ -135,7 +168,14 @@ impl<'a> Cur<'a> {
         if len > crate::proto::MAX_FRAME {
             return Err(Error::Protocol("tensor payload too large".into()));
         }
-        let data = self.bytes(len)?.to_vec();
+        let start = self.i;
+        let raw = self.bytes(len)?;
+        // Zero-copy when the frame body is shared: the payload is a view
+        // into it, kept alive by refcount for as long as the tensor lives.
+        let data = match self.backing {
+            Some(body) => body.slice(start..start + len),
+            None => Bytes::copy_from_slice(raw),
+        };
         let t = Tensor { dtype, shape, data };
         t.validate()?;
         Ok(t)
@@ -153,14 +193,31 @@ impl<'a> Cur<'a> {
     }
 }
 
-/// Zero-clone encoding of a `PutTensor` request from a borrowed tensor —
-/// byte-identical to `Request::PutTensor { .. }.encode(..)` but without
-/// materializing an owned `Request` (saves a full payload copy on the
-/// client's hottest path; see EXPERIMENTS.md §Perf).
-pub fn encode_put_tensor_into(buf: &mut Vec<u8>, key: &str, t: &Tensor) {
+/// Encode everything of a `PutTensor` request except the payload bytes —
+/// the caller pairs this header with the borrowed payload slice via
+/// [`crate::proto::frame::end_split_frame`], so the client's hottest path
+/// never copies the payload at all.
+pub fn encode_put_tensor_header_into(buf: &mut Vec<u8>, key: &str, t: &Tensor) {
     buf.push(req_op::PUT_TENSOR);
     put_str(buf, key);
-    put_tensor(buf, t);
+    put_tensor_header(buf, t);
+}
+
+/// Encode everything of a tensor response except the payload bytes (the
+/// server's `get_tensor` reply path; pairs with `end_split_frame`).
+pub fn encode_tensor_response_header_into(buf: &mut Vec<u8>, t: &Tensor) {
+    buf.push(resp_op::TENSOR);
+    put_tensor_header(buf, t);
+}
+
+/// Contiguous encoding of a `PutTensor` request from a borrowed tensor —
+/// byte-identical to `Request::PutTensor { .. }.encode(..)` but without
+/// materializing an owned `Request`.  Prefer the split-frame path
+/// ([`encode_put_tensor_header_into`]) on hot paths; this remains for
+/// callers that need the full body in one buffer.
+pub fn encode_put_tensor_into(buf: &mut Vec<u8>, key: &str, t: &Tensor) {
+    encode_put_tensor_header_into(buf, key, t);
+    buf.extend_from_slice(&t.data);
 }
 
 // --- Request codec -----------------------------------------------------------
@@ -238,8 +295,28 @@ impl Request {
         }
     }
 
+    /// Decode from a borrowed body; tensor payloads are copied out.
     pub fn decode(body: &[u8]) -> Result<Request> {
-        let mut c = Cur::new(body);
+        Self::decode_cur(Cur::new(body))
+    }
+
+    /// Decode from a shared frame body: tensor payloads become views into
+    /// `body` (refcount bump, zero copy).  The caller hands ownership of
+    /// the frame buffer to the returned request's tensors; byte-identical
+    /// in result to [`Request::decode`].
+    pub fn decode_shared(body: &Bytes) -> Result<Request> {
+        Self::decode_cur(Cur::shared(body))
+    }
+
+    /// Whether decoding this frame body with [`Request::decode_shared`]
+    /// would retain a view of it beyond the request's execution (payload-
+    /// carrying ops).  The server uses this to choose between recycling its
+    /// scratch read buffer and handing the frame over to the store.
+    pub fn frame_holds_payload(body: &[u8]) -> bool {
+        body.first() == Some(&req_op::PUT_TENSOR)
+    }
+
+    fn decode_cur(mut c: Cur<'_>) -> Result<Request> {
         let op = c.u8()?;
         let req = match op {
             req_op::PUT_TENSOR => Request::PutTensor { key: c.str()?, tensor: c.tensor()? },
@@ -283,11 +360,31 @@ impl Request {
         Ok(req)
     }
 
-    /// Approximate wire size (used by the DES cost model and stats).
+    /// Exact wire size including the 4-byte frame prefix, computed
+    /// arithmetically (used by the DES cost model and stats; previously
+    /// this encoded the whole message — copying the full payload — just to
+    /// count bytes).
     pub fn wire_size(&self) -> usize {
-        let mut buf = Vec::new();
-        self.encode(&mut buf);
-        buf.len() + 4
+        let fields = match self {
+            Request::PutTensor { key, tensor } => str_wire_size(key) + tensor_wire_size(tensor),
+            Request::GetTensor { key }
+            | Request::DelTensor { key }
+            | Request::Exists { key }
+            | Request::GetMeta { key } => str_wire_size(key),
+            Request::PutMeta { key, value } => str_wire_size(key) + str_wire_size(value),
+            Request::ListKeys { prefix } => str_wire_size(prefix),
+            Request::PutModel { key, hlo_text } => str_wire_size(key) + str_wire_size(hlo_text),
+            Request::RunModel { key, in_keys, out_keys, device: _ } => {
+                str_wire_size(key)
+                    + 4
+                    + in_keys.iter().map(|k| str_wire_size(k)).sum::<usize>()
+                    + 4
+                    + out_keys.iter().map(|k| str_wire_size(k)).sum::<usize>()
+                    + 1
+            }
+            Request::Info | Request::FlushAll => 0,
+        };
+        4 + 1 + fields // frame prefix + opcode + fields
     }
 }
 
@@ -343,8 +440,18 @@ impl Response {
         }
     }
 
+    /// Decode from a borrowed body; tensor payloads are copied out.
     pub fn decode(body: &[u8]) -> Result<Response> {
-        let mut c = Cur::new(body);
+        Self::decode_cur(Cur::new(body))
+    }
+
+    /// Decode from a shared frame body: a tensor reply aliases `body`
+    /// instead of copying the payload (the client's `get_tensor` hot path).
+    pub fn decode_shared(body: &Bytes) -> Result<Response> {
+        Self::decode_cur(Cur::shared(body))
+    }
+
+    fn decode_cur(mut c: Cur<'_>) -> Result<Response> {
         let op = c.u8()?;
         let resp = match op {
             resp_op::OK => Response::Ok,

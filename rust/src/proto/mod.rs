@@ -7,24 +7,44 @@
 //! frame   := u32-LE body_len | body
 //! body    := u8 opcode | fields...
 //! string  := u32-LE len | utf8 bytes
-//! tensor  := u8 dtype | u8 ndim | u32-LE dims[ndim] | payload bytes
+//! tensor  := u8 dtype | u8 ndim | u32-LE dims[ndim] | u64-LE payload_len | payload bytes
 //! ```
 //!
 //! Requests and responses are symmetric frames.  The protocol is strictly
 //! request/response per connection (like RESP without pipelining; clients
 //! that want concurrency open more connections, exactly how the paper runs
 //! one SmartRedis client per simulation rank).
+//!
+//! ## Zero-copy data plane
+//!
+//! Tensor payloads never make an avoidable copy between the socket and the
+//! store (or back):
+//!
+//! * **Ingress** — the server reads each frame with
+//!   [`frame::read_frame_into`] into a per-connection scratch buffer.  For
+//!   payload-carrying frames ([`Request::frame_holds_payload`]) the buffer
+//!   is handed over wholesale as a shared [`crate::tensor::Bytes`] and
+//!   [`Request::decode_shared`] yields a tensor whose payload is a *view*
+//!   into it; the store then keeps that one allocation alive by refcount.
+//! * **Egress** — a tensor reply is written as a split frame
+//!   ([`frame::begin_split_frame`]/[`frame::end_split_frame`]): a few
+//!   header bytes are copied, the payload goes from the store's buffer
+//!   straight to the socket.
+//! * **Client** — `put_tensor` uses the same split-frame write from the
+//!   borrowed tensor; `get_tensor` decodes the reply with
+//!   [`Response::decode_shared`], aliasing the frame it just read.
 
 pub mod frame;
 pub mod message;
 
-pub use frame::{read_frame, write_frame, MAX_FRAME};
+pub use frame::{begin_split_frame, end_split_frame, read_frame, read_frame_into, write_frame,
+                MAX_FRAME};
 pub use message::{Device, Request, Response};
 
 #[cfg(test)]
 mod tests {
     use super::message::*;
-    use crate::tensor::{DType, Tensor};
+    use crate::tensor::{Bytes, DType, Tensor};
     use crate::util::propcheck::{check, Gen};
 
     fn roundtrip_req(r: &Request) -> Request {
@@ -39,11 +59,10 @@ mod tests {
         Response::decode(&buf).expect("decode")
     }
 
-    #[test]
-    fn request_roundtrips() {
+    fn all_request_variants() -> Vec<Request> {
         let t = Tensor::from_f32(&[2, 2], vec![1.0, -2.5, 3.0, 0.0]).unwrap();
-        let cases = vec![
-            Request::PutTensor { key: "f_rank0_step2".into(), tensor: t.clone() },
+        vec![
+            Request::PutTensor { key: "f_rank0_step2".into(), tensor: t },
             Request::GetTensor { key: "k".into() },
             Request::DelTensor { key: "k".into() },
             Request::Exists { key: "k".into() },
@@ -59,8 +78,12 @@ mod tests {
             },
             Request::Info,
             Request::FlushAll,
-        ];
-        for c in cases {
+        ]
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        for c in all_request_variants() {
             assert_eq!(roundtrip_req(&c), c);
         }
     }
@@ -84,6 +107,15 @@ mod tests {
     }
 
     #[test]
+    fn wire_size_is_exact_for_every_request_variant() {
+        for c in all_request_variants() {
+            let mut buf = Vec::new();
+            c.encode(&mut buf);
+            assert_eq!(c.wire_size(), buf.len() + 4, "wire_size mismatch for {c:?}");
+        }
+    }
+
+    #[test]
     fn borrowed_put_tensor_encoding_is_byte_identical() {
         let t = Tensor::from_f32(&[3, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
         let owned = Request::PutTensor { key: "k1".into(), tensor: t.clone() };
@@ -92,6 +124,59 @@ mod tests {
         let mut b = Vec::new();
         encode_put_tensor_into(&mut b, "k1", &t);
         assert_eq!(a, b);
+        // The split header + payload path concatenates to the same body.
+        let mut h = Vec::new();
+        encode_put_tensor_header_into(&mut h, "k1", &t);
+        h.extend_from_slice(&t.data);
+        assert_eq!(a, h);
+    }
+
+    #[test]
+    fn tensor_response_header_plus_payload_is_byte_identical() {
+        let t = Tensor::from_f32(&[4], vec![9.0, 8.0, 7.0, 6.0]).unwrap();
+        let mut whole = Vec::new();
+        Response::Tensor(t.clone()).encode(&mut whole);
+        let mut split = Vec::new();
+        encode_tensor_response_header_into(&mut split, &t);
+        split.extend_from_slice(&t.data);
+        assert_eq!(whole, split);
+    }
+
+    #[test]
+    fn shared_decode_aliases_frame_body() {
+        let t = Tensor::from_f32(&[8], (0..8).map(|i| i as f32).collect()).unwrap();
+        let r = Request::PutTensor { key: "k".into(), tensor: t.clone() };
+        let mut buf = Vec::new();
+        r.encode(&mut buf);
+        assert!(Request::frame_holds_payload(&buf));
+        let body = Bytes::from_vec(buf);
+        match Request::decode_shared(&body).unwrap() {
+            Request::PutTensor { tensor, .. } => {
+                assert!(tensor.data.shares_allocation(&body), "payload must view the frame");
+                assert_eq!(tensor, t, "view-backed decode is byte-identical");
+            }
+            other => panic!("unexpected decode {other:?}"),
+        }
+        assert!(!Request::frame_holds_payload(&{
+            let mut b = Vec::new();
+            Request::GetTensor { key: "k".into() }.encode(&mut b);
+            b
+        }));
+    }
+
+    #[test]
+    fn shared_response_decode_aliases_frame_body() {
+        let t = Tensor::from_f32(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let mut buf = Vec::new();
+        Response::Tensor(t.clone()).encode(&mut buf);
+        let body = Bytes::from_vec(buf);
+        match Response::decode_shared(&body).unwrap() {
+            Response::Tensor(got) => {
+                assert!(got.data.shares_allocation(&body));
+                assert_eq!(got, t);
+            }
+            other => panic!("unexpected decode {other:?}"),
+        }
     }
 
     #[test]
@@ -112,9 +197,30 @@ mod tests {
             let n: usize = shape.iter().product();
             let dt = *g.choose(&[DType::F32, DType::I32, DType::U8, DType::F64]);
             let data: Vec<u8> = (0..n * dt.size()).map(|_| g.u32() as u8).collect();
-            let t = Tensor { dtype: dt, shape, data };
+            let t = Tensor { dtype: dt, shape, data: data.into() };
             let r = Request::PutTensor { key: g.key(), tensor: t };
             assert_eq!(roundtrip_req(&r), r);
+        });
+    }
+
+    #[test]
+    fn prop_shared_decode_matches_owned_decode() {
+        // The aliasing decode must be observationally identical to the old
+        // owned decode for every payload it can carry.
+        check("proto shared vs owned decode", 200, |g: &mut Gen| {
+            let ndim = g.usize_in(0..=4);
+            let shape: Vec<usize> = (0..ndim).map(|_| g.usize_in(1..=8)).collect();
+            let n: usize = shape.iter().product();
+            let dt = *g.choose(&[DType::F32, DType::I32, DType::U8, DType::F64]);
+            let data: Vec<u8> = (0..n * dt.size()).map(|_| g.u32() as u8).collect();
+            let t = Tensor { dtype: dt, shape, data: data.into() };
+            let r = Request::PutTensor { key: g.key(), tensor: t };
+            let mut buf = Vec::new();
+            r.encode(&mut buf);
+            let owned = Request::decode(&buf).expect("owned decode");
+            let shared = Request::decode_shared(&Bytes::from_vec(buf)).expect("shared decode");
+            assert_eq!(owned, shared);
+            assert_eq!(owned, r);
         });
     }
 
@@ -125,6 +231,9 @@ mod tests {
             let bytes = g.vec(0..=64, |g| g.u32() as u8);
             let _ = Request::decode(&bytes);
             let _ = Response::decode(&bytes);
+            let shared = Bytes::from_vec(bytes);
+            let _ = Request::decode_shared(&shared);
+            let _ = Response::decode_shared(&shared);
         });
     }
 
@@ -148,6 +257,7 @@ mod tests {
                 buf[i] ^= g.u32() as u8;
             }
             let _ = Request::decode(&buf);
+            let _ = Request::decode_shared(&Bytes::from_vec(buf));
         });
     }
 }

@@ -244,5 +244,5 @@ pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
             data.copy_from_slice(&v);
         }
     }
-    Ok(Tensor { dtype, shape: dims, data })
+    Ok(Tensor { dtype, shape: dims, data: data.into() })
 }

@@ -85,16 +85,21 @@ impl MeshSampler {
 
     /// Sample the instantaneous (p, u, v, w) snapshot as the `[4, N]` f32
     /// training tensor (channel order matches `model.py`).
+    ///
+    /// Packs little-endian bytes directly into the wire payload: the buffer
+    /// built here is the exact allocation `put_tensor` sends and the
+    /// database stores — no intermediate `Vec<f32>` or repack copy.
     pub fn snapshot(&self, flow: &ChannelFlow) -> Tensor {
         let n = self.n();
         let g = &flow.grid;
-        let mut out = Vec::with_capacity(4 * n);
+        let mut out = Vec::with_capacity(4 * 4 * n);
         for field in [&flow.p, &flow.u, &flow.v, &flow.w] {
             for pt in &self.coords {
-                out.push(Self::interp(g, field, *pt) as f32);
+                out.extend_from_slice(&(Self::interp(g, field, *pt) as f32).to_le_bytes());
             }
         }
-        Tensor::from_f32(&[4, n], out).expect("shape consistent by construction")
+        Tensor::from_le_bytes(crate::tensor::DType::F32, &[4, n], out)
+            .expect("shape consistent by construction")
     }
 }
 

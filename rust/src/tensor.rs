@@ -1,10 +1,18 @@
 //! Dense tensor value type carried through the database and the wire
 //! protocol.  Row-major, little-endian payload; the dtype set matches what
 //! the AOT artifacts exchange (f32 everywhere, i32 for the step counter).
+//!
+//! The payload is a shared [`Bytes`] buffer: cloning a `Tensor` (and
+//! therefore every `Store::get_tensor`, dataloader gather, and model-input
+//! fan-out in the crate) bumps a refcount instead of copying megabytes.
+//! `Request::decode_shared` goes further and makes the payload a *view into
+//! the wire frame itself*, so a `put_tensor` travels socket → store with a
+//! single payload allocation end to end.
 
 use std::fmt;
 
 use crate::error::{Error, Result};
+pub use crate::util::bytes::Bytes;
 
 /// Element type of a [`Tensor`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -68,11 +76,13 @@ impl fmt::Display for DType {
 }
 
 /// A dense, row-major tensor (shape + raw little-endian payload).
+///
+/// Clones are cheap: the payload is shared by refcount, never deep-copied.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     pub dtype: DType,
     pub shape: Vec<usize>,
-    pub data: Vec<u8>,
+    pub data: Bytes,
 }
 
 impl Tensor {
@@ -95,8 +105,16 @@ impl Tensor {
         Tensor {
             dtype,
             shape: shape.to_vec(),
-            data: vec![0u8; n * dtype.size()],
+            data: Bytes::from_vec(vec![0u8; n * dtype.size()]),
         }
+    }
+
+    /// Build from a raw little-endian payload, taking ownership without a
+    /// copy when handed a `Vec<u8>` or an existing [`Bytes`] view.
+    pub fn from_le_bytes(dtype: DType, shape: &[usize], data: impl Into<Bytes>) -> Result<Tensor> {
+        let t = Tensor { dtype, shape: shape.to_vec(), data: data.into() };
+        t.validate()?;
+        Ok(t)
     }
 
     pub fn from_f32(shape: &[usize], values: Vec<f32>) -> Result<Tensor> {
@@ -113,7 +131,7 @@ impl Tensor {
         for v in values {
             data.extend_from_slice(&v.to_le_bytes());
         }
-        Ok(Tensor { dtype: DType::F32, shape: shape.to_vec(), data })
+        Ok(Tensor { dtype: DType::F32, shape: shape.to_vec(), data: Bytes::from_vec(data) })
     }
 
     pub fn from_i32(shape: &[usize], values: Vec<i32>) -> Result<Tensor> {
@@ -130,7 +148,7 @@ impl Tensor {
         for v in values {
             data.extend_from_slice(&v.to_le_bytes());
         }
-        Ok(Tensor { dtype: DType::I32, shape: shape.to_vec(), data })
+        Ok(Tensor { dtype: DType::I32, shape: shape.to_vec(), data: Bytes::from_vec(data) })
     }
 
     pub fn scalar_f32(v: f32) -> Tensor {
@@ -252,8 +270,27 @@ mod tests {
         assert_eq!(t.nbytes(), 128);
         t.validate().unwrap();
         let mut bad = t.clone();
-        bad.data.pop();
+        bad.data = bad.data.slice(0..bad.data.len() - 1);
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn clone_shares_payload_allocation() {
+        let t = Tensor::from_f32(&[4], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let c = t.clone();
+        assert!(c.data.shares_allocation(&t.data), "clone must not deep-copy");
+        assert_eq!(c.data.as_ptr(), t.data.as_ptr());
+        assert_eq!(c, t);
+    }
+
+    #[test]
+    fn from_le_bytes_takes_ownership() {
+        let raw: Vec<u8> = 1.5f32.to_le_bytes().to_vec();
+        let ptr = raw.as_ptr();
+        let t = Tensor::from_le_bytes(DType::F32, &[1], raw).unwrap();
+        assert_eq!(t.data.as_ptr(), ptr, "no copy on ingest");
+        assert_eq!(t.to_f32().unwrap(), vec![1.5]);
+        assert!(Tensor::from_le_bytes(DType::F32, &[2], vec![0u8; 4]).is_err());
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! Cheap-to-clone shared byte buffer backing tensor payloads.
+//!
+//! The zero-copy data plane (see [`crate::proto`] and [`crate::db::store`])
+//! needs one payload allocation to be visible from several places at once:
+//! the frame body read off a socket, the tensor stored in the database, and
+//! every outstanding `get_tensor` result.  `Bytes` is an `Arc`-backed,
+//! immutable byte buffer with an offset/len view — cloning or slicing it is
+//! a refcount bump, never a memcpy.  Overwriting or deleting a store entry
+//! drops one reference; readers still holding a view keep the old
+//! allocation alive and fully valid (no torn reads, no use-after-free).
+
+use std::fmt;
+use std::ops::{Deref, Range};
+use std::sync::Arc;
+
+/// An immutable, reference-counted byte buffer view.
+#[derive(Clone)]
+pub struct Bytes {
+    buf: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
+
+impl Bytes {
+    /// An empty buffer.
+    pub fn new() -> Bytes {
+        Bytes::from_vec(Vec::new())
+    }
+
+    /// Take ownership of a `Vec` without copying its contents.
+    pub fn from_vec(v: Vec<u8>) -> Bytes {
+        let len = v.len();
+        Bytes { buf: Arc::new(v), off: 0, len }
+    }
+
+    /// Copy a slice into a fresh allocation (the non-zero-copy ingress).
+    pub fn copy_from_slice(s: &[u8]) -> Bytes {
+        Bytes::from_vec(s.to_vec())
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    /// A sub-view over `range` (relative to this view) sharing the same
+    /// backing allocation — a refcount bump, no copy.
+    ///
+    /// Panics if the range is out of bounds, mirroring slice indexing.
+    pub fn slice(&self, range: Range<usize>) -> Bytes {
+        assert!(
+            range.start <= range.end && range.end <= self.len,
+            "slice {range:?} out of range for Bytes of len {}",
+            self.len
+        );
+        Bytes {
+            buf: Arc::clone(&self.buf),
+            off: self.off + range.start,
+            len: range.end - range.start,
+        }
+    }
+
+    /// Whether two views share the same backing allocation.  This is the
+    /// observable "no deep copy happened" property the store tests assert.
+    pub fn shares_allocation(&self, other: &Bytes) -> bool {
+        Arc::ptr_eq(&self.buf, &other.buf)
+    }
+
+    /// Copy the viewed bytes out into an owned `Vec`.
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl Default for Bytes {
+    fn default() -> Bytes {
+        Bytes::new()
+    }
+}
+
+impl Deref for Bytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Bytes {
+        Bytes::from_vec(v)
+    }
+}
+
+impl From<&[u8]> for Bytes {
+    fn from(s: &[u8]) -> Bytes {
+        Bytes::copy_from_slice(s)
+    }
+}
+
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Bytes) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Bytes {}
+
+impl PartialEq<[u8]> for Bytes {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<Vec<u8>> for Bytes {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == &other[..]
+    }
+}
+
+impl fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Payloads run to tens of MB; show shape not contents.
+        write!(f, "Bytes({} bytes @ +{})", self.len, self.off)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clone_is_refcount_not_copy() {
+        let a = Bytes::from_vec(vec![1, 2, 3, 4]);
+        let b = a.clone();
+        assert!(a.shares_allocation(&b));
+        assert_eq!(a.as_ptr(), b.as_ptr());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn slice_views_share_and_window() {
+        let a = Bytes::from_vec((0..10).collect());
+        let mid = a.slice(2..7);
+        assert_eq!(&mid[..], &[2, 3, 4, 5, 6]);
+        assert!(mid.shares_allocation(&a));
+        let inner = mid.slice(1..3);
+        assert_eq!(&inner[..], &[3, 4]);
+        assert!(inner.shares_allocation(&a));
+        assert_eq!(a.slice(0..0).len(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_slice_panics() {
+        Bytes::from_vec(vec![0; 4]).slice(2..6);
+    }
+
+    #[test]
+    fn view_outlives_other_handles() {
+        let v = Bytes::from_vec(vec![7; 32]);
+        let view = v.slice(8..16);
+        drop(v);
+        assert_eq!(&view[..], &[7; 8]);
+    }
+
+    #[test]
+    fn equality_is_by_content() {
+        let a = Bytes::from_vec(vec![1, 2, 3]);
+        let b = Bytes::copy_from_slice(&[1, 2, 3]);
+        assert!(!a.shares_allocation(&b));
+        assert_eq!(a, b);
+        assert_eq!(a, vec![1, 2, 3]);
+    }
+}

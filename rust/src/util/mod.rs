@@ -2,6 +2,7 @@
 //! harness, human formatting.  The build environment is offline, so the
 //! substrates a crates.io project would pull in are implemented here.
 
+pub mod bytes;
 pub mod cli;
 pub mod fmt;
 pub mod json;

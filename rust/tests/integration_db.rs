@@ -153,10 +153,39 @@ fn large_tensor_roundtrip() {
     let payload = Tensor {
         dtype: DType::F32,
         shape: vec![n],
-        data: (0..4 * n).map(|i| (i % 251) as u8).collect(),
+        data: (0..4 * n).map(|i| (i % 251) as u8).collect::<Vec<u8>>().into(),
     };
     c.put_tensor("big", &payload).unwrap();
     assert_eq!(c.get_tensor("big").unwrap().data, payload.data);
+}
+
+#[test]
+fn server_store_holds_client_payload_without_copy() {
+    // The zero-copy ingress claim, observed through the co-located store
+    // handle: after a TCP put, two in-process gets share one allocation.
+    let server = start(Engine::Redis);
+    let mut c = Client::connect(server.addr).unwrap();
+    c.put_tensor("z", &t((0..4096).map(|i| i as f32).collect())).unwrap();
+    let a = server.store().get_tensor("z").unwrap();
+    let b = server.store().get_tensor("z").unwrap();
+    assert!(a.data.shares_allocation(&b.data), "store hands out views, not copies");
+    assert_eq!(a.data.as_ptr(), b.data.as_ptr());
+    assert_eq!(a.to_f32().unwrap()[4095], 4095.0);
+}
+
+#[test]
+fn reader_keeps_old_payload_across_overwrite_over_tcp() {
+    let server = start(Engine::KeyDb);
+    let mut writer = Client::connect(server.addr).unwrap();
+    writer.put_tensor("k", &t(vec![1.0; 512])).unwrap();
+    // A reader fetches, then the key is overwritten and deleted; the
+    // fetched tensor must stay byte-valid (it owns a refcount on the old
+    // buffer).
+    let mut reader = Client::connect(server.addr).unwrap();
+    let old = reader.get_tensor("k").unwrap();
+    writer.put_tensor("k", &t(vec![2.0; 512])).unwrap();
+    writer.del_tensor("k").unwrap();
+    assert_eq!(old.to_f32().unwrap(), vec![1.0; 512]);
 }
 
 #[test]

@@ -1,0 +1,283 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The build environment for this repository has no PJRT shared library, so
+//! this crate provides the exact API surface `situ::runtime` consumes:
+//! enough for the whole crate (database, protocol, client, store, benches)
+//! to build and run.  `Literal` is fully functional — it is a plain
+//! host-memory container — while `PjRtClient::compile` returns a clear
+//! runtime error, so every in-database model execution path degrades to an
+//! explicit `Error::Xla` instead of a link failure.  Swap this path
+//! dependency for the real `xla` bindings to enable execution.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real bindings' stringly-typed errors.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+/// The name the real bindings export (downstream code writes `xla::Error`).
+pub use self::XlaError as Error;
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+/// Element types the AOT artifacts exchange (subset of XLA's set, plus a
+/// few extras so downstream `match` arms keep a live catch-all).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    F16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    fn size(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::F16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Native host types `Literal::to_vec` can decode into.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(b: &[u8]) -> Self {
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for f64 {
+    const TY: ElementType = ElementType::F64;
+    fn from_le(b: &[u8]) -> Self {
+        f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(b: &[u8]) -> Self {
+        i32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for u8 {
+    const TY: ElementType = ElementType::U8;
+    fn from_le(b: &[u8]) -> Self {
+        b[0]
+    }
+}
+
+/// Array shape (element type + dims) of a [`Literal`].
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host-memory tensor literal: little-endian row-major bytes plus shape.
+/// Fully functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    shape: ArrayShape,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        untyped_data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if n * ty.size() != untyped_data.len() {
+            return Err(XlaError(format!(
+                "literal payload {} bytes does not match {:?} x {:?}",
+                untyped_data.len(),
+                dims,
+                ty
+            )));
+        }
+        Ok(Literal {
+            shape: ArrayShape { ty, dims: dims.iter().map(|d| *d as i64).collect() },
+            data: untyped_data.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(self.shape.clone())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.shape.ty != T::TY {
+            return Err(XlaError(format!(
+                "literal is {:?}, asked for {:?}",
+                self.shape.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(self.shape.ty.size())
+            .map(T::from_le)
+            .collect())
+    }
+
+    /// Destructure a tuple literal.  Stub literals are always arrays, and
+    /// nothing can execute to produce a tuple, so this is unreachable in
+    /// practice; it errors rather than panics to keep the contract total.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(XlaError("stub literal is not a tuple".into()))
+    }
+
+    pub fn raw_data(&self) -> &[u8] {
+        &self.data
+    }
+}
+
+/// Parsed HLO module (the stub stores the text verbatim).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError(format!("read {}: {e}", path.display())))?;
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// A computation handle built from an [`HloModuleProto`].
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+
+    pub fn proto(&self) -> &HloModuleProto {
+        &self.proto
+    }
+}
+
+/// PJRT client handle.  Construction succeeds (so the executor thread and
+/// every data-plane component come up); compilation reports the stub.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError(
+            "xla stub: PJRT is unavailable in this build; model execution is disabled \
+             (replace rust/vendor/xla with the real bindings to enable it)"
+                .into(),
+        ))
+    }
+}
+
+/// Compiled executable handle.  Unconstructible through the stub client;
+/// the type exists so downstream signatures compile unchanged.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError("xla stub: execution unavailable".into()))
+    }
+}
+
+/// Device buffer handle returned by an execution.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError("xla stub: no device buffers exist".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data: Vec<u8> = [1.0f32, -2.5, 3.25]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let lit = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &data)
+            .unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.25]);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(shape.dims(), &[3]);
+        assert!(lit.to_vec::<i32>().is_err(), "dtype mismatch rejected");
+    }
+
+    #[test]
+    fn literal_rejects_size_mismatch() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 7])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn client_comes_up_but_compile_reports_stub() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
