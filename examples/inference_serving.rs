@@ -11,7 +11,7 @@
 use std::time::Duration;
 
 use situ::ai::ModelRuntime;
-use situ::client::{tensor_key, Client};
+use situ::client::{tensor_key, Client, DataStore, Pipeline};
 use situ::db::{DbServer, ServerConfig};
 use situ::runtime::Manifest;
 use situ::sim::cfd::{ChannelFlow, Grid, MeshSampler};
@@ -74,16 +74,25 @@ fn main() -> situ::Result<()> {
                 let in_key = tensor_key("snap", rank, step as u64);
                 let z_key = tensor_key("latent", rank, step as u64);
                 let sw = Stopwatch::start();
-                c.put_tensor(&in_key, snap)?;
+                // The whole serving step — send input, run the encoder,
+                // retrieve the latent, drop the raw snapshot — is one
+                // pipelined frame instead of four round trips.
                 let mut keys = enc_params.clone();
                 keys.push(in_key.clone());
-                c.run_model("encoder", &keys, &[z_key.clone()], device)?;
-                let z = c.get_tensor(&z_key)?;
+                let mut pipe = Pipeline::new();
+                pipe.put_tensor(&in_key, snap)
+                    .run_model("encoder", &keys, &[z_key.clone()], device)
+                    .get_tensor(&z_key)
+                    .del_tensor(&in_key);
+                let mut results = c.execute(pipe)?;
+                let z = results.remove(2).expect_tensor(&z_key)?;
+                for r in results {
+                    // put, run, del all report Ok (del: the key existed).
+                    r.expect_ok()?;
+                }
                 lat.add(sw.stop());
                 in_bytes += snap.nbytes();
                 out_bytes += z.nbytes();
-                // The raw snapshot is dropped; only the latent is kept.
-                c.del_tensor(&in_key)?;
             }
             Ok((lat, in_bytes, out_bytes))
         }));

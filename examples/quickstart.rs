@@ -1,36 +1,74 @@
-//! Quickstart: the paper's "one line per operation" coupling claim.
+//! Quickstart: the paper's "one line per operation" coupling claim, written
+//! once against the [`DataStore`] trait and run against *both* deployments.
 //!
-//! Launches a co-located database, connects a client, sends and retrieves a
-//! tensor, uploads a model and runs in-database inference — the complete
-//! SmartRedis-analogue surface in a dozen lines of user code.
+//! Launches a co-located database and a 2-shard cluster, drives the
+//! identical workflow through `dyn DataStore` on each, pipelines a
+//! multi-tensor publish into one round trip, and (when artifacts are built)
+//! uploads a model and runs in-database inference.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use situ::client::Client;
+use situ::client::{Client, ClusterClient, DataStore, Pipeline, PollConfig};
 use situ::db::{DbServer, ServerConfig};
 use situ::proto::Device;
 use situ::tensor::Tensor;
 
-fn main() -> situ::Result<()> {
-    // -- deployment: one co-located database -----------------------------
-    let server = DbServer::start(ServerConfig::default())?;
-    println!("database up at {} (engine={})", server.addr, server.config.engine.name());
-
+/// The whole coupling workflow, deployment-agnostic: the same function
+/// serves the co-located single database and the sharded cluster.
+fn demo(store: &mut dyn DataStore, label: &str) -> situ::Result<()> {
     // -- the one-line client API ------------------------------------------
-    let mut client = Client::connect(server.addr)?; // 1 line: init
     let field = Tensor::from_f32(&[4, 8], (0..32).map(|i| i as f32).collect())?;
-    client.put_tensor("field_rank0_step0", &field)?; // 1 line: send
-    let back = client.get_tensor("field_rank0_step0")?; // 1 line: retrieve
+    store.put_tensor("field_rank0_step0", &field)?; // 1 line: send
+    let back = store.get_tensor("field_rank0_step0")?; // 1 line: retrieve
     assert_eq!(back, field);
-    println!("send/retrieve round trip OK ({} bytes)", field.nbytes());
+
+    // -- pipelined publish: N tensors + metadata, one round trip ----------
+    let mut pipe = Pipeline::new();
+    for rank in 1..4 {
+        pipe.put_tensor(&situ::client::tensor_key("field", rank, 0), &field);
+    }
+    pipe.put_meta("latest_step", "0");
+    for r in store.execute(pipe)? {
+        r.expect_ok()?;
+    }
+
+    // -- batched gather + server-side wait --------------------------------
+    let keys: Vec<String> = (0..4).map(|r| situ::client::tensor_key("field", r, 0)).collect();
+    store.poll_keys(&keys, &PollConfig::default())?; // blocks server-side
+    let gathered = store.mget_tensors(&keys)?; // one frame per shard
+    assert_eq!(gathered.len(), 4);
 
     // -- metadata ----------------------------------------------------------
-    client.put_meta("latest_step", "0")?;
-    println!("latest_step = {:?}", client.get_meta("latest_step")?);
+    println!("[{label}] latest_step = {:?}", store.get_meta("latest_step")?);
+
+    let info = store.info()?;
+    println!(
+        "[{label}] db: {} keys, {} bytes, {} ops (engine {})",
+        info.keys, info.bytes, info.ops, info.engine
+    );
+    store.flush_all()?;
+    Ok(())
+}
+
+fn main() -> situ::Result<()> {
+    // -- deployment A: one co-located database -----------------------------
+    let server = DbServer::start(ServerConfig::default())?;
+    println!("co-located database up at {} (engine={})", server.addr, server.config.engine.name());
+    let mut single = Client::connect(server.addr)?;
+    demo(&mut single, "co-located")?;
+
+    // -- deployment B: a 2-shard clustered database ------------------------
+    let shard_cfg = ServerConfig { with_models: false, ..Default::default() };
+    let s1 = DbServer::start(shard_cfg.clone())?;
+    let s2 = DbServer::start(shard_cfg)?;
+    println!("clustered database up at {} + {}", s1.addr, s2.addr);
+    let mut cluster = ClusterClient::connect(&[s1.addr, s2.addr])?;
+    demo(&mut cluster, "clustered")?; // same code, different deployment
 
     // -- in-database inference (RedisAI-analogue, 3 lines) ----------------
     let artifacts = situ::db::server::artifacts_dir();
     if artifacts.join("resnet_lite_b1.hlo.txt").exists() {
+        let mut client = single;
         client.put_model_from_file("resnet", &artifacts.join("resnet_lite_b1.hlo.txt"))?;
         let x = Tensor::from_f32(&[1, 3, 64, 64], vec![0.1; 3 * 64 * 64])?;
         client.put_tensor("img", &x)?; // step 1: send input
@@ -41,8 +79,5 @@ fn main() -> situ::Result<()> {
     } else {
         println!("(artifacts not built — run `make artifacts` to enable the inference demo)");
     }
-
-    let (keys, bytes, ops, models, _) = client.info()?;
-    println!("db: {keys} keys, {bytes} bytes, {ops} ops, {models} models");
     Ok(())
 }

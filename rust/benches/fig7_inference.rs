@@ -25,6 +25,7 @@ fn main() {
         return;
     }
     let server = DbServer::start(ServerConfig::default()).expect("server");
+    use situ::client::DataStore;
     let mut c = situ::client::Client::connect(server.addr).expect("client");
     let exec = Executor::new().expect("executor");
 

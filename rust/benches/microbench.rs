@@ -1,12 +1,17 @@
 //! Microbenchmarks of the framework hot paths (the §Perf instrument):
-//! protocol codec, store ops, DES event rate, literal conversion, and the
-//! end-to-end TCP round trip.  Before/after numbers live in
-//! EXPERIMENTS.md §Perf; the zero-copy data-plane sweep (1–64 MiB put/get)
-//! is recorded in BENCH_PR1.json — set `SITU_BENCH_JSON=path.json` to dump
-//! machine-readable results.
+//! protocol codec, store ops, DES event rate, literal conversion, the
+//! end-to-end TCP round trip, and the batched-vs-sequential gather
+//! comparison (round-trip counts from the server's frame counter).
+//! Before/after numbers live in EXPERIMENTS.md §Perf; the zero-copy sweep
+//! is recorded in BENCH_PR1.json and the gather round-trip comparison in
+//! BENCH_PR2.json — set `SITU_BENCH_JSON=path.json` to dump
+//! machine-readable results, `SITU_BENCH_SMOKE=1` to run every benchmark
+//! for a single iteration (the CI wiring that keeps this binary compiling
+//! and running).
 
 use std::time::Instant;
 
+use situ::client::{DataStore, Pipeline};
 use situ::cluster::des::Server;
 use situ::db::Store;
 use situ::proto::{Request, Response};
@@ -22,14 +27,20 @@ struct BenchResult {
     bytes_per_s: f64,
 }
 
+fn smoke() -> bool {
+    std::env::var("SITU_BENCH_SMOKE").is_ok()
+}
+
 fn bench(
     name: &str,
     table: &mut Table,
     results: &mut Vec<BenchResult>,
     mut f: impl FnMut() -> usize,
 ) {
-    // Warm up, then time enough iterations for >=0.2s.
+    // Warm up, then time enough iterations for >=0.2s (smoke mode: one
+    // iteration, no warm-up — CI checks the paths run, not their speed).
     let mut iters = 1usize;
+    let smoke = smoke();
     loop {
         let t0 = Instant::now();
         let mut work = 0usize;
@@ -37,7 +48,7 @@ fn bench(
             work += f();
         }
         let dt = t0.elapsed().as_secs_f64();
-        if dt > 0.2 || iters > 1 << 22 {
+        if smoke || dt > 0.2 || iters > 1 << 22 {
             let per = dt / iters as f64;
             let bytes_per_s = work as f64 / dt;
             table.row(&[
@@ -176,10 +187,68 @@ fn main() {
         });
     }
 
+    // Batched vs sequential gather (the PR-2 pipelining numbers): one ML
+    // rank fetching its 6 per-epoch snapshots (paper Table 2) as 6
+    // get_tensor round trips vs a single MGetTensors frame, plus the
+    // pipelined publish.  Round-trip counts come from the server's frame
+    // counter, so the "1 vs N" claim is measured, not asserted.
+    let gather_n = 6usize;
+    let gather_keys: Vec<String> = (0..gather_n)
+        .map(|r| situ::client::tensor_key("bench", r, 0))
+        .collect();
+    for k in &gather_keys {
+        client.put_tensor(k, &payload).unwrap();
+    }
+    let count_frames = |server: &situ::db::DbServer| {
+        server.store().counters.frames.load(std::sync::atomic::Ordering::Relaxed)
+    };
+    let f0 = count_frames(&server);
+    for k in &gather_keys {
+        client.get_tensor(k).unwrap();
+    }
+    let gather_seq_frames = count_frames(&server) - f0;
+    let f0 = count_frames(&server);
+    client.mget_tensors(&gather_keys).unwrap();
+    let gather_batched_frames = count_frames(&server) - f0;
+    bench("gather x6 sequential 256KB", &mut table, &mut results, || {
+        gather_keys
+            .iter()
+            .map(|k| client.get_tensor(k).unwrap().nbytes())
+            .sum()
+    });
+    bench("gather x6 mget 256KB", &mut table, &mut results, || {
+        client
+            .mget_tensors(&gather_keys)
+            .unwrap()
+            .iter()
+            .map(|t| t.nbytes())
+            .sum()
+    });
+    bench("publish x6 pipeline 256KB", &mut table, &mut results, || {
+        let mut pipe = Pipeline::new();
+        for k in &gather_keys {
+            pipe.put_tensor(k, &payload);
+        }
+        pipe.put_meta("latest_step", "0");
+        for r in client.execute(pipe).unwrap() {
+            r.expect_ok().unwrap();
+        }
+        gather_n * payload.nbytes()
+    });
+
     table.print();
+    println!(
+        "gather round trips for {gather_n} keys: sequential={gather_seq_frames} \
+         batched={gather_batched_frames}"
+    );
 
     if let Ok(path) = std::env::var("SITU_BENCH_JSON") {
-        let mut s = String::from("{\n  \"bench\": \"microbench\",\n  \"results\": [\n");
+        let mut s = String::from("{\n  \"bench\": \"microbench\",\n");
+        s.push_str(&format!(
+            "  \"gather_round_trips\": {{\"keys\": {gather_n}, \"sequential\": \
+             {gather_seq_frames}, \"batched\": {gather_batched_frames}}},\n"
+        ));
+        s.push_str("  \"results\": [\n");
         for (i, r) in results.iter().enumerate() {
             s.push_str(&format!(
                 "    {{\"name\": \"{}\", \"per_op_s\": {:.9}, \"ops_per_s\": {:.3}, \"bytes_per_s\": {:.3}}}{}\n",

@@ -2,18 +2,54 @@
 //!
 //! The paper's integration claim is that coupling a simulation to the
 //! framework costs *one line per operation*: initialize a client, send a
-//! tensor, retrieve a tensor, run a model.  This module keeps that surface:
+//! tensor, retrieve a tensor, run a model.  This module keeps that surface
+//! and makes it **deployment-portable**: the [`DataStore`] trait captures
+//! the full operation set (tensors, metadata, polling, models, stats), and
+//! both [`Client`] (one co-located database) and [`ClusterClient`]
+//! (redis-cluster-style hash-slot routing across shards) implement it.
+//! Dataloaders, trainers, and examples are written once against the trait
+//! and run unchanged on either deployment.
 //!
 //! ```no_run
-//! use situ::client::Client;
+//! use situ::client::{Client, DataStore};
 //! use situ::tensor::Tensor;
 //! let mut c = Client::connect("127.0.0.1:7700".parse().unwrap()).unwrap();
 //! c.put_tensor("field_rank0_step2", &Tensor::from_f32(&[4], vec![0.;4]).unwrap()).unwrap();
 //! let t = c.get_tensor("field_rank0_step2").unwrap();
 //! ```
 //!
-//! [`ClusterClient`] adds redis-cluster-style routing across sharded
-//! databases for the clustered deployment.
+//! ## Pipelining
+//!
+//! Per-epoch training overhead is dominated by round trips (paper Table 2:
+//! each ML rank fetches 6 tensors per epoch, polling each key first).  Three
+//! batched paths collapse those loops to one request frame each:
+//!
+//! * [`Pipeline`] builds an ordered command batch executed by
+//!   [`DataStore::execute`] — one frame out, one [`Response`] per command
+//!   back, errors reported per entry;
+//! * [`DataStore::mget_tensors`] gathers many tensors in one round trip,
+//!   with every payload in the reply aliasing one frame allocation
+//!   (zero-copy, as in the single-tensor path);
+//! * [`DataStore::poll_keys`] waits **server-side** until all keys exist,
+//!   replacing the old client busy-poll of `exists` requests; the probe
+//!   interval backs off exponentially from [`PollConfig::initial`] up to
+//!   [`PollConfig::cap`].
+//!
+//! ```no_run
+//! use situ::client::{Client, DataStore, Pipeline};
+//! use situ::tensor::Tensor;
+//! let mut c = Client::connect("127.0.0.1:7700".parse().unwrap()).unwrap();
+//! let t = Tensor::from_f32(&[4], vec![0.; 4]).unwrap();
+//! let mut pipe = Pipeline::new();
+//! pipe.put_tensor("a", &t).put_tensor("b", &t).put_meta("latest_step", "0");
+//! for r in c.execute(pipe).unwrap() {
+//!     r.expect_ok().unwrap();
+//! }
+//! ```
+//!
+//! On a [`ClusterClient`], single-key commands route to the owning shard;
+//! a pipeline is partitioned per shard and results are reassembled in
+//! submission order.
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpStream};
@@ -21,14 +57,219 @@ use std::time::Duration;
 
 use crate::db::cluster::SlotMap;
 use crate::error::{Error, Result};
-use crate::proto::frame::{begin_split_frame, end_split_frame, read_frame, write_frame};
-use crate::proto::{Device, Request, Response};
+use crate::proto::frame::{begin_split_frame, end_split_frame, read_frame, FrameSink};
+use crate::proto::{message, DbInfo, Device, Request, Response};
 use crate::tensor::{Bytes, Tensor};
 
 /// Key scheme used across the framework: tensors are unique per rank and
 /// step so nothing is overwritten (paper §2.2).
 pub fn tensor_key(field: &str, rank: usize, step: u64) -> String {
     format!("{field}_rank{rank}_step{step}")
+}
+
+/// Reject oversized batches *before* streaming them: the server's decoder
+/// enforces [`crate::proto::MAX_BATCH`] too, but failing client-side avoids
+/// shipping a multi-gigabyte frame only to get a decode error back.
+fn check_batch_len(n: usize) -> Result<()> {
+    if n > crate::proto::MAX_BATCH {
+        return Err(Error::Invalid(format!(
+            "batch of {n} entries exceeds MAX_BATCH ({})",
+            crate::proto::MAX_BATCH
+        )));
+    }
+    Ok(())
+}
+
+/// Polling discipline for [`DataStore::poll_key`]/[`DataStore::poll_keys`]:
+/// the probe interval starts at `initial` and doubles up to `cap` (the
+/// knob that replaced the old fixed busy-poll interval), giving up after
+/// `max_wait`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PollConfig {
+    /// First probe interval.
+    pub initial: Duration,
+    /// Ceiling the exponential backoff saturates at.
+    pub cap: Duration,
+    /// Total wait budget before `Error::Timeout`.
+    pub max_wait: Duration,
+}
+
+impl Default for PollConfig {
+    fn default() -> Self {
+        PollConfig {
+            initial: Duration::from_micros(500),
+            cap: Duration::from_millis(20),
+            max_wait: Duration::from_secs(120),
+        }
+    }
+}
+
+impl PollConfig {
+    pub fn new(initial: Duration, cap: Duration, max_wait: Duration) -> PollConfig {
+        PollConfig { initial, cap, max_wait }
+    }
+
+    /// Default backoff shape with a custom total budget.
+    pub fn with_max_wait(max_wait: Duration) -> PollConfig {
+        PollConfig { max_wait, ..PollConfig::default() }
+    }
+}
+
+/// An ordered batch of commands executed in one round trip per database
+/// instance (see [`DataStore::execute`]).
+///
+/// Builder methods append one command each and return `&mut Self` so calls
+/// chain; tensors are captured by refcount bump ([`Bytes`] payloads), never
+/// deep-copied.  On a cluster, only single-key data-plane commands can be
+/// pipelined (each entry must route somewhere); whole-database and model
+/// commands return `Error::Invalid` there — use the dedicated trait
+/// methods, which broadcast/stage correctly, instead.
+#[derive(Debug, Default)]
+pub struct Pipeline {
+    reqs: Vec<Request>,
+}
+
+impl Pipeline {
+    pub fn new() -> Pipeline {
+        Pipeline::default()
+    }
+
+    pub fn put_tensor(&mut self, key: &str, t: &Tensor) -> &mut Pipeline {
+        self.push(Request::PutTensor { key: key.to_string(), tensor: t.clone() })
+    }
+
+    pub fn get_tensor(&mut self, key: &str) -> &mut Pipeline {
+        self.push(Request::GetTensor { key: key.to_string() })
+    }
+
+    pub fn del_tensor(&mut self, key: &str) -> &mut Pipeline {
+        self.push(Request::DelTensor { key: key.to_string() })
+    }
+
+    pub fn exists(&mut self, key: &str) -> &mut Pipeline {
+        self.push(Request::Exists { key: key.to_string() })
+    }
+
+    pub fn put_meta(&mut self, key: &str, value: &str) -> &mut Pipeline {
+        self.push(Request::PutMeta { key: key.to_string(), value: value.to_string() })
+    }
+
+    pub fn get_meta(&mut self, key: &str) -> &mut Pipeline {
+        self.push(Request::GetMeta { key: key.to_string() })
+    }
+
+    pub fn put_model(&mut self, key: &str, hlo_text: &str) -> &mut Pipeline {
+        self.push(Request::PutModel { key: key.to_string(), hlo_text: hlo_text.to_string() })
+    }
+
+    pub fn run_model(
+        &mut self,
+        key: &str,
+        in_keys: &[String],
+        out_keys: &[String],
+        device: Device,
+    ) -> &mut Pipeline {
+        self.push(Request::RunModel {
+            key: key.to_string(),
+            in_keys: in_keys.to_vec(),
+            out_keys: out_keys.to_vec(),
+            device,
+        })
+    }
+
+    /// Append an already-built request (escape hatch for ops without a
+    /// builder method).
+    pub fn push(&mut self, req: Request) -> &mut Pipeline {
+        self.reqs.push(req);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.reqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reqs.is_empty()
+    }
+
+    pub fn requests(&self) -> &[Request] {
+        &self.reqs
+    }
+
+    pub fn into_requests(self) -> Vec<Request> {
+        self.reqs
+    }
+}
+
+/// The full database operation surface, implemented by both [`Client`]
+/// (co-located deployment) and [`ClusterClient`] (clustered deployment).
+///
+/// Code written against `DataStore` — including via `dyn DataStore` — runs
+/// on either deployment unchanged; this is the portability SmartSim
+/// promises between Fig-2 deployment modes.
+pub trait DataStore {
+    /// Send a tensor (the paper's `put_tensor`).
+    fn put_tensor(&mut self, key: &str, t: &Tensor) -> Result<()>;
+
+    /// Retrieve a tensor (the paper's `unpack_tensor`).
+    fn get_tensor(&mut self, key: &str) -> Result<Tensor>;
+
+    /// Gather many tensors in one round trip per database instance.
+    /// Errors with `Error::KeyNotFound` on the first missing key.
+    fn mget_tensors(&mut self, keys: &[String]) -> Result<Vec<Tensor>>;
+
+    /// Delete a tensor; `Ok(false)` if it wasn't present.
+    fn del_tensor(&mut self, key: &str) -> Result<bool>;
+
+    fn exists(&mut self, key: &str) -> Result<bool>;
+
+    /// Block until `key` exists (the trainer waiting for the first
+    /// snapshot — the paper's "metadata transfer" overhead in Table 2).
+    fn poll_key(&mut self, key: &str, poll: &PollConfig) -> Result<()> {
+        self.poll_keys(std::slice::from_ref(&key.to_string()), poll)
+    }
+
+    /// Block until *every* key exists, in one round trip per database
+    /// instance: the server waits with capped exponential backoff instead
+    /// of the client re-asking per key.
+    fn poll_keys(&mut self, keys: &[String], poll: &PollConfig) -> Result<()>;
+
+    fn put_meta(&mut self, key: &str, value: &str) -> Result<()>;
+
+    fn get_meta(&mut self, key: &str) -> Result<Option<String>>;
+
+    /// All tensor keys with a prefix, sorted (merged across shards on a
+    /// cluster).
+    fn list_keys(&mut self, prefix: &str) -> Result<Vec<String>>;
+
+    /// Upload a model artifact (HLO text) into the model registry.
+    fn put_model(&mut self, key: &str, hlo_text: &str) -> Result<()>;
+
+    /// Upload a model from an artifact file.
+    fn put_model_from_file(&mut self, key: &str, path: &std::path::Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Parse(format!("read {}: {e}", path.display())))?;
+        self.put_model(key, &text)
+    }
+
+    /// RedisAI-style in-database inference over stored tensors.
+    fn run_model(
+        &mut self,
+        key: &str,
+        in_keys: &[String],
+        out_keys: &[String],
+        device: Device,
+    ) -> Result<()>;
+
+    /// Database statistics (aggregated across shards on a cluster).
+    fn info(&mut self) -> Result<DbInfo>;
+
+    fn flush_all(&mut self) -> Result<()>;
+
+    /// Execute a [`Pipeline`]: one request frame per database instance, one
+    /// [`Response`] per command in submission order.  A failing entry
+    /// yields `Response::Error` in its slot; later entries still run.
+    fn execute(&mut self, pipeline: Pipeline) -> Result<Vec<Response>>;
 }
 
 /// A connection to one database instance.
@@ -54,15 +295,19 @@ impl Client {
         })
     }
 
-    /// Connect with retries (components race the DB at startup).
+    /// Connect with retries (components race the DB at startup).  Sleeps
+    /// `delay` between attempts — not after the last failed one.
     pub fn connect_retry(addr: SocketAddr, tries: usize, delay: Duration) -> Result<Client> {
+        let tries = tries.max(1);
         let mut last = None;
-        for _ in 0..tries.max(1) {
+        for attempt in 0..tries {
             match Client::connect(addr) {
                 Ok(c) => return Ok(c),
                 Err(e) => {
                     last = Some(e);
-                    std::thread::sleep(delay);
+                    if attempt + 1 < tries {
+                        std::thread::sleep(delay);
+                    }
                 }
             }
         }
@@ -70,7 +315,8 @@ impl Client {
     }
 
     /// Read one response frame and decode it sharing the frame body — a
-    /// tensor reply's payload aliases the freshly-read buffer (zero copy).
+    /// tensor reply's payload (every tensor in a batch reply) aliases the
+    /// freshly-read buffer (zero copy).
     fn read_response(&mut self) -> Result<Response> {
         match read_frame(&mut self.reader)? {
             Some(body) => Response::decode_shared(&Bytes::from_vec(body)),
@@ -84,145 +330,158 @@ impl Client {
     fn call(&mut self, req: &Request) -> Result<Response> {
         self.buf.clear();
         req.encode(&mut self.buf);
-        write_frame(&mut self.writer, &self.buf)?;
+        crate::proto::frame::write_frame(&mut self.writer, &self.buf)?;
         self.read_response()
     }
 
-    fn expect_ok(&mut self, req: &Request) -> Result<()> {
-        match self.call(req)? {
-            Response::Ok => Ok(()),
-            Response::Error(m) => Err(Error::Remote(m)),
-            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
+    /// Send a slice of requests as one `Batch` frame and return the
+    /// per-entry results.  Tensor payloads are streamed from their owning
+    /// buffers (no encode-time copy); this is the transport behind
+    /// [`DataStore::execute`] and the cluster's per-shard sub-batches.
+    pub fn exec_requests(&mut self, reqs: &[Request]) -> Result<Vec<Response>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
         }
+        check_batch_len(reqs.len())?;
+        let body = 1 + 4 + reqs.iter().map(|r| r.body_wire_size()).sum::<usize>();
+        let mut sink = FrameSink::begin(&mut self.writer, &mut self.buf, body)?;
+        sink.encode_with(|b| message::encode_batch_request_header_into(b, reqs.len()))?;
+        for r in reqs {
+            match r {
+                Request::PutTensor { key, tensor } => {
+                    sink.encode_with(|b| {
+                        message::encode_put_tensor_header_into(b, key, tensor)
+                    })?;
+                    sink.write(&tensor.data)?;
+                }
+                other => sink.encode_with(|b| other.encode(b))?,
+            }
+        }
+        sink.finish()?;
+        self.read_response()?.expect_batch(reqs.len())
     }
+}
 
-    /// Send a tensor (`put_tensor`).  Writes a split frame: the small
-    /// header is encoded into the reusable buffer, the payload goes from
-    /// the borrowed tensor straight to the socket — zero payload copies.
-    pub fn put_tensor(&mut self, key: &str, t: &Tensor) -> Result<()> {
+impl DataStore for Client {
+    /// Writes a split frame: the small header is encoded into the reusable
+    /// buffer, the payload goes from the borrowed tensor straight to the
+    /// socket — zero payload copies.
+    fn put_tensor(&mut self, key: &str, t: &Tensor) -> Result<()> {
         begin_split_frame(&mut self.buf);
-        crate::proto::message::encode_put_tensor_header_into(&mut self.buf, key, t);
+        message::encode_put_tensor_header_into(&mut self.buf, key, t);
         end_split_frame(&mut self.writer, &mut self.buf, &t.data)?;
-        match self.read_response()? {
-            Response::Ok => Ok(()),
-            Response::Error(m) => Err(Error::Remote(m)),
-            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
+        self.read_response()?.expect_ok()
+    }
+
+    /// The returned tensor's payload aliases the response frame read off
+    /// the socket — one allocation, no decode-time copy.
+    fn get_tensor(&mut self, key: &str) -> Result<Tensor> {
+        self.call(&Request::GetTensor { key: key.to_string() })?
+            .expect_tensor(key)
+    }
+
+    fn mget_tensors(&mut self, keys: &[String]) -> Result<Vec<Tensor>> {
+        if keys.is_empty() {
+            return Ok(Vec::new());
+        }
+        check_batch_len(keys.len())?;
+        let entries = self
+            .call(&Request::MGetTensors { keys: keys.to_vec() })?
+            .expect_batch(keys.len())?;
+        entries
+            .into_iter()
+            .zip(keys)
+            .map(|(r, k)| r.expect_tensor(k))
+            .collect()
+    }
+
+    fn del_tensor(&mut self, key: &str) -> Result<bool> {
+        self.call(&Request::DelTensor { key: key.to_string() })?
+            .expect_deleted()
+    }
+
+    fn exists(&mut self, key: &str) -> Result<bool> {
+        self.call(&Request::Exists { key: key.to_string() })?
+            .expect_bool()
+    }
+
+    fn poll_keys(&mut self, keys: &[String], poll: &PollConfig) -> Result<()> {
+        check_batch_len(keys.len())?;
+        let req = Request::PollKeys {
+            keys: keys.to_vec(),
+            // Round the budget *up* to whole milliseconds: truncation would
+            // turn a sub-millisecond remainder (e.g. a cluster poll's last
+            // shard) into a zero-timeout single probe.
+            timeout_ms: poll.max_wait.as_micros().div_ceil(1000).min(u64::MAX as u128) as u64,
+            initial_us: poll.initial.as_micros().min(u64::MAX as u128) as u64,
+            cap_us: poll.cap.as_micros().min(u64::MAX as u128) as u64,
+        };
+        if self.call(&req)?.expect_bool()? {
+            Ok(())
+        } else {
+            Err(Error::Timeout(format!(
+                "keys {keys:?} not all present after {:?}",
+                poll.max_wait
+            )))
         }
     }
 
-    /// Retrieve a tensor (`unpack_tensor`).  The returned tensor's payload
-    /// aliases the response frame read off the socket — one allocation, no
-    /// decode-time copy.
-    pub fn get_tensor(&mut self, key: &str) -> Result<Tensor> {
-        match self.call(&Request::GetTensor { key: key.to_string() })? {
-            Response::Tensor(t) => Ok(t),
-            Response::NotFound => Err(Error::KeyNotFound(key.to_string())),
-            Response::Error(m) => Err(Error::Remote(m)),
-            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
-        }
+    fn put_meta(&mut self, key: &str, value: &str) -> Result<()> {
+        self.call(&Request::PutMeta { key: key.to_string(), value: value.to_string() })?
+            .expect_ok()
     }
 
-    pub fn del_tensor(&mut self, key: &str) -> Result<bool> {
-        match self.call(&Request::DelTensor { key: key.to_string() })? {
-            Response::Ok => Ok(true),
-            Response::NotFound => Ok(false),
-            Response::Error(m) => Err(Error::Remote(m)),
-            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
-        }
+    fn get_meta(&mut self, key: &str) -> Result<Option<String>> {
+        self.call(&Request::GetMeta { key: key.to_string() })?
+            .expect_meta()
     }
 
-    pub fn exists(&mut self, key: &str) -> Result<bool> {
-        match self.call(&Request::Exists { key: key.to_string() })? {
-            Response::Bool(b) => Ok(b),
-            Response::Error(m) => Err(Error::Remote(m)),
-            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
-        }
+    fn list_keys(&mut self, prefix: &str) -> Result<Vec<String>> {
+        self.call(&Request::ListKeys { prefix: prefix.to_string() })?
+            .expect_keys()
     }
 
-    /// Block until a key exists (the trainer waiting for the first snapshot
-    /// — the paper's "metadata transfer" overhead in Table 2).
-    pub fn poll_key(&mut self, key: &str, interval: Duration, max_wait: Duration) -> Result<()> {
-        let sw = crate::telemetry::Stopwatch::start();
-        loop {
-            if self.exists(key)? {
-                return Ok(());
-            }
-            if sw.stop() > max_wait.as_secs_f64() {
-                return Err(Error::Timeout(format!(
-                    "key '{key}' not present after {:?}",
-                    max_wait
-                )));
-            }
-            std::thread::sleep(interval);
-        }
+    fn put_model(&mut self, key: &str, hlo_text: &str) -> Result<()> {
+        self.call(&Request::PutModel {
+            key: key.to_string(),
+            hlo_text: hlo_text.to_string(),
+        })?
+        .expect_ok()
     }
 
-    pub fn put_meta(&mut self, key: &str, value: &str) -> Result<()> {
-        self.expect_ok(&Request::PutMeta { key: key.to_string(), value: value.to_string() })
-    }
-
-    pub fn get_meta(&mut self, key: &str) -> Result<Option<String>> {
-        match self.call(&Request::GetMeta { key: key.to_string() })? {
-            Response::Meta(v) => Ok(Some(v)),
-            Response::NotFound => Ok(None),
-            Response::Error(m) => Err(Error::Remote(m)),
-            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
-        }
-    }
-
-    pub fn list_keys(&mut self, prefix: &str) -> Result<Vec<String>> {
-        match self.call(&Request::ListKeys { prefix: prefix.to_string() })? {
-            Response::Keys(ks) => Ok(ks),
-            Response::Error(m) => Err(Error::Remote(m)),
-            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
-        }
-    }
-
-    /// Upload a model artifact (HLO text) into the database.
-    pub fn put_model(&mut self, key: &str, hlo_text: &str) -> Result<()> {
-        self.expect_ok(&Request::PutModel { key: key.to_string(), hlo_text: hlo_text.to_string() })
-    }
-
-    /// Upload a model from an artifact file.
-    pub fn put_model_from_file(&mut self, key: &str, path: &std::path::Path) -> Result<()> {
-        let text = std::fs::read_to_string(path)
-            .map_err(|e| Error::Parse(format!("read {}: {e}", path.display())))?;
-        self.put_model(key, &text)
-    }
-
-    /// RedisAI-style in-database inference.
-    pub fn run_model(
+    fn run_model(
         &mut self,
         key: &str,
         in_keys: &[String],
         out_keys: &[String],
         device: Device,
     ) -> Result<()> {
-        self.expect_ok(&Request::RunModel {
+        self.call(&Request::RunModel {
             key: key.to_string(),
             in_keys: in_keys.to_vec(),
             out_keys: out_keys.to_vec(),
             device,
-        })
+        })?
+        .expect_ok()
     }
 
-    pub fn info(&mut self) -> Result<(u64, u64, u64, u64, String)> {
-        match self.call(&Request::Info)? {
-            Response::Info { keys, bytes, ops, models, engine } => {
-                Ok((keys, bytes, ops, models, engine))
-            }
-            Response::Error(m) => Err(Error::Remote(m)),
-            other => Err(Error::Protocol(format!("unexpected response {other:?}"))),
-        }
+    fn info(&mut self) -> Result<DbInfo> {
+        self.call(&Request::Info)?.expect_info()
     }
 
-    pub fn flush_all(&mut self) -> Result<()> {
-        self.expect_ok(&Request::FlushAll)
+    fn flush_all(&mut self) -> Result<()> {
+        self.call(&Request::FlushAll)?.expect_ok()
+    }
+
+    fn execute(&mut self, pipeline: Pipeline) -> Result<Vec<Response>> {
+        self.exec_requests(&pipeline.into_requests())
     }
 }
 
 /// Client for the clustered deployment: routes each key to the owning shard
-/// via the redis-cluster hash-slot map.
+/// via the redis-cluster hash-slot map, and implements the complete
+/// [`DataStore`] surface — multi-key operations are partitioned per shard
+/// and reassembled, models are broadcast to every shard, `info` aggregates.
 pub struct ClusterClient {
     shards: Vec<Client>,
     slots: SlotMap,
@@ -246,24 +505,84 @@ impl ClusterClient {
         &mut self.shards[i]
     }
 
-    pub fn put_tensor(&mut self, key: &str, t: &Tensor) -> Result<()> {
+    /// Partition indices `0..keys.len()` by owning shard.
+    fn partition_keys(&self, keys: &[String]) -> Vec<Vec<usize>> {
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (i, k) in keys.iter().enumerate() {
+            by_shard[self.slots.shard_for_key(k)].push(i);
+        }
+        by_shard
+    }
+}
+
+impl DataStore for ClusterClient {
+    fn put_tensor(&mut self, key: &str, t: &Tensor) -> Result<()> {
         self.route(key).put_tensor(key, t)
     }
 
-    pub fn get_tensor(&mut self, key: &str) -> Result<Tensor> {
+    fn get_tensor(&mut self, key: &str) -> Result<Tensor> {
         self.route(key).get_tensor(key)
     }
 
-    pub fn del_tensor(&mut self, key: &str) -> Result<bool> {
+    /// One `MGetTensors` round trip per shard that owns any of the keys.
+    fn mget_tensors(&mut self, keys: &[String]) -> Result<Vec<Tensor>> {
+        let by_shard = self.partition_keys(keys);
+        let mut out: Vec<Option<Tensor>> = keys.iter().map(|_| None).collect();
+        for (shard, idxs) in by_shard.into_iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let sub: Vec<String> = idxs.iter().map(|&i| keys[i].clone()).collect();
+            let got = self.shards[shard].mget_tensors(&sub)?;
+            for (i, t) in idxs.into_iter().zip(got) {
+                out[i] = Some(t);
+            }
+        }
+        Ok(out.into_iter().map(|t| t.expect("all partitions filled")).collect())
+    }
+
+    fn del_tensor(&mut self, key: &str) -> Result<bool> {
         self.route(key).del_tensor(key)
     }
 
-    pub fn exists(&mut self, key: &str) -> Result<bool> {
+    fn exists(&mut self, key: &str) -> Result<bool> {
         self.route(key).exists(key)
     }
 
+    /// One blocking `PollKeys` per shard that owns any of the keys; the
+    /// total budget is shared (each shard gets what remains of `max_wait`).
+    fn poll_keys(&mut self, keys: &[String], poll: &PollConfig) -> Result<()> {
+        let deadline = std::time::Instant::now() + poll.max_wait;
+        let by_shard = self.partition_keys(keys);
+        for (shard, idxs) in by_shard.into_iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let sub: Vec<String> = idxs.iter().map(|&i| keys[i].clone()).collect();
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            let budget = PollConfig { max_wait: remaining, ..*poll };
+            self.shards[shard].poll_keys(&sub, &budget).map_err(|e| match e {
+                // Rewrite per-shard timeouts to name the whole key set.
+                Error::Timeout(_) => Error::Timeout(format!(
+                    "keys {keys:?} not all present after {:?}",
+                    poll.max_wait
+                )),
+                other => other,
+            })?;
+        }
+        Ok(())
+    }
+
+    fn put_meta(&mut self, key: &str, value: &str) -> Result<()> {
+        self.route(key).put_meta(key, value)
+    }
+
+    fn get_meta(&mut self, key: &str) -> Result<Option<String>> {
+        self.route(key).get_meta(key)
+    }
+
     /// Keys across all shards (merged + sorted).
-    pub fn list_keys(&mut self, prefix: &str) -> Result<Vec<String>> {
+    fn list_keys(&mut self, prefix: &str) -> Result<Vec<String>> {
         let mut all = Vec::new();
         for c in &mut self.shards {
             all.extend(c.list_keys(prefix)?);
@@ -272,10 +591,113 @@ impl ClusterClient {
         Ok(all)
     }
 
-    pub fn flush_all(&mut self) -> Result<()> {
+    /// Models are broadcast to every shard, so `run_model` can execute
+    /// wherever its inputs land.
+    fn put_model(&mut self, key: &str, hlo_text: &str) -> Result<()> {
+        for c in &mut self.shards {
+            c.put_model(key, hlo_text)?;
+        }
+        Ok(())
+    }
+
+    /// Executes on the shard owning the first input key.  Inputs owned by
+    /// other shards are staged onto the target first, and outputs are moved
+    /// to their owning shards afterwards, so a later `get_tensor(out_key)`
+    /// routes correctly.  Cross-shard tensor movement costs extra round
+    /// trips — co-locate inference keys with `{hash tags}` to avoid it.
+    fn run_model(
+        &mut self,
+        key: &str,
+        in_keys: &[String],
+        out_keys: &[String],
+        device: Device,
+    ) -> Result<()> {
+        let target = in_keys
+            .first()
+            .map(|k| self.slots.shard_for_key(k))
+            .unwrap_or(0);
+        let mut staged: Vec<&String> = Vec::new();
+        for k in in_keys {
+            if self.slots.shard_for_key(k) != target {
+                let t = self.route(k).get_tensor(k)?;
+                self.shards[target].put_tensor(k, &t)?;
+                staged.push(k);
+            }
+        }
+        self.shards[target].run_model(key, in_keys, out_keys, device)?;
+        for k in out_keys {
+            let owner = self.slots.shard_for_key(k);
+            if owner != target {
+                let t = self.shards[target].get_tensor(k)?;
+                self.shards[owner].put_tensor(k, &t)?;
+                self.shards[target].del_tensor(k)?;
+            }
+        }
+        for k in staged {
+            self.shards[target].del_tensor(k)?;
+        }
+        Ok(())
+    }
+
+    /// Sums keys/bytes/ops across shards.  `models` is the per-shard
+    /// maximum (uploads are broadcast, so summing would multiply-count);
+    /// `engine` is the first shard's.
+    fn info(&mut self) -> Result<DbInfo> {
+        let mut agg = DbInfo::default();
+        for c in &mut self.shards {
+            let i = c.info()?;
+            agg.keys += i.keys;
+            agg.bytes += i.bytes;
+            agg.ops += i.ops;
+            agg.models = agg.models.max(i.models);
+            if agg.engine.is_empty() {
+                agg.engine = i.engine;
+            }
+        }
+        Ok(agg)
+    }
+
+    fn flush_all(&mut self) -> Result<()> {
         for c in &mut self.shards {
             c.flush_all()?;
         }
         Ok(())
+    }
+
+    /// Partitions the pipeline per owning shard, executes one sub-batch
+    /// frame per shard, and reassembles results in submission order.  Every
+    /// entry must carry a routing key ([`Request::routing_key`]); use the
+    /// dedicated trait methods for whole-database operations.
+    fn execute(&mut self, pipeline: Pipeline) -> Result<Vec<Response>> {
+        let reqs = pipeline.into_requests();
+        let n = reqs.len();
+        let mut by_shard: Vec<Vec<(usize, Request)>> =
+            self.shards.iter().map(|_| Vec::new()).collect();
+        for (i, r) in reqs.into_iter().enumerate() {
+            match r.routing_key() {
+                Some(k) => {
+                    let shard = self.slots.shard_for_key(k);
+                    by_shard[shard].push((i, r));
+                }
+                None => {
+                    return Err(Error::Invalid(format!(
+                        "pipeline entry {i} has no routing key ({r:?}); \
+                         use the dedicated ClusterClient method instead"
+                    )))
+                }
+            }
+        }
+        let mut out: Vec<Option<Response>> = (0..n).map(|_| None).collect();
+        for (shard, entries) in by_shard.into_iter().enumerate() {
+            if entries.is_empty() {
+                continue;
+            }
+            let (idxs, sub): (Vec<usize>, Vec<Request>) = entries.into_iter().unzip();
+            let resps = self.shards[shard].exec_requests(&sub)?;
+            for (i, r) in idxs.into_iter().zip(resps) {
+                out[i] = Some(r);
+            }
+        }
+        Ok(out.into_iter().map(|r| r.expect("all partitions filled")).collect())
     }
 }

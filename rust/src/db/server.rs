@@ -7,8 +7,15 @@
 //!
 //! The request path is zero-copy for tensor payloads: `put_tensor` frames
 //! are handed to the store wholesale (the stored tensor is a view into the
-//! frame read off the socket) and `get_tensor` replies are split frames
-//! that write the payload straight from the store's shared buffer.
+//! frame read off the socket) and tensor replies — bare or inside a
+//! `Batch`/`MGetTensors` reply — are streamed through a
+//! [`crate::proto::frame::FrameSink`] that writes each payload straight
+//! from the store's shared buffer.
+//!
+//! Pipelined commands (`Batch`) execute in order with the command gate taken
+//! per entry, and `PollKeys` waits in the connection thread with capped
+//! exponential backoff, re-entering the gate per probe — so a blocked
+//! consumer never stalls producers on other connections.
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -21,8 +28,8 @@ use crate::ai::ModelRuntime;
 use crate::db::engine::{CommandGate, Engine};
 use crate::db::store::Store;
 use crate::error::{Error, Result};
-use crate::proto::frame::{begin_split_frame, end_split_frame, read_frame_into, write_frame};
-use crate::proto::{message, Request, Response};
+use crate::proto::frame::{read_frame_into, FrameSink};
+use crate::proto::{message, DbInfo, Request, Response};
 use crate::runtime::Executor;
 use crate::tensor::Bytes;
 
@@ -211,6 +218,9 @@ fn serve_conn(
             }
             Err(e) => return Err(e),
         }
+        // One frame == one client round trip (a batch is still one frame).
+        store.counters.frames.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut handed_over: Option<Bytes> = None;
         let decoded = if Request::frame_holds_payload(&scratch) {
             // Take ownership of the frame: the decoded tensor's payload is
             // a view into it and the store keeps that single allocation
@@ -221,37 +231,147 @@ fn serve_conn(
             // Shrink first so a capacity inherited from an earlier larger
             // frame isn't pinned for the stored tensor's lifetime; this is
             // a no-op when scratch was sized for this frame.
+            //
+            // Tensors put inside one Batch frame all alias this single
+            // allocation, so it stays resident until the *last* of them is
+            // overwritten or deleted (and n_bytes accounts per-tensor, not
+            // per-allocation).  The intended publish pattern — every rank
+            // republishing under stable keys each snapshot — retires whole
+            // batches together, so the coupling is benign there; callers
+            // batching puts with very different lifetimes should use
+            // separate put_tensor calls instead.
             scratch.shrink_to_fit();
             let body = Bytes::from_vec(std::mem::take(&mut scratch));
-            Request::decode_shared(&body)
+            let req = Request::decode_shared(&body);
+            handed_over = Some(body);
+            req
         } else {
             Request::decode(&scratch)
         };
         let resp = match decoded {
             Err(e) => Response::Error(e.to_string()),
-            Ok(req) => {
-                let _g = gate.enter(); // redis: serialize command execution
-                execute(req, store, models, engine)
-            }
+            Ok(req) => execute_conn(req, store, models, gate, stop, engine),
         };
-        match resp {
-            // Tensor replies go out as a split frame: small header copied,
-            // payload written straight from the store's shared buffer.
-            Response::Tensor(t) => {
-                begin_split_frame(&mut out_buf);
-                message::encode_tensor_response_header_into(&mut out_buf, &t);
-                end_split_frame(&mut writer, &mut out_buf, &t.data)?;
+        if let Some(body) = handed_over.take() {
+            // The hand-over was speculative (first opcode only).  If
+            // nothing retained a view — a read-only batch, or a failed
+            // decode — the refcount is back to 1 and the allocation comes
+            // home as next round's scratch buffer.
+            if let Ok(v) = body.try_unwrap_vec() {
+                scratch = v;
             }
-            other => {
-                out_buf.clear();
-                other.encode(&mut out_buf);
-                write_frame(&mut writer, &out_buf)?;
+        }
+        write_response(&mut writer, &mut out_buf, &resp)?;
+    }
+}
+
+/// Initial probe interval floor and backoff ceiling for server-side
+/// `PollKeys` waits, applied to whatever the client requested.
+const POLL_INTERVAL_FLOOR: std::time::Duration = std::time::Duration::from_micros(50);
+const POLL_INTERVAL_CEIL: std::time::Duration = std::time::Duration::from_millis(250);
+
+/// Execute one command on behalf of a connection thread.  This is the layer
+/// that may *block*: `PollKeys` waits for keys with capped exponential
+/// backoff, re-entering the [`CommandGate`] per probe so producers on other
+/// connections keep making progress; a `Batch` runs its entries in order,
+/// taking the gate per entry (a batch is a pipeline, not a transaction).
+fn execute_conn(
+    req: Request,
+    store: &Store,
+    models: Option<&ModelRuntime>,
+    gate: &CommandGate,
+    stop: &AtomicBool,
+    engine: Engine,
+) -> Response {
+    match req {
+        Request::PollKeys { keys, timeout_ms, initial_us, cap_us } => {
+            // Clamp the client-controlled budget (24 h ceiling) so a
+            // hostile timeout can't overflow `Instant + Duration`.
+            let timeout = std::time::Duration::from_millis(timeout_ms.min(86_400_000));
+            let deadline = std::time::Instant::now() + timeout;
+            let mut interval = std::time::Duration::from_micros(initial_us)
+                .clamp(POLL_INTERVAL_FLOOR, POLL_INTERVAL_CEIL);
+            let cap = std::time::Duration::from_micros(cap_us)
+                .clamp(interval, POLL_INTERVAL_CEIL);
+            loop {
+                let present = {
+                    let _g = gate.enter();
+                    store.exists_all(&keys)
+                };
+                if present {
+                    return Response::Bool(true);
+                }
+                let now = std::time::Instant::now();
+                if now >= deadline || stop.load(Ordering::Relaxed) {
+                    return Response::Bool(false);
+                }
+                std::thread::sleep(interval.min(deadline - now));
+                interval = (interval * 2).min(cap);
             }
+        }
+        Request::Batch(entries) => Response::Batch(
+            entries
+                .into_iter()
+                .map(|e| execute_conn(e, store, models, gate, stop, engine))
+                .collect(),
+        ),
+        other => {
+            let _g = gate.enter(); // redis: serialize command execution
+            execute(other, store, models, engine)
         }
     }
 }
 
+/// Write one response frame.  Tensor payloads — bare or inside a batch —
+/// are streamed from the store's shared buffers through a [`FrameSink`]:
+/// headers coalesce in `scratch`, payloads go to the socket uncopied.
+fn write_response<W: std::io::Write>(
+    w: &mut W,
+    scratch: &mut Vec<u8>,
+    resp: &Response,
+) -> Result<()> {
+    let body = resp.body_wire_size();
+    if body > crate::proto::MAX_FRAME {
+        // A batch of individually legal tensors can exceed the frame cap
+        // in aggregate; answer with an error the client can handle rather
+        // than killing the connection on the unsendable reply.
+        let err = Response::Error(format!(
+            "reply of {body} bytes exceeds the {} byte frame limit; split the batch",
+            crate::proto::MAX_FRAME
+        ));
+        let mut sink = FrameSink::begin(w, scratch, err.body_wire_size())?;
+        sink.encode_with(|buf| err.encode(buf))?;
+        return sink.finish();
+    }
+    let mut sink = FrameSink::begin(w, scratch, body)?;
+    sink_response(&mut sink, resp)?;
+    sink.finish()
+}
+
+fn sink_response<W: std::io::Write>(sink: &mut FrameSink<'_, W>, resp: &Response) -> Result<()> {
+    match resp {
+        Response::Tensor(t) => {
+            sink.encode_with(|buf| message::encode_tensor_response_header_into(buf, t))?;
+            sink.write(&t.data)
+        }
+        Response::Batch(entries) => {
+            sink.encode_with(|buf| {
+                message::encode_batch_response_header_into(buf, entries.len())
+            })?;
+            for e in entries {
+                sink_response(sink, e)?;
+            }
+            Ok(())
+        }
+        other => sink.encode_with(|buf| other.encode(buf)),
+    }
+}
+
 /// Execute one decoded command (shared by the TCP path and the unit tests).
+///
+/// This layer never blocks: `PollKeys` is a single all-exist probe here (the
+/// waiting loop lives in the connection layer, where sleeping doesn't hold
+/// the command gate).
 pub fn execute(
     req: Request,
     store: &Store,
@@ -259,6 +379,22 @@ pub fn execute(
     engine: Engine,
 ) -> Response {
     match req {
+        Request::Batch(entries) => Response::Batch(
+            entries
+                .into_iter()
+                .map(|e| execute(e, store, models, engine))
+                .collect(),
+        ),
+        Request::MGetTensors { keys } => Response::Batch(
+            keys.iter()
+                .map(|k| match store.get_tensor(k) {
+                    Ok(t) => Response::Tensor(t),
+                    Err(Error::KeyNotFound(_)) => Response::NotFound,
+                    Err(e) => Response::Error(e.to_string()),
+                })
+                .collect(),
+        ),
+        Request::PollKeys { keys, .. } => Response::Bool(store.exists_all(&keys)),
         Request::PutTensor { key, tensor } => match store.put_tensor(&key, tensor) {
             Ok(()) => Response::Ok,
             Err(e) => Response::Error(e.to_string()),
@@ -302,13 +438,13 @@ pub fn execute(
                 Err(e) => Response::Error(e.to_string()),
             },
         },
-        Request::Info => Response::Info {
+        Request::Info => Response::Info(DbInfo {
             keys: store.n_keys(),
             bytes: store.n_bytes(),
             ops: store.n_ops(),
             models: models.map(|m| m.n_models()).unwrap_or(0),
             engine: engine.name().to_string(),
-        },
+        }),
         Request::FlushAll => {
             store.flush_all();
             Response::Ok

@@ -25,6 +25,11 @@ pub struct Counters {
     pub ops: AtomicU64,
     pub bytes_in: AtomicU64,
     pub bytes_out: AtomicU64,
+    /// Request *frames* received over TCP — one per client round trip, so a
+    /// batched command counts 1 here while `ops` counts its entries.  The
+    /// pipelining tests and the microbench read this to prove a gather
+    /// costs one round trip.
+    pub frames: AtomicU64,
 }
 
 /// The node-local store.
@@ -125,6 +130,16 @@ impl Store {
         s.tensors.contains_key(key) || s.metas.contains_key(key)
     }
 
+    /// Whether every key exists (tensor or metadata).  One counted op per
+    /// probe regardless of the key count — the `PollKeys` fast path.
+    pub fn exists_all(&self, keys: &[String]) -> bool {
+        self.counters.ops.fetch_add(1, Ordering::Relaxed);
+        keys.iter().all(|key| {
+            let s = self.shard(key).lock().unwrap();
+            s.tensors.contains_key(key) || s.metas.contains_key(key)
+        })
+    }
+
     pub fn put_meta(&self, key: &str, value: &str) {
         self.counters.ops.fetch_add(1, Ordering::Relaxed);
         let mut s = self.shard(key).lock().unwrap();
@@ -222,6 +237,17 @@ mod tests {
         assert_eq!(s.get_meta("step").unwrap(), "41");
         assert!(s.get_tensor("step").is_err());
         assert!(s.exists("step"));
+    }
+
+    #[test]
+    fn exists_all_spans_tensor_and_meta_namespaces() {
+        let s = Store::new();
+        s.put_tensor("a", t(vec![1.0])).unwrap();
+        s.put_meta("b", "x");
+        let have = |ks: &[&str]| s.exists_all(&ks.iter().map(|k| k.to_string()).collect::<Vec<_>>());
+        assert!(have(&["a", "b"]));
+        assert!(!have(&["a", "b", "c"]));
+        assert!(have(&[]), "vacuously true on no keys");
     }
 
     #[test]

@@ -38,6 +38,18 @@
 //!
 //! One `put_tensor`/`get_tensor` round trip thus allocates the payload
 //! once per direction (the socket read) instead of copying it 4–5 times.
+//!
+//! ## Unified client surface + pipelining
+//!
+//! All database operations live on the [`client::DataStore`] trait,
+//! implemented by both [`client::Client`] (co-located) and
+//! [`client::ClusterClient`] (sharded) — consumers are written once and run
+//! on either deployment.  Round-trip-bound paths are batched:
+//! [`client::Pipeline`] sends many commands in one frame with per-entry
+//! results, and the `MGetTensors`/`PollKeys` wire fast paths make the
+//! dataloader's per-epoch gather and wait cost one request frame each
+//! (server-side waiting with capped exponential backoff), with the
+//! zero-copy payload plane preserved through batch replies.
 
 pub mod ai;
 pub mod client;

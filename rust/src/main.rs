@@ -10,7 +10,7 @@
 use std::net::SocketAddr;
 use std::time::Duration;
 
-use situ::client::Client;
+use situ::client::{Client, DataStore};
 use situ::cluster::netmodel::CostModel;
 use situ::cluster::scaling;
 use situ::config::RunConfig;
@@ -96,10 +96,14 @@ fn cmd_info(args: &Args) -> Result<()> {
         .parse()
         .map_err(|_| Error::Invalid("bad --addr".into()))?;
     let mut c = Client::connect(addr)?;
-    let (keys, bytes, ops, models, engine) = c.info()?;
+    let i = c.info()?;
     println!(
-        "engine={engine} keys={keys} bytes={} ops={ops} models={models}",
-        fmt::bytes(bytes)
+        "engine={} keys={} bytes={} ops={} models={}",
+        i.engine,
+        i.keys,
+        fmt::bytes(i.bytes),
+        i.ops,
+        i.models
     );
     Ok(())
 }

@@ -6,51 +6,85 @@
 //! the tensors produced by its share of simulation ranks (24 sim ranks / 4
 //! ML ranks = 6 tensors per rank per epoch on Polaris) and stacks mini
 //! batches for `train_step`/`grad_step`.
+//!
+//! The loader is generic over [`DataStore`], so the same code drives a
+//! co-located [`crate::client::Client`] and a clustered
+//! [`crate::client::ClusterClient`].  Both per-epoch database interactions
+//! are single round trips per database instance: [`DataLoader::wait_for_step`]
+//! issues one `PollKeys` (the server waits, with backoff) and
+//! [`DataLoader::gather`] issues one `MGetTensors` instead of one
+//! `get_tensor` per owned rank.
 
-use std::time::Duration;
-
-use crate::client::{tensor_key, Client};
+use crate::client::{tensor_key, DataStore, PollConfig};
 use crate::error::{Error, Result};
 use crate::tensor::{DType, Tensor};
 use crate::util::rng::Rng;
 
-/// Gathers snapshots for one ML rank.
-pub struct DataLoader {
-    pub client: Client,
+/// Partition `n_sim` simulation ranks over `n_ml` ML ranks (contiguous
+/// blocks, like the paper's 6-per-GPU pinning).
+pub fn partition(n_sim: usize, n_ml: usize, ml_rank: usize) -> Vec<usize> {
+    (0..n_sim).filter(|r| r * n_ml / n_sim == ml_rank).collect()
+}
+
+/// Stack `[C, N]` samples into the `[B, C, N]` batch `train_step` expects,
+/// repeating samples round-robin if fewer than `b` are available.
+pub fn stack_batch(samples: &[&Tensor], b: usize) -> Result<Tensor> {
+    if samples.is_empty() {
+        return Err(Error::Invalid("stack_batch with no samples".into()));
+    }
+    let shape = &samples[0].shape;
+    if shape.len() != 2 {
+        return Err(Error::Shape(format!("expected [C, N] samples, got {shape:?}")));
+    }
+    for s in samples {
+        if &s.shape != shape || s.dtype != DType::F32 {
+            return Err(Error::Shape("inconsistent sample shapes".into()));
+        }
+    }
+    let mut data = Vec::with_capacity(b * samples[0].nbytes());
+    for i in 0..b {
+        data.extend_from_slice(&samples[i % samples.len()].data);
+    }
+    Ok(Tensor {
+        dtype: DType::F32,
+        shape: vec![b, shape[0], shape[1]],
+        data: data.into(),
+    })
+}
+
+/// Gathers snapshots for one ML rank through any [`DataStore`].
+pub struct DataLoader<C: DataStore> {
+    pub client: C,
     /// Simulation ranks this ML rank is responsible for.
     pub sim_ranks: Vec<usize>,
     pub field: String,
     rng: Rng,
 }
 
-impl DataLoader {
-    pub fn new(client: Client, sim_ranks: Vec<usize>, field: &str, seed: u64) -> DataLoader {
+impl<C: DataStore> DataLoader<C> {
+    pub fn new(client: C, sim_ranks: Vec<usize>, field: &str, seed: u64) -> DataLoader<C> {
         DataLoader { client, sim_ranks, field: field.to_string(), rng: Rng::new(seed) }
     }
 
-    /// Partition `n_sim` simulation ranks over `n_ml` ML ranks (contiguous
-    /// blocks, like the paper's 6-per-GPU pinning).
-    pub fn partition(n_sim: usize, n_ml: usize, ml_rank: usize) -> Vec<usize> {
-        (0..n_sim).filter(|r| r * n_ml / n_sim == ml_rank).collect()
+    /// Keys of every owned snapshot at `step`.
+    fn step_keys(&self, step: u64) -> Vec<String> {
+        self.sim_ranks
+            .iter()
+            .map(|&r| tensor_key(&self.field, r, step))
+            .collect()
     }
 
     /// Wait until the producer has published step `step` for all owned sim
-    /// ranks (the "metadata transfer" wait of Table 2).
-    pub fn wait_for_step(&mut self, step: u64, interval: Duration, max_wait: Duration) -> Result<()> {
-        for &r in &self.sim_ranks {
-            let key = tensor_key(&self.field, r, step);
-            self.client.poll_key(&key, interval, max_wait)?;
-        }
-        Ok(())
+    /// ranks (the "metadata transfer" wait of Table 2) — one request frame
+    /// per database instance, the server does the waiting.
+    pub fn wait_for_step(&mut self, step: u64, poll: &PollConfig) -> Result<()> {
+        self.client.poll_keys(&self.step_keys(step), poll)
     }
 
-    /// Gather every owned tensor at `step`; `[C, N]` each.
+    /// Gather every owned tensor at `step` (`[C, N]` each) in one batched
+    /// round trip per database instance.
     pub fn gather(&mut self, step: u64) -> Result<Vec<Tensor>> {
-        let mut out = Vec::with_capacity(self.sim_ranks.len());
-        for &r in &self.sim_ranks {
-            out.push(self.client.get_tensor(&tensor_key(&self.field, r, step))?)
-        }
-        Ok(out)
+        self.client.mget_tensors(&self.step_keys(step))
     }
 
     /// Split gathered samples into a random train/val pair: the paper
@@ -72,33 +106,6 @@ impl DataLoader {
             .collect();
         (train, Some(&samples[v]))
     }
-
-    /// Stack `[C, N]` samples into the `[B, C, N]` batch `train_step`
-    /// expects, repeating samples round-robin if fewer than `b` are
-    /// available.
-    pub fn stack_batch(samples: &[&Tensor], b: usize) -> Result<Tensor> {
-        if samples.is_empty() {
-            return Err(Error::Invalid("stack_batch with no samples".into()));
-        }
-        let shape = &samples[0].shape;
-        if shape.len() != 2 {
-            return Err(Error::Shape(format!("expected [C, N] samples, got {shape:?}")));
-        }
-        for s in samples {
-            if &s.shape != shape || s.dtype != DType::F32 {
-                return Err(Error::Shape("inconsistent sample shapes".into()));
-            }
-        }
-        let mut data = Vec::with_capacity(b * samples[0].nbytes());
-        for i in 0..b {
-            data.extend_from_slice(&samples[i % samples.len()].data);
-        }
-        Ok(Tensor {
-            dtype: DType::F32,
-            shape: vec![b, shape[0], shape[1]],
-            data: data.into(),
-        })
-    }
 }
 
 #[cfg(test)]
@@ -110,7 +117,7 @@ mod tests {
         for (n_sim, n_ml) in [(24, 4), (10, 3), (7, 7), (5, 8)] {
             let mut seen = vec![0usize; n_sim];
             for ml in 0..n_ml {
-                for r in DataLoader::partition(n_sim, n_ml, ml) {
+                for r in partition(n_sim, n_ml, ml) {
                     seen[r] += 1;
                 }
             }
@@ -120,8 +127,7 @@ mod tests {
 
     #[test]
     fn partition_is_balanced() {
-        let sizes: Vec<usize> =
-            (0..4).map(|ml| DataLoader::partition(24, 4, ml).len()).collect();
+        let sizes: Vec<usize> = (0..4).map(|ml| partition(24, 4, ml).len()).collect();
         assert_eq!(sizes, vec![6, 6, 6, 6], "paper: 6 tensors per ML rank");
     }
 
@@ -129,7 +135,7 @@ mod tests {
     fn stack_batch_shapes_and_repeat() {
         let a = Tensor::from_f32(&[2, 3], vec![1.0; 6]).unwrap();
         let b = Tensor::from_f32(&[2, 3], vec![2.0; 6]).unwrap();
-        let batch = DataLoader::stack_batch(&[&a, &b], 4).unwrap();
+        let batch = stack_batch(&[&a, &b], 4).unwrap();
         assert_eq!(batch.shape, vec![4, 2, 3]);
         let v = batch.to_f32().unwrap();
         assert_eq!(&v[0..6], &[1.0; 6]);
@@ -141,7 +147,7 @@ mod tests {
     fn stack_batch_rejects_mismatch() {
         let a = Tensor::from_f32(&[2, 3], vec![0.0; 6]).unwrap();
         let b = Tensor::from_f32(&[3, 2], vec![0.0; 6]).unwrap();
-        assert!(DataLoader::stack_batch(&[&a, &b], 2).is_err());
-        assert!(DataLoader::stack_batch(&[], 2).is_err());
+        assert!(stack_batch(&[&a, &b], 2).is_err());
+        assert!(stack_batch(&[], 2).is_err());
     }
 }

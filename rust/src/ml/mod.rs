@@ -13,6 +13,6 @@ pub mod dataloader;
 pub mod state;
 pub mod trainer;
 
-pub use dataloader::DataLoader;
+pub use dataloader::{partition, stack_batch, DataLoader};
 pub use state::ParamState;
 pub use trainer::{EpochLog, Trainer, TrainerConfig};

@@ -13,9 +13,9 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::client::Client;
+use crate::client::{Client, DataStore, PollConfig};
 use crate::error::{Error, Result};
-use crate::ml::dataloader::DataLoader;
+use crate::ml::dataloader::{self, DataLoader};
 use crate::ml::state::{allreduce_mean, ParamState};
 use crate::runtime::{Executor, Manifest};
 use crate::telemetry::{ComponentTimes, Stopwatch};
@@ -32,10 +32,10 @@ pub struct TrainerConfig {
     pub epochs: usize,
     /// Field prefix the producer publishes under.
     pub field: String,
-    /// Snapshot step consumed per epoch advances when the producer
-    /// publishes faster than the trainer consumes.
-    pub poll_interval: Duration,
-    pub poll_max_wait: Duration,
+    /// Polling discipline while waiting on the producer (backoff shape and
+    /// per-wait budget; the snapshot step consumed per epoch advances when
+    /// the producer publishes faster than the trainer consumes).
+    pub poll: PollConfig,
 }
 
 impl Default for TrainerConfig {
@@ -46,8 +46,7 @@ impl Default for TrainerConfig {
             sim_ranks: 24,
             epochs: 100,
             field: "field".into(),
-            poll_interval: Duration::from_millis(5),
-            poll_max_wait: Duration::from_secs(120),
+            poll: PollConfig::default(),
         }
     }
 }
@@ -68,7 +67,7 @@ pub struct Trainer {
     pub manifest: Manifest,
     pub state: ParamState,
     exec: Executor,
-    loaders: Vec<DataLoader>,
+    loaders: Vec<DataLoader<Client>>,
     pub times: Arc<ComponentTimes>,
     pub history: Vec<EpochLog>,
 }
@@ -88,29 +87,35 @@ impl Trainer {
             let sw = Stopwatch::start();
             let client = Client::connect_retry(cfg.db_addr, 100, Duration::from_millis(20))?;
             times.record("client_init", sw.stop());
-            let ranks = DataLoader::partition(cfg.sim_ranks, cfg.ml_ranks, ml);
+            let ranks = dataloader::partition(cfg.sim_ranks, cfg.ml_ranks, ml);
             loaders.push(DataLoader::new(client, ranks, &cfg.field, 1000 + ml as u64));
         }
         Ok(Trainer { cfg, manifest, state, exec, loaders, times, history: Vec::new() })
     }
 
     /// Latest snapshot step the producer has announced (via metadata key
-    /// `latest_step`), or an error after the poll budget.
+    /// `latest_step`), or an error after the poll budget.  `PollKeys` spans
+    /// the metadata namespace, so the wait is server-side and costs one
+    /// round trip plus the `get_meta` read — no client busy-poll.
     pub fn wait_latest_step(&mut self) -> Result<u64> {
         let sw = Stopwatch::start();
-        let deadline = self.cfg.poll_max_wait.as_secs_f64();
-        loop {
-            if let Some(v) = self.loaders[0].client.get_meta("latest_step")? {
-                self.times.record("metadata", sw.stop());
-                return v
-                    .parse()
-                    .map_err(|_| Error::Parse(format!("bad latest_step '{v}'")));
-            }
-            if sw.stop() > deadline {
-                return Err(Error::Timeout("producer never published latest_step".into()));
-            }
-            std::thread::sleep(self.cfg.poll_interval);
-        }
+        let poll = self.cfg.poll;
+        self.loaders[0]
+            .client
+            .poll_key("latest_step", &poll)
+            .map_err(|e| match e {
+                Error::Timeout(_) => {
+                    Error::Timeout("producer never published latest_step".into())
+                }
+                other => other,
+            })?;
+        let v = self.loaders[0]
+            .client
+            .get_meta("latest_step")?
+            .ok_or_else(|| Error::Invalid("latest_step vanished after poll".into()))?;
+        self.times.record("metadata", sw.stop());
+        v.parse()
+            .map_err(|_| Error::Parse(format!("bad latest_step '{v}'")))
     }
 
     /// Run one epoch against snapshot `step`.  Returns the epoch log.
@@ -118,9 +123,12 @@ impl Trainer {
         let b = self.manifest.model.batch;
         // --- gather phase (Table 2: "training data retrieve") -------------
         let sw = Stopwatch::start();
+        // Two request frames per rank per epoch: one server-side wait for
+        // all owned keys, one batched gather.
+        let poll = self.cfg.poll;
         let mut per_rank_samples: Vec<Vec<Tensor>> = Vec::with_capacity(self.loaders.len());
         for l in &mut self.loaders {
-            l.wait_for_step(step, Duration::from_millis(5), Duration::from_secs(120))?;
+            l.wait_for_step(step, &poll)?;
             per_rank_samples.push(l.gather(step)?);
         }
         self.times.record("retrieve", sw.stop());
@@ -131,7 +139,7 @@ impl Trainer {
         if self.loaders.len() == 1 {
             // Fused fast path.
             let (train, _val) = self.loaders[0].split_validation(&per_rank_samples[0]);
-            let batch = DataLoader::stack_batch(&train, b)?;
+            let batch = dataloader::stack_batch(&train, b)?;
             let out = self.exec.execute("train_step", self.state.train_step_inputs(batch))?;
             train_loss = self.state.absorb_train_step(out)?;
         } else {
@@ -140,7 +148,7 @@ impl Trainer {
             let mut losses = Vec::with_capacity(self.loaders.len());
             for (l, samples) in self.loaders.iter_mut().zip(&per_rank_samples) {
                 let (train, _val) = l.split_validation(samples);
-                let batch = DataLoader::stack_batch(&train, b)?;
+                let batch = dataloader::stack_batch(&train, b)?;
                 let mut out = self.exec.execute("grad_step", self.state.grad_step_inputs(batch))?;
                 // outputs: loss, g...
                 let g = out.split_off(1);
@@ -162,7 +170,7 @@ impl Trainer {
         for (l, samples) in self.loaders.iter_mut().zip(&per_rank_samples) {
             let (_train, val) = l.split_validation(samples);
             let sample = val.unwrap_or(&samples[0]);
-            let batch = DataLoader::stack_batch(&[sample], b)?;
+            let batch = dataloader::stack_batch(&[sample], b)?;
             let mut inputs = self.state.params.clone();
             inputs.push(batch);
             let out = self.exec.execute("eval_step", inputs)?;

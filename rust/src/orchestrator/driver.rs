@@ -8,7 +8,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::client::{tensor_key, Client};
+use crate::client::{tensor_key, Client, DataStore, PollConfig};
 use crate::config::RunConfig;
 use crate::db::{DbServer, ServerConfig};
 use crate::error::{Error, Result};
@@ -148,25 +148,17 @@ pub fn run_insitu_training(cfg: &InSituTrainingConfig) -> Result<InSituTrainingR
                     .collect::<Result<_>>()?;
                 times.record("client_init", sw.stop() / cfg.sim_ranks as f64);
 
-                // Per-rank samplers: each "PHASTA rank" owns a partition; we
-                // emulate partitions by jittering the mesh points per rank so
-                // every rank publishes distinct data.
-                let mut rank_samplers = Vec::with_capacity(cfg.sim_ranks);
-                for r in 0..cfg.sim_ranks {
-                    let mut rng = crate::util::rng::Rng::new(cfg.seed ^ (r as u64 + 1));
-                    let coords = sampler
-                        .coords
-                        .iter()
-                        .map(|c| {
-                            [
-                                (c[0] + 0.05 * rng.f64()).min(3.99),
-                                (c[1] + 0.02 * rng.f64()).min(1.99),
-                                (c[2] + 0.05 * rng.f64()).min(1.99),
-                            ]
-                        })
-                        .collect();
-                    rank_samplers.push(MeshSampler::from_coords(coords));
-                }
+                // Per-rank samplers: each "PHASTA rank" owns a partition,
+                // emulated by a rank-seeded jitter of the shared mesh.
+                let rank_samplers: Vec<MeshSampler> = (0..cfg.sim_ranks)
+                    .map(|r| {
+                        sampler.jittered(
+                            cfg.seed ^ (r as u64 + 1),
+                            [0.05, 0.02, 0.05],
+                            [3.99, 1.99, 1.99],
+                        )
+                    })
+                    .collect();
 
                 let mut published = 0u64;
                 for step in 0..cfg.solver_steps {
@@ -212,8 +204,7 @@ pub fn run_insitu_training(cfg: &InSituTrainingConfig) -> Result<InSituTrainingR
         sim_ranks: cfg.sim_ranks,
         epochs: cfg.epochs,
         field: "field".into(),
-        poll_interval: Duration::from_millis(5),
-        poll_max_wait: Duration::from_secs(300),
+        poll: PollConfig::with_max_wait(Duration::from_secs(300)),
     };
     let exec = Executor::new()?;
     let mut trainer = Trainer::new(t_cfg, &cfg.artifacts_dir, exec)?;

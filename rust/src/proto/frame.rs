@@ -56,6 +56,108 @@ pub fn end_split_frame<W: Write>(w: &mut W, buf: &mut Vec<u8>, payload: &[u8]) -
     Ok(())
 }
 
+/// Parts at or above this size bypass [`FrameSink`]'s coalescing buffer and
+/// go to the writer directly, so large tensor payloads are written straight
+/// from their owning buffer while small headers batch into few syscalls.
+const SINK_COALESCE: usize = 32 * 1024;
+
+/// Incremental writer for a frame whose body mixes copied header bytes and
+/// borrowed payload slices — the generalization of
+/// [`begin_split_frame`]/[`end_split_frame`] to any number of payloads
+/// (batch replies carry one per tensor).
+///
+/// The caller declares the exact body length up front (computed
+/// arithmetically via `body_wire_size`), then emits the body in order;
+/// [`FrameSink::finish`] verifies the accounting, flushes, and returns the
+/// borrowed scratch buffer empty for reuse.  Small writes coalesce in the
+/// scratch buffer; slices of [`SINK_COALESCE`] bytes or more are handed to
+/// the writer directly — zero payload copies, bounded syscall count.
+pub struct FrameSink<'a, W: Write> {
+    w: &'a mut W,
+    pending: &'a mut Vec<u8>,
+    remaining: usize,
+}
+
+impl<'a, W: Write> FrameSink<'a, W> {
+    /// Start a frame of exactly `body_len` body bytes.  `scratch` is
+    /// cleared and used as the coalescing buffer.
+    pub fn begin(w: &'a mut W, scratch: &'a mut Vec<u8>, body_len: usize) -> Result<Self> {
+        if body_len > MAX_FRAME {
+            return Err(Error::Protocol(format!("frame too large: {body_len} bytes")));
+        }
+        scratch.clear();
+        scratch.extend_from_slice(&(body_len as u32).to_le_bytes());
+        Ok(FrameSink { w, pending: scratch, remaining: body_len })
+    }
+
+    fn take(&mut self, n: usize) -> Result<()> {
+        if n > self.remaining {
+            return Err(Error::Protocol(format!(
+                "frame overrun: {n} bytes written with {} remaining",
+                self.remaining
+            )));
+        }
+        self.remaining -= n;
+        Ok(())
+    }
+
+    fn flush_pending(&mut self) -> Result<()> {
+        if !self.pending.is_empty() {
+            self.w.write_all(self.pending)?;
+            self.pending.clear();
+        }
+        Ok(())
+    }
+
+    /// Emit body bytes; large slices go straight to the writer.
+    pub fn write(&mut self, part: &[u8]) -> Result<()> {
+        self.take(part.len())?;
+        if part.len() >= SINK_COALESCE {
+            self.flush_pending()?;
+            self.w.write_all(part)?;
+        } else {
+            self.pending.extend_from_slice(part);
+            if self.pending.len() >= SINK_COALESCE {
+                self.flush_pending()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Emit body bytes produced by an encoder appending to a `Vec` (the
+    /// message-header encode helpers), without an intermediate buffer.
+    pub fn encode_with(&mut self, f: impl FnOnce(&mut Vec<u8>)) -> Result<()> {
+        let before = self.pending.len();
+        f(self.pending);
+        let n = self.pending.len() - before;
+        if n > self.remaining {
+            self.pending.truncate(before); // keep the stream uncorrupted
+            return Err(Error::Protocol(format!(
+                "frame overrun: {n} bytes encoded with {} remaining",
+                self.remaining
+            )));
+        }
+        self.remaining -= n;
+        if self.pending.len() >= SINK_COALESCE {
+            self.flush_pending()?;
+        }
+        Ok(())
+    }
+
+    /// Verify the declared length was written exactly, then flush.
+    pub fn finish(mut self) -> Result<()> {
+        if self.remaining != 0 {
+            return Err(Error::Protocol(format!(
+                "frame underrun: {} declared bytes never written",
+                self.remaining
+            )));
+        }
+        self.flush_pending()?;
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
 /// Read one frame body; `Ok(None)` on a clean EOF at a frame boundary.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
     let mut body = Vec::new();
@@ -170,6 +272,44 @@ mod tests {
         end_split_frame(&mut out, &mut head, &[]).unwrap();
         let mut c = Cursor::new(out);
         assert_eq!(read_frame(&mut c).unwrap().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn frame_sink_matches_contiguous_write() {
+        // Mixed small/large parts produce the same bytes as one write_frame.
+        let header = [1u8, 2, 3];
+        let big = vec![7u8; SINK_COALESCE + 11];
+        let tail = [9u8; 5];
+        let mut whole: Vec<u8> = header.to_vec();
+        whole.extend_from_slice(&big);
+        whole.extend_from_slice(&tail);
+        let mut contiguous = Vec::new();
+        write_frame(&mut contiguous, &whole).unwrap();
+
+        let mut sunk = Vec::new();
+        let mut scratch = Vec::new();
+        let mut sink = FrameSink::begin(&mut sunk, &mut scratch, whole.len()).unwrap();
+        sink.encode_with(|b| b.extend_from_slice(&header)).unwrap();
+        sink.write(&big).unwrap();
+        sink.write(&tail).unwrap();
+        sink.finish().unwrap();
+        assert_eq!(sunk, contiguous, "sink output is byte-identical");
+        assert!(scratch.is_empty(), "scratch returned empty for reuse");
+    }
+
+    #[test]
+    fn frame_sink_rejects_overrun_and_underrun() {
+        let mut out = Vec::new();
+        let mut scratch = Vec::new();
+        let mut sink = FrameSink::begin(&mut out, &mut scratch, 2).unwrap();
+        sink.write(&[1, 2]).unwrap();
+        assert!(sink.write(&[3]).is_err(), "overrun detected");
+
+        let mut out = Vec::new();
+        let mut scratch = Vec::new();
+        let mut sink = FrameSink::begin(&mut out, &mut scratch, 4).unwrap();
+        sink.write(&[1]).unwrap();
+        assert!(sink.finish().is_err(), "underrun detected");
     }
 
     #[test]

@@ -5,6 +5,20 @@
 //! metadata, model upload, and the RedisAI-style three-step inference
 //! (`put_tensor` → `run_model` → `unpack_tensor`).
 //!
+//! Three composite commands turn N round trips into one:
+//!
+//! * [`Request::Batch`] carries a pipeline of commands executed in order;
+//!   the reply is a [`Response::Batch`] with one entry per command, so an
+//!   error mid-batch is reported per entry, never by aborting the rest.
+//! * [`Request::MGetTensors`] is the batched-gather fast path (the
+//!   dataloader's per-epoch fetch of its 6 snapshots).
+//! * [`Request::PollKeys`] waits *server-side* (with capped exponential
+//!   backoff) until every named key exists, replacing the client's
+//!   busy-poll of `Exists` requests.
+//!
+//! Batches nest exactly one level: a `Batch` inside a `Batch` is a protocol
+//! error, enforced at decode time.
+//!
 //! Tensor payloads are zero-copy in both directions:
 //!
 //! * decoding with [`Request::decode_shared`]/[`Response::decode_shared`]
@@ -27,6 +41,20 @@ pub enum Device {
     Gpu(u8),
 }
 
+/// Hard cap on the number of entries in one batch / multi-key command.
+pub const MAX_BATCH: usize = 4096;
+
+/// Database statistics reported by `INFO` (and aggregated across shards by
+/// the cluster client).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct DbInfo {
+    pub keys: u64,
+    pub bytes: u64,
+    pub ops: u64,
+    pub models: u64,
+    pub engine: String,
+}
+
 /// Client-to-database commands.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -43,6 +71,17 @@ pub enum Request {
     RunModel { key: String, in_keys: Vec<String>, out_keys: Vec<String>, device: Device },
     Info,
     FlushAll,
+    /// A pipeline of commands answered by one [`Response::Batch`] frame.
+    /// May not contain another `Batch`.
+    Batch(Vec<Request>),
+    /// Batched gather: one [`Response::Batch`] of `Tensor`/`NotFound`
+    /// entries, one per key, in request order.
+    MGetTensors { keys: Vec<String> },
+    /// Block server-side until every key exists (capped exponential backoff
+    /// between probes), up to `timeout_ms`.  Replies `Bool(true)` once all
+    /// keys are present, `Bool(false)` on timeout.  `initial_us`/`cap_us`
+    /// bound the server's probe interval.
+    PollKeys { keys: Vec<String>, timeout_ms: u64, initial_us: u64, cap_us: u64 },
 }
 
 /// Database-to-client replies.
@@ -55,7 +94,10 @@ pub enum Response {
     Meta(String),
     Keys(Vec<String>),
     Error(String),
-    Info { keys: u64, bytes: u64, ops: u64, models: u64, engine: String },
+    Info(DbInfo),
+    /// Per-entry results of a `Batch` or `MGetTensors` request, in request
+    /// order.  May not contain another `Batch`.
+    Batch(Vec<Response>),
 }
 
 // --- encoding helpers -------------------------------------------------------
@@ -63,6 +105,19 @@ pub enum Response {
 fn put_str(buf: &mut Vec<u8>, s: &str) {
     buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
     buf.extend_from_slice(s.as_bytes());
+}
+
+/// Count-prefixed string list (decoded by `Cur::str_list`).
+fn put_str_list(buf: &mut Vec<u8>, items: &[String]) {
+    buf.extend_from_slice(&(items.len() as u32).to_le_bytes());
+    for s in items {
+        put_str(buf, s);
+    }
+}
+
+/// Wire size of a count-prefixed string list.
+fn str_list_wire_size(items: &[String]) -> usize {
+    4 + items.iter().map(|s| str_wire_size(s)).sum::<usize>()
 }
 
 /// Everything of a wire tensor except the payload bytes.
@@ -154,6 +209,19 @@ impl<'a> Cur<'a> {
         String::from_utf8(s.to_vec()).map_err(|_| Error::Protocol("bad utf8".into()))
     }
 
+    /// Count-prefixed string list, capped at [`MAX_BATCH`] entries.
+    fn str_list(&mut self) -> Result<Vec<String>> {
+        let n = self.u32()? as usize;
+        if n > MAX_BATCH {
+            return Err(Error::Protocol(format!("key list of {n} exceeds {MAX_BATCH}")));
+        }
+        let mut ks = Vec::with_capacity(n);
+        for _ in 0..n {
+            ks.push(self.str()?);
+        }
+        Ok(ks)
+    }
+
     fn tensor(&mut self) -> Result<Tensor> {
         let dtype = DType::from_tag(self.u8()?)?;
         let ndim = self.u8()? as usize;
@@ -220,6 +288,21 @@ pub fn encode_put_tensor_into(buf: &mut Vec<u8>, key: &str, t: &Tensor) {
     buf.extend_from_slice(&t.data);
 }
 
+/// Opcode + entry count of a `Batch` request — the client's pipelined send
+/// path streams this header, then each entry (tensor payloads as borrowed
+/// slices) through a [`crate::proto::frame::FrameSink`].
+pub fn encode_batch_request_header_into(buf: &mut Vec<u8>, n: usize) {
+    buf.push(req_op::BATCH);
+    buf.extend_from_slice(&(n as u32).to_le_bytes());
+}
+
+/// Opcode + entry count of a `Batch` response (the server's batched-reply
+/// streaming path; pairs with per-entry split writes).
+pub fn encode_batch_response_header_into(buf: &mut Vec<u8>, n: usize) {
+    buf.push(resp_op::BATCH);
+    buf.extend_from_slice(&(n as u32).to_le_bytes());
+}
+
 // --- Request codec -----------------------------------------------------------
 
 mod req_op {
@@ -234,6 +317,9 @@ mod req_op {
     pub const RUN_MODEL: u8 = 9;
     pub const INFO: u8 = 10;
     pub const FLUSH_ALL: u8 = 11;
+    pub const BATCH: u8 = 12;
+    pub const MGET_TENSORS: u8 = 13;
+    pub const POLL_KEYS: u8 = 14;
 }
 
 impl Request {
@@ -277,14 +363,8 @@ impl Request {
             Request::RunModel { key, in_keys, out_keys, device } => {
                 buf.push(req_op::RUN_MODEL);
                 put_str(buf, key);
-                buf.extend_from_slice(&(in_keys.len() as u32).to_le_bytes());
-                for k in in_keys {
-                    put_str(buf, k);
-                }
-                buf.extend_from_slice(&(out_keys.len() as u32).to_le_bytes());
-                for k in out_keys {
-                    put_str(buf, k);
-                }
+                put_str_list(buf, in_keys);
+                put_str_list(buf, out_keys);
                 match device {
                     Device::Cpu => buf.push(0xff),
                     Device::Gpu(i) => buf.push(*i),
@@ -292,6 +372,23 @@ impl Request {
             }
             Request::Info => buf.push(req_op::INFO),
             Request::FlushAll => buf.push(req_op::FLUSH_ALL),
+            Request::Batch(entries) => {
+                encode_batch_request_header_into(buf, entries.len());
+                for e in entries {
+                    e.encode(buf);
+                }
+            }
+            Request::MGetTensors { keys } => {
+                buf.push(req_op::MGET_TENSORS);
+                put_str_list(buf, keys);
+            }
+            Request::PollKeys { keys, timeout_ms, initial_us, cap_us } => {
+                buf.push(req_op::POLL_KEYS);
+                put_str_list(buf, keys);
+                buf.extend_from_slice(&timeout_ms.to_le_bytes());
+                buf.extend_from_slice(&initial_us.to_le_bytes());
+                buf.extend_from_slice(&cap_us.to_le_bytes());
+            }
         }
     }
 
@@ -310,13 +407,22 @@ impl Request {
 
     /// Whether decoding this frame body with [`Request::decode_shared`]
     /// would retain a view of it beyond the request's execution (payload-
-    /// carrying ops).  The server uses this to choose between recycling its
-    /// scratch read buffer and handing the frame over to the store.
+    /// carrying ops — a bare `PutTensor` or any `Batch`, which may contain
+    /// one).  The server uses this to choose between recycling its scratch
+    /// read buffer and handing the frame over to the store.
     pub fn frame_holds_payload(body: &[u8]) -> bool {
-        body.first() == Some(&req_op::PUT_TENSOR)
+        matches!(body.first(), Some(&req_op::PUT_TENSOR) | Some(&req_op::BATCH))
     }
 
     fn decode_cur(mut c: Cur<'_>) -> Result<Request> {
+        let req = Self::decode_one(&mut c, true)?;
+        c.done()?;
+        Ok(req)
+    }
+
+    /// Decode one request off the cursor.  `allow_batch` is cleared for
+    /// batch entries so nesting stops at one level.
+    fn decode_one(c: &mut Cur<'_>, allow_batch: bool) -> Result<Request> {
         let op = c.u8()?;
         let req = match op {
             req_op::PUT_TENSOR => Request::PutTensor { key: c.str()?, tensor: c.tensor()? },
@@ -354,17 +460,61 @@ impl Request {
             }
             req_op::INFO => Request::Info,
             req_op::FLUSH_ALL => Request::FlushAll,
+            req_op::BATCH => {
+                if !allow_batch {
+                    return Err(Error::Protocol("nested batch request".into()));
+                }
+                let n = c.u32()? as usize;
+                if n > MAX_BATCH {
+                    return Err(Error::Protocol(format!("batch of {n} exceeds {MAX_BATCH}")));
+                }
+                let mut entries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    entries.push(Self::decode_one(c, false)?);
+                }
+                Request::Batch(entries)
+            }
+            req_op::MGET_TENSORS => Request::MGetTensors { keys: c.str_list()? },
+            req_op::POLL_KEYS => Request::PollKeys {
+                keys: c.str_list()?,
+                timeout_ms: c.u64()?,
+                initial_us: c.u64()?,
+                cap_us: c.u64()?,
+            },
             _ => return Err(Error::Protocol(format!("unknown request opcode {op}"))),
         };
-        c.done()?;
         Ok(req)
     }
 
-    /// Exact wire size including the 4-byte frame prefix, computed
-    /// arithmetically (used by the DES cost model and stats; previously
-    /// this encoded the whole message — copying the full payload — just to
-    /// count bytes).
-    pub fn wire_size(&self) -> usize {
+    /// The key this command routes on in a sharded deployment, if it acts
+    /// on exactly one key of the replicated data plane.  `None` for
+    /// whole-database and multi-key commands, and for model ops: models
+    /// live in each shard's private runtime and must be *broadcast* (the
+    /// cluster client's `put_model`), so routing a pipelined upload to one
+    /// shard would silently break `run_model` on the others.
+    pub fn routing_key(&self) -> Option<&str> {
+        match self {
+            Request::PutTensor { key, .. }
+            | Request::GetTensor { key }
+            | Request::DelTensor { key }
+            | Request::Exists { key }
+            | Request::PutMeta { key, .. }
+            | Request::GetMeta { key } => Some(key),
+            Request::ListKeys { .. }
+            | Request::PutModel { .. }
+            | Request::RunModel { .. }
+            | Request::Info
+            | Request::FlushAll
+            | Request::Batch(_)
+            | Request::MGetTensors { .. }
+            | Request::PollKeys { .. } => None,
+        }
+    }
+
+    /// Exact encoded body size (opcode + fields, no frame prefix), computed
+    /// arithmetically — the client's batched send path uses this to declare
+    /// the frame length without materializing any payload.
+    pub fn body_wire_size(&self) -> usize {
         let fields = match self {
             Request::PutTensor { key, tensor } => str_wire_size(key) + tensor_wire_size(tensor),
             Request::GetTensor { key }
@@ -376,15 +526,26 @@ impl Request {
             Request::PutModel { key, hlo_text } => str_wire_size(key) + str_wire_size(hlo_text),
             Request::RunModel { key, in_keys, out_keys, device: _ } => {
                 str_wire_size(key)
-                    + 4
-                    + in_keys.iter().map(|k| str_wire_size(k)).sum::<usize>()
-                    + 4
-                    + out_keys.iter().map(|k| str_wire_size(k)).sum::<usize>()
+                    + str_list_wire_size(in_keys)
+                    + str_list_wire_size(out_keys)
                     + 1
             }
             Request::Info | Request::FlushAll => 0,
+            Request::Batch(entries) => {
+                4 + entries.iter().map(|e| e.body_wire_size()).sum::<usize>()
+            }
+            Request::MGetTensors { keys } => str_list_wire_size(keys),
+            Request::PollKeys { keys, .. } => str_list_wire_size(keys) + 24,
         };
-        4 + 1 + fields // frame prefix + opcode + fields
+        1 + fields // opcode + fields
+    }
+
+    /// Exact wire size including the 4-byte frame prefix, computed
+    /// arithmetically (used by the DES cost model and stats; previously
+    /// this encoded the whole message — copying the full payload — just to
+    /// count bytes).
+    pub fn wire_size(&self) -> usize {
+        4 + self.body_wire_size()
     }
 }
 
@@ -399,6 +560,7 @@ mod resp_op {
     pub const KEYS: u8 = 6;
     pub const ERROR: u8 = 7;
     pub const INFO: u8 = 8;
+    pub const BATCH: u8 = 9;
 }
 
 impl Response {
@@ -429,13 +591,19 @@ impl Response {
                 buf.push(resp_op::ERROR);
                 put_str(buf, m);
             }
-            Response::Info { keys, bytes, ops, models, engine } => {
+            Response::Info(i) => {
                 buf.push(resp_op::INFO);
-                buf.extend_from_slice(&keys.to_le_bytes());
-                buf.extend_from_slice(&bytes.to_le_bytes());
-                buf.extend_from_slice(&ops.to_le_bytes());
-                buf.extend_from_slice(&models.to_le_bytes());
-                put_str(buf, engine);
+                buf.extend_from_slice(&i.keys.to_le_bytes());
+                buf.extend_from_slice(&i.bytes.to_le_bytes());
+                buf.extend_from_slice(&i.ops.to_le_bytes());
+                buf.extend_from_slice(&i.models.to_le_bytes());
+                put_str(buf, &i.engine);
+            }
+            Response::Batch(entries) => {
+                encode_batch_response_header_into(buf, entries.len());
+                for e in entries {
+                    e.encode(buf);
+                }
             }
         }
     }
@@ -447,11 +615,19 @@ impl Response {
 
     /// Decode from a shared frame body: a tensor reply aliases `body`
     /// instead of copying the payload (the client's `get_tensor` hot path).
+    /// Every tensor inside a `Batch` reply aliases the same frame body, so
+    /// a batched gather still costs one allocation total.
     pub fn decode_shared(body: &Bytes) -> Result<Response> {
         Self::decode_cur(Cur::shared(body))
     }
 
     fn decode_cur(mut c: Cur<'_>) -> Result<Response> {
+        let resp = Self::decode_one(&mut c, true)?;
+        c.done()?;
+        Ok(resp)
+    }
+
+    fn decode_one(c: &mut Cur<'_>, allow_batch: bool) -> Result<Response> {
         let op = c.u8()?;
         let resp = match op {
             resp_op::OK => Response::Ok,
@@ -471,16 +647,135 @@ impl Response {
                 Response::Keys(ks)
             }
             resp_op::ERROR => Response::Error(c.str()?),
-            resp_op::INFO => Response::Info {
+            resp_op::INFO => Response::Info(DbInfo {
                 keys: c.u64()?,
                 bytes: c.u64()?,
                 ops: c.u64()?,
                 models: c.u64()?,
                 engine: c.str()?,
-            },
+            }),
+            resp_op::BATCH => {
+                if !allow_batch {
+                    return Err(Error::Protocol("nested batch response".into()));
+                }
+                let n = c.u32()? as usize;
+                if n > MAX_BATCH {
+                    return Err(Error::Protocol(format!("batch of {n} exceeds {MAX_BATCH}")));
+                }
+                let mut entries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    entries.push(Self::decode_one(c, false)?);
+                }
+                Response::Batch(entries)
+            }
             _ => return Err(Error::Protocol(format!("unknown response opcode {op}"))),
         };
-        c.done()?;
         Ok(resp)
+    }
+
+    /// Exact encoded body size (opcode + fields, no frame prefix) — the
+    /// server's streaming reply path uses this to declare the frame length
+    /// without materializing tensor payloads in an output buffer.
+    pub fn body_wire_size(&self) -> usize {
+        let fields = match self {
+            Response::Ok | Response::NotFound => 0,
+            Response::Tensor(t) => tensor_wire_size(t),
+            Response::Bool(_) => 1,
+            Response::Meta(s) | Response::Error(s) => str_wire_size(s),
+            Response::Keys(ks) => 4 + ks.iter().map(|k| str_wire_size(k)).sum::<usize>(),
+            Response::Info(i) => 32 + str_wire_size(&i.engine),
+            Response::Batch(entries) => {
+                4 + entries.iter().map(|e| e.body_wire_size()).sum::<usize>()
+            }
+        };
+        1 + fields
+    }
+}
+
+// --- typed response conversions ---------------------------------------------
+//
+// Every client-side `match`-on-`Response` used to be hand-rolled per method;
+// the `expect_*` family centralizes the conversion (remote errors become
+// `Error::Remote`, anything else unexpected becomes `Error::Protocol`), so
+// both `Client` and `ClusterClient` — and user code consuming batch replies —
+// share one conversion layer.
+
+impl Response {
+    fn unexpected(self, want: &str) -> Error {
+        match self {
+            Response::Error(m) => Error::Remote(m),
+            other => Error::Protocol(format!("expected {want}, got {other:?}")),
+        }
+    }
+
+    /// `Ok` → `()`.
+    pub fn expect_ok(self) -> Result<()> {
+        match self {
+            Response::Ok => Ok(()),
+            other => Err(other.unexpected("Ok")),
+        }
+    }
+
+    /// `Tensor` → the tensor; `NotFound` → `Error::KeyNotFound(key)`.
+    pub fn expect_tensor(self, key: &str) -> Result<Tensor> {
+        match self {
+            Response::Tensor(t) => Ok(t),
+            Response::NotFound => Err(Error::KeyNotFound(key.to_string())),
+            other => Err(other.unexpected("Tensor")),
+        }
+    }
+
+    /// Deletion result: `Ok` → `true`, `NotFound` → `false`.
+    pub fn expect_deleted(self) -> Result<bool> {
+        match self {
+            Response::Ok => Ok(true),
+            Response::NotFound => Ok(false),
+            other => Err(other.unexpected("Ok|NotFound")),
+        }
+    }
+
+    /// `Bool` → the flag.
+    pub fn expect_bool(self) -> Result<bool> {
+        match self {
+            Response::Bool(b) => Ok(b),
+            other => Err(other.unexpected("Bool")),
+        }
+    }
+
+    /// `Meta` → `Some(value)`, `NotFound` → `None`.
+    pub fn expect_meta(self) -> Result<Option<String>> {
+        match self {
+            Response::Meta(v) => Ok(Some(v)),
+            Response::NotFound => Ok(None),
+            other => Err(other.unexpected("Meta")),
+        }
+    }
+
+    /// `Keys` → the key list.
+    pub fn expect_keys(self) -> Result<Vec<String>> {
+        match self {
+            Response::Keys(ks) => Ok(ks),
+            other => Err(other.unexpected("Keys")),
+        }
+    }
+
+    /// `Info` → the stats struct.
+    pub fn expect_info(self) -> Result<DbInfo> {
+        match self {
+            Response::Info(i) => Ok(i),
+            other => Err(other.unexpected("Info")),
+        }
+    }
+
+    /// `Batch` → the per-entry results, checked against the request count.
+    pub fn expect_batch(self, expected: usize) -> Result<Vec<Response>> {
+        match self {
+            Response::Batch(entries) if entries.len() == expected => Ok(entries),
+            Response::Batch(entries) => Err(Error::Protocol(format!(
+                "batch reply has {} entries, expected {expected}",
+                entries.len()
+            ))),
+            other => Err(other.unexpected("Batch")),
+        }
     }
 }

@@ -10,10 +10,13 @@
 //! tensor  := u8 dtype | u8 ndim | u32-LE dims[ndim] | u64-LE payload_len | payload bytes
 //! ```
 //!
-//! Requests and responses are symmetric frames.  The protocol is strictly
-//! request/response per connection (like RESP without pipelining; clients
-//! that want concurrency open more connections, exactly how the paper runs
-//! one SmartRedis client per simulation rank).
+//! Requests and responses are symmetric frames, strictly request/response
+//! per connection (one SmartRedis client per simulation rank, as in the
+//! paper).  Pipelining happens *inside* a frame instead of across frames: a
+//! [`Request::Batch`] carries many commands and is answered by one
+//! [`Response::Batch`] with per-entry results, and the
+//! [`Request::MGetTensors`] / [`Request::PollKeys`] fast paths collapse the
+//! dataloader's per-epoch gather and wait loops to one round trip each.
 //!
 //! ## Zero-copy data plane
 //!
@@ -38,8 +41,8 @@ pub mod frame;
 pub mod message;
 
 pub use frame::{begin_split_frame, end_split_frame, read_frame, read_frame_into, write_frame,
-                MAX_FRAME};
-pub use message::{Device, Request, Response};
+                FrameSink, MAX_FRAME};
+pub use message::{DbInfo, Device, Request, Response, MAX_BATCH};
 
 #[cfg(test)]
 mod tests {
@@ -78,6 +81,21 @@ mod tests {
             },
             Request::Info,
             Request::FlushAll,
+            Request::Batch(vec![
+                Request::PutTensor {
+                    key: "b0".into(),
+                    tensor: Tensor::from_f32(&[3], vec![0.5, 1.5, 2.5]).unwrap(),
+                },
+                Request::GetTensor { key: "b1".into() },
+                Request::Exists { key: "b2".into() },
+            ]),
+            Request::MGetTensors { keys: vec!["m0".into(), "m1".into()] },
+            Request::PollKeys {
+                keys: vec!["p0".into(), "p1".into()],
+                timeout_ms: 1500,
+                initial_us: 500,
+                cap_us: 20_000,
+            },
         ]
     }
 
@@ -88,20 +106,35 @@ mod tests {
         }
     }
 
-    #[test]
-    fn response_roundtrips() {
+    fn all_response_variants() -> Vec<Response> {
         let t = Tensor::from_i32(&[3], vec![1, 2, 3]).unwrap();
-        let cases = vec![
+        vec![
             Response::Ok,
-            Response::Tensor(t),
+            Response::Tensor(t.clone()),
             Response::NotFound,
             Response::Bool(true),
             Response::Meta("x".into()),
             Response::Keys(vec!["a".into(), "b".into()]),
             Response::Error("boom".into()),
-            Response::Info { keys: 10, bytes: 1 << 20, ops: 42, models: 2, engine: "redis".into() },
-        ];
-        for c in cases {
+            Response::Info(DbInfo {
+                keys: 10,
+                bytes: 1 << 20,
+                ops: 42,
+                models: 2,
+                engine: "redis".into(),
+            }),
+            Response::Batch(vec![
+                Response::Ok,
+                Response::Tensor(t),
+                Response::NotFound,
+                Response::Error("entry failed".into()),
+            ]),
+        ]
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        for c in all_response_variants() {
             assert_eq!(roundtrip_resp(&c), c);
         }
     }
@@ -113,6 +146,99 @@ mod tests {
             c.encode(&mut buf);
             assert_eq!(c.wire_size(), buf.len() + 4, "wire_size mismatch for {c:?}");
         }
+    }
+
+    #[test]
+    fn body_wire_size_is_exact_for_every_response_variant() {
+        for c in all_response_variants() {
+            let mut buf = Vec::new();
+            c.encode(&mut buf);
+            assert_eq!(c.body_wire_size(), buf.len(), "body size mismatch for {c:?}");
+        }
+    }
+
+    #[test]
+    fn nested_batches_are_rejected() {
+        let mut buf = Vec::new();
+        Request::Batch(vec![Request::Info]).encode(&mut buf);
+        // Splice the encoded batch in as its own entry: opcode 12, count 1,
+        // then the batch bytes again.
+        let mut nested = vec![12u8, 1, 0, 0, 0];
+        nested.extend_from_slice(&buf);
+        assert!(Request::decode(&nested).is_err(), "nested request batch");
+
+        let mut rbuf = Vec::new();
+        Response::Batch(vec![Response::Ok]).encode(&mut rbuf);
+        let mut rnested = vec![9u8, 1, 0, 0, 0];
+        rnested.extend_from_slice(&rbuf);
+        assert!(Response::decode(&rnested).is_err(), "nested response batch");
+    }
+
+    #[test]
+    fn batch_tensors_share_one_frame_allocation() {
+        // Every tensor in a batch reply decoded via decode_shared must alias
+        // the single frame body — the batched-gather zero-copy property.
+        let a = Tensor::from_f32(&[4], vec![1.0; 4]).unwrap();
+        let b = Tensor::from_f32(&[8], vec![2.0; 8]).unwrap();
+        let mut buf = Vec::new();
+        Response::Batch(vec![
+            Response::Tensor(a.clone()),
+            Response::NotFound,
+            Response::Tensor(b.clone()),
+        ])
+        .encode(&mut buf);
+        let body = Bytes::from_vec(buf);
+        match Response::decode_shared(&body).unwrap() {
+            Response::Batch(entries) => {
+                let (t0, t2) = match (&entries[0], &entries[2]) {
+                    (Response::Tensor(x), Response::Tensor(y)) => (x, y),
+                    other => panic!("unexpected entries {other:?}"),
+                };
+                assert!(t0.data.shares_allocation(&body));
+                assert!(t2.data.shares_allocation(&body));
+                assert_eq!(t0, &a);
+                assert_eq!(t2, &b);
+            }
+            other => panic!("unexpected decode {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_holds_payload_covers_batches() {
+        let mut buf = Vec::new();
+        Request::Batch(vec![Request::GetTensor { key: "k".into() }]).encode(&mut buf);
+        assert!(Request::frame_holds_payload(&buf), "batches may carry payloads");
+        let mut buf = Vec::new();
+        Request::MGetTensors { keys: vec!["k".into()] }.encode(&mut buf);
+        assert!(!Request::frame_holds_payload(&buf));
+    }
+
+    #[test]
+    fn expect_conversions() {
+        use crate::error::Error;
+        assert!(Response::Ok.expect_ok().is_ok());
+        assert!(matches!(
+            Response::Error("boom".into()).expect_ok(),
+            Err(Error::Remote(m)) if m == "boom"
+        ));
+        assert!(matches!(Response::Bool(true).expect_ok(), Err(Error::Protocol(_))));
+        assert!(matches!(
+            Response::NotFound.expect_tensor("k"),
+            Err(Error::KeyNotFound(k)) if k == "k"
+        ));
+        assert!(Response::Ok.expect_deleted().unwrap());
+        assert!(!Response::NotFound.expect_deleted().unwrap());
+        assert!(!Response::Bool(false).expect_bool().unwrap());
+        assert_eq!(Response::Meta("v".into()).expect_meta().unwrap(), Some("v".into()));
+        assert_eq!(Response::NotFound.expect_meta().unwrap(), None);
+        assert_eq!(Response::Keys(vec!["a".into()]).expect_keys().unwrap(), vec!["a"]);
+        let info = DbInfo { keys: 1, bytes: 2, ops: 3, models: 0, engine: "redis".into() };
+        assert_eq!(Response::Info(info.clone()).expect_info().unwrap(), info);
+        assert!(Response::Batch(vec![Response::Ok]).expect_batch(1).is_ok());
+        assert!(matches!(
+            Response::Batch(vec![Response::Ok]).expect_batch(2),
+            Err(Error::Protocol(_))
+        ));
     }
 
     #[test]

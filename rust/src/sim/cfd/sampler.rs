@@ -46,6 +46,26 @@ impl MeshSampler {
         MeshSampler { coords }
     }
 
+    /// A per-rank variant of this mesh: every point jittered by a seeded
+    /// uniform offset in `[0, jitter[d])`, clamped to `max[d]`.  The driver
+    /// uses this to emulate each "PHASTA rank" owning its own partition —
+    /// every rank publishes distinct data from the shared flow.
+    pub fn jittered(&self, seed: u64, jitter: [f64; 3], max: [f64; 3]) -> MeshSampler {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let coords = self
+            .coords
+            .iter()
+            .map(|c| {
+                [
+                    (c[0] + jitter[0] * rng.f64()).min(max[0]),
+                    (c[1] + jitter[1] * rng.f64()).min(max[1]),
+                    (c[2] + jitter[2] * rng.f64()).min(max[2]),
+                ]
+            })
+            .collect();
+        MeshSampler { coords }
+    }
+
     pub fn n(&self) -> usize {
         self.coords.len()
     }
@@ -142,6 +162,21 @@ mod tests {
         let b = MeshSampler::interp(&g, &f, [0.01, 1.0, 1.0]);
         assert!((a - b).abs() < 0.1);
         assert!(a.is_finite() && b.is_finite());
+    }
+
+    #[test]
+    fn jittered_is_deterministic_distinct_and_bounded() {
+        let base = MeshSampler::from_coords(vec![[0.5, 0.5, 0.5], [3.9, 1.9, 1.9]]);
+        let a = base.jittered(7, [0.05, 0.02, 0.05], [3.99, 1.99, 1.99]);
+        let b = base.jittered(7, [0.05, 0.02, 0.05], [3.99, 1.99, 1.99]);
+        let c = base.jittered(8, [0.05, 0.02, 0.05], [3.99, 1.99, 1.99]);
+        assert_eq!(a.coords, b.coords, "same seed reproduces");
+        assert_ne!(a.coords, c.coords, "ranks get distinct partitions");
+        for (p, q) in base.coords.iter().zip(&a.coords) {
+            for d in 0..3 {
+                assert!(q[d] >= p[d] && q[d] <= [3.99, 1.99, 1.99][d], "{p:?} -> {q:?}");
+            }
+        }
     }
 
     #[test]

@@ -10,7 +10,7 @@ use std::net::SocketAddr;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::client::{tensor_key, Client};
+use crate::client::{tensor_key, Client, DataStore};
 use crate::error::Result;
 use crate::telemetry::{ComponentTimes, Stopwatch};
 use crate::tensor::Tensor;

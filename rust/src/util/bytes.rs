@@ -77,6 +77,20 @@ impl Bytes {
     pub fn to_vec(&self) -> Vec<u8> {
         self.as_slice().to_vec()
     }
+
+    /// Recover the backing `Vec` without copying, if this is the only
+    /// handle and the view covers the whole allocation; otherwise hand the
+    /// view back unchanged.  Lets a frame buffer speculatively handed to
+    /// the zero-copy decode path be reclaimed for reuse when nothing
+    /// retained it (see `db::server`).
+    pub fn try_unwrap_vec(self) -> std::result::Result<Vec<u8>, Bytes> {
+        let (off, len) = (self.off, self.len);
+        match Arc::try_unwrap(self.buf) {
+            Ok(v) if off == 0 && len == v.len() => Ok(v),
+            Ok(v) => Err(Bytes { buf: Arc::new(v), off, len }),
+            Err(buf) => Err(Bytes { buf, off, len }),
+        }
+    }
 }
 
 impl Default for Bytes {
@@ -169,6 +183,23 @@ mod tests {
         let view = v.slice(8..16);
         drop(v);
         assert_eq!(&view[..], &[7; 8]);
+    }
+
+    #[test]
+    fn try_unwrap_vec_requires_exclusive_full_view() {
+        // Sole handle over the whole allocation: recovered without copy.
+        let v = Bytes::from_vec(vec![1, 2, 3]);
+        assert_eq!(v.try_unwrap_vec().unwrap(), vec![1, 2, 3]);
+        // A second handle blocks recovery; the view survives intact.
+        let a = Bytes::from_vec(vec![4, 5]);
+        let b = a.clone();
+        let a = a.try_unwrap_vec().unwrap_err();
+        assert_eq!(a, b);
+        drop(b);
+        // A partial view never yields the full buffer.
+        let part = Bytes::from_vec(vec![6, 7, 8]).slice(1..3);
+        let back = part.try_unwrap_vec().unwrap_err();
+        assert_eq!(&back[..], &[7, 8]);
     }
 
     #[test]

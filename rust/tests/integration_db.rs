@@ -1,11 +1,14 @@
 //! Integration tests: real TCP client ⇄ server round trips, both engines,
-//! concurrency, failure injection.
+//! concurrency, failure injection, and the pipelined batch API — including
+//! the round-trip accounting the redesign exists for (one request frame per
+//! gather/wait) and deployment portability through `DataStore`.
 
 use std::time::Duration;
 
-use situ::client::{tensor_key, Client, ClusterClient};
+use situ::client::{tensor_key, Client, ClusterClient, DataStore, Pipeline, PollConfig};
 use situ::db::{DbServer, Engine, ServerConfig};
 use situ::error::Error;
+use situ::proto::{Request, Response};
 use situ::tensor::{DType, Tensor};
 
 fn start(engine: Engine) -> DbServer {
@@ -14,6 +17,14 @@ fn start(engine: Engine) -> DbServer {
 
 fn t(v: Vec<f32>) -> Tensor {
     Tensor::from_f32(&[v.len()], v).unwrap()
+}
+
+fn frames(server: &DbServer) -> u64 {
+    server.store().counters.frames.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+fn quick_poll() -> PollConfig {
+    PollConfig::new(Duration::from_millis(1), Duration::from_millis(20), Duration::from_secs(5))
 }
 
 #[test]
@@ -25,11 +36,11 @@ fn roundtrip_over_tcp_both_engines() {
         c.put_tensor("k", &payload).unwrap();
         let back = c.get_tensor("k").unwrap();
         assert_eq!(back, payload);
-        let (keys, bytes, _ops, models, name) = c.info().unwrap();
-        assert_eq!(keys, 1);
-        assert_eq!(bytes, 4000);
-        assert_eq!(models, 0);
-        assert_eq!(name, engine.name());
+        let info = c.info().unwrap();
+        assert_eq!(info.keys, 1);
+        assert_eq!(info.bytes, 4000);
+        assert_eq!(info.models, 0);
+        assert_eq!(info.engine, engine.name());
     }
 }
 
@@ -69,7 +80,7 @@ fn poll_key_waits_for_producer() {
         c.put_tensor("late", &t(vec![5.0])).unwrap();
     });
     let mut c = Client::connect(server.addr).unwrap();
-    c.poll_key("late", Duration::from_millis(10), Duration::from_secs(5)).unwrap();
+    c.poll_key("late", &quick_poll()).unwrap();
     assert!(c.exists("late").unwrap());
     producer.join().unwrap();
 }
@@ -78,10 +89,38 @@ fn poll_key_waits_for_producer() {
 fn poll_key_times_out() {
     let server = start(Engine::Redis);
     let mut c = Client::connect(server.addr).unwrap();
-    let err = c
-        .poll_key("never", Duration::from_millis(5), Duration::from_millis(60))
-        .unwrap_err();
+    let poll = PollConfig::new(
+        Duration::from_millis(1),
+        Duration::from_millis(10),
+        Duration::from_millis(60),
+    );
+    let err = c.poll_key("never", &poll).unwrap_err();
     assert!(matches!(err, Error::Timeout(_)));
+}
+
+#[test]
+fn poll_keys_is_one_round_trip_even_while_waiting() {
+    // The server-side wait: the client sends one PollKeys frame and blocks;
+    // the producer publishes on another connection; the waiting client's
+    // frame count never grows.
+    let server = start(Engine::KeyDb);
+    let addr = server.addr;
+    let mut c = Client::connect(server.addr).unwrap();
+    // Snapshot before the producer exists so its 3 put frames are always
+    // inside the measured window, however the threads interleave.
+    let before = frames(&server);
+    let producer = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        for r in 0..3 {
+            c.put_tensor(&tensor_key("w", r, 1), &t(vec![r as f32])).unwrap();
+        }
+    });
+    let keys: Vec<String> = (0..3).map(|r| tensor_key("w", r, 1)).collect();
+    c.poll_keys(&keys, &quick_poll()).unwrap();
+    producer.join().unwrap();
+    // The producer sent 3 frames; the poll itself was exactly 1.
+    assert_eq!(frames(&server) - before, 3 + 1, "blocking wait costs one frame");
 }
 
 #[test]
@@ -106,8 +145,7 @@ fn many_concurrent_clients() {
         h.join().unwrap();
     }
     let mut c = Client::connect(server.addr).unwrap();
-    let (keys, ..) = c.info().unwrap();
-    assert_eq!(keys, 12 * 20);
+    assert_eq!(c.info().unwrap().keys, 12 * 20);
 }
 
 #[test]
@@ -116,8 +154,8 @@ fn flush_all_clears() {
     let mut c = Client::connect(server.addr).unwrap();
     c.put_tensor("a", &t(vec![1.0])).unwrap();
     c.flush_all().unwrap();
-    let (keys, bytes, ..) = c.info().unwrap();
-    assert_eq!((keys, bytes), (0, 0));
+    let info = c.info().unwrap();
+    assert_eq!((info.keys, info.bytes), (0, 0));
 }
 
 #[test]
@@ -146,6 +184,265 @@ fn cluster_client_shards_and_finds_keys() {
 }
 
 #[test]
+fn cluster_routing_every_key_on_exactly_one_shard() {
+    let servers = [start(Engine::Redis), start(Engine::Redis), start(Engine::Redis)];
+    let addrs: Vec<_> = servers.iter().map(|s| s.addr).collect();
+    let mut cc = ClusterClient::connect(&addrs).unwrap();
+    for i in 0..100 {
+        let key = tensor_key("route", i % 7, i as u64);
+        cc.put_tensor(&key, &t(vec![i as f32])).unwrap();
+        let owners = servers.iter().filter(|s| s.store().exists(&key)).count();
+        assert_eq!(owners, 1, "key '{key}' must land on exactly one shard");
+    }
+}
+
+#[test]
+fn cluster_full_parity_meta_poll_info() {
+    // The ClusterClient side of the DataStore surface that used to be
+    // Client-only: metadata, polling, info aggregation, batched gather.
+    let servers = [start(Engine::KeyDb), start(Engine::KeyDb), start(Engine::KeyDb)];
+    let addrs: Vec<_> = servers.iter().map(|s| s.addr).collect();
+    let mut cc = ClusterClient::connect(&addrs).unwrap();
+
+    cc.put_meta("latest_step", "3").unwrap();
+    assert_eq!(cc.get_meta("latest_step").unwrap(), Some("3".into()));
+    assert_eq!(cc.get_meta("absent").unwrap(), None);
+
+    let keys: Vec<String> = (0..8).map(|r| tensor_key("p", r, 0)).collect();
+    for (r, k) in keys.iter().enumerate() {
+        cc.put_tensor(k, &t(vec![r as f32])).unwrap();
+    }
+    cc.poll_keys(&keys, &quick_poll()).unwrap();
+    let got = cc.mget_tensors(&keys).unwrap();
+    for (r, g) in got.iter().enumerate() {
+        assert_eq!(g.to_f32().unwrap(), vec![r as f32]);
+    }
+    assert!(matches!(
+        cc.poll_keys(&["p_rank99_step9".to_string()], &PollConfig::new(
+            Duration::from_millis(1),
+            Duration::from_millis(5),
+            Duration::from_millis(50),
+        )),
+        Err(Error::Timeout(_))
+    ));
+
+    let info = cc.info().unwrap();
+    assert_eq!(info.keys, 8 + 1, "aggregated key count spans shards");
+    assert_eq!(info.engine, "keydb");
+
+    cc.flush_all().unwrap();
+    assert_eq!(cc.info().unwrap().keys, 0);
+}
+
+#[test]
+fn batch_roundtrip_equals_sequential_calls() {
+    // The same operation list run sequentially on one server and pipelined
+    // on a fresh one must produce identical per-op results and store state.
+    let a = t(vec![1.0, 2.0]);
+    let b = t(vec![3.0]);
+
+    let seq_server = start(Engine::Redis);
+    let mut c = Client::connect(seq_server.addr).unwrap();
+    c.put_tensor("a", &a).unwrap();
+    c.put_tensor("b", &b).unwrap();
+    let seq = vec![
+        Response::Ok,
+        Response::Ok,
+        Response::Tensor(c.get_tensor("a").unwrap()),
+        Response::Bool(c.exists("b").unwrap()),
+        if c.del_tensor("b").unwrap() { Response::Ok } else { Response::NotFound },
+        Response::Bool(c.exists("b").unwrap()),
+        {
+            c.put_meta("m", "v").unwrap();
+            Response::Ok
+        },
+        Response::Meta(c.get_meta("m").unwrap().unwrap()),
+        match c.get_meta("absent").unwrap() {
+            Some(v) => Response::Meta(v),
+            None => Response::NotFound,
+        },
+    ];
+    let seq_keys = c.list_keys("").unwrap();
+
+    let batch_server = start(Engine::Redis);
+    let mut c = Client::connect(batch_server.addr).unwrap();
+    let mut p = Pipeline::new();
+    p.put_tensor("a", &a)
+        .put_tensor("b", &b)
+        .get_tensor("a")
+        .exists("b")
+        .del_tensor("b")
+        .exists("b")
+        .put_meta("m", "v")
+        .get_meta("m")
+        .get_meta("absent");
+    let batched = c.execute(p).unwrap();
+    assert_eq!(batched, seq, "batched results mirror sequential calls");
+    assert_eq!(c.list_keys("").unwrap(), seq_keys, "store state matches");
+}
+
+#[test]
+fn batch_is_one_frame_and_mget_tensors_share_one_allocation() {
+    let server = start(Engine::Redis);
+    let mut c = Client::connect(server.addr).unwrap();
+    let keys: Vec<String> = (0..6).map(|r| tensor_key("g", r, 0)).collect();
+    {
+        let mut p = Pipeline::new();
+        for (r, k) in keys.iter().enumerate() {
+            p.put_tensor(k, &t(vec![r as f32; 64]));
+        }
+        let before = frames(&server);
+        for r in c.execute(p).unwrap() {
+            r.expect_ok().unwrap();
+        }
+        assert_eq!(frames(&server) - before, 1, "6 puts pipelined into one frame");
+    }
+    let before = frames(&server);
+    let got = c.mget_tensors(&keys).unwrap();
+    assert_eq!(frames(&server) - before, 1, "gather is one round trip");
+    for (r, g) in got.iter().enumerate() {
+        assert_eq!(g.to_f32().unwrap(), vec![r as f32; 64]);
+    }
+    // Zero-copy: every tensor in the batched reply aliases the single
+    // response frame read off the socket.
+    for w in got.windows(2) {
+        assert!(
+            w[0].data.shares_allocation(&w[1].data),
+            "batch reply payloads must share the frame allocation"
+        );
+    }
+    // And a missing key surfaces as KeyNotFound naming it.
+    let mut bad = keys.clone();
+    bad.push("g_rank99_step0".into());
+    assert!(matches!(
+        c.mget_tensors(&bad),
+        Err(Error::KeyNotFound(k)) if k == "g_rank99_step0"
+    ));
+}
+
+#[test]
+fn error_mid_batch_reports_per_entry_results() {
+    // The server runs without a model runtime, so RunModel fails at
+    // *execution* time — the batch must report that failure in its slot and
+    // keep executing the remaining entries.
+    let server = start(Engine::Redis);
+    let mut c = Client::connect(server.addr).unwrap();
+    let reqs = vec![
+        Request::PutTensor { key: "ok1".into(), tensor: t(vec![1.0]) },
+        Request::GetTensor { key: "missing".into() },
+        Request::RunModel {
+            key: "ghost".into(),
+            in_keys: vec!["ok1".into()],
+            out_keys: vec!["y".into()],
+            device: situ::proto::Device::Cpu,
+        },
+        Request::PutTensor { key: "ok2".into(), tensor: t(vec![2.0]) },
+    ];
+    let results = c.exec_requests(&reqs).unwrap();
+    assert_eq!(results[0], Response::Ok);
+    assert_eq!(results[1], Response::NotFound);
+    assert!(matches!(results[2], Response::Error(_)), "failed entry reports in place");
+    assert_eq!(results[3], Response::Ok, "entries after a failure still run");
+    assert!(c.exists("ok2").unwrap(), "batch was not aborted mid-way");
+    // And the typed conversion layer surfaces the entry error as Remote.
+    assert!(matches!(
+        results[2].clone().expect_ok(),
+        Err(Error::Remote(_))
+    ));
+}
+
+#[test]
+fn dataloader_single_round_trips_and_deployment_portability() {
+    use situ::ml::DataLoader;
+
+    // The acceptance property: gather and wait_for_step cost exactly one
+    // request frame per call against a single database, and the identical
+    // dataloader code runs against both deployments via DataStore.
+    fn exercise<C: DataStore>(mut client: C, field: &str) -> Vec<Tensor> {
+        for r in 0..4 {
+            client.put_tensor(&tensor_key(field, r, 7), &t(vec![r as f32, 7.0])).unwrap();
+        }
+        let mut dl = DataLoader::new(client, vec![0, 1, 2, 3], field, 42);
+        dl.wait_for_step(7, &quick_poll()).unwrap();
+        dl.gather(7).unwrap()
+    }
+
+    // Co-located: count frames around the two per-epoch calls.
+    let server = start(Engine::Redis);
+    let mut client = Client::connect(server.addr).unwrap();
+    for r in 0..4 {
+        client.put_tensor(&tensor_key("solo", r, 7), &t(vec![r as f32, 7.0])).unwrap();
+    }
+    let mut dl = DataLoader::new(client, vec![0, 1, 2, 3], "solo", 42);
+    let before = frames(&server);
+    dl.wait_for_step(7, &quick_poll()).unwrap();
+    assert_eq!(frames(&server) - before, 1, "wait_for_step is one request frame");
+    let before = frames(&server);
+    let got = dl.gather(7).unwrap();
+    assert_eq!(frames(&server) - before, 1, "gather is one request frame");
+    assert_eq!(got.len(), 4);
+
+    // Same code against both deployments.
+    let single = start(Engine::KeyDb);
+    let got_single = exercise(Client::connect(single.addr).unwrap(), "port");
+    let shards = [start(Engine::KeyDb), start(Engine::KeyDb)];
+    let addrs: Vec<_> = shards.iter().map(|s| s.addr).collect();
+    let got_cluster = exercise(ClusterClient::connect(&addrs).unwrap(), "port");
+    assert_eq!(got_single, got_cluster, "identical data through either deployment");
+}
+
+#[test]
+fn cluster_pipeline_partitions_and_reassembles_in_order() {
+    let servers = [start(Engine::Redis), start(Engine::Redis), start(Engine::Redis)];
+    let addrs: Vec<_> = servers.iter().map(|s| s.addr).collect();
+    let mut cc = ClusterClient::connect(&addrs).unwrap();
+    let n = 20usize;
+    let mut p = Pipeline::new();
+    for i in 0..n {
+        p.put_tensor(&format!("pk_{i}"), &t(vec![i as f32]));
+    }
+    for r in cc.execute(p).unwrap() {
+        r.expect_ok().unwrap();
+    }
+    let mut p = Pipeline::new();
+    for i in 0..n {
+        p.get_tensor(&format!("pk_{i}"));
+    }
+    let results = cc.execute(p).unwrap();
+    assert_eq!(results.len(), n);
+    for (i, r) in results.into_iter().enumerate() {
+        // Order is submission order even though shards answered separately.
+        let tensor = r.expect_tensor(&format!("pk_{i}")).unwrap();
+        assert_eq!(tensor.to_f32().unwrap(), vec![i as f32]);
+    }
+    // Whole-database ops cannot be pipelined on a cluster.
+    let mut p = Pipeline::new();
+    p.push(Request::Info);
+    assert!(matches!(cc.execute(p), Err(Error::Invalid(_))));
+}
+
+#[test]
+fn connect_retry_does_not_sleep_after_final_attempt() {
+    // Grab a port that nothing listens on.
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap()
+    };
+    let delay = Duration::from_millis(150);
+    let t0 = std::time::Instant::now();
+    let err = Client::connect_retry(dead, 3, delay);
+    let elapsed = t0.elapsed();
+    assert!(err.is_err());
+    // 3 attempts → 2 inter-attempt sleeps (~300 ms); sleeping after the
+    // final failure too would push past 3 delays.  Loopback
+    // connection-refused is ~instant, so the bound is all sleep time.
+    assert!(
+        elapsed < delay * 3,
+        "connect_retry slept after the last attempt: {elapsed:?}"
+    );
+}
+
+#[test]
 fn large_tensor_roundtrip() {
     let server = start(Engine::Redis);
     let mut c = Client::connect(server.addr).unwrap();
@@ -171,6 +468,24 @@ fn server_store_holds_client_payload_without_copy() {
     assert!(a.data.shares_allocation(&b.data), "store hands out views, not copies");
     assert_eq!(a.data.as_ptr(), b.data.as_ptr());
     assert_eq!(a.to_f32().unwrap()[4095], 4095.0);
+}
+
+#[test]
+fn batched_put_stores_payload_without_copy() {
+    // The pipelined ingress path preserves zero-copy: a tensor sent inside
+    // a Batch frame is stored as a view into that frame.
+    let server = start(Engine::KeyDb);
+    let mut c = Client::connect(server.addr).unwrap();
+    let mut p = Pipeline::new();
+    p.put_tensor("bz", &t((0..2048).map(|i| i as f32).collect()));
+    p.put_meta("step", "0");
+    for r in c.execute(p).unwrap() {
+        r.expect_ok().unwrap();
+    }
+    let a = server.store().get_tensor("bz").unwrap();
+    let b = server.store().get_tensor("bz").unwrap();
+    assert!(a.data.shares_allocation(&b.data));
+    assert_eq!(a.to_f32().unwrap()[2047], 2047.0);
 }
 
 #[test]
@@ -221,6 +536,5 @@ fn overwrite_is_last_writer_wins() {
     c.put_tensor("k", &t(vec![1.0, 2.0])).unwrap();
     c.put_tensor("k", &t(vec![9.0])).unwrap();
     assert_eq!(c.get_tensor("k").unwrap().to_f32().unwrap(), vec![9.0]);
-    let (_, bytes, ..) = c.info().unwrap();
-    assert_eq!(bytes, 4);
+    assert_eq!(c.info().unwrap().bytes, 4);
 }

@@ -2,7 +2,7 @@
 //! put_model → put_tensor → run_model → get_tensor (paper Fig 1b), plus
 //! failure injection on the model path.
 
-use situ::client::Client;
+use situ::client::{Client, DataStore};
 use situ::db::{DbServer, Engine, ServerConfig};
 use situ::proto::Device;
 use situ::tensor::Tensor;
@@ -40,8 +40,7 @@ fn three_step_inference_over_tcp() {
     let (_, mn, mx) = pred.f32_stats().unwrap();
     assert!(mn.is_finite() && mx.is_finite() && mx > mn);
 
-    let (_, _, _, models, _) = c.info().unwrap();
-    assert_eq!(models, 1);
+    assert_eq!(c.info().unwrap().models, 1);
 }
 
 #[test]

@@ -24,9 +24,9 @@ fn driver_launches_colocated_plan() {
     assert_eq!(driver.addrs().len(), 2, "one DB per node");
     // Both instances reachable.
     for addr in driver.addrs() {
+        use situ::client::DataStore;
         let mut c = situ::client::Client::connect(addr).unwrap();
-        let (keys, ..) = c.info().unwrap();
-        assert_eq!(keys, 0);
+        assert_eq!(c.info().unwrap().keys, 0);
     }
     driver.shutdown();
 }
@@ -115,8 +115,7 @@ fn trainer_times_out_without_producer() {
         sim_ranks: 1,
         epochs: 1,
         field: "field".into(),
-        poll_interval: std::time::Duration::from_millis(5),
-        poll_max_wait: std::time::Duration::from_millis(100),
+        poll: situ::client::PollConfig::with_max_wait(std::time::Duration::from_millis(100)),
     };
     let exec = situ::runtime::Executor::new().unwrap();
     let mut trainer = situ::ml::Trainer::new(t_cfg, &dir, exec).unwrap();

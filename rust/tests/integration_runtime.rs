@@ -7,7 +7,7 @@
 
 use std::path::PathBuf;
 
-use situ::ml::{DataLoader, ParamState};
+use situ::ml::{stack_batch, ParamState};
 use situ::runtime::{Executor, Manifest};
 use situ::tensor::Tensor;
 use situ::util::rng::Rng;
@@ -236,7 +236,7 @@ fn dataloader_stack_matches_trainstep_batch_shape() {
         vec![0.5; m.model.channels * m.model.n_points],
     )
     .unwrap();
-    let batch = DataLoader::stack_batch(&[&sample], m.model.batch).unwrap();
+    let batch = stack_batch(&[&sample], m.model.batch).unwrap();
     let want = &m.artifact("train_step").unwrap().inputs.last().unwrap().shape;
     assert_eq!(&batch.shape, want);
 }
