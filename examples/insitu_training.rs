@@ -76,6 +76,13 @@ fn main() -> situ::Result<()> {
         report.solver_overhead_frac * 100.0
     );
     println!("spatial compression factor: {:.0}x", report.compression_factor);
+    println!(
+        "db footprint: {} resident / {} high-water bytes, {} keys evicted, {} busy rejections",
+        report.db.bytes,
+        report.db.high_water_bytes,
+        report.db.evicted_keys,
+        report.db.busy_rejections
+    );
     println!("wall time: {wall:.1} s");
     Ok(())
 }

@@ -26,6 +26,7 @@ fn main() {
         snapshot_every: 2,
         solver_steps: 50,
         seed: 0,
+        ..Default::default()
     };
     let report = run_insitu_training(&cfg).expect("in situ run");
 

@@ -1,0 +1,163 @@
+//! fig_bounded_memory — steady-state store footprint under memory
+//! governance.
+//!
+//! An appending producer publishes step generations over TCP against three
+//! store configurations:
+//!
+//! * `append_unbounded` — the seed behavior: resident bytes grow linearly
+//!   with step count (the OOM trajectory on long runs);
+//! * `append_windowed`  — sliding-window retention + byte cap: bytes
+//!   plateau at `window` generations and stay flat;
+//! * `overwrite`        — the paper's stable-key republish: flat at one
+//!   generation by construction.
+//!
+//! Prints a per-mode summary and, with `SITU_BENCH_JSON=path`, records the
+//! bytes-vs-step series and eviction counters (the BENCH_PR3.json
+//! acceptance numbers).  `SITU_BENCH_SMOKE=1` shortens the run for CI;
+//! `SITU_BENCH_STEPS=N` overrides the step count.
+
+use situ::client::{stable_key, tensor_key, Client, DataStore};
+use situ::db::{DbServer, Engine, RetentionConfig, ServerConfig};
+use situ::telemetry::Table;
+use situ::tensor::Tensor;
+
+struct ModeResult {
+    name: &'static str,
+    steps: u64,
+    final_bytes: u64,
+    peak_bytes: u64,
+    high_water: u64,
+    evicted_keys: u64,
+    flat_after_warmup: bool,
+    series: Vec<u64>,
+}
+
+fn main() {
+    let smoke = std::env::var("SITU_BENCH_SMOKE").is_ok();
+    let steps: u64 = std::env::var("SITU_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 30 } else { 250 });
+    let ranks = 4usize;
+    let elems = 16 * 1024usize; // 64 KiB per tensor
+    let payload = (elems * 4) as u64;
+    let window = 4u64;
+    let cap = (window + 2) * ranks as u64 * payload;
+
+    let modes: Vec<(&'static str, RetentionConfig, bool)> = vec![
+        ("append_unbounded", RetentionConfig::UNBOUNDED, false),
+        ("append_windowed", RetentionConfig { window, max_bytes: cap }, false),
+        ("overwrite", RetentionConfig::UNBOUNDED, true),
+    ];
+
+    let mut table = Table::new(
+        "bounded-memory steady state: store bytes vs producer steps",
+        &["mode", "steps", "final bytes", "peak bytes", "evicted keys", "flat?"],
+    );
+    let mut results: Vec<ModeResult> = Vec::new();
+
+    for (name, retention, overwrite) in modes {
+        let server = DbServer::start(ServerConfig {
+            engine: Engine::KeyDb,
+            with_models: false,
+            retention,
+            ..Default::default()
+        })
+        .expect("server");
+        let mut c = Client::connect(server.addr).expect("client");
+        let mut series: Vec<u64> = Vec::with_capacity(steps as usize);
+        for step in 0..steps {
+            for r in 0..ranks {
+                let snap = Tensor::from_f32(&[elems], vec![step as f32; elems]).unwrap();
+                let key = if overwrite {
+                    stable_key("fig", r)
+                } else {
+                    tensor_key("fig", r, step)
+                };
+                c.put_tensor(&key, &snap).expect("put under governance");
+            }
+            series.push(server.store().n_bytes());
+        }
+        let info = c.info().expect("info");
+        // "Flat" = bytes constant over the post-warmup half of the run.
+        let warm = (steps as usize) / 2;
+        let tail = &series[warm..];
+        let flat = tail.iter().max() == tail.iter().min();
+        table.row(&[
+            name.to_string(),
+            steps.to_string(),
+            info.bytes.to_string(),
+            series.iter().max().copied().unwrap_or(0).to_string(),
+            info.evicted_keys.to_string(),
+            flat.to_string(),
+        ]);
+        results.push(ModeResult {
+            name,
+            steps,
+            final_bytes: info.bytes,
+            peak_bytes: series.iter().max().copied().unwrap_or(0),
+            high_water: info.high_water_bytes,
+            evicted_keys: info.evicted_keys,
+            flat_after_warmup: flat,
+            series,
+        });
+    }
+    table.print();
+
+    // Smoke-mode structural assertions (CI runs this bench): governance
+    // holds memory flat where unbounded append grows linearly.
+    let unbounded = &results[0];
+    let windowed = &results[1];
+    let overwrite = &results[2];
+    assert_eq!(
+        unbounded.final_bytes,
+        steps * ranks as u64 * payload,
+        "unbounded append grows linearly"
+    );
+    assert!(windowed.flat_after_warmup, "windowed run must plateau");
+    assert_eq!(windowed.final_bytes, window * ranks as u64 * payload);
+    assert!(windowed.peak_bytes <= cap, "byte cap respected");
+    assert!(windowed.evicted_keys > 0);
+    assert!(overwrite.flat_after_warmup);
+    assert_eq!(overwrite.final_bytes, ranks as u64 * payload);
+    println!(
+        "steady state: unbounded={} windowed={} overwrite={} bytes after {} steps",
+        unbounded.final_bytes, windowed.final_bytes, overwrite.final_bytes, steps
+    );
+
+    if let Ok(path) = std::env::var("SITU_BENCH_JSON") {
+        let mut s = String::from("{\n  \"bench\": \"fig_bounded_memory\",\n");
+        s.push_str(&format!(
+            "  \"config\": {{\"ranks\": {ranks}, \"payload_bytes\": {payload}, \
+             \"window\": {window}, \"max_bytes\": {cap}}},\n"
+        ));
+        s.push_str("  \"modes\": [\n");
+        for (i, r) in results.iter().enumerate() {
+            // Thin the series to at most 32 samples to keep the JSON small.
+            let stride = (r.series.len() / 32).max(1);
+            let sampled: Vec<String> = r
+                .series
+                .iter()
+                .step_by(stride)
+                .map(|b| b.to_string())
+                .collect();
+            s.push_str(&format!(
+                "    {{\"mode\": \"{}\", \"steps\": {}, \"final_bytes\": {}, \
+                 \"peak_bytes\": {}, \"high_water_bytes\": {}, \"evicted_keys\": {}, \
+                 \"flat_after_warmup\": {}, \"bytes_series\": [{}]}}{}\n",
+                r.name,
+                r.steps,
+                r.final_bytes,
+                r.peak_bytes,
+                r.high_water,
+                r.evicted_keys,
+                r.flat_after_warmup,
+                sampled.join(", "),
+                if i + 1 == results.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(&path, &s).expect("write SITU_BENCH_JSON");
+        println!("bench results written to {path}");
+    }
+}

@@ -31,6 +31,7 @@ fn main() {
         snapshot_every: 2,
         solver_steps: 30,
         seed: 0,
+        ..Default::default()
     };
     let report = run_insitu_training(&cfg).expect("in situ run");
     report.solver_table.print();

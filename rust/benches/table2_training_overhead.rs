@@ -24,6 +24,7 @@ fn main() {
         snapshot_every: 2,
         solver_steps: 60,
         seed: 1,
+        ..Default::default()
     };
     let report = run_insitu_training(&cfg).expect("in situ run");
     report.trainer_table.print();

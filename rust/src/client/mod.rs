@@ -56,15 +56,25 @@ use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
 
 use crate::db::cluster::SlotMap;
+use crate::db::store::RetentionConfig;
 use crate::error::{Error, Result};
 use crate::proto::frame::{begin_split_frame, end_split_frame, read_frame, FrameSink};
 use crate::proto::{message, DbInfo, Device, Request, Response};
 use crate::tensor::{Bytes, Tensor};
 
 /// Key scheme used across the framework: tensors are unique per rank and
-/// step so nothing is overwritten (paper §2.2).
+/// step so nothing is overwritten (paper §2.2).  Step keys are what the
+/// store's sliding-window retention groups into generations
+/// ([`crate::db::store::parse_step_key`]).
 pub fn tensor_key(field: &str, rank: usize, step: u64) -> String {
     format!("{field}_rank{rank}_step{step}")
+}
+
+/// Key scheme for the paper's *overwrite* publishing mode: each rank
+/// republishes its newest snapshot under a stable key, so the previous
+/// generation is retired in place and memory is bounded by construction.
+pub fn stable_key(field: &str, rank: usize) -> String {
+    format!("{field}_rank{rank}_latest")
 }
 
 /// Reject oversized batches *before* streaming them: the server's decoder
@@ -220,6 +230,16 @@ pub trait DataStore {
 
     /// Delete a tensor; `Ok(false)` if it wasn't present.
     fn del_tensor(&mut self, key: &str) -> Result<bool>;
+
+    /// Delete many tensors in one round trip per database instance
+    /// (partitioned per shard on a cluster).  Returns how many were
+    /// actually present and deleted.
+    fn del_keys(&mut self, keys: &[String]) -> Result<u64>;
+
+    /// Install a retention / capacity policy (broadcast to every shard on
+    /// a cluster, so a clustered deployment's byte budget is
+    /// `max_bytes × shards`).
+    fn set_retention(&mut self, cfg: RetentionConfig) -> Result<()>;
 
     fn exists(&mut self, key: &str) -> Result<bool>;
 
@@ -400,6 +420,28 @@ impl DataStore for Client {
             .expect_deleted()
     }
 
+    fn del_keys(&mut self, keys: &[String]) -> Result<u64> {
+        if keys.is_empty() {
+            return Ok(0);
+        }
+        check_batch_len(keys.len())?;
+        let entries = self
+            .call(&Request::DelKeys { keys: keys.to_vec() })?
+            .expect_batch(keys.len())?;
+        let mut n = 0;
+        for e in entries {
+            if e.expect_deleted()? {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    fn set_retention(&mut self, cfg: RetentionConfig) -> Result<()> {
+        self.call(&Request::Retention { window: cfg.window, max_bytes: cfg.max_bytes })?
+            .expect_ok()
+    }
+
     fn exists(&mut self, key: &str) -> Result<bool> {
         self.call(&Request::Exists { key: key.to_string() })?
             .expect_bool()
@@ -545,6 +587,31 @@ impl DataStore for ClusterClient {
         self.route(key).del_tensor(key)
     }
 
+    /// One `DelKeys` round trip per shard that owns any of the keys.
+    fn del_keys(&mut self, keys: &[String]) -> Result<u64> {
+        let by_shard = self.partition_keys(keys);
+        let mut n = 0;
+        for (shard, idxs) in by_shard.into_iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let sub: Vec<String> = idxs.iter().map(|&i| keys[i].clone()).collect();
+            n += self.shards[shard].del_keys(&sub)?;
+        }
+        Ok(n)
+    }
+
+    /// Broadcast: each shard instance applies the policy to its own store.
+    /// A generation's keys scatter across shards, so each shard windows the
+    /// generations *it* holds — cluster-wide, the newest `window`
+    /// generations of every field are always fully retained.
+    fn set_retention(&mut self, cfg: RetentionConfig) -> Result<()> {
+        for c in &mut self.shards {
+            c.set_retention(cfg)?;
+        }
+        Ok(())
+    }
+
     fn exists(&mut self, key: &str) -> Result<bool> {
         self.route(key).exists(key)
     }
@@ -639,9 +706,11 @@ impl DataStore for ClusterClient {
         Ok(())
     }
 
-    /// Sums keys/bytes/ops across shards.  `models` is the per-shard
-    /// maximum (uploads are broadcast, so summing would multiply-count);
-    /// `engine` is the first shard's.
+    /// Sums keys/bytes/ops and the eviction/high-water/backpressure
+    /// counters across shards.  `models` is the per-shard maximum (uploads
+    /// are broadcast, so summing would multiply-count); `engine` is the
+    /// first shard's.  The summed high-water mark is an upper bound on
+    /// cluster-wide peak residency (shards may not peak simultaneously).
     fn info(&mut self) -> Result<DbInfo> {
         let mut agg = DbInfo::default();
         for c in &mut self.shards {
@@ -650,6 +719,10 @@ impl DataStore for ClusterClient {
             agg.bytes += i.bytes;
             agg.ops += i.ops;
             agg.models = agg.models.max(i.models);
+            agg.high_water_bytes += i.high_water_bytes;
+            agg.evicted_keys += i.evicted_keys;
+            agg.evicted_bytes += i.evicted_bytes;
+            agg.busy_rejections += i.busy_rejections;
             if agg.engine.is_empty() {
                 agg.engine = i.engine;
             }

@@ -47,6 +47,13 @@ pub struct RunConfig {
     pub ml_ranks_per_node: usize,
     /// Seconds each reproducer rank "integrates the equations" per step.
     pub compute_secs: f64,
+    /// Newest step generations each database retains per field (the
+    /// sliding-window retention policy; 0 = keep everything, the paper's
+    /// append-forever default).
+    pub retention_window: u64,
+    /// Byte cap per database instance (0 = unbounded).  Writes that cannot
+    /// fit even after eviction get `busy` backpressure.
+    pub db_max_bytes: u64,
 }
 
 impl Default for RunConfig {
@@ -62,6 +69,8 @@ impl Default for RunConfig {
             warmup: 2,
             ml_ranks_per_node: 4,
             compute_secs: 0.0,
+            retention_window: 0,
+            db_max_bytes: 0,
         }
     }
 }
@@ -86,6 +95,8 @@ impl RunConfig {
         c.warmup = a.usize_or("warmup", c.warmup)?;
         c.ml_ranks_per_node = a.usize_or("ml-ranks-per-node", c.ml_ranks_per_node)?;
         c.compute_secs = a.f64_or("compute-secs", c.compute_secs)?;
+        c.retention_window = a.usize_or("retention-window", c.retention_window as usize)? as u64;
+        c.db_max_bytes = a.usize_or("db-max-bytes", c.db_max_bytes as usize)? as u64;
         if let Some(e) = a.str_opt("engine") {
             c.engine = Engine::parse(e)
                 .ok_or_else(|| Error::Invalid(format!("unknown engine '{e}'")))?;
@@ -122,6 +133,14 @@ mod tests {
         assert_eq!(c.iterations, 40);
         assert_eq!(c.warmup, 2);
         assert_eq!(c.ml_ranks_per_node, 4);
+        assert_eq!((c.retention_window, c.db_max_bytes), (0, 0), "unbounded by default");
+    }
+
+    #[test]
+    fn parses_retention_flags() {
+        let c = parse("bench --retention-window 6 --db-max-bytes 1048576");
+        assert_eq!(c.retention_window, 6);
+        assert_eq!(c.db_max_bytes, 1 << 20);
     }
 
     #[test]

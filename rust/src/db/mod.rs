@@ -19,4 +19,4 @@ pub mod store;
 
 pub use engine::Engine;
 pub use server::{DbServer, ServerConfig};
-pub use store::Store;
+pub use store::{parse_step_key, RetentionConfig, Store};

@@ -16,6 +16,12 @@
 //! per entry, and `PollKeys` waits in the connection thread with capped
 //! exponential backoff, re-entering the gate per probe — so a blocked
 //! consumer never stalls producers on other connections.
+//!
+//! Memory governance: each server applies its [`ServerConfig::retention`]
+//! policy to the store at startup (sliding-window generation retirement
+//! plus a byte cap with `busy` backpressure — see [`crate::db::store`]),
+//! and clients can adjust it at runtime with `Request::Retention`.
+//! Eviction and high-water counters are reported through `INFO`.
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -23,32 +29,36 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::ai::ModelRuntime;
 use crate::db::engine::{CommandGate, Engine};
-use crate::db::store::Store;
+use crate::db::store::{RetentionConfig, Store};
 use crate::error::{Error, Result};
 use crate::proto::frame::{read_frame_into, FrameSink};
 use crate::proto::{message, DbInfo, Request, Response};
 use crate::runtime::Executor;
 use crate::tensor::Bytes;
 
-/// Ceiling for the accept loop's adaptive idle backoff.  Tradeoff: a larger
-/// value means fewer idle wakeups but up to this much extra latency both
-/// for the first `accept` after an idle period and for `shutdown()` joining
-/// the accept thread.
-const ACCEPT_BACKOFF_MAX: std::time::Duration = std::time::Duration::from_millis(50);
+/// Default ceiling for the accept loop's adaptive idle backoff.  Tradeoff:
+/// a larger value means fewer idle wakeups but up to this much extra
+/// latency both for the first `accept` after an idle period and for
+/// `shutdown()` joining the accept thread.  Configurable per server via
+/// [`ServerConfig::accept_backoff_max`].
+const ACCEPT_BACKOFF_MAX: Duration = Duration::from_millis(50);
 
 /// Floor the accept backoff restarts from after any successful accept.
-const ACCEPT_BACKOFF_MIN: std::time::Duration = std::time::Duration::from_millis(1);
+const ACCEPT_BACKOFF_MIN: Duration = Duration::from_millis(1);
 
-/// Read timeout on connection sockets.  Its only purpose is bounding how
-/// long an idle connection thread takes to notice the stop flag, so it is
-/// deliberately long: 1 s cuts idle wakeups 5x versus the previous 200 ms,
-/// at the cost of up to 1 s of shutdown latency per (detached) connection
-/// thread.  `shutdown()` does not join connection threads, so this latency
-/// only delays socket teardown, never the caller.
-const CONN_READ_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(1);
+/// Default read timeout on connection sockets.  Its only purpose is
+/// bounding how long an idle connection thread takes to notice the stop
+/// flag, so it is deliberately long: 1 s cuts idle wakeups 5x versus the
+/// previous 200 ms, at the cost of up to 1 s of shutdown latency per
+/// (detached) connection thread.  `shutdown()` does not join connection
+/// threads, so this latency only delays socket teardown, never the caller.
+/// Tests that start and stop many servers lower it via
+/// [`ServerConfig::conn_read_timeout`].
+const CONN_READ_TIMEOUT: Duration = Duration::from_secs(1);
 
 /// Server configuration (one database instance; the clustered deployment
 /// launches several of these and routes with [`crate::db::cluster`]).
@@ -64,6 +74,17 @@ pub struct ServerConfig {
     /// Enable the model runtime (needs a PJRT executor thread).  Data-only
     /// benches turn this off to skip PJRT startup.
     pub with_models: bool,
+    /// Store retention / capacity policy applied at startup (see
+    /// [`crate::db::store`]); adjustable at runtime via
+    /// `Request::Retention`.  Defaults to unbounded (the seed behavior).
+    pub retention: RetentionConfig,
+    /// Read timeout on connection sockets — bounds how long an idle
+    /// connection thread takes to notice shutdown (defaults documented on
+    /// `CONN_READ_TIMEOUT`).
+    pub conn_read_timeout: Duration,
+    /// Ceiling for the accept loop's adaptive idle backoff — bounds both
+    /// idle-accept latency and `shutdown()` joining the accept thread.
+    pub accept_backoff_max: Duration,
 }
 
 impl Default for ServerConfig {
@@ -73,6 +94,9 @@ impl Default for ServerConfig {
             engine: Engine::Redis,
             cores: 8,
             with_models: true,
+            retention: RetentionConfig::UNBOUNDED,
+            conn_read_timeout: CONN_READ_TIMEOUT,
+            accept_backoff_max: ACCEPT_BACKOFF_MAX,
         }
     }
 }
@@ -104,6 +128,9 @@ impl DbServer {
         let listener = TcpListener::bind(config.addr)?;
         let addr = listener.local_addr()?;
         let store = Arc::new(Store::new());
+        if !config.retention.is_unbounded() {
+            store.set_retention(config.retention);
+        }
         let stop = Arc::new(AtomicBool::new(false));
         let gate = Arc::new(CommandGate::new(config.engine));
 
@@ -112,13 +139,15 @@ impl DbServer {
             let models = models.clone();
             let stop = Arc::clone(&stop);
             let engine = config.engine;
+            let backoff_max = config.accept_backoff_max;
+            let read_timeout = config.conn_read_timeout;
             std::thread::Builder::new()
                 .name(format!("db-accept-{}", addr.port()))
                 .spawn(move || {
                     // Poll for shutdown with a nonblocking accept loop.  The
                     // sleep between polls backs off adaptively: a busy server
                     // accepts with ~1 ms latency, an idle one decays to
-                    // ACCEPT_BACKOFF_MAX between wakeups (kernel backlog
+                    // `accept_backoff_max` between wakeups (kernel backlog
                     // still completes handshakes meanwhile, so connects are
                     // never dropped, just served up to one backoff later).
                     listener.set_nonblocking(true).ok();
@@ -138,13 +167,21 @@ impl DbServer {
                                 std::thread::Builder::new()
                                     .name("db-conn".into())
                                     .spawn(move || {
-                                        let _ = serve_conn(sock, &store, models.as_deref(), &gate, &stop, engine);
+                                        let _ = serve_conn(
+                                            sock,
+                                            &store,
+                                            models.as_deref(),
+                                            &gate,
+                                            &stop,
+                                            engine,
+                                            read_timeout,
+                                        );
                                     })
                                     .ok();
                             }
                             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                                 std::thread::sleep(backoff);
-                                backoff = (backoff * 2).min(ACCEPT_BACKOFF_MAX);
+                                backoff = (backoff * 2).min(backoff_max);
                             }
                             Err(_) => break,
                         }
@@ -194,8 +231,9 @@ fn serve_conn(
     gate: &CommandGate,
     stop: &AtomicBool,
     engine: Engine,
+    read_timeout: Duration,
 ) -> Result<()> {
-    sock.set_read_timeout(Some(CONN_READ_TIMEOUT))?;
+    sock.set_read_timeout(Some(read_timeout))?;
     let mut writer = sock.try_clone()?;
     let mut reader = BufReader::with_capacity(256 * 1024, sock);
     // Scratch frame buffer, reused across requests the server fully
@@ -438,11 +476,30 @@ pub fn execute(
                 Err(e) => Response::Error(e.to_string()),
             },
         },
+        Request::DelKeys { keys } => Response::Batch(
+            keys.iter()
+                .map(|k| {
+                    if store.del_tensor(k) {
+                        Response::Ok
+                    } else {
+                        Response::NotFound
+                    }
+                })
+                .collect(),
+        ),
+        Request::Retention { window, max_bytes } => {
+            store.set_retention(RetentionConfig { window, max_bytes });
+            Response::Ok
+        }
         Request::Info => Response::Info(DbInfo {
             keys: store.n_keys(),
             bytes: store.n_bytes(),
             ops: store.n_ops(),
             models: models.map(|m| m.n_models()).unwrap_or(0),
+            high_water_bytes: store.high_water_bytes(),
+            evicted_keys: store.counters.evicted_keys.load(Ordering::Relaxed),
+            evicted_bytes: store.counters.evicted_bytes.load(Ordering::Relaxed),
+            busy_rejections: store.counters.busy_rejections.load(Ordering::Relaxed),
             engine: engine.name().to_string(),
         }),
         Request::FlushAll => {

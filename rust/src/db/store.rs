@@ -3,9 +3,39 @@
 //! Keys hash to one of `N_SHARDS` independently-locked shards, so concurrent
 //! clients (one per simulation rank) rarely contend — the property the paper
 //! relies on for "low-latency access to many clients in parallel".
+//!
+//! # Capacity governance and retention
+//!
+//! Keeping training data in memory makes memory the binding constraint for
+//! long-running simulations; the paper resolves it by retiring snapshots
+//! rather than appending forever (§2, §4 — the same moving-window discipline
+//! the SmartSim ocean-modeling and OpenFOAM couplings use).  The store
+//! implements that as an optional [`RetentionConfig`]:
+//!
+//! * **Sliding window** — tensor keys following the framework scheme
+//!   `{field}_rank{r}_step{s}` are grouped into *generations* (one per
+//!   `(field, step)`).  With `window = W > 0`, once a field accumulates more
+//!   than `W` generations the oldest is retired on the spot, so steady-state
+//!   footprint is `W` generations per field regardless of run length.
+//! * **Byte cap** — with `max_bytes > 0` a write that would exceed the cap
+//!   first evicts the oldest generations *outside* every field's protected
+//!   window, then falls back to least-recently-used eviction of untracked
+//!   keys (keys that don't parse as step keys, e.g. the overwrite-mode
+//!   `{field}_rank{r}_latest` scheme).  If nothing evictable remains the
+//!   write is rejected with [`Error::Busy`] — explicit producer
+//!   backpressure instead of OOM.
+//!
+//! Metadata entries are not byte-accounted (they are tiny strings) and are
+//! never evicted.  Both limits default to 0 (= the seed's unbounded append
+//! behavior), and the governed bookkeeping is only engaged when a policy is
+//! set: ungoverned puts take exactly the old lock-per-shard fast path.
+//!
+//! Lock order: the retention index mutex is always acquired *before* any
+//! shard mutex, never the reverse — eviction (index → shards) can therefore
+//! never deadlock against writes.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::error::{Error, Result};
@@ -19,6 +49,48 @@ struct Shard {
     metas: HashMap<String, String>,
 }
 
+/// Retention / capacity policy for one store instance.  `0` disables a
+/// limit; the default is fully unbounded (the seed behavior).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RetentionConfig {
+    /// Newest step generations kept per field.  When a field accumulates
+    /// more than `window` generations the oldest is retired immediately.
+    /// `0` disables the window; under a byte cap only the newest generation
+    /// of each field is then protected from eviction.
+    pub window: u64,
+    /// Byte capacity for tensor payloads.  A write that cannot fit even
+    /// after eviction fails with [`Error::Busy`].  `0` = unbounded.
+    pub max_bytes: u64,
+}
+
+impl RetentionConfig {
+    pub const UNBOUNDED: RetentionConfig = RetentionConfig { window: 0, max_bytes: 0 };
+
+    pub fn is_unbounded(&self) -> bool {
+        self.window == 0 && self.max_bytes == 0
+    }
+}
+
+/// Parse the framework key scheme `{field}_rank{r}_step{s}` into the
+/// generation identity `(field, step)`.  Keys that don't follow the scheme
+/// (e.g. the overwrite-mode `{field}_rank{r}_latest`) return `None` and
+/// fall under LRU retention instead of the sliding window.
+pub fn parse_step_key(key: &str) -> Option<(&str, u64)> {
+    let si = key.rfind("_step")?;
+    let step = parse_digits(&key[si + "_step".len()..])?;
+    let head = &key[..si];
+    let ri = head.rfind("_rank")?;
+    parse_digits(&head[ri + "_rank".len()..])?;
+    Some((&head[..ri], step))
+}
+
+fn parse_digits(s: &str) -> Option<u64> {
+    if s.is_empty() || !s.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    s.parse().ok()
+}
+
 /// Operation counters exposed via `INFO` (and consumed by the benches).
 #[derive(Debug, Default)]
 pub struct Counters {
@@ -30,12 +102,187 @@ pub struct Counters {
     /// pipelining tests and the microbench read this to prove a gather
     /// costs one round trip.
     pub frames: AtomicU64,
+    /// Tensor keys removed by the retention policy (window retirement plus
+    /// byte-cap eviction); explicit `del` operations do not count.
+    pub evicted_keys: AtomicU64,
+    /// Payload bytes freed by eviction.
+    pub evicted_bytes: AtomicU64,
+    /// Writes rejected with [`Error::Busy`] because nothing evictable
+    /// remained under the byte cap.
+    pub busy_rejections: AtomicU64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct UntrackedEntry {
+    bytes: u64,
+    /// Monotonic recency stamp (bumped on put and get) — the LRU key.
+    tick: u64,
+}
+
+/// Bookkeeping behind the retention policy.  Mirrors the tensor namespace
+/// exactly while governance is enabled: every tensor key is either a member
+/// of a `(field, step)` generation or an untracked LRU entry.
+#[derive(Default)]
+struct RetentionIndex {
+    cfg: RetentionConfig,
+    /// field → step → members `(key, bytes)` of that generation.
+    gens: BTreeMap<String, BTreeMap<u64, Vec<(String, u64)>>>,
+    untracked: HashMap<String, UntrackedEntry>,
+    tick: u64,
+}
+
+impl RetentionIndex {
+    fn size_of(&self, key: &str) -> u64 {
+        match parse_step_key(key) {
+            Some((field, step)) => self
+                .gens
+                .get(field)
+                .and_then(|steps| steps.get(&step))
+                .and_then(|m| m.iter().find(|(k, _)| k.as_str() == key))
+                .map(|(_, b)| *b)
+                .unwrap_or(0),
+            None => self.untracked.get(key).map(|e| e.bytes).unwrap_or(0),
+        }
+    }
+
+    fn record_put(&mut self, key: &str, bytes: u64) {
+        match parse_step_key(key) {
+            Some((field, step)) => {
+                let members = self
+                    .gens
+                    .entry(field.to_string())
+                    .or_default()
+                    .entry(step)
+                    .or_default();
+                match members.iter_mut().find(|(k, _)| k.as_str() == key) {
+                    Some(m) => m.1 = bytes,
+                    None => members.push((key.to_string(), bytes)),
+                }
+            }
+            None => {
+                self.tick += 1;
+                let tick = self.tick;
+                self.untracked.insert(key.to_string(), UntrackedEntry { bytes, tick });
+            }
+        }
+    }
+
+    fn record_del(&mut self, key: &str) {
+        match parse_step_key(key) {
+            Some((field, step)) => {
+                let mut field_empty = false;
+                if let Some(steps) = self.gens.get_mut(field) {
+                    let mut gen_empty = false;
+                    if let Some(members) = steps.get_mut(&step) {
+                        members.retain(|(k, _)| k.as_str() != key);
+                        gen_empty = members.is_empty();
+                    }
+                    if gen_empty {
+                        steps.remove(&step);
+                    }
+                    field_empty = steps.is_empty();
+                }
+                if field_empty {
+                    self.gens.remove(field);
+                }
+            }
+            None => {
+                self.untracked.remove(key);
+            }
+        }
+    }
+
+    fn touch(&mut self, key: &str) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(e) = self.untracked.get_mut(key) {
+            e.tick = tick;
+        }
+    }
+
+    fn gen_count(&self, field: &str) -> usize {
+        self.gens.get(field).map_or(0, |s| s.len())
+    }
+
+    fn oldest_step(&self, field: &str) -> Option<u64> {
+        self.gens.get(field).and_then(|s| s.keys().next().copied())
+    }
+
+    /// Oldest generation eviction may take under byte pressure: one beyond
+    /// its field's protected window (the newest `window` generations, or
+    /// just the newest one when `window == 0`).
+    ///
+    /// The incoming key's own generation participates in the ordering: an
+    /// append that opens generation `W+1` may retire the oldest resident
+    /// one to make room for itself, but a *stale* write (a restarted
+    /// producer replaying an old step) ranks below the retained window and
+    /// therefore may never displace newer data — it gets backpressure
+    /// instead.
+    fn oldest_evictable_gen(&self, incoming: Option<(&str, u64)>) -> Option<(String, u64)> {
+        let protect = if self.cfg.window > 0 { self.cfg.window as usize } else { 1 };
+        let mut best: Option<(String, u64)> = None;
+        for (field, steps) in &self.gens {
+            let inc_step = match incoming {
+                Some((f, s)) if f == field.as_str() => Some(s),
+                _ => None,
+            };
+            // Combined ordering of resident generations plus the incoming
+            // one (tiny: at most window + slack entries per field).
+            let mut combined: Vec<u64> = steps.keys().copied().collect();
+            if let Some(s) = inc_step {
+                if !steps.contains_key(&s) {
+                    combined.push(s);
+                    combined.sort_unstable();
+                }
+            }
+            if combined.len() <= protect {
+                continue;
+            }
+            let evictable = combined.len() - protect;
+            for &step in combined.iter().take(evictable) {
+                if inc_step == Some(step) {
+                    // The generation being written occupies this evictable
+                    // slot itself; nothing newer is sacrificed for it.
+                    continue;
+                }
+                let older = match &best {
+                    None => true,
+                    Some((_, bs)) => step < *bs,
+                };
+                if older {
+                    best = Some((field.clone(), step));
+                }
+                break;
+            }
+        }
+        best
+    }
+
+    /// Least-recently-used untracked key, excluding the one being written.
+    fn lru_untracked(&self, exclude: &str) -> Option<String> {
+        self.untracked
+            .iter()
+            .filter(|(k, _)| k.as_str() != exclude)
+            .min_by_key(|(_, e)| e.tick)
+            .map(|(k, _)| k.clone())
+    }
+
+    fn clear(&mut self) {
+        self.gens.clear();
+        self.untracked.clear();
+    }
 }
 
 /// The node-local store.
 pub struct Store {
     shards: Vec<Mutex<Shard>>,
     bytes: AtomicU64,
+    /// Lifetime high-water mark of `bytes` (never reset, even by flush).
+    high_water: AtomicU64,
+    /// Whether a retention policy is active.  Checked lock-free on the hot
+    /// path so ungoverned stores pay nothing for the subsystem.
+    governed: AtomicBool,
+    retention: Mutex<RetentionIndex>,
     pub counters: Counters,
 }
 
@@ -50,6 +297,9 @@ impl Store {
         Store {
             shards: (0..N_SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
             bytes: AtomicU64::new(0),
+            high_water: AtomicU64::new(0),
+            governed: AtomicBool::new(false),
+            retention: Mutex::new(RetentionIndex::default()),
             counters: Counters::default(),
         }
     }
@@ -64,20 +314,48 @@ impl Store {
         &self.shards[(h % N_SHARDS as u64) as usize]
     }
 
-    /// Insert or overwrite a tensor (the paper's `put_tensor`).
+    /// Install (or change) the retention policy and enforce it immediately.
+    ///
+    /// Enabling governance on a populated store rebuilds the index from the
+    /// shards; writes racing the very enable may stay untracked until their
+    /// next overwrite (byte accounting stays exact either way — only their
+    /// eviction eligibility is delayed).
+    pub fn set_retention(&self, cfg: RetentionConfig) {
+        // Raise the flag before rebuilding so racing writes start taking
+        // the governed (index-maintaining) path while we scan.
+        let was = self.governed.swap(!cfg.is_unbounded(), Ordering::SeqCst);
+        let mut ret = self.retention.lock().unwrap();
+        ret.cfg = cfg;
+        if cfg.is_unbounded() {
+            ret.clear();
+            return;
+        }
+        if !was {
+            ret.clear();
+            for sh in &self.shards {
+                let s = sh.lock().unwrap();
+                for (k, t) in &s.tensors {
+                    ret.record_put(k, t.nbytes() as u64);
+                }
+            }
+        }
+        self.enforce(&mut ret);
+    }
+
+    pub fn retention(&self) -> RetentionConfig {
+        self.retention.lock().unwrap().cfg
+    }
+
+    /// Shard insert plus byte / high-water accounting, shared by the
+    /// governed and ungoverned put paths.
     ///
     /// Zero-copy: the shard takes the tensor's shared payload buffer by
     /// refcount — when the caller decoded it with `Request::decode_shared`,
-    /// the stored payload *is* the wire frame's allocation.
-    pub fn put_tensor(&self, key: &str, t: Tensor) -> Result<()> {
-        t.validate()?;
-        let new_bytes = t.nbytes() as u64;
-        self.counters.ops.fetch_add(1, Ordering::Relaxed);
-        self.counters.bytes_in.fetch_add(new_bytes, Ordering::Relaxed);
+    /// the stored payload *is* the wire frame's allocation.  Overwrites
+    /// replace in place: one hash lookup, no post-insert re-hash and no key
+    /// `String` re-allocation on the steady-state republish path.
+    fn insert_tensor(&self, key: &str, t: Tensor, new_bytes: u64) {
         let mut s = self.shard(key).lock().unwrap();
-        // Overwrite in place: the steady-state path (each rank republishing
-        // under a stable key) is one hash lookup with no post-insert
-        // re-hash and no key `String` re-allocation.
         let mut incoming = Some(t);
         let old_bytes = s
             .tensors
@@ -90,37 +368,199 @@ impl Store {
         if let Some(o) = old_bytes {
             self.bytes.fetch_sub(o, Ordering::Relaxed);
         }
-        self.bytes.fetch_add(new_bytes, Ordering::Relaxed);
+        let now = self.bytes.fetch_add(new_bytes, Ordering::Relaxed) + new_bytes;
+        self.high_water.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Insert or overwrite a tensor (the paper's `put_tensor`).
+    ///
+    /// Under a byte cap this may evict retired generations / LRU untracked
+    /// keys first, and fails with [`Error::Busy`] when the payload cannot
+    /// fit even then.
+    pub fn put_tensor(&self, key: &str, t: Tensor) -> Result<()> {
+        t.validate()?;
+        let new_bytes = t.nbytes() as u64;
+        self.counters.ops.fetch_add(1, Ordering::Relaxed);
+        self.counters.bytes_in.fetch_add(new_bytes, Ordering::Relaxed);
+        if !self.governed.load(Ordering::Acquire) {
+            self.insert_tensor(key, t, new_bytes);
+            // Governance may have been enabled while we inserted, in which
+            // case the rebuild scan can have passed our shard before the
+            // insert landed.  The scan runs after the flag is raised and
+            // synchronizes through the shard mutex, so re-checking here is
+            // guaranteed to observe the flag — self-heal the index rather
+            // than leave a resident key invisible to retention forever.
+            if self.governed.load(Ordering::Acquire) {
+                self.retention.lock().unwrap().record_put(key, new_bytes);
+            }
+            return Ok(());
+        }
+        let mut ret = self.retention.lock().unwrap();
+        if ret.cfg.max_bytes > 0 {
+            self.make_room(&mut ret, key, new_bytes)?;
+        }
+        self.insert_tensor(key, t, new_bytes);
+        ret.record_put(key, new_bytes);
+        if ret.cfg.window > 0 {
+            if let Some((field, _)) = parse_step_key(key) {
+                let field = field.to_string();
+                self.retire_over_window(&mut ret, &field);
+            }
+        }
         Ok(())
+    }
+
+    /// Evict until a `new_bytes` write of `key` fits under the byte cap.
+    fn make_room(&self, ret: &mut RetentionIndex, key: &str, new_bytes: u64) -> Result<()> {
+        let cap = ret.cfg.max_bytes;
+        if new_bytes > cap {
+            self.counters.busy_rejections.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Busy(format!(
+                "tensor of {new_bytes} bytes exceeds the store capacity of {cap} bytes"
+            )));
+        }
+        let incoming = parse_step_key(key);
+        loop {
+            let resident = self.bytes.load(Ordering::Relaxed);
+            let projected = resident.saturating_sub(ret.size_of(key)) + new_bytes;
+            if projected <= cap {
+                return Ok(());
+            }
+            if let Some((field, step)) = ret.oldest_evictable_gen(incoming) {
+                self.evict_generation(ret, &field, step);
+            } else if let Some(victim) = ret.lru_untracked(key) {
+                self.evict_untracked(ret, &victim);
+            } else {
+                self.counters.busy_rejections.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::Busy(format!(
+                    "put of {new_bytes} bytes cannot fit under max_bytes={cap} \
+                     ({resident} bytes resident, all within the retention window)"
+                )));
+            }
+        }
+    }
+
+    /// Retire the oldest generations of `field` until at most `window`
+    /// remain (the sliding-window policy).
+    fn retire_over_window(&self, ret: &mut RetentionIndex, field: &str) {
+        let window = ret.cfg.window as usize;
+        while ret.gen_count(field) > window {
+            let Some(step) = ret.oldest_step(field) else { break };
+            self.evict_generation(ret, field, step);
+        }
+    }
+
+    /// Remove every member of generation `(field, step)` from the index and
+    /// the shards.
+    fn evict_generation(&self, ret: &mut RetentionIndex, field: &str, step: u64) {
+        let mut field_empty = false;
+        let members = match ret.gens.get_mut(field) {
+            Some(steps) => match steps.remove(&step) {
+                Some(m) => {
+                    field_empty = steps.is_empty();
+                    m
+                }
+                None => return,
+            },
+            None => return,
+        };
+        if field_empty {
+            ret.gens.remove(field);
+        }
+        for (key, _) in &members {
+            self.evict_one(key);
+        }
+    }
+
+    fn evict_untracked(&self, ret: &mut RetentionIndex, key: &str) {
+        ret.untracked.remove(key);
+        self.evict_one(key);
+    }
+
+    /// Remove `key` from its shard, charging eviction counters with the
+    /// actual stored size.
+    fn evict_one(&self, key: &str) {
+        let removed = { self.shard(key).lock().unwrap().tensors.remove(key) };
+        if let Some(t) = removed {
+            let b = t.nbytes() as u64;
+            self.bytes.fetch_sub(b, Ordering::Relaxed);
+            self.counters.evicted_keys.fetch_add(1, Ordering::Relaxed);
+            self.counters.evicted_bytes.fetch_add(b, Ordering::Relaxed);
+        }
+    }
+
+    /// Apply the current policy to the resident set (used when the policy
+    /// changes): window retirement per field, then best-effort eviction
+    /// down to the byte cap.  Anything left over the cap is protected and
+    /// will backpressure future puts instead.
+    fn enforce(&self, ret: &mut RetentionIndex) {
+        if ret.cfg.window > 0 {
+            let fields: Vec<String> = ret.gens.keys().cloned().collect();
+            for field in fields {
+                self.retire_over_window(ret, &field);
+            }
+        }
+        let cap = ret.cfg.max_bytes;
+        if cap > 0 {
+            while self.bytes.load(Ordering::Relaxed) > cap {
+                if let Some((field, step)) = ret.oldest_evictable_gen(None) {
+                    self.evict_generation(ret, &field, step);
+                } else if let Some(victim) = ret.lru_untracked("") {
+                    self.evict_untracked(ret, &victim);
+                } else {
+                    break;
+                }
+            }
+        }
     }
 
     /// Fetch a tensor (the paper's `unpack_tensor`).
     ///
     /// The returned tensor shares the stored payload by refcount — no deep
     /// copy under the shard lock.  A reader's view stays alive and valid
-    /// even if the key is overwritten or deleted afterwards.
+    /// even if the key is overwritten, deleted or evicted afterwards.
     pub fn get_tensor(&self, key: &str) -> Result<Tensor> {
         self.counters.ops.fetch_add(1, Ordering::Relaxed);
-        let s = self.shard(key).lock().unwrap();
-        let t = s
-            .tensors
-            .get(key)
-            .cloned()
-            .ok_or_else(|| Error::KeyNotFound(key.to_string()))?;
+        let t = {
+            let s = self.shard(key).lock().unwrap();
+            s.tensors.get(key).cloned()
+        }
+        .ok_or_else(|| Error::KeyNotFound(key.to_string()))?;
         self.counters
             .bytes_out
             .fetch_add(t.nbytes() as u64, Ordering::Relaxed);
+        // LRU recency for untracked keys under governance (the shard lock
+        // is already released — retention before shard, never after).
+        if self.governed.load(Ordering::Relaxed) && parse_step_key(key).is_none() {
+            self.retention.lock().unwrap().touch(key);
+        }
         Ok(t)
     }
 
     pub fn del_tensor(&self, key: &str) -> bool {
         self.counters.ops.fetch_add(1, Ordering::Relaxed);
-        let mut s = self.shard(key).lock().unwrap();
-        if let Some(t) = s.tensors.remove(key) {
-            self.bytes.fetch_sub(t.nbytes() as u64, Ordering::Relaxed);
-            true
-        } else {
-            false
+        if !self.governed.load(Ordering::Acquire) {
+            let removed = { self.shard(key).lock().unwrap().tensors.remove(key) };
+            if let Some(t) = removed {
+                self.bytes.fetch_sub(t.nbytes() as u64, Ordering::Relaxed);
+                // Mirror of the put path's enable-race self-heal: drop any
+                // index entry the rebuild scan recorded before our delete.
+                if self.governed.load(Ordering::Acquire) {
+                    self.retention.lock().unwrap().record_del(key);
+                }
+                return true;
+            }
+            return false;
+        }
+        let mut ret = self.retention.lock().unwrap();
+        let removed = { self.shard(key).lock().unwrap().tensors.remove(key) };
+        match removed {
+            Some(t) => {
+                self.bytes.fetch_sub(t.nbytes() as u64, Ordering::Relaxed);
+                ret.record_del(key);
+                true
+            }
+            None => false,
         }
     }
 
@@ -169,6 +609,8 @@ impl Store {
 
     pub fn flush_all(&self) {
         self.counters.ops.fetch_add(1, Ordering::Relaxed);
+        let mut ret = self.retention.lock().unwrap();
+        ret.clear();
         for sh in &self.shards {
             let mut s = sh.lock().unwrap();
             s.tensors.clear();
@@ -189,6 +631,11 @@ impl Store {
 
     pub fn n_bytes(&self) -> u64 {
         self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime high-water mark of resident tensor bytes.
+    pub fn high_water_bytes(&self) -> u64 {
+        self.high_water.load(Ordering::Relaxed)
     }
 
     pub fn n_ops(&self) -> u64 {
@@ -226,6 +673,7 @@ mod tests {
         assert_eq!(s.n_bytes(), 400);
         s.put_tensor("k", t(vec![0.0; 10])).unwrap();
         assert_eq!(s.n_bytes(), 40);
+        assert_eq!(s.high_water_bytes(), 400, "high-water survives shrink");
         s.del_tensor("k");
         assert_eq!(s.n_bytes(), 0);
     }
@@ -389,5 +837,208 @@ mod tests {
         let bad = Tensor { dtype: DType::F32, shape: vec![4], data: vec![0u8; 3].into() };
         assert!(s.put_tensor("x", bad).is_err());
         assert_eq!(s.n_keys(), 0);
+    }
+
+    // --- retention ---------------------------------------------------------
+
+    #[test]
+    fn parse_step_key_accepts_the_framework_scheme_only() {
+        assert_eq!(parse_step_key("field_rank0_step2"), Some(("field", 2)));
+        assert_eq!(parse_step_key("u_x_rank12_step34"), Some(("u_x", 34)));
+        assert_eq!(parse_step_key("f_rank0_step007"), Some(("f", 7)));
+        assert_eq!(parse_step_key("field_rank0_latest"), None, "overwrite scheme");
+        assert_eq!(parse_step_key("field_step2"), None, "no rank segment");
+        assert_eq!(parse_step_key("field_rank0_step"), None, "empty step digits");
+        assert_eq!(parse_step_key("field_rankx_step2"), None, "non-numeric rank");
+        assert_eq!(parse_step_key("field_rank0_step2x"), None, "trailing junk");
+        assert_eq!(parse_step_key("plain"), None);
+    }
+
+    #[test]
+    fn sliding_window_retires_oldest_generation() {
+        let s = Store::new();
+        s.set_retention(RetentionConfig { window: 2, max_bytes: 0 });
+        for step in 0..5u64 {
+            for rank in 0..3 {
+                s.put_tensor(&format!("f_rank{rank}_step{step}"), t(vec![step as f32; 8]))
+                    .unwrap();
+            }
+        }
+        let keys = s.list_keys("f_");
+        assert_eq!(keys.len(), 2 * 3, "two generations of three ranks");
+        assert!(keys.iter().all(|k| k.ends_with("step3") || k.ends_with("step4")), "{keys:?}");
+        assert_eq!(s.counters.evicted_keys.load(Ordering::Relaxed), 3 * 3);
+        assert_eq!(
+            s.counters.evicted_bytes.load(Ordering::Relaxed),
+            3 * 3 * 32,
+            "every evicted tensor was 32 bytes"
+        );
+        assert_eq!(s.n_bytes(), 6 * 32, "flat steady state");
+    }
+
+    #[test]
+    fn windows_are_per_field() {
+        let s = Store::new();
+        s.set_retention(RetentionConfig { window: 1, max_bytes: 0 });
+        for step in 0..3u64 {
+            s.put_tensor(&format!("a_rank0_step{step}"), t(vec![1.0])).unwrap();
+            s.put_tensor(&format!("b_rank0_step{step}"), t(vec![2.0])).unwrap();
+        }
+        assert_eq!(s.list_keys(""), vec!["a_rank0_step2", "b_rank0_step2"]);
+    }
+
+    #[test]
+    fn byte_cap_evicts_lru_untracked_keys() {
+        let s = Store::new();
+        // 3 × 40-byte untracked tensors fit under 128 bytes; the 4th evicts
+        // the least recently *used* one.
+        s.set_retention(RetentionConfig { window: 0, max_bytes: 128 });
+        s.put_tensor("a", t(vec![0.0; 10])).unwrap();
+        s.put_tensor("b", t(vec![0.0; 10])).unwrap();
+        s.put_tensor("c", t(vec![0.0; 10])).unwrap();
+        s.get_tensor("a").unwrap(); // touch: a is now more recent than b
+        s.put_tensor("d", t(vec![0.0; 10])).unwrap();
+        assert!(!s.exists("b"), "LRU victim");
+        assert!(s.exists("a") && s.exists("c") && s.exists("d"));
+        assert_eq!(s.counters.evicted_keys.load(Ordering::Relaxed), 1);
+        assert!(s.n_bytes() <= 128);
+    }
+
+    #[test]
+    fn byte_cap_append_retires_own_field_oldest_generation() {
+        let s = Store::new();
+        // Cap fits exactly two 40-byte generations; window 2 protects both,
+        // but an append opening generation 3 may retire generation 0.
+        s.set_retention(RetentionConfig { window: 2, max_bytes: 80 });
+        s.put_tensor("f_rank0_step0", t(vec![0.0; 10])).unwrap();
+        s.put_tensor("f_rank0_step1", t(vec![1.0; 10])).unwrap();
+        s.put_tensor("f_rank0_step2", t(vec![2.0; 10])).unwrap();
+        assert!(!s.exists("f_rank0_step0"));
+        assert!(s.exists("f_rank0_step1") && s.exists("f_rank0_step2"));
+        assert!(s.n_bytes() <= 80);
+    }
+
+    #[test]
+    fn stale_republish_cannot_displace_newer_generations() {
+        // A restarted producer replaying an old step ranks below the
+        // retained window: under byte pressure it gets backpressure rather
+        // than evicting newer training data...
+        let s = Store::new();
+        s.set_retention(RetentionConfig { window: 2, max_bytes: 80 });
+        s.put_tensor("f_rank0_step5", t(vec![5.0; 10])).unwrap();
+        s.put_tensor("f_rank0_step6", t(vec![6.0; 10])).unwrap();
+        let err = s.put_tensor("f_rank0_step4", t(vec![4.0; 10])).unwrap_err();
+        assert!(matches!(err, Error::Busy(_)), "{err}");
+        assert!(s.exists("f_rank0_step5") && s.exists("f_rank0_step6"), "newer data intact");
+        // ...and without byte pressure it is admitted, then immediately
+        // retired by the window (the newest two generations win).
+        let s = Store::new();
+        s.set_retention(RetentionConfig { window: 2, max_bytes: 0 });
+        s.put_tensor("f_rank0_step5", t(vec![5.0; 10])).unwrap();
+        s.put_tensor("f_rank0_step6", t(vec![6.0; 10])).unwrap();
+        s.put_tensor("f_rank0_step4", t(vec![4.0; 10])).unwrap();
+        assert_eq!(s.list_keys(""), vec!["f_rank0_step5", "f_rank0_step6"]);
+    }
+
+    #[test]
+    fn busy_when_nothing_evictable() {
+        let s = Store::new();
+        s.set_retention(RetentionConfig { window: 2, max_bytes: 80 });
+        // A payload larger than the whole cap is rejected outright.
+        assert!(matches!(s.put_tensor("big", t(vec![0.0; 100])), Err(Error::Busy(_))));
+        // Fill the cap with one field's protected window; a *different*
+        // field then cannot fit and must get backpressure, not eviction of
+        // protected data.
+        s.put_tensor("f_rank0_step0", t(vec![0.0; 10])).unwrap();
+        s.put_tensor("f_rank0_step1", t(vec![1.0; 10])).unwrap();
+        let err = s.put_tensor("g_rank0_step0", t(vec![2.0; 10])).unwrap_err();
+        assert!(matches!(err, Error::Busy(_)), "{err}");
+        assert!(s.exists("f_rank0_step0") && s.exists("f_rank0_step1"), "window intact");
+        assert_eq!(s.counters.busy_rejections.load(Ordering::Relaxed), 2);
+        // Overwriting a resident key at the same size always fits.
+        s.put_tensor("f_rank0_step1", t(vec![9.0; 10])).unwrap();
+    }
+
+    #[test]
+    fn enabling_retention_on_a_populated_store_rebuilds_and_enforces() {
+        let s = Store::new();
+        for step in 0..6u64 {
+            s.put_tensor(&format!("f_rank0_step{step}"), t(vec![step as f32; 4])).unwrap();
+        }
+        assert_eq!(s.n_bytes(), 6 * 16);
+        s.set_retention(RetentionConfig { window: 2, max_bytes: 0 });
+        assert_eq!(s.list_keys(""), vec!["f_rank0_step4", "f_rank0_step5"]);
+        assert_eq!(s.n_bytes(), 2 * 16);
+        // Disabling governance restores plain append.
+        s.set_retention(RetentionConfig::UNBOUNDED);
+        s.put_tensor("f_rank0_step9", t(vec![0.0; 4])).unwrap();
+        s.put_tensor("f_rank0_step10", t(vec![0.0; 4])).unwrap();
+        assert_eq!(s.list_keys("").len(), 4);
+    }
+
+    #[test]
+    fn prop_governed_byte_accounting_stays_exact() {
+        // Under random puts/dels with retention active, the bytes atomic
+        // always equals the sum of resident tensor sizes.
+        check("governed accounting", 60, |g: &mut Gen| {
+            let s = Store::new();
+            s.set_retention(RetentionConfig {
+                window: g.usize_in(0..=3) as u64,
+                max_bytes: (g.usize_in(2..=20) * 16) as u64,
+            });
+            for _ in 0..g.usize_in(1..=50) {
+                let field = ["u", "v"][g.usize_in(0..=1)];
+                let key = if g.bool() {
+                    format!("{field}_rank{}_step{}", g.usize_in(0..=1), g.usize_in(0..=9))
+                } else {
+                    format!("loose{}", g.usize_in(0..=3))
+                };
+                if g.bool() {
+                    let _ = s.put_tensor(&key, t(vec![1.0; g.usize_in(1..=4)]));
+                } else {
+                    s.del_tensor(&key);
+                }
+            }
+            let resident: u64 = s
+                .list_keys("")
+                .iter()
+                .map(|k| s.get_tensor(k).unwrap().nbytes() as u64)
+                .sum();
+            assert_eq!(s.n_bytes(), resident, "accounting drift");
+            assert!(s.high_water_bytes() >= s.n_bytes());
+        });
+    }
+
+    #[test]
+    fn eviction_is_concurrency_safe_with_readers() {
+        // Producers append (driving eviction) while readers fetch; a view
+        // handed out before eviction stays byte-valid afterwards.
+        let s = Arc::new(Store::new());
+        s.set_retention(RetentionConfig { window: 2, max_bytes: 0 });
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut readers = Vec::new();
+        for _ in 0..3 {
+            let s = Arc::clone(&s);
+            let stop = Arc::clone(&stop);
+            readers.push(std::thread::spawn(move || {
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    for step in 0..60u64 {
+                        if let Ok(v) = s.get_tensor(&format!("c_rank0_step{step}")) {
+                            let v = v.to_f32().unwrap();
+                            assert!(v.iter().all(|&x| x == v[0]), "torn read");
+                        }
+                    }
+                }
+            }));
+        }
+        for step in 0..60u64 {
+            s.put_tensor(&format!("c_rank0_step{step}"), t(vec![step as f32; 64])).unwrap();
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        for h in readers {
+            h.join().unwrap();
+        }
+        assert_eq!(s.list_keys("c_").len(), 2);
+        assert_eq!(s.n_bytes(), 2 * 64 * 4);
     }
 }

@@ -26,6 +26,11 @@ pub enum Error {
     Invalid(String),
     /// Operation timed out (e.g. polling for a key).
     Timeout(String),
+    /// Write rejected by capacity governance: the store could not fit the
+    /// payload under its byte cap even after evicting everything the
+    /// retention policy allows.  Backpressure, not corruption — the caller
+    /// may retry once the consumer has advanced (or raise the cap/window).
+    Busy(String),
 }
 
 impl fmt::Display for Error {
@@ -41,6 +46,9 @@ impl fmt::Display for Error {
             Error::Remote(m) => write!(f, "remote error: {m}"),
             Error::Invalid(m) => write!(f, "invalid: {m}"),
             Error::Timeout(m) => write!(f, "timeout: {m}"),
+            // The "busy: " prefix is load-bearing: remote errors travel as
+            // strings and the client maps it back to `Error::Busy`.
+            Error::Busy(m) => write!(f, "busy: {m}"),
         }
     }
 }

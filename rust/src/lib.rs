@@ -50,6 +50,19 @@
 //! dataloader's per-epoch gather and wait cost one request frame each
 //! (server-side waiting with capped exponential backoff), with the
 //! zero-copy payload plane preserved through batch replies.
+//!
+//! ## Bounded memory
+//!
+//! Long-running simulations cannot append snapshots forever: each database
+//! instance enforces an optional [`db::RetentionConfig`] — a sliding
+//! window of step generations per field plus a byte cap with explicit
+//! `busy` backpressure ([`Error::Busy`]) when nothing evictable remains
+//! (see [`db::store`]).  The consumer trains on a moving window
+//! (`DataLoader::gather_window`), the producer can alternatively republish
+//! under stable keys (the paper's overwrite mode, flat by construction),
+//! and the orchestrator threads the policy from `RunConfig` through
+//! deployment to every server.  Eviction and high-water counters travel in
+//! `INFO`.
 
 pub mod ai;
 pub mod client;

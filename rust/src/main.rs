@@ -14,7 +14,7 @@ use situ::client::{Client, DataStore};
 use situ::cluster::netmodel::CostModel;
 use situ::cluster::scaling;
 use situ::config::RunConfig;
-use situ::db::{DbServer, Engine, ServerConfig};
+use situ::db::{DbServer, Engine, RetentionConfig, ServerConfig};
 use situ::error::{Error, Result};
 use situ::orchestrator::driver::{run_insitu_training, InSituTrainingConfig};
 use situ::runtime::Executor;
@@ -64,6 +64,7 @@ fn print_help() {
 USAGE: situ <command> [flags]
 
   serve            --port 7700 --engine redis|keydb --cores 8 [--no-models]
+                   [--retention-window W] [--max-bytes B]   bounded-memory store
   info             --addr 127.0.0.1:7700
   calibrate        [--artifacts DIR]   measure real costs, print CostModel
   train            [--epochs N --sim-ranks R --ml-ranks M --steps S]
@@ -82,6 +83,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine,
         cores: args.usize_or("cores", 8)?,
         with_models: !args.bool("no-models"),
+        retention: RetentionConfig {
+            window: args.usize_or("retention-window", 0)? as u64,
+            max_bytes: args.usize_or("max-bytes", 0)? as u64,
+        },
+        ..Default::default()
     };
     let server = DbServer::start(cfg)?;
     println!("situ db listening on {} (engine={})", server.addr, engine.name());
@@ -104,6 +110,13 @@ fn cmd_info(args: &Args) -> Result<()> {
         fmt::bytes(i.bytes),
         i.ops,
         i.models
+    );
+    println!(
+        "high_water={} evicted_keys={} evicted_bytes={} busy_rejections={}",
+        fmt::bytes(i.high_water_bytes),
+        i.evicted_keys,
+        fmt::bytes(i.evicted_bytes),
+        i.busy_rejections
     );
     Ok(())
 }

@@ -14,9 +14,17 @@
 //! issues one `PollKeys` (the server waits, with backoff) and
 //! [`DataLoader::gather`] issues one `MGetTensors` instead of one
 //! `get_tensor` per owned rank.
+//!
+//! Bounded-memory runs train on a *moving window*:
+//! [`DataLoader::gather_window`] fetches the newest `W` step generations in
+//! one pipelined frame, skipping generations the store's retention policy
+//! has already retired, and [`DataLoader::gather_latest`] consumes the
+//! overwrite-mode stable keys (`{field}_rank{r}_latest`) where the store
+//! holds exactly one generation per field by construction.
 
-use crate::client::{tensor_key, DataStore, PollConfig};
+use crate::client::{stable_key, tensor_key, DataStore, Pipeline, PollConfig};
 use crate::error::{Error, Result};
+use crate::proto::Response;
 use crate::tensor::{DType, Tensor};
 use crate::util::rng::Rng;
 
@@ -85,6 +93,68 @@ impl<C: DataStore> DataLoader<C> {
     /// round trip per database instance.
     pub fn gather(&mut self, step: u64) -> Result<Vec<Tensor>> {
         self.client.mget_tensors(&self.step_keys(step))
+    }
+
+    /// Gather the newest `window` step generations ending at `latest`, in
+    /// one pipelined request frame per database instance.
+    ///
+    /// Bounded-memory runs race the producer: a generation inside the
+    /// requested window may already have been retired by the store's
+    /// retention policy, in which case it is skipped (its gets come back
+    /// as clean `NotFound` entries).  The `latest` generation itself must
+    /// be complete — a missing key there is an error, because
+    /// `wait_for_step(latest)` just saw it.
+    pub fn gather_window(&mut self, latest: u64, window: u64) -> Result<Vec<Tensor>> {
+        let w = window.max(1);
+        let lo = latest.saturating_sub(w - 1);
+        let n = self.sim_ranks.len();
+        let mut pipe = Pipeline::new();
+        for step in lo..=latest {
+            for key in self.step_keys(step) {
+                pipe.get_tensor(&key);
+            }
+        }
+        let resps = self.client.execute(pipe)?;
+        let mut out = Vec::with_capacity(resps.len());
+        let mut it = resps.into_iter();
+        for step in lo..=latest {
+            let mut members: Vec<Tensor> = Vec::with_capacity(n);
+            let mut complete = true;
+            for &rank in &self.sim_ranks {
+                let resp = it.next().expect("pipeline reply arity");
+                match resp {
+                    Response::NotFound if step != latest => complete = false,
+                    other => {
+                        let key = tensor_key(&self.field, rank, step);
+                        members.push(other.expect_tensor(&key)?);
+                    }
+                }
+            }
+            if complete {
+                out.extend(members);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Stable keys of every owned rank (the overwrite publishing mode).
+    fn latest_keys(&self) -> Vec<String> {
+        self.sim_ranks
+            .iter()
+            .map(|&r| stable_key(&self.field, r))
+            .collect()
+    }
+
+    /// Wait until every owned rank has published its overwrite-mode
+    /// snapshot at least once.
+    pub fn wait_latest(&mut self, poll: &PollConfig) -> Result<()> {
+        self.client.poll_keys(&self.latest_keys(), poll)
+    }
+
+    /// Gather every owned overwrite-mode snapshot in one batched round
+    /// trip per database instance.
+    pub fn gather_latest(&mut self) -> Result<Vec<Tensor>> {
+        self.client.mget_tensors(&self.latest_keys())
     }
 
     /// Split gathered samples into a random train/val pair: the paper

@@ -36,6 +36,15 @@ pub struct TrainerConfig {
     /// per-wait budget; the snapshot step consumed per epoch advances when
     /// the producer publishes faster than the trainer consumes).
     pub poll: PollConfig,
+    /// Train on the newest `window` step generations each epoch (1 = the
+    /// paper's single-snapshot behavior).  On bounded-memory deployments
+    /// this must not exceed the store's retention window; generations
+    /// retired mid-gather are skipped.
+    pub window: u64,
+    /// Consume the producer's overwrite-mode stable keys instead of step
+    /// keys.  The store then holds exactly one generation per field, so
+    /// `window` is moot and ignored.
+    pub overwrite: bool,
 }
 
 impl Default for TrainerConfig {
@@ -47,6 +56,8 @@ impl Default for TrainerConfig {
             epochs: 100,
             field: "field".into(),
             poll: PollConfig::default(),
+            window: 1,
+            overwrite: false,
         }
     }
 }
@@ -124,12 +135,18 @@ impl Trainer {
         // --- gather phase (Table 2: "training data retrieve") -------------
         let sw = Stopwatch::start();
         // Two request frames per rank per epoch: one server-side wait for
-        // all owned keys, one batched gather.
+        // all owned keys, one batched (windowed) gather.
         let poll = self.cfg.poll;
+        let (window, overwrite) = (self.cfg.window, self.cfg.overwrite);
         let mut per_rank_samples: Vec<Vec<Tensor>> = Vec::with_capacity(self.loaders.len());
         for l in &mut self.loaders {
-            l.wait_for_step(step, &poll)?;
-            per_rank_samples.push(l.gather(step)?);
+            if overwrite {
+                l.wait_latest(&poll)?;
+                per_rank_samples.push(l.gather_latest()?);
+            } else {
+                l.wait_for_step(step, &poll)?;
+                per_rank_samples.push(l.gather_window(step, window)?);
+            }
         }
         self.times.record("retrieve", sw.stop());
 

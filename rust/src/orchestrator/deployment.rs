@@ -2,7 +2,7 @@
 //! core binding, for a given run configuration (paper Fig 2).
 
 use crate::config::{Deployment, RunConfig};
-use crate::db::{Engine, ServerConfig};
+use crate::db::{Engine, RetentionConfig, ServerConfig};
 
 /// One database instance to launch.
 #[derive(Debug, Clone)]
@@ -12,6 +12,8 @@ pub struct DbSpec {
     pub engine: Engine,
     pub cores: usize,
     pub with_models: bool,
+    /// Retention / capacity policy applied to this instance's store.
+    pub retention: RetentionConfig,
 }
 
 /// The resolved plan.
@@ -26,6 +28,10 @@ pub struct DeploymentPlan {
 
 impl DeploymentPlan {
     pub fn new(cfg: &RunConfig, with_models: bool) -> DeploymentPlan {
+        let retention = RetentionConfig {
+            window: cfg.retention_window,
+            max_bytes: cfg.db_max_bytes,
+        };
         let dbs = match cfg.deployment {
             Deployment::CoLocated => (0..cfg.nodes)
                 .map(|node| DbSpec {
@@ -33,6 +39,7 @@ impl DeploymentPlan {
                     engine: cfg.engine,
                     cores: cfg.db_cores,
                     with_models,
+                    retention,
                 })
                 .collect(),
             Deployment::Clustered { db_nodes } => (0..db_nodes.max(1))
@@ -41,6 +48,7 @@ impl DeploymentPlan {
                     engine: cfg.engine,
                     cores: crate::cluster::scaling::CLUSTERED_DB_CORES,
                     with_models,
+                    retention,
                 })
                 .collect(),
         };
@@ -69,6 +77,8 @@ impl DeploymentPlan {
                 engine: d.engine,
                 cores: d.cores,
                 with_models: d.with_models,
+                retention: d.retention,
+                ..Default::default()
             })
             .collect()
     }
@@ -87,6 +97,22 @@ mod tests {
         assert_eq!(plan.total_nodes(), 3);
         assert_eq!(plan.dbs[1].node, 1);
         assert_eq!(plan.dbs[0].cores, 8);
+    }
+
+    #[test]
+    fn plan_threads_retention_policy_to_every_instance() {
+        let mut cfg = RunConfig::default();
+        cfg.nodes = 2;
+        cfg.retention_window = 5;
+        cfg.db_max_bytes = 1 << 20;
+        let want = RetentionConfig { window: 5, max_bytes: 1 << 20 };
+        for deployment in [Deployment::CoLocated, Deployment::Clustered { db_nodes: 2 }] {
+            cfg.deployment = deployment;
+            let plan = DeploymentPlan::new(&cfg, false);
+            for sc in plan.server_configs() {
+                assert_eq!(sc.retention, want);
+            }
+        }
     }
 
     #[test]

@@ -8,12 +8,13 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::client::{tensor_key, Client, DataStore, PollConfig};
+use crate::client::{stable_key, tensor_key, Client, DataStore, PollConfig};
 use crate::config::RunConfig;
 use crate::db::{DbServer, ServerConfig};
 use crate::error::{Error, Result};
 use crate::ml::{Trainer, TrainerConfig};
 use crate::orchestrator::deployment::DeploymentPlan;
+use crate::proto::DbInfo;
 use crate::runtime::Executor;
 use crate::sim::cfd::{ChannelFlow, Grid, MeshSampler};
 use crate::telemetry::{ComponentTimes, Stopwatch, Table};
@@ -89,6 +90,17 @@ pub struct InSituTrainingConfig {
     /// Total solver steps to integrate.
     pub solver_steps: u64,
     pub seed: u64,
+    /// Trainer window: each epoch trains on the newest `window` snapshot
+    /// generations (1 = the paper's single-snapshot behavior).
+    pub window: u64,
+    /// Producer overwrite mode: republish each rank's snapshot under a
+    /// stable key (the paper's bounded-memory alternative to append).
+    pub overwrite: bool,
+    /// Store retention: newest generations kept per field (0 = keep all).
+    /// Must be ≥ `window` so the trainer's moving window stays resident.
+    pub retention_window: u64,
+    /// Store byte cap per database instance (0 = unbounded).
+    pub db_max_bytes: u64,
 }
 
 impl Default for InSituTrainingConfig {
@@ -103,6 +115,10 @@ impl Default for InSituTrainingConfig {
             snapshot_every: 2,
             solver_steps: 40,
             seed: 0,
+            window: 1,
+            overwrite: false,
+            retention_window: 0,
+            db_max_bytes: 0,
         }
     }
 }
@@ -116,6 +132,9 @@ pub struct InSituTrainingReport {
     /// Fractional overhead of the framework on the solver
     /// (client init + metadata + sends vs equation formation + solution).
     pub solver_overhead_frac: f64,
+    /// Final database statistics — resident/high-water bytes and the
+    /// eviction counters that prove (or disprove) bounded memory.
+    pub db: DbInfo,
 }
 
 /// Run the full §4 workflow: co-located DB + CFD producer + in-situ trainer.
@@ -125,6 +144,8 @@ pub fn run_insitu_training(cfg: &InSituTrainingConfig) -> Result<InSituTrainingR
     run_cfg.nodes = 1;
     run_cfg.ranks_per_node = cfg.sim_ranks;
     run_cfg.ml_ranks_per_node = cfg.ml_ranks;
+    run_cfg.retention_window = cfg.retention_window;
+    run_cfg.db_max_bytes = cfg.db_max_bytes;
     let mut driver = Driver::launch(&run_cfg, false)?;
     let addr = driver.primary_addr();
 
@@ -171,8 +192,17 @@ pub fn run_insitu_training(cfg: &InSituTrainingConfig) -> Result<InSituTrainingR
                             clients.iter_mut().zip(&rank_samplers).enumerate()
                         {
                             let snap = rs.snapshot(&flow);
+                            // Overwrite mode: republish under the stable
+                            // key, retiring the previous snapshot in place
+                            // (bounded memory by construction).  Append
+                            // mode relies on the store's retention window.
+                            let key = if cfg.overwrite {
+                                stable_key("field", r)
+                            } else {
+                                tensor_key("field", r, published)
+                            };
                             let sw = Stopwatch::start();
-                            client.put_tensor(&tensor_key("field", r, published), &snap)?;
+                            client.put_tensor(&key, &snap)?;
                             times.record("send", sw.stop());
                         }
                         let sw = Stopwatch::start();
@@ -205,6 +235,8 @@ pub fn run_insitu_training(cfg: &InSituTrainingConfig) -> Result<InSituTrainingR
         epochs: cfg.epochs,
         field: "field".into(),
         poll: PollConfig::with_max_wait(Duration::from_secs(300)),
+        window: cfg.window,
+        overwrite: cfg.overwrite,
     };
     let exec = Executor::new()?;
     let mut trainer = Trainer::new(t_cfg, &cfg.artifacts_dir, exec)?;
@@ -229,12 +261,17 @@ pub fn run_insitu_training(cfg: &InSituTrainingConfig) -> Result<InSituTrainingR
         .filter_map(|k| snap.get(*k))
         .map(|s| s.sum())
         .sum();
+    let db = {
+        let mut c = Client::connect(addr)?;
+        c.info()?
+    };
     let report = InSituTrainingReport {
         solver_table,
         trainer_table,
         history: trainer.history.clone(),
         compression_factor: trainer.manifest.model.compression_factor,
         solver_overhead_frac: if solver_work > 0.0 { overhead / solver_work } else { 0.0 },
+        db,
     };
     driver.shutdown();
     Ok(report)

@@ -52,6 +52,15 @@ pub struct DbInfo {
     pub bytes: u64,
     pub ops: u64,
     pub models: u64,
+    /// Lifetime high-water mark of resident tensor bytes.
+    pub high_water_bytes: u64,
+    /// Tensor keys removed by the retention policy (window retirement plus
+    /// byte-cap eviction).
+    pub evicted_keys: u64,
+    /// Payload bytes freed by eviction.
+    pub evicted_bytes: u64,
+    /// Writes rejected with backpressure (`busy`) under the byte cap.
+    pub busy_rejections: u64,
     pub engine: String,
 }
 
@@ -82,6 +91,14 @@ pub enum Request {
     /// keys are present, `Bool(false)` on timeout.  `initial_us`/`cap_us`
     /// bound the server's probe interval.
     PollKeys { keys: Vec<String>, timeout_ms: u64, initial_us: u64, cap_us: u64 },
+    /// Delete many tensor keys in one round trip.  Replies with a
+    /// [`Response::Batch`] of `Ok`/`NotFound`, one per key in request
+    /// order.
+    DelKeys { keys: Vec<String> },
+    /// Configure the store's retention policy: keep the newest `window`
+    /// step generations per field and at most `max_bytes` of tensor
+    /// payload (0 disables either limit).  Replies `Ok`.
+    Retention { window: u64, max_bytes: u64 },
 }
 
 /// Database-to-client replies.
@@ -320,6 +337,8 @@ mod req_op {
     pub const BATCH: u8 = 12;
     pub const MGET_TENSORS: u8 = 13;
     pub const POLL_KEYS: u8 = 14;
+    pub const DEL_KEYS: u8 = 15;
+    pub const RETENTION: u8 = 16;
 }
 
 impl Request {
@@ -388,6 +407,15 @@ impl Request {
                 buf.extend_from_slice(&timeout_ms.to_le_bytes());
                 buf.extend_from_slice(&initial_us.to_le_bytes());
                 buf.extend_from_slice(&cap_us.to_le_bytes());
+            }
+            Request::DelKeys { keys } => {
+                buf.push(req_op::DEL_KEYS);
+                put_str_list(buf, keys);
+            }
+            Request::Retention { window, max_bytes } => {
+                buf.push(req_op::RETENTION);
+                buf.extend_from_slice(&window.to_le_bytes());
+                buf.extend_from_slice(&max_bytes.to_le_bytes());
             }
         }
     }
@@ -481,6 +509,8 @@ impl Request {
                 initial_us: c.u64()?,
                 cap_us: c.u64()?,
             },
+            req_op::DEL_KEYS => Request::DelKeys { keys: c.str_list()? },
+            req_op::RETENTION => Request::Retention { window: c.u64()?, max_bytes: c.u64()? },
             _ => return Err(Error::Protocol(format!("unknown request opcode {op}"))),
         };
         Ok(req)
@@ -507,7 +537,9 @@ impl Request {
             | Request::FlushAll
             | Request::Batch(_)
             | Request::MGetTensors { .. }
-            | Request::PollKeys { .. } => None,
+            | Request::PollKeys { .. }
+            | Request::DelKeys { .. }
+            | Request::Retention { .. } => None,
         }
     }
 
@@ -536,6 +568,8 @@ impl Request {
             }
             Request::MGetTensors { keys } => str_list_wire_size(keys),
             Request::PollKeys { keys, .. } => str_list_wire_size(keys) + 24,
+            Request::DelKeys { keys } => str_list_wire_size(keys),
+            Request::Retention { .. } => 16,
         };
         1 + fields // opcode + fields
     }
@@ -597,6 +631,10 @@ impl Response {
                 buf.extend_from_slice(&i.bytes.to_le_bytes());
                 buf.extend_from_slice(&i.ops.to_le_bytes());
                 buf.extend_from_slice(&i.models.to_le_bytes());
+                buf.extend_from_slice(&i.high_water_bytes.to_le_bytes());
+                buf.extend_from_slice(&i.evicted_keys.to_le_bytes());
+                buf.extend_from_slice(&i.evicted_bytes.to_le_bytes());
+                buf.extend_from_slice(&i.busy_rejections.to_le_bytes());
                 put_str(buf, &i.engine);
             }
             Response::Batch(entries) => {
@@ -652,6 +690,10 @@ impl Response {
                 bytes: c.u64()?,
                 ops: c.u64()?,
                 models: c.u64()?,
+                high_water_bytes: c.u64()?,
+                evicted_keys: c.u64()?,
+                evicted_bytes: c.u64()?,
+                busy_rejections: c.u64()?,
                 engine: c.str()?,
             }),
             resp_op::BATCH => {
@@ -683,7 +725,7 @@ impl Response {
             Response::Bool(_) => 1,
             Response::Meta(s) | Response::Error(s) => str_wire_size(s),
             Response::Keys(ks) => 4 + ks.iter().map(|k| str_wire_size(k)).sum::<usize>(),
-            Response::Info(i) => 32 + str_wire_size(&i.engine),
+            Response::Info(i) => 64 + str_wire_size(&i.engine),
             Response::Batch(entries) => {
                 4 + entries.iter().map(|e| e.body_wire_size()).sum::<usize>()
             }
@@ -703,7 +745,13 @@ impl Response {
 impl Response {
     fn unexpected(self, want: &str) -> Error {
         match self {
-            Response::Error(m) => Error::Remote(m),
+            // Backpressure travels the wire as an error string with the
+            // `busy: ` prefix (`Error::Busy`'s Display); map it back so
+            // producers can distinguish "retry later" from real failures.
+            Response::Error(m) => match m.strip_prefix("busy: ") {
+                Some(rest) => Error::Busy(rest.to_string()),
+                None => Error::Remote(m),
+            },
             other => Error::Protocol(format!("expected {want}, got {other:?}")),
         }
     }

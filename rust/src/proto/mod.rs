@@ -96,6 +96,8 @@ mod tests {
                 initial_us: 500,
                 cap_us: 20_000,
             },
+            Request::DelKeys { keys: vec!["d0".into(), "d1".into(), "d2".into()] },
+            Request::Retention { window: 4, max_bytes: 1 << 28 },
         ]
     }
 
@@ -121,6 +123,10 @@ mod tests {
                 bytes: 1 << 20,
                 ops: 42,
                 models: 2,
+                high_water_bytes: 3 << 20,
+                evicted_keys: 7,
+                evicted_bytes: 2 << 20,
+                busy_rejections: 1,
                 engine: "redis".into(),
             }),
             Response::Batch(vec![
@@ -232,7 +238,14 @@ mod tests {
         assert_eq!(Response::Meta("v".into()).expect_meta().unwrap(), Some("v".into()));
         assert_eq!(Response::NotFound.expect_meta().unwrap(), None);
         assert_eq!(Response::Keys(vec!["a".into()]).expect_keys().unwrap(), vec!["a"]);
-        let info = DbInfo { keys: 1, bytes: 2, ops: 3, models: 0, engine: "redis".into() };
+        let info = DbInfo {
+            keys: 1,
+            bytes: 2,
+            ops: 3,
+            models: 0,
+            engine: "redis".into(),
+            ..Default::default()
+        };
         assert_eq!(Response::Info(info.clone()).expect_info().unwrap(), info);
         assert!(Response::Batch(vec![Response::Ok]).expect_batch(1).is_ok());
         assert!(matches!(
@@ -385,5 +398,133 @@ mod tests {
             let _ = Request::decode(&buf);
             let _ = Request::decode_shared(&Bytes::from_vec(buf));
         });
+    }
+
+    /// One random valid request per case, spanning every variant (including
+    /// `Batch` nesting and the retention ops) — the corpus the corruption
+    /// properties below mutate.
+    fn arbitrary_request(g: &mut Gen) -> Request {
+        let keys = |g: &mut Gen| -> Vec<String> { g.vec(0..=4, |g| g.key()) };
+        match g.usize_in(0..=7) {
+            0 => {
+                let n = g.usize_in(1..=8);
+                let data: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
+                Request::PutTensor { key: g.key(), tensor: Tensor::from_f32(&[n], data).unwrap() }
+            }
+            1 => Request::GetTensor { key: g.key() },
+            2 => Request::DelKeys { keys: keys(g) },
+            3 => Request::Retention { window: g.u64(), max_bytes: g.u64() },
+            4 => Request::MGetTensors { keys: keys(g) },
+            5 => Request::PollKeys {
+                keys: keys(g),
+                timeout_ms: g.u64(),
+                initial_us: g.u64(),
+                cap_us: g.u64(),
+            },
+            6 => Request::PutMeta { key: g.key(), value: g.key() },
+            _ => Request::Batch(vec![
+                Request::DelKeys { keys: keys(g) },
+                Request::Retention { window: g.u64(), max_bytes: g.u64() },
+                Request::Exists { key: g.key() },
+            ]),
+        }
+    }
+
+    #[test]
+    fn prop_truncated_encodings_always_error() {
+        // Any strict prefix of a valid encoding must fail to decode: the
+        // parser is prefix-deterministic and requires exact consumption, so
+        // truncation can never be mistaken for a shorter valid message.
+        check("proto truncation", 400, |g: &mut Gen| {
+            let r = arbitrary_request(g);
+            let mut buf = Vec::new();
+            r.encode(&mut buf);
+            let cut = g.usize_in(0..=buf.len() - 1);
+            buf.truncate(cut);
+            assert!(Request::decode(&buf).is_err(), "prefix of {r:?} decoded");
+            assert!(Request::decode_shared(&Bytes::from_vec(buf)).is_err());
+        });
+    }
+
+    #[test]
+    fn prop_length_field_corruption_never_panics_or_overallocates() {
+        // Smash a 4-byte window of a valid encoding with an extreme length
+        // (the classic with_capacity(attacker_n) attack): decode must
+        // return without panicking or aborting on allocation, and a decoded
+        // value must re-encode to something that decodes identically.
+        check("proto length corruption", 300, |g: &mut Gen| {
+            let r = arbitrary_request(g);
+            let mut buf = Vec::new();
+            r.encode(&mut buf);
+            let i = g.usize_in(0..=buf.len() - 1);
+            let huge = if g.bool() { u32::MAX } else { u32::MAX / 2 };
+            for (o, b) in huge.to_le_bytes().iter().enumerate() {
+                if i + o < buf.len() {
+                    buf[i + o] = *b;
+                }
+            }
+            if let Ok(decoded) = Request::decode(&buf) {
+                let mut re = Vec::new();
+                decoded.encode(&mut re);
+                assert_eq!(Request::decode(&re).unwrap(), decoded, "re-encode roundtrip");
+            }
+            let _ = Response::decode(&buf);
+            let _ = Request::decode_shared(&Bytes::from_vec(buf));
+        });
+    }
+
+    #[test]
+    fn prop_bit_flips_on_new_messages_never_panic() {
+        check("proto retention-op bitflips", 300, |g: &mut Gen| {
+            let r = Request::Batch(vec![
+                Request::DelKeys { keys: vec![g.key(), g.key()] },
+                Request::Retention { window: g.u64(), max_bytes: g.u64() },
+            ]);
+            let mut buf = Vec::new();
+            r.encode(&mut buf);
+            for _ in 0..g.usize_in(1..=6) {
+                let i = g.usize_in(0..=buf.len() - 1);
+                buf[i] ^= 1 << g.usize_in(0..=7);
+            }
+            let _ = Request::decode(&buf);
+            let _ = Request::decode_shared(&Bytes::from_vec(buf));
+        });
+    }
+
+    #[test]
+    fn oversized_declared_counts_are_rejected_not_allocated() {
+        // DelKeys with a declared key count over MAX_BATCH: the decoder
+        // must refuse before reserving anything like that much memory.
+        let mut buf = vec![15u8]; // req_op::DEL_KEYS
+        buf.extend_from_slice(&((MAX_BATCH as u32) + 1).to_le_bytes());
+        assert!(Request::decode(&buf).is_err());
+        // Keys response with an absurd count and no body.
+        let mut buf = vec![6u8]; // resp_op::KEYS
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Response::decode(&buf).is_err());
+        // Batch header declaring u32::MAX entries.
+        let mut buf = vec![12u8]; // req_op::BATCH
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Request::decode(&buf).is_err());
+        // String length beyond MAX_FRAME.
+        let mut buf = vec![2u8]; // req_op::GET_TENSOR
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Request::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn retention_ops_inside_batches_roundtrip() {
+        let r = Request::Batch(vec![
+            Request::DelKeys { keys: vec!["a".into(), "b".into()] },
+            Request::Retention { window: 3, max_bytes: 1 << 20 },
+            Request::Info,
+        ]);
+        assert_eq!(roundtrip_req(&r), r);
+        assert_eq!(r.body_wire_size(), {
+            let mut b = Vec::new();
+            r.encode(&mut b);
+            b.len()
+        });
+        assert!(r.routing_key().is_none(), "retention ops are whole-database");
     }
 }

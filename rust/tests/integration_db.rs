@@ -6,13 +6,23 @@
 use std::time::Duration;
 
 use situ::client::{tensor_key, Client, ClusterClient, DataStore, Pipeline, PollConfig};
-use situ::db::{DbServer, Engine, ServerConfig};
+use situ::db::{DbServer, Engine, RetentionConfig, ServerConfig};
 use situ::error::Error;
 use situ::proto::{Request, Response};
 use situ::tensor::{DType, Tensor};
 
 fn start(engine: Engine) -> DbServer {
-    DbServer::start(ServerConfig { engine, with_models: false, ..Default::default() }).unwrap()
+    // Short teardown knobs: this suite starts dozens of servers, and the
+    // library defaults (1 s conn read timeout) would leave each one's
+    // detached connection threads lingering for up to a second.
+    DbServer::start(ServerConfig {
+        engine,
+        with_models: false,
+        conn_read_timeout: Duration::from_millis(50),
+        accept_backoff_max: Duration::from_millis(5),
+        ..Default::default()
+    })
+    .unwrap()
 }
 
 fn t(v: Vec<f32>) -> Tensor {
@@ -537,4 +547,222 @@ fn overwrite_is_last_writer_wins() {
     c.put_tensor("k", &t(vec![9.0])).unwrap();
     assert_eq!(c.get_tensor("k").unwrap().to_f32().unwrap(), vec![9.0]);
     assert_eq!(c.info().unwrap().bytes, 4);
+}
+
+#[test]
+fn retention_over_tcp_window_and_counters() {
+    let server = start(Engine::Redis);
+    let mut c = Client::connect(server.addr).unwrap();
+    c.set_retention(RetentionConfig { window: 2, max_bytes: 0 }).unwrap();
+    for step in 0..5u64 {
+        for r in 0..3 {
+            c.put_tensor(&tensor_key("w", r, step), &t(vec![step as f32; 16])).unwrap();
+        }
+    }
+    let keys = c.list_keys("w_").unwrap();
+    assert_eq!(keys.len(), 2 * 3, "two retained generations: {keys:?}");
+    assert!(keys.iter().all(|k| k.ends_with("step3") || k.ends_with("step4")));
+    // Evicted keys answer with a clean NotFound, and a short poll for them
+    // times out instead of wedging.
+    assert!(matches!(
+        c.get_tensor(&tensor_key("w", 0, 0)),
+        Err(Error::KeyNotFound(_))
+    ));
+    assert!(matches!(
+        c.poll_keys(
+            &[tensor_key("w", 0, 0)],
+            &PollConfig::new(
+                Duration::from_millis(1),
+                Duration::from_millis(5),
+                Duration::from_millis(40),
+            )
+        ),
+        Err(Error::Timeout(_))
+    ));
+    let info = c.info().unwrap();
+    assert_eq!(info.evicted_keys, 3 * 3);
+    assert_eq!(info.evicted_bytes, 9 * 64);
+    assert_eq!(info.bytes, 6 * 64);
+    assert!(info.high_water_bytes >= info.bytes);
+    assert_eq!(info.busy_rejections, 0);
+}
+
+#[test]
+fn put_backpressure_surfaces_as_busy() {
+    let server = start(Engine::Redis);
+    let mut c = Client::connect(server.addr).unwrap();
+    // Cap fits one field's two-generation window exactly (2 × 64 B).
+    c.set_retention(RetentionConfig { window: 2, max_bytes: 128 }).unwrap();
+    c.put_tensor(&tensor_key("f", 0, 0), &t(vec![0.0; 16])).unwrap();
+    c.put_tensor(&tensor_key("f", 0, 1), &t(vec![1.0; 16])).unwrap();
+    // A different field cannot fit: explicit backpressure, window intact.
+    let err = c.put_tensor(&tensor_key("g", 0, 0), &t(vec![2.0; 16])).unwrap_err();
+    assert!(matches!(err, Error::Busy(_)), "{err}");
+    assert!(c.exists(&tensor_key("f", 0, 0)).unwrap());
+    assert!(c.exists(&tensor_key("f", 0, 1)).unwrap());
+    // Appending within the same field retires its own oldest generation.
+    c.put_tensor(&tensor_key("f", 0, 2), &t(vec![3.0; 16])).unwrap();
+    assert!(!c.exists(&tensor_key("f", 0, 0)).unwrap());
+    let info = c.info().unwrap();
+    assert_eq!(info.busy_rejections, 1);
+    assert!(info.bytes <= 128);
+}
+
+#[test]
+fn del_keys_is_one_frame_with_per_key_results() {
+    let server = start(Engine::KeyDb);
+    let mut c = Client::connect(server.addr).unwrap();
+    let keys: Vec<String> = (0..5).map(|r| tensor_key("d", r, 0)).collect();
+    for k in &keys[..3] {
+        c.put_tensor(k, &t(vec![1.0])).unwrap();
+    }
+    let before = frames(&server);
+    let deleted = c.del_keys(&keys).unwrap();
+    assert_eq!(frames(&server) - before, 1, "multi-delete is one round trip");
+    assert_eq!(deleted, 3, "only resident keys count");
+    assert_eq!(c.list_keys("d_").unwrap().len(), 0);
+    assert_eq!(c.del_keys(&[]).unwrap(), 0, "empty delete is a no-op");
+}
+
+#[test]
+fn cluster_parity_del_keys_retention_and_windowed_gather() {
+    use situ::ml::DataLoader;
+
+    let servers = [start(Engine::KeyDb), start(Engine::KeyDb)];
+    let addrs: Vec<_> = servers.iter().map(|s| s.addr).collect();
+    let mut cc = ClusterClient::connect(&addrs).unwrap();
+
+    // set_retention broadcasts to every shard instance.
+    cc.set_retention(RetentionConfig { window: 3, max_bytes: 0 }).unwrap();
+    for s in &servers {
+        assert_eq!(s.store().retention(), RetentionConfig { window: 3, max_bytes: 0 });
+    }
+
+    // Publish 8 generations of 4 ranks; each shard windows the generations
+    // it holds, so cluster-wide the newest 3 are always fully retained.
+    let ranks = 4usize;
+    for step in 0..8u64 {
+        for r in 0..ranks {
+            cc.put_tensor(&tensor_key("cf", r, step), &t(vec![step as f32, r as f32]))
+                .unwrap();
+        }
+    }
+    // Every key of the newest 3 global generations survives (at most 2
+    // global generations are newer than step 5, so step-5..7 keys are
+    // always inside their shard's local window)...
+    let survivors = cc.list_keys("cf_").unwrap();
+    for step in 5..8u64 {
+        for r in 0..ranks {
+            assert!(survivors.contains(&tensor_key("cf", r, step)), "step {step} evicted");
+        }
+    }
+    // ...and no shard retains more than `window` generations of the field
+    // (a shard that happens to miss the newest generations may keep
+    // correspondingly older ones — the window is per instance).
+    for s in &servers {
+        let mut local_steps: Vec<u64> = s
+            .store()
+            .list_keys("cf_")
+            .iter()
+            .map(|k| situ::db::parse_step_key(k).unwrap().1)
+            .collect();
+        local_steps.sort_unstable();
+        local_steps.dedup();
+        assert!(local_steps.len() <= 3, "shard over its window: {local_steps:?}");
+    }
+    // info aggregates eviction counters across instances.
+    let info = cc.info().unwrap();
+    let per_store: u64 = servers
+        .iter()
+        .map(|s| s.store().counters.evicted_keys.load(std::sync::atomic::Ordering::Relaxed))
+        .sum();
+    assert!(per_store > 0, "eviction must have run");
+    assert_eq!(info.evicted_keys, per_store);
+
+    // The windowed dataloader runs unchanged on the clustered deployment
+    // (its pipelined gets route per shard) and matches a co-located run.
+    let mut dl = DataLoader::new(cc, (0..ranks).collect(), "cf", 9);
+    dl.wait_for_step(7, &quick_poll()).unwrap();
+    let clustered = dl.gather_window(7, 2).unwrap();
+    assert_eq!(clustered.len(), 2 * ranks, "two complete generations");
+
+    let solo = start(Engine::KeyDb);
+    let mut sc = Client::connect(solo.addr).unwrap();
+    for step in 6..8u64 {
+        for r in 0..ranks {
+            sc.put_tensor(&tensor_key("cf", r, step), &t(vec![step as f32, r as f32]))
+                .unwrap();
+        }
+    }
+    let mut dl2 = DataLoader::new(sc, (0..ranks).collect(), "cf", 9);
+    let colocated = dl2.gather_window(7, 2).unwrap();
+    assert_eq!(clustered, colocated, "identical window through either deployment");
+
+    // del_keys partitions across shards and sums the results.
+    let victims: Vec<String> = (0..ranks).map(|r| tensor_key("cf", r, 7)).collect();
+    assert_eq!(dl.client.del_keys(&victims).unwrap(), ranks as u64);
+    for k in &victims {
+        assert!(!dl.client.exists(k).unwrap());
+    }
+}
+
+#[test]
+fn windowed_gather_skips_retired_generations() {
+    let server = start(Engine::Redis);
+    let mut c = Client::connect(server.addr).unwrap();
+    c.set_retention(RetentionConfig { window: 2, max_bytes: 0 }).unwrap();
+    for step in 0..6u64 {
+        for r in 0..2 {
+            c.put_tensor(&tensor_key("sk", r, step), &t(vec![step as f32])).unwrap();
+        }
+    }
+    // Ask for a window of 4 ending at the latest step: generations 2 and 3
+    // are already retired, so only the retained 4 and 5 come back.
+    let mut dl = situ::ml::DataLoader::new(c, vec![0, 1], "sk", 3);
+    let got = dl.gather_window(5, 4).unwrap();
+    assert_eq!(got.len(), 2 * 2);
+    for tensor in &got {
+        let v = tensor.to_f32().unwrap()[0];
+        assert!(v == 4.0 || v == 5.0, "retired generation leaked: {v}");
+    }
+    // A missing *latest* generation is an error, not a silent skip.
+    assert!(matches!(
+        dl.gather_window(9, 2),
+        Err(Error::KeyNotFound(_))
+    ));
+}
+
+#[test]
+fn configured_timeouts_speed_up_teardown() {
+    // The knobs exist so tests stop paying up to 1 s of shutdown latency
+    // per connection: with a 25 ms read timeout the connection thread
+    // notices the stop flag and closes the socket almost immediately.
+    let mut server = DbServer::start(ServerConfig {
+        engine: Engine::Redis,
+        with_models: false,
+        conn_read_timeout: Duration::from_millis(25),
+        accept_backoff_max: Duration::from_millis(5),
+        ..Default::default()
+    })
+    .unwrap();
+    let mut c = Client::connect(server.addr).unwrap();
+    c.put_tensor("x", &t(vec![1.0])).unwrap();
+
+    let t0 = std::time::Instant::now();
+    server.shutdown();
+    // Joining the accept thread costs at most one backoff ceiling.
+    assert!(t0.elapsed() < Duration::from_millis(500), "accept join: {:?}", t0.elapsed());
+
+    // The connection thread notices the stop flag within ~one read timeout
+    // and closes its socket; under the old fixed 1 s timeout full teardown
+    // took up to a second per connection.  Wait out a few timeouts so the
+    // thread has certainly exited, then the dead socket must fail fast.
+    std::thread::sleep(Duration::from_millis(150));
+    let err = c.get_tensor("x");
+    assert!(err.is_err(), "server is down");
+    assert!(
+        t0.elapsed() < Duration::from_millis(900),
+        "teardown latency: {:?}",
+        t0.elapsed()
+    );
 }

@@ -78,6 +78,7 @@ fn insitu_training_end_to_end_miniature() {
         snapshot_every: 2,
         solver_steps: 16,
         seed: 3,
+        ..Default::default()
     };
     let report = run_insitu_training(&cfg).unwrap();
     assert_eq!(report.history.len(), 6);
@@ -104,6 +105,73 @@ fn insitu_training_end_to_end_miniature() {
 }
 
 #[test]
+fn insitu_training_windowed_bounded_memory() {
+    // The bounded-memory §4 workflow: a retention window on the store and
+    // a moving training window on the consumer.  16 solver steps at
+    // snapshot_every=2 publish 8 generations; retention keeps 4, so
+    // eviction demonstrably ran while training still converged on the
+    // retained window.  (retention_window comfortably exceeds the trainer
+    // window: the producer would have to advance 3 generations inside the
+    // trainer's microsecond meta-read→gather gap to race it, and each
+    // generation costs two real solver steps.)
+    let Some(dir) = artifacts() else { return };
+    let cfg = InSituTrainingConfig {
+        artifacts_dir: dir,
+        grid: (12, 10, 8),
+        nu: 2e-3,
+        sim_ranks: 2,
+        ml_ranks: 1,
+        epochs: 5,
+        snapshot_every: 2,
+        solver_steps: 16,
+        seed: 3,
+        window: 2,
+        retention_window: 4,
+        ..Default::default()
+    };
+    let report = run_insitu_training(&cfg).unwrap();
+    assert_eq!(report.history.len(), 5);
+    for log in &report.history {
+        assert!(log.train_loss.is_finite());
+        assert!(log.val_loss.is_finite());
+    }
+    assert!(report.db.evicted_keys > 0, "retention retired old generations");
+    assert!(
+        report.db.high_water_bytes >= report.db.bytes,
+        "high-water tracks peak residency"
+    );
+    assert_eq!(report.db.busy_rejections, 0, "no backpressure without a byte cap");
+}
+
+#[test]
+fn insitu_training_overwrite_mode_holds_one_generation() {
+    // The paper's overwrite publishing mode: stable keys keep exactly one
+    // generation per field resident, no retention policy required.
+    let Some(dir) = artifacts() else { return };
+    let cfg = InSituTrainingConfig {
+        artifacts_dir: dir,
+        grid: (12, 10, 8),
+        nu: 2e-3,
+        sim_ranks: 2,
+        ml_ranks: 1,
+        epochs: 4,
+        snapshot_every: 2,
+        solver_steps: 12,
+        seed: 3,
+        overwrite: true,
+        ..Default::default()
+    };
+    let report = run_insitu_training(&cfg).unwrap();
+    assert_eq!(report.history.len(), 4);
+    for log in &report.history {
+        assert!(log.train_loss.is_finite());
+    }
+    // One stable tensor key per sim rank plus the latest_step metadata.
+    assert_eq!(report.db.keys, cfg.sim_ranks as u64 + 1, "flat by construction");
+    assert_eq!(report.db.evicted_keys, 0, "overwrite needs no eviction");
+}
+
+#[test]
 fn trainer_times_out_without_producer() {
     let Some(dir) = artifacts() else { return };
     let mut cfg = RunConfig::default();
@@ -116,6 +184,7 @@ fn trainer_times_out_without_producer() {
         epochs: 1,
         field: "field".into(),
         poll: situ::client::PollConfig::with_max_wait(std::time::Duration::from_millis(100)),
+        ..Default::default()
     };
     let exec = situ::runtime::Executor::new().unwrap();
     let mut trainer = situ::ml::Trainer::new(t_cfg, &dir, exec).unwrap();

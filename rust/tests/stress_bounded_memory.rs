@@ -1,0 +1,273 @@
+//! Bounded-memory stress and long-run integration tests.
+//!
+//! * Concurrency stress: N producer threads appending step generations and
+//!   M windowed consumers gathering against one server **while eviction
+//!   runs**, asserting no torn reads, clean `NotFound` on evicted keys, and
+//!   exact byte accounting afterwards.
+//! * Long run: a driver-launched deployment under a byte cap holds store
+//!   bytes at a flat steady state over ≥ 200 producer steps, while the
+//!   windowed gather returns byte-identical samples to an unbounded
+//!   append-mode store over the same retained window.
+//!
+//! `SITU_STRESS_STEPS` bounds the stress iteration count (CI sets a small
+//! value, mirroring `SITU_BENCH_SMOKE`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use situ::client::{stable_key, tensor_key, Client, DataStore, PollConfig};
+use situ::config::RunConfig;
+use situ::db::{DbServer, Engine, RetentionConfig, ServerConfig};
+use situ::error::Error;
+use situ::ml::DataLoader;
+use situ::orchestrator::driver::Driver;
+use situ::tensor::Tensor;
+
+fn stress_steps(default_steps: u64) -> u64 {
+    std::env::var("SITU_STRESS_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_steps)
+        .max(10)
+}
+
+fn t_const(v: f32, n: usize) -> Tensor {
+    Tensor::from_f32(&[n], vec![v; n]).unwrap()
+}
+
+#[test]
+fn eviction_under_concurrent_producers_and_consumers() {
+    let steps = stress_steps(120);
+    let n_fields = 3usize;
+    let ranks = 2usize;
+    let elems = 256usize;
+    let payload = (elems * 4) as u64;
+    let window = 4u64;
+    // Room for every field's window plus two generations of slack, so the
+    // byte cap is armed without ever starving producers into Busy.
+    let cap = (window + 2) * (n_fields * ranks) as u64 * payload;
+
+    let server = DbServer::start(ServerConfig {
+        engine: Engine::KeyDb,
+        with_models: false,
+        retention: RetentionConfig { window, max_bytes: cap },
+        conn_read_timeout: Duration::from_millis(50),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr;
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let mut producers = Vec::new();
+    for f in 0..n_fields {
+        producers.push(std::thread::spawn(move || {
+            let mut c = Client::connect_retry(addr, 20, Duration::from_millis(10)).unwrap();
+            for step in 0..steps {
+                for r in 0..ranks {
+                    let key = tensor_key(&format!("sf{f}"), r, step);
+                    c.put_tensor(&key, &t_const(step as f32, elems)).unwrap();
+                }
+                c.put_meta(&format!("sf{f}_latest"), &step.to_string()).unwrap();
+            }
+        }));
+    }
+
+    let mut consumers = Vec::new();
+    for f in 0..n_fields {
+        let stop = Arc::clone(&stop);
+        consumers.push(std::thread::spawn(move || {
+            let client = Client::connect_retry(addr, 20, Duration::from_millis(10)).unwrap();
+            let mut dl =
+                DataLoader::new(client, (0..ranks).collect(), &format!("sf{f}"), 7 + f as u64);
+            let mut gathered = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let Some(latest) = dl.client.get_meta(&format!("sf{f}_latest")).unwrap() else {
+                    std::thread::yield_now();
+                    continue;
+                };
+                let latest: u64 = latest.parse().unwrap();
+                match dl.gather_window(latest, window) {
+                    Ok(samples) => {
+                        gathered += samples.len() as u64;
+                        for s in &samples {
+                            // Every tensor was published with a constant
+                            // payload; a mixed buffer would be a torn read.
+                            let v = s.to_f32().unwrap();
+                            let first = v[0];
+                            assert!(
+                                v.iter().all(|&x| x == first),
+                                "torn read in field sf{f}: {first} vs mix"
+                            );
+                        }
+                    }
+                    // The producer ran ahead and the whole requested window
+                    // was retired between the meta read and the gather —
+                    // a clean NotFound, never a wedge or a partial tensor.
+                    Err(Error::KeyNotFound(_)) => {}
+                    Err(e) => panic!("consumer sf{f} failed: {e}"),
+                }
+            }
+            gathered
+        }));
+    }
+
+    for p in producers {
+        p.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let mut total_gathered = 0u64;
+    for c in consumers {
+        total_gathered += c.join().unwrap();
+    }
+    assert!(total_gathered > 0, "consumers made progress");
+
+    // Post-mortem consistency through the in-process store handle.
+    let store = server.store();
+    let counters = &store.counters;
+    assert!(store.n_bytes() <= cap, "cap respected: {} > {cap}", store.n_bytes());
+    assert!(store.high_water_bytes() >= store.n_bytes());
+    let resident: u64 = store
+        .list_keys("")
+        .iter()
+        .map(|k| store.get_tensor(k).unwrap().nbytes() as u64)
+        .sum();
+    assert_eq!(store.n_bytes(), resident, "byte accounting drift after eviction");
+    // Steady state: each field retains exactly its window of generations.
+    for f in 0..n_fields {
+        assert_eq!(
+            store.list_keys(&format!("sf{f}_rank")).len() as u64,
+            window * ranks as u64,
+            "field sf{f} not windowed"
+        );
+    }
+    let evicted_keys = counters.evicted_keys.load(Ordering::Relaxed);
+    let evicted_bytes = counters.evicted_bytes.load(Ordering::Relaxed);
+    assert_eq!(
+        evicted_keys,
+        (steps - window) * (n_fields * ranks) as u64,
+        "every generation beyond the window was retired exactly once"
+    );
+    assert_eq!(evicted_bytes, evicted_keys * payload, "uniform payloads");
+    assert_eq!(counters.busy_rejections.load(Ordering::Relaxed), 0, "cap never starved puts");
+
+    // Evicted keys stay cleanly absent: a bounded poll times out rather
+    // than wedging, and exists() says no.
+    let mut c = Client::connect(addr).unwrap();
+    let old_key = tensor_key("sf0", 0, 0);
+    assert!(!c.exists(&old_key).unwrap());
+    assert!(matches!(
+        c.poll_keys(
+            &[old_key],
+            &PollConfig::new(
+                Duration::from_millis(1),
+                Duration::from_millis(5),
+                Duration::from_millis(50),
+            )
+        ),
+        Err(Error::Timeout(_))
+    ));
+}
+
+#[test]
+fn long_driver_run_holds_flat_memory_under_cap() {
+    // Acceptance: ≥ 200 producer steps under a byte cap, store bytes flat
+    // at steady state, windowed gather equivalent to append-mode on the
+    // retained window.  The deployment goes through the Driver so the
+    // retention config is exercised end to end (RunConfig → plan → server).
+    let steps = 220u64;
+    let ranks = 3usize;
+    let elems = 256usize;
+    let payload = (elems * 4) as u64;
+    let window = 6u64;
+    let cap = (window + 1) * ranks as u64 * payload;
+
+    let mut run_cfg = RunConfig::default();
+    run_cfg.nodes = 1;
+    run_cfg.ranks_per_node = ranks;
+    run_cfg.retention_window = window;
+    run_cfg.db_max_bytes = cap;
+    let mut driver = Driver::launch(&run_cfg, false).unwrap();
+    let addr = driver.primary_addr();
+    assert_eq!(
+        driver.servers[0].store().retention(),
+        RetentionConfig { window, max_bytes: cap },
+        "driver threads the retention config into every server"
+    );
+
+    // Unbounded reference store fed identical data (the append-mode
+    // baseline the windowed run must match on the retained window).
+    let reference = DbServer::start(ServerConfig {
+        engine: Engine::Redis,
+        with_models: false,
+        ..Default::default()
+    })
+    .unwrap();
+
+    let mut c = Client::connect(addr).unwrap();
+    let mut rc = Client::connect(reference.addr).unwrap();
+    let mut series: Vec<u64> = Vec::with_capacity(steps as usize);
+    for step in 0..steps {
+        for r in 0..ranks {
+            let snap = t_const((step * ranks as u64 + r as u64) as f32, elems);
+            c.put_tensor(&tensor_key("field", r, step), &snap).unwrap();
+            rc.put_tensor(&tensor_key("field", r, step), &snap).unwrap();
+        }
+        c.put_meta("latest_step", &step.to_string()).unwrap();
+        series.push(driver.servers[0].store().n_bytes());
+    }
+
+    // Flat steady state: once the window has filled, resident bytes are
+    // *exactly* constant — today's unbounded code grows linearly instead.
+    let steady = &series[window as usize..];
+    let mx = *steady.iter().max().unwrap();
+    let mn = *steady.iter().min().unwrap();
+    assert!(mx <= cap, "cap violated: {mx} > {cap}");
+    assert_eq!(mx, mn, "steady-state bytes not flat: {mn}..{mx}");
+    assert_eq!(mx, window * ranks as u64 * payload, "exactly the window resident");
+    let unbounded = reference.store().n_bytes();
+    assert_eq!(unbounded, steps * ranks as u64 * payload, "baseline grew linearly");
+
+    // Windowed trainer-side equivalence: the bounded store serves the same
+    // retained window, byte for byte, as the unbounded append store — so a
+    // trainer consuming the window makes identical per-epoch progress.
+    let latest = steps - 1;
+    let mut dl = DataLoader::new(c, (0..ranks).collect(), "field", 11);
+    dl.wait_for_step(latest, &PollConfig::default()).unwrap();
+    let windowed = dl.gather_window(latest, window).unwrap();
+    let mut rdl = DataLoader::new(rc, (0..ranks).collect(), "field", 11);
+    let append = rdl.gather_window(latest, window).unwrap();
+    assert_eq!(windowed.len(), window as usize * ranks);
+    assert_eq!(windowed, append, "retained window identical to append-mode");
+
+    driver.shutdown();
+}
+
+#[test]
+fn overwrite_mode_is_flat_by_construction() {
+    // The paper's overwrite mode: stable keys, no retention policy needed.
+    let server = DbServer::start(ServerConfig {
+        engine: Engine::KeyDb,
+        with_models: false,
+        ..Default::default()
+    })
+    .unwrap();
+    let ranks = 4usize;
+    let elems = 128usize;
+    let mut c = Client::connect(server.addr).unwrap();
+    for step in 0..stress_steps(100) {
+        for r in 0..ranks {
+            c.put_tensor(&stable_key("field", r), &t_const(step as f32, elems)).unwrap();
+        }
+        assert_eq!(
+            server.store().n_bytes(),
+            (ranks * elems * 4) as u64,
+            "one generation resident at step {step}"
+        );
+    }
+    // The consumer-side stable-key path sees the newest generation.
+    let mut dl = DataLoader::new(c, (0..ranks).collect(), "field", 5);
+    dl.wait_latest(&PollConfig::default()).unwrap();
+    let got = dl.gather_latest().unwrap();
+    assert_eq!(got.len(), ranks);
+}
