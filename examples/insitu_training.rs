@@ -83,6 +83,15 @@ fn main() -> situ::Result<()> {
         report.db.evicted_keys,
         report.db.busy_rejections
     );
+    println!(
+        "backpressure: {} snapshots published, {} skipped, {} dropped, {} busy retries, \
+         {} trainer generations skipped",
+        report.governor.published,
+        report.governor.skipped,
+        report.governor.dropped,
+        report.governor.busy_retries,
+        report.trainer_skipped_generations
+    );
     println!("wall time: {wall:.1} s");
     Ok(())
 }

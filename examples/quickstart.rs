@@ -7,9 +7,40 @@
 //! uploads a model and runs in-database inference.
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! # Retention + backpressure tuning
+//!
+//! Long runs must bound the store.  Pick a publishing mode first, then set
+//! the knobs (`situ serve --retention-window W --max-bytes B --ttl-ms T`;
+//! `situ train` adds `--busy-retries N --busy-backoff-ms MS
+//! --governor-max-stride K`):
+//!
+//! 1. **Append + window** (`tensor_key`, `--retention-window W`) — the
+//!    default for in-situ *training*: the trainer consumes a moving window
+//!    of the newest `W` generations (`gather_window`), older ones retire
+//!    automatically.  Choose `W ≥` the trainer's window; add
+//!    `--db-max-bytes` as a hard ceiling for mixed workloads.
+//! 2. **Overwrite** (`stable_key`, `--overwrite`) — bounded by
+//!    construction (one generation per field); the right mode when the
+//!    consumer only ever wants the newest snapshot (steering, live
+//!    inference).  No window needed; memory is flat with zero eviction.
+//! 3. **Governed append under a byte cap** (`--db-max-bytes B` +
+//!    `--busy-retries`/`--governor-max-stride`) — for shared or tightly
+//!    provisioned databases: when the cap would be exceeded and nothing is
+//!    evictable the put gets `Error::Busy` *backpressure*; a
+//!    [`RetryPolicy`] rides out transient stalls and the producer's
+//!    adaptive governor skips/merges snapshots under sustained pressure so
+//!    the solver never stops.  Use when consumer stalls are possible and
+//!    completing the run matters more than capturing every snapshot.
+//!
+//! Add `--db-ttl-ms T` (wall-clock TTL) in any mode to reclaim data from
+//! producers that stall mid-run and never advance their window.  Inspect
+//! pressure live with `situ info`: per-field resident bytes vs. the cap,
+//! eviction rates, TTL expiry and busy-rejection counters.
 
-use situ::client::{Client, ClusterClient, DataStore, Pipeline, PollConfig};
-use situ::db::{DbServer, ServerConfig};
+use situ::client::{Client, ClusterClient, DataStore, Pipeline, PollConfig, RetryPolicy};
+use situ::db::{DbServer, RetentionConfig, ServerConfig};
+use situ::error::Error;
 use situ::proto::Device;
 use situ::tensor::Tensor;
 
@@ -50,12 +81,52 @@ fn demo(store: &mut dyn DataStore, label: &str) -> situ::Result<()> {
     Ok(())
 }
 
+/// Retention + backpressure in action (see the module docs for when to
+/// pick each mode): a windowed byte-capped store retires old generations,
+/// answers un-placeable writes with `Busy`, and a retry policy rides out
+/// the pressure once the consumer frees space.
+fn retention_demo(store: &mut dyn DataStore) -> situ::Result<()> {
+    let snap = Tensor::from_f32(&[16], vec![0.5; 16])?; // 64 B per snapshot
+    // Keep the newest 2 generations per field, cap the store at exactly
+    // that footprint, and retire stalled fields after 60 s.
+    store.set_retention(RetentionConfig { window: 2, max_bytes: 128, ttl_ms: 60_000 })?;
+    for step in 0..5 {
+        store.put_tensor(&situ::client::tensor_key("field", 0, step), &snap)?;
+    }
+    let keys = store.list_keys("field_")?;
+    assert_eq!(keys.len(), 2, "window retired the older generations");
+
+    // A second field cannot fit under the cap — explicit backpressure.
+    let err = store.put_tensor(&situ::client::tensor_key("other", 0, 0), &snap).unwrap_err();
+    assert!(matches!(err, Error::Busy(_)), "flow control, not failure: {err}");
+
+    // A retrying put lands once space frees up (here: the consumer drops
+    // the old field; in a live run, the window advancing does the same).
+    store.del_keys(&keys)?;
+    let retries = store.put_tensor_retry(
+        &situ::client::tensor_key("other", 0, 0),
+        &snap,
+        &RetryPolicy::backoff(std::time::Duration::from_millis(1), 3),
+    )?;
+    let info = store.info()?;
+    println!(
+        "[retention] busy_rejections={} evicted_keys={} retries={retries} fields={:?}",
+        info.busy_rejections,
+        info.evicted_keys,
+        info.fields.iter().map(|f| f.field.as_str()).collect::<Vec<_>>()
+    );
+    store.set_retention(RetentionConfig::UNBOUNDED)?;
+    store.flush_all()?;
+    Ok(())
+}
+
 fn main() -> situ::Result<()> {
     // -- deployment A: one co-located database -----------------------------
     let server = DbServer::start(ServerConfig::default())?;
     println!("co-located database up at {} (engine={})", server.addr, server.config.engine.name());
     let mut single = Client::connect(server.addr)?;
     demo(&mut single, "co-located")?;
+    retention_demo(&mut single)?;
 
     // -- deployment B: a 2-shard clustered database ------------------------
     let shard_cfg = ServerConfig { with_models: false, ..Default::default() };

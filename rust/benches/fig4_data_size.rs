@@ -71,6 +71,7 @@ fn main() {
             iterations: 10,
             warmup: 2,
             compute_secs: 0.0,
+            retry: situ::client::RetryPolicy::Fail,
         })
         .expect("reproducer");
         let snap = times.snapshot();

@@ -46,7 +46,7 @@ fn main() {
 
     let modes: Vec<(&'static str, RetentionConfig, bool)> = vec![
         ("append_unbounded", RetentionConfig::UNBOUNDED, false),
-        ("append_windowed", RetentionConfig { window, max_bytes: cap }, false),
+        ("append_windowed", RetentionConfig::windowed(window, cap), false),
         ("overwrite", RetentionConfig::UNBOUNDED, true),
     ];
 

@@ -1,0 +1,392 @@
+//! Busy-aware backpressure: retry policies and the adaptive publish
+//! governor.
+//!
+//! A bounded store answers writes it cannot fit with [`Error::Busy`] — a
+//! *flow-control signal*, not a failure.  This module turns that signal
+//! into producer behavior:
+//!
+//! * [`RetryPolicy`] decides how a single operation reacts to `Busy`:
+//!   surface it immediately, retry with capped exponential backoff a fixed
+//!   number of times, or retry until a deadline.  Every variant obeys the
+//!   sleep audit: a sleep only ever happens *between* attempts — never
+//!   after the final one — and a deadline is a hard bound, so a retrying
+//!   producer never spins past server shutdown (a shutdown surfaces as a
+//!   non-`Busy` I/O error and stops the loop on the spot).
+//! * [`PublishGovernor`] decides how the *publish loop* reacts to
+//!   sustained pressure: when a snapshot cannot be placed even after
+//!   retries, the governor drops it and doubles its publish stride
+//!   (publish every k-th snapshot opportunity), halving the stride back on
+//!   success.  Skipping is semantically a *merge*: the solver keeps
+//!   integrating, so the next published snapshot carries the latest state
+//!   and the skipped intermediates are subsumed by it.  The paper's
+//!   premise — in situ transfer must never stall the solver — survives
+//!   consumer stalls this way instead of aborting on `Busy`.
+//!
+//! All skip/retry/drop activity is counted in [`GovernorStats`] and
+//! surfaced through the run report and `situ info` tables.
+
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+/// How an operation reacts to [`Error::Busy`] backpressure.  Non-`Busy`
+/// errors always surface immediately — only flow control is retried.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RetryPolicy {
+    /// Surface `Busy` to the caller on the first rejection (the pre-PR
+    /// behavior; the right choice when a higher layer governs pacing).
+    #[default]
+    Fail,
+    /// Up to `retries` extra attempts with exponential backoff starting at
+    /// `initial` and saturating at `cap`.
+    Backoff { initial: Duration, cap: Duration, retries: u32 },
+    /// Retry with the same backoff shape until `deadline` has elapsed
+    /// since the first attempt, then surface `Busy`.  The last sleep is
+    /// clamped to the remaining budget, so the loop is bounded by the
+    /// deadline — it never sleeps past it and never spins.
+    Deadline { initial: Duration, cap: Duration, deadline: Duration },
+}
+
+impl RetryPolicy {
+    /// Capped exponential backoff with the default 32× interval ceiling.
+    pub fn backoff(initial: Duration, retries: u32) -> RetryPolicy {
+        RetryPolicy::Backoff { initial, cap: initial.saturating_mul(32), retries }
+    }
+
+    /// Deadline-bounded backoff with the default 32× interval ceiling.
+    pub fn deadline(initial: Duration, deadline: Duration) -> RetryPolicy {
+        RetryPolicy::Deadline { initial, cap: initial.saturating_mul(32), deadline }
+    }
+
+    /// Run `op`, retrying `Busy` per the policy.  Returns the final result
+    /// and how many retries (sleeps) were taken.
+    pub fn run<T>(&self, op: impl FnMut() -> Result<T>) -> (Result<T>, u64) {
+        self.run_with(op, std::thread::sleep)
+    }
+
+    /// `run` with an injectable sleeper (tests audit the sleep discipline
+    /// without wall-clock flakiness).
+    pub fn run_with<T>(
+        &self,
+        mut op: impl FnMut() -> Result<T>,
+        mut sleep: impl FnMut(Duration),
+    ) -> (Result<T>, u64) {
+        let started = Instant::now();
+        let mut interval = match *self {
+            RetryPolicy::Fail => Duration::ZERO,
+            RetryPolicy::Backoff { initial, .. } | RetryPolicy::Deadline { initial, .. } => {
+                initial
+            }
+        };
+        let mut retries = 0u64;
+        loop {
+            match op() {
+                Err(Error::Busy(m)) => {
+                    // Decide whether another attempt is allowed *before*
+                    // sleeping, so no sleep ever follows the final attempt.
+                    let wait = match *self {
+                        RetryPolicy::Fail => None,
+                        RetryPolicy::Backoff { cap, retries: max, .. } => {
+                            (retries < max as u64).then_some(interval.min(cap))
+                        }
+                        RetryPolicy::Deadline { cap, deadline, .. } => {
+                            let remaining = deadline.saturating_sub(started.elapsed());
+                            (!remaining.is_zero()).then_some(interval.min(cap).min(remaining))
+                        }
+                    };
+                    match wait {
+                        None => return (Err(Error::Busy(m)), retries),
+                        Some(d) => {
+                            sleep(d);
+                            retries += 1;
+                            interval = interval.saturating_mul(2);
+                        }
+                    }
+                }
+                other => return (other, retries),
+            }
+        }
+    }
+}
+
+/// Producer-side flow-control configuration, threaded `RunConfig` →
+/// `DeploymentPlan` → the CFD producer (and exposed as CLI flags).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GovernorConfig {
+    /// Per-publish retry discipline for `Busy` rejections.
+    pub retry: RetryPolicy,
+    /// Ceiling for the adaptive publish stride.  `1` disables skipping: a
+    /// publish that stays `Busy` after retries is then a hard error (the
+    /// pre-PR behavior).
+    pub max_stride: u64,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig { retry: RetryPolicy::Fail, max_stride: 1 }
+    }
+}
+
+/// Counters the governor accumulates (reported in the run report and the
+/// backpressure telemetry table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct GovernorStats {
+    /// Snapshots successfully placed in the store.
+    pub published: u64,
+    /// Snapshot opportunities skipped by the adaptive stride.
+    pub skipped: u64,
+    /// `Busy` retries taken across all publishes.
+    pub busy_retries: u64,
+    /// Snapshots dropped after retry exhaustion (stride then doubled).
+    pub dropped: u64,
+}
+
+/// Adaptive publish governor: multiplicative-increase of the publish
+/// stride on sustained `Busy`, multiplicative-decrease back toward 1 on
+/// success.
+pub struct PublishGovernor {
+    cfg: GovernorConfig,
+    stride: u64,
+    /// Snapshot opportunities seen since the last publish attempt.
+    since_attempt: u64,
+    stats: GovernorStats,
+}
+
+impl PublishGovernor {
+    pub fn new(cfg: GovernorConfig) -> PublishGovernor {
+        PublishGovernor {
+            cfg: GovernorConfig { max_stride: cfg.max_stride.max(1), ..cfg },
+            stride: 1,
+            since_attempt: 0,
+            stats: GovernorStats::default(),
+        }
+    }
+
+    /// Call once per snapshot opportunity.  `false` means this snapshot is
+    /// skipped under the current stride (counted); the caller publishes
+    /// only on `true`.
+    pub fn should_publish(&mut self) -> bool {
+        self.since_attempt += 1;
+        if self.since_attempt >= self.stride {
+            true
+        } else {
+            self.stats.skipped += 1;
+            false
+        }
+    }
+
+    /// Run a publish closure under the retry policy, adapting the stride.
+    ///
+    /// * `Ok(Some(v))` — published; stride decays toward 1.
+    /// * `Ok(None)` — dropped under sustained pressure (stride doubled up
+    ///   to `max_stride`); the run continues.  Only possible when
+    ///   `max_stride > 1`.
+    /// * `Err(Busy)` — retry exhausted and skipping is disabled.
+    /// * `Err(other)` — real failure (I/O, shutdown, …), surfaced as-is.
+    pub fn publish<T>(&mut self, op: impl FnMut() -> Result<T>) -> Result<Option<T>> {
+        self.since_attempt = 0;
+        let (res, retries) = self.cfg.retry.run(op);
+        self.stats.busy_retries += retries;
+        match res {
+            Ok(v) => {
+                self.stats.published += 1;
+                self.stride = (self.stride / 2).max(1);
+                Ok(Some(v))
+            }
+            Err(Error::Busy(m)) => {
+                if self.cfg.max_stride > 1 {
+                    self.stats.dropped += 1;
+                    self.stride = (self.stride * 2).clamp(2, self.cfg.max_stride);
+                    Ok(None)
+                } else {
+                    Err(Error::Busy(m))
+                }
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Current publish stride (1 = every snapshot opportunity).
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    pub fn stats(&self) -> GovernorStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+
+    fn busy() -> Error {
+        Error::Busy("full".into())
+    }
+
+    /// Run a policy against an op failing `fail_n` times, recording sleeps.
+    fn drive(policy: RetryPolicy, fail_n: u64) -> (Result<u64>, u64, Vec<Duration>) {
+        let sleeps = RefCell::new(Vec::new());
+        let mut calls = 0u64;
+        let (res, retries) = policy.run_with(
+            || {
+                calls += 1;
+                if calls <= fail_n {
+                    Err(busy())
+                } else {
+                    Ok(calls)
+                }
+            },
+            |d| sleeps.borrow_mut().push(d),
+        );
+        let sleeps = sleeps.into_inner();
+        (res, retries, sleeps)
+    }
+
+    #[test]
+    fn fail_policy_never_sleeps() {
+        let (res, retries, sleeps) = drive(RetryPolicy::Fail, 1);
+        assert!(matches!(res, Err(Error::Busy(_))));
+        assert_eq!(retries, 0);
+        assert!(sleeps.is_empty(), "Fail must not sleep at all");
+    }
+
+    #[test]
+    fn backoff_retries_then_succeeds_with_exponential_sleeps() {
+        let policy = RetryPolicy::Backoff {
+            initial: Duration::from_millis(10),
+            cap: Duration::from_millis(40),
+            retries: 5,
+        };
+        let (res, retries, sleeps) = drive(policy, 3);
+        assert_eq!(res.unwrap(), 4, "succeeds on the 4th attempt");
+        assert_eq!(retries, 3);
+        assert_eq!(
+            sleeps,
+            vec![
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+                Duration::from_millis(40)
+            ],
+            "doubling, saturating at the cap"
+        );
+    }
+
+    #[test]
+    fn backoff_never_sleeps_after_the_final_attempt() {
+        // 2 retries = 3 attempts total; all Busy.  Exactly 2 sleeps — one
+        // per *inter-attempt* gap, none trailing the final failure.
+        let policy = RetryPolicy::Backoff {
+            initial: Duration::from_millis(5),
+            cap: Duration::from_millis(80),
+            retries: 2,
+        };
+        let (res, retries, sleeps) = drive(policy, u64::MAX);
+        assert!(matches!(res, Err(Error::Busy(_))));
+        assert_eq!(retries, 2);
+        assert_eq!(sleeps.len(), 2, "no sleep after the last attempt");
+    }
+
+    #[test]
+    fn deadline_policy_is_bounded_and_clamps_the_last_sleep() {
+        // A zero deadline means exactly one attempt and zero sleeps.
+        let policy = RetryPolicy::Deadline {
+            initial: Duration::from_millis(5),
+            cap: Duration::from_millis(80),
+            deadline: Duration::ZERO,
+        };
+        let (res, retries, sleeps) = drive(policy, u64::MAX);
+        assert!(matches!(res, Err(Error::Busy(_))));
+        assert_eq!(retries, 0);
+        assert!(sleeps.is_empty());
+
+        // A real deadline: every recorded sleep fits inside the budget (the
+        // remaining-time clamp), and the loop terminates.
+        let deadline = Duration::from_millis(30);
+        let policy = RetryPolicy::Deadline {
+            initial: Duration::from_millis(8),
+            cap: Duration::from_millis(80),
+            deadline,
+        };
+        let (res, _retries, sleeps) = drive(policy, u64::MAX);
+        assert!(matches!(res, Err(Error::Busy(_))));
+        assert!(!sleeps.is_empty(), "a live deadline allows retries");
+        assert!(sleeps.iter().all(|d| *d <= deadline), "sleeps clamped to the budget");
+    }
+
+    #[test]
+    fn non_busy_errors_surface_immediately() {
+        let policy = RetryPolicy::backoff(Duration::from_millis(5), 10);
+        let sleeps = RefCell::new(0usize);
+        let (res, retries) = policy.run_with(
+            || -> Result<()> { Err(Error::Timeout("server gone".into())) },
+            |_| *sleeps.borrow_mut() += 1,
+        );
+        assert!(matches!(res, Err(Error::Timeout(_))), "shutdown/IO is not retried");
+        assert_eq!(retries, 0);
+        assert_eq!(*sleeps.borrow(), 0);
+    }
+
+    #[test]
+    fn governor_skips_under_pressure_and_recovers() {
+        let mut gov = PublishGovernor::new(GovernorConfig {
+            retry: RetryPolicy::Fail,
+            max_stride: 8,
+        });
+        assert!(gov.should_publish(), "stride starts at 1");
+        // Sustained pressure: drops double the stride.
+        assert!(gov.publish(|| -> Result<()> { Err(busy()) }).unwrap().is_none());
+        assert_eq!(gov.stride(), 2);
+        assert!(!gov.should_publish(), "one skip under stride 2");
+        assert!(gov.should_publish());
+        assert!(gov.publish(|| -> Result<()> { Err(busy()) }).unwrap().is_none());
+        assert_eq!(gov.stride(), 4);
+        assert!(gov.publish(|| -> Result<()> { Err(busy()) }).unwrap().is_none());
+        assert!(gov.publish(|| -> Result<()> { Err(busy()) }).unwrap().is_none());
+        assert_eq!(gov.stride(), 8, "stride saturates at max_stride");
+        // Relief: successes halve the stride back down to 1.
+        assert_eq!(gov.publish(|| Ok(1)).unwrap(), Some(1));
+        assert_eq!(gov.stride(), 4);
+        assert_eq!(gov.publish(|| Ok(2)).unwrap(), Some(2));
+        assert_eq!(gov.publish(|| Ok(3)).unwrap(), Some(3));
+        assert_eq!(gov.stride(), 1);
+        let stats = gov.stats();
+        assert_eq!(stats.published, 3);
+        assert_eq!(stats.dropped, 4);
+        assert_eq!(stats.skipped, 1);
+    }
+
+    #[test]
+    fn governor_with_stride_one_surfaces_busy() {
+        let mut gov = PublishGovernor::new(GovernorConfig::default());
+        let err = gov.publish(|| -> Result<()> { Err(busy()) }).unwrap_err();
+        assert!(matches!(err, Error::Busy(_)), "max_stride 1 keeps Busy fatal");
+        assert_eq!(gov.stats().dropped, 0);
+    }
+
+    #[test]
+    fn governor_counts_retries() {
+        let mut gov = PublishGovernor::new(GovernorConfig {
+            retry: RetryPolicy::Backoff {
+                initial: Duration::from_micros(1),
+                cap: Duration::from_micros(2),
+                retries: 3,
+            },
+            max_stride: 4,
+        });
+        let mut calls = 0;
+        let out = gov
+            .publish(|| {
+                calls += 1;
+                if calls < 3 {
+                    Err(busy())
+                } else {
+                    Ok(calls)
+                }
+            })
+            .unwrap();
+        assert_eq!(out, Some(3));
+        assert_eq!(gov.stats().busy_retries, 2);
+    }
+}

@@ -51,6 +51,10 @@
 //! a pipeline is partitioned per shard and results are reassembled in
 //! submission order.
 
+pub mod backpressure;
+
+pub use backpressure::{GovernorConfig, GovernorStats, PublishGovernor, RetryPolicy};
+
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
@@ -220,6 +224,15 @@ impl Pipeline {
 pub trait DataStore {
     /// Send a tensor (the paper's `put_tensor`).
     fn put_tensor(&mut self, key: &str, t: &Tensor) -> Result<()>;
+
+    /// `put_tensor` with `Busy`-aware retry per `policy` (see
+    /// [`backpressure::RetryPolicy`]): backpressure from a bounded store
+    /// is retried with capped backoff, every other error surfaces
+    /// immediately.  Returns the number of retries taken.
+    fn put_tensor_retry(&mut self, key: &str, t: &Tensor, policy: &RetryPolicy) -> Result<u64> {
+        let (res, retries) = policy.run(|| self.put_tensor(key, t));
+        res.map(|()| retries)
+    }
 
     /// Retrieve a tensor (the paper's `unpack_tensor`).
     fn get_tensor(&mut self, key: &str) -> Result<Tensor>;
@@ -438,8 +451,12 @@ impl DataStore for Client {
     }
 
     fn set_retention(&mut self, cfg: RetentionConfig) -> Result<()> {
-        self.call(&Request::Retention { window: cfg.window, max_bytes: cfg.max_bytes })?
-            .expect_ok()
+        self.call(&Request::Retention {
+            window: cfg.window,
+            max_bytes: cfg.max_bytes,
+            ttl_ms: cfg.ttl_ms,
+        })?
+        .expect_ok()
     }
 
     fn exists(&mut self, key: &str) -> Result<bool> {
@@ -707,10 +724,14 @@ impl DataStore for ClusterClient {
     }
 
     /// Sums keys/bytes/ops and the eviction/high-water/backpressure
-    /// counters across shards.  `models` is the per-shard maximum (uploads
-    /// are broadcast, so summing would multiply-count); `engine` is the
-    /// first shard's.  The summed high-water mark is an upper bound on
-    /// cluster-wide peak residency (shards may not peak simultaneously).
+    /// counters across shards, and merges per-field pressure by field name
+    /// (a field's generations scatter across shards).  `models` is the
+    /// per-shard maximum (uploads are broadcast, so summing would
+    /// multiply-count); `engine` is the first shard's; the window/TTL
+    /// policy is the broadcast value while `retention_max_bytes` sums to
+    /// the cluster-wide byte budget.  The summed high-water mark is an
+    /// upper bound on cluster-wide peak residency (shards may not peak
+    /// simultaneously).
     fn info(&mut self) -> Result<DbInfo> {
         let mut agg = DbInfo::default();
         for c in &mut self.shards {
@@ -723,10 +744,26 @@ impl DataStore for ClusterClient {
             agg.evicted_keys += i.evicted_keys;
             agg.evicted_bytes += i.evicted_bytes;
             agg.busy_rejections += i.busy_rejections;
+            agg.ttl_expired_keys += i.ttl_expired_keys;
+            agg.retention_window = agg.retention_window.max(i.retention_window);
+            agg.retention_max_bytes += i.retention_max_bytes;
+            agg.retention_ttl_ms = agg.retention_ttl_ms.max(i.retention_ttl_ms);
             if agg.engine.is_empty() {
                 agg.engine = i.engine;
             }
+            for f in i.fields {
+                match agg.fields.iter_mut().find(|a| a.field == f.field) {
+                    Some(a) => {
+                        a.resident_bytes += f.resident_bytes;
+                        a.generations += f.generations;
+                        a.evicted_keys += f.evicted_keys;
+                        a.evicted_bytes += f.evicted_bytes;
+                    }
+                    None => agg.fields.push(f),
+                }
+            }
         }
+        agg.fields.sort_by(|a, b| a.field.cmp(&b.field));
         Ok(agg)
     }
 

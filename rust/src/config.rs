@@ -4,6 +4,9 @@
 //! vs clustered), database engine and core allocation, ranks per node,
 //! per-rank payload size, iteration counts (paper: 40 measured + 2 warmup).
 
+use std::time::Duration;
+
+use crate::client::{GovernorConfig, RetryPolicy};
 use crate::db::Engine;
 use crate::error::{Error, Result};
 use crate::util::cli::Args;
@@ -54,6 +57,17 @@ pub struct RunConfig {
     /// Byte cap per database instance (0 = unbounded).  Writes that cannot
     /// fit even after eviction get `busy` backpressure.
     pub db_max_bytes: u64,
+    /// Wall-clock TTL in milliseconds for data whose producer stalls
+    /// (0 = never expire).
+    pub db_ttl_ms: u64,
+    /// `Busy` retries per publish before the producer gives up on a
+    /// snapshot (0 = fail immediately, the seed behavior).
+    pub busy_retries: u32,
+    /// Initial backoff between `Busy` retries, milliseconds.
+    pub busy_backoff_ms: u64,
+    /// Ceiling for the producer's adaptive publish stride under sustained
+    /// backpressure (1 = never skip a snapshot; `Busy` is then fatal).
+    pub governor_max_stride: u64,
 }
 
 impl Default for RunConfig {
@@ -71,6 +85,10 @@ impl Default for RunConfig {
             compute_secs: 0.0,
             retention_window: 0,
             db_max_bytes: 0,
+            db_ttl_ms: 0,
+            busy_retries: 0,
+            busy_backoff_ms: 5,
+            governor_max_stride: 1,
         }
     }
 }
@@ -82,6 +100,20 @@ impl RunConfig {
 
     pub fn total_ml_ranks(&self) -> usize {
         self.nodes * self.ml_ranks_per_node
+    }
+
+    /// Producer flow-control configuration derived from the backpressure
+    /// flags (threaded `RunConfig` → `DeploymentPlan` → the CFD producer).
+    pub fn governor(&self) -> GovernorConfig {
+        let retry = if self.busy_retries == 0 {
+            RetryPolicy::Fail
+        } else {
+            RetryPolicy::backoff(
+                Duration::from_millis(self.busy_backoff_ms.max(1)),
+                self.busy_retries,
+            )
+        };
+        GovernorConfig { retry, max_stride: self.governor_max_stride.max(1) }
     }
 
     /// Parse the shared experiment flags off a CLI invocation.
@@ -97,6 +129,11 @@ impl RunConfig {
         c.compute_secs = a.f64_or("compute-secs", c.compute_secs)?;
         c.retention_window = a.usize_or("retention-window", c.retention_window as usize)? as u64;
         c.db_max_bytes = a.usize_or("db-max-bytes", c.db_max_bytes as usize)? as u64;
+        c.db_ttl_ms = a.usize_or("db-ttl-ms", c.db_ttl_ms as usize)? as u64;
+        c.busy_retries = a.usize_or("busy-retries", c.busy_retries as usize)? as u32;
+        c.busy_backoff_ms = a.usize_or("busy-backoff-ms", c.busy_backoff_ms as usize)? as u64;
+        c.governor_max_stride =
+            a.usize_or("governor-max-stride", c.governor_max_stride as usize)? as u64;
         if let Some(e) = a.str_opt("engine") {
             c.engine = Engine::parse(e)
                 .ok_or_else(|| Error::Invalid(format!("unknown engine '{e}'")))?;
@@ -138,9 +175,29 @@ mod tests {
 
     #[test]
     fn parses_retention_flags() {
-        let c = parse("bench --retention-window 6 --db-max-bytes 1048576");
+        let c = parse("bench --retention-window 6 --db-max-bytes 1048576 --db-ttl-ms 30000");
         assert_eq!(c.retention_window, 6);
         assert_eq!(c.db_max_bytes, 1 << 20);
+        assert_eq!(c.db_ttl_ms, 30_000);
+    }
+
+    #[test]
+    fn parses_backpressure_flags_into_a_governor() {
+        let c = parse("bench --busy-retries 4 --busy-backoff-ms 10 --governor-max-stride 8");
+        assert_eq!(c.busy_retries, 4);
+        let gov = c.governor();
+        assert_eq!(gov.max_stride, 8);
+        assert_eq!(
+            gov.retry,
+            RetryPolicy::Backoff {
+                initial: Duration::from_millis(10),
+                cap: Duration::from_millis(320),
+                retries: 4,
+            }
+        );
+        // Defaults preserve the seed behavior: fail on first Busy, no skip.
+        let c = RunConfig::default();
+        assert_eq!(c.governor(), GovernorConfig { retry: RetryPolicy::Fail, max_stride: 1 });
     }
 
     #[test]

@@ -487,21 +487,43 @@ pub fn execute(
                 })
                 .collect(),
         ),
-        Request::Retention { window, max_bytes } => {
-            store.set_retention(RetentionConfig { window, max_bytes });
+        Request::Retention { window, max_bytes, ttl_ms } => {
+            store.set_retention(RetentionConfig { window, max_bytes, ttl_ms });
             Response::Ok
         }
-        Request::Info => Response::Info(DbInfo {
-            keys: store.n_keys(),
-            bytes: store.n_bytes(),
-            ops: store.n_ops(),
-            models: models.map(|m| m.n_models()).unwrap_or(0),
-            high_water_bytes: store.high_water_bytes(),
-            evicted_keys: store.counters.evicted_keys.load(Ordering::Relaxed),
-            evicted_bytes: store.counters.evicted_bytes.load(Ordering::Relaxed),
-            busy_rejections: store.counters.busy_rejections.load(Ordering::Relaxed),
-            engine: engine.name().to_string(),
-        }),
+        Request::Info => {
+            // Opportunistic TTL sweep: stalled producers are reclaimed even
+            // when no other field is writing into their index shard (no-op
+            // unless a TTL policy is active).
+            store.expire_ttl();
+            let retention = store.retention();
+            // The codec rejects field lists over MAX_BATCH; keep the reply
+            // decodable for pathological field counts by reporting the
+            // most-pressured fields (by resident bytes) and dropping the
+            // tail, name-sorted again for stable output.
+            let mut fields = store.field_pressure();
+            if fields.len() > crate::proto::MAX_BATCH {
+                fields.sort_by(|a, b| b.resident_bytes.cmp(&a.resident_bytes));
+                fields.truncate(crate::proto::MAX_BATCH);
+                fields.sort_by(|a, b| a.field.cmp(&b.field));
+            }
+            Response::Info(DbInfo {
+                keys: store.n_keys(),
+                bytes: store.n_bytes(),
+                ops: store.n_ops(),
+                models: models.map(|m| m.n_models()).unwrap_or(0),
+                high_water_bytes: store.high_water_bytes(),
+                evicted_keys: store.counters.evicted_keys.load(Ordering::Relaxed),
+                evicted_bytes: store.counters.evicted_bytes.load(Ordering::Relaxed),
+                busy_rejections: store.counters.busy_rejections.load(Ordering::Relaxed),
+                ttl_expired_keys: store.counters.ttl_expired_keys.load(Ordering::Relaxed),
+                retention_window: retention.window,
+                retention_max_bytes: retention.max_bytes,
+                retention_ttl_ms: retention.ttl_ms,
+                engine: engine.name().to_string(),
+                fields,
+            })
+        }
         Request::FlushAll => {
             store.flush_all();
             Response::Ok

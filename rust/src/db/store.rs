@@ -18,30 +18,66 @@
 //!   than `W` generations the oldest is retired on the spot, so steady-state
 //!   footprint is `W` generations per field regardless of run length.
 //! * **Byte cap** — with `max_bytes > 0` a write that would exceed the cap
-//!   first evicts the oldest generations *outside* every field's protected
-//!   window, then falls back to least-recently-used eviction of untracked
-//!   keys (keys that don't parse as step keys, e.g. the overwrite-mode
-//!   `{field}_rank{r}_latest` scheme).  If nothing evictable remains the
-//!   write is rejected with [`Error::Busy`] — explicit producer
-//!   backpressure instead of OOM.
+//!   first evicts TTL-expired generations, then the oldest generations
+//!   *outside* every field's protected window, then falls back to
+//!   least-recently-used eviction of untracked keys (keys that don't parse
+//!   as step keys, e.g. the overwrite-mode `{field}_rank{r}_latest`
+//!   scheme).  If nothing evictable remains the write is rejected with
+//!   [`Error::Busy`] — explicit producer backpressure instead of OOM.
+//! * **Wall-clock TTL** — with `ttl_ms > 0` a generation (or untracked key)
+//!   untouched for that long is retired even if it sits inside its field's
+//!   window.  This covers producers that stall mid-run and never advance
+//!   the window: their stale snapshots age out instead of pinning memory
+//!   forever.  Expiry runs on generation boundaries of the owning index
+//!   shard, during byte-cap eviction (expired data is the first victim),
+//!   and on demand via [`Store::expire_ttl`] (the server sweeps on `INFO`).
 //!
 //! Metadata entries are not byte-accounted (they are tiny strings) and are
-//! never evicted.  Both limits default to 0 (= the seed's unbounded append
+//! never evicted.  All limits default to 0 (= the seed's unbounded append
 //! behavior), and the governed bookkeeping is only engaged when a policy is
 //! set: ungoverned puts take exactly the old lock-per-shard fast path.
 //!
-//! Lock order: the retention index mutex is always acquired *before* any
-//! shard mutex, never the reverse — eviction (index → shards) can therefore
-//! never deadlock against writes.
+//! # Index sharding and lock order
+//!
+//! The retention index is sharded by *field* (by whole key for untracked
+//! keys) across `N_INDEX_SHARDS` independently-locked shards, so governed
+//! puts to distinct fields proceed in parallel — the same sharded-lock
+//! discipline as the data plane, replacing the single index mutex that used
+//! to re-serialize every governed operation.  A put takes exactly one index
+//! shard lock, held for O(1) bookkeeping; window retirement and TTL expiry
+//! only run on generation boundaries (a put that opens a new generation).
+//! Byte-cap pressure is handled with an atomic byte *reservation*
+//! ([`Store::try_reserve`]): a put that fits under the cap never takes any
+//! global lock, and only puts that must evict serialize on the single
+//! `evict_gate` mutex (other fields' non-evicting puts keep flowing).
+//!
+//! Lock order (outer → inner): `evict_gate` → one index shard mutex → data
+//! shard mutexes.  An evictor (the only holder of `evict_gate`) locks index
+//! shards one at a time while scanning; every other path holds at most one
+//! index shard lock and only acquires data shard locks under it, so the
+//! ordering is acyclic and eviction can never deadlock against writes.
+//!
+//! Concurrency caveat (documented, deliberate): the byte cap is enforced
+//! per reservation against the key's indexed size, with the replaced
+//! payload uncharged at reservation time and reconciled at insert — so the
+//! byte counter (and the high-water mark sampled from it) never exceeds
+//! the cap.  During an in-flight overwrite the counter briefly excludes
+//! the not-yet-replaced buffer; two racing writers of the *same* key can
+//! widen that window, but the framework's key schemes give every key a
+//! single writer, and accounting reconverges to exact either way.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::proto::message::FieldPressure;
 use crate::tensor::Tensor;
 
 const N_SHARDS: usize = 16;
+/// Retention index shards (fields hash here; see module docs).
+const N_INDEX_SHARDS: usize = 16;
 
 #[derive(Default)]
 struct Shard {
@@ -61,13 +97,27 @@ pub struct RetentionConfig {
     /// Byte capacity for tensor payloads.  A write that cannot fit even
     /// after eviction fails with [`Error::Busy`].  `0` = unbounded.
     pub max_bytes: u64,
+    /// Wall-clock time-to-live in milliseconds for generations and
+    /// untracked keys whose producer has stalled (no writes).  `0` = never
+    /// expire.  Expired data is retired even inside the window.
+    pub ttl_ms: u64,
 }
 
 impl RetentionConfig {
-    pub const UNBOUNDED: RetentionConfig = RetentionConfig { window: 0, max_bytes: 0 };
+    pub const UNBOUNDED: RetentionConfig =
+        RetentionConfig { window: 0, max_bytes: 0, ttl_ms: 0 };
+
+    /// The common window + byte-cap policy (no TTL).
+    pub fn windowed(window: u64, max_bytes: u64) -> RetentionConfig {
+        RetentionConfig { window, max_bytes, ttl_ms: 0 }
+    }
 
     pub fn is_unbounded(&self) -> bool {
-        self.window == 0 && self.max_bytes == 0
+        self.window == 0 && self.max_bytes == 0 && self.ttl_ms == 0
+    }
+
+    fn ttl(&self) -> Option<Duration> {
+        (self.ttl_ms > 0).then(|| Duration::from_millis(self.ttl_ms))
     }
 }
 
@@ -102,11 +152,14 @@ pub struct Counters {
     /// pipelining tests and the microbench read this to prove a gather
     /// costs one round trip.
     pub frames: AtomicU64,
-    /// Tensor keys removed by the retention policy (window retirement plus
-    /// byte-cap eviction); explicit `del` operations do not count.
+    /// Tensor keys removed by the retention policy (window retirement,
+    /// byte-cap eviction, and TTL expiry); explicit `del` operations do
+    /// not count.
     pub evicted_keys: AtomicU64,
     /// Payload bytes freed by eviction.
     pub evicted_bytes: AtomicU64,
+    /// Subset of `evicted_keys` removed by wall-clock TTL expiry.
+    pub ttl_expired_keys: AtomicU64,
     /// Writes rejected with [`Error::Busy`] because nothing evictable
     /// remained under the byte cap.
     pub busy_rejections: AtomicU64,
@@ -117,52 +170,84 @@ struct UntrackedEntry {
     bytes: u64,
     /// Monotonic recency stamp (bumped on put and get) — the LRU key.
     tick: u64,
+    /// Last write time — the TTL clock for untracked keys.
+    last_put: Instant,
 }
 
-/// Bookkeeping behind the retention policy.  Mirrors the tensor namespace
-/// exactly while governance is enabled: every tensor key is either a member
-/// of a `(field, step)` generation or an untracked LRU entry.
+/// One step generation of a field: its member keys and the TTL clock.
+struct Generation {
+    members: Vec<(String, u64)>,
+    /// Last write into the generation — the TTL clock.  Refreshed on every
+    /// member put (matching untracked keys' `last_put`), so a generation
+    /// still being filled by a slow multi-rank producer never expires
+    /// under it; only genuinely stalled data does.
+    last_put: Instant,
+}
+
+/// Per-field retention bookkeeping: resident generations plus the pressure
+/// counters surfaced through `INFO`.  Kept (with empty `gens`) after full
+/// eviction so eviction-rate counters survive; dropped only when the policy
+/// is cleared.
 #[derive(Default)]
-struct RetentionIndex {
-    cfg: RetentionConfig,
-    /// field → step → members `(key, bytes)` of that generation.
-    gens: BTreeMap<String, BTreeMap<u64, Vec<(String, u64)>>>,
-    untracked: HashMap<String, UntrackedEntry>,
-    tick: u64,
+struct FieldIndex {
+    gens: BTreeMap<u64, Generation>,
+    resident_bytes: u64,
+    evicted_keys: u64,
+    evicted_bytes: u64,
 }
 
-impl RetentionIndex {
+/// One shard of the retention index.  A field's generations always live in
+/// one shard (fields hash to shards), so window retirement takes exactly
+/// one lock; untracked keys hash by whole key.
+#[derive(Default)]
+struct IndexShard {
+    fields: HashMap<String, FieldIndex>,
+    untracked: HashMap<String, UntrackedEntry>,
+}
+
+impl IndexShard {
     fn size_of(&self, key: &str) -> u64 {
         match parse_step_key(key) {
             Some((field, step)) => self
-                .gens
+                .fields
                 .get(field)
-                .and_then(|steps| steps.get(&step))
-                .and_then(|m| m.iter().find(|(k, _)| k.as_str() == key))
+                .and_then(|f| f.gens.get(&step))
+                .and_then(|g| g.members.iter().find(|(k, _)| k.as_str() == key))
                 .map(|(_, b)| *b)
                 .unwrap_or(0),
             None => self.untracked.get(key).map(|e| e.bytes).unwrap_or(0),
         }
     }
 
-    fn record_put(&mut self, key: &str, bytes: u64) {
+    /// Record a write.  Returns `true` when the write opened a *new*
+    /// generation — the boundary on which window retirement and TTL expiry
+    /// run.
+    fn record_put(&mut self, key: &str, bytes: u64, tick: u64, now: Instant) -> bool {
         match parse_step_key(key) {
             Some((field, step)) => {
-                let members = self
-                    .gens
-                    .entry(field.to_string())
-                    .or_default()
-                    .entry(step)
-                    .or_default();
-                match members.iter_mut().find(|(k, _)| k.as_str() == key) {
-                    Some(m) => m.1 = bytes,
-                    None => members.push((key.to_string(), bytes)),
+                let fi = self.fields.entry(field.to_string()).or_default();
+                let mut opened = false;
+                let gen = fi.gens.entry(step).or_insert_with(|| {
+                    opened = true;
+                    Generation { members: Vec::new(), last_put: now }
+                });
+                gen.last_put = now;
+                match gen.members.iter_mut().find(|(k, _)| k.as_str() == key) {
+                    Some(m) => {
+                        fi.resident_bytes = (fi.resident_bytes + bytes).saturating_sub(m.1);
+                        m.1 = bytes;
+                    }
+                    None => {
+                        gen.members.push((key.to_string(), bytes));
+                        fi.resident_bytes += bytes;
+                    }
                 }
+                opened
             }
             None => {
-                self.tick += 1;
-                let tick = self.tick;
-                self.untracked.insert(key.to_string(), UntrackedEntry { bytes, tick });
+                self.untracked
+                    .insert(key.to_string(), UntrackedEntry { bytes, tick, last_put: now });
+                false
             }
         }
     }
@@ -170,20 +255,18 @@ impl RetentionIndex {
     fn record_del(&mut self, key: &str) {
         match parse_step_key(key) {
             Some((field, step)) => {
-                let mut field_empty = false;
-                if let Some(steps) = self.gens.get_mut(field) {
+                if let Some(fi) = self.fields.get_mut(field) {
                     let mut gen_empty = false;
-                    if let Some(members) = steps.get_mut(&step) {
-                        members.retain(|(k, _)| k.as_str() != key);
-                        gen_empty = members.is_empty();
+                    if let Some(gen) = fi.gens.get_mut(&step) {
+                        if let Some(i) = gen.members.iter().position(|(k, _)| k.as_str() == key) {
+                            let (_, b) = gen.members.swap_remove(i);
+                            fi.resident_bytes = fi.resident_bytes.saturating_sub(b);
+                        }
+                        gen_empty = gen.members.is_empty();
                     }
                     if gen_empty {
-                        steps.remove(&step);
+                        fi.gens.remove(&step);
                     }
-                    field_empty = steps.is_empty();
-                }
-                if field_empty {
-                    self.gens.remove(field);
                 }
             }
             None => {
@@ -192,25 +275,15 @@ impl RetentionIndex {
         }
     }
 
-    fn touch(&mut self, key: &str) {
-        self.tick += 1;
-        let tick = self.tick;
+    fn touch(&mut self, key: &str, tick: u64) {
         if let Some(e) = self.untracked.get_mut(key) {
             e.tick = tick;
         }
     }
 
-    fn gen_count(&self, field: &str) -> usize {
-        self.gens.get(field).map_or(0, |s| s.len())
-    }
-
-    fn oldest_step(&self, field: &str) -> Option<u64> {
-        self.gens.get(field).and_then(|s| s.keys().next().copied())
-    }
-
-    /// Oldest generation eviction may take under byte pressure: one beyond
-    /// its field's protected window (the newest `window` generations, or
-    /// just the newest one when `window == 0`).
+    /// Oldest generation of one field that eviction may take under byte
+    /// pressure: one beyond the field's protected window (the newest
+    /// `window` generations, or just the newest one when `window == 0`).
     ///
     /// The incoming key's own generation participates in the ordering: an
     /// append that opens generation `W+1` may retire the oldest resident
@@ -218,57 +291,44 @@ impl RetentionIndex {
     /// producer replaying an old step) ranks below the retained window and
     /// therefore may never displace newer data — it gets backpressure
     /// instead.
-    fn oldest_evictable_gen(&self, incoming: Option<(&str, u64)>) -> Option<(String, u64)> {
-        let protect = if self.cfg.window > 0 { self.cfg.window as usize } else { 1 };
-        let mut best: Option<(String, u64)> = None;
-        for (field, steps) in &self.gens {
-            let inc_step = match incoming {
-                Some((f, s)) if f == field.as_str() => Some(s),
-                _ => None,
-            };
-            // Combined ordering of resident generations plus the incoming
-            // one (tiny: at most window + slack entries per field).
-            let mut combined: Vec<u64> = steps.keys().copied().collect();
-            if let Some(s) = inc_step {
-                if !steps.contains_key(&s) {
-                    combined.push(s);
-                    combined.sort_unstable();
-                }
-            }
-            if combined.len() <= protect {
-                continue;
-            }
-            let evictable = combined.len() - protect;
-            for &step in combined.iter().take(evictable) {
-                if inc_step == Some(step) {
-                    // The generation being written occupies this evictable
-                    // slot itself; nothing newer is sacrificed for it.
-                    continue;
-                }
-                let older = match &best {
-                    None => true,
-                    Some((_, bs)) => step < *bs,
-                };
-                if older {
-                    best = Some((field.clone(), step));
-                }
-                break;
+    fn oldest_evictable_of(
+        &self,
+        field: &str,
+        fi: &FieldIndex,
+        window: u64,
+        incoming: Option<(&str, u64)>,
+    ) -> Option<u64> {
+        let protect = if window > 0 { window as usize } else { 1 };
+        let inc_step = match incoming {
+            Some((f, s)) if f == field => Some(s),
+            _ => None,
+        };
+        // Combined ordering of resident generations plus the incoming one
+        // (tiny: at most window + slack entries per field).
+        let mut combined: Vec<u64> = fi.gens.keys().copied().collect();
+        if let Some(s) = inc_step {
+            if !fi.gens.contains_key(&s) {
+                combined.push(s);
+                combined.sort_unstable();
             }
         }
-        best
-    }
-
-    /// Least-recently-used untracked key, excluding the one being written.
-    fn lru_untracked(&self, exclude: &str) -> Option<String> {
-        self.untracked
-            .iter()
-            .filter(|(k, _)| k.as_str() != exclude)
-            .min_by_key(|(_, e)| e.tick)
-            .map(|(k, _)| k.clone())
+        if combined.len() <= protect {
+            return None;
+        }
+        let evictable = combined.len() - protect;
+        for &step in combined.iter().take(evictable) {
+            if inc_step == Some(step) {
+                // The generation being written occupies this evictable slot
+                // itself; nothing newer is sacrificed for it.
+                continue;
+            }
+            return Some(step);
+        }
+        None
     }
 
     fn clear(&mut self) {
-        self.gens.clear();
+        self.fields.clear();
         self.untracked.clear();
     }
 }
@@ -282,7 +342,17 @@ pub struct Store {
     /// Whether a retention policy is active.  Checked lock-free on the hot
     /// path so ungoverned stores pay nothing for the subsystem.
     governed: AtomicBool,
-    retention: Mutex<RetentionIndex>,
+    /// The active policy, readable lock-free on the put hot path.
+    cfg_window: AtomicU64,
+    cfg_max_bytes: AtomicU64,
+    cfg_ttl_ms: AtomicU64,
+    /// Field-sharded retention index (see module docs).
+    index: Vec<Mutex<IndexShard>>,
+    /// Serializes byte-cap eviction and policy changes.  Puts that fit
+    /// under the cap never take it.
+    evict_gate: Mutex<()>,
+    /// Global LRU recency clock for untracked keys.
+    lru_tick: AtomicU64,
     pub counters: Counters,
 }
 
@@ -292,6 +362,26 @@ impl Default for Store {
     }
 }
 
+/// FNV-1a over a string (shared by the data and index shard selectors).
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Index shard owning `key`'s bookkeeping: step keys shard by field (all of
+/// a field's generations share one lock), everything else by whole key.
+fn index_slot(key: &str) -> usize {
+    let basis = match parse_step_key(key) {
+        Some((field, _)) => field,
+        None => key,
+    };
+    (fnv1a(basis) % N_INDEX_SHARDS as u64) as usize
+}
+
 impl Store {
     pub fn new() -> Store {
         Store {
@@ -299,19 +389,28 @@ impl Store {
             bytes: AtomicU64::new(0),
             high_water: AtomicU64::new(0),
             governed: AtomicBool::new(false),
-            retention: Mutex::new(RetentionIndex::default()),
+            cfg_window: AtomicU64::new(0),
+            cfg_max_bytes: AtomicU64::new(0),
+            cfg_ttl_ms: AtomicU64::new(0),
+            index: (0..N_INDEX_SHARDS)
+                .map(|_| Mutex::new(IndexShard::default()))
+                .collect(),
+            evict_gate: Mutex::new(()),
+            lru_tick: AtomicU64::new(0),
             counters: Counters::default(),
         }
     }
 
     fn shard(&self, key: &str) -> &Mutex<Shard> {
-        // FNV-1a over the key.
-        let mut h = 0xcbf2_9ce4_8422_2325u64;
-        for b in key.as_bytes() {
-            h ^= *b as u64;
-            h = h.wrapping_mul(0x1000_0000_01b3);
+        &self.shards[(fnv1a(key) % N_SHARDS as u64) as usize]
+    }
+
+    fn config(&self) -> RetentionConfig {
+        RetentionConfig {
+            window: self.cfg_window.load(Ordering::Relaxed),
+            max_bytes: self.cfg_max_bytes.load(Ordering::Relaxed),
+            ttl_ms: self.cfg_ttl_ms.load(Ordering::Relaxed),
         }
-        &self.shards[(h % N_SHARDS as u64) as usize]
     }
 
     /// Install (or change) the retention policy and enforce it immediately.
@@ -324,59 +423,94 @@ impl Store {
         // Raise the flag before rebuilding so racing writes start taking
         // the governed (index-maintaining) path while we scan.
         let was = self.governed.swap(!cfg.is_unbounded(), Ordering::SeqCst);
-        let mut ret = self.retention.lock().unwrap();
-        ret.cfg = cfg;
+        self.cfg_window.store(cfg.window, Ordering::SeqCst);
+        self.cfg_max_bytes.store(cfg.max_bytes, Ordering::SeqCst);
+        self.cfg_ttl_ms.store(cfg.ttl_ms, Ordering::SeqCst);
+        let _gate = self.evict_gate.lock().unwrap();
         if cfg.is_unbounded() {
-            ret.clear();
+            for sh in &self.index {
+                sh.lock().unwrap().clear();
+            }
             return;
         }
         if !was {
-            ret.clear();
+            for sh in &self.index {
+                sh.lock().unwrap().clear();
+            }
+            let now = Instant::now();
             for sh in &self.shards {
-                let s = sh.lock().unwrap();
-                for (k, t) in &s.tensors {
-                    ret.record_put(k, t.nbytes() as u64);
+                let resident: Vec<(String, u64)> = {
+                    let s = sh.lock().unwrap();
+                    s.tensors.iter().map(|(k, t)| (k.clone(), t.nbytes() as u64)).collect()
+                };
+                for (k, b) in resident {
+                    let tick = self.lru_tick.fetch_add(1, Ordering::Relaxed) + 1;
+                    self.index[index_slot(&k)].lock().unwrap().record_put(&k, b, tick, now);
                 }
             }
         }
-        self.enforce(&mut ret);
+        self.enforce_locked(&cfg);
     }
 
     pub fn retention(&self) -> RetentionConfig {
-        self.retention.lock().unwrap().cfg
+        self.config()
     }
 
-    /// Shard insert plus byte / high-water accounting, shared by the
-    /// governed and ungoverned put paths.
+    /// Replace `key`'s tensor in its data shard, returning the replaced
+    /// payload size.  Byte accounting is the caller's job (the governed
+    /// path reserves bytes *before* inserting).
     ///
     /// Zero-copy: the shard takes the tensor's shared payload buffer by
     /// refcount — when the caller decoded it with `Request::decode_shared`,
     /// the stored payload *is* the wire frame's allocation.  Overwrites
     /// replace in place: one hash lookup, no post-insert re-hash and no key
     /// `String` re-allocation on the steady-state republish path.
-    fn insert_tensor(&self, key: &str, t: Tensor, new_bytes: u64) {
+    fn shard_replace(&self, key: &str, t: Tensor) -> Option<u64> {
         let mut s = self.shard(key).lock().unwrap();
         let mut incoming = Some(t);
-        let old_bytes = s
+        let old = s
             .tensors
             .get_mut(key)
             .map(|slot| std::mem::replace(slot, incoming.take().unwrap()).nbytes() as u64);
         if let Some(t) = incoming {
             s.tensors.insert(key.to_string(), t);
         }
-        drop(s);
-        if let Some(o) = old_bytes {
+        old
+    }
+
+    /// Ungoverned insert: shard replace plus byte / high-water accounting.
+    fn insert_tensor(&self, key: &str, t: Tensor, new_bytes: u64) {
+        let old = self.shard_replace(key, t);
+        if let Some(o) = old {
             self.bytes.fetch_sub(o, Ordering::Relaxed);
         }
         let now = self.bytes.fetch_add(new_bytes, Ordering::Relaxed) + new_bytes;
         self.high_water.fetch_max(now, Ordering::Relaxed);
     }
 
+    /// Try to reserve `new_bytes` of capacity for a write of `key` under
+    /// `cap`, atomically.  The replaced payload's indexed size is
+    /// *uncharged at reservation time* (and reconciled against the actual
+    /// replaced size at insert), so `bytes` — and therefore the high-water
+    /// mark other threads may sample — never transiently exceeds the cap.
+    /// On success returns the uncharged estimate; the caller must complete
+    /// the insert.  Never blocks, never takes a global lock.
+    fn try_reserve(&self, key: &str, new_bytes: u64, cap: u64) -> Option<u64> {
+        let old = self.index[index_slot(key)].lock().unwrap().size_of(key);
+        self.bytes
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |cur| {
+                let projected = cur.saturating_sub(old) + new_bytes;
+                (projected <= cap).then_some(projected)
+            })
+            .ok()
+            .map(|_| old)
+    }
+
     /// Insert or overwrite a tensor (the paper's `put_tensor`).
     ///
-    /// Under a byte cap this may evict retired generations / LRU untracked
-    /// keys first, and fails with [`Error::Busy`] when the payload cannot
-    /// fit even then.
+    /// Under a byte cap this may evict TTL-expired data, retired
+    /// generations, then LRU untracked keys, and fails with
+    /// [`Error::Busy`] when the payload cannot fit even then.
     pub fn put_tensor(&self, key: &str, t: Tensor) -> Result<()> {
         t.validate()?;
         let new_bytes = t.nbytes() as u64;
@@ -391,127 +525,331 @@ impl Store {
             // guaranteed to observe the flag — self-heal the index rather
             // than leave a resident key invisible to retention forever.
             if self.governed.load(Ordering::Acquire) {
-                self.retention.lock().unwrap().record_put(key, new_bytes);
+                let tick = self.lru_tick.fetch_add(1, Ordering::Relaxed) + 1;
+                self.index[index_slot(key)].lock().unwrap().record_put(
+                    key,
+                    new_bytes,
+                    tick,
+                    Instant::now(),
+                );
             }
             return Ok(());
         }
-        let mut ret = self.retention.lock().unwrap();
-        if ret.cfg.max_bytes > 0 {
-            self.make_room(&mut ret, key, new_bytes)?;
+
+        let cfg = self.config();
+        let reserved = if cfg.max_bytes > 0 {
+            Some(self.make_room(key, new_bytes, &cfg)?)
+        } else {
+            None
+        };
+
+        // One index shard lock for the whole record+insert, so the index
+        // mirrors the data shard exactly; puts to fields in other shards
+        // proceed in parallel.
+        let now = Instant::now();
+        let tick = self.lru_tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut idx = self.index[index_slot(key)].lock().unwrap();
+        let old = self.shard_replace(key, t);
+        match reserved {
+            Some(estimate) => {
+                // The reservation charged `new_bytes - estimate`; reconcile
+                // against what was actually replaced (equal except under a
+                // same-key write race, where this keeps accounting exact).
+                let actual = old.unwrap_or(0);
+                if actual > estimate {
+                    self.bytes.fetch_sub(actual - estimate, Ordering::Relaxed);
+                } else {
+                    self.bytes.fetch_add(estimate - actual, Ordering::Relaxed);
+                }
+            }
+            None => {
+                if let Some(o) = old {
+                    self.bytes.fetch_sub(o, Ordering::Relaxed);
+                }
+                self.bytes.fetch_add(new_bytes, Ordering::Relaxed);
+            }
         }
-        self.insert_tensor(key, t, new_bytes);
-        ret.record_put(key, new_bytes);
-        if ret.cfg.window > 0 {
-            if let Some((field, _)) = parse_step_key(key) {
-                let field = field.to_string();
-                self.retire_over_window(&mut ret, &field);
+        self.high_water.fetch_max(self.bytes.load(Ordering::Relaxed), Ordering::Relaxed);
+        let opened_generation = idx.record_put(key, new_bytes, tick, now);
+        if opened_generation {
+            // Generation boundary: the only point where window retirement
+            // and TTL expiry run (puts within a generation stay O(1)).
+            if cfg.window > 0 {
+                if let Some((field, _)) = parse_step_key(key) {
+                    let field = field.to_string();
+                    self.retire_over_window_locked(&mut idx, &field, cfg.window);
+                }
+            }
+            if let Some(ttl) = cfg.ttl() {
+                self.expire_shard_locked(&mut idx, ttl, now);
             }
         }
         Ok(())
     }
 
-    /// Evict until a `new_bytes` write of `key` fits under the byte cap.
-    fn make_room(&self, ret: &mut RetentionIndex, key: &str, new_bytes: u64) -> Result<()> {
-        let cap = ret.cfg.max_bytes;
+    /// Evict (under the single evict gate) until a `new_bytes` write of
+    /// `key` is reserved under the byte cap.  Victim order: TTL-expired
+    /// data, then the globally oldest evictable generation, then the LRU
+    /// untracked key.  Returns the reservation's uncharged size estimate
+    /// for the caller to reconcile after the insert.
+    fn make_room(&self, key: &str, new_bytes: u64, cfg: &RetentionConfig) -> Result<u64> {
+        let cap = cfg.max_bytes;
         if new_bytes > cap {
             self.counters.busy_rejections.fetch_add(1, Ordering::Relaxed);
             return Err(Error::Busy(format!(
                 "tensor of {new_bytes} bytes exceeds the store capacity of {cap} bytes"
             )));
         }
-        let incoming = parse_step_key(key);
+        if let Some(estimate) = self.try_reserve(key, new_bytes, cap) {
+            return Ok(estimate);
+        }
+        let _gate = self.evict_gate.lock().unwrap();
+        let mut swept_ttl = false;
         loop {
-            let resident = self.bytes.load(Ordering::Relaxed);
-            let projected = resident.saturating_sub(ret.size_of(key)) + new_bytes;
-            if projected <= cap {
-                return Ok(());
+            if let Some(estimate) = self.try_reserve(key, new_bytes, cap) {
+                return Ok(estimate);
             }
-            if let Some((field, step)) = ret.oldest_evictable_gen(incoming) {
-                self.evict_generation(ret, &field, step);
-            } else if let Some(victim) = ret.lru_untracked(key) {
-                self.evict_untracked(ret, &victim);
-            } else {
-                self.counters.busy_rejections.fetch_add(1, Ordering::Relaxed);
-                return Err(Error::Busy(format!(
-                    "put of {new_bytes} bytes cannot fit under max_bytes={cap} \
-                     ({resident} bytes resident, all within the retention window)"
-                )));
+            if !swept_ttl {
+                swept_ttl = true;
+                if cfg.ttl().is_some() && self.expire_ttl() > 0 {
+                    continue;
+                }
+            }
+            let incoming = parse_step_key(key);
+            if let Some((slot, field, step)) = self.find_oldest_evictable(cfg.window, incoming) {
+                let mut idx = self.index[slot].lock().unwrap();
+                self.evict_generation_locked(&mut idx, &field, step, false);
+                continue;
+            }
+            if let Some((slot, victim)) = self.find_lru_untracked(key) {
+                let mut idx = self.index[slot].lock().unwrap();
+                if idx.untracked.remove(&victim).is_some() {
+                    self.evict_store_key(&victim, false);
+                }
+                continue;
+            }
+            self.counters.busy_rejections.fetch_add(1, Ordering::Relaxed);
+            let resident = self.bytes.load(Ordering::Relaxed);
+            return Err(Error::Busy(format!(
+                "put of {new_bytes} bytes cannot fit under max_bytes={cap} \
+                 ({resident} bytes resident, all within the retention window)"
+            )));
+        }
+    }
+
+    /// Globally oldest evictable generation across every index shard
+    /// (smallest step number among per-field candidates), locking shards
+    /// one at a time.
+    fn find_oldest_evictable(
+        &self,
+        window: u64,
+        incoming: Option<(&str, u64)>,
+    ) -> Option<(usize, String, u64)> {
+        let mut best: Option<(usize, String, u64)> = None;
+        for (slot, sh) in self.index.iter().enumerate() {
+            let idx = sh.lock().unwrap();
+            for (field, fi) in &idx.fields {
+                if let Some(step) = idx.oldest_evictable_of(field, fi, window, incoming) {
+                    let older = match &best {
+                        None => true,
+                        Some((_, _, bs)) => step < *bs,
+                    };
+                    if older {
+                        best = Some((slot, field.clone(), step));
+                    }
+                }
             }
         }
+        best
+    }
+
+    /// Globally least-recently-used untracked key, excluding the one being
+    /// written.
+    fn find_lru_untracked(&self, exclude: &str) -> Option<(usize, String)> {
+        let mut best: Option<(usize, String, u64)> = None;
+        for (slot, sh) in self.index.iter().enumerate() {
+            let idx = sh.lock().unwrap();
+            for (k, e) in &idx.untracked {
+                if k.as_str() == exclude {
+                    continue;
+                }
+                let older = match &best {
+                    None => true,
+                    Some((_, _, bt)) => e.tick < *bt,
+                };
+                if older {
+                    best = Some((slot, k.clone(), e.tick));
+                }
+            }
+        }
+        best.map(|(slot, k, _)| (slot, k))
     }
 
     /// Retire the oldest generations of `field` until at most `window`
-    /// remain (the sliding-window policy).
-    fn retire_over_window(&self, ret: &mut RetentionIndex, field: &str) {
-        let window = ret.cfg.window as usize;
-        while ret.gen_count(field) > window {
-            let Some(step) = ret.oldest_step(field) else { break };
-            self.evict_generation(ret, field, step);
+    /// remain (the sliding-window policy).  Caller holds the field's index
+    /// shard lock.
+    fn retire_over_window_locked(&self, idx: &mut IndexShard, field: &str, window: u64) {
+        loop {
+            let step = match idx.fields.get(field) {
+                Some(fi) if fi.gens.len() > window as usize => {
+                    match fi.gens.keys().next().copied() {
+                        Some(s) => s,
+                        None => return,
+                    }
+                }
+                _ => return,
+            };
+            self.evict_generation_locked(idx, field, step, false);
         }
     }
 
-    /// Remove every member of generation `(field, step)` from the index and
-    /// the shards.
-    fn evict_generation(&self, ret: &mut RetentionIndex, field: &str, step: u64) {
-        let mut field_empty = false;
-        let members = match ret.gens.get_mut(field) {
-            Some(steps) => match steps.remove(&step) {
-                Some(m) => {
-                    field_empty = steps.is_empty();
-                    m
-                }
-                None => return,
-            },
+    /// Remove every member of generation `(field, step)` from the index
+    /// shard (whose lock the caller holds) and the data shards.
+    fn evict_generation_locked(&self, idx: &mut IndexShard, field: &str, step: u64, ttl: bool) {
+        let members = match idx.fields.get_mut(field).and_then(|fi| fi.gens.remove(&step)) {
+            Some(g) => g.members,
             None => return,
         };
-        if field_empty {
-            ret.gens.remove(field);
-        }
         for (key, _) in &members {
-            self.evict_one(key);
+            if let Some(b) = self.evict_store_key(key, ttl) {
+                if let Some(fi) = idx.fields.get_mut(field) {
+                    fi.resident_bytes = fi.resident_bytes.saturating_sub(b);
+                    fi.evicted_keys += 1;
+                    fi.evicted_bytes += b;
+                }
+            }
         }
     }
 
-    fn evict_untracked(&self, ret: &mut RetentionIndex, key: &str) {
-        ret.untracked.remove(key);
-        self.evict_one(key);
-    }
-
-    /// Remove `key` from its shard, charging eviction counters with the
-    /// actual stored size.
-    fn evict_one(&self, key: &str) {
+    /// Remove `key` from its data shard, charging eviction counters with
+    /// the actual stored size.  Returns the freed bytes.
+    fn evict_store_key(&self, key: &str, ttl: bool) -> Option<u64> {
         let removed = { self.shard(key).lock().unwrap().tensors.remove(key) };
-        if let Some(t) = removed {
+        removed.map(|t| {
             let b = t.nbytes() as u64;
             self.bytes.fetch_sub(b, Ordering::Relaxed);
             self.counters.evicted_keys.fetch_add(1, Ordering::Relaxed);
             self.counters.evicted_bytes.fetch_add(b, Ordering::Relaxed);
+            if ttl {
+                self.counters.ttl_expired_keys.fetch_add(1, Ordering::Relaxed);
+            }
+            b
+        })
+    }
+
+    /// TTL expiry for one index shard (lock held by the caller): retire
+    /// generations and untracked keys untouched for longer than `ttl`.
+    fn expire_shard_locked(&self, idx: &mut IndexShard, ttl: Duration, now: Instant) -> u64 {
+        let mut expired = 0u64;
+        let victims: Vec<(String, u64)> = idx
+            .fields
+            .iter()
+            .flat_map(|(field, fi)| {
+                fi.gens
+                    .iter()
+                    .filter(|(_, g)| now.duration_since(g.last_put) >= ttl)
+                    .map(|(step, _)| (field.clone(), *step))
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        for (field, step) in victims {
+            expired += idx
+                .fields
+                .get(&field)
+                .and_then(|fi| fi.gens.get(&step))
+                .map(|g| g.members.len() as u64)
+                .unwrap_or(0);
+            self.evict_generation_locked(idx, &field, step, true);
         }
+        let stale: Vec<String> = idx
+            .untracked
+            .iter()
+            .filter(|(_, e)| now.duration_since(e.last_put) >= ttl)
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in stale {
+            idx.untracked.remove(&k);
+            if self.evict_store_key(&k, true).is_some() {
+                expired += 1;
+            }
+        }
+        expired
+    }
+
+    /// Sweep every index shard for TTL-expired data, returning how many
+    /// keys were retired.  No-op when governance or TTL is off.  The server
+    /// calls this on `INFO`, so stalled producers are reclaimed even when
+    /// no other field is writing into their index shard.
+    pub fn expire_ttl(&self) -> u64 {
+        if !self.governed.load(Ordering::Acquire) {
+            return 0;
+        }
+        let Some(ttl) = self.config().ttl() else { return 0 };
+        let now = Instant::now();
+        let mut expired = 0;
+        for sh in &self.index {
+            let mut idx = sh.lock().unwrap();
+            expired += self.expire_shard_locked(&mut idx, ttl, now);
+        }
+        expired
     }
 
     /// Apply the current policy to the resident set (used when the policy
-    /// changes): window retirement per field, then best-effort eviction
-    /// down to the byte cap.  Anything left over the cap is protected and
-    /// will backpressure future puts instead.
-    fn enforce(&self, ret: &mut RetentionIndex) {
-        if ret.cfg.window > 0 {
-            let fields: Vec<String> = ret.gens.keys().cloned().collect();
-            for field in fields {
-                self.retire_over_window(ret, &field);
+    /// changes; caller holds the evict gate): window retirement per field,
+    /// TTL expiry, then best-effort eviction down to the byte cap.
+    /// Anything left over the cap is protected and will backpressure
+    /// future puts instead.
+    fn enforce_locked(&self, cfg: &RetentionConfig) {
+        let now = Instant::now();
+        for sh in &self.index {
+            let mut idx = sh.lock().unwrap();
+            if cfg.window > 0 {
+                let fields: Vec<String> = idx.fields.keys().cloned().collect();
+                for field in fields {
+                    self.retire_over_window_locked(&mut idx, &field, cfg.window);
+                }
+            }
+            if let Some(ttl) = cfg.ttl() {
+                self.expire_shard_locked(&mut idx, ttl, now);
             }
         }
-        let cap = ret.cfg.max_bytes;
+        let cap = cfg.max_bytes;
         if cap > 0 {
             while self.bytes.load(Ordering::Relaxed) > cap {
-                if let Some((field, step)) = ret.oldest_evictable_gen(None) {
-                    self.evict_generation(ret, &field, step);
-                } else if let Some(victim) = ret.lru_untracked("") {
-                    self.evict_untracked(ret, &victim);
+                if let Some((slot, field, step)) = self.find_oldest_evictable(cfg.window, None) {
+                    let mut idx = self.index[slot].lock().unwrap();
+                    self.evict_generation_locked(&mut idx, &field, step, false);
+                } else if let Some((slot, victim)) = self.find_lru_untracked("") {
+                    let mut idx = self.index[slot].lock().unwrap();
+                    if idx.untracked.remove(&victim).is_some() {
+                        self.evict_store_key(&victim, false);
+                    }
                 } else {
                     break;
                 }
             }
         }
+    }
+
+    /// Per-field pressure snapshot (resident bytes, generation count,
+    /// eviction counters), sorted by field name.  Empty when governance is
+    /// off — the index only mirrors the namespace while a policy is set.
+    pub fn field_pressure(&self) -> Vec<FieldPressure> {
+        let mut out = Vec::new();
+        for sh in &self.index {
+            let idx = sh.lock().unwrap();
+            for (field, fi) in &idx.fields {
+                out.push(FieldPressure {
+                    field: field.clone(),
+                    resident_bytes: fi.resident_bytes,
+                    generations: fi.gens.len() as u64,
+                    evicted_keys: fi.evicted_keys,
+                    evicted_bytes: fi.evicted_bytes,
+                });
+            }
+        }
+        out.sort_by(|a, b| a.field.cmp(&b.field));
+        out
     }
 
     /// Fetch a tensor (the paper's `unpack_tensor`).
@@ -529,10 +867,13 @@ impl Store {
         self.counters
             .bytes_out
             .fetch_add(t.nbytes() as u64, Ordering::Relaxed);
-        // LRU recency for untracked keys under governance (the shard lock
-        // is already released — retention before shard, never after).
+        // LRU recency for untracked keys under governance.  The key's own
+        // index shard lock is taken briefly — distinct stable keys hash to
+        // distinct shards, so concurrent overwrite-mode readers don't
+        // serialize on one mutex.
         if self.governed.load(Ordering::Relaxed) && parse_step_key(key).is_none() {
-            self.retention.lock().unwrap().touch(key);
+            let tick = self.lru_tick.fetch_add(1, Ordering::Relaxed) + 1;
+            self.index[index_slot(key)].lock().unwrap().touch(key, tick);
         }
         Ok(t)
     }
@@ -546,18 +887,18 @@ impl Store {
                 // Mirror of the put path's enable-race self-heal: drop any
                 // index entry the rebuild scan recorded before our delete.
                 if self.governed.load(Ordering::Acquire) {
-                    self.retention.lock().unwrap().record_del(key);
+                    self.index[index_slot(key)].lock().unwrap().record_del(key);
                 }
                 return true;
             }
             return false;
         }
-        let mut ret = self.retention.lock().unwrap();
+        let mut idx = self.index[index_slot(key)].lock().unwrap();
         let removed = { self.shard(key).lock().unwrap().tensors.remove(key) };
         match removed {
             Some(t) => {
                 self.bytes.fetch_sub(t.nbytes() as u64, Ordering::Relaxed);
-                ret.record_del(key);
+                idx.record_del(key);
                 true
             }
             None => false,
@@ -609,8 +950,10 @@ impl Store {
 
     pub fn flush_all(&self) {
         self.counters.ops.fetch_add(1, Ordering::Relaxed);
-        let mut ret = self.retention.lock().unwrap();
-        ret.clear();
+        let _gate = self.evict_gate.lock().unwrap();
+        for sh in &self.index {
+            sh.lock().unwrap().clear();
+        }
         for sh in &self.shards {
             let mut s = sh.lock().unwrap();
             s.tensors.clear();
@@ -855,9 +1198,37 @@ mod tests {
     }
 
     #[test]
+    fn prop_step_key_roundtrips_for_adversarial_field_names() {
+        // tensor_key → parse_step_key must round-trip even when the field
+        // name itself embeds `_rank`/`_step` substrings (the parser anchors
+        // on the *last* occurrences), and the overwrite-mode stable key of
+        // the same field must never parse as a step key.
+        check("step key roundtrip", 300, |g: &mut Gen| {
+            const SEGS: &[&str] =
+                &["_rank", "_step", "u", "x9", "_", "7", "field", "_rank3", "_step00", "v_"];
+            let n = g.usize_in(0..=5);
+            let field: String = (0..n).map(|_| *g.choose(SEGS)).collect();
+            let rank = g.usize_in(0..=999);
+            let step = g.u64() % 1_000_000;
+            let key = crate::client::tensor_key(&field, rank, step);
+            assert_eq!(
+                parse_step_key(&key),
+                Some((field.as_str(), step)),
+                "round-trip failed for field {field:?} (key {key:?})"
+            );
+            let stable = crate::client::stable_key(&field, rank);
+            assert_eq!(
+                parse_step_key(&stable),
+                None,
+                "stable key {stable:?} must stay untracked"
+            );
+        });
+    }
+
+    #[test]
     fn sliding_window_retires_oldest_generation() {
         let s = Store::new();
-        s.set_retention(RetentionConfig { window: 2, max_bytes: 0 });
+        s.set_retention(RetentionConfig::windowed(2, 0));
         for step in 0..5u64 {
             for rank in 0..3 {
                 s.put_tensor(&format!("f_rank{rank}_step{step}"), t(vec![step as f32; 8]))
@@ -879,7 +1250,7 @@ mod tests {
     #[test]
     fn windows_are_per_field() {
         let s = Store::new();
-        s.set_retention(RetentionConfig { window: 1, max_bytes: 0 });
+        s.set_retention(RetentionConfig::windowed(1, 0));
         for step in 0..3u64 {
             s.put_tensor(&format!("a_rank0_step{step}"), t(vec![1.0])).unwrap();
             s.put_tensor(&format!("b_rank0_step{step}"), t(vec![2.0])).unwrap();
@@ -892,7 +1263,7 @@ mod tests {
         let s = Store::new();
         // 3 × 40-byte untracked tensors fit under 128 bytes; the 4th evicts
         // the least recently *used* one.
-        s.set_retention(RetentionConfig { window: 0, max_bytes: 128 });
+        s.set_retention(RetentionConfig::windowed(0, 128));
         s.put_tensor("a", t(vec![0.0; 10])).unwrap();
         s.put_tensor("b", t(vec![0.0; 10])).unwrap();
         s.put_tensor("c", t(vec![0.0; 10])).unwrap();
@@ -909,7 +1280,7 @@ mod tests {
         let s = Store::new();
         // Cap fits exactly two 40-byte generations; window 2 protects both,
         // but an append opening generation 3 may retire generation 0.
-        s.set_retention(RetentionConfig { window: 2, max_bytes: 80 });
+        s.set_retention(RetentionConfig::windowed(2, 80));
         s.put_tensor("f_rank0_step0", t(vec![0.0; 10])).unwrap();
         s.put_tensor("f_rank0_step1", t(vec![1.0; 10])).unwrap();
         s.put_tensor("f_rank0_step2", t(vec![2.0; 10])).unwrap();
@@ -924,7 +1295,7 @@ mod tests {
         // retained window: under byte pressure it gets backpressure rather
         // than evicting newer training data...
         let s = Store::new();
-        s.set_retention(RetentionConfig { window: 2, max_bytes: 80 });
+        s.set_retention(RetentionConfig::windowed(2, 80));
         s.put_tensor("f_rank0_step5", t(vec![5.0; 10])).unwrap();
         s.put_tensor("f_rank0_step6", t(vec![6.0; 10])).unwrap();
         let err = s.put_tensor("f_rank0_step4", t(vec![4.0; 10])).unwrap_err();
@@ -933,7 +1304,7 @@ mod tests {
         // ...and without byte pressure it is admitted, then immediately
         // retired by the window (the newest two generations win).
         let s = Store::new();
-        s.set_retention(RetentionConfig { window: 2, max_bytes: 0 });
+        s.set_retention(RetentionConfig::windowed(2, 0));
         s.put_tensor("f_rank0_step5", t(vec![5.0; 10])).unwrap();
         s.put_tensor("f_rank0_step6", t(vec![6.0; 10])).unwrap();
         s.put_tensor("f_rank0_step4", t(vec![4.0; 10])).unwrap();
@@ -943,7 +1314,7 @@ mod tests {
     #[test]
     fn busy_when_nothing_evictable() {
         let s = Store::new();
-        s.set_retention(RetentionConfig { window: 2, max_bytes: 80 });
+        s.set_retention(RetentionConfig::windowed(2, 80));
         // A payload larger than the whole cap is rejected outright.
         assert!(matches!(s.put_tensor("big", t(vec![0.0; 100])), Err(Error::Busy(_))));
         // Fill the cap with one field's protected window; a *different*
@@ -966,7 +1337,7 @@ mod tests {
             s.put_tensor(&format!("f_rank0_step{step}"), t(vec![step as f32; 4])).unwrap();
         }
         assert_eq!(s.n_bytes(), 6 * 16);
-        s.set_retention(RetentionConfig { window: 2, max_bytes: 0 });
+        s.set_retention(RetentionConfig::windowed(2, 0));
         assert_eq!(s.list_keys(""), vec!["f_rank0_step4", "f_rank0_step5"]);
         assert_eq!(s.n_bytes(), 2 * 16);
         // Disabling governance restores plain append.
@@ -982,10 +1353,10 @@ mod tests {
         // always equals the sum of resident tensor sizes.
         check("governed accounting", 60, |g: &mut Gen| {
             let s = Store::new();
-            s.set_retention(RetentionConfig {
-                window: g.usize_in(0..=3) as u64,
-                max_bytes: (g.usize_in(2..=20) * 16) as u64,
-            });
+            s.set_retention(RetentionConfig::windowed(
+                g.usize_in(0..=3) as u64,
+                (g.usize_in(2..=20) * 16) as u64,
+            ));
             for _ in 0..g.usize_in(1..=50) {
                 let field = ["u", "v"][g.usize_in(0..=1)];
                 let key = if g.bool() {
@@ -1014,7 +1385,7 @@ mod tests {
         // Producers append (driving eviction) while readers fetch; a view
         // handed out before eviction stays byte-valid afterwards.
         let s = Arc::new(Store::new());
-        s.set_retention(RetentionConfig { window: 2, max_bytes: 0 });
+        s.set_retention(RetentionConfig::windowed(2, 0));
         let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let mut readers = Vec::new();
         for _ in 0..3 {
@@ -1040,5 +1411,184 @@ mod tests {
         }
         assert_eq!(s.list_keys("c_").len(), 2);
         assert_eq!(s.n_bytes(), 2 * 64 * 4);
+    }
+
+    // --- sharded index concurrency -----------------------------------------
+
+    /// Find a field name that hashes to a *different* index shard than
+    /// `other`'s field.
+    fn field_in_other_slot(other: &str) -> String {
+        let taken = index_slot(&crate::client::tensor_key(other, 0, 0));
+        for i in 0.. {
+            let candidate = format!("fb{i}");
+            if index_slot(&crate::client::tensor_key(&candidate, 0, 0)) != taken {
+                return candidate;
+            }
+        }
+        unreachable!()
+    }
+
+    #[test]
+    fn governed_puts_to_distinct_fields_do_not_share_a_lock() {
+        // The acceptance property of the sharded index: hold field A's
+        // index shard mutex and prove a governed put to field B (hashing to
+        // a different shard) still completes — under the old global
+        // `Mutex<RetentionIndex>` it would block forever.  Byte-capped but
+        // non-evicting, so the put must not touch the evict gate either.
+        let s = Arc::new(Store::new());
+        s.set_retention(RetentionConfig::windowed(4, 1 << 20));
+        let field_a = "fa";
+        let field_b = field_in_other_slot(field_a);
+        let slot_a = index_slot(&crate::client::tensor_key(field_a, 0, 0));
+
+        let guard = s.index[slot_a].lock().unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let writer = {
+            let s = Arc::clone(&s);
+            let key = crate::client::tensor_key(&field_b, 0, 0);
+            std::thread::spawn(move || {
+                s.put_tensor(&key, t(vec![1.0; 16])).unwrap();
+                tx.send(()).unwrap();
+            })
+        };
+        rx.recv_timeout(std::time::Duration::from_secs(10))
+            .expect("governed put to another field must not wait on field A's index lock");
+        writer.join().unwrap();
+
+        // Control: a put to field A *does* need the held lock — it must
+        // still be pending while we hold the guard, and complete after.
+        let (tx2, rx2) = std::sync::mpsc::channel();
+        let blocked = {
+            let s = Arc::clone(&s);
+            let key = crate::client::tensor_key(field_a, 0, 0);
+            std::thread::spawn(move || {
+                s.put_tensor(&key, t(vec![2.0; 16])).unwrap();
+                tx2.send(()).unwrap();
+            })
+        };
+        assert!(
+            rx2.recv_timeout(std::time::Duration::from_millis(200)).is_err(),
+            "a put to the held field's shard should block on its index lock"
+        );
+        drop(guard);
+        rx2.recv_timeout(std::time::Duration::from_secs(10))
+            .expect("put completes once the shard lock is released");
+        blocked.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_governed_producers_on_distinct_fields() {
+        // Many producers, one field each, under full governance (window +
+        // cap sized to never starve): all complete, accounting exact, each
+        // field flat at its window.
+        let n_fields = 6usize;
+        let window = 3u64;
+        let steps = 40u64;
+        let payload = 32 * 4u64;
+        let s = Arc::new(Store::new());
+        s.set_retention(RetentionConfig::windowed(
+            window,
+            (window + 2) * n_fields as u64 * payload,
+        ));
+        let mut handles = Vec::new();
+        for f in 0..n_fields {
+            let s = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                for step in 0..steps {
+                    let key = format!("cfield{f}_rank0_step{step}");
+                    s.put_tensor(&key, t(vec![step as f32; 32])).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.n_bytes(), n_fields as u64 * window * payload, "flat per-field windows");
+        let pressure = s.field_pressure();
+        assert_eq!(pressure.len(), n_fields);
+        for p in &pressure {
+            assert_eq!(p.generations, window, "{}", p.field);
+            assert_eq!(p.resident_bytes, window * payload, "{}", p.field);
+            assert_eq!(p.evicted_keys, steps - window, "{}", p.field);
+        }
+    }
+
+    #[test]
+    fn field_pressure_reports_per_field_state() {
+        let s = Store::new();
+        s.set_retention(RetentionConfig::windowed(2, 0));
+        for step in 0..4u64 {
+            s.put_tensor(&format!("u_rank0_step{step}"), t(vec![0.0; 8])).unwrap();
+        }
+        s.put_tensor("v_rank0_step0", t(vec![0.0; 4])).unwrap();
+        let p = s.field_pressure();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].field, "u");
+        assert_eq!(p[0].generations, 2);
+        assert_eq!(p[0].resident_bytes, 2 * 32);
+        assert_eq!(p[0].evicted_keys, 2);
+        assert_eq!(p[0].evicted_bytes, 2 * 32);
+        assert_eq!(p[1].field, "v");
+        assert_eq!(p[1].generations, 1);
+        assert_eq!(p[1].resident_bytes, 16);
+        assert_eq!(p[1].evicted_keys, 0);
+    }
+
+    // --- wall-clock TTL -----------------------------------------------------
+
+    #[test]
+    fn ttl_expires_stalled_generations_on_sweep() {
+        let s = Store::new();
+        s.set_retention(RetentionConfig { window: 4, max_bytes: 0, ttl_ms: 150 });
+        s.put_tensor("stall_rank0_step0", t(vec![0.0; 8])).unwrap();
+        s.put_tensor("stall_rank1_step0", t(vec![0.0; 8])).unwrap();
+        assert_eq!(s.expire_ttl(), 0, "fresh generation survives");
+        std::thread::sleep(Duration::from_millis(300));
+        assert_eq!(s.expire_ttl(), 2, "both members of the stalled generation retired");
+        assert_eq!(s.n_bytes(), 0);
+        assert_eq!(s.counters.ttl_expired_keys.load(Ordering::Relaxed), 2);
+        assert_eq!(s.counters.evicted_keys.load(Ordering::Relaxed), 2, "TTL counts as eviction");
+        assert!(matches!(s.get_tensor("stall_rank0_step0"), Err(Error::KeyNotFound(_))));
+    }
+
+    #[test]
+    fn ttl_expires_stalled_untracked_keys() {
+        let s = Store::new();
+        s.set_retention(RetentionConfig { window: 0, max_bytes: 0, ttl_ms: 150 });
+        s.put_tensor("stable_rank0_latest", t(vec![1.0; 8])).unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        assert_eq!(s.expire_ttl(), 1);
+        assert!(!s.exists("stable_rank0_latest"));
+    }
+
+    #[test]
+    fn ttl_expired_data_is_first_eviction_victim_under_byte_pressure() {
+        // A stalled field's expired window must not force Busy on an active
+        // field: make_room reclaims expired data before giving up.
+        let s = Store::new();
+        // Cap fits two 40-byte generations total; both fields have window 2
+        // protection, so without TTL the second field would get Busy.
+        s.set_retention(RetentionConfig { window: 2, max_bytes: 80, ttl_ms: 120 });
+        s.put_tensor("dead_rank0_step0", t(vec![0.0; 10])).unwrap();
+        s.put_tensor("dead_rank0_step1", t(vec![1.0; 10])).unwrap();
+        std::thread::sleep(Duration::from_millis(250));
+        s.put_tensor("live_rank0_step0", t(vec![2.0; 10])).unwrap();
+        assert!(s.exists("live_rank0_step0"));
+        assert!(!s.exists("dead_rank0_step0") && !s.exists("dead_rank0_step1"));
+        assert!(s.counters.ttl_expired_keys.load(Ordering::Relaxed) >= 2);
+        assert_eq!(s.counters.busy_rejections.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn active_producers_never_hit_the_ttl() {
+        // A producer advancing its window keeps every retained generation
+        // younger than the TTL, so expiry is a no-op for it.
+        let s = Store::new();
+        s.set_retention(RetentionConfig { window: 2, max_bytes: 0, ttl_ms: 10_000 });
+        for step in 0..5u64 {
+            s.put_tensor(&format!("act_rank0_step{step}"), t(vec![0.0; 4])).unwrap();
+        }
+        assert_eq!(s.expire_ttl(), 0);
+        assert_eq!(s.list_keys("act_").len(), 2);
     }
 }

@@ -55,14 +55,27 @@
 //!
 //! Long-running simulations cannot append snapshots forever: each database
 //! instance enforces an optional [`db::RetentionConfig`] — a sliding
-//! window of step generations per field plus a byte cap with explicit
-//! `busy` backpressure ([`Error::Busy`]) when nothing evictable remains
-//! (see [`db::store`]).  The consumer trains on a moving window
-//! (`DataLoader::gather_window`), the producer can alternatively republish
-//! under stable keys (the paper's overwrite mode, flat by construction),
-//! and the orchestrator threads the policy from `RunConfig` through
-//! deployment to every server.  Eviction and high-water counters travel in
-//! `INFO`.
+//! window of step generations per field, a byte cap with explicit
+//! `busy` backpressure ([`Error::Busy`]) when nothing evictable remains,
+//! and a wall-clock TTL that reclaims data from stalled producers (see
+//! [`db::store`]).  The retention index is sharded by field, so governed
+//! puts keep the data plane's sharded-lock parallelism; per-field pressure
+//! (resident bytes vs. cap, eviction rates) travels in `INFO`.  The
+//! consumer trains on a moving window (`DataLoader::gather_window`), the
+//! producer can alternatively republish under stable keys (the paper's
+//! overwrite mode, flat by construction), and the orchestrator threads the
+//! policy from `RunConfig` through deployment to every server.
+//!
+//! ## Adaptive backpressure
+//!
+//! `Error::Busy` is a flow-control signal, not a failure: the client
+//! carries a pluggable [`client::RetryPolicy`] (immediate-fail / capped
+//! exponential backoff / deadline), and the CFD producer runs an adaptive
+//! [`client::PublishGovernor`] that under sustained pressure drops
+//! snapshots and widens its publish stride (skipped steps merge into the
+//! next published snapshot) instead of stopping the solver — so a run with
+//! a stalled consumer survives to completion.  Skip/retry/drop counters
+//! surface in the run report and `situ info`.
 
 pub mod ai;
 pub mod client;

@@ -64,10 +64,14 @@ fn print_help() {
 USAGE: situ <command> [flags]
 
   serve            --port 7700 --engine redis|keydb --cores 8 [--no-models]
-                   [--retention-window W] [--max-bytes B]   bounded-memory store
-  info             --addr 127.0.0.1:7700
+                   [--retention-window W] [--max-bytes B] [--ttl-ms T]
+                   bounded-memory store (window / byte cap / stalled-producer TTL)
+  info             --addr 127.0.0.1:7700   stats incl. per-field pressure
   calibrate        [--artifacts DIR]   measure real costs, print CostModel
   train            [--epochs N --sim-ranks R --ml-ranks M --steps S]
+                   [--window W --overwrite --retention-window W --db-max-bytes B
+                    --db-ttl-ms T --busy-retries N --busy-backoff-ms MS
+                    --governor-max-stride K]   bounded-memory + backpressure knobs
   bench-transfer   --nodes-list 1,4,16 --deployment colocated|clustered ...
   bench-inference  --nodes-list 1,4,16 --batch 4 ...
 "
@@ -86,6 +90,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         retention: RetentionConfig {
             window: args.usize_or("retention-window", 0)? as u64,
             max_bytes: args.usize_or("max-bytes", 0)? as u64,
+            ttl_ms: args.usize_or("ttl-ms", 0)? as u64,
         },
         ..Default::default()
     };
@@ -112,12 +117,22 @@ fn cmd_info(args: &Args) -> Result<()> {
         i.models
     );
     println!(
-        "high_water={} evicted_keys={} evicted_bytes={} busy_rejections={}",
+        "high_water={} evicted_keys={} evicted_bytes={} busy_rejections={} ttl_expired={}",
         fmt::bytes(i.high_water_bytes),
         i.evicted_keys,
         fmt::bytes(i.evicted_bytes),
-        i.busy_rejections
+        i.busy_rejections,
+        i.ttl_expired_keys
     );
+    println!(
+        "retention: window={} max_bytes={} ttl_ms={}",
+        i.retention_window,
+        fmt::bytes(i.retention_max_bytes),
+        i.retention_ttl_ms
+    );
+    if !i.fields.is_empty() {
+        situ::telemetry::field_pressure_table(&i).print();
+    }
     Ok(())
 }
 
@@ -177,6 +192,7 @@ fn measure_roundtrip(addr: SocketAddr, bytes: usize, iters: usize) -> Result<f64
         iterations: iters,
         warmup: 3,
         compute_secs: 0.0,
+        retry: situ::client::RetryPolicy::Fail,
     })?;
     let snap = times.snapshot();
     Ok(snap["send"].mean() + snap["retrieve"].mean())
@@ -188,6 +204,20 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.sim_ranks = args.usize_or("sim-ranks", cfg.sim_ranks)?;
     cfg.ml_ranks = args.usize_or("ml-ranks", cfg.ml_ranks)?;
     cfg.solver_steps = args.usize_or("steps", cfg.solver_steps as usize)? as u64;
+    cfg.window = args.usize_or("window", cfg.window as usize)? as u64;
+    cfg.overwrite = args.bool("overwrite");
+    cfg.retention_window = args.usize_or("retention-window", cfg.retention_window as usize)? as u64;
+    cfg.db_max_bytes = args.usize_or("db-max-bytes", cfg.db_max_bytes as usize)? as u64;
+    cfg.db_ttl_ms = args.usize_or("db-ttl-ms", cfg.db_ttl_ms as usize)? as u64;
+    {
+        // Backpressure knobs share the RunConfig flag names and semantics.
+        let mut bp = situ::config::RunConfig::default();
+        bp.busy_retries = args.usize_or("busy-retries", bp.busy_retries as usize)? as u32;
+        bp.busy_backoff_ms = args.usize_or("busy-backoff-ms", bp.busy_backoff_ms as usize)? as u64;
+        bp.governor_max_stride =
+            args.usize_or("governor-max-stride", bp.governor_max_stride as usize)? as u64;
+        cfg.governor = bp.governor();
+    }
     if let Some(dir) = args.str_opt("artifacts") {
         cfg.artifacts_dir = dir.into();
     }
@@ -217,6 +247,21 @@ fn cmd_train(args: &Args) -> Result<()> {
         report.solver_overhead_frac * 100.0
     );
     println!("spatial compression factor: {:.0}x", report.compression_factor);
+    situ::telemetry::counter_table(
+        "backpressure (producer governor + trainer window)",
+        &[
+            ("snapshots published", report.governor.published),
+            ("snapshots skipped (stride)", report.governor.skipped),
+            ("snapshots dropped (busy)", report.governor.dropped),
+            ("busy retries", report.governor.busy_retries),
+            ("store busy rejections", report.db.busy_rejections),
+            ("trainer generations skipped", report.trainer_skipped_generations),
+        ],
+    )
+    .print();
+    if !report.db.fields.is_empty() {
+        situ::telemetry::field_pressure_table(&report.db).print();
+    }
     Ok(())
 }
 

@@ -67,11 +67,26 @@ pub struct DataLoader<C: DataStore> {
     pub sim_ranks: Vec<usize>,
     pub field: String,
     rng: Rng,
+    /// Generations inside a requested window that had already been retired
+    /// by the store when gathered (reported in the trainer's final report).
+    gens_skipped: u64,
 }
 
 impl<C: DataStore> DataLoader<C> {
     pub fn new(client: C, sim_ranks: Vec<usize>, field: &str, seed: u64) -> DataLoader<C> {
-        DataLoader { client, sim_ranks, field: field.to_string(), rng: Rng::new(seed) }
+        DataLoader {
+            client,
+            sim_ranks,
+            field: field.to_string(),
+            rng: Rng::new(seed),
+            gens_skipped: 0,
+        }
+    }
+
+    /// Generations skipped (already retired) across all `gather_window`
+    /// calls so far.
+    pub fn gens_skipped(&self) -> u64 {
+        self.gens_skipped
     }
 
     /// Keys of every owned snapshot at `step`.
@@ -132,6 +147,8 @@ impl<C: DataStore> DataLoader<C> {
             }
             if complete {
                 out.extend(members);
+            } else {
+                self.gens_skipped += 1;
             }
         }
         Ok(out)

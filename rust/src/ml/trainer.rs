@@ -229,4 +229,11 @@ impl Trainer {
         self.times
             .to_table("ML training components during in situ training (averaged across ranks)")
     }
+
+    /// Window generations the loaders requested but found already retired
+    /// (racing the store's retention policy) — the consumer-side half of
+    /// the backpressure accounting in the run report.
+    pub fn skipped_generations(&self) -> u64 {
+        self.loaders.iter().map(|l| l.gens_skipped()).sum()
+    }
 }

@@ -1,6 +1,7 @@
 //! Deployment planning: how many database instances, with which engine and
 //! core binding, for a given run configuration (paper Fig 2).
 
+use crate::client::GovernorConfig;
 use crate::config::{Deployment, RunConfig};
 use crate::db::{Engine, RetentionConfig, ServerConfig};
 
@@ -24,6 +25,9 @@ pub struct DeploymentPlan {
     /// Sim ranks per node and total.
     pub ranks_per_node: usize,
     pub nodes: usize,
+    /// Producer-side backpressure handling (retry + adaptive snapshot
+    /// skipping) every publishing component of this deployment uses.
+    pub governor: GovernorConfig,
 }
 
 impl DeploymentPlan {
@@ -31,6 +35,7 @@ impl DeploymentPlan {
         let retention = RetentionConfig {
             window: cfg.retention_window,
             max_bytes: cfg.db_max_bytes,
+            ttl_ms: cfg.db_ttl_ms,
         };
         let dbs = match cfg.deployment {
             Deployment::CoLocated => (0..cfg.nodes)
@@ -57,6 +62,7 @@ impl DeploymentPlan {
             deployment: cfg.deployment,
             ranks_per_node: cfg.ranks_per_node,
             nodes: cfg.nodes,
+            governor: cfg.governor(),
         }
     }
 
@@ -105,7 +111,8 @@ mod tests {
         cfg.nodes = 2;
         cfg.retention_window = 5;
         cfg.db_max_bytes = 1 << 20;
-        let want = RetentionConfig { window: 5, max_bytes: 1 << 20 };
+        cfg.db_ttl_ms = 45_000;
+        let want = RetentionConfig { window: 5, max_bytes: 1 << 20, ttl_ms: 45_000 };
         for deployment in [Deployment::CoLocated, Deployment::Clustered { db_nodes: 2 }] {
             cfg.deployment = deployment;
             let plan = DeploymentPlan::new(&cfg, false);
@@ -113,6 +120,16 @@ mod tests {
                 assert_eq!(sc.retention, want);
             }
         }
+    }
+
+    #[test]
+    fn plan_threads_governor_config() {
+        let mut cfg = RunConfig::default();
+        cfg.busy_retries = 3;
+        cfg.governor_max_stride = 4;
+        let plan = DeploymentPlan::new(&cfg, false);
+        assert_eq!(plan.governor, cfg.governor());
+        assert_eq!(plan.governor.max_stride, 4);
     }
 
     #[test]

@@ -8,7 +8,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::client::{stable_key, tensor_key, Client, DataStore, PollConfig};
+use crate::client::{Client, DataStore, GovernorConfig, GovernorStats, PollConfig};
 use crate::config::RunConfig;
 use crate::db::{DbServer, ServerConfig};
 use crate::error::{Error, Result};
@@ -16,8 +16,8 @@ use crate::ml::{Trainer, TrainerConfig};
 use crate::orchestrator::deployment::DeploymentPlan;
 use crate::proto::DbInfo;
 use crate::runtime::Executor;
-use crate::sim::cfd::{ChannelFlow, Grid, MeshSampler};
-use crate::telemetry::{ComponentTimes, Stopwatch, Table};
+use crate::sim::cfd::{run_producer, CfdProducerConfig};
+use crate::telemetry::{ComponentTimes, Table};
 
 /// A launched deployment: the database instances and their addresses.
 pub struct Driver {
@@ -101,6 +101,11 @@ pub struct InSituTrainingConfig {
     pub retention_window: u64,
     /// Store byte cap per database instance (0 = unbounded).
     pub db_max_bytes: u64,
+    /// Wall-clock TTL for stalled producers' data, milliseconds (0 = off).
+    pub db_ttl_ms: u64,
+    /// Producer backpressure handling: `Busy` retry policy plus the
+    /// adaptive snapshot-skip stride ceiling.
+    pub governor: GovernorConfig,
 }
 
 impl Default for InSituTrainingConfig {
@@ -119,6 +124,8 @@ impl Default for InSituTrainingConfig {
             overwrite: false,
             retention_window: 0,
             db_max_bytes: 0,
+            db_ttl_ms: 0,
+            governor: GovernorConfig::default(),
         }
     }
 }
@@ -132,9 +139,15 @@ pub struct InSituTrainingReport {
     /// Fractional overhead of the framework on the solver
     /// (client init + metadata + sends vs equation formation + solution).
     pub solver_overhead_frac: f64,
-    /// Final database statistics — resident/high-water bytes and the
-    /// eviction counters that prove (or disprove) bounded memory.
+    /// Final database statistics — resident/high-water bytes, eviction and
+    /// per-field pressure counters that prove (or disprove) bounded memory.
     pub db: DbInfo,
+    /// Producer-side flow control: publishes, skips, retries, drops.
+    pub governor: GovernorStats,
+    /// Fully published generations (what `latest_step` reached + 1).
+    pub snapshots_published: u64,
+    /// Window generations the trainer requested but found already retired.
+    pub trainer_skipped_generations: u64,
 }
 
 /// Run the full §4 workflow: co-located DB + CFD producer + in-situ trainer.
@@ -146,84 +159,31 @@ pub fn run_insitu_training(cfg: &InSituTrainingConfig) -> Result<InSituTrainingR
     run_cfg.ml_ranks_per_node = cfg.ml_ranks;
     run_cfg.retention_window = cfg.retention_window;
     run_cfg.db_max_bytes = cfg.db_max_bytes;
+    run_cfg.db_ttl_ms = cfg.db_ttl_ms;
     let mut driver = Driver::launch(&run_cfg, false)?;
     let addr = driver.primary_addr();
 
-    // --- producer: the CFD solver thread --------------------------------
+    // --- producer: the CFD solver thread (see sim::cfd::producer) --------
     let solver_times = Arc::new(ComponentTimes::new());
     let stop = Arc::new(AtomicBool::new(false));
     let producer = {
         let times = Arc::clone(&solver_times);
         let stop = Arc::clone(&stop);
-        let cfg = cfg.clone();
+        let p_cfg = CfdProducerConfig {
+            addr,
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            grid: cfg.grid,
+            nu: cfg.nu,
+            sim_ranks: cfg.sim_ranks,
+            snapshot_every: cfg.snapshot_every,
+            solver_steps: cfg.solver_steps,
+            seed: cfg.seed,
+            overwrite: cfg.overwrite,
+            governor: cfg.governor,
+        };
         std::thread::Builder::new()
             .name("cfd-producer".into())
-            .spawn(move || -> Result<()> {
-                let sampler = MeshSampler::load(&cfg.artifacts_dir.join("mesh_coords.bin"))?;
-                let (nx, ny, nz) = cfg.grid;
-                let mut flow = ChannelFlow::new(Grid::channel(nx, ny, nz), cfg.nu, cfg.seed, 0.12);
-
-                let sw = Stopwatch::start();
-                let mut clients: Vec<Client> = (0..cfg.sim_ranks)
-                    .map(|_| Client::connect_retry(addr, 100, Duration::from_millis(10)))
-                    .collect::<Result<_>>()?;
-                times.record("client_init", sw.stop() / cfg.sim_ranks as f64);
-
-                // Per-rank samplers: each "PHASTA rank" owns a partition,
-                // emulated by a rank-seeded jitter of the shared mesh.
-                let rank_samplers: Vec<MeshSampler> = (0..cfg.sim_ranks)
-                    .map(|r| {
-                        sampler.jittered(
-                            cfg.seed ^ (r as u64 + 1),
-                            [0.05, 0.02, 0.05],
-                            [3.99, 1.99, 1.99],
-                        )
-                    })
-                    .collect();
-
-                let mut published = 0u64;
-                for step in 0..cfg.solver_steps {
-                    if stop.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    flow.step(); // formation+solution recorded in flow.timings
-                    if (step + 1) % cfg.snapshot_every == 0 {
-                        for (r, (client, rs)) in
-                            clients.iter_mut().zip(&rank_samplers).enumerate()
-                        {
-                            let snap = rs.snapshot(&flow);
-                            // Overwrite mode: republish under the stable
-                            // key, retiring the previous snapshot in place
-                            // (bounded memory by construction).  Append
-                            // mode relies on the store's retention window.
-                            let key = if cfg.overwrite {
-                                stable_key("field", r)
-                            } else {
-                                tensor_key("field", r, published)
-                            };
-                            let sw = Stopwatch::start();
-                            client.put_tensor(&key, &snap)?;
-                            times.record("send", sw.stop());
-                        }
-                        let sw = Stopwatch::start();
-                        clients[0].put_meta("latest_step", &published.to_string())?;
-                        times.record("metadata", sw.stop());
-                        published += 1;
-                    }
-                }
-                // Fold the solver's internal timings in.
-                for (name, acc) in [
-                    ("equation_formation", &flow.timings.formation),
-                    ("equation_solution", &flow.timings.solution),
-                ] {
-                    // Re-record sample-by-sample statistics are lost; record
-                    // mean per step with the count preserved via repeats.
-                    for _ in 0..acc.count() {
-                        times.record(name, acc.mean());
-                    }
-                }
-                Ok(())
-            })
+            .spawn(move || run_producer(&p_cfg, &times, &stop))
             .map_err(Error::Io)?
     };
 
@@ -243,7 +203,7 @@ pub fn run_insitu_training(cfg: &InSituTrainingConfig) -> Result<InSituTrainingR
     let train_result = trainer.run();
 
     stop.store(true, Ordering::Relaxed);
-    producer.join().expect("producer thread panicked")?;
+    let outcome = producer.join().expect("producer thread panicked")?;
     train_result?;
 
     // --- report -----------------------------------------------------------
@@ -272,6 +232,9 @@ pub fn run_insitu_training(cfg: &InSituTrainingConfig) -> Result<InSituTrainingR
         compression_factor: trainer.manifest.model.compression_factor,
         solver_overhead_frac: if solver_work > 0.0 { overhead / solver_work } else { 0.0 },
         db,
+        governor: outcome.governor,
+        snapshots_published: outcome.published,
+        trainer_skipped_generations: trainer.skipped_generations(),
     };
     driver.shutdown();
     Ok(report)

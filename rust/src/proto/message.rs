@@ -44,6 +44,23 @@ pub enum Device {
 /// Hard cap on the number of entries in one batch / multi-key command.
 pub const MAX_BATCH: usize = 4096;
 
+/// Per-field memory-pressure snapshot reported inside [`DbInfo`] while a
+/// retention policy is active: how much of the byte budget each field
+/// holds, how many generations are resident, and how hard eviction has
+/// been working on it.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FieldPressure {
+    pub field: String,
+    /// Tensor payload bytes this field currently holds resident.
+    pub resident_bytes: u64,
+    /// Resident step generations of the field.
+    pub generations: u64,
+    /// Keys of this field removed by retention (window, cap, or TTL).
+    pub evicted_keys: u64,
+    /// Payload bytes of this field freed by retention.
+    pub evicted_bytes: u64,
+}
+
 /// Database statistics reported by `INFO` (and aggregated across shards by
 /// the cluster client).
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
@@ -54,14 +71,25 @@ pub struct DbInfo {
     pub models: u64,
     /// Lifetime high-water mark of resident tensor bytes.
     pub high_water_bytes: u64,
-    /// Tensor keys removed by the retention policy (window retirement plus
-    /// byte-cap eviction).
+    /// Tensor keys removed by the retention policy (window retirement,
+    /// byte-cap eviction, TTL expiry).
     pub evicted_keys: u64,
     /// Payload bytes freed by eviction.
     pub evicted_bytes: u64,
     /// Writes rejected with backpressure (`busy`) under the byte cap.
     pub busy_rejections: u64,
+    /// Subset of `evicted_keys` retired by the wall-clock TTL tier.
+    pub ttl_expired_keys: u64,
+    /// Active retention policy (0 = the respective limit is off).  On a
+    /// cluster aggregate, `retention_max_bytes` is summed across shards
+    /// (the cluster-wide budget) while window/TTL are the broadcast value.
+    pub retention_window: u64,
+    pub retention_max_bytes: u64,
+    pub retention_ttl_ms: u64,
     pub engine: String,
+    /// Per-field pressure while governance is active (empty otherwise;
+    /// merged by field name on a cluster aggregate).
+    pub fields: Vec<FieldPressure>,
 }
 
 /// Client-to-database commands.
@@ -96,9 +124,10 @@ pub enum Request {
     /// order.
     DelKeys { keys: Vec<String> },
     /// Configure the store's retention policy: keep the newest `window`
-    /// step generations per field and at most `max_bytes` of tensor
-    /// payload (0 disables either limit).  Replies `Ok`.
-    Retention { window: u64, max_bytes: u64 },
+    /// step generations per field, at most `max_bytes` of tensor payload,
+    /// and retire data whose producer has stalled for `ttl_ms` wall-clock
+    /// milliseconds (0 disables any limit).  Replies `Ok`.
+    Retention { window: u64, max_bytes: u64, ttl_ms: u64 },
 }
 
 /// Database-to-client replies.
@@ -412,10 +441,11 @@ impl Request {
                 buf.push(req_op::DEL_KEYS);
                 put_str_list(buf, keys);
             }
-            Request::Retention { window, max_bytes } => {
+            Request::Retention { window, max_bytes, ttl_ms } => {
                 buf.push(req_op::RETENTION);
                 buf.extend_from_slice(&window.to_le_bytes());
                 buf.extend_from_slice(&max_bytes.to_le_bytes());
+                buf.extend_from_slice(&ttl_ms.to_le_bytes());
             }
         }
     }
@@ -510,7 +540,11 @@ impl Request {
                 cap_us: c.u64()?,
             },
             req_op::DEL_KEYS => Request::DelKeys { keys: c.str_list()? },
-            req_op::RETENTION => Request::Retention { window: c.u64()?, max_bytes: c.u64()? },
+            req_op::RETENTION => Request::Retention {
+                window: c.u64()?,
+                max_bytes: c.u64()?,
+                ttl_ms: c.u64()?,
+            },
             _ => return Err(Error::Protocol(format!("unknown request opcode {op}"))),
         };
         Ok(req)
@@ -569,7 +603,7 @@ impl Request {
             Request::MGetTensors { keys } => str_list_wire_size(keys),
             Request::PollKeys { keys, .. } => str_list_wire_size(keys) + 24,
             Request::DelKeys { keys } => str_list_wire_size(keys),
-            Request::Retention { .. } => 16,
+            Request::Retention { .. } => 24,
         };
         1 + fields // opcode + fields
     }
@@ -635,7 +669,19 @@ impl Response {
                 buf.extend_from_slice(&i.evicted_keys.to_le_bytes());
                 buf.extend_from_slice(&i.evicted_bytes.to_le_bytes());
                 buf.extend_from_slice(&i.busy_rejections.to_le_bytes());
+                buf.extend_from_slice(&i.ttl_expired_keys.to_le_bytes());
+                buf.extend_from_slice(&i.retention_window.to_le_bytes());
+                buf.extend_from_slice(&i.retention_max_bytes.to_le_bytes());
+                buf.extend_from_slice(&i.retention_ttl_ms.to_le_bytes());
                 put_str(buf, &i.engine);
+                buf.extend_from_slice(&(i.fields.len() as u32).to_le_bytes());
+                for f in &i.fields {
+                    put_str(buf, &f.field);
+                    buf.extend_from_slice(&f.resident_bytes.to_le_bytes());
+                    buf.extend_from_slice(&f.generations.to_le_bytes());
+                    buf.extend_from_slice(&f.evicted_keys.to_le_bytes());
+                    buf.extend_from_slice(&f.evicted_bytes.to_le_bytes());
+                }
             }
             Response::Batch(entries) => {
                 encode_batch_response_header_into(buf, entries.len());
@@ -685,17 +731,53 @@ impl Response {
                 Response::Keys(ks)
             }
             resp_op::ERROR => Response::Error(c.str()?),
-            resp_op::INFO => Response::Info(DbInfo {
-                keys: c.u64()?,
-                bytes: c.u64()?,
-                ops: c.u64()?,
-                models: c.u64()?,
-                high_water_bytes: c.u64()?,
-                evicted_keys: c.u64()?,
-                evicted_bytes: c.u64()?,
-                busy_rejections: c.u64()?,
-                engine: c.str()?,
-            }),
+            resp_op::INFO => {
+                let keys = c.u64()?;
+                let bytes = c.u64()?;
+                let ops = c.u64()?;
+                let models = c.u64()?;
+                let high_water_bytes = c.u64()?;
+                let evicted_keys = c.u64()?;
+                let evicted_bytes = c.u64()?;
+                let busy_rejections = c.u64()?;
+                let ttl_expired_keys = c.u64()?;
+                let retention_window = c.u64()?;
+                let retention_max_bytes = c.u64()?;
+                let retention_ttl_ms = c.u64()?;
+                let engine = c.str()?;
+                let n = c.u32()? as usize;
+                if n > MAX_BATCH {
+                    return Err(Error::Protocol(format!(
+                        "field pressure list of {n} exceeds {MAX_BATCH}"
+                    )));
+                }
+                let mut fields = Vec::with_capacity(n);
+                for _ in 0..n {
+                    fields.push(FieldPressure {
+                        field: c.str()?,
+                        resident_bytes: c.u64()?,
+                        generations: c.u64()?,
+                        evicted_keys: c.u64()?,
+                        evicted_bytes: c.u64()?,
+                    });
+                }
+                Response::Info(DbInfo {
+                    keys,
+                    bytes,
+                    ops,
+                    models,
+                    high_water_bytes,
+                    evicted_keys,
+                    evicted_bytes,
+                    busy_rejections,
+                    ttl_expired_keys,
+                    retention_window,
+                    retention_max_bytes,
+                    retention_ttl_ms,
+                    engine,
+                    fields,
+                })
+            }
             resp_op::BATCH => {
                 if !allow_batch {
                     return Err(Error::Protocol("nested batch response".into()));
@@ -725,7 +807,14 @@ impl Response {
             Response::Bool(_) => 1,
             Response::Meta(s) | Response::Error(s) => str_wire_size(s),
             Response::Keys(ks) => 4 + ks.iter().map(|k| str_wire_size(k)).sum::<usize>(),
-            Response::Info(i) => 64 + str_wire_size(&i.engine),
+            Response::Info(i) => {
+                96 + str_wire_size(&i.engine)
+                    + 4
+                    + i.fields
+                        .iter()
+                        .map(|f| str_wire_size(&f.field) + 32)
+                        .sum::<usize>()
+            }
             Response::Batch(entries) => {
                 4 + entries.iter().map(|e| e.body_wire_size()).sum::<usize>()
             }

@@ -42,7 +42,7 @@ pub mod message;
 
 pub use frame::{begin_split_frame, end_split_frame, read_frame, read_frame_into, write_frame,
                 FrameSink, MAX_FRAME};
-pub use message::{DbInfo, Device, Request, Response, MAX_BATCH};
+pub use message::{DbInfo, Device, FieldPressure, Request, Response, MAX_BATCH};
 
 #[cfg(test)]
 mod tests {
@@ -97,7 +97,7 @@ mod tests {
                 cap_us: 20_000,
             },
             Request::DelKeys { keys: vec!["d0".into(), "d1".into(), "d2".into()] },
-            Request::Retention { window: 4, max_bytes: 1 << 28 },
+            Request::Retention { window: 4, max_bytes: 1 << 28, ttl_ms: 30_000 },
         ]
     }
 
@@ -127,7 +127,27 @@ mod tests {
                 evicted_keys: 7,
                 evicted_bytes: 2 << 20,
                 busy_rejections: 1,
+                ttl_expired_keys: 3,
+                retention_window: 4,
+                retention_max_bytes: 8 << 20,
+                retention_ttl_ms: 60_000,
                 engine: "redis".into(),
+                fields: vec![
+                    FieldPressure {
+                        field: "u".into(),
+                        resident_bytes: 1 << 19,
+                        generations: 4,
+                        evicted_keys: 5,
+                        evicted_bytes: 1 << 20,
+                    },
+                    FieldPressure {
+                        field: "v".into(),
+                        resident_bytes: 1 << 18,
+                        generations: 2,
+                        evicted_keys: 2,
+                        evicted_bytes: 1 << 19,
+                    },
+                ],
             }),
             Response::Batch(vec![
                 Response::Ok,
@@ -413,7 +433,7 @@ mod tests {
             }
             1 => Request::GetTensor { key: g.key() },
             2 => Request::DelKeys { keys: keys(g) },
-            3 => Request::Retention { window: g.u64(), max_bytes: g.u64() },
+            3 => Request::Retention { window: g.u64(), max_bytes: g.u64(), ttl_ms: g.u64() },
             4 => Request::MGetTensors { keys: keys(g) },
             5 => Request::PollKeys {
                 keys: keys(g),
@@ -424,7 +444,7 @@ mod tests {
             6 => Request::PutMeta { key: g.key(), value: g.key() },
             _ => Request::Batch(vec![
                 Request::DelKeys { keys: keys(g) },
-                Request::Retention { window: g.u64(), max_bytes: g.u64() },
+                Request::Retention { window: g.u64(), max_bytes: g.u64(), ttl_ms: g.u64() },
                 Request::Exists { key: g.key() },
             ]),
         }
@@ -478,7 +498,7 @@ mod tests {
         check("proto retention-op bitflips", 300, |g: &mut Gen| {
             let r = Request::Batch(vec![
                 Request::DelKeys { keys: vec![g.key(), g.key()] },
-                Request::Retention { window: g.u64(), max_bytes: g.u64() },
+                Request::Retention { window: g.u64(), max_bytes: g.u64(), ttl_ms: g.u64() },
             ]);
             let mut buf = Vec::new();
             r.encode(&mut buf);
@@ -516,7 +536,7 @@ mod tests {
     fn retention_ops_inside_batches_roundtrip() {
         let r = Request::Batch(vec![
             Request::DelKeys { keys: vec!["a".into(), "b".into()] },
-            Request::Retention { window: 3, max_bytes: 1 << 20 },
+            Request::Retention { window: 3, max_bytes: 1 << 20, ttl_ms: 5_000 },
             Request::Info,
         ]);
         assert_eq!(roundtrip_req(&r), r);

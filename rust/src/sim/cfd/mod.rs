@@ -9,10 +9,12 @@
 
 pub mod grid;
 pub mod poisson;
+pub mod producer;
 pub mod sampler;
 pub mod solver;
 pub mod turbulence;
 
 pub use grid::Grid;
+pub use producer::{run_producer, CfdProducerConfig, CfdProducerOutcome};
 pub use sampler::MeshSampler;
 pub use solver::{ChannelFlow, SolverTimings};

@@ -10,7 +10,7 @@ use std::net::SocketAddr;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::client::{tensor_key, Client, DataStore};
+use crate::client::{tensor_key, Client, DataStore, RetryPolicy};
 use crate::error::Result;
 use crate::telemetry::{ComponentTimes, Stopwatch};
 use crate::tensor::Tensor;
@@ -26,6 +26,9 @@ pub struct ReproducerConfig {
     pub warmup: usize,
     /// Emulated PDE-integration time per step.
     pub compute_secs: f64,
+    /// How sends react to `Busy` backpressure from a bounded store
+    /// (irrelevant on unbounded stores; the default fails immediately).
+    pub retry: RetryPolicy,
 }
 
 /// Component timings aggregated across all ranks (mean ± σ, Tables 1-2
@@ -52,9 +55,12 @@ pub fn run_data_loop(cfg: &ReproducerConfig) -> Result<Arc<ComponentTimes>> {
                 }
                 let key = tensor_key("field", rank, it as u64);
                 let sw = Stopwatch::start();
-                client.put_tensor(&key, &payload)?;
+                let retries = client.put_tensor_retry(&key, &payload, &cfg.retry)?;
                 if measuring {
                     times.record("send", sw.stop());
+                    if retries > 0 {
+                        times.record("busy_retries", retries as f64);
+                    }
                 }
                 let sw = Stopwatch::start();
                 let back = client.get_tensor(&key)?;

@@ -1,5 +1,9 @@
 //! Paper-style result tables rendered as markdown (for EXPERIMENTS.md) and
-//! CSV (for plotting).
+//! CSV (for plotting), plus the canned tables `situ info` and the run
+//! reports use for retention pressure and backpressure counters.
+
+use crate::proto::DbInfo;
+use crate::util::fmt;
 
 /// A simple titled table.
 #[derive(Debug, Clone)]
@@ -82,6 +86,47 @@ impl Table {
     }
 }
 
+/// Per-field memory-pressure table from an `INFO` reply: resident bytes
+/// (and share of the byte cap when one is set), resident generations, and
+/// eviction counters.  Empty retention state renders an empty table —
+/// callers usually skip printing it when `info.fields` is empty.
+pub fn field_pressure_table(info: &DbInfo) -> Table {
+    let mut t = Table::new(
+        "per-field retention pressure",
+        &["field", "resident", "of cap", "generations", "evicted keys", "evicted bytes"],
+    );
+    for f in &info.fields {
+        let of_cap = if info.retention_max_bytes > 0 {
+            format!(
+                "{:.1}%",
+                100.0 * f.resident_bytes as f64 / info.retention_max_bytes as f64
+            )
+        } else {
+            "-".to_string()
+        };
+        t.row(&[
+            f.field.clone(),
+            fmt::bytes(f.resident_bytes),
+            of_cap,
+            f.generations.to_string(),
+            f.evicted_keys.to_string(),
+            fmt::bytes(f.evicted_bytes),
+        ]);
+    }
+    t
+}
+
+/// One-column-per-name counter table — the rendering behind the
+/// backpressure (skip/retry/drop) report lines of `situ info`, the CFD
+/// producer, and the trainer's final report.
+pub fn counter_table(title: &str, counters: &[(&str, u64)]) -> Table {
+    let mut t = Table::new(title, &["counter", "value"]);
+    for (name, value) in counters {
+        t.row(&[name.to_string(), value.to_string()]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,5 +158,36 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn field_pressure_table_renders_cap_share() {
+        use crate::proto::FieldPressure;
+        let info = DbInfo {
+            retention_max_bytes: 1000,
+            fields: vec![FieldPressure {
+                field: "u".into(),
+                resident_bytes: 250,
+                generations: 2,
+                evicted_keys: 3,
+                evicted_bytes: 750,
+            }],
+            ..Default::default()
+        };
+        let md = field_pressure_table(&info).render_markdown();
+        assert!(md.contains("| u"), "{md}");
+        assert!(md.contains("25.0%"), "resident share of the cap:\n{md}");
+        assert!(md.contains("| 2 "), "generation count:\n{md}");
+        // Without a cap the share column is a dash.
+        let info = DbInfo { fields: info.fields, ..Default::default() };
+        assert!(field_pressure_table(&info).render_markdown().contains("| -"));
+    }
+
+    #[test]
+    fn counter_table_rows() {
+        let md = counter_table("backpressure", &[("skipped", 4), ("retries", 7)])
+            .render_markdown();
+        assert!(md.contains("skipped"));
+        assert!(md.contains("| 7"));
     }
 }

@@ -553,7 +553,7 @@ fn overwrite_is_last_writer_wins() {
 fn retention_over_tcp_window_and_counters() {
     let server = start(Engine::Redis);
     let mut c = Client::connect(server.addr).unwrap();
-    c.set_retention(RetentionConfig { window: 2, max_bytes: 0 }).unwrap();
+    c.set_retention(RetentionConfig::windowed(2, 0)).unwrap();
     for step in 0..5u64 {
         for r in 0..3 {
             c.put_tensor(&tensor_key("w", r, step), &t(vec![step as f32; 16])).unwrap();
@@ -585,6 +585,15 @@ fn retention_over_tcp_window_and_counters() {
     assert_eq!(info.bytes, 6 * 64);
     assert!(info.high_water_bytes >= info.bytes);
     assert_eq!(info.busy_rejections, 0);
+    // The INFO reply carries the active policy and per-field pressure.
+    assert_eq!((info.retention_window, info.retention_max_bytes), (2, 0));
+    assert_eq!(info.fields.len(), 1, "{:?}", info.fields);
+    let fp = &info.fields[0];
+    assert_eq!(fp.field, "w");
+    assert_eq!(fp.generations, 2);
+    assert_eq!(fp.resident_bytes, 6 * 64);
+    assert_eq!(fp.evicted_keys, 9);
+    assert_eq!(fp.evicted_bytes, 9 * 64);
 }
 
 #[test]
@@ -592,7 +601,7 @@ fn put_backpressure_surfaces_as_busy() {
     let server = start(Engine::Redis);
     let mut c = Client::connect(server.addr).unwrap();
     // Cap fits one field's two-generation window exactly (2 × 64 B).
-    c.set_retention(RetentionConfig { window: 2, max_bytes: 128 }).unwrap();
+    c.set_retention(RetentionConfig::windowed(2, 128)).unwrap();
     c.put_tensor(&tensor_key("f", 0, 0), &t(vec![0.0; 16])).unwrap();
     c.put_tensor(&tensor_key("f", 0, 1), &t(vec![1.0; 16])).unwrap();
     // A different field cannot fit: explicit backpressure, window intact.
@@ -633,9 +642,9 @@ fn cluster_parity_del_keys_retention_and_windowed_gather() {
     let mut cc = ClusterClient::connect(&addrs).unwrap();
 
     // set_retention broadcasts to every shard instance.
-    cc.set_retention(RetentionConfig { window: 3, max_bytes: 0 }).unwrap();
+    cc.set_retention(RetentionConfig::windowed(3, 0)).unwrap();
     for s in &servers {
-        assert_eq!(s.store().retention(), RetentionConfig { window: 3, max_bytes: 0 });
+        assert_eq!(s.store().retention(), RetentionConfig::windowed(3, 0));
     }
 
     // Publish 8 generations of 4 ranks; each shard windows the generations
@@ -710,7 +719,7 @@ fn cluster_parity_del_keys_retention_and_windowed_gather() {
 fn windowed_gather_skips_retired_generations() {
     let server = start(Engine::Redis);
     let mut c = Client::connect(server.addr).unwrap();
-    c.set_retention(RetentionConfig { window: 2, max_bytes: 0 }).unwrap();
+    c.set_retention(RetentionConfig::windowed(2, 0)).unwrap();
     for step in 0..6u64 {
         for r in 0..2 {
             c.put_tensor(&tensor_key("sk", r, step), &t(vec![step as f32])).unwrap();
@@ -765,4 +774,69 @@ fn configured_timeouts_speed_up_teardown() {
         "teardown latency: {:?}",
         t0.elapsed()
     );
+}
+
+#[test]
+fn ttl_retention_over_tcp_reclaims_stalled_producer() {
+    // A producer publishes two generations, then stalls.  With a TTL
+    // policy, an `info` round trip (which sweeps expired data server-side)
+    // reclaims them; counters attribute the eviction to the TTL tier.
+    let server = start(Engine::KeyDb);
+    let mut c = Client::connect(server.addr).unwrap();
+    c.set_retention(RetentionConfig { window: 4, max_bytes: 0, ttl_ms: 250 }).unwrap();
+    for step in 0..2u64 {
+        for r in 0..2 {
+            c.put_tensor(&tensor_key("stall", r, step), &t(vec![step as f32; 8])).unwrap();
+        }
+    }
+    let info = c.info().unwrap();
+    assert_eq!(info.ttl_expired_keys, 0, "fresh data survives the sweep");
+    assert_eq!(info.retention_ttl_ms, 250);
+    assert_eq!(info.keys, 4);
+    std::thread::sleep(Duration::from_millis(500));
+    let info = c.info().unwrap();
+    assert_eq!(info.ttl_expired_keys, 4, "stalled generations reclaimed");
+    assert_eq!(info.keys, 0);
+    assert_eq!(info.bytes, 0);
+    assert_eq!(info.evicted_keys, 4, "TTL expiry counts as eviction");
+    assert!(c.list_keys("stall_").unwrap().is_empty());
+}
+
+#[test]
+fn put_tensor_retry_rides_out_transient_pressure() {
+    use situ::client::RetryPolicy;
+
+    // Cap fits exactly one 64-byte untracked key.  While "hog" is resident
+    // a put of equal size under another key gets Busy; a concurrent delete
+    // of the hog lets the retrying put land.
+    let server = start(Engine::KeyDb);
+    let addr = server.addr;
+    let mut c = Client::connect(addr).unwrap();
+    c.set_retention(RetentionConfig { window: 2, max_bytes: 64, ttl_ms: 0 }).unwrap();
+    // A protected step-key window occupies the whole cap: nothing evictable.
+    c.put_tensor(&tensor_key("f", 0, 0), &t(vec![0.0; 8])).unwrap();
+    c.put_tensor(&tensor_key("f", 0, 1), &t(vec![1.0; 8])).unwrap();
+
+    // Immediate-fail policy surfaces Busy as before.
+    let err = c
+        .put_tensor_retry(&tensor_key("g", 0, 0), &t(vec![2.0; 8]), &RetryPolicy::Fail)
+        .unwrap_err();
+    assert!(matches!(err, Error::Busy(_)), "{err}");
+
+    // A consumer frees the window from another connection while the
+    // producer retries under a deadline policy.
+    let freer = std::thread::spawn(move || {
+        let mut c2 = Client::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(80));
+        c2.del_keys(&[tensor_key("f", 0, 0), tensor_key("f", 0, 1)]).unwrap();
+    });
+    let policy = RetryPolicy::deadline(Duration::from_millis(10), Duration::from_secs(10));
+    let retries = c
+        .put_tensor_retry(&tensor_key("g", 0, 0), &t(vec![2.0; 8]), &policy)
+        .unwrap();
+    assert!(retries > 0, "the put must have waited out the pressure");
+    freer.join().unwrap();
+    assert!(c.exists(&tensor_key("g", 0, 0)).unwrap());
+    let info = c.info().unwrap();
+    assert!(info.busy_rejections >= 2, "each rejected attempt is counted");
 }

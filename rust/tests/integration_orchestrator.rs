@@ -53,6 +53,7 @@ fn reproducer_measures_all_components() {
         iterations: 5,
         warmup: 1,
         compute_secs: 0.0,
+        retry: situ::client::RetryPolicy::Fail,
     })
     .unwrap();
     let snap = times.snapshot();
@@ -141,6 +142,15 @@ fn insitu_training_windowed_bounded_memory() {
         "high-water tracks peak residency"
     );
     assert_eq!(report.db.busy_rejections, 0, "no backpressure without a byte cap");
+    // Governor accounting: every snapshot published, none skipped/dropped
+    // (no pressure), and the per-field pressure reached INFO.
+    assert!(report.snapshots_published > 0);
+    assert_eq!(report.governor.published, report.snapshots_published);
+    assert_eq!(report.governor.skipped + report.governor.dropped, 0);
+    assert_eq!(report.db.retention_window, 4);
+    assert_eq!(report.db.fields.len(), 1, "{:?}", report.db.fields);
+    assert_eq!(report.db.fields[0].field, "field");
+    assert!(report.db.fields[0].evicted_keys > 0);
 }
 
 #[test]

@@ -51,7 +51,7 @@ fn eviction_under_concurrent_producers_and_consumers() {
     let server = DbServer::start(ServerConfig {
         engine: Engine::KeyDb,
         with_models: false,
-        retention: RetentionConfig { window, max_bytes: cap },
+        retention: RetentionConfig::windowed(window, cap),
         conn_read_timeout: Duration::from_millis(50),
         ..Default::default()
     })
@@ -191,7 +191,7 @@ fn long_driver_run_holds_flat_memory_under_cap() {
     let addr = driver.primary_addr();
     assert_eq!(
         driver.servers[0].store().retention(),
-        RetentionConfig { window, max_bytes: cap },
+        RetentionConfig::windowed(window, cap),
         "driver threads the retention config into every server"
     );
 
@@ -270,4 +270,68 @@ fn overwrite_mode_is_flat_by_construction() {
     dl.wait_latest(&PollConfig::default()).unwrap();
     let got = dl.gather_latest().unwrap();
     assert_eq!(got.len(), ranks);
+}
+
+#[test]
+fn sustained_backpressure_survives_via_snapshot_skipping() {
+    // The backpressure acceptance path, deterministic and sequential: a
+    // stalled field ("hog") pins the whole byte budget inside its protected
+    // window, so every publish of the live field is rejected with Busy.
+    // Under the old behavior that aborted the producer; with the governor
+    // the loop keeps running — dropping snapshots and widening its stride —
+    // and recovers to full rate once the stall clears.
+    use situ::client::{GovernorConfig, PublishGovernor, RetryPolicy};
+
+    let elems = 64usize;
+    let payload = (elems * 4) as u64;
+    let server = DbServer::start(ServerConfig {
+        engine: Engine::KeyDb,
+        with_models: false,
+        retention: RetentionConfig::windowed(2, 2 * payload),
+        conn_read_timeout: Duration::from_millis(50),
+        ..Default::default()
+    })
+    .unwrap();
+    let mut c = Client::connect(server.addr).unwrap();
+    // The hog's two-generation window fills the cap exactly.
+    c.put_tensor(&tensor_key("hog", 0, 0), &t_const(0.0, elems)).unwrap();
+    c.put_tensor(&tensor_key("hog", 0, 1), &t_const(1.0, elems)).unwrap();
+
+    let mut gov = PublishGovernor::new(GovernorConfig {
+        retry: RetryPolicy::Backoff {
+            initial: Duration::from_millis(1),
+            cap: Duration::from_millis(4),
+            retries: 2,
+        },
+        max_stride: 4,
+    });
+    let mut published = 0u64;
+    let opportunities = 24u64;
+    for opp in 0..opportunities {
+        if opp == opportunities / 2 {
+            // The stall clears mid-run (consumer drains the hog's window).
+            c.del_keys(&[tensor_key("hog", 0, 0), tensor_key("hog", 0, 1)]).unwrap();
+        }
+        if !gov.should_publish() {
+            continue;
+        }
+        let placed = gov
+            .publish(|| c.put_tensor(&tensor_key("live", 0, published), &t_const(9.0, elems)))
+            .expect("governed publish never surfaces Busy as fatal");
+        if placed.is_some() {
+            published += 1;
+        }
+    }
+    let stats = gov.stats();
+    assert!(stats.dropped > 0, "pressure phase dropped snapshots: {stats:?}");
+    assert!(stats.skipped > 0, "stride skipping engaged: {stats:?}");
+    assert!(stats.busy_retries > 0, "retries were attempted: {stats:?}");
+    assert!(published >= 2, "run recovered after the stall: {stats:?}");
+    assert_eq!(stats.published, published);
+    assert_eq!(gov.stride(), 1, "stride decayed back to full rate");
+    assert!(server.store().n_bytes() <= 2 * payload, "cap held throughout");
+    let info = c.info().unwrap();
+    assert!(info.busy_rejections > 0, "store counted the rejections");
+    // The live field's newest window is resident (its own retention).
+    assert!(c.exists(&tensor_key("live", 0, published - 1)).unwrap());
 }
