@@ -1,0 +1,158 @@
+//! fig_spill — governed put throughput with the spill-to-disk cold tier
+//! on vs off.
+//!
+//! The cold tier's design goal is "durability off the hot path": eviction
+//! hands retired tensors to a background writer thread (refcount bump, no
+//! copy, no inline disk I/O), so governed put throughput with spill on
+//! must stay within noise of spill off.  This bench drives an appending
+//! TCP producer against a windowed byte-capped store in both modes, times
+//! the wall clock, and then proves the spilled data is actually there by
+//! replaying an early evicted generation byte-exact.
+//!
+//! `SITU_BENCH_SMOKE=1` shortens the run for CI (structural assertions
+//! only — the throughput *ratio* is recorded, and gated loosely, since CI
+//! wall clocks are noisy); `SITU_BENCH_JSON=path` records the results.
+
+use std::time::Instant;
+
+use situ::client::{tensor_key, Client, DataStore};
+use situ::db::{DbServer, Engine, RetentionConfig, ServerConfig, SpillConfig};
+use situ::telemetry::Table;
+use situ::tensor::Tensor;
+
+struct ModeResult {
+    name: &'static str,
+    elapsed_s: f64,
+    puts_per_s: f64,
+    spilled_keys: u64,
+    spilled_bytes: u64,
+    spill_segments: u64,
+}
+
+fn main() {
+    let smoke = std::env::var("SITU_BENCH_SMOKE").is_ok();
+    let steps: u64 = std::env::var("SITU_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 40 } else { 300 });
+    let ranks = 4usize;
+    let elems = 16 * 1024usize; // 64 KiB per tensor
+    let payload = (elems * 4) as u64;
+    let window = 4u64;
+    let cap = (window + 2) * ranks as u64 * payload;
+    let spill_base = std::env::temp_dir()
+        .join(format!("situ_fig_spill_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&spill_base);
+
+    let mut results: Vec<ModeResult> = Vec::new();
+    let mut table = Table::new(
+        "governed put throughput: spill-to-disk cold tier on vs off",
+        &["mode", "steps", "elapsed", "puts/s", "spilled keys", "segments"],
+    );
+
+    for (name, spill) in [
+        ("spill_off", None),
+        ("spill_on", Some(SpillConfig::new(spill_base.join("on")))),
+    ] {
+        let server = DbServer::start(ServerConfig {
+            engine: Engine::KeyDb,
+            with_models: false,
+            retention: RetentionConfig::windowed(window, cap),
+            spill,
+            ..Default::default()
+        })
+        .expect("server");
+        let mut c = Client::connect(server.addr).expect("client");
+        let t0 = Instant::now();
+        for step in 0..steps {
+            for r in 0..ranks {
+                let snap = Tensor::from_f32(&[elems], vec![step as f32; elems]).unwrap();
+                c.put_tensor(&tensor_key("fig", r, step), &snap).expect("governed put");
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let info = c.info().expect("info"); // syncs the spill writer
+        let total_puts = (steps * ranks as u64) as f64;
+        table.row(&[
+            name.to_string(),
+            steps.to_string(),
+            format!("{elapsed:.3}s"),
+            format!("{:.0}", total_puts / elapsed),
+            info.spilled_keys.to_string(),
+            info.spill_segments.to_string(),
+        ]);
+
+        if name == "spill_on" {
+            // The durability half of the claim: an early evicted
+            // generation replays byte-exact from the cold tier.
+            assert_eq!(info.spilled_keys, info.evicted_keys, "every eviction spilled");
+            assert!(info.spilled_keys > 0);
+            for r in 0..ranks {
+                let back = c.cold_get(&tensor_key("fig", r, 0)).expect("cold read");
+                assert_eq!(
+                    back.to_f32().unwrap(),
+                    vec![0.0; elems],
+                    "spill replay byte-exact"
+                );
+            }
+        } else {
+            assert_eq!(info.spilled_keys, 0);
+        }
+        results.push(ModeResult {
+            name,
+            elapsed_s: elapsed,
+            puts_per_s: total_puts / elapsed,
+            spilled_keys: info.spilled_keys,
+            spilled_bytes: info.spilled_bytes,
+            spill_segments: info.spill_segments,
+        });
+    }
+    table.print();
+
+    let off = &results[0];
+    let on = &results[1];
+    let ratio = on.puts_per_s / off.puts_per_s;
+    println!(
+        "spill-on throughput is {:.1}% of spill-off ({:.0} vs {:.0} puts/s)",
+        ratio * 100.0,
+        on.puts_per_s,
+        off.puts_per_s
+    );
+    // Acceptance: spill stays off the hot path (within 10% in quiet full
+    // runs).  CI smoke boxes share noisy wall clocks, so the smoke gate is
+    // deliberately loose — it catches "spill serialized the put path", not
+    // scheduler jitter.
+    let floor = if smoke { 0.5 } else { 0.9 };
+    assert!(
+        ratio >= floor,
+        "spill-on throughput {:.2}x spill-off is below the {floor} floor",
+        ratio
+    );
+
+    if let Ok(path) = std::env::var("SITU_BENCH_JSON") {
+        let mut s = String::from("{\n  \"bench\": \"fig_spill\",\n");
+        s.push_str(&format!(
+            "  \"config\": {{\"ranks\": {ranks}, \"payload_bytes\": {payload}, \
+             \"window\": {window}, \"max_bytes\": {cap}, \"steps\": {steps}}},\n"
+        ));
+        s.push_str(&format!("  \"throughput_ratio_on_over_off\": {ratio:.4},\n"));
+        s.push_str("  \"modes\": [\n");
+        for (i, r) in results.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"mode\": \"{}\", \"elapsed_s\": {:.4}, \"puts_per_s\": {:.1}, \
+                 \"spilled_keys\": {}, \"spilled_bytes\": {}, \"spill_segments\": {}}}{}\n",
+                r.name,
+                r.elapsed_s,
+                r.puts_per_s,
+                r.spilled_keys,
+                r.spilled_bytes,
+                r.spill_segments,
+                if i + 1 == results.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(&path, &s).expect("write SITU_BENCH_JSON");
+        println!("bench results written to {path}");
+    }
+    let _ = std::fs::remove_dir_all(&spill_base);
+}

@@ -156,6 +156,13 @@ impl Pipeline {
         self.push(Request::GetTensor { key: key.to_string() })
     }
 
+    /// Read a retired key back from the spill-to-disk cold tier (replies
+    /// `Tensor` or `NotFound`).  Routes like `get_tensor`, so it pipelines
+    /// on a cluster — the dataloader's cold fallback batches these.
+    pub fn cold_get(&mut self, key: &str) -> &mut Pipeline {
+        self.push(Request::ColdGet { key: key.to_string() })
+    }
+
     pub fn del_tensor(&mut self, key: &str) -> &mut Pipeline {
         self.push(Request::DelTensor { key: key.to_string() })
     }
@@ -274,6 +281,16 @@ pub trait DataStore {
     /// All tensor keys with a prefix, sorted (merged across shards on a
     /// cluster).
     fn list_keys(&mut self, prefix: &str) -> Result<Vec<String>>;
+
+    /// Keys resident in the spill-to-disk cold tier with a prefix, sorted
+    /// (merged across shards on a cluster).  Empty when the server has no
+    /// spill directory configured.
+    fn cold_list(&mut self, prefix: &str) -> Result<Vec<String>>;
+
+    /// Read a retired key back from the cold tier.  `KeyNotFound` when the
+    /// key was never spilled (or spill is off) — strictly the cold tier;
+    /// resident keys are served by [`DataStore::get_tensor`].
+    fn cold_get(&mut self, key: &str) -> Result<Tensor>;
 
     /// Upload a model artifact (HLO text) into the model registry.
     fn put_model(&mut self, key: &str, hlo_text: &str) -> Result<()>;
@@ -500,6 +517,18 @@ impl DataStore for Client {
             .expect_keys()
     }
 
+    fn cold_list(&mut self, prefix: &str) -> Result<Vec<String>> {
+        self.call(&Request::ColdList { prefix: prefix.to_string() })?
+            .expect_keys()
+    }
+
+    /// Like `get_tensor`, the reply payload aliases the response frame —
+    /// cold reads are zero-copy client-side too.
+    fn cold_get(&mut self, key: &str) -> Result<Tensor> {
+        self.call(&Request::ColdGet { key: key.to_string() })?
+            .expect_tensor(key)
+    }
+
     fn put_model(&mut self, key: &str, hlo_text: &str) -> Result<()> {
         self.call(&Request::PutModel {
             key: key.to_string(),
@@ -675,6 +704,23 @@ impl DataStore for ClusterClient {
         Ok(all)
     }
 
+    /// Cold-tier keys across all shards (merged + sorted) — each shard
+    /// spilled the keys it evicted locally.
+    fn cold_list(&mut self, prefix: &str) -> Result<Vec<String>> {
+        let mut all = Vec::new();
+        for c in &mut self.shards {
+            all.extend(c.cold_list(prefix)?);
+        }
+        all.sort();
+        Ok(all)
+    }
+
+    /// Routes to the owning shard: a key spills on the shard it hashes to
+    /// (that shard evicted it), so cold routing equals hot routing.
+    fn cold_get(&mut self, key: &str) -> Result<Tensor> {
+        self.route(key).cold_get(key)
+    }
+
     /// Models are broadcast to every shard, so `run_model` can execute
     /// wherever its inputs land.
     fn put_model(&mut self, key: &str, hlo_text: &str) -> Result<()> {
@@ -748,6 +794,11 @@ impl DataStore for ClusterClient {
             agg.retention_window = agg.retention_window.max(i.retention_window);
             agg.retention_max_bytes += i.retention_max_bytes;
             agg.retention_ttl_ms = agg.retention_ttl_ms.max(i.retention_ttl_ms);
+            agg.spilled_keys += i.spilled_keys;
+            agg.spilled_bytes += i.spilled_bytes;
+            agg.spill_segments += i.spill_segments;
+            agg.cold_hits += i.cold_hits;
+            agg.spill_lost_keys += i.spill_lost_keys;
             if agg.engine.is_empty() {
                 agg.engine = i.engine;
             }
@@ -758,6 +809,11 @@ impl DataStore for ClusterClient {
                         a.generations += f.generations;
                         a.evicted_keys += f.evicted_keys;
                         a.evicted_bytes += f.evicted_bytes;
+                        // A field's generations scatter across shards, so
+                        // its spill records do too — same merge-by-name
+                        // path as the resident pressure counters.
+                        a.spilled_keys += f.spilled_keys;
+                        a.spilled_bytes += f.spilled_bytes;
                     }
                     None => agg.fields.push(f),
                 }

@@ -68,6 +68,13 @@ pub struct RunConfig {
     /// Ceiling for the producer's adaptive publish stride under sustained
     /// backpressure (1 = never skip a snapshot; `Busy` is then fatal).
     pub governor_max_stride: u64,
+    /// Spill-to-disk cold tier: base directory for the segment logs (each
+    /// database instance gets its own `db{n}` subdirectory).  `None` =
+    /// evicted data is discarded, the seed behavior.
+    pub spill_dir: Option<String>,
+    /// Byte cap on each instance's cold tier (0 = unbounded); once
+    /// exceeded, oldest sealed segments are deleted.
+    pub spill_max_bytes: u64,
 }
 
 impl Default for RunConfig {
@@ -89,6 +96,8 @@ impl Default for RunConfig {
             busy_retries: 0,
             busy_backoff_ms: 5,
             governor_max_stride: 1,
+            spill_dir: None,
+            spill_max_bytes: 0,
         }
     }
 }
@@ -134,6 +143,8 @@ impl RunConfig {
         c.busy_backoff_ms = a.usize_or("busy-backoff-ms", c.busy_backoff_ms as usize)? as u64;
         c.governor_max_stride =
             a.usize_or("governor-max-stride", c.governor_max_stride as usize)? as u64;
+        c.spill_dir = a.str_opt("spill-dir").map(str::to_string);
+        c.spill_max_bytes = a.usize_or("spill-max-bytes", c.spill_max_bytes as usize)? as u64;
         if let Some(e) = a.str_opt("engine") {
             c.engine = Engine::parse(e)
                 .ok_or_else(|| Error::Invalid(format!("unknown engine '{e}'")))?;
@@ -179,6 +190,16 @@ mod tests {
         assert_eq!(c.retention_window, 6);
         assert_eq!(c.db_max_bytes, 1 << 20);
         assert_eq!(c.db_ttl_ms, 30_000);
+    }
+
+    #[test]
+    fn parses_spill_flags() {
+        let c = parse("bench --spill-dir /tmp/cold --spill-max-bytes 4096");
+        assert_eq!(c.spill_dir.as_deref(), Some("/tmp/cold"));
+        assert_eq!(c.spill_max_bytes, 4096);
+        // Off by default — the seed's discard-on-evict behavior.
+        let c = RunConfig::default();
+        assert_eq!((c.spill_dir, c.spill_max_bytes), (None, 0));
     }
 
     #[test]

@@ -12,11 +12,17 @@
 //! * [`cluster`] — redis-cluster-style hash-slot sharding used by the
 //!   *clustered* deployment (Fig 2, right panels; Fig 5b sharded DB).
 
+//! * [`spill`] — optional spill-to-disk cold tier: retention victims are
+//!   appended to a CRC-checksummed segment log and stay replayable
+//!   (`ColdGet`/`ColdList`) after eviction.
+
 pub mod cluster;
 pub mod engine;
 pub mod server;
+pub mod spill;
 pub mod store;
 
 pub use engine::Engine;
 pub use server::{DbServer, ServerConfig};
+pub use spill::SpillConfig;
 pub use store::{parse_step_key, RetentionConfig, Store};

@@ -33,6 +33,7 @@ use std::time::Duration;
 
 use crate::ai::ModelRuntime;
 use crate::db::engine::{CommandGate, Engine};
+use crate::db::spill::SpillConfig;
 use crate::db::store::{RetentionConfig, Store};
 use crate::error::{Error, Result};
 use crate::proto::frame::{read_frame_into, FrameSink};
@@ -78,6 +79,12 @@ pub struct ServerConfig {
     /// [`crate::db::store`]); adjustable at runtime via
     /// `Request::Retention`.  Defaults to unbounded (the seed behavior).
     pub retention: RetentionConfig,
+    /// Optional spill-to-disk cold tier: retention victims are appended to
+    /// a segment log under this config's directory and stay readable via
+    /// `ColdGet`/`ColdList` (see [`crate::db::spill`]).  Server-local —
+    /// not adjustable over the wire.  `None` (the default) discards
+    /// evicted data, the pre-spill behavior.
+    pub spill: Option<SpillConfig>,
     /// Read timeout on connection sockets — bounds how long an idle
     /// connection thread takes to notice shutdown (defaults documented on
     /// `CONN_READ_TIMEOUT`).
@@ -95,6 +102,7 @@ impl Default for ServerConfig {
             cores: 8,
             with_models: true,
             retention: RetentionConfig::UNBOUNDED,
+            spill: None,
             conn_read_timeout: CONN_READ_TIMEOUT,
             accept_backoff_max: ACCEPT_BACKOFF_MAX,
         }
@@ -128,6 +136,11 @@ impl DbServer {
         let listener = TcpListener::bind(config.addr)?;
         let addr = listener.local_addr()?;
         let store = Arc::new(Store::new());
+        // Spill first, so the very first window retirement already lands
+        // in the cold tier (opening also crash-recovers an existing log).
+        if let Some(spill) = &config.spill {
+            store.set_spill(Some(spill.clone()))?;
+        }
         if !config.retention.is_unbounded() {
             store.set_retention(config.retention);
         }
@@ -215,6 +228,11 @@ impl DbServer {
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
         }
+        // Drain the spill writer before teardown: every record the
+        // retention pipeline enqueued is on disk when shutdown returns, so
+        // a clean exit never loses queued cold-tier data (no-op without a
+        // spill config).
+        self.store.spill_sync();
     }
 }
 
@@ -491,11 +509,22 @@ pub fn execute(
             store.set_retention(RetentionConfig { window, max_bytes, ttl_ms });
             Response::Ok
         }
+        Request::ColdList { prefix } => Response::Keys(store.cold_list(&prefix)),
+        Request::ColdGet { key } => match store.cold_get(&key) {
+            Ok(t) => Response::Tensor(t),
+            Err(Error::KeyNotFound(_)) => Response::NotFound,
+            Err(e) => Response::Error(e.to_string()),
+        },
         Request::Info => {
             // Opportunistic TTL sweep: stalled producers are reclaimed even
             // when no other field is writing into their index shard (no-op
             // unless a TTL policy is active).
             store.expire_ttl();
+            // Spill barrier: every eviction that happened-before this INFO
+            // is durable and counted, so the reply's spill counters are
+            // exact rather than racing the writer thread (no-op without a
+            // cold tier).
+            store.spill_sync();
             let retention = store.retention();
             // The codec rejects field lists over MAX_BATCH; keep the reply
             // decodable for pathological field counts by reporting the
@@ -507,6 +536,8 @@ pub fn execute(
                 fields.truncate(crate::proto::MAX_BATCH);
                 fields.sort_by(|a, b| a.field.cmp(&b.field));
             }
+            let (spilled_keys, spilled_bytes, spill_segments, cold_hits, spill_lost_keys) =
+                store.spill_counters();
             Response::Info(DbInfo {
                 keys: store.n_keys(),
                 bytes: store.n_bytes(),
@@ -520,6 +551,11 @@ pub fn execute(
                 retention_window: retention.window,
                 retention_max_bytes: retention.max_bytes,
                 retention_ttl_ms: retention.ttl_ms,
+                spilled_keys,
+                spilled_bytes,
+                spill_segments,
+                cold_hits,
+                spill_lost_keys,
                 engine: engine.name().to_string(),
                 fields,
             })

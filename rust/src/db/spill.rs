@@ -1,0 +1,1251 @@
+//! Spill-to-disk cold tier: an append-only, CRC-checksummed segment log
+//! that receives every tensor the retention pipeline retires, so bounded-
+//! memory runs can replay evicted generations later (post-hoc analysis,
+//! offline re-training) without holding them resident.
+//!
+//! # On-disk format
+//!
+//! The spill directory holds one subdirectory per *group* (the step-key
+//! field, or the `__untracked` catch-all for keys outside the framework
+//! scheme), each containing numbered segment files:
+//!
+//! ```text
+//! <spill_dir>/<group>/seg-00000000.spill
+//! segment := header | record*
+//! header  := b"SITUSEG1" | u32-LE version(1) | u32-LE reserved(0)
+//! record  := u32-LE RECORD_MAGIC | u32-LE body_len | u32-LE crc32(body) | body
+//! body    := u32-LE key_len | key bytes
+//!          | u8 dtype | u8 ndim | u32-LE dims[ndim]
+//!          | u64-LE payload_len | payload bytes
+//! ```
+//!
+//! Every record is individually framed and checksummed, so replay can
+//! always tell a complete record from a torn or corrupted one:
+//!
+//! * a **truncated tail** (the writer crashed mid-append) replays as the
+//!   valid prefix; reopening the group truncates the file back to the last
+//!   complete record and appends resume from there, never clobbering
+//!   surviving data;
+//! * a **corrupted record** (length smash, payload bitflip) fails its CRC
+//!   or bounds check and replay stops at the last valid record of that
+//!   segment — framing is length-prefixed, so bytes after a bad length
+//!   field cannot be trusted and are skipped, never mis-decoded into a
+//!   torn tensor;
+//! * none of these cases panic or hang — corruption surfaces as a clean
+//!   `Err` from [`replay_segment`] / a `torn` flag, and the tier keeps
+//!   serving every record that did survive.
+//!
+//! # Hot-path discipline
+//!
+//! The store never writes a spill record inline with a put: eviction hands
+//! the retired tensor (a refcount bump on its shared [`Bytes`] payload —
+//! no copy) to a dedicated writer thread over a channel, and that thread
+//! serializes records with the payload written straight from the shared
+//! buffer.  The queue is byte-budgeted ([`default_pending_bytes`],
+//! `SITU_SPILL_PENDING_BYTES`): if the writer falls behind the eviction
+//! rate, further victims are shed (counted in `backlog_dropped`) rather
+//! than pinning evicted payloads in memory against the store's byte cap.
+//! Readers (`ColdGet`/`ColdList`, `INFO`) synchronize with the writer via
+//! [`Store::spill_sync`](crate::db::store::Store::spill_sync) before
+//! touching the log, so governed put throughput stays within noise of a
+//! spill-off store (`fig_spill` measures this).
+//!
+//! Segments rotate at [`SpillConfig::segment_bytes`] (override the default
+//! with `SITU_SPILL_SEGMENT_BYTES`; CI runs the recovery tests with tiny
+//! segments to exercise rotation).  With `max_bytes > 0`, oldest *sealed*
+//! segments are deleted once the tier exceeds the cap — the cold tier is a
+//! bounded archive, not an unbounded disk leak.
+//!
+//! The spill path is deliberately *not* part of [`RetentionConfig`]'s wire
+//! surface: the numeric retention policy is broadcast to servers at
+//! runtime (`Request::Retention`), while a spill directory is a
+//! server-local resource configured at deployment time (`RunConfig
+//! --spill-dir` → `DeploymentPlan` → [`ServerConfig`]'s `spill`).
+//!
+//! [`Bytes`]: crate::tensor::Bytes
+//! [`RetentionConfig`]: crate::db::store::RetentionConfig
+//! [`ServerConfig`]: crate::db::server::ServerConfig
+
+use std::collections::{HashMap, VecDeque};
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::tensor::{Bytes, DType, Tensor};
+
+/// 8-byte magic opening every segment file.
+pub const SEGMENT_MAGIC: [u8; 8] = *b"SITUSEG1";
+/// Segment format version (bumped on layout changes).
+pub const SEGMENT_VERSION: u32 = 1;
+/// Segment header length: magic + version + reserved.
+pub const SEGMENT_HEADER_LEN: u64 = 16;
+/// Per-record magic; a replay that lands off a record boundary fails this
+/// check instead of mis-decoding arbitrary bytes.
+pub const RECORD_MAGIC: u32 = 0x3153_5053; // "SPS1" little-endian
+/// Record framing overhead: magic + body_len + crc.
+pub const RECORD_HEADER_LEN: u64 = 12;
+/// Hard cap on a record body, mirroring the wire frame cap: a corrupted
+/// length field can never drive a multi-gigabyte allocation.
+pub const MAX_RECORD_BODY: usize = crate::proto::MAX_FRAME;
+
+/// Default segment rotation threshold when `SITU_SPILL_SEGMENT_BYTES` is
+/// not set.
+pub const DEFAULT_SEGMENT_BYTES: u64 = 64 << 20;
+
+/// Segment rotation threshold: `SITU_SPILL_SEGMENT_BYTES` override or the
+/// 64 MiB default.  Tests and CI set a tiny value so rotation and
+/// multi-segment replay are exercised constantly.
+pub fn default_segment_bytes() -> u64 {
+    std::env::var("SITU_SPILL_SEGMENT_BYTES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|b| *b > 0)
+        .unwrap_or(DEFAULT_SEGMENT_BYTES)
+}
+
+/// Default budget for payload bytes queued to the writer thread.
+pub const DEFAULT_PENDING_BYTES: u64 = 256 << 20;
+
+/// In-flight spill queue budget: `SITU_SPILL_PENDING_BYTES` override
+/// (0 = unbounded) or the 256 MiB default.  When the writer thread falls
+/// behind the eviction rate by more than this, further victims are
+/// dropped (counted) instead of pinning evicted payloads in memory.
+pub fn default_pending_bytes() -> u64 {
+    std::env::var("SITU_SPILL_PENDING_BYTES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_PENDING_BYTES)
+}
+
+/// Configuration of one store's cold tier.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpillConfig {
+    /// Directory holding this instance's segment log.  Each database
+    /// instance needs its own directory (the deployment plan derives
+    /// per-instance subdirectories from `--spill-dir`).
+    pub dir: PathBuf,
+    /// Byte cap on the whole cold tier (0 = unbounded): once exceeded,
+    /// oldest sealed segments are deleted, oldest first.
+    pub max_bytes: u64,
+    /// Segment rotation threshold; a segment may exceed it by at most one
+    /// record (records never split across segments).
+    pub segment_bytes: u64,
+}
+
+impl SpillConfig {
+    /// Config with the default (env-overridable) segment size and no cap.
+    pub fn new(dir: impl Into<PathBuf>) -> SpillConfig {
+        SpillConfig { dir: dir.into(), max_bytes: 0, segment_bytes: default_segment_bytes() }
+    }
+}
+
+// --- CRC32 (IEEE) ------------------------------------------------------------
+
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = build_crc_table();
+
+/// Streaming CRC32 (IEEE 802.3), fed slice by slice so record checksums
+/// cover header-and-payload without concatenating them.
+pub struct Crc32(u32);
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32(0xFFFF_FFFF)
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        let mut c = self.0;
+        for &b in data {
+            c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.0 = c;
+    }
+
+    pub fn finish(&self) -> u32 {
+        self.0 ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot CRC32 of a single slice.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(data);
+    c.finish()
+}
+
+// --- record codec ------------------------------------------------------------
+
+/// Encode everything of a record body except the payload bytes (the caller
+/// streams the payload from its owning buffer, mirroring the wire path's
+/// split-frame writes).
+fn encode_body_head(buf: &mut Vec<u8>, key: &str, t: &Tensor) {
+    buf.extend_from_slice(&(key.len() as u32).to_le_bytes());
+    buf.extend_from_slice(key.as_bytes());
+    buf.push(t.dtype.tag());
+    buf.push(t.shape.len() as u8);
+    for d in &t.shape {
+        buf.extend_from_slice(&(*d as u32).to_le_bytes());
+    }
+    buf.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+}
+
+fn body_len(key: &str, t: &Tensor) -> usize {
+    4 + key.len() + 1 + 1 + 4 * t.shape.len() + 8 + t.data.len()
+}
+
+/// Total on-disk size of one record.
+pub fn record_wire_size(key: &str, t: &Tensor) -> u64 {
+    RECORD_HEADER_LEN + body_len(key, t) as u64
+}
+
+/// Decode one record body (everything after the 12-byte record header).
+/// The tensor payload is a zero-copy view into `body`.
+fn decode_body(body: &Bytes) -> Result<(String, Tensor)> {
+    let b = body.as_slice();
+    let err = |m: &str| Error::Protocol(format!("spill record: {m}"));
+    let mut i = 0usize;
+    let take = |i: &mut usize, n: usize| -> Result<std::ops::Range<usize>> {
+        let r = *i..*i + n;
+        if r.end > b.len() {
+            return Err(Error::Protocol("spill record: truncated body".into()));
+        }
+        *i = r.end;
+        Ok(r)
+    };
+    let key_len = u32::from_le_bytes(b[take(&mut i, 4)?].try_into().unwrap()) as usize;
+    if key_len > b.len() {
+        return Err(err("key length exceeds body"));
+    }
+    let key = String::from_utf8(b[take(&mut i, key_len)?].to_vec())
+        .map_err(|_| err("key is not utf8"))?;
+    let dtype = DType::from_tag(b[take(&mut i, 1)?][0])?;
+    let ndim = b[take(&mut i, 1)?][0] as usize;
+    if ndim > 16 {
+        return Err(err("ndim too large"));
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(u32::from_le_bytes(b[take(&mut i, 4)?].try_into().unwrap()) as usize);
+    }
+    let payload_len = u64::from_le_bytes(b[take(&mut i, 8)?].try_into().unwrap()) as usize;
+    if payload_len > MAX_RECORD_BODY {
+        return Err(err("payload too large"));
+    }
+    let payload = take(&mut i, payload_len)?;
+    if i != b.len() {
+        return Err(err("trailing bytes after payload"));
+    }
+    let t = Tensor { dtype, shape, data: body.slice(payload) };
+    t.validate()?;
+    Ok((key, t))
+}
+
+/// Read one record at the reader's current position.  `Ok(None)` on a
+/// clean EOF exactly at a record boundary; `Err` on anything torn,
+/// corrupted, or oversized — never a panic, hang, or unbounded allocation.
+pub fn read_record<R: Read>(r: &mut R) -> Result<Option<(String, Tensor, u64)>> {
+    let mut header = [0u8; RECORD_HEADER_LEN as usize];
+    let n = read_up_to(r, &mut header)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if n < header.len() {
+        return Err(Error::Protocol("spill record: truncated header".into()));
+    }
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != RECORD_MAGIC {
+        return Err(Error::Protocol("spill record: bad magic".into()));
+    }
+    let body_len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
+    if body_len > MAX_RECORD_BODY {
+        return Err(Error::Protocol(format!("spill record: body of {body_len} bytes")));
+    }
+    let want_crc = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    let mut body = vec![0u8; body_len];
+    if read_up_to(r, &mut body)? < body_len {
+        return Err(Error::Protocol("spill record: truncated body".into()));
+    }
+    if crc32(&body) != want_crc {
+        return Err(Error::Protocol("spill record: crc mismatch".into()));
+    }
+    let (key, tensor) = decode_body(&Bytes::from_vec(body))?;
+    Ok(Some((key, tensor, RECORD_HEADER_LEN + body_len as u64)))
+}
+
+/// `read` until `buf` is full or EOF; returns bytes read (EOF mid-buffer is
+/// the caller's torn-record signal, not an io error).
+fn read_up_to<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<usize> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => break,
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    Ok(filled)
+}
+
+/// One replayed record and where it lives in its segment.
+#[derive(Debug, Clone)]
+pub struct SpillRecord {
+    pub key: String,
+    pub tensor: Tensor,
+    /// Byte offset of the record header within its segment file.
+    pub offset: u64,
+}
+
+/// Result of replaying one segment file.
+#[derive(Debug)]
+pub struct SegmentReplay {
+    /// The valid record prefix, in append order.
+    pub records: Vec<SpillRecord>,
+    /// Offset just past the last valid record — the crash-recovery
+    /// truncation point for the active segment.
+    pub valid_end: u64,
+    /// Whether bytes beyond `valid_end` existed (torn tail or corruption);
+    /// those bytes are unreachable once a record fails to frame.
+    pub torn: bool,
+}
+
+/// Replay one segment: validate the header, then decode records until the
+/// first torn/corrupt one.  Errors only on file-level problems (unreadable
+/// file, not a spill segment); in-stream corruption is reported via the
+/// `torn` flag with the surviving prefix, never a panic.
+pub fn replay_segment(path: &Path) -> Result<SegmentReplay> {
+    let file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = std::io::BufReader::new(file);
+    let mut header = [0u8; SEGMENT_HEADER_LEN as usize];
+    if read_up_to(&mut r, &mut header)? < header.len() {
+        return Err(Error::Protocol(format!(
+            "{}: too short to be a spill segment",
+            path.display()
+        )));
+    }
+    if header[0..8] != SEGMENT_MAGIC {
+        return Err(Error::Protocol(format!("{}: bad segment magic", path.display())));
+    }
+    let version = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    if version != SEGMENT_VERSION {
+        return Err(Error::Protocol(format!(
+            "{}: unsupported segment version {version}",
+            path.display()
+        )));
+    }
+    let mut records = Vec::new();
+    let mut valid_end = SEGMENT_HEADER_LEN;
+    let mut torn = false;
+    loop {
+        match read_record(&mut r) {
+            Ok(Some((key, tensor, len))) => {
+                records.push(SpillRecord { key, tensor, offset: valid_end });
+                valid_end += len;
+            }
+            Ok(None) => break,
+            Err(_) => {
+                torn = true;
+                break;
+            }
+        }
+    }
+    Ok(SegmentReplay { records, valid_end, torn: torn || valid_end < file_len })
+}
+
+/// Segment files of a group directory, sorted by segment id.
+fn list_segments(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut segs = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(id) = name
+            .strip_prefix("seg-")
+            .and_then(|s| s.strip_suffix(".spill"))
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            segs.push((id, entry.path()));
+        }
+    }
+    segs.sort_by_key(|(id, _)| *id);
+    Ok(segs)
+}
+
+fn segment_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("seg-{id:08}.spill"))
+}
+
+/// A sealed (no longer appended-to) segment — the unit the cold byte cap
+/// deletes, oldest first.
+#[derive(Debug, Clone)]
+pub struct SealedSegment {
+    pub path: Arc<PathBuf>,
+    pub bytes: u64,
+}
+
+/// Recovery summary from opening a group directory.
+#[derive(Debug, Default)]
+pub struct GroupRecovery {
+    /// Sealed segments found on disk (everything but the active one), in
+    /// id order, with their sizes.
+    pub sealed: Vec<SealedSegment>,
+    /// Valid records replayed across all segments.
+    pub replayed_records: u64,
+    /// Segments whose tail was torn or corrupted (their invalid suffix was
+    /// skipped; the active segment's was truncated away).
+    pub torn_segments: u64,
+}
+
+/// The per-field (per-group) append handle: owns the active segment file
+/// and rotates it at the configured size.
+pub struct SpillWriter {
+    dir: PathBuf,
+    segment_bytes: u64,
+    seg_id: u64,
+    path: Arc<PathBuf>,
+    file: BufWriter<File>,
+    /// Bytes in the active segment, header included.
+    written: u64,
+    scratch: Vec<u8>,
+}
+
+impl SpillWriter {
+    /// Open (or create) a group directory, replaying every segment in id
+    /// order.  Each valid record is handed to `on_record`; the active
+    /// (last) segment is truncated back to its last valid record so
+    /// appends resume without clobbering survivors.
+    pub fn open(
+        dir: &Path,
+        segment_bytes: u64,
+        mut on_record: impl FnMut(&Arc<PathBuf>, SpillRecord),
+    ) -> Result<(SpillWriter, GroupRecovery)> {
+        std::fs::create_dir_all(dir)?;
+        let mut recovery = GroupRecovery::default();
+        let segs = list_segments(dir)?;
+        let mut active: Option<(u64, Arc<PathBuf>, u64)> = None;
+        for (i, (id, path)) in segs.iter().enumerate() {
+            let last = i + 1 == segs.len();
+            let path = Arc::new(path.clone());
+            match replay_segment(&path) {
+                Ok(replay) => {
+                    recovery.replayed_records += replay.records.len() as u64;
+                    if replay.torn {
+                        recovery.torn_segments += 1;
+                    }
+                    for rec in replay.records {
+                        on_record(&path, rec);
+                    }
+                    if last {
+                        if replay.torn {
+                            // Crash recovery: drop the torn tail so the next
+                            // append lands on a record boundary.
+                            let f = OpenOptions::new().write(true).open(&*path)?;
+                            f.set_len(replay.valid_end)?;
+                        }
+                        active = Some((*id, path, replay.valid_end));
+                    } else {
+                        recovery.sealed.push(SealedSegment {
+                            bytes: std::fs::metadata(&*path)?.len(),
+                            path,
+                        });
+                    }
+                }
+                Err(_) => {
+                    // Not a decodable segment at all (foreign file, smashed
+                    // header).  Never delete data we cannot parse: the file
+                    // is quarantined in place — counted as torn, excluded
+                    // from the cap's victim queue (so `enforce_cap` can
+                    // never remove it) — and appends go elsewhere.
+                    recovery.torn_segments += 1;
+                    if last {
+                        active = None;
+                    }
+                }
+            }
+        }
+        let writer = match active {
+            Some((id, path, end)) => {
+                let mut f = OpenOptions::new().write(true).open(&*path)?;
+                f.seek(SeekFrom::Start(end))?;
+                SpillWriter {
+                    dir: dir.to_path_buf(),
+                    segment_bytes,
+                    seg_id: id,
+                    path,
+                    file: BufWriter::new(f),
+                    written: end,
+                    scratch: Vec::new(),
+                }
+            }
+            None => {
+                let next_id = segs.last().map(|(id, _)| id + 1).unwrap_or(0);
+                Self::create_segment(dir, segment_bytes, next_id)?
+            }
+        };
+        Ok((writer, recovery))
+    }
+
+    fn create_segment(dir: &Path, segment_bytes: u64, id: u64) -> Result<SpillWriter> {
+        let path = segment_path(dir, id);
+        let mut f = BufWriter::new(
+            OpenOptions::new().write(true).create(true).truncate(true).open(&path)?,
+        );
+        f.write_all(&SEGMENT_MAGIC)?;
+        f.write_all(&SEGMENT_VERSION.to_le_bytes())?;
+        f.write_all(&0u32.to_le_bytes())?;
+        Ok(SpillWriter {
+            dir: dir.to_path_buf(),
+            segment_bytes,
+            seg_id: id,
+            path: Arc::new(path),
+            file: f,
+            written: SEGMENT_HEADER_LEN,
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Append one record.  The payload is written straight from the
+    /// tensor's shared buffer (no copy); the record lands in the *current*
+    /// segment, then the segment rotates if it crossed the size threshold.
+    /// Returns the record's location and, when rotation happened, the
+    /// segment just sealed.
+    pub fn append(&mut self, key: &str, t: &Tensor) -> Result<AppendOutcome> {
+        // Refuse records replay would refuse: writing one would poison the
+        // segment (replay stops at it, losing every later record).  This
+        // check writes nothing, so the segment stays clean.
+        if body_len(key, t) > MAX_RECORD_BODY {
+            return Err(Error::Invalid(format!(
+                "spill record for '{key}' exceeds the {MAX_RECORD_BODY}-byte body cap"
+            )));
+        }
+        self.scratch.clear();
+        encode_body_head(&mut self.scratch, key, t);
+        let body = self.scratch.len() + t.data.len();
+        let mut crc = Crc32::new();
+        crc.update(&self.scratch);
+        crc.update(&t.data);
+        let mut header = [0u8; RECORD_HEADER_LEN as usize];
+        header[0..4].copy_from_slice(&RECORD_MAGIC.to_le_bytes());
+        header[4..8].copy_from_slice(&(body as u32).to_le_bytes());
+        header[8..12].copy_from_slice(&crc.finish().to_le_bytes());
+        let offset = self.written;
+        self.file.write_all(&header)?;
+        self.file.write_all(&self.scratch)?;
+        self.file.write_all(&t.data)?;
+        let record_bytes = RECORD_HEADER_LEN + body as u64;
+        self.written += record_bytes;
+        let mut outcome = AppendOutcome {
+            path: Arc::clone(&self.path),
+            offset,
+            record_bytes,
+            sealed: None,
+        };
+        if self.written >= self.segment_bytes {
+            outcome.sealed = Some(self.rotate()?);
+        }
+        Ok(outcome)
+    }
+
+    /// Seal the active segment and open the next one.
+    fn rotate(&mut self) -> Result<SealedSegment> {
+        self.file.flush()?;
+        let sealed = SealedSegment { path: Arc::clone(&self.path), bytes: self.written };
+        let next = Self::create_segment(&self.dir, self.segment_bytes, self.seg_id + 1)?;
+        *self = next;
+        Ok(sealed)
+    }
+
+    /// Abandon the active segment after a *failed* append: the file may
+    /// hold a partial record at its tail and this writer's offset no
+    /// longer matches the file, so appending further would corrupt the
+    /// framing of everything behind the tear.  Seal the segment as-is
+    /// (replay stops cleanly at the partial record) and continue on a
+    /// fresh one.
+    pub fn abandon_segment(&mut self) -> Result<SealedSegment> {
+        let _ = self.file.flush(); // best effort; the tail is already torn
+        let sealed = SealedSegment { path: Arc::clone(&self.path), bytes: self.written };
+        let next = Self::create_segment(&self.dir, self.segment_bytes, self.seg_id + 1)?;
+        *self = next;
+        Ok(sealed)
+    }
+
+    /// Flush buffered records to the OS so readers see them.
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush().map_err(Error::Io)
+    }
+
+    /// Path of the active segment.
+    pub fn active_segment(&self) -> &Arc<PathBuf> {
+        &self.path
+    }
+
+    /// Bytes in the active segment (header included).
+    pub fn active_bytes(&self) -> u64 {
+        self.written
+    }
+}
+
+/// Where an [`SpillWriter::append`] landed.
+#[derive(Debug)]
+pub struct AppendOutcome {
+    pub path: Arc<PathBuf>,
+    pub offset: u64,
+    pub record_bytes: u64,
+    /// Set when this append pushed the segment over its threshold.
+    pub sealed: Option<SealedSegment>,
+}
+
+// --- shared (reader-visible) state -------------------------------------------
+
+/// Lifetime counters of one store's cold tier (exposed via `INFO`).
+#[derive(Debug, Default)]
+pub struct SpillStats {
+    /// Records appended to the log.
+    pub spilled_keys: AtomicU64,
+    /// Tensor payload bytes appended.
+    pub spilled_bytes: AtomicU64,
+    /// Segment files currently on disk.
+    pub segments: AtomicU64,
+    /// Cold reads served (`ColdGet` hits).
+    pub cold_hits: AtomicU64,
+    /// Segments found torn or corrupted at replay (their invalid suffix
+    /// was skipped; the active segment's was truncated away).
+    pub torn_segments: AtomicU64,
+    /// Sealed segments deleted by the cold byte cap.
+    pub dropped_segments: AtomicU64,
+    /// Appends that failed with an I/O error (the victim is gone from both
+    /// tiers; surfaced so operators notice a sick disk).
+    pub write_errors: AtomicU64,
+    /// Victims dropped because the in-flight spill queue exceeded its byte
+    /// budget (the writer thread fell behind the eviction rate) — the tier
+    /// degrades by shedding history instead of pinning evicted payloads in
+    /// memory and defeating the store's byte cap.
+    pub backlog_dropped: AtomicU64,
+}
+
+#[derive(Clone)]
+struct ColdLoc {
+    path: Arc<PathBuf>,
+    offset: u64,
+}
+
+#[derive(Default)]
+struct ColdIndex {
+    /// Newest cold record per key.
+    locs: HashMap<String, ColdLoc>,
+    /// Per-group (field) spill counters, merged into `FieldPressure`.
+    groups: HashMap<String, (u64, u64)>,
+}
+
+/// State shared between the writer thread and readers: the cold index and
+/// the stats counters.
+pub struct SpillShared {
+    pub stats: SpillStats,
+    index: Mutex<ColdIndex>,
+    /// Records enqueued since the last completed barrier (see
+    /// [`SpillShared::mark_dirty`]).
+    dirty: std::sync::atomic::AtomicBool,
+    /// Serializes barriers so a clean dirty check can never short-circuit
+    /// past another reader's in-flight sync.
+    sync_lock: Mutex<()>,
+    /// Payload bytes currently queued to the writer thread, and the budget
+    /// they may not exceed (see [`SpillShared::try_reserve_pending`]).
+    pending_bytes: AtomicU64,
+    pending_cap: u64,
+}
+
+impl SpillShared {
+    fn new() -> SpillShared {
+        SpillShared {
+            stats: SpillStats::default(),
+            index: Mutex::new(ColdIndex::default()),
+            dirty: std::sync::atomic::AtomicBool::new(false),
+            sync_lock: Mutex::new(()),
+            pending_bytes: AtomicU64::new(0),
+            pending_cap: default_pending_bytes(),
+        }
+    }
+
+    /// Keys resident in the cold tier with the given prefix, sorted.
+    pub fn list(&self, prefix: &str) -> Vec<String> {
+        let idx = self.index.lock().unwrap();
+        let mut out: Vec<String> =
+            idx.locs.keys().filter(|k| k.starts_with(prefix)).cloned().collect();
+        out.sort();
+        out
+    }
+
+    /// Read a key's newest cold record back, verifying its checksum.
+    ///
+    /// Any failure to produce the record — segment deleted by the cold
+    /// byte cap between the index lookup and the open (the cap purges the
+    /// index, but this reader may hold a pre-purge location), torn or
+    /// corrupt bytes at the offset — degrades to a clean `KeyNotFound`
+    /// *miss*, never a hard error: callers' fallback semantics (skip the
+    /// generation) must keep working under a live cap.
+    pub fn read(&self, key: &str) -> Result<Tensor> {
+        let loc = {
+            let idx = self.index.lock().unwrap();
+            idx.locs.get(key).cloned()
+        }
+        .ok_or_else(|| Error::KeyNotFound(key.to_string()))?;
+        match read_at(&loc, key) {
+            Ok(tensor) => {
+                self.stats.cold_hits.fetch_add(1, Ordering::Relaxed);
+                Ok(tensor)
+            }
+            Err(_) => Err(Error::KeyNotFound(key.to_string())),
+        }
+    }
+
+    /// Per-field spill counters `(field, spilled_keys, spilled_bytes)`,
+    /// sorted by field name.
+    pub fn field_counters(&self) -> Vec<(String, u64, u64)> {
+        let idx = self.index.lock().unwrap();
+        let mut out: Vec<(String, u64, u64)> =
+            idx.groups.iter().map(|(g, (k, b))| (g.clone(), *k, *b)).collect();
+        out.sort();
+        out
+    }
+
+    fn record_append(&self, group: &str, key: &str, payload_bytes: u64, loc: ColdLoc) {
+        let mut idx = self.index.lock().unwrap();
+        idx.locs.insert(key.to_string(), loc);
+        let g = idx.groups.entry(group.to_string()).or_default();
+        g.0 += 1;
+        g.1 += payload_bytes;
+        self.stats.spilled_keys.fetch_add(1, Ordering::Relaxed);
+        self.stats.spilled_bytes.fetch_add(payload_bytes, Ordering::Relaxed);
+    }
+
+    /// Drop every index entry living in `path` (the segment was deleted).
+    fn purge_segment(&self, path: &Arc<PathBuf>) {
+        let mut idx = self.index.lock().unwrap();
+        idx.locs.retain(|_, loc| !Arc::ptr_eq(&loc.path, path));
+    }
+
+    /// Flag raised by the store when it enqueues a record, cleared by a
+    /// completed barrier — lets back-to-back cold reads skip the writer
+    /// round trip when nothing changed since the last sync.
+    pub(crate) fn mark_dirty(&self) {
+        self.dirty.store(true, Ordering::SeqCst);
+    }
+
+    /// Read-side barrier: when records were enqueued since the last
+    /// completed barrier, send a sync marker and wait for the writer
+    /// thread to flush everything ahead of it.  Barriers serialize on
+    /// `sync_lock`, so a caller that observes a clean flag is guaranteed
+    /// the last dirtying record is already durable (it can never
+    /// short-circuit past a sync still in flight on another thread);
+    /// clean back-to-back cold reads skip the round trip entirely.
+    pub(crate) fn barrier(&self, tx: &mpsc::Sender<SpillMsg>) {
+        let _serialize = self.sync_lock.lock().unwrap();
+        if !self.dirty.swap(false, Ordering::SeqCst) {
+            return;
+        }
+        let (ack_tx, ack_rx) = mpsc::sync_channel(1);
+        if tx.send(SpillMsg::Sync(ack_tx)).is_ok() {
+            let _ = ack_rx.recv();
+        }
+    }
+
+    /// Reserve queue budget for one victim's payload before sending it to
+    /// the writer thread.  `false` means the writer has fallen behind its
+    /// byte budget and the victim must be dropped (counted in
+    /// `backlog_dropped`) — an unbounded queue would pin evicted payloads
+    /// in memory and defeat the store's byte cap.  A victim arriving at an
+    /// empty queue is always admitted, however large.
+    pub(crate) fn try_reserve_pending(&self, bytes: u64) -> bool {
+        if self.pending_cap == 0 {
+            return true;
+        }
+        let prev = self.pending_bytes.fetch_add(bytes, Ordering::SeqCst);
+        if prev > 0 && prev + bytes > self.pending_cap {
+            self.pending_bytes.fetch_sub(bytes, Ordering::SeqCst);
+            self.stats.backlog_dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
+    /// Release queue budget once the writer has processed a record.
+    pub(crate) fn release_pending(&self, bytes: u64) {
+        self.pending_bytes.fetch_sub(bytes, Ordering::SeqCst);
+    }
+}
+
+/// Open `loc` and decode the record there, verifying key and checksum.
+fn read_at(loc: &ColdLoc, key: &str) -> Result<Tensor> {
+    let mut f = File::open(&*loc.path)?;
+    f.seek(SeekFrom::Start(loc.offset))?;
+    match read_record(&mut f)? {
+        Some((got_key, tensor, _)) if got_key == key => Ok(tensor),
+        Some((got_key, _, _)) => Err(Error::Protocol(format!(
+            "cold index desync: wanted '{key}', segment holds '{got_key}'"
+        ))),
+        None => Err(Error::Protocol(format!("cold record for '{key}' vanished"))),
+    }
+}
+
+// --- the tier: writer thread + backend ---------------------------------------
+
+/// Messages from the store's eviction paths to the writer thread.
+pub(crate) enum SpillMsg {
+    /// Persist one retired tensor (payload shared by refcount, no copy).
+    Record { key: String, tensor: Tensor },
+    /// Flush every group's buffered writes, then ack — the read-side
+    /// barrier behind `Store::spill_sync`.
+    Sync(mpsc::SyncSender<()>),
+}
+
+/// Group a key spills under: its step-key field, or the untracked
+/// catch-all.  One group == one directory == one [`SpillWriter`].
+pub fn spill_group(key: &str) -> &str {
+    match crate::db::store::parse_step_key(key) {
+        Some((field, _)) => field,
+        None => "__untracked",
+    }
+}
+
+/// Filesystem-safe encoding of a group name: lowercase alphanumerics,
+/// `_`, `-` and (non-leading) `.` pass through, everything else —
+/// including uppercase letters — percent-encodes with lowercase hex.  The
+/// image contains no uppercase at all, so the mapping stays injective
+/// even on case-insensitive filesystems (macOS/Windows): two distinct
+/// fields can never share a directory.
+fn encode_group_dir(group: &str) -> String {
+    let mut out = String::with_capacity(group.len());
+    for b in group.bytes() {
+        match b {
+            b'a'..=b'z' | b'0'..=b'9' | b'_' | b'-' => out.push(b as char),
+            b'.' if !out.is_empty() => out.push('.'),
+            _ => out.push_str(&format!("%{b:02x}")),
+        }
+    }
+    if out.is_empty() {
+        out.push_str("%00empty");
+    }
+    out
+}
+
+struct Backend {
+    cfg: SpillConfig,
+    shared: Arc<SpillShared>,
+    writers: HashMap<String, SpillWriter>,
+    /// Sealed segments in creation order — the cold cap's victim queue.
+    sealed: VecDeque<SealedSegment>,
+    /// Bytes on disk across all segments, sealed and active.
+    total_bytes: u64,
+}
+
+impl Backend {
+    /// Open the tier: scan every group directory, rebuild the cold index,
+    /// and recover torn tails.
+    fn open(cfg: SpillConfig) -> Result<(Backend, Arc<SpillShared>)> {
+        std::fs::create_dir_all(&cfg.dir)?;
+        let shared = Arc::new(SpillShared::new());
+        let mut backend = Backend {
+            writers: HashMap::new(),
+            sealed: VecDeque::new(),
+            total_bytes: 0,
+            shared: Arc::clone(&shared),
+            cfg,
+        };
+        let mut group_dirs: Vec<PathBuf> = Vec::new();
+        for entry in std::fs::read_dir(&backend.cfg.dir)? {
+            let entry = entry?;
+            if entry.file_type()?.is_dir() {
+                group_dirs.push(entry.path());
+            }
+        }
+        group_dirs.sort();
+        for dir in group_dirs {
+            let (writer, recovery) = {
+                let shared = &shared;
+                SpillWriter::open(&dir, backend.cfg.segment_bytes, |path, rec| {
+                    shared.record_append(
+                        spill_group(&rec.key),
+                        &rec.key,
+                        rec.tensor.nbytes() as u64,
+                        ColdLoc { path: Arc::clone(path), offset: rec.offset },
+                    );
+                })?
+            };
+            backend.total_bytes += writer.active_bytes();
+            for s in &recovery.sealed {
+                backend.total_bytes += s.bytes;
+            }
+            shared
+                .stats
+                .segments
+                .fetch_add(1 + recovery.sealed.len() as u64, Ordering::Relaxed);
+            shared
+                .stats
+                .torn_segments
+                .fetch_add(recovery.torn_segments, Ordering::Relaxed);
+            backend.sealed.extend(recovery.sealed);
+            // Writers are keyed by (encoded) directory name; replay
+            // re-registered the resident records under their record keys.
+            let dir_name = dir
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            backend.writers.insert(dir_name, writer);
+        }
+        Self::sort_sealed_by_age(&mut backend.sealed);
+        // Enforce the cap against what restart found on disk: the tier may
+        // be over budget because the cap was lowered or data accumulated
+        // under a previous config, and waiting for the next rotation could
+        // leave it over budget indefinitely.
+        backend.enforce_cap();
+        Ok((backend, shared))
+    }
+
+    fn writer_for(&mut self, group: &str) -> Result<&mut SpillWriter> {
+        use std::collections::hash_map::Entry;
+        match self.writers.entry(encode_group_dir(group)) {
+            Entry::Occupied(e) => Ok(e.into_mut()),
+            Entry::Vacant(e) => {
+                let dir = self.cfg.dir.join(e.key());
+                let shared = Arc::clone(&self.shared);
+                let (writer, recovery) =
+                    SpillWriter::open(&dir, self.cfg.segment_bytes, |path, rec| {
+                        shared.record_append(
+                            spill_group(&rec.key),
+                            &rec.key,
+                            rec.tensor.nbytes() as u64,
+                            ColdLoc { path: Arc::clone(path), offset: rec.offset },
+                        );
+                    })?;
+                self.total_bytes += writer.active_bytes();
+                for s in &recovery.sealed {
+                    self.total_bytes += s.bytes;
+                }
+                self.shared
+                    .stats
+                    .segments
+                    .fetch_add(1 + recovery.sealed.len() as u64, Ordering::Relaxed);
+                if !recovery.sealed.is_empty() {
+                    // A lazily-opened group can bring recovered (old)
+                    // sealed segments; merge them by age so the cap's
+                    // victim order stays oldest-first.
+                    self.sealed.extend(recovery.sealed);
+                    Self::sort_sealed_by_age(&mut self.sealed);
+                }
+                Ok(e.insert(writer))
+            }
+        }
+    }
+
+    fn append(&mut self, key: &str, tensor: &Tensor) -> Result<()> {
+        let group = spill_group(key).to_string();
+        let outcome = match self.writer_for(&group)?.append(key, tensor) {
+            Ok(o) => o,
+            // `Invalid` is the writer's size-cap rejection, raised before
+            // any byte is written — the segment is still clean.
+            Err(e @ Error::Invalid(_)) => return Err(e),
+            Err(e) => {
+                // An I/O failure may leave a partial record at the tail
+                // and a writer whose offset no longer matches the file;
+                // sticking with it would silently corrupt every later
+                // record.  Abandon the segment (replay stops cleanly at
+                // the tear) and continue on a fresh one.
+                self.abandon_active_segment(&encode_group_dir(&group));
+                return Err(e);
+            }
+        };
+        self.total_bytes += outcome.record_bytes;
+        self.shared.record_append(
+            &group,
+            key,
+            tensor.nbytes() as u64,
+            ColdLoc { path: Arc::clone(&outcome.path), offset: outcome.offset },
+        );
+        if let Some(sealed) = outcome.sealed {
+            self.shared.stats.segments.fetch_add(1, Ordering::Relaxed);
+            self.sealed.push_back(sealed);
+        }
+        // Unconditional (cheap when under cap): also covers sealed
+        // segments a lazily-opened group just recovered from disk.
+        self.enforce_cap();
+        Ok(())
+    }
+
+    /// Seal a group's torn active segment after a failed append and move
+    /// on to a fresh one; if even creating the replacement fails, drop the
+    /// writer so the next append re-runs group recovery (re-registering
+    /// its sealed segments is tolerable double accounting on a disk that
+    /// is already failing).
+    fn abandon_active_segment(&mut self, dir_name: &str) {
+        let Some(w) = self.writers.get_mut(dir_name) else { return };
+        match w.abandon_segment() {
+            Ok(sealed) => {
+                self.shared.stats.segments.fetch_add(1, Ordering::Relaxed);
+                self.sealed.push_back(sealed);
+            }
+            Err(_) => {
+                self.writers.remove(dir_name);
+            }
+        }
+    }
+
+    /// Best-effort age ordering for the cap's victim queue across
+    /// restarts: segments are append-only, so a sealed file's mtime is its
+    /// seal time.  Without this, recovered groups would be queued in
+    /// directory-name order and the cap could delete a field's *newest*
+    /// history before another field's oldest.
+    fn sort_sealed_by_age(sealed: &mut VecDeque<SealedSegment>) {
+        let mut v: Vec<SealedSegment> = sealed.drain(..).collect();
+        v.sort_by_key(|s| {
+            std::fs::metadata(&*s.path)
+                .and_then(|m| m.modified())
+                .unwrap_or(std::time::SystemTime::UNIX_EPOCH)
+        });
+        sealed.extend(v);
+    }
+
+    /// Delete oldest sealed segments until the tier fits its byte cap.
+    fn enforce_cap(&mut self) {
+        if self.cfg.max_bytes == 0 {
+            return;
+        }
+        while self.total_bytes > self.cfg.max_bytes {
+            let Some(victim) = self.sealed.pop_front() else { break };
+            self.shared.purge_segment(&victim.path);
+            let _ = std::fs::remove_file(&*victim.path);
+            self.total_bytes = self.total_bytes.saturating_sub(victim.bytes);
+            self.shared.stats.segments.fetch_sub(1, Ordering::Relaxed);
+            self.shared.stats.dropped_segments.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn flush(&mut self) {
+        for w in self.writers.values_mut() {
+            if w.flush().is_err() {
+                self.shared.stats.write_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Open the tier and start its writer thread.  Returns the channel the
+/// store's eviction paths feed, the shared read-side state, and the thread
+/// handle (joined by `Store::set_spill`).
+pub(crate) fn spawn(
+    cfg: SpillConfig,
+) -> Result<(mpsc::Sender<SpillMsg>, Arc<SpillShared>, JoinHandle<()>)> {
+    let (mut backend, shared) = Backend::open(cfg)?;
+    let (tx, rx) = mpsc::channel::<SpillMsg>();
+    let handle = std::thread::Builder::new()
+        .name("db-spill".into())
+        .spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    SpillMsg::Record { key, tensor } => {
+                        let nbytes = tensor.nbytes() as u64;
+                        if backend.append(&key, &tensor).is_err() {
+                            backend
+                                .shared
+                                .stats
+                                .write_errors
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
+                        backend.shared.release_pending(nbytes);
+                    }
+                    SpillMsg::Sync(ack) => {
+                        backend.flush();
+                        let _ = ack.send(());
+                    }
+                }
+            }
+            // Channel closed (tier disabled or store dropped): leave a
+            // clean, fully-flushed log behind.
+            backend.flush();
+        })
+        .map_err(Error::Io)?;
+    Ok((tx, shared, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("situ_spill_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn t(vals: Vec<f32>) -> Tensor {
+        Tensor::from_f32(&[vals.len()], vals).unwrap()
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The IEEE check value: CRC32("123456789") == 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // Streaming in parts equals one-shot.
+        let mut c = Crc32::new();
+        c.update(b"1234");
+        c.update(b"56789");
+        assert_eq!(c.finish(), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn append_replay_roundtrip_byte_exact() {
+        let dir = tmp_dir("roundtrip");
+        let (mut w, rec) = SpillWriter::open(&dir, 1 << 20, |_, _| {}).unwrap();
+        assert_eq!(rec.replayed_records, 0);
+        let tensors: Vec<Tensor> =
+            (0..5).map(|i| t(vec![i as f32; 8 + i as usize])).collect();
+        for (i, tensor) in tensors.iter().enumerate() {
+            w.append(&format!("f_rank0_step{i}"), tensor).unwrap();
+        }
+        w.flush().unwrap();
+        let replay = replay_segment(w.active_segment()).unwrap();
+        assert!(!replay.torn);
+        assert_eq!(replay.records.len(), 5);
+        for (i, rec) in replay.records.iter().enumerate() {
+            assert_eq!(rec.key, format!("f_rank0_step{i}"));
+            assert_eq!(rec.tensor, tensors[i], "byte-exact payload");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_tail_is_recovered_and_appends_resume() {
+        let dir = tmp_dir("recover");
+        let path = {
+            let (mut w, _) = SpillWriter::open(&dir, 1 << 20, |_, _| {}).unwrap();
+            for i in 0..3 {
+                w.append(&format!("f_rank0_step{i}"), &t(vec![i as f32; 16])).unwrap();
+            }
+            w.flush().unwrap();
+            (**w.active_segment()).clone()
+        };
+        // Simulate a crash mid-append: chop bytes off the last record.
+        let len = std::fs::metadata(&path).unwrap().len();
+        OpenOptions::new().write(true).open(&path).unwrap().set_len(len - 7).unwrap();
+
+        let mut replayed = Vec::new();
+        let (mut w, rec) =
+            SpillWriter::open(&dir, 1 << 20, |_, r| replayed.push(r.key)).unwrap();
+        assert_eq!(rec.torn_segments, 1);
+        assert_eq!(replayed, vec!["f_rank0_step0", "f_rank0_step1"], "valid prefix only");
+        // Appends resume on a clean boundary without clobbering survivors.
+        w.append("f_rank0_step3", &t(vec![9.0; 4])).unwrap();
+        w.flush().unwrap();
+        let replay = replay_segment(&path).unwrap();
+        assert!(!replay.torn, "truncation healed the segment");
+        let keys: Vec<&str> = replay.records.iter().map(|r| r.key.as_str()).collect();
+        assert_eq!(keys, vec!["f_rank0_step0", "f_rank0_step1", "f_rank0_step3"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn segments_rotate_and_replay_in_order() {
+        let dir = tmp_dir("rotate");
+        // Tiny threshold: every record rotates.
+        let (mut w, _) = SpillWriter::open(&dir, 64, |_, _| {}).unwrap();
+        let mut sealed = 0;
+        for i in 0..4 {
+            let out = w.append(&format!("g_rank0_step{i}"), &t(vec![i as f32; 16])).unwrap();
+            if out.sealed.is_some() {
+                sealed += 1;
+            }
+        }
+        w.flush().unwrap();
+        assert_eq!(sealed, 4, "each oversized record seals its segment");
+        let segs = list_segments(&dir).unwrap();
+        assert_eq!(segs.len(), 5, "four sealed + one empty active");
+        let mut all = Vec::new();
+        for (_, p) in &segs {
+            all.extend(replay_segment(p).unwrap().records);
+        }
+        assert_eq!(all.len(), 4);
+        for (i, rec) in all.iter().enumerate() {
+            assert_eq!(rec.key, format!("g_rank0_step{i}"), "ordered across segments");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopened_writer_continues_segment_numbering() {
+        let dir = tmp_dir("renumber");
+        {
+            let (mut w, _) = SpillWriter::open(&dir, 64, |_, _| {}).unwrap();
+            w.append("k_rank0_step0", &t(vec![1.0; 16])).unwrap();
+            w.flush().unwrap();
+        }
+        let (w, rec) = SpillWriter::open(&dir, 64, |_, _| {}).unwrap();
+        assert_eq!(rec.replayed_records, 1);
+        assert_eq!(rec.sealed.len(), 1);
+        assert!(w
+            .active_segment()
+            .to_string_lossy()
+            .ends_with("seg-00000001.spill"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn group_dir_encoding_is_injective_and_safe() {
+        assert_eq!(encode_group_dir("velocity_x"), "velocity_x");
+        assert_eq!(encode_group_dir("a/b"), "a%2fb");
+        assert_eq!(encode_group_dir("a%b"), "a%25b");
+        assert_ne!(encode_group_dir("a%2fb"), encode_group_dir("a/b"));
+        assert_eq!(encode_group_dir(""), "%00empty");
+        assert_eq!(encode_group_dir(".."), "%2e.", "no path traversal");
+        // Uppercase escapes, so the image is case-canonical and the
+        // mapping stays injective on case-insensitive filesystems.
+        assert_eq!(encode_group_dir("Temp"), "%54emp");
+        assert_ne!(
+            encode_group_dir("Temp").to_lowercase(),
+            encode_group_dir("temp").to_lowercase(),
+            "no collision even after case folding"
+        );
+    }
+
+    #[test]
+    fn foreign_file_in_group_dir_is_a_clean_error() {
+        let dir = tmp_dir("foreign");
+        std::fs::write(dir.join("seg-00000000.spill"), b"not a segment at all").unwrap();
+        assert!(replay_segment(&dir.join("seg-00000000.spill")).is_err());
+        // The writer survives it: the unparseable file is sealed aside and
+        // appends go to a fresh segment.
+        let (mut w, rec) = SpillWriter::open(&dir, 1 << 20, |_, _| {}).unwrap();
+        assert_eq!(rec.torn_segments, 1);
+        w.append("x_rank0_step0", &t(vec![1.0])).unwrap();
+        w.flush().unwrap();
+        assert_eq!(replay_segment(w.active_segment()).unwrap().records.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

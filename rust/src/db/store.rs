@@ -65,12 +65,31 @@
 //! the not-yet-replaced buffer; two racing writers of the *same* key can
 //! widen that window, but the framework's key schemes give every key a
 //! single writer, and accounting reconverges to exact either way.
+//!
+//! # Spill-to-disk cold tier
+//!
+//! With [`Store::set_spill`] configured, every tensor the retention
+//! pipeline retires — window retirement, byte-cap eviction (generations
+//! *and* LRU untracked keys), and TTL expiry — is handed to the
+//! [`crate::db::spill`] writer thread instead of vanishing: the eviction
+//! path sends the removed tensor (a refcount bump on its shared payload,
+//! no copy, no disk I/O inline) over a channel, and the spill thread
+//! appends it to a CRC-checksummed segment log.  Retired data stays
+//! readable through [`Store::cold_get`]/[`Store::cold_list`] (the wire's
+//! `ColdGet`/`ColdList`).  Explicit deletes (`del`/`del_keys`) and
+//! `flush_all` do *not* spill — only the retention pipeline's victims do.
+//!
+//! The spill handle's mutex is a leaf in the lock order (`evict_gate` →
+//! index shard → data shard → spill handle): it is only ever taken to
+//! clone the channel sender / shared state, never while calling back into
+//! the store.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::db::spill::{self, SpillConfig, SpillMsg, SpillShared};
 use crate::error::{Error, Result};
 use crate::proto::message::FieldPressure;
 use crate::tensor::Tensor;
@@ -353,8 +372,23 @@ pub struct Store {
     evict_gate: Mutex<()>,
     /// Global LRU recency clock for untracked keys.
     lru_tick: AtomicU64,
+    /// Spill-to-disk cold tier (writer channel + shared read state),
+    /// present while a spill directory is configured.  Leaf lock.
+    spill: Mutex<Option<SpillHandle>>,
+    /// Lock-free "spill is on" flag checked by the eviction paths.
+    spill_on: AtomicBool,
     pub counters: Counters,
 }
+
+/// Handle on a running spill tier: the channel the eviction paths feed,
+/// the reader-visible shared state, and the writer thread to join on
+/// teardown.
+struct SpillHandle {
+    tx: mpsc::Sender<SpillMsg>,
+    shared: Arc<SpillShared>,
+    thread: std::thread::JoinHandle<()>,
+}
+
 
 impl Default for Store {
     fn default() -> Self {
@@ -397,7 +431,88 @@ impl Store {
                 .collect(),
             evict_gate: Mutex::new(()),
             lru_tick: AtomicU64::new(0),
+            spill: Mutex::new(None),
+            spill_on: AtomicBool::new(false),
             counters: Counters::default(),
+        }
+    }
+
+    /// Enable, replace, or (with `None`) disable the spill-to-disk cold
+    /// tier.  Enabling opens (and crash-recovers) the segment log under
+    /// `cfg.dir` and starts the writer thread; disabling flushes the log
+    /// and joins the thread.  Already-written segments are never deleted
+    /// by disabling — the cold tier is durable by design.
+    pub fn set_spill(&self, cfg: Option<SpillConfig>) -> Result<()> {
+        let old = { self.spill.lock().unwrap().take() };
+        self.spill_on.store(false, Ordering::SeqCst);
+        if let Some(SpillHandle { tx, thread, .. }) = old {
+            drop(tx);
+            let _ = thread.join();
+        }
+        let Some(cfg) = cfg else { return Ok(()) };
+        let (tx, shared, thread) = spill::spawn(cfg)?;
+        *self.spill.lock().unwrap() = Some(SpillHandle { tx, shared, thread });
+        self.spill_on.store(true, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// Clone the cold tier's channel + shared state, if enabled.
+    fn spill_handle(&self) -> Option<(mpsc::Sender<SpillMsg>, Arc<SpillShared>)> {
+        let g = self.spill.lock().unwrap();
+        g.as_ref().map(|h| (h.tx.clone(), Arc::clone(&h.shared)))
+    }
+
+    /// Barrier with the spill writer thread: every record the retention
+    /// pipeline retired before this call is durable (written + flushed)
+    /// when it returns.  No-op when spill is off.  The server runs this on
+    /// `INFO` and before every cold read, so counters and cold lookups are
+    /// exact rather than racing the writer.
+    pub fn spill_sync(&self) {
+        if let Some((tx, shared)) = self.spill_handle() {
+            shared.barrier(&tx);
+        }
+    }
+
+    /// Read a retired key back from the cold tier (`ColdGet`).  Strictly
+    /// the cold tier: a key still resident in memory but never evicted is
+    /// `KeyNotFound` here.
+    pub fn cold_get(&self, key: &str) -> Result<Tensor> {
+        let Some((tx, shared)) = self.spill_handle() else {
+            return Err(Error::KeyNotFound(key.to_string()));
+        };
+        shared.barrier(&tx);
+        shared.read(key)
+    }
+
+    /// Keys resident in the cold tier with the given prefix, sorted
+    /// (`ColdList`).  Empty when spill is off.
+    pub fn cold_list(&self, prefix: &str) -> Vec<String> {
+        let Some((tx, shared)) = self.spill_handle() else {
+            return Vec::new();
+        };
+        shared.barrier(&tx);
+        shared.list(prefix)
+    }
+
+    /// Global cold-tier counters `(spilled_keys, spilled_bytes, segments,
+    /// cold_hits, lost_keys)`; zeros while spill is off.  `lost_keys` is
+    /// the victims that never became durable — append I/O failures plus
+    /// backlog shedding — surfaced so silent archive loss is visible in
+    /// `INFO` rather than only at a missing `ColdGet`.
+    pub fn spill_counters(&self) -> (u64, u64, u64, u64, u64) {
+        match self.spill.lock().unwrap().as_ref() {
+            Some(h) => {
+                let s = &h.shared.stats;
+                (
+                    s.spilled_keys.load(Ordering::Relaxed),
+                    s.spilled_bytes.load(Ordering::Relaxed),
+                    s.segments.load(Ordering::Relaxed),
+                    s.cold_hits.load(Ordering::Relaxed),
+                    s.write_errors.load(Ordering::Relaxed)
+                        + s.backlog_dropped.load(Ordering::Relaxed),
+                )
+            }
+            None => (0, 0, 0, 0, 0),
         }
     }
 
@@ -723,6 +838,13 @@ impl Store {
 
     /// Remove `key` from its data shard, charging eviction counters with
     /// the actual stored size.  Returns the freed bytes.
+    ///
+    /// With the cold tier enabled the victim is handed to the spill writer
+    /// thread instead of dropped: the send moves the tensor (its shared
+    /// payload buffer travels by refcount — no copy, no disk I/O on this
+    /// path), so eviction stays as cheap as before.  Every retention path
+    /// funnels through here, which is exactly the "spill instead of
+    /// discard" guarantee; explicit deletes never do.
     fn evict_store_key(&self, key: &str, ttl: bool) -> Option<u64> {
         let removed = { self.shard(key).lock().unwrap().tensors.remove(key) };
         removed.map(|t| {
@@ -732,6 +854,24 @@ impl Store {
             self.counters.evicted_bytes.fetch_add(b, Ordering::Relaxed);
             if ttl {
                 self.counters.ttl_expired_keys.fetch_add(1, Ordering::Relaxed);
+            }
+            if self.spill_on.load(Ordering::Acquire) {
+                if let Some(h) = self.spill.lock().unwrap().as_ref() {
+                    // Budget-gated: if the writer thread has fallen behind
+                    // by more than the pending-byte budget, shed this
+                    // victim (counted) instead of pinning evicted payloads
+                    // in memory and defeating the byte cap.
+                    if h.shared.try_reserve_pending(b) {
+                        let _ = h
+                            .tx
+                            .send(SpillMsg::Record { key: key.to_string(), tensor: t });
+                        // Marked after the send and under the same mutex
+                        // the barrier clones the handle through, so a
+                        // barrier that observes the flag always finds the
+                        // record ahead of its sync marker in the channel.
+                        h.shared.mark_dirty();
+                    }
+                }
             }
             b
         })
@@ -832,8 +972,12 @@ impl Store {
     }
 
     /// Per-field pressure snapshot (resident bytes, generation count,
-    /// eviction counters), sorted by field name.  Empty when governance is
-    /// off — the index only mirrors the namespace while a policy is set.
+    /// eviction counters, spill counters), sorted by field name.  Empty
+    /// when governance is off — the index only mirrors the namespace while
+    /// a policy is set.  With the cold tier on, per-field spill counters
+    /// are merged in by field name (untracked keys spill under the
+    /// `__untracked` pseudo-field, which then appears here with zero
+    /// resident bytes).
     pub fn field_pressure(&self) -> Vec<FieldPressure> {
         let mut out = Vec::new();
         for sh in &self.index {
@@ -845,7 +989,24 @@ impl Store {
                     generations: fi.gens.len() as u64,
                     evicted_keys: fi.evicted_keys,
                     evicted_bytes: fi.evicted_bytes,
+                    ..Default::default()
                 });
+            }
+        }
+        if let Some((_, shared)) = self.spill_handle() {
+            for (field, spilled_keys, spilled_bytes) in shared.field_counters() {
+                match out.iter_mut().find(|p| p.field == field) {
+                    Some(p) => {
+                        p.spilled_keys = spilled_keys;
+                        p.spilled_bytes = spilled_bytes;
+                    }
+                    None => out.push(FieldPressure {
+                        field,
+                        spilled_keys,
+                        spilled_bytes,
+                        ..Default::default()
+                    }),
+                }
             }
         }
         out.sort_by(|a, b| a.field.cmp(&b.field));
@@ -1590,5 +1751,142 @@ mod tests {
         }
         assert_eq!(s.expire_ttl(), 0);
         assert_eq!(s.list_keys("act_").len(), 2);
+    }
+
+    // --- spill-to-disk cold tier --------------------------------------------
+
+    fn spill_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("situ_store_spill_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn window_retirement_feeds_the_cold_tier() {
+        let dir = spill_dir("window");
+        let s = Store::new();
+        s.set_spill(Some(SpillConfig::new(&dir))).unwrap();
+        s.set_retention(RetentionConfig::windowed(2, 0));
+        for step in 0..5u64 {
+            s.put_tensor(&format!("f_rank0_step{step}"), t(vec![step as f32; 8])).unwrap();
+        }
+        s.spill_sync();
+        // The three retired generations replay byte-exact from the log...
+        for step in 0..3u64 {
+            let back = s.cold_get(&format!("f_rank0_step{step}")).unwrap();
+            assert_eq!(back.to_f32().unwrap(), vec![step as f32; 8], "step {step}");
+        }
+        // ...while resident generations are hot-only.
+        assert!(matches!(s.cold_get("f_rank0_step4"), Err(Error::KeyNotFound(_))));
+        assert_eq!(
+            s.cold_list("f_"),
+            vec!["f_rank0_step0", "f_rank0_step1", "f_rank0_step2"]
+        );
+        let (keys, bytes, segments, hits, lost) = s.spill_counters();
+        assert_eq!(keys, 3);
+        assert_eq!(bytes, 3 * 32, "payload bytes, mirroring evicted_bytes");
+        assert!(segments >= 1);
+        assert_eq!(hits, 3);
+        assert_eq!(lost, 0, "nothing shed or failed");
+        // Per-field pressure carries the spill counters.
+        let p = s.field_pressure();
+        assert_eq!(p.len(), 1);
+        assert_eq!((p[0].spilled_keys, p[0].spilled_bytes), (3, 3 * 32));
+        assert_eq!(p[0].evicted_keys, 3, "spilled == evicted here");
+        s.set_spill(None).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn explicit_deletes_and_flush_do_not_spill() {
+        let dir = spill_dir("nodel");
+        let s = Store::new();
+        s.set_spill(Some(SpillConfig::new(&dir))).unwrap();
+        s.set_retention(RetentionConfig::windowed(4, 0));
+        s.put_tensor("d_rank0_step0", t(vec![1.0; 4])).unwrap();
+        s.put_tensor("d_rank0_step1", t(vec![2.0; 4])).unwrap();
+        assert!(s.del_tensor("d_rank0_step0"));
+        s.flush_all();
+        s.spill_sync();
+        assert_eq!(s.spill_counters().0, 0, "only retention victims spill");
+        assert!(s.cold_list("").is_empty());
+        s.set_spill(None).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cap_and_ttl_victims_spill_too() {
+        let dir = spill_dir("capttl");
+        let s = Store::new();
+        s.set_spill(Some(SpillConfig::new(&dir))).unwrap();
+        // LRU untracked victim under a byte cap spills under __untracked.
+        s.set_retention(RetentionConfig::windowed(0, 128));
+        s.put_tensor("loose_a", t(vec![1.0; 10])).unwrap();
+        s.put_tensor("loose_b", t(vec![2.0; 10])).unwrap();
+        s.put_tensor("loose_c", t(vec![3.0; 10])).unwrap();
+        s.put_tensor("loose_d", t(vec![4.0; 10])).unwrap(); // evicts loose_a
+        s.spill_sync();
+        assert_eq!(
+            s.cold_get("loose_a").unwrap().to_f32().unwrap(),
+            vec![1.0; 10],
+            "cap victim recoverable"
+        );
+        let p = s.field_pressure();
+        assert!(
+            p.iter().any(|f| f.field == "__untracked" && f.spilled_keys == 1),
+            "untracked spill reported: {p:?}"
+        );
+        // TTL victims spill as well.  Clear the loose keys first (explicit
+        // deletes — these never spill) so only the stalled field expires.
+        for k in ["loose_a", "loose_b", "loose_c", "loose_d"] {
+            s.del_tensor(k);
+        }
+        s.set_retention(RetentionConfig { window: 4, max_bytes: 0, ttl_ms: 100 });
+        s.put_tensor("ttlf_rank0_step0", t(vec![7.0; 6])).unwrap();
+        std::thread::sleep(Duration::from_millis(250));
+        assert_eq!(s.expire_ttl(), 1);
+        s.spill_sync();
+        assert_eq!(
+            s.cold_get("ttlf_rank0_step0").unwrap().to_f32().unwrap(),
+            vec![7.0; 6]
+        );
+        s.set_spill(None).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cold_tier_survives_restart() {
+        let dir = spill_dir("restart");
+        {
+            let s = Store::new();
+            s.set_spill(Some(SpillConfig::new(&dir))).unwrap();
+            s.set_retention(RetentionConfig::windowed(1, 0));
+            for step in 0..3u64 {
+                s.put_tensor(&format!("r_rank0_step{step}"), t(vec![step as f32; 8]))
+                    .unwrap();
+            }
+            s.set_spill(None).unwrap(); // flush + join, like a clean shutdown
+        }
+        // A fresh store over the same directory replays the log and serves
+        // the retired generations without any hot-tier state.
+        let s = Store::new();
+        s.set_spill(Some(SpillConfig::new(&dir))).unwrap();
+        assert_eq!(s.cold_list("r_"), vec!["r_rank0_step0", "r_rank0_step1"]);
+        for step in 0..2u64 {
+            let back = s.cold_get(&format!("r_rank0_step{step}")).unwrap();
+            assert_eq!(back.to_f32().unwrap(), vec![step as f32; 8]);
+        }
+        s.set_spill(None).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cold_reads_without_spill_are_clean_misses() {
+        let s = Store::new();
+        assert!(matches!(s.cold_get("anything"), Err(Error::KeyNotFound(_))));
+        assert!(s.cold_list("").is_empty());
+        assert_eq!(s.spill_counters(), (0, 0, 0, 0, 0));
+        s.spill_sync(); // no-op, must not wedge
     }
 }

@@ -66,6 +66,19 @@
 //! overwrite mode, flat by construction), and the orchestrator threads the
 //! policy from `RunConfig` through deployment to every server.
 //!
+//! ## Spill-to-disk cold tier
+//!
+//! Bounded-memory runs no longer *lose* what they evict: with a spill
+//! directory configured ([`db::SpillConfig`], `--spill-dir`), every
+//! retention victim is appended — by a background writer thread, off the
+//! put hot path — to a CRC-checksummed segment log ([`db::spill`]) and
+//! stays replayable byte-exact over the wire (`ColdGet`/`ColdList` on
+//! [`client::DataStore`]).  `DataLoader::gather_window` falls back to the
+//! cold tier transparently, so deep training windows spanning retired
+//! generations complete instead of skipping.  The log is crash-safe: torn
+//! tails truncate on reopen, corrupt records are skipped cleanly — proven
+//! by the corruption/recovery battery in `tests/spill_recovery.rs`.
+//!
 //! ## Adaptive backpressure
 //!
 //! `Error::Busy` is a flow-control signal, not a failure: the client

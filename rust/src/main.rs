@@ -65,13 +65,17 @@ USAGE: situ <command> [flags]
 
   serve            --port 7700 --engine redis|keydb --cores 8 [--no-models]
                    [--retention-window W] [--max-bytes B] [--ttl-ms T]
-                   bounded-memory store (window / byte cap / stalled-producer TTL)
+                   [--spill-dir DIR --spill-max-bytes B]
+                   bounded-memory store (window / byte cap / stalled-producer
+                   TTL) + spill-to-disk cold tier for retired generations
   info             --addr 127.0.0.1:7700   stats incl. per-field pressure
+                   and spill-to-disk cold-tier counters
   calibrate        [--artifacts DIR]   measure real costs, print CostModel
   train            [--epochs N --sim-ranks R --ml-ranks M --steps S]
                    [--window W --overwrite --retention-window W --db-max-bytes B
                     --db-ttl-ms T --busy-retries N --busy-backoff-ms MS
-                    --governor-max-stride K]   bounded-memory + backpressure knobs
+                    --governor-max-stride K --spill-dir DIR --spill-max-bytes B]
+                   bounded-memory + backpressure + cold-tier knobs
   bench-transfer   --nodes-list 1,4,16 --deployment colocated|clustered ...
   bench-inference  --nodes-list 1,4,16 --batch 4 ...
 "
@@ -82,6 +86,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let port = args.usize_or("port", 7700)? as u16;
     let engine = Engine::parse(&args.str_or("engine", "redis"))
         .ok_or_else(|| Error::Invalid("bad --engine".into()))?;
+    let spill = match args.str_opt("spill-dir") {
+        Some(dir) => Some(situ::db::SpillConfig {
+            dir: dir.into(),
+            max_bytes: args.usize_or("spill-max-bytes", 0)? as u64,
+            segment_bytes: situ::db::spill::default_segment_bytes(),
+        }),
+        None => None,
+    };
     let cfg = ServerConfig {
         addr: SocketAddr::from(([127, 0, 0, 1], port)),
         engine,
@@ -92,6 +104,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_bytes: args.usize_or("max-bytes", 0)? as u64,
             ttl_ms: args.usize_or("ttl-ms", 0)? as u64,
         },
+        spill,
         ..Default::default()
     };
     let server = DbServer::start(cfg)?;
@@ -129,6 +142,14 @@ fn cmd_info(args: &Args) -> Result<()> {
         i.retention_window,
         fmt::bytes(i.retention_max_bytes),
         i.retention_ttl_ms
+    );
+    println!(
+        "spill: keys={} bytes={} segments={} cold_hits={} lost={}",
+        i.spilled_keys,
+        fmt::bytes(i.spilled_bytes),
+        i.spill_segments,
+        i.cold_hits,
+        i.spill_lost_keys
     );
     if !i.fields.is_empty() {
         situ::telemetry::field_pressure_table(&i).print();
@@ -209,6 +230,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.retention_window = args.usize_or("retention-window", cfg.retention_window as usize)? as u64;
     cfg.db_max_bytes = args.usize_or("db-max-bytes", cfg.db_max_bytes as usize)? as u64;
     cfg.db_ttl_ms = args.usize_or("db-ttl-ms", cfg.db_ttl_ms as usize)? as u64;
+    cfg.spill_dir = args.str_opt("spill-dir").map(std::path::PathBuf::from);
+    cfg.spill_max_bytes = args.usize_or("spill-max-bytes", cfg.spill_max_bytes as usize)? as u64;
     {
         // Backpressure knobs share the RunConfig flag names and semantics.
         let mut bp = situ::config::RunConfig::default();
@@ -259,6 +282,19 @@ fn cmd_train(args: &Args) -> Result<()> {
         ],
     )
     .print();
+    if report.db.spilled_keys > 0 {
+        situ::telemetry::counter_table(
+            "spill-to-disk cold tier",
+            &[
+                ("spilled keys", report.db.spilled_keys),
+                ("spilled bytes", report.db.spilled_bytes),
+                ("segments", report.db.spill_segments),
+                ("cold hits", report.db.cold_hits),
+                ("lost (write errors + backlog)", report.db.spill_lost_keys),
+            ],
+        )
+        .print();
+    }
     if !report.db.fields.is_empty() {
         situ::telemetry::field_pressure_table(&report.db).print();
     }

@@ -21,6 +21,13 @@
 //! has already retired, and [`DataLoader::gather_latest`] consumes the
 //! overwrite-mode stable keys (`{field}_rank{r}_latest`) where the store
 //! holds exactly one generation per field by construction.
+//!
+//! When the database runs a spill-to-disk cold tier, `gather_window`
+//! transparently falls back to it: generations already evicted from memory
+//! are re-fetched with one pipelined `ColdGet` pass (only when something
+//! was actually missing — the hot path stays one frame), so a slow
+//! consumer reads retired-but-spilled history instead of skipping it.
+//! Generations absent from both tiers are still skipped cleanly.
 
 use crate::client::{stable_key, tensor_key, DataStore, Pipeline, PollConfig};
 use crate::error::{Error, Result};
@@ -70,6 +77,9 @@ pub struct DataLoader<C: DataStore> {
     /// Generations inside a requested window that had already been retired
     /// by the store when gathered (reported in the trainer's final report).
     gens_skipped: u64,
+    /// Generations completed from the spill-to-disk cold tier (at least
+    /// one member came back via `ColdGet` after eviction).
+    gens_cold: u64,
 }
 
 impl<C: DataStore> DataLoader<C> {
@@ -80,13 +90,20 @@ impl<C: DataStore> DataLoader<C> {
             field: field.to_string(),
             rng: Rng::new(seed),
             gens_skipped: 0,
+            gens_cold: 0,
         }
     }
 
-    /// Generations skipped (already retired) across all `gather_window`
-    /// calls so far.
+    /// Generations skipped (retired from memory and absent from the cold
+    /// tier) across all `gather_window` calls so far.
     pub fn gens_skipped(&self) -> u64 {
         self.gens_skipped
+    }
+
+    /// Generations recovered from the spill-to-disk cold tier across all
+    /// `gather_window` calls so far.
+    pub fn gens_cold(&self) -> u64 {
+        self.gens_cold
     }
 
     /// Keys of every owned snapshot at `step`.
@@ -110,15 +127,19 @@ impl<C: DataStore> DataLoader<C> {
         self.client.mget_tensors(&self.step_keys(step))
     }
 
-    /// Gather the newest `window` step generations ending at `latest`, in
-    /// one pipelined request frame per database instance.
+    /// Gather the newest `window` step generations ending at `latest`: one
+    /// pipelined request frame per database instance, plus (only when
+    /// something was missing) one pipelined `ColdGet` pass over the spill
+    /// tier.
     ///
     /// Bounded-memory runs race the producer: a generation inside the
     /// requested window may already have been retired by the store's
-    /// retention policy, in which case it is skipped (its gets come back
-    /// as clean `NotFound` entries).  The `latest` generation itself must
-    /// be complete — a missing key there is an error, because
-    /// `wait_for_step(latest)` just saw it.
+    /// retention policy.  With a cold tier configured its members come
+    /// back from disk transparently (byte-exact — the spill log stores the
+    /// evicted payloads verbatim); without one, the generation is skipped
+    /// (clean `NotFound` entries).  The `latest` generation must be
+    /// complete across both tiers — a key missing there is an error,
+    /// because `wait_for_step(latest)` just saw it.
     pub fn gather_window(&mut self, latest: u64, window: u64) -> Result<Vec<Tensor>> {
         let w = window.max(1);
         let lo = latest.saturating_sub(w - 1);
@@ -130,23 +151,59 @@ impl<C: DataStore> DataLoader<C> {
             }
         }
         let resps = self.client.execute(pipe)?;
-        let mut out = Vec::with_capacity(resps.len());
+        // One slot per (step, rank), in request order; hot hits fill
+        // immediately, misses get one batched shot at the cold tier.
+        let mut slots: Vec<Option<Tensor>> = Vec::with_capacity(resps.len());
+        let mut missing: Vec<(usize, String)> = Vec::new();
         let mut it = resps.into_iter();
         for step in lo..=latest {
-            let mut members: Vec<Tensor> = Vec::with_capacity(n);
-            let mut complete = true;
             for &rank in &self.sim_ranks {
                 let resp = it.next().expect("pipeline reply arity");
+                let key = tensor_key(&self.field, rank, step);
                 match resp {
-                    Response::NotFound if step != latest => complete = false,
+                    Response::NotFound => {
+                        missing.push((slots.len(), key));
+                        slots.push(None);
+                    }
+                    other => slots.push(Some(other.expect_tensor(&key)?)),
+                }
+            }
+        }
+        let mut cold_filled = vec![false; slots.len()];
+        if !missing.is_empty() {
+            let mut pipe = Pipeline::new();
+            for (_, key) in &missing {
+                pipe.cold_get(key);
+            }
+            let cold = self.client.execute(pipe)?;
+            for ((slot, key), resp) in missing.into_iter().zip(cold) {
+                match resp {
+                    Response::NotFound => {}
                     other => {
-                        let key = tensor_key(&self.field, rank, step);
-                        members.push(other.expect_tensor(&key)?);
+                        slots[slot] = Some(other.expect_tensor(&key)?);
+                        cold_filled[slot] = true;
                     }
                 }
             }
-            if complete {
-                out.extend(members);
+        }
+        let mut out = Vec::with_capacity(slots.len());
+        for (si, step) in (lo..=latest).enumerate() {
+            let members = &mut slots[si * n..(si + 1) * n];
+            if members.iter().all(|s| s.is_some()) {
+                if cold_filled[si * n..(si + 1) * n].iter().any(|&c| c) {
+                    self.gens_cold += 1;
+                }
+                out.extend(members.iter_mut().map(|s| s.take().expect("checked some")));
+            } else if step == latest {
+                let ri = members
+                    .iter()
+                    .position(|s| s.is_none())
+                    .expect("incomplete generation has a hole");
+                return Err(Error::KeyNotFound(tensor_key(
+                    &self.field,
+                    self.sim_ranks[ri],
+                    step,
+                )));
             } else {
                 self.gens_skipped += 1;
             }

@@ -1,9 +1,12 @@
 //! Deployment planning: how many database instances, with which engine and
 //! core binding, for a given run configuration (paper Fig 2).
 
+use std::path::PathBuf;
+
 use crate::client::GovernorConfig;
 use crate::config::{Deployment, RunConfig};
-use crate::db::{Engine, RetentionConfig, ServerConfig};
+use crate::db::spill::default_segment_bytes;
+use crate::db::{Engine, RetentionConfig, ServerConfig, SpillConfig};
 
 /// One database instance to launch.
 #[derive(Debug, Clone)]
@@ -15,6 +18,9 @@ pub struct DbSpec {
     pub with_models: bool,
     /// Retention / capacity policy applied to this instance's store.
     pub retention: RetentionConfig,
+    /// Spill-to-disk cold tier for this instance (its own subdirectory of
+    /// the run's `--spill-dir`, so instances never share a segment log).
+    pub spill: Option<SpillConfig>,
 }
 
 /// The resolved plan.
@@ -37,6 +43,16 @@ impl DeploymentPlan {
             max_bytes: cfg.db_max_bytes,
             ttl_ms: cfg.db_ttl_ms,
         };
+        // Each instance spills into its own subdirectory of the run's base
+        // spill dir (two stores sharing one segment log would corrupt it).
+        let spill_base: Option<PathBuf> = cfg.spill_dir.as_deref().map(PathBuf::from);
+        let spill_for = |node: usize| {
+            spill_base.as_ref().map(|base| SpillConfig {
+                dir: base.join(format!("db{node}")),
+                max_bytes: cfg.spill_max_bytes,
+                segment_bytes: default_segment_bytes(),
+            })
+        };
         let dbs = match cfg.deployment {
             Deployment::CoLocated => (0..cfg.nodes)
                 .map(|node| DbSpec {
@@ -45,6 +61,7 @@ impl DeploymentPlan {
                     cores: cfg.db_cores,
                     with_models,
                     retention,
+                    spill: spill_for(node),
                 })
                 .collect(),
             Deployment::Clustered { db_nodes } => (0..db_nodes.max(1))
@@ -54,6 +71,7 @@ impl DeploymentPlan {
                     cores: crate::cluster::scaling::CLUSTERED_DB_CORES,
                     with_models,
                     retention,
+                    spill: spill_for(cfg.nodes + i),
                 })
                 .collect(),
         };
@@ -84,6 +102,7 @@ impl DeploymentPlan {
                 cores: d.cores,
                 with_models: d.with_models,
                 retention: d.retention,
+                spill: d.spill.clone(),
                 ..Default::default()
             })
             .collect()
@@ -120,6 +139,34 @@ mod tests {
                 assert_eq!(sc.retention, want);
             }
         }
+    }
+
+    #[test]
+    fn plan_threads_spill_config_with_per_instance_dirs() {
+        let mut cfg = RunConfig::default();
+        cfg.nodes = 2;
+        cfg.spill_dir = Some("/tmp/situ-cold".into());
+        cfg.spill_max_bytes = 1 << 20;
+        for deployment in [Deployment::CoLocated, Deployment::Clustered { db_nodes: 2 }] {
+            cfg.deployment = deployment;
+            let plan = DeploymentPlan::new(&cfg, false);
+            let dirs: Vec<PathBuf> = plan
+                .server_configs()
+                .iter()
+                .map(|sc| sc.spill.as_ref().expect("spill threaded").dir.clone())
+                .collect();
+            assert_eq!(dirs.len(), 2);
+            assert_ne!(dirs[0], dirs[1], "instances never share a segment log");
+            for (sc, d) in plan.server_configs().iter().zip(&plan.dbs) {
+                let spill = sc.spill.as_ref().unwrap();
+                assert_eq!(spill.max_bytes, 1 << 20);
+                assert_eq!(spill.dir, PathBuf::from(format!("/tmp/situ-cold/db{}", d.node)));
+            }
+        }
+        // No --spill-dir → no cold tier anywhere.
+        cfg.spill_dir = None;
+        let plan = DeploymentPlan::new(&cfg, false);
+        assert!(plan.server_configs().iter().all(|sc| sc.spill.is_none()));
     }
 
     #[test]

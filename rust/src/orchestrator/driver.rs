@@ -103,6 +103,12 @@ pub struct InSituTrainingConfig {
     pub db_max_bytes: u64,
     /// Wall-clock TTL for stalled producers' data, milliseconds (0 = off).
     pub db_ttl_ms: u64,
+    /// Spill-to-disk cold tier: base directory for the database's segment
+    /// log (`None` = retired generations are discarded).  Retired training
+    /// snapshots stay replayable via `ColdGet` for post-hoc analysis.
+    pub spill_dir: Option<PathBuf>,
+    /// Byte cap on the cold tier (0 = unbounded).
+    pub spill_max_bytes: u64,
     /// Producer backpressure handling: `Busy` retry policy plus the
     /// adaptive snapshot-skip stride ceiling.
     pub governor: GovernorConfig,
@@ -125,6 +131,8 @@ impl Default for InSituTrainingConfig {
             retention_window: 0,
             db_max_bytes: 0,
             db_ttl_ms: 0,
+            spill_dir: None,
+            spill_max_bytes: 0,
             governor: GovernorConfig::default(),
         }
     }
@@ -160,6 +168,8 @@ pub fn run_insitu_training(cfg: &InSituTrainingConfig) -> Result<InSituTrainingR
     run_cfg.retention_window = cfg.retention_window;
     run_cfg.db_max_bytes = cfg.db_max_bytes;
     run_cfg.db_ttl_ms = cfg.db_ttl_ms;
+    run_cfg.spill_dir = cfg.spill_dir.as_ref().map(|p| p.display().to_string());
+    run_cfg.spill_max_bytes = cfg.spill_max_bytes;
     let mut driver = Driver::launch(&run_cfg, false)?;
     let addr = driver.primary_addr();
 

@@ -59,6 +59,12 @@ pub struct FieldPressure {
     pub evicted_keys: u64,
     /// Payload bytes of this field freed by retention.
     pub evicted_bytes: u64,
+    /// Keys of this field persisted to the spill-to-disk cold tier
+    /// (non-zero only with a spill directory configured; untracked keys
+    /// spill under the `__untracked` pseudo-field).
+    pub spilled_keys: u64,
+    /// Payload bytes of this field appended to the cold tier.
+    pub spilled_bytes: u64,
 }
 
 /// Database statistics reported by `INFO` (and aggregated across shards by
@@ -86,6 +92,17 @@ pub struct DbInfo {
     pub retention_window: u64,
     pub retention_max_bytes: u64,
     pub retention_ttl_ms: u64,
+    /// Cold-tier counters (all zero while no spill directory is
+    /// configured; summed across shards on a cluster aggregate): records
+    /// appended to the segment log, their payload bytes, segment files on
+    /// disk, `ColdGet` reads served, and victims that never became durable
+    /// (append I/O failures + backlog shedding) — non-zero `lost` means
+    /// the archive has gaps and the disk deserves attention.
+    pub spilled_keys: u64,
+    pub spilled_bytes: u64,
+    pub spill_segments: u64,
+    pub cold_hits: u64,
+    pub spill_lost_keys: u64,
     pub engine: String,
     /// Per-field pressure while governance is active (empty otherwise;
     /// merged by field name on a cluster aggregate).
@@ -128,6 +145,15 @@ pub enum Request {
     /// and retire data whose producer has stalled for `ttl_ms` wall-clock
     /// milliseconds (0 disables any limit).  Replies `Ok`.
     Retention { window: u64, max_bytes: u64, ttl_ms: u64 },
+    /// List keys resident in the spill-to-disk cold tier with the given
+    /// prefix.  Replies `Keys` (empty when no spill directory is
+    /// configured).
+    ColdList { prefix: String },
+    /// Read a retired key back from the cold tier.  Replies `Tensor`, or
+    /// `NotFound` when the key was never spilled (or its segment was
+    /// dropped by the cold byte cap).  Strictly the cold tier — resident
+    /// keys are served by `GetTensor`.
+    ColdGet { key: String },
 }
 
 /// Database-to-client replies.
@@ -368,6 +394,8 @@ mod req_op {
     pub const POLL_KEYS: u8 = 14;
     pub const DEL_KEYS: u8 = 15;
     pub const RETENTION: u8 = 16;
+    pub const COLD_LIST: u8 = 17;
+    pub const COLD_GET: u8 = 18;
 }
 
 impl Request {
@@ -446,6 +474,14 @@ impl Request {
                 buf.extend_from_slice(&window.to_le_bytes());
                 buf.extend_from_slice(&max_bytes.to_le_bytes());
                 buf.extend_from_slice(&ttl_ms.to_le_bytes());
+            }
+            Request::ColdList { prefix } => {
+                buf.push(req_op::COLD_LIST);
+                put_str(buf, prefix);
+            }
+            Request::ColdGet { key } => {
+                buf.push(req_op::COLD_GET);
+                put_str(buf, key);
             }
         }
     }
@@ -545,6 +581,8 @@ impl Request {
                 max_bytes: c.u64()?,
                 ttl_ms: c.u64()?,
             },
+            req_op::COLD_LIST => Request::ColdList { prefix: c.str()? },
+            req_op::COLD_GET => Request::ColdGet { key: c.str()? },
             _ => return Err(Error::Protocol(format!("unknown request opcode {op}"))),
         };
         Ok(req)
@@ -563,7 +601,10 @@ impl Request {
             | Request::DelTensor { key }
             | Request::Exists { key }
             | Request::PutMeta { key, .. }
-            | Request::GetMeta { key } => Some(key),
+            | Request::GetMeta { key }
+            // A key spills on the shard that evicted it — the shard it
+            // routes to — so cold reads route exactly like hot ones.
+            | Request::ColdGet { key } => Some(key),
             Request::ListKeys { .. }
             | Request::PutModel { .. }
             | Request::RunModel { .. }
@@ -573,7 +614,8 @@ impl Request {
             | Request::MGetTensors { .. }
             | Request::PollKeys { .. }
             | Request::DelKeys { .. }
-            | Request::Retention { .. } => None,
+            | Request::Retention { .. }
+            | Request::ColdList { .. } => None,
         }
     }
 
@@ -604,6 +646,8 @@ impl Request {
             Request::PollKeys { keys, .. } => str_list_wire_size(keys) + 24,
             Request::DelKeys { keys } => str_list_wire_size(keys),
             Request::Retention { .. } => 24,
+            Request::ColdList { prefix } => str_wire_size(prefix),
+            Request::ColdGet { key } => str_wire_size(key),
         };
         1 + fields // opcode + fields
     }
@@ -673,6 +717,11 @@ impl Response {
                 buf.extend_from_slice(&i.retention_window.to_le_bytes());
                 buf.extend_from_slice(&i.retention_max_bytes.to_le_bytes());
                 buf.extend_from_slice(&i.retention_ttl_ms.to_le_bytes());
+                buf.extend_from_slice(&i.spilled_keys.to_le_bytes());
+                buf.extend_from_slice(&i.spilled_bytes.to_le_bytes());
+                buf.extend_from_slice(&i.spill_segments.to_le_bytes());
+                buf.extend_from_slice(&i.cold_hits.to_le_bytes());
+                buf.extend_from_slice(&i.spill_lost_keys.to_le_bytes());
                 put_str(buf, &i.engine);
                 buf.extend_from_slice(&(i.fields.len() as u32).to_le_bytes());
                 for f in &i.fields {
@@ -681,6 +730,8 @@ impl Response {
                     buf.extend_from_slice(&f.generations.to_le_bytes());
                     buf.extend_from_slice(&f.evicted_keys.to_le_bytes());
                     buf.extend_from_slice(&f.evicted_bytes.to_le_bytes());
+                    buf.extend_from_slice(&f.spilled_keys.to_le_bytes());
+                    buf.extend_from_slice(&f.spilled_bytes.to_le_bytes());
                 }
             }
             Response::Batch(entries) => {
@@ -744,6 +795,11 @@ impl Response {
                 let retention_window = c.u64()?;
                 let retention_max_bytes = c.u64()?;
                 let retention_ttl_ms = c.u64()?;
+                let spilled_keys = c.u64()?;
+                let spilled_bytes = c.u64()?;
+                let spill_segments = c.u64()?;
+                let cold_hits = c.u64()?;
+                let spill_lost_keys = c.u64()?;
                 let engine = c.str()?;
                 let n = c.u32()? as usize;
                 if n > MAX_BATCH {
@@ -759,6 +815,8 @@ impl Response {
                         generations: c.u64()?,
                         evicted_keys: c.u64()?,
                         evicted_bytes: c.u64()?,
+                        spilled_keys: c.u64()?,
+                        spilled_bytes: c.u64()?,
                     });
                 }
                 Response::Info(DbInfo {
@@ -774,6 +832,11 @@ impl Response {
                     retention_window,
                     retention_max_bytes,
                     retention_ttl_ms,
+                    spilled_keys,
+                    spilled_bytes,
+                    spill_segments,
+                    cold_hits,
+                    spill_lost_keys,
                     engine,
                     fields,
                 })
@@ -808,11 +871,11 @@ impl Response {
             Response::Meta(s) | Response::Error(s) => str_wire_size(s),
             Response::Keys(ks) => 4 + ks.iter().map(|k| str_wire_size(k)).sum::<usize>(),
             Response::Info(i) => {
-                96 + str_wire_size(&i.engine)
+                136 + str_wire_size(&i.engine)
                     + 4
                     + i.fields
                         .iter()
-                        .map(|f| str_wire_size(&f.field) + 32)
+                        .map(|f| str_wire_size(&f.field) + 48)
                         .sum::<usize>()
             }
             Response::Batch(entries) => {

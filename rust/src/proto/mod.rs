@@ -98,6 +98,8 @@ mod tests {
             },
             Request::DelKeys { keys: vec!["d0".into(), "d1".into(), "d2".into()] },
             Request::Retention { window: 4, max_bytes: 1 << 28, ttl_ms: 30_000 },
+            Request::ColdList { prefix: "f_".into() },
+            Request::ColdGet { key: "f_rank0_step0".into() },
         ]
     }
 
@@ -131,6 +133,11 @@ mod tests {
                 retention_window: 4,
                 retention_max_bytes: 8 << 20,
                 retention_ttl_ms: 60_000,
+                spilled_keys: 9,
+                spilled_bytes: 3 << 20,
+                spill_segments: 2,
+                cold_hits: 6,
+                spill_lost_keys: 1,
                 engine: "redis".into(),
                 fields: vec![
                     FieldPressure {
@@ -139,6 +146,8 @@ mod tests {
                         generations: 4,
                         evicted_keys: 5,
                         evicted_bytes: 1 << 20,
+                        spilled_keys: 5,
+                        spilled_bytes: 1 << 20,
                     },
                     FieldPressure {
                         field: "v".into(),
@@ -146,6 +155,8 @@ mod tests {
                         generations: 2,
                         evicted_keys: 2,
                         evicted_bytes: 1 << 19,
+                        spilled_keys: 0,
+                        spilled_bytes: 0,
                     },
                 ],
             }),
@@ -425,7 +436,7 @@ mod tests {
     /// properties below mutate.
     fn arbitrary_request(g: &mut Gen) -> Request {
         let keys = |g: &mut Gen| -> Vec<String> { g.vec(0..=4, |g| g.key()) };
-        match g.usize_in(0..=7) {
+        match g.usize_in(0..=9) {
             0 => {
                 let n = g.usize_in(1..=8);
                 let data: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
@@ -442,9 +453,12 @@ mod tests {
                 cap_us: g.u64(),
             },
             6 => Request::PutMeta { key: g.key(), value: g.key() },
+            7 => Request::ColdGet { key: g.key() },
+            8 => Request::ColdList { prefix: g.key() },
             _ => Request::Batch(vec![
                 Request::DelKeys { keys: keys(g) },
                 Request::Retention { window: g.u64(), max_bytes: g.u64(), ttl_ms: g.u64() },
+                Request::ColdGet { key: g.key() },
                 Request::Exists { key: g.key() },
             ]),
         }
@@ -546,5 +560,19 @@ mod tests {
             b.len()
         });
         assert!(r.routing_key().is_none(), "retention ops are whole-database");
+    }
+
+    #[test]
+    fn cold_ops_route_like_their_hot_counterparts() {
+        // ColdGet routes on its key — the shard that evicted (and thus
+        // spilled) a key is the shard the key hashes to, so cold reads can
+        // be pipelined on a cluster.  ColdList spans the whole database,
+        // like ListKeys.
+        let get = Request::ColdGet { key: "f_rank0_step3".into() };
+        assert_eq!(get.routing_key(), Some("f_rank0_step3"));
+        let list = Request::ColdList { prefix: "f_".into() };
+        assert!(list.routing_key().is_none());
+        assert_eq!(roundtrip_req(&get), get);
+        assert_eq!(roundtrip_req(&list), list);
     }
 }

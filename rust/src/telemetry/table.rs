@@ -87,13 +87,23 @@ impl Table {
 }
 
 /// Per-field memory-pressure table from an `INFO` reply: resident bytes
-/// (and share of the byte cap when one is set), resident generations, and
-/// eviction counters.  Empty retention state renders an empty table —
-/// callers usually skip printing it when `info.fields` is empty.
+/// (and share of the byte cap when one is set), resident generations,
+/// eviction counters, and spill-to-disk cold-tier counters.  Empty
+/// retention state renders an empty table — callers usually skip printing
+/// it when `info.fields` is empty.
 pub fn field_pressure_table(info: &DbInfo) -> Table {
     let mut t = Table::new(
         "per-field retention pressure",
-        &["field", "resident", "of cap", "generations", "evicted keys", "evicted bytes"],
+        &[
+            "field",
+            "resident",
+            "of cap",
+            "generations",
+            "evicted keys",
+            "evicted bytes",
+            "spilled keys",
+            "spilled bytes",
+        ],
     );
     for f in &info.fields {
         let of_cap = if info.retention_max_bytes > 0 {
@@ -111,6 +121,8 @@ pub fn field_pressure_table(info: &DbInfo) -> Table {
             f.generations.to_string(),
             f.evicted_keys.to_string(),
             fmt::bytes(f.evicted_bytes),
+            f.spilled_keys.to_string(),
+            fmt::bytes(f.spilled_bytes),
         ]);
     }
     t
@@ -171,6 +183,8 @@ mod tests {
                 generations: 2,
                 evicted_keys: 3,
                 evicted_bytes: 750,
+                spilled_keys: 3,
+                spilled_bytes: 750,
             }],
             ..Default::default()
         };
@@ -178,6 +192,7 @@ mod tests {
         assert!(md.contains("| u"), "{md}");
         assert!(md.contains("25.0%"), "resident share of the cap:\n{md}");
         assert!(md.contains("| 2 "), "generation count:\n{md}");
+        assert!(md.contains("spilled keys"), "cold-tier columns present:\n{md}");
         // Without a cap the share column is a dash.
         let info = DbInfo { fields: info.fields, ..Default::default() };
         assert!(field_pressure_table(&info).render_markdown().contains("| -"));

@@ -716,6 +716,87 @@ fn cluster_parity_del_keys_retention_and_windowed_gather() {
 }
 
 #[test]
+fn cluster_info_merges_spill_counters_and_routes_cold_reads() {
+    // Two shards, each with its own spill directory: a field's generations
+    // scatter across shards, each shard windows (and spills) what it holds
+    // locally, and the aggregated `info` must merge the per-field spill
+    // counters by field name — the same merge path as FieldPressure — while
+    // cold reads route to the shard that evicted the key.
+    let base = std::env::temp_dir()
+        .join(format!("situ_cluster_spill_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let mk = |i: usize| {
+        DbServer::start(ServerConfig {
+            engine: Engine::KeyDb,
+            with_models: false,
+            retention: RetentionConfig::windowed(1, 0),
+            spill: Some(situ::db::SpillConfig::new(base.join(format!("shard{i}")))),
+            conn_read_timeout: Duration::from_millis(50),
+            accept_backoff_max: Duration::from_millis(5),
+            ..Default::default()
+        })
+        .unwrap()
+    };
+    let servers = [mk(0), mk(1)];
+    let addrs: Vec<_> = servers.iter().map(|s| s.addr).collect();
+    let mut cc = ClusterClient::connect(&addrs).unwrap();
+
+    let ranks = 4usize;
+    let steps = 5u64;
+    for step in 0..steps {
+        for r in 0..ranks {
+            let val = (step * 10 + r as u64) as f32;
+            cc.put_tensor(&tensor_key("sp", r, step), &t(vec![val; 8])).unwrap();
+        }
+    }
+
+    // Aggregated spill counters equal the per-shard sums (the INFO round
+    // trip itself syncs each shard's spill writer first).
+    let info = cc.info().unwrap();
+    let per_shard_spilled: u64 = servers.iter().map(|s| s.store().spill_counters().0).sum();
+    assert!(per_shard_spilled > 0, "eviction must have spilled somewhere");
+    assert_eq!(info.spilled_keys, per_shard_spilled, "global counters sum across shards");
+    assert_eq!(info.spilled_keys, info.evicted_keys, "every eviction spilled");
+    let fp = info.fields.iter().find(|f| f.field == "sp").expect("merged field entry");
+    assert_eq!(
+        fp.spilled_keys, info.spilled_keys,
+        "per-field spill counters merged by name across shards"
+    );
+    assert_eq!(fp.spilled_bytes, info.spilled_bytes);
+
+    // ColdList merges across shards; every evicted key is in exactly one
+    // shard's cold tier and reads back byte-exact through routing.
+    let cold = cc.cold_list("sp_").unwrap();
+    assert_eq!(cold.len() as u64, info.spilled_keys);
+    assert!(cold.windows(2).all(|w| w[0] < w[1]), "merged + sorted");
+    let hot = cc.list_keys("sp_").unwrap();
+    for key in &cold {
+        assert!(!hot.contains(key), "cold and hot tiers are disjoint here");
+        let (_, step) = situ::db::parse_step_key(key).unwrap();
+        let rank: u64 = key
+            .split("_rank")
+            .nth(1)
+            .and_then(|s| s.split("_step").next())
+            .and_then(|s| s.parse().ok())
+            .unwrap();
+        let back = cc.cold_get(key).unwrap();
+        assert_eq!(
+            back.to_f32().unwrap(),
+            vec![(step * 10 + rank) as f32; 8],
+            "cold read through cluster routing is byte-exact: {key}"
+        );
+    }
+    // A never-spilled key misses cleanly through the cluster too.
+    assert!(matches!(
+        cc.cold_get("sp_rank0_step99"),
+        Err(Error::KeyNotFound(_))
+    ));
+    drop(cc);
+    drop(servers);
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
 fn windowed_gather_skips_retired_generations() {
     let server = start(Engine::Redis);
     let mut c = Client::connect(server.addr).unwrap();

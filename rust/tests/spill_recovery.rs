@@ -1,0 +1,345 @@
+//! Spill-to-disk cold tier: corruption / crash-recovery test battery.
+//!
+//! The durability claims of `db::spill` are earned here, not asserted:
+//!
+//! * a property test mutates valid segments — truncation anywhere, length
+//!   field smashes, payload bitflips — and replay must always yield a clean
+//!   `Err` or the surviving record *prefix*, never a panic, hang, or torn
+//!   tensor;
+//! * a crash-recovery test kills a writer mid-append (torn final record),
+//!   reopens the directory, and proves replay returns exactly the complete
+//!   records in order while the resumed writer appends without clobbering
+//!   them;
+//! * TCP-level tests prove evicted generations are recoverable byte-exact
+//!   through `ColdGet`/`ColdList`, that `DataLoader::gather_window` falls
+//!   back to the cold tier transparently, and that rotation under tiny
+//!   segments (CI sets `SITU_SPILL_SEGMENT_BYTES`) keeps every record
+//!   reachable.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use situ::client::{tensor_key, Client, DataStore};
+use situ::db::spill::{replay_segment, SpillWriter};
+use situ::db::{DbServer, Engine, RetentionConfig, ServerConfig, SpillConfig};
+use situ::error::Error;
+use situ::ml::DataLoader;
+use situ::tensor::Tensor;
+use situ::util::propcheck::{check, Gen};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("situ_spillrec_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn t(vals: Vec<f32>) -> Tensor {
+    Tensor::from_f32(&[vals.len()], vals).unwrap()
+}
+
+fn start_spill_server(window: u64, spill: SpillConfig) -> DbServer {
+    DbServer::start(ServerConfig {
+        engine: Engine::KeyDb,
+        with_models: false,
+        retention: RetentionConfig::windowed(window, 0),
+        spill: Some(spill),
+        conn_read_timeout: Duration::from_millis(50),
+        accept_backoff_max: Duration::from_millis(5),
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+/// Newest `.spill` segment file under a spill directory (recursive).
+fn newest_segment(dir: &PathBuf) -> PathBuf {
+    fn walk(dir: &PathBuf, out: &mut Vec<PathBuf>) {
+        for e in std::fs::read_dir(dir).unwrap() {
+            let p = e.unwrap().path();
+            if p.is_dir() {
+                walk(&p, out);
+            } else if p.extension().and_then(|x| x.to_str()) == Some("spill") {
+                out.push(p);
+            }
+        }
+    }
+    let mut segs = Vec::new();
+    walk(dir, &mut segs);
+    segs.sort();
+    segs.pop().expect("at least one segment")
+}
+
+#[test]
+fn prop_corrupted_segment_replays_as_clean_prefix() {
+    // Build one valid segment per case, then mutate it three ways.  Replay
+    // must never panic or hang: either a clean Err (unparseable file) or
+    // the surviving prefix of the original records, each byte-exact.
+    check("spill corruption battery", 60, |g: &mut Gen| {
+        let case = g.u64();
+        let dir = tmp_dir(&format!("prop{case}"));
+        let group = dir.join("g");
+        let n_records = g.usize_in(1..=6);
+        let originals: Vec<(String, Tensor)> = (0..n_records)
+            .map(|i| {
+                let len = g.usize_in(1..=32);
+                let vals: Vec<f32> = (0..len).map(|_| g.normal_f32()).collect();
+                (format!("f_rank0_step{i}"), t(vals))
+            })
+            .collect();
+        let path = {
+            let (mut w, _) = SpillWriter::open(&group, 1 << 20, |_, _| {}).unwrap();
+            for (k, tensor) in &originals {
+                w.append(k, tensor).unwrap();
+            }
+            w.flush().unwrap();
+            (**w.active_segment()).clone()
+        };
+        let pristine = std::fs::read(&path).unwrap();
+
+        let mut mutated = pristine.clone();
+        match g.usize_in(0..=2) {
+            0 => {
+                // Truncation anywhere, including inside the header.
+                let cut = g.usize_in(0..=mutated.len() - 1);
+                mutated.truncate(cut);
+            }
+            1 => {
+                // Length-field smash: an extreme u32 at a random offset.
+                let i = g.usize_in(0..=mutated.len() - 1);
+                let huge = if g.bool() { u32::MAX } else { u32::MAX / 2 };
+                for (o, b) in huge.to_le_bytes().iter().enumerate() {
+                    if i + o < mutated.len() {
+                        mutated[i + o] = *b;
+                    }
+                }
+            }
+            _ => {
+                // Payload / header bitflips.
+                for _ in 0..g.usize_in(1..=8) {
+                    let i = g.usize_in(0..=mutated.len() - 1);
+                    mutated[i] ^= 1 << g.usize_in(0..=7);
+                }
+            }
+        }
+        std::fs::write(&path, &mutated).unwrap();
+
+        match replay_segment(&path) {
+            Err(_) => {} // clean refusal (e.g. smashed segment header)
+            Ok(replay) => {
+                assert!(
+                    replay.records.len() <= originals.len(),
+                    "replay invented records"
+                );
+                for (rec, (key, tensor)) in replay.records.iter().zip(&originals) {
+                    assert_eq!(&rec.key, key, "prefix keys in order");
+                    assert_eq!(&rec.tensor, tensor, "prefix payloads byte-exact");
+                }
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn crash_mid_append_recovers_and_resumes_without_clobbering() {
+    // End-to-end crash simulation through the Store: spill three retired
+    // generations, "crash" by appending half a record's worth of garbage
+    // (a writer killed mid-append), then reopen the directory with a fresh
+    // store.  Replay must surface exactly the complete records, and the
+    // resumed writer must append after them without clobbering.
+    let dir = tmp_dir("crash");
+    {
+        let server = start_spill_server(1, SpillConfig::new(&dir));
+        let mut c = Client::connect(server.addr).unwrap();
+        for step in 0..4u64 {
+            c.put_tensor(&tensor_key("cr", 0, step), &t(vec![step as f32; 16])).unwrap();
+        }
+        let info = c.info().unwrap(); // INFO syncs the spill writer
+        assert_eq!(info.spilled_keys, 3);
+        server.store().set_spill(None).unwrap(); // clean close of the log
+    }
+    let seg = newest_segment(&dir);
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&seg).unwrap();
+        // A torn half-record: plausible header bytes, missing body.
+        f.write_all(&[0x53, 0x50, 0x53, 0x31, 0xEE, 0x00, 0x00]).unwrap();
+    }
+
+    let server = start_spill_server(1, SpillConfig::new(&dir));
+    let mut c = Client::connect(server.addr).unwrap();
+    assert_eq!(
+        c.cold_list("cr_").unwrap(),
+        vec![
+            tensor_key("cr", 0, 0),
+            tensor_key("cr", 0, 1),
+            tensor_key("cr", 0, 2)
+        ],
+        "exactly the complete records survive"
+    );
+    for step in 0..3u64 {
+        let back = c.cold_get(&tensor_key("cr", 0, step)).unwrap();
+        assert_eq!(back.to_f32().unwrap(), vec![step as f32; 16], "byte-exact after crash");
+    }
+    // The resumed writer appends new retirements after the survivors: the
+    // fresh store holds generation 4, and publishing 5 retires (spills) it.
+    for step in 4..6u64 {
+        c.put_tensor(&tensor_key("cr", 0, step), &t(vec![step as f32; 16])).unwrap();
+    }
+    let cold = c.cold_list("cr_").unwrap();
+    assert_eq!(cold.len(), 4, "survivors 0-2 plus newly-retired 4: {cold:?}");
+    for step in [0u64, 1, 2, 4] {
+        let back = c.cold_get(&tensor_key("cr", 0, step)).unwrap();
+        assert_eq!(back.to_f32().unwrap(), vec![step as f32; 16]);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn evicted_generations_are_cold_readable_over_tcp() {
+    let dir = tmp_dir("tcp");
+    let server = start_spill_server(2, SpillConfig::new(&dir));
+    let mut c = Client::connect(server.addr).unwrap();
+    let ranks = 2usize;
+    for step in 0..6u64 {
+        for r in 0..ranks {
+            let val = (step * 10 + r as u64) as f32;
+            c.put_tensor(&tensor_key("f", r, step), &t(vec![val; 8])).unwrap();
+        }
+    }
+    // Steps 0..3 were retired by the window; every key replays byte-exact.
+    for step in 0..4u64 {
+        for r in 0..ranks {
+            let back = c.cold_get(&tensor_key("f", r, step)).unwrap();
+            let val = (step * 10 + r as u64) as f32;
+            assert_eq!(back.to_f32().unwrap(), vec![val; 8], "step {step} rank {r}");
+        }
+    }
+    // Resident generations are hot-only; cold misses are clean NotFound.
+    assert!(matches!(
+        c.cold_get(&tensor_key("f", 0, 5)),
+        Err(Error::KeyNotFound(_))
+    ));
+    assert!(matches!(c.cold_get("never_existed"), Err(Error::KeyNotFound(_))));
+    let cold = c.cold_list("f_").unwrap();
+    assert_eq!(cold.len(), 4 * ranks);
+    assert!(cold.windows(2).all(|w| w[0] < w[1]), "sorted");
+    // Counters: everything evicted was spilled, and the hits were counted.
+    let info = c.info().unwrap();
+    assert_eq!(info.spilled_keys, info.evicted_keys);
+    assert_eq!(info.spilled_keys, 4 * ranks as u64);
+    assert_eq!(info.spilled_bytes, info.evicted_bytes);
+    assert!(info.spill_segments >= 1);
+    assert_eq!(info.cold_hits, 4 * ranks as u64);
+    assert_eq!(info.spill_lost_keys, 0, "every victim became durable");
+    let fp = info.fields.iter().find(|f| f.field == "f").expect("field pressure");
+    assert_eq!(fp.spilled_keys, 4 * ranks as u64);
+    assert_eq!(fp.spilled_bytes, info.spilled_bytes);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gather_window_falls_back_to_the_cold_tier() {
+    let dir = tmp_dir("loader");
+    let ranks = 2usize;
+    let publish = |c: &mut Client| {
+        for step in 0..5u64 {
+            for r in 0..ranks {
+                let val = (step * 10 + r as u64) as f32;
+                c.put_tensor(&tensor_key("w", r, step), &t(vec![val; 8])).unwrap();
+            }
+        }
+    };
+    // With spill: the whole 5-generation window comes back even though
+    // only the newest generation is still resident.
+    let server = start_spill_server(1, SpillConfig::new(&dir));
+    let mut c = Client::connect(server.addr).unwrap();
+    publish(&mut c);
+    assert_eq!(server.store().list_keys("w_").len(), ranks, "one resident generation");
+    let mut dl = DataLoader::new(c, (0..ranks).collect(), "w", 1);
+    let got = dl.gather_window(4, 5).unwrap();
+    assert_eq!(got.len(), 5 * ranks, "cold fallback completed the window");
+    for (i, tensor) in got.iter().enumerate() {
+        let (step, r) = ((i / ranks) as u64, (i % ranks) as u64);
+        assert_eq!(tensor.to_f32().unwrap(), vec![(step * 10 + r) as f32; 8]);
+    }
+    assert_eq!(dl.gens_cold(), 4, "four generations recovered from disk");
+    assert_eq!(dl.gens_skipped(), 0);
+
+    // Without spill: the retired generations are skipped, as before.
+    let bare = DbServer::start(ServerConfig {
+        engine: Engine::KeyDb,
+        with_models: false,
+        retention: RetentionConfig::windowed(1, 0),
+        conn_read_timeout: Duration::from_millis(50),
+        accept_backoff_max: Duration::from_millis(5),
+        ..Default::default()
+    })
+    .unwrap();
+    let mut c = Client::connect(bare.addr).unwrap();
+    publish(&mut c);
+    let mut dl = DataLoader::new(c, (0..ranks).collect(), "w", 1);
+    let got = dl.gather_window(4, 5).unwrap();
+    assert_eq!(got.len(), ranks, "only the resident generation");
+    assert_eq!(dl.gens_skipped(), 4);
+    assert_eq!(dl.gens_cold(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tiny_segments_rotate_without_losing_records() {
+    // Explicit tiny segment size (CI additionally runs the whole file with
+    // SITU_SPILL_SEGMENT_BYTES=4096): every record must survive rotation
+    // and the cold byte cap must only ever drop whole sealed segments.
+    let dir = tmp_dir("tiny");
+    let spill = SpillConfig { dir: dir.clone(), max_bytes: 0, segment_bytes: 128 };
+    let server = start_spill_server(1, spill);
+    let mut c = Client::connect(server.addr).unwrap();
+    for step in 0..8u64 {
+        c.put_tensor(&tensor_key("rot", 0, step), &t(vec![step as f32; 16])).unwrap();
+    }
+    let info = c.info().unwrap();
+    assert_eq!(info.spilled_keys, 7);
+    assert!(info.spill_segments > 1, "rotation happened: {}", info.spill_segments);
+    for step in 0..7u64 {
+        let back = c.cold_get(&tensor_key("rot", 0, step)).unwrap();
+        assert_eq!(back.to_f32().unwrap(), vec![step as f32; 16]);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cold_byte_cap_drops_oldest_sealed_segments_only() {
+    let dir = tmp_dir("cap");
+    // ~100-byte records, 128-byte segments (one record per segment), and a
+    // cap of ~4 segments: early records age out, newest stay readable.
+    let spill = SpillConfig { dir: dir.clone(), max_bytes: 600, segment_bytes: 128 };
+    let server = start_spill_server(1, spill);
+    let mut c = Client::connect(server.addr).unwrap();
+    for step in 0..12u64 {
+        c.put_tensor(&tensor_key("aged", 0, step), &t(vec![step as f32; 16])).unwrap();
+    }
+    let info = c.info().unwrap();
+    assert_eq!(info.spilled_keys, 11, "every retirement was appended");
+    let cold = c.cold_list("aged_").unwrap();
+    assert!(
+        cold.len() < 11,
+        "the cap dropped old segments: {} keys resident",
+        cold.len()
+    );
+    // The newest spilled generation always survives (its segment is the
+    // youngest), and everything still listed reads back byte-exact.
+    assert!(cold.contains(&tensor_key("aged", 0, 10)));
+    for key in &cold {
+        let step: f32 = c.cold_get(key).unwrap().to_f32().unwrap()[0];
+        assert!((0.0..11.0).contains(&step));
+    }
+    // Dropped keys miss cleanly.
+    for step in 0..11u64 {
+        let key = tensor_key("aged", 0, step);
+        if !cold.contains(&key) {
+            assert!(matches!(c.cold_get(&key), Err(Error::KeyNotFound(_))));
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

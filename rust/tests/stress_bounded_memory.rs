@@ -244,6 +244,102 @@ fn long_driver_run_holds_flat_memory_under_cap() {
 }
 
 #[test]
+fn spill_replay_equivalence_on_full_history() {
+    // The cold-tier acceptance property: with a spill directory set, a
+    // windowed byte-capped run ends with resident bytes under the cap AND
+    // every retired generation replayable from the cold tier byte-exact —
+    // windowed ≡ append on the retained window, and windowed+spill ≡
+    // append on the FULL history.  The deployment goes through the Driver
+    // so the spill config is exercised end to end (RunConfig --spill-dir →
+    // DeploymentPlan → ServerConfig).
+    let steps = stress_steps(60);
+    let ranks = 2usize;
+    let elems = 128usize;
+    let payload = (elems * 4) as u64;
+    let window = 4u64;
+    let cap = (window + 1) * ranks as u64 * payload;
+    let spill_base = std::env::temp_dir()
+        .join(format!("situ_stress_spill_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&spill_base);
+
+    let mut run_cfg = RunConfig::default();
+    run_cfg.nodes = 1;
+    run_cfg.ranks_per_node = ranks;
+    run_cfg.retention_window = window;
+    run_cfg.db_max_bytes = cap;
+    run_cfg.spill_dir = Some(spill_base.display().to_string());
+    let mut driver = Driver::launch(&run_cfg, false).unwrap();
+    let addr = driver.primary_addr();
+
+    // Unbounded append-mode reference fed identical data.
+    let reference = DbServer::start(ServerConfig {
+        engine: Engine::Redis,
+        with_models: false,
+        conn_read_timeout: Duration::from_millis(50),
+        ..Default::default()
+    })
+    .unwrap();
+
+    let mut c = Client::connect(addr).unwrap();
+    let mut rc = Client::connect(reference.addr).unwrap();
+    for step in 0..steps {
+        for r in 0..ranks {
+            let snap = t_const((step * ranks as u64 + r as u64) as f32, elems);
+            c.put_tensor(&tensor_key("field", r, step), &snap).unwrap();
+            rc.put_tensor(&tensor_key("field", r, step), &snap).unwrap();
+        }
+    }
+
+    // Resident bytes under the cap, exactly the window retained.
+    let store = driver.servers[0].store();
+    assert!(store.n_bytes() <= cap);
+    assert_eq!(store.n_bytes(), window * ranks as u64 * payload, "window resident");
+
+    // Everything evicted was spilled — counters agree exactly.
+    let info = c.info().unwrap();
+    assert_eq!(info.spilled_keys, info.evicted_keys);
+    assert_eq!(info.spilled_keys, (steps - window) * ranks as u64);
+    assert_eq!(info.spilled_bytes, info.evicted_bytes);
+
+    // Full-history equivalence: every generation ever published reads back
+    // byte-exact — retired ones from the cold tier, resident ones hot —
+    // and matches the unbounded append-mode reference.
+    for step in 0..steps {
+        for r in 0..ranks {
+            let key = tensor_key("field", r, step);
+            let want = rc.get_tensor(&key).unwrap();
+            let got = if step < steps - window {
+                c.cold_get(&key).unwrap()
+            } else {
+                c.get_tensor(&key).unwrap()
+            };
+            assert_eq!(got, want, "history diverged at {key}");
+        }
+    }
+
+    // Trainer-side equivalence on the retained window (as in the spill-off
+    // test), and the windowed loader needs no cold fallback for it.
+    let latest = steps - 1;
+    let mut dl = DataLoader::new(c, (0..ranks).collect(), "field", 11);
+    dl.wait_for_step(latest, &PollConfig::default()).unwrap();
+    let windowed = dl.gather_window(latest, window).unwrap();
+    let mut rdl = DataLoader::new(rc, (0..ranks).collect(), "field", 11);
+    let append = rdl.gather_window(latest, window).unwrap();
+    assert_eq!(windowed, append, "retained window identical to append-mode");
+    assert_eq!(dl.gens_cold(), 0, "retained window served hot");
+
+    // And a *deep* windowed gather spanning retired generations completes
+    // from the cold tier instead of skipping them.
+    let deep = dl.gather_window(latest, steps).unwrap();
+    assert_eq!(deep.len(), steps as usize * ranks, "full history via cold fallback");
+    assert_eq!(dl.gens_skipped(), 0);
+    assert!(dl.gens_cold() >= steps - window, "cold tier served the deep window");
+
+    driver.shutdown();
+    let _ = std::fs::remove_dir_all(&spill_base);
+}
+
+#[test]
 fn overwrite_mode_is_flat_by_construction() {
     // The paper's overwrite mode: stable keys, no retention policy needed.
     let server = DbServer::start(ServerConfig {
