@@ -1,0 +1,214 @@
+//! fig_chaos — replicated writes, shard-kill failover, and what they cost.
+//!
+//! Two experiments over a 3-shard cluster:
+//!
+//! 1. **Replication write overhead** — the same put sweep at `replicas = 1`
+//!    vs `replicas = 2`.  Replicated puts pay one extra frame per copy, so
+//!    the expected cost ratio is ~2×, not N× round trips.
+//! 2. **Shard-kill failover** — write every generation at `replicas = 2`,
+//!    kill one shard, and re-read everything: the sweep must come back
+//!    **zero-loss byte-exact** through replica failover, and the degraded
+//!    read rate is reported next to the healthy baseline.
+//!
+//! `SITU_BENCH_SMOKE=1` shortens the run for CI; `SITU_BENCH_JSON=path`
+//! records the numbers (the BENCH_PR6.json acceptance record).
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use situ::client::{tensor_key, ClusterClient, ClusterConfig, DataStore};
+use situ::db::{DbServer, Engine, ServerConfig};
+use situ::telemetry::Table;
+use situ::tensor::Tensor;
+
+fn payload(gen: u64, rank: usize, elems: usize) -> Tensor {
+    let vals: Vec<f32> = (0..elems)
+        .map(|i| (gen * 100_000 + rank as u64 * 1000 + i as u64) as f32)
+        .collect();
+    Tensor::from_f32(&[elems], vals).unwrap()
+}
+
+fn start_shards(n: usize) -> Vec<DbServer> {
+    (0..n)
+        .map(|_| {
+            DbServer::start(ServerConfig {
+                engine: Engine::KeyDb,
+                with_models: false,
+                conn_read_timeout: Duration::from_millis(50),
+                accept_backoff_max: Duration::from_millis(5),
+                ..Default::default()
+            })
+            .expect("shard")
+        })
+        .collect()
+}
+
+fn connect(addrs: &[SocketAddr], replicas: usize) -> ClusterClient {
+    ClusterClient::connect_with(addrs, ClusterConfig { replicas, ..ClusterConfig::default() })
+        .expect("cluster client")
+}
+
+struct WritePoint {
+    replicas: usize,
+    puts: u64,
+    secs: f64,
+    ops_per_sec: f64,
+    replicated_writes: u64,
+}
+
+fn write_sweep(replicas: usize, gens: u64, ranks: usize, elems: usize) -> WritePoint {
+    let mut servers = start_shards(3);
+    let addrs: Vec<SocketAddr> = servers.iter().map(|s| s.addr).collect();
+    let mut c = connect(&addrs, replicas);
+    let start = Instant::now();
+    for gen in 0..gens {
+        for rank in 0..ranks {
+            c.put_tensor(&tensor_key("fc", rank, gen), &payload(gen, rank, elems))
+                .expect("replicated put");
+        }
+    }
+    let secs = start.elapsed().as_secs_f64();
+    let puts = gens * ranks as u64;
+    let stats = c.failover_stats();
+    // Every put must have landed `replicas` copies on a healthy cluster.
+    assert_eq!(stats.replicated_writes, puts * (replicas as u64 - 1));
+    assert_eq!(stats.degraded_ops, 0, "healthy cluster writes are never degraded");
+    for s in &mut servers {
+        s.shutdown();
+    }
+    WritePoint {
+        replicas,
+        puts,
+        secs,
+        ops_per_sec: puts as f64 / secs.max(1e-9),
+        replicated_writes: stats.replicated_writes,
+    }
+}
+
+struct FailoverResult {
+    keys: u64,
+    healthy_secs: f64,
+    degraded_secs: f64,
+    read_failovers: u64,
+    lost: u64,
+}
+
+fn shard_kill_failover(gens: u64, ranks: usize, elems: usize) -> FailoverResult {
+    let mut servers = start_shards(3);
+    let addrs: Vec<SocketAddr> = servers.iter().map(|s| s.addr).collect();
+    let mut c = connect(&addrs, 2);
+    for gen in 0..gens {
+        for rank in 0..ranks {
+            c.put_tensor(&tensor_key("fk", rank, gen), &payload(gen, rank, elems)).unwrap();
+        }
+    }
+    let sweep = |c: &mut ClusterClient| -> (f64, u64) {
+        let start = Instant::now();
+        let mut lost = 0u64;
+        for gen in 0..gens {
+            for rank in 0..ranks {
+                match c.get_tensor(&tensor_key("fk", rank, gen)) {
+                    Ok(t) if t == payload(gen, rank, elems) => {}
+                    _ => lost += 1,
+                }
+            }
+        }
+        (start.elapsed().as_secs_f64(), lost)
+    };
+    let (healthy_secs, healthy_lost) = sweep(&mut c);
+    assert_eq!(healthy_lost, 0, "healthy sweep is lossless");
+
+    servers[1].simulate_crash();
+    let (degraded_secs, lost) = sweep(&mut c);
+    let stats = c.failover_stats();
+    servers[0].shutdown();
+    servers[2].shutdown();
+    FailoverResult {
+        keys: gens * ranks as u64,
+        healthy_secs,
+        degraded_secs,
+        read_failovers: stats.read_failovers,
+        lost,
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("SITU_BENCH_SMOKE").is_ok();
+    let gens: u64 = std::env::var("SITU_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 20 } else { 200 });
+    let ranks = 4usize;
+    let elems = 4 * 1024usize; // 16 KiB per tensor
+
+    // --- experiment 1: replication write overhead --------------------------
+    let mut table = Table::new(
+        "replicated write overhead (3 shards)",
+        &["replicas", "puts", "secs", "ops/s", "replica copies"],
+    );
+    let mut points = Vec::new();
+    for replicas in [1usize, 2] {
+        let p = write_sweep(replicas, gens, ranks, elems);
+        table.row(&[
+            p.replicas.to_string(),
+            p.puts.to_string(),
+            format!("{:.3}", p.secs),
+            format!("{:.0}", p.ops_per_sec),
+            p.replicated_writes.to_string(),
+        ]);
+        points.push(p);
+    }
+    table.print();
+
+    // --- experiment 2: shard-kill failover ---------------------------------
+    let f = shard_kill_failover(gens, ranks, elems);
+    let mut ft = Table::new(
+        "shard-kill read failover (replicas = 2, one of 3 shards killed)",
+        &["keys", "healthy secs", "degraded secs", "read failovers", "lost"],
+    );
+    ft.row(&[
+        f.keys.to_string(),
+        format!("{:.3}", f.healthy_secs),
+        format!("{:.3}", f.degraded_secs),
+        f.read_failovers.to_string(),
+        f.lost.to_string(),
+    ]);
+    ft.print();
+
+    // The fig_chaos gate: zero data loss through a shard kill, failover
+    // actually exercised, replication actually replicated.
+    assert_eq!(f.lost, 0, "zero-loss failover is the acceptance gate");
+    assert!(f.read_failovers > 0, "the killed shard's keys failed over");
+    assert!(points[1].replicated_writes > 0 && points[0].replicated_writes == 0);
+
+    if let Ok(path) = std::env::var("SITU_BENCH_JSON") {
+        let mut s = String::from("{\n  \"bench\": \"fig_chaos\",\n");
+        s.push_str(&format!(
+            "  \"config\": {{\"gens\": {gens}, \"ranks\": {ranks}, \"payload_bytes\": {}, \
+             \"shards\": 3}},\n",
+            elems * 4
+        ));
+        s.push_str("  \"write_overhead\": [\n");
+        for (i, p) in points.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"replicas\": {}, \"puts\": {}, \"secs\": {:.6}, \"ops_per_sec\": {:.1}, \
+                 \"replicated_writes\": {}}}{}\n",
+                p.replicas,
+                p.puts,
+                p.secs,
+                p.ops_per_sec,
+                p.replicated_writes,
+                if i + 1 == points.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str(&format!(
+            "  \"shard_kill_failover\": {{\"keys\": {}, \"healthy_secs\": {:.6}, \
+             \"degraded_secs\": {:.6}, \"read_failovers\": {}, \"lost\": {}}}\n",
+            f.keys, f.healthy_secs, f.degraded_secs, f.read_failovers, f.lost
+        ));
+        s.push_str("}\n");
+        std::fs::write(&path, &s).expect("write SITU_BENCH_JSON");
+        println!("bench results written to {path}");
+    }
+}

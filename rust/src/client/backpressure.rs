@@ -29,6 +29,33 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 
+/// Which errors a [`RetryPolicy`] run treats as retryable.  Orthogonal to
+/// the policy shape (how long and how often to wait), so existing
+/// `RetryPolicy` values keep their exact meaning: `run`/`run_with` are the
+/// `Busy`-only class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RetryClass {
+    /// Retry only [`Error::Busy`] flow control (the default, and the only
+    /// class before replication existed).
+    #[default]
+    Busy,
+    /// Additionally retry transient transport failures
+    /// ([`Error::is_transient_io`]) — connection resets, socket-deadline
+    /// expiries, refused reconnects.  The class to wrap around replicated
+    /// cluster ops, where a retry lands on a healthy replica (or a
+    /// reconnected shard) instead of the carcass that just failed.
+    BusyOrTransientIo,
+}
+
+impl RetryClass {
+    fn retryable(&self, e: &Error) -> bool {
+        match self {
+            RetryClass::Busy => matches!(e, Error::Busy(_)),
+            RetryClass::BusyOrTransientIo => matches!(e, Error::Busy(_)) || e.is_transient_io(),
+        }
+    }
+}
+
 /// How an operation reacts to [`Error::Busy`] backpressure.  Non-`Busy`
 /// errors always surface immediately — only flow control is retried.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -68,6 +95,30 @@ impl RetryPolicy {
     /// without wall-clock flakiness).
     pub fn run_with<T>(
         &self,
+        op: impl FnMut() -> Result<T>,
+        sleep: impl FnMut(Duration),
+    ) -> (Result<T>, u64) {
+        self.run_with_class(RetryClass::Busy, op, sleep)
+    }
+
+    /// Run `op`, retrying errors in `class` per the policy (wall-clock
+    /// sleeper).
+    pub fn run_class<T>(
+        &self,
+        class: RetryClass,
+        op: impl FnMut() -> Result<T>,
+    ) -> (Result<T>, u64) {
+        self.run_with_class(class, op, std::thread::sleep)
+    }
+
+    /// The general retry loop: `class` picks which errors are retryable,
+    /// the policy picks the wait schedule.  Same sleep audit as always —
+    /// the decision whether another attempt is allowed happens *before*
+    /// sleeping, so no sleep ever follows the final attempt, and deadline
+    /// sleeps are clamped to the remaining budget.
+    pub fn run_with_class<T>(
+        &self,
+        class: RetryClass,
         mut op: impl FnMut() -> Result<T>,
         mut sleep: impl FnMut(Duration),
     ) -> (Result<T>, u64) {
@@ -81,9 +132,7 @@ impl RetryPolicy {
         let mut retries = 0u64;
         loop {
             match op() {
-                Err(Error::Busy(m)) => {
-                    // Decide whether another attempt is allowed *before*
-                    // sleeping, so no sleep ever follows the final attempt.
+                Err(e) if class.retryable(&e) => {
                     let wait = match *self {
                         RetryPolicy::Fail => None,
                         RetryPolicy::Backoff { cap, retries: max, .. } => {
@@ -95,7 +144,7 @@ impl RetryPolicy {
                         }
                     };
                     match wait {
-                        None => return (Err(Error::Busy(m)), retries),
+                        None => return (Err(e), retries),
                         Some(d) => {
                             sleep(d);
                             retries += 1;
@@ -326,6 +375,69 @@ mod tests {
         assert!(matches!(res, Err(Error::Timeout(_))), "shutdown/IO is not retried");
         assert_eq!(retries, 0);
         assert_eq!(*sleeps.borrow(), 0);
+    }
+
+    #[test]
+    fn transient_io_class_retries_resets_but_not_app_errors() {
+        let policy = RetryPolicy::backoff(Duration::from_millis(1), 4);
+        let reset =
+            || Error::Io(std::io::Error::new(std::io::ErrorKind::ConnectionReset, "gone"));
+
+        // Busy-only class: an I/O reset surfaces immediately.
+        let sleeps = RefCell::new(Vec::new());
+        let (res, retries) = policy.run_with_class(
+            RetryClass::Busy,
+            || -> Result<()> { Err(reset()) },
+            |d| sleeps.borrow_mut().push(d),
+        );
+        assert!(matches!(res, Err(Error::Io(_))));
+        assert_eq!((retries, sleeps.borrow().len()), (0, 0));
+
+        // Transient class: the reset is retried and the op can recover.
+        let mut calls = 0u64;
+        let (res, retries) = policy.run_with_class(
+            RetryClass::BusyOrTransientIo,
+            || {
+                calls += 1;
+                if calls <= 2 {
+                    Err(reset())
+                } else {
+                    Ok(calls)
+                }
+            },
+            |_| {},
+        );
+        assert_eq!(res.unwrap(), 3);
+        assert_eq!(retries, 2);
+
+        // ... but authoritative answers still surface on the spot.
+        let (res, retries) = policy.run_with_class(
+            RetryClass::BusyOrTransientIo,
+            || -> Result<()> { Err(Error::KeyNotFound("k".into())) },
+            |_| {},
+        );
+        assert!(matches!(res, Err(Error::KeyNotFound(_))));
+        assert_eq!(retries, 0);
+    }
+
+    #[test]
+    fn transient_io_class_still_honors_the_sleep_audit() {
+        let policy = RetryPolicy::Backoff {
+            initial: Duration::from_millis(5),
+            cap: Duration::from_millis(80),
+            retries: 2,
+        };
+        let sleeps = RefCell::new(Vec::new());
+        let (res, retries) = policy.run_with_class(
+            RetryClass::BusyOrTransientIo,
+            || -> Result<()> {
+                Err(Error::Io(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "x")))
+            },
+            |d| sleeps.borrow_mut().push(d),
+        );
+        assert!(matches!(res, Err(Error::Io(_))));
+        assert_eq!(retries, 2);
+        assert_eq!(sleeps.borrow().len(), 2, "no sleep after the final attempt");
     }
 
     #[test]

@@ -50,21 +50,40 @@
 //! On a [`ClusterClient`], single-key commands route to the owning shard;
 //! a pipeline is partitioned per shard and results are reassembled in
 //! submission order.
+//!
+//! ## Replication and failover
+//!
+//! [`ClusterClient::connect_with`] takes a [`ClusterConfig`]: with
+//! `replicas = r`, every write lands on the owning shard *and* the next
+//! `r − 1` shards in ring order (one extra pipelined sub-batch per replica,
+//! not N sequential round trips), and reads walk the same ring on a miss or
+//! transport error — a dead shard costs a failover, not the run.  Per-shard
+//! health is a consecutive-failure circuit breaker with a timed half-open
+//! reconnect probe; aggregate operations degrade to partial results plus a
+//! per-shard error report ([`ClusterClient::shard_errors`]) instead of
+//! failing outright.  What replication actually did is counted in
+//! [`FailoverStats`] and folded into the aggregated [`DbInfo`].  The chaos
+//! battery drives this path deterministically by planting a seeded
+//! [`crate::util::fault::FaultPlan`] under the real sockets.
 
 pub mod backpressure;
 
-pub use backpressure::{GovernorConfig, GovernorStats, PublishGovernor, RetryPolicy};
+pub use backpressure::{GovernorConfig, GovernorStats, PublishGovernor, RetryClass, RetryPolicy};
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpStream};
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::db::cluster::SlotMap;
 use crate::db::store::RetentionConfig;
 use crate::error::{Error, Result};
-use crate::proto::frame::{begin_split_frame, end_split_frame, read_frame, FrameSink};
+use crate::proto::frame::{
+    begin_split_frame, end_split_frame, read_frame, FrameSink, MID_FRAME_TIMEOUT_MSG,
+};
 use crate::proto::{message, DbInfo, Device, Request, Response};
 use crate::tensor::{Bytes, Tensor};
+use crate::util::fault::{FaultPlan, FaultStream};
 
 /// Key scheme used across the framework: tensors are unique per rank and
 /// step so nothing is overwritten (paper §2.2).  Step keys are what the
@@ -322,36 +341,76 @@ pub trait DataStore {
     fn execute(&mut self, pipeline: Pipeline) -> Result<Vec<Response>>;
 }
 
+/// Default per-operation socket deadline for [`Client`] connections: long
+/// enough for a loaded shard to stream a large reply, short enough that a
+/// hung or partitioned one is detected the same run.  Expiry surfaces as a
+/// *retryable* I/O error ([`Error::is_transient_io`]), which is what lets
+/// the cluster client fail over instead of blocking forever.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(5);
+
 /// A connection to one database instance.
 pub struct Client {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
+    reader: BufReader<FaultStream>,
+    writer: FaultStream,
     buf: Vec<u8>,
     pub addr: SocketAddr,
+    io_timeout: Option<Duration>,
 }
 
 impl Client {
     /// Connect (the paper's `SmartRedis client initialization`, measured at
-    /// ~2 ms in Table 1).
+    /// ~2 ms in Table 1) with the default I/O deadline and no fault shim.
     pub fn connect(addr: SocketAddr) -> Result<Client> {
+        Client::connect_with(addr, Some(DEFAULT_IO_TIMEOUT), None)
+    }
+
+    /// Connect with an explicit per-operation socket deadline (`None`
+    /// blocks forever, the pre-deadline behaviour) and an optional fault
+    /// plan whose next connection-schedule this socket will wear.
+    ///
+    /// After a deadline expires mid-operation the stream may be desynced (a
+    /// late reply could still arrive); callers that retry should reconnect
+    /// rather than reuse the connection — [`ClusterClient`] does exactly
+    /// that via its per-shard health tracking.
+    pub fn connect_with(
+        addr: SocketAddr,
+        io_timeout: Option<Duration>,
+        faults: Option<&Arc<FaultPlan>>,
+    ) -> Result<Client> {
         let sock = TcpStream::connect(addr)?;
         sock.set_nodelay(true)?;
-        let writer = sock.try_clone()?;
+        sock.set_read_timeout(io_timeout)?;
+        sock.set_write_timeout(io_timeout)?;
+        let stream = FaultStream::over(sock, faults.map(|p| p.connection()));
+        let writer = stream.try_clone()?;
         Ok(Client {
-            reader: BufReader::with_capacity(256 * 1024, sock),
+            reader: BufReader::with_capacity(256 * 1024, stream),
             writer,
             buf: Vec::with_capacity(64 * 1024),
             addr,
+            io_timeout,
         })
     }
 
     /// Connect with retries (components race the DB at startup).  Sleeps
     /// `delay` between attempts — not after the last failed one.
     pub fn connect_retry(addr: SocketAddr, tries: usize, delay: Duration) -> Result<Client> {
+        Client::connect_retry_with(addr, tries, delay, Some(DEFAULT_IO_TIMEOUT), None)
+    }
+
+    /// [`Client::connect_retry`] with the deadline and fault knobs of
+    /// [`Client::connect_with`].
+    pub fn connect_retry_with(
+        addr: SocketAddr,
+        tries: usize,
+        delay: Duration,
+        io_timeout: Option<Duration>,
+        faults: Option<&Arc<FaultPlan>>,
+    ) -> Result<Client> {
         let tries = tries.max(1);
         let mut last = None;
         for attempt in 0..tries {
-            match Client::connect(addr) {
+            match Client::connect_with(addr, io_timeout, faults) {
                 Ok(c) => return Ok(c),
                 Err(e) => {
                     last = Some(e);
@@ -368,12 +427,22 @@ impl Client {
     /// tensor reply's payload (every tensor in a batch reply) aliases the
     /// freshly-read buffer (zero copy).
     fn read_response(&mut self) -> Result<Response> {
-        match read_frame(&mut self.reader)? {
-            Some(body) => Response::decode_shared(&Bytes::from_vec(body)),
-            None => Err(Error::Io(std::io::Error::new(
+        match read_frame(&mut self.reader) {
+            Ok(Some(body)) => Response::decode_shared(&Bytes::from_vec(body)),
+            Ok(None) => Err(Error::Io(std::io::Error::new(
                 std::io::ErrorKind::UnexpectedEof,
                 "server closed connection",
             ))),
+            // The socket deadline expired partway through a reply: the
+            // stream is desynced, which is a transport failure, not a
+            // protocol bug — reclassify so retry/failover logic sees it.
+            Err(Error::Protocol(m)) if m == MID_FRAME_TIMEOUT_MSG => {
+                Err(Error::Io(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "reply timed out mid-frame",
+                )))
+            }
+            Err(e) => Err(e),
         }
     }
 
@@ -492,7 +561,19 @@ impl DataStore for Client {
             initial_us: poll.initial.as_micros().min(u64::MAX as u128) as u64,
             cap_us: poll.cap.as_micros().min(u64::MAX as u128) as u64,
         };
-        if self.call(&req)?.expect_bool()? {
+        // The server legitimately blocks up to `max_wait` before replying,
+        // so the socket deadline must outlast the poll budget; restore the
+        // normal deadline afterwards (best-effort — a failing setsockopt
+        // here is not worth masking the poll result).
+        if let Some(t) = self.io_timeout {
+            let widened = poll.max_wait.saturating_add(t);
+            let _ = self.reader.get_ref().set_read_timeout(Some(widened));
+        }
+        let res = self.call(&req);
+        if let Some(t) = self.io_timeout {
+            let _ = self.reader.get_ref().set_read_timeout(Some(t));
+        }
+        if res?.expect_bool()? {
             Ok(())
         } else {
             Err(Error::Timeout(format!(
@@ -566,34 +647,243 @@ impl DataStore for Client {
     }
 }
 
+/// How a [`ClusterClient`] connects, replicates writes, and reacts to shard
+/// failure.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Copies kept of every write: the owning shard plus the next
+    /// `replicas − 1` shards in ring order.  Clamped to `1..=n_shards` at
+    /// connect time; `1` (the default) reproduces the unreplicated
+    /// behaviour exactly.
+    pub replicas: usize,
+    /// Per-operation socket deadline for every shard connection
+    /// ([`Client::connect_with`]); `None` blocks forever.
+    pub io_timeout: Option<Duration>,
+    /// Consecutive transient-I/O failures before a shard's circuit breaker
+    /// opens (further ops fail fast instead of re-dialing a dead peer).
+    pub breaker_threshold: u32,
+    /// How long an open breaker rejects before letting one half-open
+    /// reconnect probe through.
+    pub breaker_cooldown: Duration,
+    /// Connection attempts per shard, at connect time and on reconnect.
+    pub connect_tries: usize,
+    /// Sleep between connection attempts.
+    pub connect_delay: Duration,
+    /// Optional seeded fault schedule worn by the client side of every
+    /// shard connection (the chaos battery's hook).
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            replicas: 1,
+            io_timeout: Some(DEFAULT_IO_TIMEOUT),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
+            connect_tries: 1,
+            connect_delay: Duration::from_millis(50),
+            faults: None,
+        }
+    }
+}
+
+/// What replication and failover actually did over a [`ClusterClient`]'s
+/// lifetime.  Folded into the aggregated [`DbInfo`] by
+/// [`ClusterClient::info`] (single servers always report these as zero —
+/// they are client-side phenomena).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FailoverStats {
+    /// Successful replica copies of writes beyond the first landed copy.
+    pub replicated_writes: u64,
+    /// Reads answered by a non-primary target after the primary missed or
+    /// transport-failed.
+    pub read_failovers: u64,
+    /// Shard connections re-established after a failure.
+    pub shard_reconnects: u64,
+    /// Aggregate/replicated operations that succeeded with at least one
+    /// shard unreachable (see [`ClusterClient::shard_errors`]).
+    pub degraded_ops: u64,
+}
+
+/// One shard's failure from the most recent degraded operation.
+#[derive(Debug, Clone)]
+pub struct ShardError {
+    pub shard: usize,
+    pub addr: SocketAddr,
+    pub error: String,
+}
+
+/// One shard's connection plus its health state.  The connection is
+/// dropped on any transient transport error (a desynced stream must never
+/// be reused) and re-established lazily, gated by the circuit breaker.
+struct ShardConn {
+    addr: SocketAddr,
+    client: Option<Client>,
+    consecutive_failures: u32,
+    retry_at: Option<Instant>,
+}
+
+impl ShardConn {
+    fn new(addr: SocketAddr) -> ShardConn {
+        ShardConn { addr, client: None, consecutive_failures: 0, retry_at: None }
+    }
+
+    /// Breaker-gated access: while the breaker is open and cooling down,
+    /// fail fast with a transient error; past the cooldown, let one
+    /// half-open reconnect probe through.
+    fn get(&mut self, cfg: &ClusterConfig, stats: &mut FailoverStats) -> Result<&mut Client> {
+        if self.client.is_none() {
+            if let Some(at) = self.retry_at {
+                if Instant::now() < at {
+                    return Err(Error::Io(std::io::Error::new(
+                        std::io::ErrorKind::NotConnected,
+                        format!("shard {} breaker open", self.addr),
+                    )));
+                }
+            }
+            let was_down = self.consecutive_failures > 0 || self.retry_at.is_some();
+            match Client::connect_retry_with(
+                self.addr,
+                cfg.connect_tries,
+                cfg.connect_delay,
+                cfg.io_timeout,
+                cfg.faults.as_ref(),
+            ) {
+                Ok(c) => {
+                    if was_down {
+                        stats.shard_reconnects += 1;
+                    }
+                    self.client = Some(c);
+                }
+                Err(e) => {
+                    self.fail(cfg);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(self.client.as_mut().expect("just connected"))
+    }
+
+    fn fail(&mut self, cfg: &ClusterConfig) {
+        self.client = None;
+        self.consecutive_failures = self.consecutive_failures.saturating_add(1);
+        if self.consecutive_failures >= cfg.breaker_threshold {
+            self.retry_at = Some(Instant::now() + cfg.breaker_cooldown);
+        }
+    }
+
+    /// Health bookkeeping for an op's outcome: a transient transport error
+    /// poisons the connection (it may be desynced — reconnect before
+    /// reuse); any other outcome, including application errors like
+    /// `KeyNotFound`, proves the link healthy and closes the breaker.
+    fn note<T>(&mut self, res: &Result<T>, cfg: &ClusterConfig) {
+        match res {
+            Err(e) if e.is_transient_io() => self.fail(cfg),
+            _ => {
+                self.consecutive_failures = 0;
+                self.retry_at = None;
+            }
+        }
+    }
+}
+
+/// Whether a routable pipeline entry mutates state — and so must fan out
+/// to every replica target — or reads it (first authoritative answer
+/// wins).
+fn is_write_request(r: &Request) -> bool {
+    matches!(
+        r,
+        Request::PutTensor { .. } | Request::PutMeta { .. } | Request::DelTensor { .. }
+    )
+}
+
+/// Response quality for replica merging: an authoritative success beats an
+/// authoritative miss (`NotFound` / `Bool(false)` — a replica may still
+/// hold the key) beats a busy rejection (retryable) beats any other error.
+fn resp_rank(r: &Response) -> u8 {
+    match r {
+        Response::NotFound | Response::Bool(false) => 2,
+        Response::Error(m) if m.starts_with("busy: ") => 1,
+        Response::Error(_) => 0,
+        _ => 3,
+    }
+}
+
 /// Client for the clustered deployment: routes each key to the owning shard
 /// via the redis-cluster hash-slot map, and implements the complete
 /// [`DataStore`] surface — multi-key operations are partitioned per shard
 /// and reassembled, models are broadcast to every shard, `info` aggregates.
+///
+/// With [`ClusterConfig::replicas`] > 1, writes fan out to the owner plus
+/// the next shards in ring order and reads fail over along the same ring;
+/// see the module docs for the full failure semantics.
 pub struct ClusterClient {
-    shards: Vec<Client>,
+    shards: Vec<ShardConn>,
     slots: SlotMap,
+    cfg: ClusterConfig,
+    stats: FailoverStats,
+    last_errors: Vec<ShardError>,
 }
 
 impl ClusterClient {
+    /// Connect with defaults: no replication, the default I/O deadline, no
+    /// fault injection.
     pub fn connect(addrs: &[SocketAddr]) -> Result<ClusterClient> {
-        let shards = addrs
-            .iter()
-            .map(|a| Client::connect(*a))
-            .collect::<Result<Vec<_>>>()?;
-        Ok(ClusterClient { slots: SlotMap::new(shards.len()), shards })
+        ClusterClient::connect_with(addrs, ClusterConfig::default())
+    }
+
+    /// Connect every shard eagerly (startup races are the caller's problem
+    /// to retry via [`ClusterConfig::connect_tries`]); shards that die
+    /// *later* are redialed lazily under the circuit breaker.
+    pub fn connect_with(addrs: &[SocketAddr], mut cfg: ClusterConfig) -> Result<ClusterClient> {
+        if addrs.is_empty() {
+            return Err(Error::Invalid("cluster with no shard addresses".into()));
+        }
+        cfg.replicas = cfg.replicas.clamp(1, addrs.len());
+        let mut shards: Vec<ShardConn> = addrs.iter().map(|a| ShardConn::new(*a)).collect();
+        let mut ignored = FailoverStats::default();
+        for s in &mut shards {
+            s.get(&cfg, &mut ignored)?;
+        }
+        Ok(ClusterClient {
+            slots: SlotMap::new(shards.len()),
+            shards,
+            cfg,
+            stats: FailoverStats::default(),
+            last_errors: Vec::new(),
+        })
     }
 
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
 
-    fn route(&mut self, key: &str) -> &mut Client {
-        let i = self.slots.shard_for_key(key);
-        &mut self.shards[i]
+    /// Effective replication factor (post-clamp).
+    pub fn replicas(&self) -> usize {
+        self.cfg.replicas
     }
 
-    /// Partition indices `0..keys.len()` by owning shard.
+    /// Counters of what replication/failover actually did so far.
+    pub fn failover_stats(&self) -> FailoverStats {
+        self.stats
+    }
+
+    /// Per-shard failures from the most recent operation that succeeded
+    /// degraded (partial result).  Empty when it fully succeeded.
+    pub fn shard_errors(&self) -> &[ShardError] {
+        &self.last_errors
+    }
+
+    /// Shards holding copies of `key`: the hash-slot owner plus the next
+    /// `replicas − 1` shards in ring order.
+    fn targets(&self, key: &str) -> Vec<usize> {
+        let primary = self.slots.shard_for_key(key);
+        let n = self.shards.len();
+        (0..self.cfg.replicas).map(|i| (primary + i) % n).collect()
+    }
+
+    /// Partition indices `0..keys.len()` by owning (primary) shard.
     fn partition_keys(&self, keys: &[String]) -> Vec<Vec<usize>> {
         let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
         for (i, k) in keys.iter().enumerate() {
@@ -601,133 +891,378 @@ impl ClusterClient {
         }
         by_shard
     }
+
+    /// Run `op` against shard `i` through the breaker, recording the
+    /// outcome in that shard's health state.
+    fn on_shard<T>(&mut self, i: usize, op: impl FnOnce(&mut Client) -> Result<T>) -> Result<T> {
+        let cfg = self.cfg.clone();
+        let res = match self.shards[i].get(&cfg, &mut self.stats) {
+            Ok(c) => op(c),
+            Err(e) => Err(e),
+        };
+        self.shards[i].note(&res, &cfg);
+        res
+    }
+
+    /// Record a degraded (partial) success: count it and keep the
+    /// per-shard error report for [`ClusterClient::shard_errors`].
+    fn note_degraded(&mut self, errs: &[(usize, Error)]) {
+        self.stats.degraded_ops += 1;
+        self.last_errors = errs
+            .iter()
+            .map(|(s, e)| ShardError { shard: *s, addr: self.shards[*s].addr, error: e.to_string() })
+            .collect();
+    }
+
+    /// Apply a write to every replica target of `key`.  Succeeds if at
+    /// least one copy landed (further copies count as replicated writes);
+    /// fails only when *no* target took it, preferring a `Busy` error — the
+    /// one failure the publish-side retry loops know how to wait out.
+    fn replicated_write(
+        &mut self,
+        key: &str,
+        mut op: impl FnMut(&mut Client) -> Result<()>,
+    ) -> Result<()> {
+        self.last_errors.clear();
+        let targets = self.targets(key);
+        let mut ok = 0usize;
+        let mut errs: Vec<(usize, Error)> = Vec::new();
+        for (off, &shard) in targets.iter().enumerate() {
+            match self.on_shard(shard, &mut op) {
+                Ok(()) => {
+                    ok += 1;
+                    if off > 0 {
+                        self.stats.replicated_writes += 1;
+                    }
+                }
+                Err(e) => errs.push((shard, e)),
+            }
+        }
+        if ok == 0 {
+            let busy = errs.iter().position(|(_, e)| matches!(e, Error::Busy(_)));
+            return Err(errs.swap_remove(busy.unwrap_or(0)).1);
+        }
+        if !errs.is_empty() {
+            self.note_degraded(&errs);
+        }
+        Ok(())
+    }
+
+    /// Try a read on each replica target in ring order, advancing past dead
+    /// targets (transient I/O) and authoritative misses; a success on a
+    /// non-primary target counts as a read failover.  If every reachable
+    /// copy reported a miss, the miss wins (callers can fall back to the
+    /// cold tier); only when *no* target answered does the transport error
+    /// surface.
+    fn read_any<T>(
+        &mut self,
+        key: &str,
+        mut op: impl FnMut(&mut Client) -> Result<T>,
+        is_miss: impl Fn(&T) -> bool,
+    ) -> Result<T> {
+        let targets = self.targets(key);
+        let mut miss: Option<T> = None;
+        let mut not_found: Option<Error> = None;
+        let mut io_err: Option<Error> = None;
+        for (off, &shard) in targets.iter().enumerate() {
+            match self.on_shard(shard, &mut op) {
+                Ok(v) if is_miss(&v) => {
+                    if miss.is_none() {
+                        miss = Some(v);
+                    }
+                }
+                Ok(v) => {
+                    if off > 0 {
+                        self.stats.read_failovers += 1;
+                    }
+                    return Ok(v);
+                }
+                Err(e @ Error::KeyNotFound(_)) => not_found = Some(e),
+                Err(e) if e.is_transient_io() => io_err = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        if let Some(v) = miss {
+            return Ok(v);
+        }
+        Err(not_found
+            .or(io_err)
+            .unwrap_or_else(|| Error::KeyNotFound(key.to_string())))
+    }
+
+    /// Broadcast `op` to every shard, tolerating unreachable ones as long
+    /// as at least one succeeds (degraded success, reported via
+    /// [`ClusterClient::shard_errors`]).
+    fn broadcast(&mut self, mut op: impl FnMut(&mut Client) -> Result<()>) -> Result<()> {
+        self.last_errors.clear();
+        let mut ok = 0usize;
+        let mut errs: Vec<(usize, Error)> = Vec::new();
+        for i in 0..self.shards.len() {
+            match self.on_shard(i, &mut op) {
+                Ok(()) => ok += 1,
+                Err(e) => errs.push((i, e)),
+            }
+        }
+        if ok == 0 {
+            return Err(errs.swap_remove(0).1);
+        }
+        if !errs.is_empty() {
+            self.note_degraded(&errs);
+        }
+        Ok(())
+    }
+
+    /// Merge sorted key lists from every reachable shard.  Deduped, because
+    /// replication stores the same key on several shards.
+    fn merged_keys(
+        &mut self,
+        mut op: impl FnMut(&mut Client) -> Result<Vec<String>>,
+    ) -> Result<Vec<String>> {
+        self.last_errors.clear();
+        let mut all = Vec::new();
+        let mut ok = 0usize;
+        let mut errs: Vec<(usize, Error)> = Vec::new();
+        for i in 0..self.shards.len() {
+            match self.on_shard(i, &mut op) {
+                Ok(keys) => {
+                    ok += 1;
+                    all.extend(keys);
+                }
+                Err(e) => errs.push((i, e)),
+            }
+        }
+        if ok == 0 {
+            return Err(errs.swap_remove(0).1);
+        }
+        if !errs.is_empty() {
+            self.note_degraded(&errs);
+        }
+        all.sort();
+        all.dedup();
+        Ok(all)
+    }
 }
 
 impl DataStore for ClusterClient {
+    /// Fans out to every replica target; succeeds when at least one copy
+    /// landed.
     fn put_tensor(&mut self, key: &str, t: &Tensor) -> Result<()> {
-        self.route(key).put_tensor(key, t)
+        self.replicated_write(key, |c| c.put_tensor(key, t))
     }
 
+    /// Primary first, then each replica on a miss or transport error.
     fn get_tensor(&mut self, key: &str) -> Result<Tensor> {
-        self.route(key).get_tensor(key)
+        self.read_any(key, |c| c.get_tensor(key), |_| false)
     }
 
-    /// One `MGetTensors` round trip per shard that owns any of the keys.
+    /// One `MGetTensors` round trip per shard that owns any of the keys;
+    /// sub-batches that hit a dead shard or a missing key fall back to
+    /// per-key [`DataStore::get_tensor`], which walks the replicas.
     fn mget_tensors(&mut self, keys: &[String]) -> Result<Vec<Tensor>> {
+        check_batch_len(keys.len())?;
         let by_shard = self.partition_keys(keys);
         let mut out: Vec<Option<Tensor>> = keys.iter().map(|_| None).collect();
+        let mut retry: Vec<usize> = Vec::new();
         for (shard, idxs) in by_shard.into_iter().enumerate() {
             if idxs.is_empty() {
                 continue;
             }
             let sub: Vec<String> = idxs.iter().map(|&i| keys[i].clone()).collect();
-            let got = self.shards[shard].mget_tensors(&sub)?;
-            for (i, t) in idxs.into_iter().zip(got) {
-                out[i] = Some(t);
+            match self.on_shard(shard, |c| c.mget_tensors(&sub)) {
+                Ok(got) => {
+                    for (i, t) in idxs.into_iter().zip(got) {
+                        out[i] = Some(t);
+                    }
+                }
+                // The whole sub-batch failed (shard down, or one key
+                // missing aborts the batch): retry key-by-key with
+                // failover.  Misses are the exception path, so the extra
+                // round trips only happen when something already went
+                // wrong.
+                Err(e) if e.is_transient_io() || matches!(e, Error::KeyNotFound(_)) => {
+                    retry.extend(idxs);
+                }
+                Err(e) => return Err(e),
             }
+        }
+        for i in retry {
+            out[i] = Some(self.get_tensor(&keys[i])?);
         }
         Ok(out.into_iter().map(|t| t.expect("all partitions filled")).collect())
     }
 
+    /// Deletes every replica copy; `true` if any copy existed.
     fn del_tensor(&mut self, key: &str) -> Result<bool> {
-        self.route(key).del_tensor(key)
+        self.last_errors.clear();
+        let targets = self.targets(key);
+        let mut any = false;
+        let mut reached = false;
+        let mut errs: Vec<(usize, Error)> = Vec::new();
+        for &shard in &targets {
+            match self.on_shard(shard, |c| c.del_tensor(key)) {
+                Ok(b) => {
+                    reached = true;
+                    any |= b;
+                }
+                Err(e) => errs.push((shard, e)),
+            }
+        }
+        if !reached {
+            return Err(errs.swap_remove(0).1);
+        }
+        if !errs.is_empty() {
+            self.note_degraded(&errs);
+        }
+        Ok(any)
     }
 
-    /// One `DelKeys` round trip per shard that owns any of the keys.
+    /// One batched round trip per (shard, replica offset); per-key
+    /// presence is OR-ed across copies so a key deleted from two replicas
+    /// still counts once.  Errors only if some key was unreachable on
+    /// *every* copy.
     fn del_keys(&mut self, keys: &[String]) -> Result<u64> {
-        let by_shard = self.partition_keys(keys);
-        let mut n = 0;
-        for (shard, idxs) in by_shard.into_iter().enumerate() {
-            if idxs.is_empty() {
-                continue;
-            }
-            let sub: Vec<String> = idxs.iter().map(|&i| keys[i].clone()).collect();
-            n += self.shards[shard].del_keys(&sub)?;
+        if keys.is_empty() {
+            return Ok(0);
         }
-        Ok(n)
+        check_batch_len(keys.len())?;
+        self.last_errors.clear();
+        let by_shard = self.partition_keys(keys);
+        let nsh = self.shards.len();
+        let mut deleted = vec![false; keys.len()];
+        let mut reached = vec![false; keys.len()];
+        let mut errs: Vec<(usize, Error)> = Vec::new();
+        for off in 0..self.cfg.replicas {
+            for (shard, idxs) in by_shard.iter().enumerate() {
+                if idxs.is_empty() {
+                    continue;
+                }
+                let target = (shard + off) % nsh;
+                let sub: Vec<Request> = idxs
+                    .iter()
+                    .map(|&i| Request::DelTensor { key: keys[i].clone() })
+                    .collect();
+                match self.on_shard(target, |c| c.exec_requests(&sub)) {
+                    Ok(resps) => {
+                        for (&i, r) in idxs.iter().zip(resps) {
+                            if let Ok(b) = r.expect_deleted() {
+                                reached[i] = true;
+                                deleted[i] |= b;
+                            }
+                        }
+                    }
+                    Err(e) => errs.push((target, e)),
+                }
+            }
+        }
+        if let Some(i) = reached.iter().position(|&r| !r) {
+            return Err(match errs.into_iter().next() {
+                Some((_, e)) => e,
+                None => Error::KeyNotFound(keys[i].clone()),
+            });
+        }
+        if !errs.is_empty() {
+            self.note_degraded(&errs);
+        }
+        Ok(deleted.iter().filter(|&&b| b).count() as u64)
     }
 
     /// Broadcast: each shard instance applies the policy to its own store.
     /// A generation's keys scatter across shards, so each shard windows the
     /// generations *it* holds — cluster-wide, the newest `window`
-    /// generations of every field are always fully retained.
+    /// generations of every field are always fully retained.  Unreachable
+    /// shards are tolerated (degraded) and pick the policy back up when
+    /// reconfigured after recovery.
     fn set_retention(&mut self, cfg: RetentionConfig) -> Result<()> {
-        for c in &mut self.shards {
-            c.set_retention(cfg)?;
-        }
-        Ok(())
+        self.broadcast(|c| c.set_retention(cfg))
     }
 
+    /// `true` if any reachable copy has the key.
     fn exists(&mut self, key: &str) -> Result<bool> {
-        self.route(key).exists(key)
+        self.read_any(key, |c| c.exists(key), |&b| !b)
     }
 
     /// One blocking `PollKeys` per shard that owns any of the keys; the
     /// total budget is shared (each shard gets what remains of `max_wait`).
+    /// A dead primary fails over to its replicas — writes fanned out to
+    /// them, so the keys appear there too.
     fn poll_keys(&mut self, keys: &[String], poll: &PollConfig) -> Result<()> {
-        let deadline = std::time::Instant::now() + poll.max_wait;
+        let deadline = Instant::now() + poll.max_wait;
         let by_shard = self.partition_keys(keys);
+        let nsh = self.shards.len();
+        let timeout = || {
+            Error::Timeout(format!(
+                "keys {keys:?} not all present after {:?}",
+                poll.max_wait
+            ))
+        };
         for (shard, idxs) in by_shard.into_iter().enumerate() {
             if idxs.is_empty() {
                 continue;
             }
             let sub: Vec<String> = idxs.iter().map(|&i| keys[i].clone()).collect();
-            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
-            let budget = PollConfig { max_wait: remaining, ..*poll };
-            self.shards[shard].poll_keys(&sub, &budget).map_err(|e| match e {
-                // Rewrite per-shard timeouts to name the whole key set.
-                Error::Timeout(_) => Error::Timeout(format!(
-                    "keys {keys:?} not all present after {:?}",
-                    poll.max_wait
-                )),
-                other => other,
-            })?;
+            let mut last: Option<Error> = None;
+            let mut done = false;
+            for off in 0..self.cfg.replicas {
+                let target = (shard + off) % nsh;
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                let budget = PollConfig { max_wait: remaining, ..*poll };
+                match self.on_shard(target, |c| c.poll_keys(&sub, &budget)) {
+                    Ok(()) => {
+                        if off > 0 {
+                            self.stats.read_failovers += 1;
+                        }
+                        done = true;
+                        break;
+                    }
+                    Err(e) if e.is_transient_io() => last = Some(e),
+                    // Rewrite per-shard timeouts to name the whole key set.
+                    Err(Error::Timeout(_)) => last = Some(timeout()),
+                    Err(e) => return Err(e),
+                }
+            }
+            if !done {
+                return Err(last.unwrap_or_else(timeout));
+            }
         }
         Ok(())
     }
 
+    /// Fans out to every replica target, like `put_tensor`.
     fn put_meta(&mut self, key: &str, value: &str) -> Result<()> {
-        self.route(key).put_meta(key, value)
+        self.replicated_write(key, |c| c.put_meta(key, value))
     }
 
+    /// Primary first, then replicas; `Ok(None)` is a miss that falls
+    /// through to the next copy.
     fn get_meta(&mut self, key: &str) -> Result<Option<String>> {
-        self.route(key).get_meta(key)
+        self.read_any(key, |c| c.get_meta(key), |v| v.is_none())
     }
 
-    /// Keys across all shards (merged + sorted).
+    /// Keys across all reachable shards (merged + sorted + deduped —
+    /// replication stores a key on several shards).
     fn list_keys(&mut self, prefix: &str) -> Result<Vec<String>> {
-        let mut all = Vec::new();
-        for c in &mut self.shards {
-            all.extend(c.list_keys(prefix)?);
-        }
-        all.sort();
-        Ok(all)
+        self.merged_keys(|c| c.list_keys(prefix))
     }
 
-    /// Cold-tier keys across all shards (merged + sorted) — each shard
-    /// spilled the keys it evicted locally.
+    /// Cold-tier keys across all reachable shards (merged + sorted +
+    /// deduped) — each shard spilled the keys it evicted locally.
     fn cold_list(&mut self, prefix: &str) -> Result<Vec<String>> {
-        let mut all = Vec::new();
-        for c in &mut self.shards {
-            all.extend(c.cold_list(prefix)?);
-        }
-        all.sort();
-        Ok(all)
+        self.merged_keys(|c| c.cold_list(prefix))
     }
 
-    /// Routes to the owning shard: a key spills on the shard it hashes to
-    /// (that shard evicted it), so cold routing equals hot routing.
+    /// A key spills on the shard that evicted it, so cold routing equals
+    /// hot routing — including the replica walk: each copy's shard may
+    /// have spilled its copy independently.
     fn cold_get(&mut self, key: &str) -> Result<Tensor> {
-        self.route(key).cold_get(key)
+        self.read_any(key, |c| c.cold_get(key), |_| false)
     }
 
     /// Models are broadcast to every shard, so `run_model` can execute
-    /// wherever its inputs land.
+    /// wherever its inputs land.  Shards that are down miss the upload
+    /// (reported via [`ClusterClient::shard_errors`]); re-upload after
+    /// recovery, or route inference away from them.
     fn put_model(&mut self, key: &str, hlo_text: &str) -> Result<()> {
-        for c in &mut self.shards {
-            c.put_model(key, hlo_text)?;
-        }
-        Ok(())
+        self.broadcast(|c| c.put_model(key, hlo_text))
     }
 
     /// Executes on the shard owning the first input key.  Inputs owned by
@@ -749,22 +1284,32 @@ impl DataStore for ClusterClient {
         let mut staged: Vec<&String> = Vec::new();
         for k in in_keys {
             if self.slots.shard_for_key(k) != target {
-                let t = self.route(k).get_tensor(k)?;
-                self.shards[target].put_tensor(k, &t)?;
+                // Failover-aware read; the staged copy is transient, so it
+                // goes to the target only (not replicated).
+                let t = self.get_tensor(k)?;
+                self.on_shard(target, |c| c.put_tensor(k, &t))?;
                 staged.push(k);
             }
         }
-        self.shards[target].run_model(key, in_keys, out_keys, device)?;
+        self.on_shard(target, |c| c.run_model(key, in_keys, out_keys, device))?;
         for k in out_keys {
             let owner = self.slots.shard_for_key(k);
             if owner != target {
-                let t = self.shards[target].get_tensor(k)?;
-                self.shards[owner].put_tensor(k, &t)?;
-                self.shards[target].del_tensor(k)?;
+                let t = self.on_shard(target, |c| c.get_tensor(k))?;
+                // Outputs are real data: replicate them like any write so
+                // later reads can fail over.  Only scrub the target's
+                // staging copy if the target isn't itself a replica home
+                // for this key.
+                self.put_tensor(k, &t)?;
+                if !self.targets(k).contains(&target) {
+                    self.on_shard(target, |c| c.del_tensor(k))?;
+                }
             }
         }
         for k in staged {
-            self.shards[target].del_tensor(k)?;
+            if !self.targets(k).contains(&target) {
+                self.on_shard(target, |c| c.del_tensor(k))?;
+            }
         }
         Ok(())
     }
@@ -778,10 +1323,28 @@ impl DataStore for ClusterClient {
     /// the cluster-wide byte budget.  The summed high-water mark is an
     /// upper bound on cluster-wide peak residency (shards may not peak
     /// simultaneously).
+    ///
+    /// Unreachable shards are skipped — their counters are simply absent
+    /// from the aggregate (degraded, see [`ClusterClient::shard_errors`]).
+    /// The four client-side replication/failover counters are filled in
+    /// from [`FailoverStats`]: individual servers cannot observe them and
+    /// always report zero.
     fn info(&mut self) -> Result<DbInfo> {
+        self.last_errors.clear();
         let mut agg = DbInfo::default();
-        for c in &mut self.shards {
-            let i = c.info()?;
+        let mut ok = 0usize;
+        let mut errs: Vec<(usize, Error)> = Vec::new();
+        for idx in 0..self.shards.len() {
+            let i = match self.on_shard(idx, |c| c.info()) {
+                Ok(i) => {
+                    ok += 1;
+                    i
+                }
+                Err(e) => {
+                    errs.push((idx, e));
+                    continue;
+                }
+            };
             agg.keys += i.keys;
             agg.bytes += i.bytes;
             agg.ops += i.ops;
@@ -819,32 +1382,46 @@ impl DataStore for ClusterClient {
                 }
             }
         }
+        if ok == 0 {
+            return Err(errs.swap_remove(0).1);
+        }
+        if !errs.is_empty() {
+            self.note_degraded(&errs);
+        }
         agg.fields.sort_by(|a, b| a.field.cmp(&b.field));
+        agg.replicated_writes = self.stats.replicated_writes;
+        agg.read_failovers = self.stats.read_failovers;
+        agg.shard_reconnects = self.stats.shard_reconnects;
+        agg.degraded_ops = self.stats.degraded_ops;
         Ok(agg)
     }
 
     fn flush_all(&mut self) -> Result<()> {
-        for c in &mut self.shards {
-            c.flush_all()?;
-        }
-        Ok(())
+        self.broadcast(|c| c.flush_all())
     }
 
     /// Partitions the pipeline per owning shard, executes one sub-batch
     /// frame per shard, and reassembles results in submission order.  Every
     /// entry must carry a routing key ([`Request::routing_key`]); use the
     /// dedicated trait methods for whole-database operations.
+    ///
+    /// With replication there is one *round* of pipelined sub-batches per
+    /// replica offset — a batched put costs one extra frame per replica,
+    /// not one extra round trip per key.  Writes run in every round (fan
+    /// out); reads only re-run while they lack an authoritative answer
+    /// (primary dead or key missing there), and per entry the best-ranked
+    /// response wins ([`resp_rank`]): success > miss > busy > error.  An
+    /// entry that got *no* response — every target shard unreachable —
+    /// fails the call with the first transport error, which is also the
+    /// clean `replicas = 1` degradation.
     fn execute(&mut self, pipeline: Pipeline) -> Result<Vec<Response>> {
         let reqs = pipeline.into_requests();
         let n = reqs.len();
-        let mut by_shard: Vec<Vec<(usize, Request)>> =
-            self.shards.iter().map(|_| Vec::new()).collect();
-        for (i, r) in reqs.into_iter().enumerate() {
+        check_batch_len(n)?;
+        let mut primary = Vec::with_capacity(n);
+        for (i, r) in reqs.iter().enumerate() {
             match r.routing_key() {
-                Some(k) => {
-                    let shard = self.slots.shard_for_key(k);
-                    by_shard[shard].push((i, r));
-                }
+                Some(k) => primary.push(self.slots.shard_for_key(k)),
                 None => {
                     return Err(Error::Invalid(format!(
                         "pipeline entry {i} has no routing key ({r:?}); \
@@ -853,17 +1430,64 @@ impl DataStore for ClusterClient {
                 }
             }
         }
-        let mut out: Vec<Option<Response>> = (0..n).map(|_| None).collect();
-        for (shard, entries) in by_shard.into_iter().enumerate() {
-            if entries.is_empty() {
-                continue;
+        let writes: Vec<bool> = reqs.iter().map(is_write_request).collect();
+        let nsh = self.shards.len();
+        let mut best: Vec<Option<Response>> = (0..n).map(|_| None).collect();
+        let mut first_io: Option<Error> = None;
+        for off in 0..self.cfg.replicas {
+            let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); nsh];
+            for i in 0..n {
+                let needs = writes[i]
+                    || best[i].as_ref().map_or(true, |b| resp_rank(b) < 3);
+                if needs {
+                    by_shard[(primary[i] + off) % nsh].push(i);
+                }
             }
-            let (idxs, sub): (Vec<usize>, Vec<Request>) = entries.into_iter().unzip();
-            let resps = self.shards[shard].exec_requests(&sub)?;
-            for (i, r) in idxs.into_iter().zip(resps) {
-                out[i] = Some(r);
+            for (shard, idxs) in by_shard.into_iter().enumerate() {
+                if idxs.is_empty() {
+                    continue;
+                }
+                let sub: Vec<Request> = idxs.iter().map(|&i| reqs[i].clone()).collect();
+                match self.on_shard(shard, |c| c.exec_requests(&sub)) {
+                    Ok(resps) => {
+                        for (&i, r) in idxs.iter().zip(resps) {
+                            let rank = resp_rank(&r);
+                            if off > 0 && rank == 3 {
+                                if writes[i] {
+                                    self.stats.replicated_writes += 1;
+                                } else {
+                                    self.stats.read_failovers += 1;
+                                }
+                            }
+                            let better =
+                                best[i].as_ref().map_or(true, |b| rank > resp_rank(b));
+                            if better {
+                                best[i] = Some(r);
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        if first_io.is_none() {
+                            first_io = Some(e);
+                        }
+                    }
+                }
             }
         }
-        Ok(out.into_iter().map(|r| r.expect("all partitions filled")).collect())
+        let mut out = Vec::with_capacity(n);
+        for b in best {
+            match b {
+                Some(r) => out.push(r),
+                None => {
+                    return Err(first_io.take().unwrap_or_else(|| {
+                        Error::Io(std::io::Error::new(
+                            std::io::ErrorKind::NotConnected,
+                            "no shard reachable for pipeline entry",
+                        ))
+                    }))
+                }
+            }
+        }
+        Ok(out)
     }
 }

@@ -75,6 +75,19 @@ pub struct RunConfig {
     /// Byte cap on each instance's cold tier (0 = unbounded); once
     /// exceeded, oldest sealed segments are deleted.
     pub spill_max_bytes: u64,
+    /// Copies of every write kept across database instances (the owning
+    /// shard plus the next `replicas − 1` in ring order).  1 = no
+    /// replication, the seed behavior; clamped to the shard count at
+    /// connect time.  Only meaningful for the clustered deployment.
+    pub replicas: usize,
+    /// Seed for deterministic transport fault injection across the run's
+    /// database servers (the chaos harness).  0 = no faults, the
+    /// production behavior.
+    pub chaos_seed: u64,
+    /// Scale factor for the chaos fault probabilities (see
+    /// [`crate::util::fault::FaultConfig::with_intensity`]); ignored when
+    /// `chaos_seed` is 0.
+    pub chaos_intensity: f64,
 }
 
 impl Default for RunConfig {
@@ -98,6 +111,9 @@ impl Default for RunConfig {
             governor_max_stride: 1,
             spill_dir: None,
             spill_max_bytes: 0,
+            replicas: 1,
+            chaos_seed: 0,
+            chaos_intensity: 1.0,
         }
     }
 }
@@ -145,6 +161,9 @@ impl RunConfig {
             a.usize_or("governor-max-stride", c.governor_max_stride as usize)? as u64;
         c.spill_dir = a.str_opt("spill-dir").map(str::to_string);
         c.spill_max_bytes = a.usize_or("spill-max-bytes", c.spill_max_bytes as usize)? as u64;
+        c.replicas = a.usize_or("replicas", c.replicas)?;
+        c.chaos_seed = a.usize_or("chaos-seed", c.chaos_seed as usize)? as u64;
+        c.chaos_intensity = a.f64_or("chaos-intensity", c.chaos_intensity)?;
         if let Some(e) = a.str_opt("engine") {
             c.engine = Engine::parse(e)
                 .ok_or_else(|| Error::Invalid(format!("unknown engine '{e}'")))?;
@@ -158,6 +177,9 @@ impl RunConfig {
         }
         if c.ranks_per_node == 0 || c.nodes == 0 {
             return Err(Error::Invalid("nodes and ranks-per-node must be > 0".into()));
+        }
+        if c.replicas == 0 {
+            return Err(Error::Invalid("replicas must be >= 1 (1 = no replication)".into()));
         }
         Ok(c)
     }
@@ -219,6 +241,19 @@ mod tests {
         // Defaults preserve the seed behavior: fail on first Busy, no skip.
         let c = RunConfig::default();
         assert_eq!(c.governor(), GovernorConfig { retry: RetryPolicy::Fail, max_stride: 1 });
+    }
+
+    #[test]
+    fn parses_replication_and_chaos_flags() {
+        let c = parse("bench --replicas 2 --chaos-seed 7 --chaos-intensity 0.5");
+        assert_eq!(c.replicas, 2);
+        assert_eq!(c.chaos_seed, 7);
+        assert!((c.chaos_intensity - 0.5).abs() < 1e-9);
+        // Defaults preserve the seed behavior: one copy, no faults.
+        let c = RunConfig::default();
+        assert_eq!((c.replicas, c.chaos_seed), (1, 0));
+        let a = Args::parse(["x", "--replicas", "0"].map(String::from)).unwrap();
+        assert!(RunConfig::from_args(&a).is_err(), "replicas 0 is rejected");
     }
 
     #[test]

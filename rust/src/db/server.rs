@@ -24,7 +24,7 @@
 //! Eviction and high-water counters are reported through `INFO`.
 
 use std::io::BufReader;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -40,6 +40,7 @@ use crate::proto::frame::{read_frame_into, FrameSink};
 use crate::proto::{message, DbInfo, Request, Response};
 use crate::runtime::Executor;
 use crate::tensor::Bytes;
+use crate::util::fault::{ConnStream, FaultPlan, FaultStream};
 
 /// Default ceiling for the accept loop's adaptive idle backoff.  Tradeoff:
 /// a larger value means fewer idle wakeups but up to this much extra
@@ -92,6 +93,11 @@ pub struct ServerConfig {
     /// Ceiling for the accept loop's adaptive idle backoff — bounds both
     /// idle-accept latency and `shutdown()` joining the accept thread.
     pub accept_backoff_max: Duration,
+    /// Optional seeded fault schedule: every accepted connection is served
+    /// through a [`FaultStream`] drawing decisions from this plan (see
+    /// [`crate::util::fault`]).  `None` (the default) serves plain sockets
+    /// — the production path pays one `Option` branch per I/O op.
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServerConfig {
@@ -105,6 +111,7 @@ impl Default for ServerConfig {
             spill: None,
             conn_read_timeout: CONN_READ_TIMEOUT,
             accept_backoff_max: ACCEPT_BACKOFF_MAX,
+            fault: None,
         }
     }
 }
@@ -117,6 +124,9 @@ pub struct DbServer {
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
     pub config: ServerConfig,
+    /// Set by [`DbServer::simulate_crash`]: teardown skips the clean
+    /// shutdown spill barrier, like a real `kill -9` would.
+    crashed: bool,
 }
 
 impl DbServer {
@@ -154,6 +164,7 @@ impl DbServer {
             let engine = config.engine;
             let backoff_max = config.accept_backoff_max;
             let read_timeout = config.conn_read_timeout;
+            let fault = config.fault.clone();
             std::thread::Builder::new()
                 .name(format!("db-accept-{}", addr.port()))
                 .spawn(move || {
@@ -177,18 +188,33 @@ impl DbServer {
                                 let models = models.clone();
                                 let gate = Arc::clone(&gate);
                                 let stop = Arc::clone(&stop);
+                                // Each connection draws its own decision
+                                // stream from the plan; `None` serves the
+                                // plain socket (no shim in the type at all).
+                                let conn_faults = fault.as_ref().map(|p| p.connection());
                                 std::thread::Builder::new()
                                     .name("db-conn".into())
                                     .spawn(move || {
-                                        let _ = serve_conn(
-                                            sock,
-                                            &store,
-                                            models.as_deref(),
-                                            &gate,
-                                            &stop,
-                                            engine,
-                                            read_timeout,
-                                        );
+                                        let _ = match conn_faults {
+                                            Some(f) => serve_conn(
+                                                FaultStream::over(sock, Some(f)),
+                                                &store,
+                                                models.as_deref(),
+                                                &gate,
+                                                &stop,
+                                                engine,
+                                                read_timeout,
+                                            ),
+                                            None => serve_conn(
+                                                sock,
+                                                &store,
+                                                models.as_deref(),
+                                                &gate,
+                                                &stop,
+                                                engine,
+                                                read_timeout,
+                                            ),
+                                        };
                                     })
                                     .ok();
                             }
@@ -210,6 +236,7 @@ impl DbServer {
             stop,
             accept_thread: Some(accept_thread),
             config,
+            crashed: false,
         })
     }
 
@@ -231,8 +258,30 @@ impl DbServer {
         // Drain the spill writer before teardown: every record the
         // retention pipeline enqueued is on disk when shutdown returns, so
         // a clean exit never loses queued cold-tier data (no-op without a
-        // spill config).
-        self.store.spill_sync();
+        // spill config).  A *crashed* server gets no such courtesy — only
+        // what the spill writer already flushed survives, which is exactly
+        // what the crash-recovery tests assert against.
+        if !self.crashed {
+            self.store.spill_sync();
+        }
+    }
+
+    /// Kill the server the way `kill -9` would, as far as in-process
+    /// simulation allows: stop accepting, release the listener port (a
+    /// restarted server can rebind it), and *skip* the clean-shutdown
+    /// spill barrier so queued cold-tier records are dropped on the floor.
+    /// In-flight connection threads wind down at their next idle poll; to
+    /// sever them mid-operation deterministically, pair this with
+    /// [`FaultPlan::kill`] on the server's fault plan.
+    pub fn simulate_crash(&mut self) {
+        self.crashed = true;
+        if let Some(p) = &self.config.fault {
+            p.kill();
+        }
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -242,8 +291,11 @@ impl Drop for DbServer {
     }
 }
 
-fn serve_conn(
-    sock: TcpStream,
+/// Generic over [`ConnStream`] so the same loop serves plain sockets and
+/// fault-injected ones — the chaos battery exercises exactly the code the
+/// production path runs.
+fn serve_conn<S: ConnStream>(
+    sock: S,
     store: &Store,
     models: Option<&ModelRuntime>,
     gate: &CommandGate,
@@ -251,8 +303,8 @@ fn serve_conn(
     engine: Engine,
     read_timeout: Duration,
 ) -> Result<()> {
-    sock.set_read_timeout(Some(read_timeout))?;
-    let mut writer = sock.try_clone()?;
+    sock.set_stream_read_timeout(Some(read_timeout))?;
+    let mut writer = sock.try_clone_stream()?;
     let mut reader = BufReader::with_capacity(256 * 1024, sock);
     // Scratch frame buffer, reused across requests the server fully
     // consumes; payload-carrying frames are handed over to the store
@@ -556,6 +608,13 @@ pub fn execute(
                 spill_segments,
                 cold_hits,
                 spill_lost_keys,
+                // Replication/failover are client-side phenomena: a single
+                // server cannot observe them.  ClusterClient::info fills
+                // these from its own FailoverStats.
+                replicated_writes: 0,
+                read_failovers: 0,
+                shard_reconnects: 0,
+                degraded_ops: 0,
                 engine: engine.name().to_string(),
                 fields,
             })

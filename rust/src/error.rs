@@ -33,6 +33,31 @@ pub enum Error {
     Busy(String),
 }
 
+impl Error {
+    /// True for transport failures that say nothing about the request
+    /// itself — the connection died, timed out, or was refused — so the
+    /// operation is safe to retry on the same shard (after reconnecting)
+    /// or on a replica.  Application-level errors (`KeyNotFound`, `Remote`,
+    /// `Busy`, ...) are deliberately excluded: they are authoritative
+    /// answers, not weather.
+    pub fn is_transient_io(&self) -> bool {
+        match self {
+            Error::Io(e) => matches!(
+                e.kind(),
+                std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::ConnectionRefused
+                    | std::io::ErrorKind::BrokenPipe
+                    | std::io::ErrorKind::UnexpectedEof
+                    | std::io::ErrorKind::NotConnected
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::WouldBlock
+            ),
+            _ => false,
+        }
+    }
+}
+
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {

@@ -89,6 +89,26 @@
 //! next published snapshot) instead of stopping the solver — so a run with
 //! a stalled consumer survives to completion.  Skip/retry/drop counters
 //! surface in the run report and `situ info`.
+//!
+//! ## Replication, failover, and the chaos harness
+//!
+//! The clustered data plane tolerates shard loss: [`client::ClusterClient`]
+//! fans every write out to `replicas` consecutive shards on the hash ring
+//! (pipelined — one frame per shard, not N round trips), reads fall back
+//! primary → replicas on transient I/O errors or misses, and a per-shard
+//! circuit breaker (consecutive-failure threshold, timed half-open
+//! reconnect) keeps a dead shard from stalling every operation.  Aggregate
+//! operations degrade partially instead of failing whole, with per-shard
+//! errors reported via [`client::ClusterClient::shard_errors`].  Client
+//! sockets carry an I/O deadline so a hung shard surfaces as a retryable
+//! timeout, never a hang.  All of it is testable deterministically: a
+//! seeded fault plan ([`util::fault`]) injects delays, truncations and
+//! severed connections at the transport layer (`--chaos-seed`), servers
+//! can crash without their clean-shutdown spill barrier
+//! (`DbServer::simulate_crash`), and the chaos battery in
+//! `tests/chaos_cluster.rs` proves runs complete with exact accounting
+//! while shards die mid-flight.  Failure semantics are documented in
+//! `docs/failures.md`.
 
 pub mod ai;
 pub mod client;

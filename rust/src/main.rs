@@ -7,10 +7,12 @@
 //!   train        end-to-end in-situ training (paper §4, scaled)
 //!   bench-transfer / bench-inference   DES scaling sweeps (Figs 3-6, 8)
 
+use std::io::Write as _;
 use std::net::SocketAddr;
+use std::sync::Arc;
 use std::time::Duration;
 
-use situ::client::{Client, DataStore};
+use situ::client::{Client, ClusterClient, ClusterConfig, DataStore};
 use situ::cluster::netmodel::CostModel;
 use situ::cluster::scaling;
 use situ::config::RunConfig;
@@ -21,6 +23,7 @@ use situ::runtime::Executor;
 use situ::sim::reproducer::{self, ReproducerConfig};
 use situ::telemetry::Table;
 use situ::util::cli::Args;
+use situ::util::fault::{FaultConfig, FaultPlan};
 use situ::util::fmt;
 
 fn main() {
@@ -66,10 +69,16 @@ USAGE: situ <command> [flags]
   serve            --port 7700 --engine redis|keydb --cores 8 [--no-models]
                    [--retention-window W] [--max-bytes B] [--ttl-ms T]
                    [--spill-dir DIR --spill-max-bytes B]
+                   [--chaos-seed S --chaos-intensity F]
+                   [--chaos-crash-every-ms MS --chaos-downtime-ms MS]
                    bounded-memory store (window / byte cap / stalled-producer
-                   TTL) + spill-to-disk cold tier for retired generations
+                   TTL) + spill-to-disk cold tier for retired generations;
+                   the chaos flags inject seeded transport faults and an
+                   optional crash/restart loop for failover testing
   info             --addr 127.0.0.1:7700   stats incl. per-field pressure
-                   and spill-to-disk cold-tier counters
+                   and spill-to-disk cold-tier counters; or
+                   --addrs a:p,b:p,... [--replicas N]  aggregate a cluster
+                   (adds client-side replication/failover counters)
   calibrate        [--artifacts DIR]   measure real costs, print CostModel
   train            [--epochs N --sim-ranks R --ml-ranks M --steps S]
                    [--window W --overwrite --retention-window W --db-max-bytes B
@@ -94,6 +103,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }),
         None => None,
     };
+    // Chaos harness: a nonzero seed wraps every accepted connection in a
+    // seeded fault stream; the crash flags add a kill/rebind loop on top.
+    let chaos_seed = args.usize_or("chaos-seed", 0)? as u64;
+    let fault = if chaos_seed != 0 {
+        let intensity = args.f64_or("chaos-intensity", 1.0)?;
+        Some(Arc::new(FaultPlan::new(FaultConfig::with_intensity(chaos_seed, intensity))))
+    } else {
+        None
+    };
     let cfg = ServerConfig {
         addr: SocketAddr::from(([127, 0, 0, 1], port)),
         engine,
@@ -105,22 +123,66 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ttl_ms: args.usize_or("ttl-ms", 0)? as u64,
         },
         spill,
+        fault: fault.clone(),
         ..Default::default()
     };
-    let server = DbServer::start(cfg)?;
+    let mut server = DbServer::start(cfg.clone())?;
     println!("situ db listening on {} (engine={})", server.addr, engine.name());
+    // Tests parse this line from a pipe (`--port 0` prints the real port),
+    // and piped stdout is block-buffered — flush or they hang.
+    std::io::stdout().flush().ok();
+
+    let crash_every = args.usize_or("chaos-crash-every-ms", 0)? as u64;
+    if crash_every == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    let downtime = args.usize_or("chaos-downtime-ms", 250)? as u64;
+    // Rebind the concrete port the first bind picked, so clients' failover
+    // reconnects find the restarted instance at the same address.
+    let rebind = ServerConfig { addr: server.addr, ..cfg };
     loop {
-        std::thread::sleep(Duration::from_secs(3600));
+        std::thread::sleep(Duration::from_millis(crash_every));
+        server.simulate_crash();
+        println!("situ db {}: simulated crash (down {downtime} ms)", rebind.addr);
+        std::io::stdout().flush().ok();
+        std::thread::sleep(Duration::from_millis(downtime));
+        if let Some(p) = &fault {
+            p.revive();
+        }
+        server = DbServer::start(rebind.clone())?;
+        println!("situ db {}: restarted", server.addr);
+        std::io::stdout().flush().ok();
     }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let addr: SocketAddr = args
-        .str_or("addr", "127.0.0.1:7700")
-        .parse()
-        .map_err(|_| Error::Invalid("bad --addr".into()))?;
-    let mut c = Client::connect(addr)?;
-    let i = c.info()?;
+    // `--addrs a,b,c` aggregates a whole cluster through `ClusterClient`
+    // (partial results if some shards are down); `--addr` asks one server.
+    let i = if let Some(list) = args.str_opt("addrs") {
+        let addrs = list
+            .split(',')
+            .map(|s| s.trim().parse::<SocketAddr>())
+            .collect::<std::result::Result<Vec<_>, _>>()
+            .map_err(|_| Error::Invalid("bad --addrs".into()))?;
+        let replicas = args.usize_or("replicas", 1)?;
+        let mut c = ClusterClient::connect_with(
+            &addrs,
+            ClusterConfig { replicas, ..ClusterConfig::default() },
+        )?;
+        let i = c.info()?;
+        for e in c.shard_errors() {
+            eprintln!("warning: shard {} ({}) unreachable: {}", e.shard, e.addr, e.error);
+        }
+        i
+    } else {
+        let addr: SocketAddr = args
+            .str_or("addr", "127.0.0.1:7700")
+            .parse()
+            .map_err(|_| Error::Invalid("bad --addr".into()))?;
+        Client::connect(addr)?.info()?
+    };
     println!(
         "engine={} keys={} bytes={} ops={} models={}",
         i.engine,
@@ -151,6 +213,9 @@ fn cmd_info(args: &Args) -> Result<()> {
         i.cold_hits,
         i.spill_lost_keys
     );
+    if i.replicated_writes + i.read_failovers + i.shard_reconnects + i.degraded_ops > 0 {
+        situ::telemetry::failover_table(&i).print();
+    }
     if !i.fields.is_empty() {
         situ::telemetry::field_pressure_table(&i).print();
     }

@@ -2,11 +2,13 @@
 //! core binding, for a given run configuration (paper Fig 2).
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
-use crate::client::GovernorConfig;
+use crate::client::{ClusterConfig, GovernorConfig};
 use crate::config::{Deployment, RunConfig};
 use crate::db::spill::default_segment_bytes;
 use crate::db::{Engine, RetentionConfig, ServerConfig, SpillConfig};
+use crate::util::fault::{FaultConfig, FaultPlan};
 
 /// One database instance to launch.
 #[derive(Debug, Clone)]
@@ -34,6 +36,12 @@ pub struct DeploymentPlan {
     /// Producer-side backpressure handling (retry + adaptive snapshot
     /// skipping) every publishing component of this deployment uses.
     pub governor: GovernorConfig,
+    /// Write replication factor clients of this deployment use (1 = none).
+    pub replicas: usize,
+    /// Chaos-harness knobs carried through from the run config: seed 0
+    /// means no fault injection anywhere.
+    pub chaos_seed: u64,
+    pub chaos_intensity: f64,
 }
 
 impl DeploymentPlan {
@@ -81,6 +89,9 @@ impl DeploymentPlan {
             ranks_per_node: cfg.ranks_per_node,
             nodes: cfg.nodes,
             governor: cfg.governor(),
+            replicas: cfg.replicas.max(1),
+            chaos_seed: cfg.chaos_seed,
+            chaos_intensity: cfg.chaos_intensity,
         }
     }
 
@@ -103,9 +114,34 @@ impl DeploymentPlan {
                 with_models: d.with_models,
                 retention: d.retention,
                 spill: d.spill.clone(),
+                fault: self.fault_plan_for(d.node),
                 ..Default::default()
             })
             .collect()
+    }
+
+    /// The seeded fault plan for one database instance, or `None` when the
+    /// chaos harness is off.  Each instance gets its own plan, seeded from
+    /// `(chaos_seed, node)` so the whole deployment's failure schedule is a
+    /// pure function of the run's `--chaos-seed` — instance `n` misbehaves
+    /// identically across runs regardless of launch order.
+    pub fn fault_plan_for(&self, node: usize) -> Option<Arc<FaultPlan>> {
+        if self.chaos_seed == 0 {
+            return None;
+        }
+        let seed = self
+            .chaos_seed
+            .wrapping_add((node as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        Some(Arc::new(FaultPlan::new(FaultConfig::with_intensity(
+            seed,
+            self.chaos_intensity,
+        ))))
+    }
+
+    /// How clients should connect to this deployment's shard set:
+    /// replication factor from the run config, everything else default.
+    pub fn cluster_config(&self) -> ClusterConfig {
+        ClusterConfig { replicas: self.replicas, ..ClusterConfig::default() }
     }
 }
 
@@ -177,6 +213,30 @@ mod tests {
         let plan = DeploymentPlan::new(&cfg, false);
         assert_eq!(plan.governor, cfg.governor());
         assert_eq!(plan.governor.max_stride, 4);
+    }
+
+    #[test]
+    fn plan_threads_replication_and_chaos() {
+        let mut cfg = RunConfig::default();
+        cfg.nodes = 2;
+        cfg.replicas = 2;
+        cfg.chaos_seed = 9;
+        let plan = DeploymentPlan::new(&cfg, false);
+        assert_eq!(plan.replicas, 2);
+        assert_eq!(plan.cluster_config().replicas, 2);
+        // Every instance wears a fault plan, each with a distinct seed.
+        let scs = plan.server_configs();
+        assert!(scs.iter().all(|sc| sc.fault.is_some()));
+        let s0 = scs[0].fault.as_ref().unwrap().config().seed;
+        let s1 = scs[1].fault.as_ref().unwrap().config().seed;
+        assert_ne!(s0, s1, "per-instance schedules are independent");
+        // And the schedule is a pure function of the chaos seed.
+        assert_eq!(s0, DeploymentPlan::new(&cfg, false).fault_plan_for(plan.dbs[0].node).unwrap().config().seed);
+        // Seed 0 = chaos off everywhere, the production default.
+        cfg.chaos_seed = 0;
+        let plan = DeploymentPlan::new(&cfg, false);
+        assert!(plan.server_configs().iter().all(|sc| sc.fault.is_none()));
+        assert_eq!(plan.cluster_config().replicas, 2);
     }
 
     #[test]

@@ -8,7 +8,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::client::{Client, DataStore, GovernorConfig, GovernorStats, PollConfig};
+use crate::client::{Client, ClusterClient, DataStore, GovernorConfig, GovernorStats, PollConfig};
 use crate::config::RunConfig;
 use crate::db::{DbServer, ServerConfig};
 use crate::error::{Error, Result};
@@ -62,6 +62,19 @@ impl Driver {
 
     pub fn primary_addr(&self) -> SocketAddr {
         self.servers[0].addr
+    }
+
+    /// Cluster client over every launched shard, configured per the plan
+    /// (replication factor from `--replicas`).
+    pub fn cluster_client(&self) -> Result<ClusterClient> {
+        ClusterClient::connect_with(&self.addrs(), self.plan.cluster_config())
+    }
+
+    /// Crash one shard the way `kill -9` would (no clean-shutdown spill
+    /// barrier; in-flight connections severed if the instance wears a
+    /// fault plan) — the chaos battery's kill switch.
+    pub fn crash_server(&mut self, i: usize) {
+        self.servers[i].simulate_crash();
     }
 
     pub fn shutdown(&mut self) {

@@ -20,6 +20,12 @@ use crate::error::{Error, Result};
 /// error or an attack, so we refuse it rather than OOM).
 pub const MAX_FRAME: usize = 1 << 30; // 1 GiB
 
+/// Message of the protocol error produced when a read times out *mid-frame*
+/// (bytes already consumed, stream position lost).  Exported so the client
+/// can recognize it and treat the connection as dead/retryable — the string
+/// is part of the de-facto wire contract and must not change.
+pub const MID_FRAME_TIMEOUT_MSG: &str = "read timeout mid-frame (stream desynced)";
+
 /// Write one frame: u32-LE length prefix, then the body.
 pub fn write_frame<W: Write>(w: &mut W, body: &[u8]) -> Result<()> {
     if body.len() > MAX_FRAME {
@@ -202,7 +208,7 @@ fn read_exact_mid_frame<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<()> {
         if e.kind() == std::io::ErrorKind::WouldBlock
             || e.kind() == std::io::ErrorKind::TimedOut
         {
-            Error::Protocol("read timeout mid-frame (stream desynced)".into())
+            Error::Protocol(MID_FRAME_TIMEOUT_MSG.into())
         } else {
             Error::Io(e)
         }

@@ -103,6 +103,17 @@ pub struct DbInfo {
     pub spill_segments: u64,
     pub cold_hits: u64,
     pub spill_lost_keys: u64,
+    /// Replication/failover counters.  A single server always reports
+    /// zero for these — they describe *client-side* cluster behavior and
+    /// are filled in by `ClusterClient::info` aggregation: extra replica
+    /// copies written beyond the primary, reads answered by a fallback
+    /// replica (primary dead or missing the key), successful shard
+    /// reconnects after a circuit-breaker trip, and aggregate/broadcast
+    /// ops that completed with at least one shard unreachable.
+    pub replicated_writes: u64,
+    pub read_failovers: u64,
+    pub shard_reconnects: u64,
+    pub degraded_ops: u64,
     pub engine: String,
     /// Per-field pressure while governance is active (empty otherwise;
     /// merged by field name on a cluster aggregate).
@@ -722,6 +733,10 @@ impl Response {
                 buf.extend_from_slice(&i.spill_segments.to_le_bytes());
                 buf.extend_from_slice(&i.cold_hits.to_le_bytes());
                 buf.extend_from_slice(&i.spill_lost_keys.to_le_bytes());
+                buf.extend_from_slice(&i.replicated_writes.to_le_bytes());
+                buf.extend_from_slice(&i.read_failovers.to_le_bytes());
+                buf.extend_from_slice(&i.shard_reconnects.to_le_bytes());
+                buf.extend_from_slice(&i.degraded_ops.to_le_bytes());
                 put_str(buf, &i.engine);
                 buf.extend_from_slice(&(i.fields.len() as u32).to_le_bytes());
                 for f in &i.fields {
@@ -800,6 +815,10 @@ impl Response {
                 let spill_segments = c.u64()?;
                 let cold_hits = c.u64()?;
                 let spill_lost_keys = c.u64()?;
+                let replicated_writes = c.u64()?;
+                let read_failovers = c.u64()?;
+                let shard_reconnects = c.u64()?;
+                let degraded_ops = c.u64()?;
                 let engine = c.str()?;
                 let n = c.u32()? as usize;
                 if n > MAX_BATCH {
@@ -837,6 +856,10 @@ impl Response {
                     spill_segments,
                     cold_hits,
                     spill_lost_keys,
+                    replicated_writes,
+                    read_failovers,
+                    shard_reconnects,
+                    degraded_ops,
                     engine,
                     fields,
                 })
@@ -871,7 +894,8 @@ impl Response {
             Response::Meta(s) | Response::Error(s) => str_wire_size(s),
             Response::Keys(ks) => 4 + ks.iter().map(|k| str_wire_size(k)).sum::<usize>(),
             Response::Info(i) => {
-                136 + str_wire_size(&i.engine)
+                // 21 fixed u64 counters precede the engine string.
+                168 + str_wire_size(&i.engine)
                     + 4
                     + i.fields
                         .iter()

@@ -138,6 +138,10 @@ mod tests {
                 spill_segments: 2,
                 cold_hits: 6,
                 spill_lost_keys: 1,
+                replicated_writes: 11,
+                read_failovers: 5,
+                shard_reconnects: 2,
+                degraded_ops: 1,
                 engine: "redis".into(),
                 fields: vec![
                     FieldPressure {

@@ -8,7 +8,7 @@
 
 pub mod table;
 
-pub use table::{counter_table, field_pressure_table, Table};
+pub use table::{counter_table, failover_table, field_pressure_table, Table};
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;

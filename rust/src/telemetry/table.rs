@@ -139,6 +139,20 @@ pub fn counter_table(title: &str, counters: &[(&str, u64)]) -> Table {
     t
 }
 
+/// Client-side replication/failover counters (populated by
+/// [`crate::client::ClusterClient::info`]; single servers report zeros).
+pub fn failover_table(info: &DbInfo) -> Table {
+    counter_table(
+        "replication / failover",
+        &[
+            ("replicated writes", info.replicated_writes),
+            ("read failovers", info.read_failovers),
+            ("shard reconnects", info.shard_reconnects),
+            ("degraded ops (partial shard errors)", info.degraded_ops),
+        ],
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,5 +218,22 @@ mod tests {
             .render_markdown();
         assert!(md.contains("skipped"));
         assert!(md.contains("| 7"));
+    }
+
+    #[test]
+    fn failover_table_rows() {
+        let info = DbInfo {
+            replicated_writes: 12,
+            read_failovers: 3,
+            shard_reconnects: 1,
+            degraded_ops: 2,
+            ..Default::default()
+        };
+        let md = failover_table(&info).render_markdown();
+        assert!(md.contains("replicated writes"), "{md}");
+        assert!(md.contains("| 12"), "{md}");
+        assert!(md.contains("read failovers"), "{md}");
+        assert!(md.contains("shard reconnects"), "{md}");
+        assert!(md.contains("degraded ops"), "{md}");
     }
 }

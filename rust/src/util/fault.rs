@@ -1,0 +1,522 @@
+//! Deterministic fault injection for the transport layer.
+//!
+//! Chaos testing a distributed store is only useful if the failures are
+//! *reproducible*: a run that flakes once a week under real `kill -9`
+//! proves nothing in CI.  [`FaultPlan`] is a seeded description of
+//! transport misbehaviour — sever a connection, delay an I/O op, truncate
+//! a write mid-frame — and [`FaultStream`] is the shim that applies it
+//! around a real socket.  Both the server accept path
+//! (`ServerConfig::fault`) and the client connect path
+//! (`ClusterConfig::faults`) can wear the shim, so every failure mode the
+//! chaos battery exercises is a pure function of the seed plus the frame
+//! traffic, not of wall-clock timing.
+//!
+//! Determinism discipline: decisions are drawn from one
+//! [`crate::util::rng::Rng`] stream per connection (connection `k` of a
+//! plan is seeded from `(plan seed, k)`), and a decision is only consumed
+//! by an op that actually moved bytes — idle read polls (`WouldBlock`)
+//! draw nothing, so the server's read-timeout cadence cannot perturb the
+//! sequence.  The same seed therefore yields the same *decision sequence*
+//! per connection; what varies run-to-run is only how the OS chunks the
+//! byte stream across reads.
+//!
+//! Fault vocabulary:
+//! - **sever** — the op fails with `ConnectionReset` and every later op on
+//!   the connection fails too (a peer death as the kernel reports it);
+//! - **delay** — the op completes after an injected sleep (congestion,
+//!   scheduling jitter);
+//! - **truncate** — a write delivers only a prefix of the buffer and then
+//!   severs, leaving the peer holding a torn frame (a crash mid-send);
+//! - **kill switch** — [`FaultPlan::kill`] fails every op on every
+//!   connection of the plan at once (whole-process death as seen from the
+//!   other side), until [`FaultPlan::revive`].
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// What a [`FaultPlan`] does and how often.  Probabilities are per
+/// byte-moving I/O op; scripted fields fire at exact op counts (useful for
+/// pinning a failure to a precise protocol position).
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Seed for the per-connection decision streams.
+    pub seed: u64,
+    /// Probability an op severs the connection.
+    pub sever_p: f64,
+    /// Probability a write is truncated mid-buffer, then severed.
+    pub truncate_p: f64,
+    /// Probability an op is delayed by `delay` before completing.
+    pub delay_p: f64,
+    pub delay: Duration,
+    /// Scripted: sever every connection after this many byte-moving ops.
+    pub sever_after_ops: Option<u64>,
+    /// Scripted: truncate the Nth write (1-based, per connection) to half
+    /// its buffer, then sever.
+    pub truncate_write_op: Option<u64>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            sever_p: 0.0,
+            truncate_p: 0.0,
+            delay_p: 0.0,
+            delay: Duration::from_micros(500),
+            sever_after_ops: None,
+            truncate_write_op: None,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// A mixed probabilistic plan scaled by `intensity` (1.0 ≈ a failure
+    /// every few hundred ops — rough weather, not a dead shard).  This is
+    /// what `--chaos-seed`/`--chaos-intensity` construct.
+    pub fn with_intensity(seed: u64, intensity: f64) -> FaultConfig {
+        FaultConfig {
+            seed,
+            sever_p: 0.002 * intensity,
+            truncate_p: 0.001 * intensity,
+            delay_p: 0.02 * intensity,
+            delay: Duration::from_micros(500),
+            ..FaultConfig::default()
+        }
+    }
+}
+
+/// Totals of what a plan actually injected (for reports and assertions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultCounters {
+    pub severed_conns: u64,
+    pub delayed_ops: u64,
+    pub truncated_writes: u64,
+}
+
+/// A shared, seeded fault schedule.  One plan typically covers one server
+/// instance (or one client); each accepted/established connection derives
+/// its own deterministic decision stream via [`FaultPlan::connection`].
+#[derive(Debug)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    conn_seq: AtomicU64,
+    killed: AtomicBool,
+    severed_conns: AtomicU64,
+    delayed_ops: AtomicU64,
+    truncated_writes: AtomicU64,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig) -> FaultPlan {
+        FaultPlan {
+            cfg,
+            conn_seq: AtomicU64::new(0),
+            killed: AtomicBool::new(false),
+            severed_conns: AtomicU64::new(0),
+            delayed_ops: AtomicU64::new(0),
+            truncated_writes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Fault state for the next connection: connection `k` of a plan with
+    /// seed `s` always draws the same decision sequence, independent of
+    /// every other connection.
+    pub fn connection(self: &Arc<FaultPlan>) -> Arc<ConnFaults> {
+        let k = self.conn_seq.fetch_add(1, Ordering::Relaxed);
+        // Splitmix-style stir so (seed, k) and (seed, k+1) are unrelated.
+        let seed = self
+            .cfg
+            .seed
+            .wrapping_add(k.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+            .wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        Arc::new(ConnFaults {
+            plan: Arc::clone(self),
+            inner: Mutex::new(ConnState {
+                rng: Rng::new(seed),
+                severed: false,
+                ops: 0,
+                write_ops: 0,
+            }),
+        })
+    }
+
+    /// Fail every op on every connection of this plan from now on — the
+    /// whole process died, as seen from the other end of its sockets.
+    pub fn kill(&self) {
+        self.killed.store(true, Ordering::Relaxed);
+    }
+
+    /// Undo [`FaultPlan::kill`] (the process came back).
+    pub fn revive(&self) {
+        self.killed.store(false, Ordering::Relaxed);
+    }
+
+    pub fn counters(&self) -> FaultCounters {
+        FaultCounters {
+            severed_conns: self.severed_conns.load(Ordering::Relaxed),
+            delayed_ops: self.delayed_ops.load(Ordering::Relaxed),
+            truncated_writes: self.truncated_writes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One connection's slice of a [`FaultPlan`]: its own decision stream plus
+/// a sticky severed flag shared by the read and write halves of the socket.
+#[derive(Debug)]
+pub struct ConnFaults {
+    plan: Arc<FaultPlan>,
+    inner: Mutex<ConnState>,
+}
+
+#[derive(Debug)]
+struct ConnState {
+    rng: Rng,
+    severed: bool,
+    /// Byte-moving ops decided so far (reads that returned data + writes).
+    ops: u64,
+    write_ops: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FaultDecision {
+    Pass,
+    Delay(Duration),
+    Sever,
+    /// Write only this prefix of the buffer, then sever.
+    Truncate(usize),
+}
+
+fn sever_err(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::ConnectionReset, msg.to_string())
+}
+
+impl ConnFaults {
+    fn check_severed(&self) -> io::Result<()> {
+        if self.plan.killed.load(Ordering::Relaxed) {
+            return Err(sever_err("injected fault: plan killed"));
+        }
+        if self.inner.lock().expect("fault state lock").severed {
+            return Err(sever_err("injected fault: connection severed"));
+        }
+        Ok(())
+    }
+
+    /// Draw the next decision for a byte-moving op.  Exactly one RNG draw
+    /// per call, regardless of which branch fires, so the decision index
+    /// equals the op index.
+    fn decide(&self, is_write: bool, len: usize) -> FaultDecision {
+        let cfg = &self.plan.cfg;
+        let mut st = self.inner.lock().expect("fault state lock");
+        st.ops += 1;
+        if is_write {
+            st.write_ops += 1;
+        }
+        // Scripted faults take precedence (they exist to pin a failure to
+        // an exact protocol position) and consume no randomness.
+        if is_write && cfg.truncate_write_op == Some(st.write_ops) {
+            st.severed = true;
+            self.plan.truncated_writes.fetch_add(1, Ordering::Relaxed);
+            self.plan.severed_conns.fetch_add(1, Ordering::Relaxed);
+            return FaultDecision::Truncate(len / 2);
+        }
+        if let Some(n) = cfg.sever_after_ops {
+            if st.ops > n {
+                st.severed = true;
+                self.plan.severed_conns.fetch_add(1, Ordering::Relaxed);
+                return FaultDecision::Sever;
+            }
+        }
+        let x = st.rng.f64();
+        if x < cfg.sever_p {
+            st.severed = true;
+            self.plan.severed_conns.fetch_add(1, Ordering::Relaxed);
+            FaultDecision::Sever
+        } else if x < cfg.sever_p + cfg.truncate_p {
+            if is_write {
+                st.severed = true;
+                self.plan.truncated_writes.fetch_add(1, Ordering::Relaxed);
+                self.plan.severed_conns.fetch_add(1, Ordering::Relaxed);
+                FaultDecision::Truncate(len / 2)
+            } else {
+                // Reads have no truncation analogue; the band passes so the
+                // draw count stays aligned with the op count.
+                FaultDecision::Pass
+            }
+        } else if x < cfg.sever_p + cfg.truncate_p + cfg.delay_p {
+            self.plan.delayed_ops.fetch_add(1, Ordering::Relaxed);
+            FaultDecision::Delay(cfg.delay)
+        } else {
+            FaultDecision::Pass
+        }
+    }
+}
+
+/// A stream with an optional fault schedule in front of it.  With
+/// `faults: None` it is a transparent pass-through (the production
+/// configuration — one branch per op).
+#[derive(Debug)]
+pub struct FaultStream<S = TcpStream> {
+    inner: S,
+    faults: Option<Arc<ConnFaults>>,
+}
+
+impl<S> FaultStream<S> {
+    pub fn over(inner: S, faults: Option<Arc<ConnFaults>>) -> FaultStream<S> {
+        FaultStream { inner, faults }
+    }
+
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+}
+
+impl FaultStream<TcpStream> {
+    /// Clone the socket; the clone shares this connection's fault state
+    /// (reader and writer halves sever together, like a real socket).
+    pub fn try_clone(&self) -> io::Result<FaultStream<TcpStream>> {
+        Ok(FaultStream {
+            inner: self.inner.try_clone()?,
+            faults: self.faults.clone(),
+        })
+    }
+
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        self.inner.set_read_timeout(d)
+    }
+
+    pub fn set_write_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        self.inner.set_write_timeout(d)
+    }
+}
+
+impl<S: Read> Read for FaultStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let Some(f) = &self.faults else {
+            return self.inner.read(buf);
+        };
+        f.check_severed()?;
+        // Decide only after bytes actually arrive: idle polls (WouldBlock /
+        // TimedOut) and clean EOF consume no decision, so the read-timeout
+        // cadence cannot perturb the deterministic sequence.
+        let n = self.inner.read(buf)?;
+        if n == 0 {
+            return Ok(0);
+        }
+        match f.decide(false, n) {
+            FaultDecision::Pass => Ok(n),
+            FaultDecision::Delay(d) => {
+                std::thread::sleep(d);
+                Ok(n)
+            }
+            // A severed read drops the bytes it consumed — the connection
+            // is dead either way.
+            FaultDecision::Sever | FaultDecision::Truncate(_) => {
+                Err(sever_err("injected fault: read severed"))
+            }
+        }
+    }
+}
+
+impl<S: Write> Write for FaultStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let Some(f) = &self.faults else {
+            return self.inner.write(buf);
+        };
+        f.check_severed()?;
+        if buf.is_empty() {
+            return self.inner.write(buf);
+        }
+        match f.decide(true, buf.len()) {
+            FaultDecision::Pass => self.inner.write(buf),
+            FaultDecision::Delay(d) => {
+                std::thread::sleep(d);
+                self.inner.write(buf)
+            }
+            FaultDecision::Sever => Err(sever_err("injected fault: write severed")),
+            FaultDecision::Truncate(n) => {
+                // Deliver a torn prefix so the peer sees a frame die
+                // mid-body, then report the connection broken.
+                if n > 0 {
+                    let _ = self.inner.write(&buf[..n]);
+                }
+                let _ = self.inner.flush();
+                Err(io::Error::new(
+                    io::ErrorKind::BrokenPipe,
+                    "injected fault: write truncated mid-frame",
+                ))
+            }
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// The socket operations the server's per-connection loop needs, so one
+/// code path serves plain `TcpStream`s and fault-injected [`FaultStream`]s.
+pub trait ConnStream: Read + Write + Send + Sized + 'static {
+    fn try_clone_stream(&self) -> io::Result<Self>;
+    fn set_stream_read_timeout(&self, d: Option<Duration>) -> io::Result<()>;
+}
+
+impl ConnStream for TcpStream {
+    fn try_clone_stream(&self) -> io::Result<TcpStream> {
+        self.try_clone()
+    }
+
+    fn set_stream_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(d)
+    }
+}
+
+impl ConnStream for FaultStream<TcpStream> {
+    fn try_clone_stream(&self) -> io::Result<Self> {
+        self.try_clone()
+    }
+
+    fn set_stream_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        self.set_read_timeout(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mixed_cfg(seed: u64) -> FaultConfig {
+        FaultConfig {
+            seed,
+            sever_p: 0.05,
+            truncate_p: 0.05,
+            delay_p: 0.4,
+            delay: Duration::from_micros(1),
+            ..FaultConfig::default()
+        }
+    }
+
+    /// Decision sequence fingerprint for one fresh connection of `plan`.
+    fn fingerprint(plan: &Arc<FaultPlan>, n: usize) -> Vec<u8> {
+        let c = plan.connection();
+        (0..n)
+            .map(|i| match c.decide(i % 2 == 0, 100) {
+                FaultDecision::Pass => 0,
+                FaultDecision::Delay(_) => 1,
+                FaultDecision::Sever => 2,
+                FaultDecision::Truncate(_) => 3,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn same_seed_same_decisions() {
+        let a = Arc::new(FaultPlan::new(mixed_cfg(42)));
+        let b = Arc::new(FaultPlan::new(mixed_cfg(42)));
+        assert_eq!(fingerprint(&a, 256), fingerprint(&b, 256));
+    }
+
+    #[test]
+    fn connections_and_seeds_draw_distinct_streams() {
+        let plan = Arc::new(FaultPlan::new(mixed_cfg(42)));
+        let c0 = fingerprint(&plan, 256);
+        let c1 = fingerprint(&plan, 256);
+        assert_ne!(c0, c1, "per-connection streams independent");
+        let other = Arc::new(FaultPlan::new(mixed_cfg(43)));
+        assert_ne!(c0, fingerprint(&other, 256), "seed changes the schedule");
+    }
+
+    #[test]
+    fn passthrough_when_no_faults() {
+        let mut s = FaultStream::over(Vec::<u8>::new(), None);
+        s.write_all(b"hello").unwrap();
+        assert_eq!(s.get_ref(), b"hello");
+        let mut r = FaultStream::over(&b"abc"[..], None);
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        assert_eq!(out, b"abc");
+    }
+
+    #[test]
+    fn scripted_truncate_fires_at_exact_write_and_stays_severed() {
+        let plan = Arc::new(FaultPlan::new(FaultConfig {
+            seed: 7,
+            truncate_write_op: Some(3),
+            ..FaultConfig::default()
+        }));
+        let mut s = FaultStream::over(Vec::<u8>::new(), Some(plan.connection()));
+        s.write_all(b"aaaa").unwrap();
+        s.write_all(b"bbbb").unwrap();
+        let err = s.write_all(b"cccc").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+        // Half the third buffer landed before the sever.
+        assert_eq!(s.get_ref().as_slice(), b"aaaabbbbcc");
+        // Sticky: both halves of the connection are dead now.
+        let err = s.write_all(b"dddd").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::ConnectionReset);
+        assert_eq!(
+            plan.counters(),
+            FaultCounters { severed_conns: 1, delayed_ops: 0, truncated_writes: 1 }
+        );
+    }
+
+    #[test]
+    fn scripted_sever_after_ops() {
+        let plan = Arc::new(FaultPlan::new(FaultConfig {
+            seed: 7,
+            sever_after_ops: Some(2),
+            ..FaultConfig::default()
+        }));
+        let conn = plan.connection();
+        let mut s = FaultStream::over(Vec::<u8>::new(), Some(conn));
+        s.write_all(b"a").unwrap();
+        s.write_all(b"b").unwrap();
+        let err = s.write_all(b"c").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::ConnectionReset);
+        assert_eq!(plan.counters().severed_conns, 1);
+    }
+
+    #[test]
+    fn kill_switch_fails_every_connection_until_revive() {
+        let plan = Arc::new(FaultPlan::new(FaultConfig::default()));
+        let mut a = FaultStream::over(Vec::<u8>::new(), Some(plan.connection()));
+        let mut b = FaultStream::over(Vec::<u8>::new(), Some(plan.connection()));
+        a.write_all(b"x").unwrap();
+        plan.kill();
+        assert_eq!(a.write_all(b"y").unwrap_err().kind(), io::ErrorKind::ConnectionReset);
+        assert_eq!(b.write_all(b"y").unwrap_err().kind(), io::ErrorKind::ConnectionReset);
+        plan.revive();
+        a.write_all(b"z").unwrap();
+        assert_eq!(a.get_ref().as_slice(), b"xz");
+    }
+
+    #[test]
+    fn reads_only_consume_decisions_when_bytes_move() {
+        // A plan that severs on the very first decided op: an empty source
+        // (EOF) must NOT consume it, a byte-yielding read must.
+        let cfg = FaultConfig { seed: 1, sever_after_ops: Some(0), ..FaultConfig::default() };
+        let plan = Arc::new(FaultPlan::new(cfg));
+        let mut eof = FaultStream::over(&b""[..], Some(plan.connection()));
+        let mut buf = [0u8; 8];
+        assert_eq!(eof.read(&mut buf).unwrap(), 0, "EOF passes through undecided");
+        let mut live = FaultStream::over(&b"data"[..], Some(plan.connection()));
+        assert_eq!(live.read(&mut buf).unwrap_err().kind(), io::ErrorKind::ConnectionReset);
+    }
+
+    #[test]
+    fn intensity_scales_probabilities() {
+        let c = FaultConfig::with_intensity(5, 2.0);
+        assert_eq!(c.seed, 5);
+        assert!(c.sever_p > 0.0 && c.delay_p > c.sever_p);
+        let gentle = FaultConfig::with_intensity(5, 0.5);
+        assert!(gentle.sever_p < c.sever_p);
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bytes;
 pub mod cli;
+pub mod fault;
 pub mod fmt;
 pub mod json;
 pub mod propcheck;

@@ -1,0 +1,503 @@
+//! Chaos battery: replicated cluster writes, read failover, and the
+//! deterministic fault-injection harness.
+//!
+//! The robustness claims of `client::ClusterClient` + `util::fault` are
+//! earned here:
+//!
+//! * with `replicas ≥ 2`, killing any single shard mid-run — by the seeded
+//!   kill switch, by in-process crash, or by a real `kill -9` on a `situ
+//!   serve` child process — loses **zero** data replicated before the
+//!   kill: every read comes back byte-exact through failover, and writes
+//!   keep landing (degraded, with per-shard error reports);
+//! * with `replicas = 1`, a dead shard produces clean, *bounded-time*
+//!   transient errors — never a hang, never a panic — while keys on
+//!   surviving shards stay fully served;
+//! * a run under a seeded probabilistic fault plan (delays, severs,
+//!   mid-frame write truncations) completes byte-exact once wrapped in the
+//!   transient-I/O retry class;
+//! * a connection severed between `begin_split_frame`/`end_split_frame`
+//!   leaves the store untouched and the server serving;
+//! * client sockets carry an I/O deadline, so a hung (never-replying)
+//!   server surfaces as a retryable timeout within the deadline;
+//! * `simulate_crash` (no clean-shutdown spill barrier) after an `info`
+//!   durability barrier loses nothing from the cold tier on restart.
+//!
+//! Scale knobs mirror the stress suite: `SITU_CHAOS_STEPS` (default 10;
+//! CI smoke uses 40) and `SITU_CHAOS_SEED` (default 7).
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use situ::client::{
+    tensor_key, Client, ClusterClient, ClusterConfig, DataStore, RetryClass, RetryPolicy,
+};
+use situ::db::{DbServer, Engine, RetentionConfig, ServerConfig, SpillConfig};
+use situ::ml::DataLoader;
+use situ::tensor::Tensor;
+use situ::util::fault::{FaultConfig, FaultPlan};
+
+fn chaos_steps() -> u64 {
+    std::env::var("SITU_CHAOS_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(10)
+}
+
+fn chaos_seed() -> u64 {
+    std::env::var("SITU_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(7)
+}
+
+/// Short-teardown server config shared by the battery (the suite starts
+/// and kills many servers; library-default timeouts would serialize it).
+fn shard_config() -> ServerConfig {
+    ServerConfig {
+        engine: Engine::KeyDb,
+        with_models: false,
+        conn_read_timeout: Duration::from_millis(50),
+        accept_backoff_max: Duration::from_millis(5),
+        ..Default::default()
+    }
+}
+
+fn start_shards(n: usize) -> Vec<DbServer> {
+    (0..n).map(|_| DbServer::start(shard_config()).unwrap()).collect()
+}
+
+fn addrs(servers: &[DbServer]) -> Vec<SocketAddr> {
+    servers.iter().map(|s| s.addr).collect()
+}
+
+fn replicated(addrs: &[SocketAddr], replicas: usize) -> ClusterClient {
+    ClusterClient::connect_with(
+        addrs,
+        ClusterConfig { replicas, ..ClusterConfig::default() },
+    )
+    .unwrap()
+}
+
+/// Deterministic payload for (generation, rank) — byte-exact recovery
+/// assertions compare against a reconstruction, not a stored copy.
+fn payload(gen: u64, rank: usize) -> Tensor {
+    let vals: Vec<f32> = (0..64).map(|i| (gen * 100_000 + rank as u64 * 1000 + i) as f32).collect();
+    Tensor::from_f32(&[vals.len()], vals).unwrap()
+}
+
+fn write_generations(c: &mut ClusterClient, field: &str, gens: u64, ranks: usize) {
+    for gen in 0..gens {
+        for rank in 0..ranks {
+            c.put_tensor(&tensor_key(field, rank, gen), &payload(gen, rank)).unwrap();
+        }
+    }
+}
+
+fn assert_generations_byte_exact(c: &mut ClusterClient, field: &str, gens: u64, ranks: usize) {
+    for gen in 0..gens {
+        for rank in 0..ranks {
+            let key = tensor_key(field, rank, gen);
+            let got = c.get_tensor(&key).unwrap_or_else(|e| panic!("lost {key}: {e}"));
+            assert_eq!(got, payload(gen, rank), "payload for {key} not byte-exact");
+        }
+    }
+}
+
+// --- tentpole: kill any single shard, lose nothing ----------------------
+
+#[test]
+fn killing_any_single_shard_loses_no_replicated_data() {
+    let gens = chaos_steps();
+    let ranks = 4usize;
+    for killed in 0..3usize {
+        let mut servers = start_shards(3);
+        let mut c = replicated(&addrs(&servers), 2);
+        assert_eq!(c.replicas(), 2);
+        write_generations(&mut c, "ck", gens, ranks);
+        assert_eq!(c.failover_stats().read_failovers, 0, "healthy cluster needs no failover");
+
+        let killed_addr = servers[killed].addr;
+        servers[killed].simulate_crash();
+
+        // Every pre-kill generation is still fully readable, byte-exact —
+        // the surviving replica answers for the dead primary.
+        assert_generations_byte_exact(&mut c, "ck", gens, ranks);
+        let stats = c.failover_stats();
+        assert!(
+            stats.read_failovers > 0,
+            "some keys' primary was shard {killed}; their reads must have failed over"
+        );
+
+        // Writes keep landing while the shard is down: degraded (one copy
+        // instead of two) for keys that include the dead shard, reported
+        // via shard_errors.  Spread extra keys so the key set provably
+        // straddles the dead shard's replica pairs.
+        for rank in 0..ranks {
+            c.put_tensor(&tensor_key("ck", rank, gens), &payload(gens, rank)).unwrap();
+        }
+        for i in 0..12usize {
+            c.put_tensor(&format!("ck-deg-{i}"), &payload(99, i)).unwrap();
+        }
+        assert!(c.failover_stats().degraded_ops > 0, "some post-kill writes ran degraded");
+        assert!(
+            c.shard_errors().iter().all(|e| e.shard == killed),
+            "degraded reports name the dead shard: {:?}",
+            c.shard_errors()
+        );
+        assert_generations_byte_exact(&mut c, "ck", gens + 1, ranks);
+
+        // Restart the shard on its old address: after the breaker cooldown
+        // the half-open probe reconnects and the ring is whole again (the
+        // restarted store is empty, so reads still fail over for its keys).
+        servers[killed] = DbServer::start(ServerConfig { addr: killed_addr, ..shard_config() })
+            .unwrap_or_else(|e| panic!("rebind {killed_addr}: {e}"));
+        std::thread::sleep(Duration::from_millis(300)); // > breaker_cooldown
+        assert_generations_byte_exact(&mut c, "ck", gens + 1, ranks);
+        assert!(
+            c.failover_stats().shard_reconnects > 0,
+            "half-open probe must reconnect the restarted shard"
+        );
+
+        for s in &mut servers {
+            s.shutdown();
+        }
+    }
+}
+
+#[test]
+fn unreplicated_cluster_degrades_cleanly_never_hangs() {
+    let mut servers = start_shards(2);
+    let mut c = replicated(&addrs(&servers), 1);
+    let keys: Vec<String> = (0..32).map(|i| format!("uk{i}")).collect();
+    for (i, k) in keys.iter().enumerate() {
+        c.put_tensor(k, &payload(0, i)).unwrap();
+    }
+    servers[1].simulate_crash();
+
+    let started = Instant::now();
+    let (mut served, mut failed) = (0usize, 0usize);
+    for (i, k) in keys.iter().enumerate() {
+        match c.get_tensor(k) {
+            Ok(t) => {
+                assert_eq!(t, payload(0, i));
+                served += 1;
+            }
+            Err(e) => {
+                assert!(e.is_transient_io(), "dead-shard errors stay retryable: {e}");
+                failed += 1;
+            }
+        }
+    }
+    // The key space straddles both shards, so both classes must occur:
+    // clean service for survivors, clean transient errors for the dead one.
+    assert!(served > 0 && failed > 0, "served={served} failed={failed}");
+    // And "clean" includes bounded: refused connects + the open breaker
+    // mean the whole sweep takes well under the 5 s I/O deadline once.
+    assert!(
+        started.elapsed() < Duration::from_secs(10),
+        "degraded sweep must not hang: {:?}",
+        started.elapsed()
+    );
+
+    // Aggregates return partial results with a per-shard error report.
+    let info = c.info().unwrap();
+    assert!(info.keys > 0);
+    assert!(info.degraded_ops > 0, "aggregated info counts the degraded op");
+    assert_eq!(c.shard_errors().len(), 1);
+    assert_eq!(c.shard_errors()[0].shard, 1);
+    let listed = c.list_keys("uk").unwrap();
+    assert!(!listed.is_empty() && listed.len() < keys.len(), "partial key list");
+    servers[0].shutdown();
+}
+
+#[test]
+fn broadcast_ops_succeed_degraded_with_shard_error_report() {
+    let mut servers = start_shards(3);
+    let mut c = replicated(&addrs(&servers), 1);
+    write_generations(&mut c, "bd", 2, 4);
+    servers[2].simulate_crash();
+
+    // set_retention / flush_all ride the same broadcast path put_model
+    // uses: surviving shards apply it, the dead one is reported.
+    c.set_retention(RetentionConfig::windowed(8, 0)).unwrap();
+    assert_eq!(c.shard_errors().len(), 1, "one unreachable shard reported");
+    assert_eq!(c.shard_errors()[0].shard, 2);
+    assert!(c.shard_errors()[0].error.contains("shard") || !c.shard_errors()[0].error.is_empty());
+    c.flush_all().unwrap();
+    assert!(c.failover_stats().degraded_ops >= 2);
+    // Flush reached the survivors.
+    assert_eq!(c.info().unwrap().keys, 0);
+    for s in &mut servers {
+        s.shutdown();
+    }
+}
+
+// --- tentpole: seeded probabilistic faults ------------------------------
+
+#[test]
+fn seeded_fault_plan_run_completes_byte_exact() {
+    let gens = chaos_steps();
+    let ranks = 4usize;
+    let mut servers = start_shards(3);
+    // Client-side fault plan: every shard connection misbehaves on a
+    // schedule that is a pure function of SITU_CHAOS_SEED.  Intensity 2 ≈
+    // a fault every ~50 byte-moving ops.
+    let plan = Arc::new(FaultPlan::new(FaultConfig::with_intensity(chaos_seed(), 2.0)));
+    let mut c = ClusterClient::connect_with(
+        &addrs(&servers),
+        ClusterConfig {
+            replicas: 2,
+            faults: Some(Arc::clone(&plan)),
+            breaker_cooldown: Duration::from_millis(10),
+            ..ClusterConfig::default()
+        },
+    )
+    .unwrap();
+
+    // Puts and gets are idempotent, so the transient-I/O retry class plus
+    // replica failover must carry the run to completion whatever the plan
+    // injects.
+    let retry = RetryPolicy::backoff(Duration::from_millis(2), 60);
+    for gen in 0..gens {
+        for rank in 0..ranks {
+            let key = tensor_key("sf", rank, gen);
+            let (res, _) = retry
+                .run_class(RetryClass::BusyOrTransientIo, || c.put_tensor(&key, &payload(gen, rank)));
+            res.unwrap_or_else(|e| panic!("put {key} never landed: {e}"));
+        }
+    }
+    for gen in 0..gens {
+        for rank in 0..ranks {
+            let key = tensor_key("sf", rank, gen);
+            let (res, _) =
+                retry.run_class(RetryClass::BusyOrTransientIo, || c.get_tensor(&key));
+            let got = res.unwrap_or_else(|e| panic!("get {key} never answered: {e}"));
+            assert_eq!(got, payload(gen, rank), "chaos run corrupted {key}");
+        }
+    }
+    let counters = plan.counters();
+    assert!(
+        counters.delayed_ops + counters.severed_conns + counters.truncated_writes > 0,
+        "the plan must actually have injected something: {counters:?}"
+    );
+    for s in &mut servers {
+        s.shutdown();
+    }
+}
+
+#[test]
+fn kill_switch_mid_run_heals_after_revive() {
+    let mut servers = start_shards(3);
+    let plan = Arc::new(FaultPlan::new(FaultConfig::default()));
+    let mut c = ClusterClient::connect_with(
+        &addrs(&servers),
+        ClusterConfig {
+            replicas: 2,
+            faults: Some(Arc::clone(&plan)),
+            breaker_cooldown: Duration::from_millis(10),
+            ..ClusterConfig::default()
+        },
+    )
+    .unwrap();
+    write_generations(&mut c, "kw", 3, 2);
+
+    // kill(): every client connection fails at once — process death as the
+    // sockets see it.  No data was lost server-side, so revive() + the
+    // breaker's half-open probes restore full service.
+    plan.kill();
+    assert!(c.get_tensor(&tensor_key("kw", 0, 0)).is_err(), "killed plan fails transport");
+    plan.revive();
+    std::thread::sleep(Duration::from_millis(20));
+    let retry = RetryPolicy::backoff(Duration::from_millis(2), 30);
+    for gen in 0..3u64 {
+        for rank in 0..2usize {
+            let key = tensor_key("kw", rank, gen);
+            let (res, _) = retry.run_class(RetryClass::BusyOrTransientIo, || c.get_tensor(&key));
+            assert_eq!(res.unwrap(), payload(gen, rank));
+        }
+    }
+    assert!(c.failover_stats().shard_reconnects > 0, "revive heals via reconnect");
+    for s in &mut servers {
+        s.shutdown();
+    }
+}
+
+// --- tentpole: the trainer's gather path under shard loss ---------------
+
+#[test]
+fn gather_window_survives_shard_kill_byte_exact() {
+    let gens = chaos_steps().max(4);
+    let ranks = 4usize;
+    let mut servers = start_shards(3);
+    let mut c = replicated(&addrs(&servers), 2);
+    write_generations(&mut c, "gw", gens, ranks);
+
+    let latest = gens - 1;
+    let window = gens.min(4);
+    let mut dl = DataLoader::new(c, (0..ranks).collect(), "gw", 11);
+    let before = dl.gather_window(latest, window).unwrap();
+
+    // Kill a shard between two gathers: the second one runs its pipelined
+    // reads through the failover rounds and must reproduce the first
+    // gather exactly.
+    servers[1].simulate_crash();
+    let after = dl.gather_window(latest, window).unwrap();
+    assert_eq!(before.len(), after.len());
+    for (b, a) in before.iter().zip(&after) {
+        assert_eq!(b, a, "window tensors diverged after shard kill");
+    }
+    // And against ground truth, not just self-consistency.
+    let mut it = after.iter();
+    for gen in (latest + 1 - window)..=latest {
+        for rank in 0..ranks {
+            assert_eq!(it.next().unwrap(), &payload(gen, rank));
+        }
+    }
+    servers[0].shutdown();
+    servers[2].shutdown();
+}
+
+// --- satellite: severed mid-split-frame ---------------------------------
+
+#[test]
+fn sever_mid_split_frame_leaves_store_clean_and_server_serving() {
+    let server = DbServer::start(shard_config()).unwrap();
+
+    // A torn put_tensor: the length prefix promises 256 bytes (the head a
+    // begin_split_frame/end_split_frame pair would send), but the peer
+    // dies after 12.  The connection thread must see EOF mid-frame and
+    // exit without touching the store.
+    {
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        s.write_all(&256u32.to_le_bytes()).unwrap();
+        s.write_all(&[0xAB; 12]).unwrap();
+        s.flush().unwrap();
+    } // dropped: RST/EOF mid-frame
+    std::thread::sleep(Duration::from_millis(30));
+
+    // Same tear, but the peer hangs instead of dying: the server's
+    // conn-read timeout fires mid-frame and the thread exits cleanly.
+    let hung = TcpStream::connect(server.addr).unwrap();
+    (&hung).write_all(&256u32.to_le_bytes()).unwrap();
+    (&hung).write_all(&[0xCD; 12]).unwrap();
+    std::thread::sleep(Duration::from_millis(120)); // > conn_read_timeout (50 ms)
+
+    // Store untouched, later connections fully served.
+    let mut c = Client::connect(server.addr).unwrap();
+    let info = c.info().unwrap();
+    assert_eq!(info.keys, 0, "torn frames must not materialize keys");
+    c.put_tensor("fine", &payload(1, 1)).unwrap();
+    assert_eq!(c.get_tensor("fine").unwrap(), payload(1, 1));
+    drop(hung);
+}
+
+// --- satellite: client I/O deadline -------------------------------------
+
+#[test]
+fn io_deadline_turns_a_hung_server_into_a_retryable_timeout() {
+    // A listener that never accepts: the kernel completes the handshake
+    // from the backlog, then nothing ever answers.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut c = Client::connect_with(addr, Some(Duration::from_millis(150)), None).unwrap();
+
+    let started = Instant::now();
+    let err = c.info().expect_err("nothing ever replies");
+    let elapsed = started.elapsed();
+    assert!(err.is_transient_io(), "deadline expiry is retryable: {err}");
+    assert!(elapsed >= Duration::from_millis(100), "deadline actually waited: {elapsed:?}");
+    assert!(elapsed < Duration::from_secs(5), "deadline bounds the hang: {elapsed:?}");
+    drop(listener);
+}
+
+// --- satellite: crash without the clean-shutdown spill barrier ----------
+
+#[test]
+fn simulate_crash_after_info_barrier_preserves_cold_tier() {
+    let dir = std::env::temp_dir().join(format!("situ_chaos_spill_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let spill = SpillConfig {
+        dir: dir.clone(),
+        max_bytes: 0,
+        segment_bytes: situ::db::spill::default_segment_bytes(),
+    };
+    let mut server = DbServer::start(ServerConfig {
+        retention: RetentionConfig::windowed(1, 0),
+        spill: Some(spill.clone()),
+        ..shard_config()
+    })
+    .unwrap();
+
+    let gens = 6u64;
+    let mut c = Client::connect(server.addr).unwrap();
+    for gen in 0..gens {
+        c.put_tensor(&tensor_key("sp", 0, gen), &payload(gen, 0)).unwrap();
+    }
+    // `info` doubles as the durability barrier: it drains the spill queue,
+    // so everything the window retired is on disk *before* the crash.
+    let info = c.info().unwrap();
+    assert!(info.spilled_keys >= gens - 1, "window-1 retirements spilled");
+    server.simulate_crash(); // no clean-shutdown spill_sync
+
+    // A replacement instance over the same directory replays the log:
+    // every retired generation is still byte-exact via ColdGet.
+    let server2 = DbServer::start(ServerConfig { spill: Some(spill), ..shard_config() }).unwrap();
+    let mut c2 = Client::connect(server2.addr).unwrap();
+    let cold = c2.cold_list("sp").unwrap();
+    for gen in 0..gens - 1 {
+        let key = tensor_key("sp", 0, gen);
+        assert!(cold.contains(&key), "{key} missing from cold tier: {cold:?}");
+        assert_eq!(c2.cold_get(&key).unwrap(), payload(gen, 0), "cold {key} not byte-exact");
+    }
+}
+
+// --- tentpole: a real process kill --------------------------------------
+
+/// `situ serve` child that is killed (never leaked) when the test ends.
+struct ServeChild(std::process::Child);
+
+impl Drop for ServeChild {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+fn spawn_serve() -> (ServeChild, SocketAddr) {
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_situ"))
+        .args(["serve", "--port", "0", "--no-models"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn situ serve");
+    // cmd_serve flushes the listening line exactly so pipes can parse it.
+    let mut line = String::new();
+    BufReader::new(child.stdout.as_mut().unwrap()).read_line(&mut line).unwrap();
+    let addr = line
+        .split("listening on ")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap_or_else(|| panic!("unparseable listening line: {line:?}"))
+        .parse()
+        .unwrap();
+    (ServeChild(child), addr)
+}
+
+#[test]
+fn real_process_kill_fails_over_with_zero_replicated_loss() {
+    let (children, shard_addrs): (Vec<ServeChild>, Vec<SocketAddr>) =
+        (0..3).map(|_| spawn_serve()).unzip();
+    let mut children = children;
+    let mut c = replicated(&shard_addrs, 2);
+    let gens = chaos_steps().min(6);
+    let ranks = 3usize;
+    write_generations(&mut c, "pk", gens, ranks);
+
+    // SIGKILL one shard process — the real thing, not a simulation.
+    children[1].0.kill().unwrap();
+    children[1].0.wait().unwrap();
+
+    assert_generations_byte_exact(&mut c, "pk", gens, ranks);
+    assert!(c.failover_stats().read_failovers > 0, "the dead process forced failovers");
+    for rank in 0..ranks {
+        c.put_tensor(&tensor_key("pk", rank, gens), &payload(gens, rank)).unwrap();
+    }
+    assert_generations_byte_exact(&mut c, "pk", gens + 1, ranks);
+}
