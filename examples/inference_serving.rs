@@ -3,8 +3,13 @@
 //! database (RedisAI-analogue) on the node's GPU slots, and only the latent
 //! codes are kept — the "much richer time history" use case.
 //!
-//! Reports per-request latency percentiles, throughput, and the achieved
-//! compression factor.
+//! The encoder is served through the versioned model registry: a publisher
+//! hot-swaps a new checkpoint mid-storm while every in-flight request keeps
+//! succeeding, and ranks sharing a GPU slot are coalesced by the adaptive
+//! micro-batcher (run with more than 4 ranks to see batches form).
+//!
+//! Reports per-request latency percentiles, throughput, the achieved
+//! compression factor, and the registry/batching counters.
 //!
 //! Run: `cargo run --release --example inference_serving -- [ranks] [steps]`
 
@@ -27,9 +32,11 @@ fn main() -> situ::Result<()> {
     let manifest = Manifest::load_dir(&artifacts)?;
     let server = DbServer::start(ServerConfig::default())?;
     println!("database up at {}; loading encoder into the model registry", server.addr);
+    let encoder_path = artifacts.join(&manifest.artifact("encoder").unwrap().file);
     {
         let mut c = Client::connect(server.addr)?;
-        c.put_model_from_file("encoder", &artifacts.join(&manifest.artifact("encoder").unwrap().file))?;
+        let v = c.put_model_from_file("encoder", &encoder_path)?;
+        println!("encoder published as version {v} (live)");
         // Stage the encoder parameters once; every rank references them.
         let state = situ::ml::ParamState::load_init(&manifest, &artifacts)?;
         for name in &manifest.enc_param_order {
@@ -53,6 +60,15 @@ fn main() -> situ::Result<()> {
         snaps.push(sampler.snapshot(&flow));
     }
     let snaps = std::sync::Arc::new(snaps);
+
+    // A trainer stand-in: republish the encoder mid-storm.  The registry
+    // allocates version 2 and atomically swaps the live pointer; requests
+    // already executing on version 1 finish on it, later ones pick up v2.
+    let publisher = std::thread::spawn(move || -> situ::Result<u64> {
+        std::thread::sleep(Duration::from_millis(40));
+        let mut c = Client::connect(addr)?;
+        c.put_model_from_file("encoder", &encoder_path)
+    });
 
     let t0 = Stopwatch::start();
     for rank in 0..ranks {
@@ -125,5 +141,12 @@ fn main() -> situ::Result<()> {
         format!("{:.0}x (manifest: {:.0}x)", tot_in as f64 / tot_out as f64, manifest.model.compression_factor),
     ]);
     table.print();
+
+    let swapped_to = publisher.join().expect("publisher panicked")?;
+    println!("hot-swapped to encoder version {swapped_to} mid-storm; zero failed requests");
+    let mut c = Client::connect(addr)?;
+    situ::telemetry::models_table(&c.list_models()?).print();
+    situ::telemetry::model_stats_table(&c.model_stats()?).print();
+    situ::telemetry::serving_table(&c.info()?).print();
     Ok(())
 }

@@ -1,0 +1,236 @@
+//! fig_serving — the versioned serving subsystem: adaptive micro-batching
+//! throughput and the hybrid ML/numeric pressure solve.
+//!
+//! Two experiments:
+//!
+//! 1. **Micro-batching under concurrency** — the same 8-thread inference
+//!    storm against one GPU slot, once with the batcher in pass-through
+//!    mode (zero window — every request executes alone, the pre-batching
+//!    behavior) and once with an adaptive window.  Coalescing amortizes
+//!    the per-execution overhead (slot acquisition, stats, dispatch)
+//!    across the batch, so batched throughput must be at least the
+//!    unbatched baseline — that inequality is the acceptance gate.
+//! 2. **Hybrid solver** — the end-to-end serving scenario: a CFD run whose
+//!    pressure solve is served by the database's live surrogate with
+//!    per-step validation, while checkpoints improve mid-run.  Gates: the
+//!    numeric fallback engaged (early, weak checkpoints), predictions were
+//!    accepted (late, converged checkpoint), and the hot-swap counter
+//!    moved.  A pure-numeric run of the same integration is timed next to
+//!    it for scale.
+//!
+//! `SITU_BENCH_SMOKE=1` shortens the run for CI; `SITU_BENCH_JSON=path`
+//! records the numbers (the BENCH_PR7.json acceptance record).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use situ::ai::{BatcherConfig, ModelRuntime};
+use situ::db::{DbServer, ServerConfig};
+use situ::orchestrator::driver::{run_hybrid_serving, HybridServingConfig};
+use situ::proto::Device;
+use situ::sim::cfd::{ChannelFlow, Grid};
+use situ::telemetry::Table;
+use situ::tensor::Tensor;
+
+const THREADS: usize = 8;
+const ELEMS: usize = 128;
+
+struct ServingPoint {
+    label: &'static str,
+    requests: u64,
+    secs: f64,
+    ops_per_sec: f64,
+    batches: u64,
+    batched_requests: u64,
+    backend_execs: u64,
+}
+
+/// Storm the model runtime in-process: 8 threads looping `run_model` on
+/// the same (key, live version, device) lane.  The store and registry are
+/// the real server's; only the TCP hop is skipped, so the measured cost is
+/// the serving runtime itself.
+fn serving_sweep(label: &'static str, window: Duration, iters: u64) -> ServingPoint {
+    let exec = situ::runtime::Executor::new().expect("executor");
+    let models = ModelRuntime::with_batcher(
+        exec,
+        BatcherConfig {
+            window,
+            max_batch: 2 * THREADS,
+            // Make every storm arrival count as a burst so the window
+            // (when nonzero) is actually exercised.
+            adapt_arrival: Duration::from_secs(600),
+        },
+    );
+    let server =
+        DbServer::start_with(ServerConfig::default(), Some(Arc::new(models))).expect("server");
+    let models = Arc::clone(server.models().unwrap());
+    let store = Arc::clone(server.store());
+
+    models.put_model("m", "situ-native v1\naffine 1 2.5\n").unwrap();
+    for w in 0..THREADS {
+        let x: Vec<f32> = (0..ELEMS).map(|i| (w * ELEMS + i) as f32).collect();
+        store.put_tensor(&format!("in_{w}"), Tensor::from_f32(&[ELEMS], x).unwrap()).unwrap();
+    }
+
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..THREADS {
+        let models = Arc::clone(&models);
+        let store = Arc::clone(&store);
+        handles.push(std::thread::spawn(move || {
+            let ik = format!("in_{w}");
+            let ok = format!("out_{w}");
+            for _ in 0..iters {
+                models
+                    .run_model(&store, "m", 0, &[ik.clone()], &[ok.clone()], Device::Gpu(0))
+                    .expect("run_model");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = start.elapsed().as_secs_f64();
+
+    // De-stacked outputs must be each caller's own slice, not a neighbor's.
+    for w in 0..THREADS {
+        let y = store.get_tensor(&format!("out_{w}")).unwrap().to_f32().unwrap();
+        assert_eq!(y.len(), ELEMS);
+        assert_eq!(y[0], (w * ELEMS) as f32 + 2.5, "caller {w} got someone else's batch slice");
+    }
+
+    let requests = THREADS as u64 * iters;
+    let (batches, batched_requests) = models.batch_counters();
+    let backend_execs = models.model_entries()[0].executions;
+    ServingPoint {
+        label,
+        requests,
+        secs,
+        ops_per_sec: requests as f64 / secs.max(1e-9),
+        batches,
+        batched_requests,
+        backend_execs,
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("SITU_BENCH_SMOKE").is_ok();
+    let iters: u64 = std::env::var("SITU_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 400 } else { 4000 });
+
+    // --- experiment 1: micro-batching under concurrency --------------------
+    let unbatched = serving_sweep("unbatched (window 0)", Duration::ZERO, iters);
+    let batched = serving_sweep("batched (100 µs window)", Duration::from_micros(100), iters);
+    let mut table = Table::new(
+        "adaptive micro-batching (8 threads, one GPU slot, 128-elem f32)",
+        &["mode", "requests", "secs", "req/s", "batches", "batched reqs", "backend execs"],
+    );
+    for p in [&unbatched, &batched] {
+        table.row(&[
+            p.label.to_string(),
+            p.requests.to_string(),
+            format!("{:.3}", p.secs),
+            format!("{:.0}", p.ops_per_sec),
+            p.batches.to_string(),
+            p.batched_requests.to_string(),
+            p.backend_execs.to_string(),
+        ]);
+    }
+    table.print();
+
+    // --- experiment 2: hybrid pressure solve -------------------------------
+    let h_cfg = HybridServingConfig {
+        steps: if smoke { 9 } else { 18 },
+        publish_every: 3,
+        checkpoint_iters: vec![3, 2000],
+        ..HybridServingConfig::default()
+    };
+    let numeric_secs = {
+        let grid = Grid::channel(h_cfg.grid.0, h_cfg.grid.1, h_cfg.grid.2);
+        let mut flow = ChannelFlow::new(grid, h_cfg.nu, h_cfg.seed, 0.08);
+        let start = Instant::now();
+        for _ in 0..h_cfg.steps {
+            flow.step();
+        }
+        start.elapsed().as_secs_f64()
+    };
+    let start = Instant::now();
+    let report = run_hybrid_serving(&h_cfg).expect("hybrid serving run");
+    let hybrid_secs = start.elapsed().as_secs_f64();
+    let s = &report.stats;
+    let mut ht = Table::new(
+        "hybrid pressure solve vs pure numeric",
+        &["steps", "accepted", "fallbacks", "infer errors", "swaps", "hybrid secs", "numeric secs"],
+    );
+    ht.row(&[
+        s.steps.to_string(),
+        s.accepted.to_string(),
+        s.fallbacks.to_string(),
+        s.surrogate_errors.to_string(),
+        report.db.model_swaps.to_string(),
+        format!("{:.3}", hybrid_secs),
+        format!("{:.3}", numeric_secs),
+    ]);
+    ht.print();
+
+    // --- the fig_serving gates ---------------------------------------------
+    assert!(
+        batched.ops_per_sec >= unbatched.ops_per_sec,
+        "batched throughput ({:.0}/s) fell below the unbatched baseline ({:.0}/s)",
+        batched.ops_per_sec,
+        unbatched.ops_per_sec
+    );
+    assert!(batched.batches >= 1, "the window never coalesced anything");
+    assert!(
+        batched.backend_execs < batched.requests,
+        "stacking saved no backend executions"
+    );
+    assert_eq!(s.steps, h_cfg.steps, "hybrid run completed every step");
+    assert!(s.fallbacks > 0, "the numeric fallback never engaged");
+    assert!(s.accepted > 0, "no surrogate prediction was ever accepted");
+    assert!(report.db.model_swaps >= 1, "mid-run checkpoints never hot-swapped");
+    assert!(
+        report.mean_abs_divergence < 0.1,
+        "hybrid flow lost projection quality: {}",
+        report.mean_abs_divergence
+    );
+
+    if let Ok(path) = std::env::var("SITU_BENCH_JSON") {
+        let point = |p: &ServingPoint| {
+            format!(
+                "{{\"requests\": {}, \"secs\": {:.6}, \"ops_per_sec\": {:.1}, \
+                 \"batches\": {}, \"batched_requests\": {}, \"backend_execs\": {}}}",
+                p.requests, p.secs, p.ops_per_sec, p.batches, p.batched_requests, p.backend_execs
+            )
+        };
+        let mut out = String::from("{\n  \"bench\": \"fig_serving\",\n");
+        out.push_str(&format!(
+            "  \"config\": {{\"threads\": {THREADS}, \"elems\": {ELEMS}, \"iters\": {iters}, \
+             \"hybrid_steps\": {}}},\n",
+            h_cfg.steps
+        ));
+        out.push_str(&format!("  \"unbatched\": {},\n", point(&unbatched)));
+        out.push_str(&format!("  \"batched\": {},\n", point(&batched)));
+        out.push_str(&format!(
+            "  \"hybrid\": {{\"steps\": {}, \"accepted\": {}, \"fallbacks\": {}, \
+             \"surrogate_errors\": {}, \"model_swaps\": {}, \"batches\": {}, \
+             \"batched_requests\": {}, \"secs\": {:.6}, \"numeric_secs\": {:.6}, \
+             \"mean_abs_divergence\": {:.6e}}}\n",
+            s.steps,
+            s.accepted,
+            s.fallbacks,
+            s.surrogate_errors,
+            report.db.model_swaps,
+            report.db.batches,
+            report.db.batched_requests,
+            hybrid_secs,
+            numeric_secs,
+            report.mean_abs_divergence
+        ));
+        out.push_str("}\n");
+        std::fs::write(&path, &out).expect("write SITU_BENCH_JSON");
+        println!("bench results written to {path}");
+    }
+}

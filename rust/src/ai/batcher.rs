@@ -1,0 +1,368 @@
+//! Server-side adaptive micro-batching for `run_model`.
+//!
+//! Concurrent requests for the same `(key, version, device)` lane coalesce
+//! into one stacked backend execution.  The window adapts to arrival rate:
+//! a request arriving after an idle gap passes straight through (no added
+//! latency at low concurrency), while a request arriving hot on the heels
+//! of another — within [`ADAPT_ARRIVAL`] — elects a leader that holds the
+//! lane open for the configured window (or until [`BatcherConfig::max_batch`]
+//! entries queue) before executing everything at once.
+//!
+//! The lane key pins the *resolved* version, so a batch is structurally
+//! incapable of mixing versions: a hot-swap mid-storm splits traffic into
+//! an old-version lane (draining) and a new-version lane (filling), and
+//! each executes under its own `Arc<ModelVersion>`.
+//!
+//! Leader/follower protocol: every request enqueues an entry carrying its
+//! reply channel.  The first arrival on an idle lane becomes leader,
+//! optionally waits out the window on the lane condvar, then takes the
+//! whole queue and runs the caller-supplied execution closure; followers
+//! just block on their reply channel.  Per-entry errors mirror
+//! `Request::Batch` semantics — one bad request never poisons its
+//! batchmates.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+/// Two arrivals closer than this are treated as a burst worth batching.
+pub const ADAPT_ARRIVAL: Duration = Duration::from_millis(2);
+
+/// Environment override for the batching window in microseconds;
+/// `SITU_BATCH_WINDOW_US=0` disables coalescing entirely (the unbatched
+/// baseline in `fig_serving`).
+pub const WINDOW_ENV: &str = "SITU_BATCH_WINDOW_US";
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// How long a leader holds a bursting lane open.
+    pub window: Duration,
+    /// Execute immediately once this many entries queue.
+    pub max_batch: usize,
+    /// Inter-arrival gap below which the lane counts as bursting.
+    pub adapt_arrival: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            window: Duration::from_micros(500),
+            max_batch: 32,
+            adapt_arrival: ADAPT_ARRIVAL,
+        }
+    }
+}
+
+impl BatcherConfig {
+    /// Default config with the `SITU_BATCH_WINDOW_US` override applied.
+    pub fn from_env() -> BatcherConfig {
+        let mut cfg = BatcherConfig::default();
+        if let Ok(v) = std::env::var(WINDOW_ENV) {
+            if let Ok(us) = v.trim().parse::<u64>() {
+                cfg.window = Duration::from_micros(us);
+            }
+        }
+        cfg
+    }
+}
+
+/// Lane identity: `(model key, resolved version, device byte)`.
+pub type LaneKey = (String, u64, u8);
+
+/// One queued request: its gathered inputs and where the de-stacked
+/// result goes.
+pub struct BatchEntry {
+    pub inputs: Vec<Tensor>,
+    reply: mpsc::Sender<Result<Vec<Tensor>>>,
+}
+
+impl BatchEntry {
+    /// Deliver this entry's outputs (or its own error).
+    pub fn respond(self, r: Result<Vec<Tensor>>) {
+        let _ = self.reply.send(r);
+    }
+}
+
+struct LaneState {
+    pending: Vec<BatchEntry>,
+    leader_active: bool,
+    last_arrival: Option<Instant>,
+}
+
+struct Lane {
+    m: Mutex<LaneState>,
+    cv: Condvar,
+}
+
+/// The batcher: one lane per `(key, version, device)` in flight.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    lanes: Mutex<HashMap<LaneKey, Arc<Lane>>>,
+    /// Stacked executions that actually coalesced (≥ 2 requests).
+    pub batches: AtomicU64,
+    /// Requests served through such coalesced executions.
+    pub batched_requests: AtomicU64,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher {
+            cfg,
+            lanes: Mutex::new(HashMap::new()),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+        }
+    }
+
+    pub fn window(&self) -> Duration {
+        self.cfg.window
+    }
+
+    fn lane(&self, key: &LaneKey) -> Arc<Lane> {
+        let mut lanes = self.lanes.lock().unwrap();
+        lanes
+            .entry(key.clone())
+            .or_insert_with(|| {
+                Arc::new(Lane {
+                    m: Mutex::new(LaneState {
+                        pending: Vec::new(),
+                        leader_active: false,
+                        last_arrival: None,
+                    }),
+                    cv: Condvar::new(),
+                })
+            })
+            .clone()
+    }
+
+    /// Submit one request to its lane and block until its outputs arrive.
+    ///
+    /// `run` executes a collected batch; only the elected leader's closure
+    /// runs, and it must `respond` to every entry exactly once.  Callers
+    /// validate everything request-specific (device range, gathered
+    /// inputs) *before* submitting so the closure is infallible per lane.
+    pub fn submit(
+        &self,
+        lane_key: LaneKey,
+        inputs: Vec<Tensor>,
+        run: impl FnOnce(Vec<BatchEntry>),
+    ) -> Result<Vec<Tensor>> {
+        let lane = self.lane(&lane_key);
+        let (tx, rx) = mpsc::channel();
+        let leads = {
+            let mut st = lane.m.lock().unwrap();
+            let now = Instant::now();
+            let burst = st
+                .last_arrival
+                .map(|t| now.saturating_duration_since(t) <= self.cfg.adapt_arrival)
+                .unwrap_or(false);
+            st.last_arrival = Some(now);
+            st.pending.push(BatchEntry { inputs, reply: tx });
+            if st.leader_active {
+                if st.pending.len() >= self.cfg.max_batch {
+                    lane.cv.notify_all();
+                }
+                None
+            } else {
+                st.leader_active = true;
+                Some(burst)
+            }
+        };
+
+        if let Some(burst) = leads {
+            let wait =
+                if burst && !self.cfg.window.is_zero() { self.cfg.window } else { Duration::ZERO };
+            let batch = {
+                let mut st = lane.m.lock().unwrap();
+                if !wait.is_zero() {
+                    let deadline = Instant::now() + wait;
+                    while st.pending.len() < self.cfg.max_batch {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        let (g, _) = lane.cv.wait_timeout(st, deadline - now).unwrap();
+                        st = g;
+                    }
+                }
+                st.leader_active = false;
+                std::mem::take(&mut st.pending)
+            };
+            if batch.len() > 1 {
+                self.batches.fetch_add(1, Ordering::Relaxed);
+                self.batched_requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            }
+            run(batch);
+        }
+
+        rx.recv()
+            .map_err(|_| Error::Invalid("batch leader dropped a reply".into()))?
+    }
+}
+
+/// Duplicate an error for fan-out to every entry of a failed batch,
+/// preserving the variants whose rendering is load-bearing on the wire
+/// (`busy: `, `model not found: `, ...).
+pub fn clone_err(e: &Error) -> Error {
+    match e {
+        Error::Protocol(s) => Error::Protocol(s.clone()),
+        Error::KeyNotFound(s) => Error::KeyNotFound(s.clone()),
+        Error::ModelNotFound(s) => Error::ModelNotFound(s.clone()),
+        Error::Shape(s) => Error::Shape(s.clone()),
+        Error::Xla(s) => Error::Xla(s.clone()),
+        Error::Parse(s) => Error::Parse(s.clone()),
+        Error::Remote(s) => Error::Remote(s.clone()),
+        Error::Invalid(s) => Error::Invalid(s.clone()),
+        Error::Timeout(s) => Error::Timeout(s.clone()),
+        Error::Busy(s) => Error::Busy(s.clone()),
+        Error::Io(e) => Error::Remote(format!("io error: {e}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn t(v: f32) -> Tensor {
+        Tensor::scalar_f32(v)
+    }
+
+    #[test]
+    fn single_request_passes_through() {
+        let b = Batcher::new(BatcherConfig::default());
+        let out = b
+            .submit(("m".into(), 1, 0xff), vec![t(2.0)], |batch| {
+                assert_eq!(batch.len(), 1);
+                for e in batch {
+                    let r = e.inputs.clone();
+                    e.respond(Ok(r));
+                }
+            })
+            .unwrap();
+        assert_eq!(out[0].first_f32().unwrap(), 2.0);
+        assert_eq!(b.batches.load(Ordering::Relaxed), 0, "lone request is not a batch");
+    }
+
+    #[test]
+    fn burst_coalesces_into_one_execution() {
+        // A huge adapt_arrival makes every post-prime arrival a burst, so
+        // the test exercises the coalescing path deterministically.
+        let b = Arc::new(Batcher::new(BatcherConfig {
+            window: Duration::from_millis(100),
+            max_batch: 32,
+            adapt_arrival: Duration::from_secs(60),
+        }));
+        let executions = Arc::new(AtomicUsize::new(0));
+        // Prime the arrival clock so the storm below counts as a burst.
+        b.submit(("m".into(), 1, 0), vec![t(0.0)], |batch| {
+            for e in batch {
+                e.respond(Ok(vec![]));
+            }
+        })
+        .unwrap();
+
+        let n = 8;
+        let barrier = Arc::new(std::sync::Barrier::new(n));
+        let mut handles = Vec::new();
+        for i in 0..n {
+            let b = b.clone();
+            let executions = executions.clone();
+            let barrier = barrier.clone();
+            handles.push(std::thread::spawn(move || {
+                barrier.wait();
+                b.submit(("m".into(), 1, 0), vec![t(i as f32)], |batch| {
+                    executions.fetch_add(1, Ordering::Relaxed);
+                    for e in batch {
+                        let r = e.inputs.clone();
+                        e.respond(Ok(r));
+                    }
+                })
+                .unwrap()
+            }));
+        }
+        let mut seen = Vec::new();
+        for h in handles {
+            let out = h.join().unwrap();
+            seen.push(out[0].first_f32().unwrap());
+        }
+        seen.sort_by(f32::total_cmp);
+        assert_eq!(seen, (0..n).map(|i| i as f32).collect::<Vec<_>>());
+        let execs = executions.load(Ordering::Relaxed);
+        assert!(execs < n, "storm of {n} must coalesce, got {execs} executions");
+        assert!(b.batched_requests.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn max_batch_releases_leader_early() {
+        let b = Arc::new(Batcher::new(BatcherConfig {
+            window: Duration::from_secs(30), // far beyond test patience
+            max_batch: 4,
+            adapt_arrival: Duration::from_secs(60), // every arrival bursts
+        }));
+        // Prime the burst detector.
+        b.submit(("m".into(), 2, 1), vec![t(-1.0)], |batch| {
+            for e in batch {
+                e.respond(Ok(vec![]));
+            }
+        })
+        .unwrap();
+        let start = Instant::now();
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                b.submit(("m".into(), 2, 1), vec![t(i as f32)], |batch| {
+                    for e in batch {
+                        let r = e.inputs.clone();
+                        e.respond(Ok(r));
+                    }
+                })
+                .unwrap()
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(
+            start.elapsed() < Duration::from_secs(10),
+            "max_batch must release the 30 s window early"
+        );
+    }
+
+    #[test]
+    fn lanes_are_isolated_and_errors_per_entry() {
+        let b = Batcher::new(BatcherConfig::default());
+        let err = b
+            .submit(("m".into(), 1, 0xff), vec![t(1.0)], |batch| {
+                for e in batch {
+                    e.respond(Err(Error::ModelNotFound("m".into())));
+                }
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("model not found"));
+        // Distinct version → distinct lane: a fresh submit still works.
+        let ok = b
+            .submit(("m".into(), 2, 0xff), vec![t(1.0)], |batch| {
+                for e in batch {
+                    e.respond(Ok(vec![t(9.0)]));
+                }
+            })
+            .unwrap();
+        assert_eq!(ok[0].first_f32().unwrap(), 9.0);
+    }
+
+    #[test]
+    fn clone_err_preserves_load_bearing_variants() {
+        let b = clone_err(&Error::Busy("cap".into()));
+        assert!(b.to_string().starts_with("busy: "));
+        let m = clone_err(&Error::ModelNotFound("k".into()));
+        assert!(matches!(m, Error::ModelNotFound(_)));
+        let io = clone_err(&Error::Io(std::io::Error::new(std::io::ErrorKind::Other, "x")));
+        assert!(matches!(io, Error::Remote(_)));
+    }
+}

@@ -4,16 +4,30 @@
 //! `put_tensor(input)` → `run_model(key, in, out, device)` →
 //! `unpack_tensor(output)`.  The model itself lives *inside* the database
 //! process and executes on a node-local device pool (Polaris: 4 A100s, with
-//! 6 simulation ranks pinned per GPU).  Here the registry compiles uploaded
-//! HLO-text artifacts through the PJRT [`crate::runtime::Executor`] and the
-//! device pool tracks per-slot queueing exactly like RedisAI's GPU contexts.
+//! 6 simulation ranks pinned per GPU).
+//!
+//! Serving is three layers:
+//!
+//! * [`registry::Registry`] — versioned artifacts with an atomically
+//!   hot-swapped live pointer per key (`registry.rs`);
+//! * [`batcher::Batcher`] — adaptive micro-batching that coalesces
+//!   concurrent same-`(key, version, device)` requests into one stacked
+//!   backend execution (`batcher.rs`);
+//! * the device pool here, which tracks per-slot queueing exactly like
+//!   RedisAI's GPU contexts.
+
+pub mod batcher;
+pub mod registry;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use registry::{NativeModel, Registry, NATIVE_MAGIC};
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::db::Store;
 use crate::error::{Error, Result};
-use crate::proto::Device;
+use crate::proto::{Device, ModelDeviceStat, ModelEntry};
 use crate::runtime::Executor;
 use crate::telemetry::StatAccum;
 
@@ -28,80 +42,115 @@ pub struct DeviceStats {
     pub queue_wait: Mutex<StatAccum>,
 }
 
+/// Lane-key byte for a device (mirrors the wire encoding: `0xff` CPU).
+fn device_byte(d: Device) -> u8 {
+    match d {
+        Device::Cpu => 0xff,
+        Device::Gpu(i) => i,
+    }
+}
+
 /// Model registry + device pool living inside one DB server.
 pub struct ModelRuntime {
     exec: Executor,
+    registry: Registry,
+    batcher: Batcher,
     /// One lock per GPU slot; executions targeting a slot serialize on it,
     /// reproducing RedisAI's per-device run queue.
     gpu_slots: Vec<Arc<Mutex<()>>>,
     pub cpu_stats: DeviceStats,
     pub gpu_stats: Vec<DeviceStats>,
-    models: Mutex<Vec<String>>,
 }
 
 impl ModelRuntime {
     pub fn new(exec: Executor) -> ModelRuntime {
+        ModelRuntime::with_batcher(exec, BatcherConfig::from_env())
+    }
+
+    pub fn with_batcher(exec: Executor, cfg: BatcherConfig) -> ModelRuntime {
         ModelRuntime {
+            registry: Registry::new(exec.clone()),
+            batcher: Batcher::new(cfg),
             exec,
             gpu_slots: (0..GPUS_PER_NODE).map(|_| Arc::new(Mutex::new(()))).collect(),
             cpu_stats: DeviceStats::default(),
             gpu_stats: (0..GPUS_PER_NODE).map(|_| DeviceStats::default()).collect(),
-            models: Mutex::new(Vec::new()),
         }
     }
 
-    /// Upload + compile a model from HLO text (the `AI.MODELSET` analogue).
-    pub fn put_model(&self, key: &str, hlo_text: &str) -> Result<()> {
-        self.exec.load_hlo_text(key, hlo_text)?;
-        let mut m = self.models.lock().unwrap();
-        if !m.iter().any(|k| k == key) {
-            m.push(key.to_string());
-        }
-        Ok(())
+    /// Upload a model from HLO or native text (the `AI.MODELSET`
+    /// analogue).  Re-publishing an existing key hot-swaps the live
+    /// pointer.  Returns the published version.
+    pub fn put_model(&self, key: &str, text: &str) -> Result<u64> {
+        self.registry.publish_text(key, text)
     }
 
-    /// Load + compile a model from an artifact file (driver-side upload).
-    pub fn put_model_from_file(&self, key: &str, path: &std::path::Path) -> Result<()> {
-        self.exec.load_artifact(key, path)?;
-        let mut m = self.models.lock().unwrap();
-        if !m.iter().any(|k| k == key) {
-            m.push(key.to_string());
-        }
-        Ok(())
+    /// Publish a model from an artifact file (driver-side upload).
+    pub fn put_model_from_file(&self, key: &str, path: &std::path::Path) -> Result<u64> {
+        self.registry.publish_file(key, path)
     }
 
+    /// Distinct live model keys (not upload attempts).
     pub fn n_models(&self) -> u64 {
-        self.models.lock().unwrap().len() as u64
+        self.registry.n_live()
     }
 
     pub fn has_model(&self, key: &str) -> bool {
-        self.models.lock().unwrap().iter().any(|k| k == key)
+        self.registry.has_model(key)
     }
 
-    /// The `AI.MODELRUN` analogue: gather inputs from the store, execute on
-    /// the requested device slot, scatter outputs back into the store.
-    ///
-    /// The gather is zero-copy: each input is a refcount clone of the
-    /// stored payload, so model I/O never duplicates tensors in host
-    /// memory before they reach the PJRT literal conversion.
-    pub fn run_model(
-        &self,
-        store: &Store,
-        key: &str,
-        in_keys: &[String],
-        out_keys: &[String],
-        device: Device,
-    ) -> Result<()> {
-        if !self.has_model(key) {
-            return Err(Error::ModelNotFound(key.to_string()));
-        }
-        let inputs = in_keys
-            .iter()
-            .map(|k| store.get_tensor(k))
-            .collect::<Result<Vec<_>>>()?;
+    /// Total live-pointer swaps (checkpoint republications).
+    pub fn swaps(&self) -> u64 {
+        self.registry.swaps_total()
+    }
 
-        let (stats, _slot_guard) = match device {
-            Device::Cpu => (&self.cpu_stats, None),
+    /// Coalesced executions / requests served through them.
+    pub fn batch_counters(&self) -> (u64, u64) {
+        (
+            self.batcher.batches.load(Ordering::Relaxed),
+            self.batcher.batched_requests.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Per-key registry listing (`ListModels`).
+    pub fn model_entries(&self) -> Vec<ModelEntry> {
+        self.registry.entries()
+    }
+
+    /// Per-device stat rows (`ModelStats`): one row per device that has
+    /// executed or queued anything.
+    pub fn device_stat_rows(&self) -> Vec<ModelDeviceStat> {
+        let mut rows = Vec::new();
+        let mut push = |device: Device, st: &DeviceStats| {
+            let executions = st.executions.load(Ordering::Relaxed);
+            let eval = st.eval.lock().unwrap();
+            let queue = st.queue_wait.lock().unwrap();
+            if executions == 0 && eval.count() == 0 && queue.count() == 0 {
+                return;
+            }
+            rows.push(ModelDeviceStat {
+                device,
+                executions,
+                eval_count: eval.count(),
+                eval_mean_s: eval.mean(),
+                eval_std_s: eval.std(),
+                queue_count: queue.count(),
+                queue_mean_s: queue.mean(),
+                queue_std_s: queue.std(),
+            });
+        };
+        push(Device::Cpu, &self.cpu_stats);
+        for (i, st) in self.gpu_stats.iter().enumerate() {
+            push(Device::Gpu(i as u8), st);
+        }
+        rows
+    }
+
+    /// Acquire the device's run slot (queue wait is timed for GPUs) and
+    /// return the stats bucket to record into.
+    fn slot(&self, device: Device) -> Result<(&DeviceStats, Option<MutexGuard<'_, ()>>)> {
+        match device {
+            Device::Cpu => Ok((&self.cpu_stats, None)),
             Device::Gpu(i) => {
                 let i = i as usize;
                 if i >= self.gpu_slots.len() {
@@ -109,19 +158,50 @@ impl ModelRuntime {
                 }
                 let qw = crate::telemetry::Stopwatch::start();
                 let guard = self.gpu_slots[i].lock().unwrap();
-                self.gpu_stats[i]
-                    .queue_wait
-                    .lock()
-                    .unwrap()
-                    .add(qw.stop());
-                (&self.gpu_stats[i], Some(guard))
+                self.gpu_stats[i].queue_wait.lock().unwrap().add(qw.stop());
+                Ok((&self.gpu_stats[i], Some(guard)))
             }
-        };
+        }
+    }
 
-        let sw = crate::telemetry::Stopwatch::start();
-        let outputs = self.exec.execute(key, inputs)?;
-        stats.eval.lock().unwrap().add(sw.stop());
-        stats.executions.fetch_add(1, Ordering::Relaxed);
+    /// The `AI.MODELRUN` analogue: gather inputs from the store, execute on
+    /// the requested device slot, scatter outputs back into the store.
+    ///
+    /// `version` 0 resolves the live pointer; a nonzero version pins an
+    /// exact published checkpoint.  Concurrent calls for the same resolved
+    /// `(key, version, device)` coalesce in the micro-batcher; outputs are
+    /// de-stacked per request, and a failing entry only fails its own
+    /// caller.
+    ///
+    /// The gather is zero-copy: each input is a refcount clone of the
+    /// stored payload, so model I/O never duplicates tensors in host
+    /// memory before they reach the backend.
+    pub fn run_model(
+        &self,
+        store: &Store,
+        key: &str,
+        version: u64,
+        in_keys: &[String],
+        out_keys: &[String],
+        device: Device,
+    ) -> Result<()> {
+        let model = self.registry.resolve(key, version)?;
+        // Everything request-specific fails here, before the request joins
+        // a lane: the batch execution closure is then infallible per lane.
+        if let Device::Gpu(i) = device {
+            if i as usize >= self.gpu_slots.len() {
+                return Err(Error::Invalid(format!("gpu slot {i} out of range")));
+            }
+        }
+        let inputs = in_keys
+            .iter()
+            .map(|k| store.get_tensor(k))
+            .collect::<Result<Vec<_>>>()?;
+
+        let lane = (model.key.clone(), model.version, device_byte(device));
+        let outputs = self
+            .batcher
+            .submit(lane, inputs, |batch| self.execute_batch(&model, device, batch))?;
 
         if outputs.len() != out_keys.len() {
             return Err(Error::Shape(format!(
@@ -136,6 +216,68 @@ impl ModelRuntime {
         Ok(())
     }
 
+    /// Leader path: run a collected batch under one device-slot hold.
+    ///
+    /// Stackable models execute once over the concatenated input lists and
+    /// the outputs are split back by each entry's input arity; other
+    /// backends run per entry while still amortizing the single queue
+    /// wait.  Every entry is answered exactly once.
+    fn execute_batch(
+        &self,
+        model: &registry::ModelVersion,
+        device: Device,
+        batch: Vec<batcher::BatchEntry>,
+    ) {
+        let (stats, _slot_guard) = match self.slot(device) {
+            Ok(x) => x,
+            Err(e) => {
+                // Unreachable in practice: run_model validates pre-submit.
+                for entry in batch {
+                    entry.respond(Err(batcher::clone_err(&e)));
+                }
+                return;
+            }
+        };
+        if model.stackable() && batch.len() > 1 {
+            let arities: Vec<usize> = batch.iter().map(|e| e.inputs.len()).collect();
+            let stacked: Vec<_> = batch.iter().flat_map(|e| e.inputs.iter().cloned()).collect();
+            let sw = crate::telemetry::Stopwatch::start();
+            let result = model.execute(&self.exec, stacked);
+            stats.eval.lock().unwrap().add(sw.stop());
+            stats.executions.fetch_add(1, Ordering::Relaxed);
+            match result {
+                Ok(outputs) => {
+                    let mut rest = outputs;
+                    for (entry, arity) in batch.into_iter().zip(arities) {
+                        if rest.len() < arity {
+                            entry.respond(Err(Error::Shape(
+                                "stacked execution returned too few outputs".into(),
+                            )));
+                            continue;
+                        }
+                        let tail = rest.split_off(arity);
+                        let mine = std::mem::replace(&mut rest, tail);
+                        entry.respond(Ok(mine));
+                    }
+                }
+                Err(e) => {
+                    for entry in batch {
+                        entry.respond(Err(batcher::clone_err(&e)));
+                    }
+                }
+            }
+        } else {
+            for mut entry in batch {
+                let inputs = std::mem::take(&mut entry.inputs);
+                let sw = crate::telemetry::Stopwatch::start();
+                let result = model.execute(&self.exec, inputs);
+                stats.eval.lock().unwrap().add(sw.stop());
+                stats.executions.fetch_add(1, Ordering::Relaxed);
+                entry.respond(result);
+            }
+        }
+    }
+
     /// Round-robin device assignment used by clients: the paper pins 6
     /// simulation ranks to each of the 4 GPUs.
     pub fn device_for_rank(rank: usize) -> Device {
@@ -146,6 +288,8 @@ impl ModelRuntime {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::db::Store;
+    use crate::tensor::Tensor;
 
     #[test]
     fn device_pinning_balances() {
@@ -157,5 +301,70 @@ mod tests {
             }
         }
         assert_eq!(counts, [6, 6, 6, 6], "paper: 6 clients pinned per GPU");
+    }
+
+    #[test]
+    fn run_model_native_end_to_end() {
+        let rt = ModelRuntime::new(Executor::new().unwrap());
+        let store = Store::new();
+        let v = rt.put_model("scaler", "situ-native v1\naffine 3.0 1.0\n").unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(rt.n_models(), 1);
+        store
+            .put_tensor("x", Tensor::from_f32(&[2], vec![1.0, 2.0]).unwrap())
+            .unwrap();
+        rt.run_model(
+            &store,
+            "scaler",
+            0,
+            &["x".into()],
+            &["y".into()],
+            Device::Gpu(1),
+        )
+        .unwrap();
+        let y = store.get_tensor("y").unwrap();
+        assert_eq!(y.to_f32().unwrap(), vec![4.0, 7.0]);
+
+        // Version pinning: an exact version works, a missing one errors.
+        rt.run_model(&store, "scaler", 1, &["x".into()], &["y2".into()], Device::Cpu)
+            .unwrap();
+        let err = rt
+            .run_model(&store, "scaler", 9, &["x".into()], &["y3".into()], Device::Cpu)
+            .unwrap_err();
+        assert!(err.to_string().contains("model not found"));
+
+        // Republish hot-swaps: version 2 becomes live.
+        let v2 = rt.put_model("scaler", "situ-native v1\naffine 1.0 -1.0\n").unwrap();
+        assert_eq!(v2, 2);
+        assert_eq!(rt.swaps(), 1);
+        assert_eq!(rt.n_models(), 1, "distinct live keys, not upload attempts");
+        rt.run_model(&store, "scaler", 0, &["x".into()], &["z".into()], Device::Gpu(1))
+            .unwrap();
+        assert_eq!(store.get_tensor("z").unwrap().to_f32().unwrap(), vec![0.0, 1.0]);
+
+        let rows = rt.device_stat_rows();
+        assert!(rows.iter().any(|r| r.device == Device::Gpu(1) && r.executions >= 2));
+        let entries = rt.model_entries();
+        assert_eq!(entries.len(), 1);
+        assert!(entries[0].executions >= 4);
+    }
+
+    #[test]
+    fn run_model_surfaces_request_errors_early() {
+        let rt = ModelRuntime::new(Executor::new().unwrap());
+        let store = Store::new();
+        let err = rt
+            .run_model(&store, "ghost", 0, &[], &[], Device::Cpu)
+            .unwrap_err();
+        assert!(matches!(err, Error::ModelNotFound(_)));
+        rt.put_model("m", "situ-native v1\naffine 1.0 0.0\n").unwrap();
+        let err = rt
+            .run_model(&store, "m", 0, &["missing".into()], &["o".into()], Device::Cpu)
+            .unwrap_err();
+        assert!(matches!(err, Error::KeyNotFound(_)));
+        let err = rt
+            .run_model(&store, "m", 0, &[], &[], Device::Gpu(9))
+            .unwrap_err();
+        assert!(err.to_string().contains("gpu slot 9 out of range"));
     }
 }

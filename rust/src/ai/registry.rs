@@ -1,0 +1,509 @@
+//! Versioned model registry with atomic hot-swap.
+//!
+//! `publish` creates an immutable `(key, version)` artifact and swaps the
+//! per-key "live" pointer to it.  Versions are per-key monotonic starting at
+//! 1; version 0 on the wire means "whatever is live".  In-flight executions
+//! hold an `Arc<ModelVersion>`, so a publish mid-run never tears an ongoing
+//! call: requests that resolved version N complete on N while new arrivals
+//! pick up N+1.  This is the SmartSim/RedisAI checkpoint-republish flow
+//! (`AI.MODELSET` over an existing key) made explicit.
+//!
+//! Two backends live behind one `ModelVersion`:
+//!
+//! * **PJRT** — HLO-text artifacts compiled through the
+//!   [`crate::runtime::Executor`], cached under `"key@vN"` so distinct
+//!   versions never collide in the executor cache.
+//! * **Native** — the `situ-native v1` textual format, interpreted in
+//!   process.  It exists so serving-path semantics (hot-swap, batching, the
+//!   hybrid solver loop) are testable without AOT artifacts on disk.  Two
+//!   ops: `affine <scale> <offset>` (elementwise `y = scale*x + offset`,
+//!   one output per input, stackable across requests) and
+//!   `poisson <nx> <ny> <nz> <tol> <max_iter>` (CG pressure solve on the
+//!   channel grid; inputs `[rhs]` or `[rhs, p0]` for a warm start).
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::proto::ModelEntry;
+use crate::runtime::Executor;
+use crate::sim::cfd::grid::Grid;
+use crate::sim::cfd::poisson;
+use crate::tensor::{DType, Tensor};
+
+/// Versions kept resolvable per key.  Older versions are pruned from the
+/// map (and unloaded from the executor cache) on publish; in-flight `Arc`
+/// holders keep a pruned version alive until their call completes.
+pub const KEPT_VERSIONS: usize = 4;
+
+/// Magic first line of the in-process interpreted model format.
+pub const NATIVE_MAGIC: &str = "situ-native v1";
+
+/// One op of the interpreted backend.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NativeOp {
+    /// Elementwise `y = scale * x + offset` on f32/f64 inputs; one output
+    /// per input, so a stacked execution is exact.
+    Affine { scale: f64, offset: f64 },
+    /// CG solve of `∇²p = rhs` on `Grid::channel(nx, ny, nz)` with a fixed
+    /// iteration budget.  Inputs `[rhs]` or `[rhs, p0]` (f64), output `[p]`.
+    Poisson { nx: usize, ny: usize, nz: usize, tol: f64, max_iter: usize },
+}
+
+/// A parsed `situ-native v1` model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NativeModel {
+    pub op: NativeOp,
+}
+
+impl NativeModel {
+    /// Does this text claim to be a native model (vs PJRT HLO text)?
+    pub fn is_native(text: &str) -> bool {
+        text.trim_start().starts_with(NATIVE_MAGIC)
+    }
+
+    pub fn parse(text: &str) -> Result<NativeModel> {
+        let mut lines = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        match lines.next() {
+            Some(NATIVE_MAGIC) => {}
+            other => {
+                return Err(Error::Parse(format!(
+                    "native model must start with '{NATIVE_MAGIC}', got {other:?}"
+                )))
+            }
+        }
+        let op_line = lines
+            .next()
+            .ok_or_else(|| Error::Parse("native model has no op line".into()))?;
+        if let Some(extra) = lines.next() {
+            return Err(Error::Parse(format!("trailing content in native model: '{extra}'")));
+        }
+        let toks: Vec<&str> = op_line.split_whitespace().collect();
+        let op = match toks.as_slice() {
+            ["affine", scale, offset] => NativeOp::Affine {
+                scale: parse_f64("scale", scale)?,
+                offset: parse_f64("offset", offset)?,
+            },
+            ["poisson", nx, ny, nz, tol, max_iter] => NativeOp::Poisson {
+                nx: parse_usize("nx", nx)?,
+                ny: parse_usize("ny", ny)?,
+                nz: parse_usize("nz", nz)?,
+                tol: parse_f64("tol", tol)?,
+                max_iter: parse_usize("max_iter", max_iter)?,
+            },
+            _ => return Err(Error::Parse(format!("unknown native op line '{op_line}'"))),
+        };
+        Ok(NativeModel { op })
+    }
+
+    /// Can concurrent requests be stacked into one execution and split
+    /// back exactly?  True when the op is elementwise with one output per
+    /// input tensor.
+    pub fn stackable(&self) -> bool {
+        matches!(self.op, NativeOp::Affine { .. })
+    }
+
+    /// Interpret the model: one call, N inputs in, M outputs out.
+    pub fn execute(&self, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        match self.op {
+            NativeOp::Affine { scale, offset } => {
+                if inputs.is_empty() {
+                    return Err(Error::Shape("affine wants at least one input".into()));
+                }
+                inputs
+                    .iter()
+                    .map(|t| match t.dtype {
+                        DType::F32 => {
+                            let v: Vec<f32> = t
+                                .to_f32()?
+                                .into_iter()
+                                .map(|x| (scale * x as f64 + offset) as f32)
+                                .collect();
+                            Tensor::from_f32(&t.shape, v)
+                        }
+                        DType::F64 => {
+                            let v: Vec<f64> =
+                                t.to_f64()?.into_iter().map(|x| scale * x + offset).collect();
+                            Tensor::from_f64(&t.shape, v)
+                        }
+                        other => {
+                            Err(Error::Shape(format!("affine wants f32/f64 input, got {other}")))
+                        }
+                    })
+                    .collect()
+            }
+            NativeOp::Poisson { nx, ny, nz, tol, max_iter } => {
+                let g = Grid::channel(nx, ny, nz);
+                let rhs_t = inputs
+                    .first()
+                    .ok_or_else(|| Error::Shape("poisson wants [rhs] or [rhs, p0]".into()))?;
+                if inputs.len() > 2 {
+                    return Err(Error::Shape(format!(
+                        "poisson wants 1 or 2 inputs, got {}",
+                        inputs.len()
+                    )));
+                }
+                let rhs = rhs_t.to_f64()?;
+                if rhs.len() != g.n() {
+                    return Err(Error::Shape(format!(
+                        "poisson rhs has {} cells, grid {}x{}x{} wants {}",
+                        rhs.len(),
+                        nx,
+                        ny,
+                        nz,
+                        g.n()
+                    )));
+                }
+                let mut p = match inputs.get(1) {
+                    Some(p0_t) => {
+                        let p0 = p0_t.to_f64()?;
+                        if p0.len() != g.n() {
+                            return Err(Error::Shape(format!(
+                                "poisson warm start has {} cells, wants {}",
+                                p0.len(),
+                                g.n()
+                            )));
+                        }
+                        p0
+                    }
+                    None => g.zeros(),
+                };
+                let _ = poisson::solve_cg(&g, &rhs, &mut p, tol, max_iter);
+                Ok(vec![Tensor::from_f64(&rhs_t.shape, p)?])
+            }
+        }
+    }
+}
+
+fn parse_f64(name: &str, s: &str) -> Result<f64> {
+    s.parse::<f64>()
+        .map_err(|_| Error::Parse(format!("native model: bad {name} '{s}'")))
+}
+
+fn parse_usize(name: &str, s: &str) -> Result<usize> {
+    s.parse::<usize>()
+        .map_err(|_| Error::Parse(format!("native model: bad {name} '{s}'")))
+}
+
+/// Where a version's computation actually runs.
+enum Backend {
+    /// Compiled through PJRT, cached in the executor under `exec_name`.
+    Pjrt { exec_name: String },
+    /// Interpreted in process.
+    Native(NativeModel),
+}
+
+/// One immutable published version of a model.
+pub struct ModelVersion {
+    pub key: String,
+    pub version: u64,
+    backend: Backend,
+    /// Backend executions of this version (a stacked batch counts once).
+    pub executions: AtomicU64,
+}
+
+impl ModelVersion {
+    pub fn stackable(&self) -> bool {
+        match &self.backend {
+            Backend::Pjrt { .. } => false,
+            Backend::Native(m) => m.stackable(),
+        }
+    }
+
+    /// Run one backend execution.
+    pub fn execute(&self, exec: &Executor, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        match &self.backend {
+            Backend::Pjrt { exec_name } => exec.execute(exec_name, inputs),
+            Backend::Native(m) => m.execute(inputs),
+        }
+    }
+}
+
+struct KeyState {
+    live: Arc<ModelVersion>,
+    versions: BTreeMap<u64, Arc<ModelVersion>>,
+    /// Times the live pointer moved off an existing version.
+    swaps: u64,
+    next_version: u64,
+    /// Executions accumulated by versions pruned from `versions`.
+    retired_executions: u64,
+}
+
+impl KeyState {
+    fn executions(&self) -> u64 {
+        self.retired_executions
+            + self
+                .versions
+                .values()
+                .map(|v| v.executions.load(Ordering::Relaxed))
+                .sum::<u64>()
+    }
+}
+
+/// The registry: per-key version chains plus the live pointer.
+pub struct Registry {
+    exec: Executor,
+    keys: Mutex<HashMap<String, KeyState>>,
+}
+
+impl Registry {
+    pub fn new(exec: Executor) -> Registry {
+        Registry { exec, keys: Mutex::new(HashMap::new()) }
+    }
+
+    /// Publish from model text (wire `put_model`).  Returns the version.
+    ///
+    /// The registry lock is held across compilation, which serializes
+    /// publishes per server — checkpoints are seconds apart, and it keeps
+    /// version allocation trivially race-free.
+    pub fn publish_text(&self, key: &str, text: &str) -> Result<u64> {
+        let mut keys = self.keys.lock().unwrap();
+        let next = keys.get(key).map(|s| s.next_version).unwrap_or(1);
+        let backend = if NativeModel::is_native(text) {
+            Backend::Native(NativeModel::parse(text)?)
+        } else {
+            let exec_name = format!("{key}@v{next}");
+            self.exec.load_hlo_text(&exec_name, text)?;
+            Backend::Pjrt { exec_name }
+        };
+        Ok(self.install(&mut keys, key, next, backend))
+    }
+
+    /// Publish from an artifact file (driver-side upload).
+    pub fn publish_file(&self, key: &str, path: &Path) -> Result<u64> {
+        if let Ok(text) = std::fs::read_to_string(path) {
+            if NativeModel::is_native(&text) {
+                return self.publish_text(key, &text);
+            }
+        }
+        let mut keys = self.keys.lock().unwrap();
+        let next = keys.get(key).map(|s| s.next_version).unwrap_or(1);
+        let exec_name = format!("{key}@v{next}");
+        self.exec.load_artifact(&exec_name, path)?;
+        Ok(self.install(&mut keys, key, next, Backend::Pjrt { exec_name }))
+    }
+
+    fn install(
+        &self,
+        keys: &mut HashMap<String, KeyState>,
+        key: &str,
+        version: u64,
+        backend: Backend,
+    ) -> u64 {
+        let mv = Arc::new(ModelVersion {
+            key: key.to_string(),
+            version,
+            backend,
+            executions: AtomicU64::new(0),
+        });
+        match keys.get_mut(key) {
+            Some(st) => {
+                st.versions.insert(version, mv.clone());
+                st.next_version = version + 1;
+                // Atomic hot-swap: replacing the Arc is the entire cutover.
+                st.live = mv;
+                st.swaps += 1;
+                while st.versions.len() > KEPT_VERSIONS {
+                    let (&oldest, _) = st.versions.iter().next().unwrap();
+                    if let Some(old) = st.versions.remove(&oldest) {
+                        st.retired_executions += old.executions.load(Ordering::Relaxed);
+                        if let Backend::Pjrt { exec_name } = &old.backend {
+                            let _ = self.exec.unload(exec_name);
+                        }
+                    }
+                }
+            }
+            None => {
+                let mut versions = BTreeMap::new();
+                versions.insert(version, mv.clone());
+                keys.insert(
+                    key.to_string(),
+                    KeyState {
+                        live: mv,
+                        versions,
+                        swaps: 0,
+                        next_version: version + 1,
+                        retired_executions: 0,
+                    },
+                );
+            }
+        }
+        version
+    }
+
+    /// Resolve `(key, version)` to an immutable version handle.
+    /// Version 0 means "live".
+    pub fn resolve(&self, key: &str, version: u64) -> Result<Arc<ModelVersion>> {
+        let keys = self.keys.lock().unwrap();
+        let st = keys
+            .get(key)
+            .ok_or_else(|| Error::ModelNotFound(key.to_string()))?;
+        if version == 0 {
+            return Ok(st.live.clone());
+        }
+        st.versions
+            .get(&version)
+            .cloned()
+            .ok_or_else(|| Error::ModelNotFound(format!("{key}@v{version}")))
+    }
+
+    pub fn has_model(&self, key: &str) -> bool {
+        self.keys.lock().unwrap().contains_key(key)
+    }
+
+    /// Distinct live keys — what `DbInfo.models` reports.
+    pub fn n_live(&self) -> u64 {
+        self.keys.lock().unwrap().len() as u64
+    }
+
+    /// Total live-pointer swaps across keys.
+    pub fn swaps_total(&self) -> u64 {
+        self.keys.lock().unwrap().values().map(|s| s.swaps).sum()
+    }
+
+    /// Per-key listing for the `ListModels` wire op, sorted by key.
+    pub fn entries(&self) -> Vec<ModelEntry> {
+        let keys = self.keys.lock().unwrap();
+        let mut out: Vec<ModelEntry> = keys
+            .iter()
+            .map(|(k, st)| ModelEntry {
+                key: k.clone(),
+                live_version: st.live.version,
+                n_versions: st.versions.len() as u64,
+                swaps: st.swaps,
+                executions: st.executions(),
+            })
+            .collect();
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn affine_text(scale: f64, offset: f64) -> String {
+        format!("{NATIVE_MAGIC}\naffine {scale} {offset}\n")
+    }
+
+    #[test]
+    fn native_parse_accepts_and_rejects() {
+        let m = NativeModel::parse("situ-native v1\n# comment\naffine 2.0 -0.5\n").unwrap();
+        assert_eq!(m.op, NativeOp::Affine { scale: 2.0, offset: -0.5 });
+        assert!(m.stackable());
+
+        let p = NativeModel::parse("situ-native v1\npoisson 8 8 8 1e-8 200\n").unwrap();
+        assert!(!p.stackable());
+
+        assert!(NativeModel::parse("HloModule foo").is_err());
+        assert!(NativeModel::parse("situ-native v1\n").is_err());
+        assert!(NativeModel::parse("situ-native v1\naffine 1.0\n").is_err());
+        assert!(NativeModel::parse("situ-native v1\naffine 1.0 2.0\naffine 3.0 4.0\n").is_err());
+        assert!(NativeModel::parse("situ-native v1\nwavelet 1 2 3\n").is_err());
+        assert!(NativeModel::is_native("  situ-native v1\naffine 1 0"));
+        assert!(!NativeModel::is_native("HloModule foo"));
+    }
+
+    #[test]
+    fn affine_executes_elementwise_both_dtypes() {
+        let m = NativeModel::parse(&affine_text(2.0, 1.0)).unwrap();
+        let a = Tensor::from_f32(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::from_f64(&[2], vec![-1.0, 0.5]).unwrap();
+        let out = m.execute(vec![a, b]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].to_f32().unwrap(), vec![3.0, 5.0, 7.0]);
+        assert_eq!(out[1].to_f64().unwrap(), vec![-1.0, 2.0]);
+        assert!(m.execute(vec![]).is_err());
+        let bad = Tensor::scalar_i32(1);
+        assert!(m.execute(vec![bad]).is_err());
+    }
+
+    #[test]
+    fn poisson_native_reduces_residual_and_warm_starts() {
+        let (nx, ny, nz) = (8, 6, 4);
+        let g = Grid::channel(nx, ny, nz);
+        let m = NativeModel::parse(&format!(
+            "{NATIVE_MAGIC}\npoisson {nx} {ny} {nz} 1e-10 500\n"
+        ))
+        .unwrap();
+        let mut rhs = vec![0.0; g.n()];
+        for (i, r) in rhs.iter_mut().enumerate() {
+            *r = ((i * 37) % 11) as f64 - 5.0;
+        }
+        poisson::project_zero_mean(&mut rhs);
+        let rhs_t = Tensor::from_f64(&[g.n()], rhs.clone()).unwrap();
+        let out = m.execute(vec![rhs_t.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        let p = out[0].to_f64().unwrap();
+        let mut lp = g.zeros();
+        poisson::apply_laplacian(&g, &p, &mut lp);
+        let rn: f64 = lp.iter().zip(&rhs).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        let bn: f64 = rhs.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!(rn <= 1e-6 * bn, "residual {rn} vs |b| {bn}");
+
+        // Warm start from the exact answer converges immediately.
+        let p_t = Tensor::from_f64(&[g.n()], p).unwrap();
+        let again = m.execute(vec![rhs_t, p_t]).unwrap();
+        assert_eq!(again.len(), 1);
+
+        // Shape guard: wrong cell count is a shape error.
+        let small = Tensor::from_f64(&[4], vec![0.0; 4]).unwrap();
+        assert!(m.execute(vec![small]).is_err());
+    }
+
+    #[test]
+    fn publish_resolves_monotonic_versions_and_swaps() {
+        let reg = Registry::new(Executor::new().unwrap());
+        assert!(reg.resolve("m", 0).is_err());
+        let v1 = reg.publish_text("m", &affine_text(1.0, 1.0)).unwrap();
+        let v2 = reg.publish_text("m", &affine_text(1.0, 2.0)).unwrap();
+        assert_eq!((v1, v2), (1, 2));
+        assert_eq!(reg.resolve("m", 0).unwrap().version, 2);
+        assert_eq!(reg.resolve("m", 1).unwrap().version, 1);
+        assert!(reg.resolve("m", 3).is_err());
+        assert_eq!(reg.n_live(), 1);
+        assert_eq!(reg.swaps_total(), 1);
+
+        let e = reg.entries();
+        assert_eq!(e.len(), 1);
+        assert_eq!(e[0].key, "m");
+        assert_eq!(e[0].live_version, 2);
+        assert_eq!(e[0].n_versions, 2);
+        assert_eq!(e[0].swaps, 1);
+
+        // A bad publish leaves the live version untouched.
+        assert!(reg.publish_text("m", "situ-native v1\nbogus\n").is_err());
+        assert_eq!(reg.resolve("m", 0).unwrap().version, 2);
+    }
+
+    #[test]
+    fn pruning_keeps_recent_versions_and_inflight_arcs() {
+        let reg = Registry::new(Executor::new().unwrap());
+        let held = {
+            reg.publish_text("m", &affine_text(1.0, 1.0)).unwrap();
+            reg.resolve("m", 1).unwrap()
+        };
+        held.executions.fetch_add(5, Ordering::Relaxed);
+        for k in 2..=(KEPT_VERSIONS as u64 + 2) {
+            reg.publish_text("m", &affine_text(1.0, k as f64)).unwrap();
+        }
+        // v1 pruned from the map, but the held Arc still executes.
+        assert!(reg.resolve("m", 1).is_err());
+        let exec = Executor::new().unwrap();
+        let out = held
+            .execute(&exec, vec![Tensor::from_f64(&[1], vec![0.0]).unwrap()])
+            .unwrap();
+        assert_eq!(out[0].to_f64().unwrap(), vec![1.0]);
+        // Retired executions survive in the per-key total.
+        let e = reg.entries();
+        assert_eq!(e[0].n_versions as usize, KEPT_VERSIONS);
+        assert!(e[0].executions >= 5, "retired count lost: {}", e[0].executions);
+    }
+}

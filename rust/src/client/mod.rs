@@ -198,10 +198,13 @@ impl Pipeline {
         self.push(Request::GetMeta { key: key.to_string() })
     }
 
+    /// Publish a model version (replies `Response::Version` — read it with
+    /// [`Response::expect_version`]).
     pub fn put_model(&mut self, key: &str, hlo_text: &str) -> &mut Pipeline {
         self.push(Request::PutModel { key: key.to_string(), hlo_text: hlo_text.to_string() })
     }
 
+    /// Run the *live* version of a model (version 0 on the wire).
     pub fn run_model(
         &mut self,
         key: &str,
@@ -209,8 +212,21 @@ impl Pipeline {
         out_keys: &[String],
         device: Device,
     ) -> &mut Pipeline {
+        self.run_model_version(key, 0, in_keys, out_keys, device)
+    }
+
+    /// Run a pinned model version (0 = live).
+    pub fn run_model_version(
+        &mut self,
+        key: &str,
+        version: u64,
+        in_keys: &[String],
+        out_keys: &[String],
+        device: Device,
+    ) -> &mut Pipeline {
         self.push(Request::RunModel {
             key: key.to_string(),
+            version,
             in_keys: in_keys.to_vec(),
             out_keys: out_keys.to_vec(),
             device,
@@ -311,24 +327,52 @@ pub trait DataStore {
     /// resident keys are served by [`DataStore::get_tensor`].
     fn cold_get(&mut self, key: &str) -> Result<Tensor>;
 
-    /// Upload a model artifact (HLO text) into the model registry.
-    fn put_model(&mut self, key: &str, hlo_text: &str) -> Result<()>;
+    /// Publish a model artifact (HLO or `situ-native` text) into the
+    /// versioned model registry.  Re-publishing an existing key hot-swaps
+    /// the live pointer; in-flight `run_model` calls on the old version
+    /// complete untouched.  Returns the published version (per-key
+    /// monotonic from 1).
+    fn put_model(&mut self, key: &str, hlo_text: &str) -> Result<u64>;
 
-    /// Upload a model from an artifact file.
-    fn put_model_from_file(&mut self, key: &str, path: &std::path::Path) -> Result<()> {
+    /// Publish a model from an artifact file.
+    fn put_model_from_file(&mut self, key: &str, path: &std::path::Path) -> Result<u64> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| Error::Parse(format!("read {}: {e}", path.display())))?;
         self.put_model(key, &text)
     }
 
-    /// RedisAI-style in-database inference over stored tensors.
+    /// RedisAI-style in-database inference over stored tensors, against the
+    /// *live* model version.
     fn run_model(
         &mut self,
         key: &str,
         in_keys: &[String],
         out_keys: &[String],
         device: Device,
+    ) -> Result<()> {
+        self.run_model_version(key, 0, in_keys, out_keys, device)
+    }
+
+    /// `run_model` against a pinned version (0 = live).  Concurrent calls
+    /// for the same `(key, version, device)` may coalesce into one stacked
+    /// server-side execution — per-request semantics are unchanged.
+    fn run_model_version(
+        &mut self,
+        key: &str,
+        version: u64,
+        in_keys: &[String],
+        out_keys: &[String],
+        device: Device,
     ) -> Result<()>;
+
+    /// Registry listing: every model key with its live version, version
+    /// count, swap count, and executions (merged across shards on a
+    /// cluster).
+    fn list_models(&mut self) -> Result<Vec<crate::proto::ModelEntry>>;
+
+    /// Per-device serving statistics (executions, eval and queue-wait
+    /// moments; merged across shards on a cluster).
+    fn model_stats(&mut self) -> Result<Vec<crate::proto::ModelDeviceStat>>;
 
     /// Database statistics (aggregated across shards on a cluster).
     fn info(&mut self) -> Result<DbInfo>;
@@ -610,28 +654,38 @@ impl DataStore for Client {
             .expect_tensor(key)
     }
 
-    fn put_model(&mut self, key: &str, hlo_text: &str) -> Result<()> {
+    fn put_model(&mut self, key: &str, hlo_text: &str) -> Result<u64> {
         self.call(&Request::PutModel {
             key: key.to_string(),
             hlo_text: hlo_text.to_string(),
         })?
-        .expect_ok()
+        .expect_version()
     }
 
-    fn run_model(
+    fn run_model_version(
         &mut self,
         key: &str,
+        version: u64,
         in_keys: &[String],
         out_keys: &[String],
         device: Device,
     ) -> Result<()> {
         self.call(&Request::RunModel {
             key: key.to_string(),
+            version,
             in_keys: in_keys.to_vec(),
             out_keys: out_keys.to_vec(),
             device,
         })?
         .expect_ok()
+    }
+
+    fn list_models(&mut self) -> Result<Vec<crate::proto::ModelEntry>> {
+        self.call(&Request::ListModels)?.expect_models()
+    }
+
+    fn model_stats(&mut self) -> Result<Vec<crate::proto::ModelDeviceStat>> {
+        self.call(&Request::ModelStats)?.expect_model_stats()
     }
 
     fn info(&mut self) -> Result<DbInfo> {
@@ -796,6 +850,24 @@ fn is_write_request(r: &Request) -> bool {
         r,
         Request::PutTensor { .. } | Request::PutMeta { .. } | Request::DelTensor { .. }
     )
+}
+
+/// Pool two `(count, mean, std)` summaries into the exact moments of the
+/// concatenated sample sets (weighted mean, pooled variance).  Used to
+/// merge per-device serving stats across shards.
+fn pool_moments(a: (u64, f64, f64), b: (u64, f64, f64)) -> (u64, f64, f64) {
+    let (na, ma, sa) = a;
+    let (nb, mb, sb) = b;
+    let n = na + nb;
+    if n == 0 {
+        return (0, 0.0, 0.0);
+    }
+    let (naf, nbf, nf) = (na as f64, nb as f64, n as f64);
+    let mean = (naf * ma + nbf * mb) / nf;
+    // E[x²] per side is var + mean²; recombine and subtract the new mean².
+    let ex2 = (naf * (sa * sa + ma * ma) + nbf * (sb * sb + mb * mb)) / nf;
+    let var = (ex2 - mean * mean).max(0.0);
+    (n, mean, var.sqrt())
 }
 
 /// Response quality for replica merging: an authoritative success beats an
@@ -1010,6 +1082,31 @@ impl ClusterClient {
             self.note_degraded(&errs);
         }
         Ok(())
+    }
+
+    /// Broadcast `op` to every shard and collect each reachable shard's
+    /// value.  Like [`ClusterClient::broadcast`], one success is enough:
+    /// unreachable shards become a degraded-op report instead of a failure.
+    fn broadcast_collect<T>(
+        &mut self,
+        mut op: impl FnMut(&mut Client) -> Result<T>,
+    ) -> Result<Vec<(usize, T)>> {
+        self.last_errors.clear();
+        let mut got: Vec<(usize, T)> = Vec::new();
+        let mut errs: Vec<(usize, Error)> = Vec::new();
+        for i in 0..self.shards.len() {
+            match self.on_shard(i, &mut op) {
+                Ok(v) => got.push((i, v)),
+                Err(e) => errs.push((i, e)),
+            }
+        }
+        if got.is_empty() {
+            return Err(errs.swap_remove(0).1);
+        }
+        if !errs.is_empty() {
+            self.note_degraded(&errs);
+        }
+        Ok(got)
     }
 
     /// Merge sorted key lists from every reachable shard.  Deduped, because
@@ -1258,11 +1355,16 @@ impl DataStore for ClusterClient {
     }
 
     /// Models are broadcast to every shard, so `run_model` can execute
-    /// wherever its inputs land.  Shards that are down miss the upload
-    /// (reported via [`ClusterClient::shard_errors`]); re-upload after
-    /// recovery, or route inference away from them.
-    fn put_model(&mut self, key: &str, hlo_text: &str) -> Result<()> {
-        self.broadcast(|c| c.put_model(key, hlo_text))
+    /// wherever its inputs land.  A publish succeeds as long as at least
+    /// one shard took it — shards that are down miss the upload (counted
+    /// in `degraded_ops` and reported via [`ClusterClient::shard_errors`]),
+    /// so one dead shard can't block a checkpoint publish; re-upload after
+    /// recovery, or route inference away from them.  Returns the highest
+    /// version any shard assigned (shards version independently, and a
+    /// shard that missed earlier publishes may lag).
+    fn put_model(&mut self, key: &str, hlo_text: &str) -> Result<u64> {
+        let got = self.broadcast_collect(|c| c.put_model(key, hlo_text))?;
+        Ok(got.into_iter().map(|(_, v)| v).max().unwrap_or(0))
     }
 
     /// Executes on the shard owning the first input key.  Inputs owned by
@@ -1270,9 +1372,10 @@ impl DataStore for ClusterClient {
     /// to their owning shards afterwards, so a later `get_tensor(out_key)`
     /// routes correctly.  Cross-shard tensor movement costs extra round
     /// trips — co-locate inference keys with `{hash tags}` to avoid it.
-    fn run_model(
+    fn run_model_version(
         &mut self,
         key: &str,
+        version: u64,
         in_keys: &[String],
         out_keys: &[String],
         device: Device,
@@ -1291,7 +1394,9 @@ impl DataStore for ClusterClient {
                 staged.push(k);
             }
         }
-        self.on_shard(target, |c| c.run_model(key, in_keys, out_keys, device))?;
+        self.on_shard(target, |c| {
+            c.run_model_version(key, version, in_keys, out_keys, device)
+        })?;
         for k in out_keys {
             let owner = self.slots.shard_for_key(k);
             if owner != target {
@@ -1312,6 +1417,69 @@ impl DataStore for ClusterClient {
             }
         }
         Ok(())
+    }
+
+    /// Merged per-key listing: uploads broadcast, so the same key exists on
+    /// every shard with independently assigned versions.  Per key, the
+    /// live version and version count are the maxima across shards (the
+    /// most advanced copy), while swaps and executions sum (every shard
+    /// swapped and executed on its own).
+    fn list_models(&mut self) -> Result<Vec<crate::proto::ModelEntry>> {
+        let got = self.broadcast_collect(|c| c.list_models())?;
+        let mut merged: Vec<crate::proto::ModelEntry> = Vec::new();
+        for (_, entries) in got {
+            for e in entries {
+                match merged.iter_mut().find(|m| m.key == e.key) {
+                    Some(m) => {
+                        m.live_version = m.live_version.max(e.live_version);
+                        m.n_versions = m.n_versions.max(e.n_versions);
+                        m.swaps += e.swaps;
+                        m.executions += e.executions;
+                    }
+                    None => merged.push(e),
+                }
+            }
+        }
+        merged.sort_by(|a, b| a.key.cmp(&b.key));
+        Ok(merged)
+    }
+
+    /// Merged per-device stats: executions and sample counts sum, and the
+    /// eval/queue moments pool exactly (weighted mean, pooled variance) —
+    /// the merged row is what one server would have reported had it run
+    /// every shard's executions itself.
+    fn model_stats(&mut self) -> Result<Vec<crate::proto::ModelDeviceStat>> {
+        let got = self.broadcast_collect(|c| c.model_stats())?;
+        let mut merged: Vec<crate::proto::ModelDeviceStat> = Vec::new();
+        for (_, rows) in got {
+            for r in rows {
+                match merged.iter_mut().find(|m| m.device == r.device) {
+                    Some(m) => {
+                        m.executions += r.executions;
+                        let (c, mean, std) = pool_moments(
+                            (m.eval_count, m.eval_mean_s, m.eval_std_s),
+                            (r.eval_count, r.eval_mean_s, r.eval_std_s),
+                        );
+                        m.eval_count = c;
+                        m.eval_mean_s = mean;
+                        m.eval_std_s = std;
+                        let (c, mean, std) = pool_moments(
+                            (m.queue_count, m.queue_mean_s, m.queue_std_s),
+                            (r.queue_count, r.queue_mean_s, r.queue_std_s),
+                        );
+                        m.queue_count = c;
+                        m.queue_mean_s = mean;
+                        m.queue_std_s = std;
+                    }
+                    None => merged.push(r),
+                }
+            }
+        }
+        merged.sort_by_key(|m| match m.device {
+            Device::Cpu => u16::MAX,
+            Device::Gpu(i) => i as u16,
+        });
+        Ok(merged)
     }
 
     /// Sums keys/bytes/ops and the eviction/high-water/backpressure
@@ -1362,6 +1530,9 @@ impl DataStore for ClusterClient {
             agg.spill_segments += i.spill_segments;
             agg.cold_hits += i.cold_hits;
             agg.spill_lost_keys += i.spill_lost_keys;
+            agg.model_swaps += i.model_swaps;
+            agg.batches += i.batches;
+            agg.batched_requests += i.batched_requests;
             if agg.engine.is_empty() {
                 agg.engine = i.engine;
             }

@@ -533,18 +533,26 @@ pub fn execute(
         Request::PutModel { key, hlo_text } => match models {
             None => Response::Error("model runtime disabled on this server".into()),
             Some(m) => match m.put_model(&key, &hlo_text) {
-                Ok(()) => Response::Ok,
+                Ok(version) => Response::Version(version),
                 Err(e) => Response::Error(e.to_string()),
             },
         },
-        Request::RunModel { key, in_keys, out_keys, device } => match models {
+        Request::RunModel { key, version, in_keys, out_keys, device } => match models {
             None => Response::Error("model runtime disabled on this server".into()),
-            Some(m) => match m.run_model(store, &key, &in_keys, &out_keys, device) {
+            Some(m) => match m.run_model(store, &key, version, &in_keys, &out_keys, device) {
                 Ok(()) => Response::Ok,
                 Err(Error::KeyNotFound(k)) => Response::Error(format!("input key not found: {k}")),
                 Err(Error::ModelNotFound(k)) => Response::Error(format!("model not found: {k}")),
                 Err(e) => Response::Error(e.to_string()),
             },
+        },
+        Request::ListModels => match models {
+            None => Response::Models(Vec::new()),
+            Some(m) => Response::Models(m.model_entries()),
+        },
+        Request::ModelStats => match models {
+            None => Response::ModelStats(Vec::new()),
+            Some(m) => Response::ModelStats(m.device_stat_rows()),
         },
         Request::DelKeys { keys } => Response::Batch(
             keys.iter()
@@ -615,6 +623,9 @@ pub fn execute(
                 read_failovers: 0,
                 shard_reconnects: 0,
                 degraded_ops: 0,
+                model_swaps: models.map(|m| m.swaps()).unwrap_or(0),
+                batches: models.map(|m| m.batch_counters().0).unwrap_or(0),
+                batched_requests: models.map(|m| m.batch_counters().1).unwrap_or(0),
                 engine: engine.name().to_string(),
                 fields,
             })

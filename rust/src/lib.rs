@@ -109,6 +109,23 @@
 //! `tests/chaos_cluster.rs` proves runs complete with exact accounting
 //! while shards die mid-flight.  Failure semantics are documented in
 //! `docs/failures.md`.
+//!
+//! ## Versioned model serving
+//!
+//! In-database inference is a first-class workload: every `put_model`
+//! publishes an immutable `(key, version)` artifact into [`ai::Registry`]
+//! and atomically swaps the live pointer — in-flight requests finish on
+//! the version they resolved, pinned requests (`run_model_version`) keep
+//! working across swaps, and a trainer republishing checkpoints
+//! (`--checkpoint-key`) hot-swaps serving clients mid-run with zero failed
+//! calls.  Concurrent `run_model` calls for the same (key, version,
+//! device) coalesce through [`ai::Batcher`] into one stacked backend
+//! execution (window armed only on bursts, per-entry errors, exact
+//! de-stacking).  The serving loop closes in [`sim::cfd::HybridSolver`]:
+//! the pressure Poisson solve runs on the live surrogate, validated per
+//! step by a residual check, with the numeric solver as a counted
+//! warm-started fallback.  Registry/batching counters travel in `INFO`;
+//! semantics are documented in `docs/serving.md`.
 
 pub mod ai;
 pub mod client;

@@ -18,7 +18,9 @@ use situ::cluster::scaling;
 use situ::config::RunConfig;
 use situ::db::{DbServer, Engine, RetentionConfig, ServerConfig};
 use situ::error::{Error, Result};
-use situ::orchestrator::driver::{run_insitu_training, InSituTrainingConfig};
+use situ::orchestrator::driver::{
+    run_hybrid_serving, run_insitu_training, HybridServingConfig, InSituTrainingConfig,
+};
 use situ::runtime::Executor;
 use situ::sim::reproducer::{self, ReproducerConfig};
 use situ::telemetry::Table;
@@ -50,6 +52,7 @@ fn run(args: &Args) -> Result<()> {
         Some("info") => cmd_info(args),
         Some("calibrate") => cmd_calibrate(args),
         Some("train") => cmd_train(args),
+        Some("hybrid") => cmd_hybrid(args),
         Some("bench-transfer") => cmd_bench_transfer(args),
         Some("bench-inference") => cmd_bench_inference(args),
         Some("help") | None => {
@@ -84,7 +87,15 @@ USAGE: situ <command> [flags]
                    [--window W --overwrite --retention-window W --db-max-bytes B
                     --db-ttl-ms T --busy-retries N --busy-backoff-ms MS
                     --governor-max-stride K --spill-dir DIR --spill-max-bytes B]
-                   bounded-memory + backpressure + cold-tier knobs
+                   [--checkpoint-key KEY --checkpoint-every N]
+                   bounded-memory + backpressure + cold-tier knobs; the
+                   checkpoint flags publish trainer checkpoints into the
+                   model registry as versioned, hot-swapped artifacts
+  hybrid           [--steps N --accept-tol T --publish-every K
+                    --model-key KEY --grid nx,ny,nz]
+                   CFD run whose pressure solve is served by the live
+                   surrogate model, validated per step with numeric
+                   fallback; checkpoints improve mid-run
   bench-transfer   --nodes-list 1,4,16 --deployment colocated|clustered ...
   bench-inference  --nodes-list 1,4,16 --batch 4 ...
 "
@@ -160,7 +171,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_info(args: &Args) -> Result<()> {
     // `--addrs a,b,c` aggregates a whole cluster through `ClusterClient`
     // (partial results if some shards are down); `--addr` asks one server.
-    let i = if let Some(list) = args.str_opt("addrs") {
+    let (i, model_entries, model_stats) = if let Some(list) = args.str_opt("addrs") {
         let addrs = list
             .split(',')
             .map(|s| s.trim().parse::<SocketAddr>())
@@ -175,13 +186,19 @@ fn cmd_info(args: &Args) -> Result<()> {
         for e in c.shard_errors() {
             eprintln!("warning: shard {} ({}) unreachable: {}", e.shard, e.addr, e.error);
         }
-        i
+        let entries = c.list_models().unwrap_or_default();
+        let stats = c.model_stats().unwrap_or_default();
+        (i, entries, stats)
     } else {
         let addr: SocketAddr = args
             .str_or("addr", "127.0.0.1:7700")
             .parse()
             .map_err(|_| Error::Invalid("bad --addr".into()))?;
-        Client::connect(addr)?.info()?
+        let mut c = Client::connect(addr)?;
+        let i = c.info()?;
+        let entries = c.list_models().unwrap_or_default();
+        let stats = c.model_stats().unwrap_or_default();
+        (i, entries, stats)
     };
     println!(
         "engine={} keys={} bytes={} ops={} models={}",
@@ -215,6 +232,15 @@ fn cmd_info(args: &Args) -> Result<()> {
     );
     if i.replicated_writes + i.read_failovers + i.shard_reconnects + i.degraded_ops > 0 {
         situ::telemetry::failover_table(&i).print();
+    }
+    if i.models + i.model_swaps + i.batches + i.batched_requests > 0 {
+        situ::telemetry::serving_table(&i).print();
+    }
+    if !model_entries.is_empty() {
+        situ::telemetry::models_table(&model_entries).print();
+    }
+    if !model_stats.is_empty() {
+        situ::telemetry::model_stats_table(&model_stats).print();
     }
     if !i.fields.is_empty() {
         situ::telemetry::field_pressure_table(&i).print();
@@ -309,6 +335,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(dir) = args.str_opt("artifacts") {
         cfg.artifacts_dir = dir.into();
     }
+    cfg.checkpoint_key = args.str_opt("checkpoint-key");
+    cfg.checkpoint_every = args.usize_or("checkpoint-every", cfg.checkpoint_every)?;
     println!(
         "== in situ training: {} epochs, {} sim ranks, {} ml ranks, {} solver steps ==",
         cfg.epochs, cfg.sim_ranks, cfg.ml_ranks, cfg.solver_steps
@@ -363,6 +391,58 @@ fn cmd_train(args: &Args) -> Result<()> {
     if !report.db.fields.is_empty() {
         situ::telemetry::field_pressure_table(&report.db).print();
     }
+    if report.checkpoints_published > 0 {
+        println!("trainer checkpoints published: {}", report.checkpoints_published);
+        situ::telemetry::serving_table(&report.db).print();
+    }
+    Ok(())
+}
+
+fn cmd_hybrid(args: &Args) -> Result<()> {
+    let mut cfg = HybridServingConfig::default();
+    cfg.steps = args.usize_or("steps", cfg.steps as usize)? as u64;
+    cfg.accept_tol = args.f64_or("accept-tol", cfg.accept_tol)?;
+    cfg.publish_every = args.usize_or("publish-every", cfg.publish_every as usize)? as u64;
+    if let Some(k) = args.str_opt("model-key") {
+        cfg.model_key = k;
+    }
+    let grid = args.usize_list_or("grid", &[cfg.grid.0, cfg.grid.1, cfg.grid.2])?;
+    if grid.len() != 3 {
+        return Err(Error::Invalid("--grid wants nx,ny,nz".into()));
+    }
+    cfg.grid = (grid[0], grid[1], grid[2]);
+    println!(
+        "== hybrid serving: {} steps on {}x{}x{}, checkpoint every {} steps ==",
+        cfg.steps, cfg.grid.0, cfg.grid.1, cfg.grid.2, cfg.publish_every
+    );
+    let report = run_hybrid_serving(&cfg)?;
+    let s = &report.stats;
+    situ::telemetry::counter_table(
+        "hybrid pressure solve",
+        &[
+            ("solver steps", s.steps),
+            ("surrogate accepted", s.accepted),
+            ("numeric fallbacks", s.fallbacks),
+            ("inference errors", s.surrogate_errors),
+            ("checkpoints published", report.checkpoints_published),
+        ],
+    )
+    .print();
+    if s.residuals.count() > 0 {
+        println!(
+            "surrogate residual: mean {:.3e}, worst {:.3e}; acceptance {:.0}%",
+            s.residuals.mean(),
+            s.residuals.max(),
+            100.0 * s.acceptance_rate()
+        );
+    }
+    situ::telemetry::models_table(&report.models).print();
+    situ::telemetry::model_stats_table(&report.device_stats).print();
+    situ::telemetry::serving_table(&report.db).print();
+    println!(
+        "flow quality: mean |div| {:.3e}, kinetic energy {:.4}",
+        report.mean_abs_divergence, report.kinetic_energy
+    );
     Ok(())
 }
 

@@ -45,6 +45,16 @@ pub struct TrainerConfig {
     /// keys.  The store then holds exactly one generation per field, so
     /// `window` is moot and ignored.
     pub overwrite: bool,
+    /// Publish the encoder artifact into the database's model registry
+    /// under this key as training progresses (`None` = don't).  Each
+    /// publish allocates the next immutable version and hot-swaps the live
+    /// pointer, so servers running inference against the key pick up the
+    /// newer checkpoint on their next call — the serving half of the
+    /// in-situ loop.
+    pub checkpoint_key: Option<String>,
+    /// Publish after every `checkpoint_every` epochs (0 = only once, after
+    /// the final epoch).  Ignored without `checkpoint_key`.
+    pub checkpoint_every: usize,
 }
 
 impl Default for TrainerConfig {
@@ -58,6 +68,8 @@ impl Default for TrainerConfig {
             poll: PollConfig::default(),
             window: 1,
             overwrite: false,
+            checkpoint_key: None,
+            checkpoint_every: 0,
         }
     }
 }
@@ -79,8 +91,11 @@ pub struct Trainer {
     pub state: ParamState,
     exec: Executor,
     loaders: Vec<DataLoader<Client>>,
+    artifacts_dir: std::path::PathBuf,
     pub times: Arc<ComponentTimes>,
     pub history: Vec<EpochLog>,
+    /// Model versions published under `checkpoint_key` so far.
+    pub checkpoints_published: u64,
 }
 
 impl Trainer {
@@ -101,7 +116,34 @@ impl Trainer {
             let ranks = dataloader::partition(cfg.sim_ranks, cfg.ml_ranks, ml);
             loaders.push(DataLoader::new(client, ranks, &cfg.field, 1000 + ml as u64));
         }
-        Ok(Trainer { cfg, manifest, state, exec, loaders, times, history: Vec::new() })
+        Ok(Trainer {
+            cfg,
+            manifest,
+            state,
+            exec,
+            loaders,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            times,
+            history: Vec::new(),
+            checkpoints_published: 0,
+        })
+    }
+
+    /// Publish the current encoder as a serving checkpoint (no-op unless
+    /// `checkpoint_key` is configured).  The stub PJRT backend cannot
+    /// re-serialize updated weights, so every publish ships the artifact
+    /// file — what matters to the serving side is real either way: a new
+    /// immutable version, a live-pointer swap, and in-flight inference on
+    /// the prior version completing untouched.
+    pub fn publish_checkpoint(&mut self) -> Result<Option<u64>> {
+        let Some(key) = self.cfg.checkpoint_key.clone() else { return Ok(None) };
+        let sw = Stopwatch::start();
+        let art = self.manifest.artifact("encoder")?;
+        let path = self.artifacts_dir.join(&art.file);
+        let version = self.loaders[0].client.put_model_from_file(&key, &path)?;
+        self.checkpoints_published += 1;
+        self.times.record("checkpoint_publish", sw.stop());
+        Ok(Some(version))
     }
 
     /// Latest snapshot step the producer has announced (via metadata key
@@ -219,6 +261,14 @@ impl Trainer {
         for e in 0..self.cfg.epochs {
             let step = self.wait_latest_step()?;
             self.epoch(e, step)?;
+            if self.cfg.checkpoint_every > 0 && (e + 1) % self.cfg.checkpoint_every == 0 {
+                self.publish_checkpoint()?;
+            }
+        }
+        // With no periodic cadence (or a cadence the epoch count never
+        // hit), still ship the final model.
+        if self.cfg.checkpoint_key.is_some() && self.checkpoints_published == 0 {
+            self.publish_checkpoint()?;
         }
         self.times.record("total_training", sw.stop());
         Ok(())

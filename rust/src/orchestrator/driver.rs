@@ -14,9 +14,12 @@ use crate::db::{DbServer, ServerConfig};
 use crate::error::{Error, Result};
 use crate::ml::{Trainer, TrainerConfig};
 use crate::orchestrator::deployment::DeploymentPlan;
-use crate::proto::DbInfo;
+use crate::proto::{DbInfo, Device, ModelDeviceStat, ModelEntry};
 use crate::runtime::Executor;
-use crate::sim::cfd::{run_producer, CfdProducerConfig};
+use crate::sim::cfd::{
+    hybrid, run_producer, CfdProducerConfig, ChannelFlow, Grid, HybridConfig, HybridSolver,
+    HybridStats,
+};
 use crate::telemetry::{ComponentTimes, Table};
 
 /// A launched deployment: the database instances and their addresses.
@@ -125,6 +128,12 @@ pub struct InSituTrainingConfig {
     /// Producer backpressure handling: `Busy` retry policy plus the
     /// adaptive snapshot-skip stride ceiling.
     pub governor: GovernorConfig,
+    /// Publish trainer checkpoints into the database's model registry
+    /// under this key (`None` = training only, no serving).  Implies the
+    /// deployment launches with the model runtime enabled.
+    pub checkpoint_key: Option<String>,
+    /// Trainer checkpoint cadence in epochs (0 = once, after training).
+    pub checkpoint_every: usize,
 }
 
 impl Default for InSituTrainingConfig {
@@ -147,6 +156,8 @@ impl Default for InSituTrainingConfig {
             spill_dir: None,
             spill_max_bytes: 0,
             governor: GovernorConfig::default(),
+            checkpoint_key: None,
+            checkpoint_every: 0,
         }
     }
 }
@@ -169,6 +180,8 @@ pub struct InSituTrainingReport {
     pub snapshots_published: u64,
     /// Window generations the trainer requested but found already retired.
     pub trainer_skipped_generations: u64,
+    /// Model versions the trainer published into the registry.
+    pub checkpoints_published: u64,
 }
 
 /// Run the full §4 workflow: co-located DB + CFD producer + in-situ trainer.
@@ -183,7 +196,7 @@ pub fn run_insitu_training(cfg: &InSituTrainingConfig) -> Result<InSituTrainingR
     run_cfg.db_ttl_ms = cfg.db_ttl_ms;
     run_cfg.spill_dir = cfg.spill_dir.as_ref().map(|p| p.display().to_string());
     run_cfg.spill_max_bytes = cfg.spill_max_bytes;
-    let mut driver = Driver::launch(&run_cfg, false)?;
+    let mut driver = Driver::launch(&run_cfg, cfg.checkpoint_key.is_some())?;
     let addr = driver.primary_addr();
 
     // --- producer: the CFD solver thread (see sim::cfd::producer) --------
@@ -220,6 +233,8 @@ pub fn run_insitu_training(cfg: &InSituTrainingConfig) -> Result<InSituTrainingR
         poll: PollConfig::with_max_wait(Duration::from_secs(300)),
         window: cfg.window,
         overwrite: cfg.overwrite,
+        checkpoint_key: cfg.checkpoint_key.clone(),
+        checkpoint_every: cfg.checkpoint_every,
     };
     let exec = Executor::new()?;
     let mut trainer = Trainer::new(t_cfg, &cfg.artifacts_dir, exec)?;
@@ -258,6 +273,116 @@ pub fn run_insitu_training(cfg: &InSituTrainingConfig) -> Result<InSituTrainingR
         governor: outcome.governor,
         snapshots_published: outcome.published,
         trainer_skipped_generations: trainer.skipped_generations(),
+        checkpoints_published: trainer.checkpoints_published,
+    };
+    driver.shutdown();
+    Ok(report)
+}
+
+/// Configuration of the hybrid serving run: a CFD integration whose
+/// pressure Poisson solve is served by the database's live surrogate, with
+/// the publisher shipping improved checkpoints mid-run.
+#[derive(Debug, Clone)]
+pub struct HybridServingConfig {
+    pub grid: (usize, usize, usize),
+    pub nu: f64,
+    pub seed: u64,
+    /// Solver steps to integrate.
+    pub steps: u64,
+    /// Registry key the surrogate is served under.
+    pub model_key: String,
+    /// Residual acceptance threshold for predictions.
+    pub accept_tol: f64,
+    /// The surrogate "training curve": iteration budgets of successive
+    /// checkpoints.  Checkpoint `k` (0-based) is published just before
+    /// solver step `(k + 1) * publish_every`, so the run starts with *no*
+    /// model (exercising the fallback) and ends on the best one.
+    pub checkpoint_iters: Vec<usize>,
+    /// Steps between checkpoint publishes.
+    pub publish_every: u64,
+    /// Device the inference calls are pinned to.
+    pub device: Device,
+}
+
+impl Default for HybridServingConfig {
+    fn default() -> Self {
+        HybridServingConfig {
+            grid: (12, 10, 8),
+            nu: 2e-3,
+            seed: 0,
+            steps: 9,
+            model_key: "pressure_surrogate".into(),
+            accept_tol: 1e-4,
+            checkpoint_iters: vec![3, 2000],
+            publish_every: 3,
+            device: Device::Gpu(0),
+        }
+    }
+}
+
+/// Everything the hybrid serving run reports.
+pub struct HybridServingReport {
+    /// Accept/fallback accounting plus the residual curve.
+    pub stats: HybridStats,
+    /// Checkpoints the publisher shipped mid-run.
+    pub checkpoints_published: u64,
+    /// Registry contents at the end of the run (`ListModels`).
+    pub models: Vec<ModelEntry>,
+    /// Per-device execution/queue-wait statistics (`ModelStats`).
+    pub device_stats: Vec<ModelDeviceStat>,
+    /// Final database counters (model swaps, batches, ...).
+    pub db: DbInfo,
+    /// Post-run flow quality: the projection must stay near-solenoidal
+    /// regardless of which path served each step.
+    pub mean_abs_divergence: f64,
+    pub kinetic_energy: f64,
+}
+
+/// Run the hybrid solver scenario end to end against a freshly launched
+/// co-located database with the model runtime enabled.
+pub fn run_hybrid_serving(cfg: &HybridServingConfig) -> Result<HybridServingReport> {
+    let mut run_cfg = RunConfig::default();
+    run_cfg.nodes = 1;
+    let mut driver = Driver::launch(&run_cfg, true)?;
+    let addr = driver.primary_addr();
+
+    let grid = Grid::channel(cfg.grid.0, cfg.grid.1, cfg.grid.2);
+    let mut flow = ChannelFlow::new(grid.clone(), cfg.nu, cfg.seed, 0.08);
+    let h_cfg = HybridConfig {
+        model_key: cfg.model_key.clone(),
+        rank: 0,
+        accept_tol: cfg.accept_tol,
+        cg_tol: flow.cg_tol,
+        cg_max_iter: flow.cg_max_iter,
+        device: cfg.device,
+    };
+    let mut publisher = Client::connect(addr)?;
+    let mut solver = HybridSolver::new(Client::connect(addr)?, h_cfg);
+
+    let mut checkpoints_published = 0u64;
+    let mut next = 0usize;
+    for s in 0..cfg.steps {
+        if s > 0
+            && cfg.publish_every > 0
+            && s % cfg.publish_every == 0
+            && next < cfg.checkpoint_iters.len()
+        {
+            let text = hybrid::poisson_model_text(&grid, 1e-8, cfg.checkpoint_iters[next]);
+            publisher.put_model(&cfg.model_key, &text)?;
+            next += 1;
+            checkpoints_published += 1;
+        }
+        solver.step(&mut flow);
+    }
+
+    let report = HybridServingReport {
+        stats: solver.stats.clone(),
+        checkpoints_published,
+        models: publisher.list_models()?,
+        device_stats: publisher.model_stats()?,
+        db: publisher.info()?,
+        mean_abs_divergence: flow.mean_abs_divergence(),
+        kinetic_energy: flow.kinetic_energy(),
     };
     driver.shutdown();
     Ok(report)

@@ -6,4 +6,6 @@ pub mod deployment;
 pub mod driver;
 
 pub use deployment::DeploymentPlan;
-pub use driver::{Driver, InSituTrainingConfig, InSituTrainingReport};
+pub use driver::{
+    Driver, HybridServingConfig, HybridServingReport, InSituTrainingConfig, InSituTrainingReport,
+};

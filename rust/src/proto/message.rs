@@ -44,6 +44,34 @@ pub enum Device {
 /// Hard cap on the number of entries in one batch / multi-key command.
 pub const MAX_BATCH: usize = 4096;
 
+/// One model's registry row reported by `ListModels`: the key, which
+/// version is live, how many immutable versions are retained, how many
+/// times the live pointer was swapped, and lifetime executions across all
+/// versions.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ModelEntry {
+    pub key: String,
+    pub live_version: u64,
+    pub n_versions: u64,
+    pub swaps: u64,
+    pub executions: u64,
+}
+
+/// One device's execution statistics reported by `ModelStats` (the
+/// registry's per-device accumulators: executions, eval wall-time and
+/// slot queue-wait distributions).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDeviceStat {
+    pub device: Device,
+    pub executions: u64,
+    pub eval_count: u64,
+    pub eval_mean_s: f64,
+    pub eval_std_s: f64,
+    pub queue_count: u64,
+    pub queue_mean_s: f64,
+    pub queue_std_s: f64,
+}
+
 /// Per-field memory-pressure snapshot reported inside [`DbInfo`] while a
 /// retention policy is active: how much of the byte budget each field
 /// holds, how many generations are resident, and how hard eviction has
@@ -114,6 +142,13 @@ pub struct DbInfo {
     pub read_failovers: u64,
     pub shard_reconnects: u64,
     pub degraded_ops: u64,
+    /// Serving counters (zero when the model runtime is disabled): live-
+    /// pointer swaps in the model registry (a republish of an existing
+    /// key), micro-batched executions that coalesced more than one
+    /// request, and the total requests served inside those batches.
+    pub model_swaps: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
     pub engine: String,
     /// Per-field pressure while governance is active (empty otherwise;
     /// merged by field name on a cluster aggregate).
@@ -130,10 +165,22 @@ pub enum Request {
     PutMeta { key: String, value: String },
     GetMeta { key: String },
     ListKeys { prefix: String },
-    /// Upload an AOT artifact (HLO text) into the model registry.
+    /// Upload a model artifact (HLO text or `situ-native` text) into the
+    /// model registry as a new immutable version of `key`.  Replies
+    /// [`Response::Version`] with the version number assigned, and
+    /// atomically swaps the key's live pointer to it.
     PutModel { key: String, hlo_text: String },
     /// RedisAI-style in-database inference over stored tensors.
-    RunModel { key: String, in_keys: Vec<String>, out_keys: Vec<String>, device: Device },
+    /// `version` pins one immutable registry version; 0 means "whatever is
+    /// live when the call is admitted" (in-flight calls keep their version
+    /// across a concurrent hot-swap).
+    RunModel {
+        key: String,
+        version: u64,
+        in_keys: Vec<String>,
+        out_keys: Vec<String>,
+        device: Device,
+    },
     Info,
     FlushAll,
     /// A pipeline of commands answered by one [`Response::Batch`] frame.
@@ -165,6 +212,13 @@ pub enum Request {
     /// dropped by the cold byte cap).  Strictly the cold tier — resident
     /// keys are served by `GetTensor`.
     ColdGet { key: String },
+    /// List the model registry: every key with its live version, retained
+    /// version count, swap count, and executions.  Replies
+    /// [`Response::Models`].
+    ListModels,
+    /// Per-device execution statistics of the model runtime (the registry's
+    /// `DeviceStats` accumulators).  Replies [`Response::ModelStats`].
+    ModelStats,
 }
 
 /// Database-to-client replies.
@@ -181,6 +235,13 @@ pub enum Response {
     /// Per-entry results of a `Batch` or `MGetTensors` request, in request
     /// order.  May not contain another `Batch`.
     Batch(Vec<Response>),
+    /// The model registry listing (reply to `ListModels`), sorted by key.
+    Models(Vec<ModelEntry>),
+    /// Per-device runtime statistics (reply to `ModelStats`), CPU first
+    /// then GPU ordinals in order.
+    ModelStats(Vec<ModelDeviceStat>),
+    /// Version number assigned by a `PutModel` publish.
+    Version(u64),
 }
 
 // --- encoding helpers -------------------------------------------------------
@@ -201,6 +262,22 @@ fn put_str_list(buf: &mut Vec<u8>, items: &[String]) {
 /// Wire size of a count-prefixed string list.
 fn str_list_wire_size(items: &[String]) -> usize {
     4 + items.iter().map(|s| str_wire_size(s)).sum::<usize>()
+}
+
+/// Device placement as one wire byte (0xff = CPU, else the GPU ordinal).
+fn put_device(buf: &mut Vec<u8>, d: Device) {
+    match d {
+        Device::Cpu => buf.push(0xff),
+        Device::Gpu(i) => buf.push(i),
+    }
+}
+
+fn device_from_byte(b: u8) -> Result<Device> {
+    match b {
+        0xff => Ok(Device::Cpu),
+        i if i < 16 => Ok(Device::Gpu(i)),
+        i => Err(Error::Protocol(format!("bad device {i}"))),
+    }
 }
 
 /// Everything of a wire tensor except the payload bytes.
@@ -272,6 +349,11 @@ impl<'a> Cur<'a> {
             .ok_or_else(|| Error::Protocol("truncated u64".into()))?;
         self.i += 8;
         Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    /// f64 carried as its IEEE-754 bit pattern in a little-endian u64.
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
     }
 
     fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
@@ -407,6 +489,8 @@ mod req_op {
     pub const RETENTION: u8 = 16;
     pub const COLD_LIST: u8 = 17;
     pub const COLD_GET: u8 = 18;
+    pub const LIST_MODELS: u8 = 19;
+    pub const MODEL_STATS: u8 = 20;
 }
 
 impl Request {
@@ -447,15 +531,13 @@ impl Request {
                 put_str(buf, key);
                 put_str(buf, hlo_text);
             }
-            Request::RunModel { key, in_keys, out_keys, device } => {
+            Request::RunModel { key, version, in_keys, out_keys, device } => {
                 buf.push(req_op::RUN_MODEL);
                 put_str(buf, key);
+                buf.extend_from_slice(&version.to_le_bytes());
                 put_str_list(buf, in_keys);
                 put_str_list(buf, out_keys);
-                match device {
-                    Device::Cpu => buf.push(0xff),
-                    Device::Gpu(i) => buf.push(*i),
-                }
+                put_device(buf, *device);
             }
             Request::Info => buf.push(req_op::INFO),
             Request::FlushAll => buf.push(req_op::FLUSH_ALL),
@@ -494,6 +576,8 @@ impl Request {
                 buf.push(req_op::COLD_GET);
                 put_str(buf, key);
             }
+            Request::ListModels => buf.push(req_op::LIST_MODELS),
+            Request::ModelStats => buf.push(req_op::MODEL_STATS),
         }
     }
 
@@ -540,6 +624,7 @@ impl Request {
             req_op::PUT_MODEL => Request::PutModel { key: c.str()?, hlo_text: c.str()? },
             req_op::RUN_MODEL => {
                 let key = c.str()?;
+                let version = c.u64()?;
                 let n_in = c.u32()? as usize;
                 if n_in > 4096 {
                     return Err(Error::Protocol("too many input keys".into()));
@@ -556,12 +641,8 @@ impl Request {
                 for _ in 0..n_out {
                     out_keys.push(c.str()?);
                 }
-                let device = match c.u8()? {
-                    0xff => Device::Cpu,
-                    i if i < 16 => Device::Gpu(i),
-                    i => return Err(Error::Protocol(format!("bad device {i}"))),
-                };
-                Request::RunModel { key, in_keys, out_keys, device }
+                let device = device_from_byte(c.u8()?)?;
+                Request::RunModel { key, version, in_keys, out_keys, device }
             }
             req_op::INFO => Request::Info,
             req_op::FLUSH_ALL => Request::FlushAll,
@@ -594,6 +675,8 @@ impl Request {
             },
             req_op::COLD_LIST => Request::ColdList { prefix: c.str()? },
             req_op::COLD_GET => Request::ColdGet { key: c.str()? },
+            req_op::LIST_MODELS => Request::ListModels,
+            req_op::MODEL_STATS => Request::ModelStats,
             _ => return Err(Error::Protocol(format!("unknown request opcode {op}"))),
         };
         Ok(req)
@@ -626,7 +709,9 @@ impl Request {
             | Request::PollKeys { .. }
             | Request::DelKeys { .. }
             | Request::Retention { .. }
-            | Request::ColdList { .. } => None,
+            | Request::ColdList { .. }
+            | Request::ListModels
+            | Request::ModelStats => None,
         }
     }
 
@@ -643,13 +728,14 @@ impl Request {
             Request::PutMeta { key, value } => str_wire_size(key) + str_wire_size(value),
             Request::ListKeys { prefix } => str_wire_size(prefix),
             Request::PutModel { key, hlo_text } => str_wire_size(key) + str_wire_size(hlo_text),
-            Request::RunModel { key, in_keys, out_keys, device: _ } => {
+            Request::RunModel { key, in_keys, out_keys, .. } => {
                 str_wire_size(key)
+                    + 8
                     + str_list_wire_size(in_keys)
                     + str_list_wire_size(out_keys)
                     + 1
             }
-            Request::Info | Request::FlushAll => 0,
+            Request::Info | Request::FlushAll | Request::ListModels | Request::ModelStats => 0,
             Request::Batch(entries) => {
                 4 + entries.iter().map(|e| e.body_wire_size()).sum::<usize>()
             }
@@ -684,6 +770,9 @@ mod resp_op {
     pub const ERROR: u8 = 7;
     pub const INFO: u8 = 8;
     pub const BATCH: u8 = 9;
+    pub const MODELS: u8 = 10;
+    pub const MODEL_STATS: u8 = 11;
+    pub const VERSION: u8 = 12;
 }
 
 impl Response {
@@ -737,6 +826,9 @@ impl Response {
                 buf.extend_from_slice(&i.read_failovers.to_le_bytes());
                 buf.extend_from_slice(&i.shard_reconnects.to_le_bytes());
                 buf.extend_from_slice(&i.degraded_ops.to_le_bytes());
+                buf.extend_from_slice(&i.model_swaps.to_le_bytes());
+                buf.extend_from_slice(&i.batches.to_le_bytes());
+                buf.extend_from_slice(&i.batched_requests.to_le_bytes());
                 put_str(buf, &i.engine);
                 buf.extend_from_slice(&(i.fields.len() as u32).to_le_bytes());
                 for f in &i.fields {
@@ -754,6 +846,35 @@ impl Response {
                 for e in entries {
                     e.encode(buf);
                 }
+            }
+            Response::Models(ms) => {
+                buf.push(resp_op::MODELS);
+                buf.extend_from_slice(&(ms.len() as u32).to_le_bytes());
+                for m in ms {
+                    put_str(buf, &m.key);
+                    buf.extend_from_slice(&m.live_version.to_le_bytes());
+                    buf.extend_from_slice(&m.n_versions.to_le_bytes());
+                    buf.extend_from_slice(&m.swaps.to_le_bytes());
+                    buf.extend_from_slice(&m.executions.to_le_bytes());
+                }
+            }
+            Response::ModelStats(ds) => {
+                buf.push(resp_op::MODEL_STATS);
+                buf.extend_from_slice(&(ds.len() as u32).to_le_bytes());
+                for d in ds {
+                    put_device(buf, d.device);
+                    buf.extend_from_slice(&d.executions.to_le_bytes());
+                    buf.extend_from_slice(&d.eval_count.to_le_bytes());
+                    buf.extend_from_slice(&d.eval_mean_s.to_bits().to_le_bytes());
+                    buf.extend_from_slice(&d.eval_std_s.to_bits().to_le_bytes());
+                    buf.extend_from_slice(&d.queue_count.to_le_bytes());
+                    buf.extend_from_slice(&d.queue_mean_s.to_bits().to_le_bytes());
+                    buf.extend_from_slice(&d.queue_std_s.to_bits().to_le_bytes());
+                }
+            }
+            Response::Version(v) => {
+                buf.push(resp_op::VERSION);
+                buf.extend_from_slice(&v.to_le_bytes());
             }
         }
     }
@@ -819,6 +940,9 @@ impl Response {
                 let read_failovers = c.u64()?;
                 let shard_reconnects = c.u64()?;
                 let degraded_ops = c.u64()?;
+                let model_swaps = c.u64()?;
+                let batches = c.u64()?;
+                let batched_requests = c.u64()?;
                 let engine = c.str()?;
                 let n = c.u32()? as usize;
                 if n > MAX_BATCH {
@@ -860,6 +984,9 @@ impl Response {
                     read_failovers,
                     shard_reconnects,
                     degraded_ops,
+                    model_swaps,
+                    batches,
+                    batched_requests,
                     engine,
                     fields,
                 })
@@ -878,6 +1005,45 @@ impl Response {
                 }
                 Response::Batch(entries)
             }
+            resp_op::MODELS => {
+                let n = c.u32()? as usize;
+                if n > MAX_BATCH {
+                    return Err(Error::Protocol(format!("model list of {n} exceeds {MAX_BATCH}")));
+                }
+                let mut ms = Vec::with_capacity(n);
+                for _ in 0..n {
+                    ms.push(ModelEntry {
+                        key: c.str()?,
+                        live_version: c.u64()?,
+                        n_versions: c.u64()?,
+                        swaps: c.u64()?,
+                        executions: c.u64()?,
+                    });
+                }
+                Response::Models(ms)
+            }
+            resp_op::MODEL_STATS => {
+                let n = c.u32()? as usize;
+                // CPU + at most 16 GPU ordinals per node.
+                if n > 17 {
+                    return Err(Error::Protocol(format!("device stat list of {n} exceeds 17")));
+                }
+                let mut ds = Vec::with_capacity(n);
+                for _ in 0..n {
+                    ds.push(ModelDeviceStat {
+                        device: device_from_byte(c.u8()?)?,
+                        executions: c.u64()?,
+                        eval_count: c.u64()?,
+                        eval_mean_s: c.f64()?,
+                        eval_std_s: c.f64()?,
+                        queue_count: c.u64()?,
+                        queue_mean_s: c.f64()?,
+                        queue_std_s: c.f64()?,
+                    });
+                }
+                Response::ModelStats(ds)
+            }
+            resp_op::VERSION => Response::Version(c.u64()?),
             _ => return Err(Error::Protocol(format!("unknown response opcode {op}"))),
         };
         Ok(resp)
@@ -894,8 +1060,8 @@ impl Response {
             Response::Meta(s) | Response::Error(s) => str_wire_size(s),
             Response::Keys(ks) => 4 + ks.iter().map(|k| str_wire_size(k)).sum::<usize>(),
             Response::Info(i) => {
-                // 21 fixed u64 counters precede the engine string.
-                168 + str_wire_size(&i.engine)
+                // 24 fixed u64 counters precede the engine string.
+                192 + str_wire_size(&i.engine)
                     + 4
                     + i.fields
                         .iter()
@@ -905,6 +1071,12 @@ impl Response {
             Response::Batch(entries) => {
                 4 + entries.iter().map(|e| e.body_wire_size()).sum::<usize>()
             }
+            Response::Models(ms) => {
+                4 + ms.iter().map(|m| str_wire_size(&m.key) + 32).sum::<usize>()
+            }
+            // 1 device byte + 7 u64/f64 fields per row.
+            Response::ModelStats(ds) => 4 + ds.len() * 57,
+            Response::Version(_) => 8,
         };
         1 + fields
     }
@@ -988,6 +1160,30 @@ impl Response {
         match self {
             Response::Info(i) => Ok(i),
             other => Err(other.unexpected("Info")),
+        }
+    }
+
+    /// `Version` → the version number a `PutModel` assigned.
+    pub fn expect_version(self) -> Result<u64> {
+        match self {
+            Response::Version(v) => Ok(v),
+            other => Err(other.unexpected("Version")),
+        }
+    }
+
+    /// `Models` → the registry listing.
+    pub fn expect_models(self) -> Result<Vec<ModelEntry>> {
+        match self {
+            Response::Models(ms) => Ok(ms),
+            other => Err(other.unexpected("Models")),
+        }
+    }
+
+    /// `ModelStats` → the per-device statistics rows.
+    pub fn expect_model_stats(self) -> Result<Vec<ModelDeviceStat>> {
+        match self {
+            Response::ModelStats(ds) => Ok(ds),
+            other => Err(other.unexpected("ModelStats")),
         }
     }
 

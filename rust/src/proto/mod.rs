@@ -42,7 +42,9 @@ pub mod message;
 
 pub use frame::{begin_split_frame, end_split_frame, read_frame, read_frame_into, write_frame,
                 FrameSink, MAX_FRAME};
-pub use message::{DbInfo, Device, FieldPressure, Request, Response, MAX_BATCH};
+pub use message::{
+    DbInfo, Device, FieldPressure, ModelDeviceStat, ModelEntry, Request, Response, MAX_BATCH,
+};
 
 #[cfg(test)]
 mod tests {
@@ -75,9 +77,17 @@ mod tests {
             Request::PutModel { key: "enc".into(), hlo_text: "HloModule m".into() },
             Request::RunModel {
                 key: "enc".into(),
+                version: 0,
                 in_keys: vec!["a".into(), "b".into()],
                 out_keys: vec!["z".into()],
                 device: Device::Gpu(2),
+            },
+            Request::RunModel {
+                key: "enc".into(),
+                version: 7,
+                in_keys: vec!["a".into()],
+                out_keys: vec!["z".into()],
+                device: Device::Cpu,
             },
             Request::Info,
             Request::FlushAll,
@@ -100,6 +110,8 @@ mod tests {
             Request::Retention { window: 4, max_bytes: 1 << 28, ttl_ms: 30_000 },
             Request::ColdList { prefix: "f_".into() },
             Request::ColdGet { key: "f_rank0_step0".into() },
+            Request::ListModels,
+            Request::ModelStats,
         ]
     }
 
@@ -142,6 +154,9 @@ mod tests {
                 read_failovers: 5,
                 shard_reconnects: 2,
                 degraded_ops: 1,
+                model_swaps: 3,
+                batches: 12,
+                batched_requests: 40,
                 engine: "redis".into(),
                 fields: vec![
                     FieldPressure {
@@ -170,6 +185,45 @@ mod tests {
                 Response::NotFound,
                 Response::Error("entry failed".into()),
             ]),
+            Response::Models(vec![
+                ModelEntry {
+                    key: "encoder".into(),
+                    live_version: 3,
+                    n_versions: 3,
+                    swaps: 2,
+                    executions: 41,
+                },
+                ModelEntry {
+                    key: "surrogate".into(),
+                    live_version: 1,
+                    n_versions: 1,
+                    swaps: 0,
+                    executions: 0,
+                },
+            ]),
+            Response::ModelStats(vec![
+                ModelDeviceStat {
+                    device: Device::Cpu,
+                    executions: 9,
+                    eval_count: 9,
+                    eval_mean_s: 0.0031,
+                    eval_std_s: 0.0002,
+                    queue_count: 0,
+                    queue_mean_s: 0.0,
+                    queue_std_s: 0.0,
+                },
+                ModelDeviceStat {
+                    device: Device::Gpu(1),
+                    executions: 32,
+                    eval_count: 32,
+                    eval_mean_s: 0.0008,
+                    eval_std_s: 0.0001,
+                    queue_count: 32,
+                    queue_mean_s: 0.0003,
+                    queue_std_s: 0.00005,
+                },
+            ]),
+            Response::Version(4),
         ]
     }
 
@@ -417,6 +471,7 @@ mod tests {
             let t = Tensor::from_f32(&[2], vec![1.0, 2.0]).unwrap();
             let r = Request::RunModel {
                 key: g.key(),
+                version: g.u64(),
                 in_keys: vec![g.key(), g.key()],
                 out_keys: vec![g.key()],
                 device: Device::Cpu,
@@ -440,7 +495,7 @@ mod tests {
     /// properties below mutate.
     fn arbitrary_request(g: &mut Gen) -> Request {
         let keys = |g: &mut Gen| -> Vec<String> { g.vec(0..=4, |g| g.key()) };
-        match g.usize_in(0..=9) {
+        match g.usize_in(0..=12) {
             0 => {
                 let n = g.usize_in(1..=8);
                 let data: Vec<f32> = (0..n).map(|_| g.normal_f32()).collect();
@@ -459,11 +514,21 @@ mod tests {
             6 => Request::PutMeta { key: g.key(), value: g.key() },
             7 => Request::ColdGet { key: g.key() },
             8 => Request::ColdList { prefix: g.key() },
+            9 => Request::RunModel {
+                key: g.key(),
+                version: g.u64(),
+                in_keys: keys(g),
+                out_keys: keys(g),
+                device: *g.choose(&[Device::Cpu, Device::Gpu(0), Device::Gpu(3)]),
+            },
+            10 => Request::ListModels,
+            11 => Request::ModelStats,
             _ => Request::Batch(vec![
                 Request::DelKeys { keys: keys(g) },
                 Request::Retention { window: g.u64(), max_bytes: g.u64(), ttl_ms: g.u64() },
                 Request::ColdGet { key: g.key() },
                 Request::Exists { key: g.key() },
+                Request::ListModels,
             ]),
         }
     }
@@ -548,6 +613,80 @@ mod tests {
         let mut buf = vec![2u8]; // req_op::GET_TENSOR
         buf.extend_from_slice(&u32::MAX.to_le_bytes());
         assert!(Request::decode(&buf).is_err());
+        // Models response declaring an absurd registry size.
+        let mut buf = vec![10u8]; // resp_op::MODELS
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Response::decode(&buf).is_err());
+        // ModelStats response declaring more device rows than can exist.
+        let mut buf = vec![11u8]; // resp_op::MODEL_STATS
+        buf.extend_from_slice(&1024u32.to_le_bytes());
+        assert!(Response::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn model_ops_broadcast_and_truncate_strictly() {
+        // Model ops never route to one shard: the registry lives in every
+        // shard's runtime, so listings merge and publishes broadcast.
+        for r in [
+            Request::ListModels,
+            Request::ModelStats,
+            Request::PutModel { key: "m".into(), hlo_text: "situ-native v1".into() },
+            Request::RunModel {
+                key: "m".into(),
+                version: 2,
+                in_keys: vec!["x".into()],
+                out_keys: vec!["y".into()],
+                device: Device::Gpu(0),
+            },
+        ] {
+            assert!(r.routing_key().is_none(), "{r:?} must not route");
+            assert_eq!(roundtrip_req(&r), r);
+        }
+        // Every strict prefix of the serving frames must fail to decode.
+        for resp in all_response_variants() {
+            if !matches!(
+                resp,
+                Response::Models(_) | Response::ModelStats(_) | Response::Version(_)
+            ) {
+                continue;
+            }
+            let mut buf = Vec::new();
+            resp.encode(&mut buf);
+            for cut in 0..buf.len() {
+                assert!(
+                    Response::decode(&buf[..cut]).is_err(),
+                    "prefix {cut} of {resp:?} decoded"
+                );
+            }
+        }
+        let versioned = Request::RunModel {
+            key: "m".into(),
+            version: u64::MAX,
+            in_keys: vec!["a".into()],
+            out_keys: vec!["b".into()],
+            device: Device::Cpu,
+        };
+        let mut buf = Vec::new();
+        versioned.encode(&mut buf);
+        for cut in 0..buf.len() {
+            assert!(Request::decode(&buf[..cut]).is_err());
+        }
+        assert_eq!(roundtrip_req(&versioned), versioned);
+    }
+
+    #[test]
+    fn serving_expect_conversions() {
+        use crate::error::Error;
+        assert_eq!(Response::Version(9).expect_version().unwrap(), 9);
+        assert!(matches!(Response::Ok.expect_version(), Err(Error::Protocol(_))));
+        let ms = vec![ModelEntry { key: "m".into(), live_version: 1, ..Default::default() }];
+        assert_eq!(Response::Models(ms.clone()).expect_models().unwrap(), ms);
+        assert!(matches!(
+            Response::Error("busy: store full".into()).expect_models(),
+            Err(Error::Busy(_))
+        ));
+        assert!(Response::ModelStats(Vec::new()).expect_model_stats().unwrap().is_empty());
+        assert!(matches!(Response::NotFound.expect_model_stats(), Err(Error::Protocol(_))));
     }
 
     #[test]

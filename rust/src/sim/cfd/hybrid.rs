@@ -1,0 +1,301 @@
+//! Hybrid ML/numeric pressure solver — the serving side of the in-situ
+//! loop.
+//!
+//! The expensive part of every projection step is the pressure Poisson
+//! solve.  The hybrid solver replaces it with an inference call against the
+//! database's live `pressure_surrogate` model, then *validates* the
+//! prediction by measuring the relative L2 residual `‖∇²p̂ − b‖ / ‖b‖` of
+//! the returned field against the step's actual right-hand side.  Within
+//! tolerance the prediction is accepted as the step's pressure; otherwise
+//! the solver falls back to the numeric CG solve, warm-started from the
+//! prediction so even a mediocre surrogate still pays for itself in
+//! iterations saved.  Every outcome is counted, so a run reports exactly
+//! how often the model was trusted.
+//!
+//! The trainer closes the loop by publishing improved checkpoints into the
+//! same registry key mid-run ([`crate::ai::Registry`] hot-swaps the live
+//! pointer); the solver picks up version N+1 on its next step without any
+//! coordination, and in-flight steps on version N complete untouched.
+
+use crate::client::{DataStore, Pipeline};
+use crate::error::{Error, Result};
+use crate::proto::Device;
+use crate::sim::cfd::grid::Grid;
+use crate::sim::cfd::poisson;
+use crate::sim::cfd::solver::ChannelFlow;
+use crate::telemetry::StatAccum;
+use crate::tensor::Tensor;
+
+/// Knobs of the hybrid pressure solve.
+#[derive(Debug, Clone)]
+pub struct HybridConfig {
+    /// Registry key the surrogate is served under; the solver always runs
+    /// the *live* version (wire version 0).
+    pub model_key: String,
+    /// Rank tag for this solver's scratch keys (parallel solvers must not
+    /// share staging tensors).
+    pub rank: usize,
+    /// Acceptance threshold on the relative L2 residual of a prediction.
+    pub accept_tol: f64,
+    /// Numeric fallback tolerance.
+    pub cg_tol: f64,
+    /// Numeric fallback iteration cap.
+    pub cg_max_iter: usize,
+    /// Device the inference call is pinned to.
+    pub device: Device,
+}
+
+impl Default for HybridConfig {
+    fn default() -> Self {
+        HybridConfig {
+            model_key: "pressure_surrogate".into(),
+            rank: 0,
+            accept_tol: 1e-4,
+            cg_tol: 1e-6,
+            cg_max_iter: 600,
+            device: Device::Gpu(0),
+        }
+    }
+}
+
+/// Per-run accounting of how the hybrid solve resolved each step.
+#[derive(Debug, Default, Clone)]
+pub struct HybridStats {
+    /// Steps advanced through the hybrid path.
+    pub steps: u64,
+    /// Predictions that passed the residual check and became the step's
+    /// pressure with no numeric work.
+    pub accepted: u64,
+    /// Steps that fell back to the numeric solve (failed validation or a
+    /// failed inference call).
+    pub fallbacks: u64,
+    /// Inference calls that errored outright (e.g. no checkpoint published
+    /// yet) — always also counted as fallbacks.
+    pub surrogate_errors: u64,
+    /// Relative residuals of the predictions that came back (accepted or
+    /// not) — the run's surrogate-quality curve.
+    pub residuals: StatAccum,
+}
+
+impl HybridStats {
+    /// Fraction of steps served entirely by the surrogate.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.steps as f64
+        }
+    }
+}
+
+/// Render the native-interpreter surrogate text for a pressure model on
+/// `grid`.  Publishing checkpoints with a rising iteration budget mimics a
+/// model improving over training epochs — each checkpoint is a strictly
+/// better approximation of the true solve.
+pub fn poisson_model_text(grid: &Grid, tol: f64, max_iter: usize) -> String {
+    format!(
+        "situ-native v1\npoisson {} {} {} {} {}\n",
+        grid.nx, grid.ny, grid.nz, tol, max_iter
+    )
+}
+
+/// A [`ChannelFlow`] stepped with surrogate-first pressure solves.
+///
+/// Generic over [`DataStore`], so the same solver runs against a co-located
+/// instance or a cluster unchanged.
+pub struct HybridSolver<C: DataStore> {
+    pub cfg: HybridConfig,
+    pub client: C,
+    pub stats: HybridStats,
+    /// Most recent inference failure, kept for the run report.
+    pub last_error: Option<String>,
+}
+
+impl<C: DataStore> HybridSolver<C> {
+    pub fn new(client: C, cfg: HybridConfig) -> HybridSolver<C> {
+        HybridSolver { cfg, client, stats: HybridStats::default(), last_error: None }
+    }
+
+    /// Advance `flow` one step.  The pressure comes from the live surrogate
+    /// when its validated residual is within `accept_tol`, otherwise from
+    /// the CG fallback warm-started with whatever the surrogate produced.
+    /// Returns the numeric iteration count (0 for an accepted prediction).
+    pub fn step(&mut self, flow: &mut ChannelFlow) -> usize {
+        let cfg = &self.cfg;
+        let stats = &mut self.stats;
+        let last_error = &mut self.last_error;
+        let client = &mut self.client;
+        let iters = flow.step_with(|g, rhs, p| {
+            match Self::surrogate(client, cfg, g, rhs, p) {
+                Ok(residual) => {
+                    stats.residuals.add(residual);
+                    if residual <= cfg.accept_tol {
+                        stats.accepted += 1;
+                        (0, residual)
+                    } else {
+                        // `p` already holds the prediction: the numeric
+                        // solve below is warm-started by it.
+                        stats.fallbacks += 1;
+                        poisson::solve_cg(g, rhs, p, cfg.cg_tol, cfg.cg_max_iter)
+                    }
+                }
+                Err(e) => {
+                    stats.surrogate_errors += 1;
+                    stats.fallbacks += 1;
+                    *last_error = Some(e.to_string());
+                    poisson::solve_cg(g, rhs, p, cfg.cg_tol, cfg.cg_max_iter)
+                }
+            }
+        });
+        stats.steps += 1;
+        iters
+    }
+
+    /// One inference round trip: stage `rhs` and the previous pressure (the
+    /// surrogate's warm-start input) in a single pipelined frame, run the
+    /// live model, read the prediction back, and score it.  On success `p`
+    /// holds the prediction and the relative residual is returned.
+    fn surrogate(
+        client: &mut C,
+        cfg: &HybridConfig,
+        g: &Grid,
+        rhs: &[f64],
+        p: &mut [f64],
+    ) -> Result<f64> {
+        let shape = [g.nx, g.ny, g.nz];
+        let rhs_t = Tensor::from_f64(&shape, rhs.to_vec())?;
+        let p0_t = Tensor::from_f64(&shape, p.to_vec())?;
+        let rhs_key = format!("hyb_r{}_rhs", cfg.rank);
+        let p0_key = format!("hyb_r{}_p0", cfg.rank);
+        let out_key = format!("hyb_r{}_pred", cfg.rank);
+
+        let mut pipe = Pipeline::new();
+        pipe.put_tensor(&rhs_key, &rhs_t).put_tensor(&p0_key, &p0_t);
+        for r in client.execute(pipe)? {
+            r.expect_ok()?;
+        }
+        client.run_model(
+            &cfg.model_key,
+            &[rhs_key, p0_key],
+            std::slice::from_ref(&out_key),
+            cfg.device,
+        )?;
+        let pred = client.get_tensor(&out_key)?.to_f64()?;
+        if pred.len() != g.n() {
+            return Err(Error::Shape(format!(
+                "surrogate returned {} values for a {}-cell grid",
+                pred.len(),
+                g.n()
+            )));
+        }
+
+        // Score against the zero-mean-projected RHS — the same right-hand
+        // side the numeric solver targets (the constant component of b is
+        // outside the Laplacian's range, so it must not count as error).
+        let mut b = rhs.to_vec();
+        poisson::project_zero_mean(&mut b);
+        let mut lap = vec![0.0; g.n()];
+        poisson::apply_laplacian(g, &pred, &mut lap);
+        let (mut rn, mut bn) = (0.0, 0.0);
+        for i in 0..g.n() {
+            let d = lap[i] - b[i];
+            rn += d * d;
+            bn += b[i] * b[i];
+        }
+        let residual = if bn > 0.0 { (rn / bn).sqrt() } else { rn.sqrt() };
+        p.copy_from_slice(&pred);
+        Ok(residual)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::Client;
+    use crate::db::{DbServer, ServerConfig};
+
+    #[test]
+    fn hybrid_falls_back_then_accepts_improving_checkpoints() {
+        let server = DbServer::start(ServerConfig::default()).unwrap();
+        let mut publisher = Client::connect(server.addr).unwrap();
+        let client = Client::connect(server.addr).unwrap();
+
+        let mut flow = ChannelFlow::new(Grid::channel(12, 10, 8), 5e-3, 1, 0.08);
+        let grid = flow.grid.clone();
+        let mut hybrid = HybridSolver::new(client, HybridConfig::default());
+
+        // No checkpoint published yet: the step must still complete, via
+        // the numeric fallback, and count the inference failure.
+        hybrid.step(&mut flow);
+        assert_eq!(hybrid.stats.steps, 1);
+        assert_eq!(hybrid.stats.accepted, 0);
+        assert_eq!(hybrid.stats.fallbacks, 1);
+        assert_eq!(hybrid.stats.surrogate_errors, 1);
+        assert!(hybrid.last_error.as_deref().unwrap().contains("model not found"));
+
+        // A weak checkpoint (2 iterations) predicts, but fails validation.
+        let v1 = publisher
+            .put_model(&hybrid.cfg.model_key, &poisson_model_text(&grid, 1e-9, 2))
+            .unwrap();
+        assert_eq!(v1, 1);
+        hybrid.step(&mut flow);
+        assert_eq!(hybrid.stats.fallbacks, 2);
+        assert_eq!(hybrid.stats.accepted, 0);
+        assert_eq!(hybrid.stats.residuals.count(), 1);
+        assert!(hybrid.stats.residuals.max() > hybrid.cfg.accept_tol);
+
+        // A converged checkpoint hot-swaps in; predictions now pass.
+        let v2 = publisher
+            .put_model(&hybrid.cfg.model_key, &poisson_model_text(&grid, 1e-8, 2000))
+            .unwrap();
+        assert_eq!(v2, 2);
+        for _ in 0..3 {
+            hybrid.step(&mut flow);
+        }
+        assert_eq!(hybrid.stats.steps, 5);
+        assert_eq!(hybrid.stats.accepted, 3, "converged surrogate accepted");
+        assert_eq!(hybrid.stats.fallbacks, 2);
+        assert!(hybrid.stats.acceptance_rate() > 0.5);
+
+        // The flow the hybrid advanced is still a valid projection step.
+        let d = flow.mean_abs_divergence();
+        assert!(d < 0.1, "hybrid-stepped divergence: {d}");
+        assert_eq!(flow.step_no, 5);
+
+        // And the registry saw the training loop: two versions, one swap.
+        let entries = hybrid.client.list_models().unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].live_version, 2);
+        assert_eq!(entries[0].swaps, 1);
+        assert!(entries[0].executions >= 4, "weak + 3 converged runs");
+    }
+
+    #[test]
+    fn accepted_step_matches_numeric_quality() {
+        let server = DbServer::start(ServerConfig::default()).unwrap();
+        let mut publisher = Client::connect(server.addr).unwrap();
+        let client = Client::connect(server.addr).unwrap();
+
+        let grid = Grid::channel(12, 10, 8);
+        let mut numeric = ChannelFlow::new(grid.clone(), 5e-3, 7, 0.08);
+        let mut hybrid_flow = ChannelFlow::new(grid.clone(), 5e-3, 7, 0.08);
+
+        let cfg = HybridConfig { accept_tol: 1e-3, ..HybridConfig::default() };
+        publisher.put_model(&cfg.model_key, &poisson_model_text(&grid, 1e-8, 2000)).unwrap();
+        let mut hybrid = HybridSolver::new(client, cfg);
+
+        for _ in 0..3 {
+            numeric.step();
+            hybrid.step(&mut hybrid_flow);
+        }
+        assert_eq!(hybrid.stats.accepted, 3);
+        // The surrogate path must land on (essentially) the numeric
+        // trajectory: both solve the same Poisson systems to tight
+        // tolerance.
+        let (dn, dh) = (numeric.mean_abs_divergence(), hybrid_flow.mean_abs_divergence());
+        assert!(
+            (dn - dh).abs() < 1e-2,
+            "hybrid diverged from numeric trajectory: {dn} vs {dh}"
+        );
+    }
+}

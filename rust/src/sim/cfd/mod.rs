@@ -8,6 +8,7 @@
 //! of the paper is seeded by synthetic turbulence generation the same way).
 
 pub mod grid;
+pub mod hybrid;
 pub mod poisson;
 pub mod producer;
 pub mod sampler;
@@ -15,6 +16,7 @@ pub mod solver;
 pub mod turbulence;
 
 pub use grid::Grid;
+pub use hybrid::{HybridConfig, HybridSolver, HybridStats};
 pub use producer::{run_producer, CfdProducerConfig, CfdProducerOutcome};
 pub use sampler::MeshSampler;
 pub use solver::{ChannelFlow, SolverTimings};

@@ -118,8 +118,25 @@ impl ChannelFlow {
         (yp - ym) / (2.0 * g.dy())
     }
 
-    /// Advance one time step.  Returns the CG iteration count.
+    /// Advance one time step with the default CG pressure solve.  Returns
+    /// the CG iteration count.
     pub fn step(&mut self) -> usize {
+        let (tol, max_iter) = (self.cg_tol, self.cg_max_iter);
+        self.step_with(|g, rhs, p| poisson::solve_cg(g, rhs, p, tol, max_iter))
+    }
+
+    /// Advance one time step with a caller-supplied pressure solve.
+    ///
+    /// The closure receives the grid, the Poisson RHS `∇·u*/dt`, and the
+    /// pressure field (pre-populated with the previous step's solution, so
+    /// iterative solvers get a warm start) and returns
+    /// `(iterations, residual)`.  This is the seam the hybrid ML solver
+    /// plugs into: it can answer with a surrogate prediction, a numeric
+    /// solve, or a validated mix of the two.
+    pub fn step_with<F>(&mut self, solve: F) -> usize
+    where
+        F: FnOnce(&Grid, &[f64], &mut [f64]) -> (usize, f64),
+    {
         let g = self.grid.clone();
         let n = g.n();
         let (dx, dy2) = (g.dx(), g.dy() * g.dy());
@@ -185,9 +202,9 @@ impl ChannelFlow {
         }
         self.timings.formation.add(sw.stop());
 
-        // ---- 2. solution: CG Poisson -----------------------------------
+        // ---- 2. solution: pressure Poisson ------------------------------
         let sw = Stopwatch::start();
-        let (iters, _res) = poisson::solve_cg(&g, &rhs, &mut self.p, self.cg_tol, self.cg_max_iter);
+        let (iters, _res) = solve(&g, &rhs, &mut self.p);
         self.last_cg_iters = iters;
         self.timings.solution.add(sw.stop());
 

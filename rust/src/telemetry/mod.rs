@@ -8,7 +8,10 @@
 
 pub mod table;
 
-pub use table::{counter_table, failover_table, field_pressure_table, Table};
+pub use table::{
+    counter_table, failover_table, field_pressure_table, model_stats_table, models_table,
+    serving_table, Table,
+};
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;

@@ -2,7 +2,7 @@
 //! CSV (for plotting), plus the canned tables `situ info` and the run
 //! reports use for retention pressure and backpressure counters.
 
-use crate::proto::DbInfo;
+use crate::proto::{DbInfo, Device, ModelDeviceStat, ModelEntry};
 use crate::util::fmt;
 
 /// A simple titled table.
@@ -153,6 +153,64 @@ pub fn failover_table(info: &DbInfo) -> Table {
     )
 }
 
+/// Registry contents from a `ListModels` reply: one row per model key with
+/// its live version, how many immutable versions are retained, how often
+/// the live pointer was hot-swapped, and total backend executions.
+pub fn models_table(entries: &[ModelEntry]) -> Table {
+    let mut t = Table::new(
+        "model registry",
+        &["key", "live version", "kept versions", "swaps", "executions"],
+    );
+    for e in entries {
+        t.row(&[
+            e.key.clone(),
+            format!("v{}", e.live_version),
+            e.n_versions.to_string(),
+            e.swaps.to_string(),
+            e.executions.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Per-device serving statistics from a `ModelStats` reply: executions,
+/// eval wall-time and GPU-slot queue-wait distributions.
+pub fn model_stats_table(stats: &[ModelDeviceStat]) -> Table {
+    let mut t = Table::new(
+        "model serving by device",
+        &["device", "executions", "eval mean", "eval std", "queue mean", "queue std"],
+    );
+    for s in stats {
+        let dev = match s.device {
+            Device::Cpu => "cpu".to_string(),
+            Device::Gpu(i) => format!("gpu{i}"),
+        };
+        t.row(&[
+            dev,
+            s.executions.to_string(),
+            fmt::duration(s.eval_mean_s),
+            fmt::duration(s.eval_std_s),
+            fmt::duration(s.queue_mean_s),
+            fmt::duration(s.queue_std_s),
+        ]);
+    }
+    t
+}
+
+/// Serving-side counters from an `INFO` reply: hot-swaps plus the adaptive
+/// micro-batcher's coalescing effectiveness.
+pub fn serving_table(info: &DbInfo) -> Table {
+    counter_table(
+        "model serving",
+        &[
+            ("live models", info.models),
+            ("model hot-swaps", info.model_swaps),
+            ("coalesced batches", info.batches),
+            ("requests served batched", info.batched_requests),
+        ],
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,6 +276,46 @@ mod tests {
             .render_markdown();
         assert!(md.contains("skipped"));
         assert!(md.contains("| 7"));
+    }
+
+    #[test]
+    fn serving_tables_render() {
+        let entries = vec![ModelEntry {
+            key: "surrogate".into(),
+            live_version: 3,
+            n_versions: 2,
+            swaps: 2,
+            executions: 40,
+        }];
+        let md = models_table(&entries).render_markdown();
+        assert!(md.contains("| surrogate"), "{md}");
+        assert!(md.contains("v3"), "{md}");
+        assert!(md.contains("| 40"), "{md}");
+
+        let stats = vec![ModelDeviceStat {
+            device: Device::Gpu(1),
+            executions: 7,
+            eval_count: 7,
+            eval_mean_s: 0.001,
+            eval_std_s: 0.0,
+            queue_count: 7,
+            queue_mean_s: 0.0,
+            queue_std_s: 0.0,
+        }];
+        let md = model_stats_table(&stats).render_markdown();
+        assert!(md.contains("gpu1"), "{md}");
+        assert!(md.contains("| 7"), "{md}");
+
+        let info = DbInfo {
+            models: 2,
+            model_swaps: 3,
+            batches: 5,
+            batched_requests: 17,
+            ..Default::default()
+        };
+        let md = serving_table(&info).render_markdown();
+        assert!(md.contains("model hot-swaps"), "{md}");
+        assert!(md.contains("| 17"), "{md}");
     }
 
     #[test]

@@ -134,6 +134,23 @@ impl Tensor {
         Ok(Tensor { dtype: DType::F32, shape: shape.to_vec(), data: Bytes::from_vec(data) })
     }
 
+    pub fn from_f64(shape: &[usize], values: Vec<f64>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != values.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                values.len()
+            )));
+        }
+        let mut data = Vec::with_capacity(n * 8);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(Tensor { dtype: DType::F64, shape: shape.to_vec(), data: Bytes::from_vec(data) })
+    }
+
     pub fn from_i32(shape: &[usize], values: Vec<i32>) -> Result<Tensor> {
         let n: usize = shape.iter().product();
         if n != values.len() {
@@ -168,6 +185,17 @@ impl Tensor {
             .data
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_f64(&self) -> Result<Vec<f64>> {
+        if self.dtype != DType::F64 {
+            return Err(Error::Shape(format!("tensor is {}, wanted f64", self.dtype)));
+        }
+        Ok(self
+            .data
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
             .collect())
     }
 
@@ -252,6 +280,16 @@ mod tests {
     #[test]
     fn shape_mismatch_rejected() {
         assert!(Tensor::from_f32(&[2, 2], vec![1.0]).is_err());
+        assert!(Tensor::from_f64(&[3], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn f64_roundtrip() {
+        let t = Tensor::from_f64(&[3], vec![1.5, -2.5, 1e300]).unwrap();
+        assert_eq!(t.nbytes(), 24);
+        assert_eq!(t.to_f64().unwrap(), vec![1.5, -2.5, 1e300]);
+        assert!(t.to_f32().is_err());
+        t.validate().unwrap();
     }
 
     #[test]

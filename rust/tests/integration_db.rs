@@ -342,6 +342,7 @@ fn error_mid_batch_reports_per_entry_results() {
         Request::GetTensor { key: "missing".into() },
         Request::RunModel {
             key: "ghost".into(),
+            version: 0,
             in_keys: vec!["ok1".into()],
             out_keys: vec!["y".into()],
             device: situ::proto::Device::Cpu,

@@ -1,0 +1,257 @@
+//! Integration: the versioned serving subsystem over TCP — model registry
+//! hot-swaps racing in-flight inference, adaptive micro-batching, pinned
+//! versions, cluster publish resilience, and the serving wire ops.
+//!
+//! Everything here uses the native interpreter backend (`situ-native v1`
+//! texts), so no PJRT artifacts are required.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use situ::ai::{BatcherConfig, ModelRuntime};
+use situ::client::{Client, ClusterClient, DataStore};
+use situ::db::{DbServer, ServerConfig};
+use situ::proto::Device;
+use situ::runtime::Executor;
+use situ::tensor::Tensor;
+
+fn affine_text(offset: f64) -> String {
+    format!("situ-native v1\naffine 1 {offset}\n")
+}
+
+#[test]
+fn put_model_replies_versions_and_wire_ops_report_them() {
+    let server = DbServer::start(ServerConfig::default()).unwrap();
+    let mut c = Client::connect(server.addr).unwrap();
+
+    assert_eq!(c.put_model("m", &affine_text(1.0)).unwrap(), 1);
+    assert_eq!(c.put_model("m", &affine_text(2.0)).unwrap(), 2);
+    assert_eq!(c.put_model("other", &affine_text(9.0)).unwrap(), 1);
+
+    let entries = c.list_models().unwrap();
+    assert_eq!(entries.len(), 2);
+    let m = entries.iter().find(|e| e.key == "m").unwrap();
+    assert_eq!((m.live_version, m.n_versions, m.swaps), (2, 2, 1));
+
+    let info = c.info().unwrap();
+    assert_eq!(info.models, 2, "distinct live keys");
+    assert_eq!(info.model_swaps, 1);
+
+    // Device stats appear once something actually executes.
+    c.put_tensor("x", &Tensor::from_f32(&[2], vec![1.0, 2.0]).unwrap()).unwrap();
+    c.run_model("m", &["x".into()], &["y".into()], Device::Gpu(2)).unwrap();
+    let stats = c.model_stats().unwrap();
+    let gpu2 = stats
+        .iter()
+        .find(|s| s.device == Device::Gpu(2))
+        .expect("gpu2 row present after execution");
+    assert!(gpu2.executions >= 1);
+    assert!(gpu2.eval_count >= 1);
+}
+
+#[test]
+fn pinned_versions_survive_swaps() {
+    let server = DbServer::start(ServerConfig::default()).unwrap();
+    let mut c = Client::connect(server.addr).unwrap();
+    c.put_model("m", &affine_text(10.0)).unwrap();
+    c.put_model("m", &affine_text(20.0)).unwrap();
+    c.put_tensor("x", &Tensor::from_f32(&[1], vec![1.0]).unwrap()).unwrap();
+
+    c.run_model_version("m", 1, &["x".into()], &["y1".into()], Device::Cpu).unwrap();
+    assert_eq!(c.get_tensor("y1").unwrap().to_f32().unwrap(), vec![11.0]);
+
+    c.run_model("m", &["x".into()], &["y".into()], Device::Cpu).unwrap();
+    assert_eq!(c.get_tensor("y").unwrap().to_f32().unwrap(), vec![21.0]);
+
+    let err = c
+        .run_model_version("m", 3, &["x".into()], &["z".into()], Device::Cpu)
+        .unwrap_err();
+    assert!(err.to_string().contains("model not found"), "{err}");
+}
+
+/// The acceptance gate: a publisher hot-swaps new versions while clients
+/// hammer the live model.  Every call must succeed and every output must be
+/// consistent with exactly one published version — never torn between two.
+#[test]
+fn hot_swap_race_never_tears_or_fails() {
+    const WORKERS: usize = 4;
+    const ITERS: usize = 25;
+    const LAST_VERSION: u64 = 8;
+
+    let server = DbServer::start(ServerConfig::default()).unwrap();
+    let addr = server.addr;
+    {
+        let mut c = Client::connect(addr).unwrap();
+        c.put_model("m", &affine_text(1.0)).unwrap();
+    }
+
+    let done = Arc::new(AtomicBool::new(false));
+    let publisher = {
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            for v in 2..=LAST_VERSION {
+                let got = c.put_model("m", &affine_text(v as f64)).unwrap();
+                assert_eq!(got, v, "publishes serialize, versions stay monotonic");
+                std::thread::sleep(Duration::from_millis(3));
+            }
+            done.store(true, Ordering::Relaxed);
+        })
+    };
+
+    let mut workers = Vec::new();
+    for w in 0..WORKERS {
+        workers.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            for it in 0..ITERS {
+                let base = (w * 1000 + it) as f32;
+                let x: Vec<f32> = (0..8).map(|i| base + i as f32).collect();
+                let ik = format!("in_{w}_{it}");
+                let ok = format!("out_{w}_{it}");
+                c.put_tensor(&ik, &Tensor::from_f32(&[8], x.clone()).unwrap()).unwrap();
+                c.run_model("m", &[ik], &[ok.clone()], Device::Gpu(w % 4)).unwrap();
+                let y = c.get_tensor(&ok).unwrap().to_f32().unwrap();
+                // Recover the version from element 0, then demand every
+                // element agree with that same version.  All values here
+                // are small integers, exact in f32.
+                let v0 = y[0] - x[0];
+                assert!(
+                    (1.0..=LAST_VERSION as f32).contains(&v0) && v0.fract() == 0.0,
+                    "output from a version never published: offset {v0}"
+                );
+                for (i, (yi, xi)) in y.iter().zip(&x).enumerate() {
+                    assert_eq!(
+                        yi - xi,
+                        v0,
+                        "torn output at element {i}: versions mixed within one call"
+                    );
+                }
+            }
+        }));
+    }
+    for h in workers {
+        h.join().expect("no run_model call may fail during hot swaps");
+    }
+    publisher.join().unwrap();
+    assert!(done.load(Ordering::Relaxed));
+
+    let mut c = Client::connect(addr).unwrap();
+    let entries = c.list_models().unwrap();
+    assert_eq!(entries[0].live_version, LAST_VERSION);
+    assert_eq!(entries[0].swaps, LAST_VERSION - 1);
+    assert_eq!(
+        entries[0].executions,
+        (WORKERS * ITERS) as u64,
+        "every call executed exactly once somewhere"
+    );
+    assert_eq!(c.info().unwrap().model_swaps, LAST_VERSION - 1);
+}
+
+/// Concurrent same-(key, version, device) calls coalesce into stacked
+/// executions behind the batching window, and every caller still gets its
+/// own correct slice back.
+#[test]
+fn concurrent_calls_coalesce_into_batches() {
+    const CALLERS: usize = 8;
+    let exec = Executor::new().unwrap();
+    let models = ModelRuntime::with_batcher(
+        exec,
+        BatcherConfig {
+            window: Duration::from_millis(80),
+            max_batch: 32,
+            // A huge burst threshold makes every arrival after the first
+            // count as a burst — deterministic coalescing in a test.
+            adapt_arrival: Duration::from_secs(600),
+        },
+    );
+    let server =
+        DbServer::start_with(ServerConfig::default(), Some(Arc::new(models))).unwrap();
+    let addr = server.addr;
+    {
+        let mut c = Client::connect(addr).unwrap();
+        c.put_model("m", &affine_text(5.0)).unwrap();
+        // Prime the lane so the storm below arrives as a burst.
+        c.put_tensor("warm", &Tensor::from_f32(&[1], vec![0.0]).unwrap()).unwrap();
+        c.run_model("m", &["warm".into()], &["warm_out".into()], Device::Gpu(0)).unwrap();
+    }
+
+    let barrier = Arc::new(Barrier::new(CALLERS));
+    let mut handles = Vec::new();
+    for w in 0..CALLERS {
+        let barrier = Arc::clone(&barrier);
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let x = vec![w as f32, w as f32 + 0.5];
+            let ik = format!("b_in_{w}");
+            let ok = format!("b_out_{w}");
+            c.put_tensor(&ik, &Tensor::from_f32(&[2], x.clone()).unwrap()).unwrap();
+            barrier.wait();
+            c.run_model("m", &[ik], &[ok.clone()], Device::Gpu(0)).unwrap();
+            let y = c.get_tensor(&ok).unwrap().to_f32().unwrap();
+            assert_eq!(y, vec![x[0] + 5.0, x[1] + 5.0], "de-stacked slice");
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let mut c = Client::connect(addr).unwrap();
+    let info = c.info().unwrap();
+    assert!(info.batches >= 1, "storm produced no coalesced batch");
+    assert!(
+        info.batched_requests >= 2,
+        "coalesced batches must cover >1 request (got {})",
+        info.batched_requests
+    );
+    // Stacking reduces backend executions below the request count.
+    let entries = c.list_models().unwrap();
+    let total_requests = 1 + CALLERS as u64; // warmup + storm
+    assert!(
+        entries[0].executions < total_requests,
+        "stacking saved executions: {} backend runs for {} requests",
+        entries[0].executions,
+        total_requests
+    );
+}
+
+#[test]
+fn cluster_publish_degrades_partially_and_keeps_serving() {
+    let mut servers: Vec<DbServer> =
+        (0..3).map(|_| DbServer::start(ServerConfig::default()).unwrap()).collect();
+    let addrs: Vec<_> = servers.iter().map(|s| s.addr).collect();
+    let mut c = ClusterClient::connect(&addrs).unwrap();
+
+    assert_eq!(c.put_model("m", &affine_text(3.0)).unwrap(), 1);
+    assert!(c.shard_errors().is_empty());
+
+    // Inference routes through the cluster too.
+    c.put_tensor("cx", &Tensor::from_f32(&[2], vec![1.0, 2.0]).unwrap()).unwrap();
+    c.run_model("m", &["cx".into()], &["cy".into()], Device::Gpu(1)).unwrap();
+    assert_eq!(c.get_tensor("cy").unwrap().to_f32().unwrap(), vec![4.0, 5.0]);
+
+    // Kill one shard: publishing degrades instead of failing, reports the
+    // dead shard, and counts the partial op.
+    servers[1].simulate_crash();
+    let v2 = c.put_model("m", &affine_text(4.0)).unwrap();
+    assert_eq!(v2, 2, "surviving shards advanced to version 2");
+    assert!(!c.shard_errors().is_empty(), "dead shard reported per-shard");
+    let info = c.info().unwrap();
+    assert!(info.degraded_ops >= 1, "partial publish counted as degraded");
+
+    // The merged registry view reflects the surviving shards.
+    let entries = c.list_models().unwrap();
+    assert_eq!(entries.len(), 1);
+    assert_eq!(entries[0].live_version, 2);
+}
+
+#[test]
+fn serving_ops_without_runtime_are_empty_not_errors() {
+    let server =
+        DbServer::start(ServerConfig { with_models: false, ..Default::default() }).unwrap();
+    let mut c = Client::connect(server.addr).unwrap();
+    assert!(c.list_models().unwrap().is_empty());
+    assert!(c.model_stats().unwrap().is_empty());
+    let err = c.put_model("m", &affine_text(1.0)).unwrap_err();
+    assert!(err.to_string().contains("disabled"), "{err}");
+}
