@@ -70,6 +70,7 @@ pub mod backpressure;
 
 pub use backpressure::{GovernorConfig, GovernorStats, PublishGovernor, RetryClass, RetryPolicy};
 
+use std::collections::HashMap;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpStream};
 use std::sync::Arc;
@@ -79,7 +80,7 @@ use crate::db::cluster::SlotMap;
 use crate::db::store::RetentionConfig;
 use crate::error::{Error, Result};
 use crate::proto::frame::{
-    begin_split_frame, end_split_frame, read_frame, FrameSink, MID_FRAME_TIMEOUT_MSG,
+    begin_split_frame, end_split_frame, read_frame_into_tagged, FrameSink, MID_FRAME_TIMEOUT_MSG,
 };
 use crate::proto::{message, DbInfo, Device, Request, Response};
 use crate::tensor::{Bytes, Tensor};
@@ -393,12 +394,25 @@ pub trait DataStore {
 pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// A connection to one database instance.
+///
+/// Besides the strict request/response [`DataStore`] surface, a client can
+/// **multiplex**: [`Client::send_tagged`] puts a request on the wire with a
+/// unique tag and returns immediately; [`Client::recv_tagged`] collects its
+/// reply whenever it arrives, stashing out-of-order replies for their own
+/// `recv_tagged` calls.  Many requests can be in flight on one socket —
+/// replies pair by tag, not arrival order.
 pub struct Client {
     reader: BufReader<FaultStream>,
     writer: FaultStream,
     buf: Vec<u8>,
     pub addr: SocketAddr,
     io_timeout: Option<Duration>,
+    /// Last tag handed out by [`Client::send_tagged`] (0 is reserved for
+    /// untagged frames and never allocated).
+    next_tag: u32,
+    /// Tagged replies read off the socket while waiting for a different
+    /// tag, held for their `recv_tagged` calls.
+    pending: HashMap<u32, Response>,
 }
 
 impl Client {
@@ -433,6 +447,8 @@ impl Client {
             buf: Vec::with_capacity(64 * 1024),
             addr,
             io_timeout,
+            next_tag: 0,
+            pending: HashMap::new(),
         })
     }
 
@@ -467,12 +483,16 @@ impl Client {
         Err(last.unwrap_or_else(|| Error::Invalid("connect_retry with 0 tries".into())))
     }
 
-    /// Read one response frame and decode it sharing the frame body — a
-    /// tensor reply's payload (every tensor in a batch reply) aliases the
-    /// freshly-read buffer (zero copy).
-    fn read_response(&mut self) -> Result<Response> {
-        match read_frame(&mut self.reader) {
-            Ok(Some(body)) => Response::decode_shared(&Bytes::from_vec(body)),
+    /// Read one reply frame (tagged or legacy) and decode it sharing the
+    /// frame body — a tensor reply's payload (every tensor in a batch
+    /// reply) aliases the freshly-read buffer (zero copy).  Returns the
+    /// frame's tag (0 for legacy untagged frames) alongside the response.
+    fn read_any_reply(&mut self) -> Result<(u32, Response)> {
+        let mut body = Vec::new();
+        match read_frame_into_tagged(&mut self.reader, &mut body) {
+            Ok(Some((tag, _len))) => {
+                Ok((tag, Response::decode_shared(&Bytes::from_vec(body))?))
+            }
             Ok(None) => Err(Error::Io(std::io::Error::new(
                 std::io::ErrorKind::UnexpectedEof,
                 "server closed connection",
@@ -487,6 +507,22 @@ impl Client {
                 )))
             }
             Err(e) => Err(e),
+        }
+    }
+
+    /// Read the next *untagged* response.  Tagged replies that arrive
+    /// first (possible when [`Client::send_tagged`] requests are still in
+    /// flight) are stashed for their own [`Client::recv_tagged`] calls.
+    fn read_response(&mut self) -> Result<Response> {
+        if let Some(resp) = self.pending.remove(&0) {
+            return Ok(resp);
+        }
+        loop {
+            let (tag, resp) = self.read_any_reply()?;
+            if tag == 0 {
+                return Ok(resp);
+            }
+            self.pending.insert(tag, resp);
         }
     }
 
@@ -522,6 +558,77 @@ impl Client {
         }
         sink.finish()?;
         self.read_response()?.expect_batch(reqs.len())
+    }
+
+    /// Put `req` on the wire as a **tagged** frame and return its tag
+    /// without waiting for the reply.  Any number of tagged requests may
+    /// be in flight on this connection at once; the server dispatches
+    /// them concurrently and replies in completion order — collect each
+    /// reply with [`Client::recv_tagged`].  Tensor payloads are streamed
+    /// from their owning buffers exactly like the blocking paths.
+    pub fn send_tagged(&mut self, req: &Request) -> Result<u32> {
+        self.next_tag = self.next_tag.wrapping_add(1);
+        if self.next_tag == 0 {
+            self.next_tag = 1;
+        }
+        let tag = self.next_tag;
+        let body = req.body_wire_size();
+        let mut sink = FrameSink::begin_tagged(&mut self.writer, &mut self.buf, tag, body)?;
+        match req {
+            Request::PutTensor { key, tensor } => {
+                sink.encode_with(|b| message::encode_put_tensor_header_into(b, key, tensor))?;
+                sink.write(&tensor.data)?;
+            }
+            Request::Batch(entries) => {
+                check_batch_len(entries.len())?;
+                sink.encode_with(|b| {
+                    message::encode_batch_request_header_into(b, entries.len())
+                })?;
+                for r in entries {
+                    match r {
+                        Request::PutTensor { key, tensor } => {
+                            sink.encode_with(|b| {
+                                message::encode_put_tensor_header_into(b, key, tensor)
+                            })?;
+                            sink.write(&tensor.data)?;
+                        }
+                        other => sink.encode_with(|b| other.encode(b))?,
+                    }
+                }
+            }
+            other => sink.encode_with(|b| other.encode(b))?,
+        }
+        sink.finish()?;
+        Ok(tag)
+    }
+
+    /// Block until the reply for `tag` arrives.  Replies for *other* tags
+    /// read along the way are stashed and handed out when their tag is
+    /// asked for — so callers may collect in-flight requests in any
+    /// order, independent of the order the server finished them in.
+    pub fn recv_tagged(&mut self, tag: u32) -> Result<Response> {
+        if let Some(resp) = self.pending.remove(&tag) {
+            return Ok(resp);
+        }
+        loop {
+            let (got, resp) = self.read_any_reply()?;
+            if got == tag {
+                return Ok(resp);
+            }
+            self.pending.insert(got, resp);
+        }
+    }
+
+    /// Send every request tagged back-to-back, then collect the replies —
+    /// one round of socket writes followed by one round of reads, with
+    /// the server free to work on all of them concurrently.  Results come
+    /// back in *request* order regardless of completion order.
+    pub fn call_pipelined(&mut self, reqs: &[Request]) -> Result<Vec<Response>> {
+        let tags = reqs
+            .iter()
+            .map(|r| self.send_tagged(r))
+            .collect::<Result<Vec<u32>>>()?;
+        tags.into_iter().map(|t| self.recv_tagged(t)).collect()
     }
 }
 

@@ -1,0 +1,379 @@
+//! Readiness polling for the event-driven server core.
+//!
+//! A thin, dependency-free wrapper over the OS readiness API: `epoll` on
+//! Linux (level-triggered), `poll(2)` on other unix targets.  The server's
+//! reactor registers every connection socket plus a self-wake pipe and
+//! sleeps in [`Poller::wait`] until something is actually ready — an idle
+//! server makes **zero** wakeups, where the old thread-per-connection core
+//! woke every connection once per `conn_read_timeout` just to re-check the
+//! stop flag.
+//!
+//! The FFI is hand-rolled (no `libc` crate in the dependency tree): `std`
+//! already links the platform C library, so declaring the four syscall
+//! entry points is enough.
+//!
+//! [`Waker`]/[`WakeReceiver`] are the cross-thread doorbell: executor
+//! threads and the poll hub complete work by pushing to a queue and
+//! ringing the waker, which the reactor has registered like any other
+//! readable fd.
+
+use std::io::{self, Read, Write};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+/// One readiness event: which registration fired and how.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Error or hangup on the fd — the owner should read to EOF/error and
+    /// close.  May accompany `readable`.
+    pub hangup: bool,
+}
+
+pub use imp::Poller;
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::Event;
+    use std::io;
+    use std::os::raw::c_int;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    /// Peer shut down its write half; surfaces hangups even while read
+    /// interest is paused for backpressure.
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    fn cvt(r: c_int) -> io::Result<c_int> {
+        if r < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(r)
+        }
+    }
+
+    fn mask(read: bool, write: bool) -> u32 {
+        let mut m = EPOLLRDHUP;
+        if read {
+            m |= EPOLLIN;
+        }
+        if write {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    /// Level-triggered epoll instance.  Owned by the reactor thread; all
+    /// methods take `&mut self`.
+    pub struct Poller {
+        epfd: c_int,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let epfd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+            Ok(Poller { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 1024] })
+        }
+
+        fn ctl(&mut self, op: c_int, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+            let mut ev = EpollEvent { events, data: token };
+            cvt(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) })?;
+            Ok(())
+        }
+
+        pub fn register(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, mask(read, write), token)
+        }
+
+        pub fn rearm(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, mask(read, write), token)
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        /// Block until readiness or `timeout` (`None` = forever), appending
+        /// events to `out`.  A signal interruption returns with no events.
+        pub fn wait(&mut self, timeout: Option<Duration>, out: &mut Vec<Event>) -> io::Result<()> {
+            let ms: c_int = match timeout {
+                None => -1,
+                Some(d) if d.is_zero() => 0,
+                // Round up so a 500µs deadline can't busy-spin at 0ms.
+                Some(d) => d.as_millis().saturating_add(1).min(c_int::MAX as u128) as c_int,
+            };
+            let n = match cvt(unsafe {
+                epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as c_int, ms)
+            }) {
+                Ok(n) => n as usize,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => 0,
+                Err(e) => return Err(e),
+            };
+            for ev in self.buf.iter().take(n).copied() {
+                // Copy the packed fields out by value (no references into a
+                // potentially unaligned struct).
+                let events = ev.events;
+                let token = ev.data;
+                out.push(Event {
+                    token,
+                    readable: events & EPOLLIN != 0,
+                    writable: events & EPOLLOUT != 0,
+                    hangup: events & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod imp {
+    use super::Event;
+    use std::collections::HashMap;
+    use std::io;
+    use std::os::raw::{c_int, c_short, c_uint};
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    const POLLIN: c_short = 0x001;
+    const POLLOUT: c_short = 0x004;
+    const POLLERR: c_short = 0x008;
+    const POLLHUP: c_short = 0x010;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    extern "C" {
+        // `nfds_t` is `unsigned int` on the BSDs/macOS, the only targets
+        // that reach this fallback (Linux uses the epoll backend).
+        fn poll(fds: *mut PollFd, nfds: c_uint, timeout: c_int) -> c_int;
+    }
+
+    /// `poll(2)` fallback: rebuilds the fd array per wait from an interest
+    /// map.  O(n) per wakeup, which is fine for the non-Linux dev loop.
+    pub struct Poller {
+        interest: HashMap<RawFd, (u64, bool, bool)>,
+        fds: Vec<PollFd>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { interest: HashMap::new(), fds: Vec::new() })
+        }
+
+        pub fn register(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.interest.insert(fd, (token, read, write));
+            Ok(())
+        }
+
+        pub fn rearm(&mut self, fd: RawFd, token: u64, read: bool, write: bool) -> io::Result<()> {
+            self.interest.insert(fd, (token, read, write));
+            Ok(())
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.interest.remove(&fd);
+            Ok(())
+        }
+
+        pub fn wait(&mut self, timeout: Option<Duration>, out: &mut Vec<Event>) -> io::Result<()> {
+            self.fds.clear();
+            for (&fd, &(_, read, write)) in &self.interest {
+                let mut events = 0;
+                if read {
+                    events |= POLLIN;
+                }
+                if write {
+                    events |= POLLOUT;
+                }
+                self.fds.push(PollFd { fd, events, revents: 0 });
+            }
+            let ms: c_int = match timeout {
+                None => -1,
+                Some(d) if d.is_zero() => 0,
+                Some(d) => d.as_millis().saturating_add(1).min(c_int::MAX as u128) as c_int,
+            };
+            let n = unsafe { poll(self.fds.as_mut_ptr(), self.fds.len() as c_uint, ms) };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for pfd in &self.fds {
+                if pfd.revents == 0 {
+                    continue;
+                }
+                let (token, _, _) = self.interest[&pfd.fd];
+                out.push(Event {
+                    token,
+                    readable: pfd.revents & POLLIN != 0,
+                    writable: pfd.revents & POLLOUT != 0,
+                    hangup: pfd.revents & (POLLERR | POLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Write half of the reactor's self-wake pipe.  Cheap, clonable via `Arc`,
+/// callable from any thread; coalesces (a full pipe means a wake is already
+/// pending, so `WouldBlock` is ignored).
+#[derive(Debug)]
+pub struct Waker {
+    tx: UnixStream,
+}
+
+impl Waker {
+    pub fn wake(&self) {
+        let _ = (&self.tx).write(&[1u8]);
+    }
+}
+
+/// Read half of the self-wake pipe; the reactor registers its fd and drains
+/// it whenever it fires.
+#[derive(Debug)]
+pub struct WakeReceiver {
+    rx: UnixStream,
+}
+
+impl WakeReceiver {
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        while matches!((&self.rx).read(&mut buf), Ok(n) if n > 0) {}
+    }
+}
+
+impl AsRawFd for WakeReceiver {
+    fn as_raw_fd(&self) -> RawFd {
+        self.rx.as_raw_fd()
+    }
+}
+
+/// Build a connected waker pair, both ends nonblocking.
+pub fn waker() -> io::Result<(Waker, WakeReceiver)> {
+    let (tx, rx) = UnixStream::pair()?;
+    tx.set_nonblocking(true)?;
+    rx.set_nonblocking(true)?;
+    Ok((Waker { tx }, WakeReceiver { rx }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn waker_fires_readiness_and_drains() {
+        let (wake, recv) = waker().unwrap();
+        let mut poller = Poller::new().unwrap();
+        poller.register(recv.as_raw_fd(), 42, true, false).unwrap();
+
+        let mut events = Vec::new();
+        poller.wait(Some(Duration::from_millis(1)), &mut events).unwrap();
+        assert!(events.is_empty(), "no events before wake");
+
+        wake.wake();
+        wake.wake(); // coalesces
+        poller.wait(Some(Duration::from_millis(500)), &mut events).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 42);
+        assert!(events[0].readable);
+
+        recv.drain();
+        events.clear();
+        poller.wait(Some(Duration::from_millis(1)), &mut events).unwrap();
+        assert!(events.is_empty(), "drained pipe is quiet again");
+    }
+
+    #[test]
+    fn write_interest_toggles_via_rearm() {
+        let (a, b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        let mut poller = Poller::new().unwrap();
+        // Read-only interest on an always-writable socket: no events.
+        poller.register(a.as_raw_fd(), 1, true, false).unwrap();
+        let mut events = Vec::new();
+        poller.wait(Some(Duration::from_millis(1)), &mut events).unwrap();
+        assert!(events.is_empty());
+        // Arm write interest: fires immediately (buffer has room).
+        poller.rearm(a.as_raw_fd(), 1, true, true).unwrap();
+        poller.wait(Some(Duration::from_millis(500)), &mut events).unwrap();
+        assert!(events.iter().any(|e| e.token == 1 && e.writable));
+        poller.deregister(a.as_raw_fd()).unwrap();
+        drop(b);
+    }
+
+    #[test]
+    fn timed_wait_returns_near_deadline_not_after() {
+        let (_a, b) = UnixStream::pair().unwrap();
+        let mut poller = Poller::new().unwrap();
+        poller.register(b.as_raw_fd(), 9, true, false).unwrap();
+        let start = Instant::now();
+        let mut events = Vec::new();
+        poller.wait(Some(Duration::from_millis(30)), &mut events).unwrap();
+        let waited = start.elapsed();
+        assert!(events.is_empty());
+        assert!(waited >= Duration::from_millis(25), "slept close to the deadline: {waited:?}");
+        assert!(waited < Duration::from_secs(2), "did not oversleep: {waited:?}");
+    }
+}

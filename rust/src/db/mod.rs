@@ -7,8 +7,12 @@
 //! * [`engine`] — the two execution disciplines reproduced from the paper's
 //!   Redis-vs-KeyDB comparison: a single serialized command thread fed by
 //!   I/O threads (redis) vs fully sharded multi-threaded execution (keydb).
-//! * [`server`] — TCP server speaking [`crate::proto`]; one thread per
-//!   connection (one SmartRedis client per simulation rank in the paper).
+//! * [`server`] — TCP server speaking [`crate::proto`]; a readiness-driven
+//!   reactor multiplexes every connection (one SmartRedis client per
+//!   simulation rank in the paper) over one event loop, with a small
+//!   engine-sized executor pool and a timer hub for parked waits.
+//! * [`event`] — dependency-free epoll/poll readiness wrapper backing the
+//!   server's event loop.
 //! * [`cluster`] — redis-cluster-style hash-slot sharding used by the
 //!   *clustered* deployment (Fig 2, right panels; Fig 5b sharded DB).
 
@@ -18,6 +22,7 @@
 
 pub mod cluster;
 pub mod engine;
+pub mod event;
 pub mod server;
 pub mod spill;
 pub mod store;

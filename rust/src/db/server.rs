@@ -1,66 +1,112 @@
 //! TCP database server: accepts SmartRedis-analogue clients and executes
 //! commands against the node-local [`Store`] and [`crate::ai::ModelRuntime`].
 //!
-//! Threading model mirrors the engines being reproduced: a reader thread per
-//! connection (redis io-threads / keydb server threads) with command
-//! execution passing through the engine's [`CommandGate`].
+//! # Threading model
 //!
-//! The request path is zero-copy for tensor payloads: `put_tensor` frames
-//! are handed to the store wholesale (the stored tensor is a view into the
-//! frame read off the socket) and tensor replies — bare or inside a
-//! `Batch`/`MGetTensors` reply — are streamed through a
-//! [`crate::proto::frame::FrameSink`] that writes each payload straight
-//! from the store's shared buffer.
+//! The core is readiness-driven, not thread-per-connection:
 //!
-//! Pipelined commands (`Batch`) execute in order with the command gate taken
-//! per entry, and `PollKeys` waits in the connection thread with capped
-//! exponential backoff, re-entering the gate per probe — so a blocked
-//! consumer never stalls producers on other connections.
+//! * **One reactor thread** owns the listener, every connection socket and
+//!   an epoll-style [`Poller`] (see [`crate::db::event`]).  It accepts,
+//!   reads frames, writes replies, and sleeps until the OS reports
+//!   readiness — an idle server (and every idle connection) costs zero
+//!   wakeups, where the previous design woke each connection thread once
+//!   per `conn_read_timeout` just to re-check the stop flag.
+//! * **A small executor pool** (`engine.exec_threads(cores)`, clamped to
+//!   16) runs decoded commands through the engine's [`CommandGate`].  The
+//!   Redis engine keeps its single-executor semantics; KeyDb gets one
+//!   executor per configured core.
+//! * **One poll-hub timer thread** owns parked `PollKeys` waits and the
+//!   background TTL sweeper.  A poll that misses its first probe parks as
+//!   a timer-driven waiter instead of sleeping an OS thread, and is
+//!   re-probed with the same capped exponential backoff as before.
+//!
+//! # Multiplexing
+//!
+//! Frames may carry a request tag (see [`crate::proto::frame`]): one
+//! socket carries many in-flight tagged requests whose replies return in
+//! completion order, each echoing its tag — no head-of-line blocking.
+//! Untagged (tag 0) frames are the legacy wire format and keep legacy
+//! semantics: at most one executes at a time per connection and replies
+//! stay in request order, so old clients — including ones that pipeline
+//! several untagged frames back-to-back — round-trip unchanged.
+//!
+//! The request path is zero-copy for tensor payloads in both directions:
+//! `put_tensor` bodies are read into a right-sized buffer handed to the
+//! store wholesale (the stored tensor is a view into the frame read off
+//! the socket), and large tensor replies are queued as refcounted views
+//! of the store's own buffers rather than copied into the outbox.
+//!
+//! Pipelined commands (`Batch`) execute in order with the command gate
+//! taken per entry.  `PollKeys` entries inside a batch share the batch's
+//! start time as their deadline base, so a batch waits at most the *max*
+//! of its poll budgets, never the sum.
 //!
 //! Memory governance: each server applies its [`ServerConfig::retention`]
 //! policy to the store at startup (sliding-window generation retirement
 //! plus a byte cap with `busy` backpressure — see [`crate::db::store`]),
-//! and clients can adjust it at runtime with `Request::Retention`.
-//! Eviction and high-water counters are reported through `INFO`.
+//! and clients can adjust it at runtime with `Request::Retention`.  A TTL
+//! policy arms the hub's background sweeper (period `ttl/4`, clamped to
+//! 10 ms..1 s) so stalled producers are reclaimed on time rather than
+//! only on generation boundaries or `INFO`.  Eviction and high-water
+//! counters are reported through `INFO`.
 
-use std::io::BufReader;
-use std::net::{SocketAddr, TcpListener};
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::ai::ModelRuntime;
 use crate::db::engine::{CommandGate, Engine};
+use crate::db::event::{waker, Event, Poller, WakeReceiver, Waker};
 use crate::db::spill::SpillConfig;
 use crate::db::store::{RetentionConfig, Store};
 use crate::error::{Error, Result};
-use crate::proto::frame::{read_frame_into, FrameSink};
-use crate::proto::{message, DbInfo, Request, Response};
+use crate::proto::frame::FRAME_TAG_FLAG;
+use crate::proto::{message, DbInfo, Request, Response, MAX_FRAME};
 use crate::runtime::Executor;
 use crate::tensor::Bytes;
-use crate::util::fault::{ConnStream, FaultPlan, FaultStream};
+use crate::util::fault::{FaultPlan, FaultStream};
 
-/// Default ceiling for the accept loop's adaptive idle backoff.  Tradeoff:
-/// a larger value means fewer idle wakeups but up to this much extra
-/// latency both for the first `accept` after an idle period and for
-/// `shutdown()` joining the accept thread.  Configurable per server via
-/// [`ServerConfig::accept_backoff_max`].
+/// Historical accept-backoff ceiling, kept as the default for the
+/// (now vestigial) [`ServerConfig::accept_backoff_max`] knob.  Accepts are
+/// readiness-driven — there is no backoff ladder to configure anymore —
+/// but existing callers still set the field, so it stays in the config.
 const ACCEPT_BACKOFF_MAX: Duration = Duration::from_millis(50);
 
-/// Floor the accept backoff restarts from after any successful accept.
-const ACCEPT_BACKOFF_MIN: Duration = Duration::from_millis(1);
-
-/// Default read timeout on connection sockets.  Its only purpose is
-/// bounding how long an idle connection thread takes to notice the stop
-/// flag, so it is deliberately long: 1 s cuts idle wakeups 5x versus the
-/// previous 200 ms, at the cost of up to 1 s of shutdown latency per
-/// (detached) connection thread.  `shutdown()` does not join connection
-/// threads, so this latency only delays socket teardown, never the caller.
-/// Tests that start and stop many servers lower it via
+/// Default mid-frame stall deadline on connection sockets.  With the
+/// event loop, an *idle* connection costs nothing regardless of this
+/// value; it only bounds how long a connection may sit on a partially
+/// received frame (a stalled or byte-dribbling peer) before the server
+/// reclaims it.  Tests that exercise teardown latency lower it via
 /// [`ServerConfig::conn_read_timeout`].
 const CONN_READ_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// Staging-buffer refill size for connection reads.
+const READ_CHUNK: usize = 64 * 1024;
+
+/// Per-connection cap on dispatched-but-unanswered requests.  At the cap
+/// the reactor stops reading that socket (drops read interest) until
+/// completions drain — backpressure instead of unbounded queueing.
+const MAX_IN_FLIGHT: usize = 1024;
+
+/// Tensor payloads at or above this size are queued for write as
+/// refcounted views of the store's buffer instead of being copied into
+/// the coalesced outbox segment.
+const SEG_SHARED_MIN: usize = 32 * 1024;
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Initial probe interval floor and backoff ceiling for server-side
+/// `PollKeys` waits, applied to whatever the client requested.
+const POLL_INTERVAL_FLOOR: Duration = Duration::from_micros(50);
+const POLL_INTERVAL_CEIL: Duration = Duration::from_millis(250);
 
 /// Server configuration (one database instance; the clustered deployment
 /// launches several of these and routes with [`crate::db::cluster`]).
@@ -70,8 +116,8 @@ pub struct ServerConfig {
     pub addr: SocketAddr,
     pub engine: Engine,
     /// Logical cores assigned to the DB (the Fig-3 knob).  Recorded in INFO
-    /// and used to parameterize the engine model; the real thread count is
-    /// connection-driven.
+    /// and used to parameterize the engine model; it also sizes the KeyDb
+    /// executor pool.
     pub cores: usize,
     /// Enable the model runtime (needs a PJRT executor thread).  Data-only
     /// benches turn this off to skip PJRT startup.
@@ -86,12 +132,14 @@ pub struct ServerConfig {
     /// not adjustable over the wire.  `None` (the default) discards
     /// evicted data, the pre-spill behavior.
     pub spill: Option<SpillConfig>,
-    /// Read timeout on connection sockets — bounds how long an idle
-    /// connection thread takes to notice shutdown (defaults documented on
-    /// `CONN_READ_TIMEOUT`).
+    /// Mid-frame stall deadline: how long a connection may hold a
+    /// partially received frame without progress before the server drops
+    /// it.  Idle connections (no partial frame) are exempt and cost zero
+    /// wakeups (defaults documented on `CONN_READ_TIMEOUT`).
     pub conn_read_timeout: Duration,
-    /// Ceiling for the accept loop's adaptive idle backoff — bounds both
-    /// idle-accept latency and `shutdown()` joining the accept thread.
+    /// Vestigial: the accept path is readiness-driven and no longer backs
+    /// off.  Retained so existing configs keep compiling; the value is
+    /// ignored.
     pub accept_backoff_max: Duration,
     /// Optional seeded fault schedule: every accepted connection is served
     /// through a [`FaultStream`] drawing decisions from this plan (see
@@ -116,13 +164,964 @@ impl Default for ServerConfig {
     }
 }
 
+/// Identifies one in-flight request: connection token + request tag.
+#[derive(Debug, Clone, Copy)]
+struct Ticket {
+    token: u64,
+    tag: u32,
+}
+
+/// A finished request on its way back to the reactor.
+struct Completion {
+    ticket: Ticket,
+    resp: Response,
+}
+
+/// State shared between the reactor, executors and the poll hub.
+struct Shared {
+    completions: Mutex<Vec<Completion>>,
+    waker: Waker,
+    stop: AtomicBool,
+}
+
+impl Shared {
+    fn complete(&self, ticket: Ticket, resp: Response) {
+        self.completions.lock().unwrap().push(Completion { ticket, resp });
+        self.waker.wake();
+    }
+}
+
+/// Work dispatched from the reactor (or resumed from the poll hub) to the
+/// executor pool.
+enum Job {
+    Request { ticket: Ticket, req: Request },
+    /// A batch whose in-progress `PollKeys` entry just resolved; push the
+    /// poll's result and keep executing the remaining entries.
+    Resume { ticket: Ticket, cont: BatchCont, poll_result: bool },
+}
+
+/// Progress through a `Request::Batch` that parked on a poll entry.
+struct BatchCont {
+    rest: std::vec::IntoIter<Request>,
+    done: Vec<Response>,
+    /// Batch start: every poll entry's deadline is measured from here, so
+    /// a batch waits at most the max of its entries' budgets, not the sum.
+    start: Instant,
+}
+
+/// A `PollKeys` wait whose first probe missed: parked with the hub as a
+/// timer-driven waiter instead of occupying a thread.
+struct Park {
+    keys: Vec<String>,
+    deadline: Instant,
+    interval: Duration,
+    cap: Duration,
+    batch: Option<BatchCont>,
+}
+
+enum Exec {
+    Done(Response),
+    Park(Park),
+}
+
+/// Closable MPMC job queue feeding the executor pool.
+struct JobQueue {
+    q: Mutex<(VecDeque<Job>, bool)>,
+    cv: Condvar,
+}
+
+impl JobQueue {
+    fn new() -> JobQueue {
+        JobQueue { q: Mutex::new((VecDeque::new(), false)), cv: Condvar::new() }
+    }
+
+    fn push(&self, job: Job) {
+        let mut g = self.q.lock().unwrap();
+        if g.1 {
+            return; // closed during teardown: drop late work
+        }
+        g.0.push_back(job);
+        self.cv.notify_one();
+    }
+
+    fn pop(&self) -> Option<Job> {
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(j) = g.0.pop_front() {
+                return Some(j);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        let mut g = self.q.lock().unwrap();
+        g.1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Everything an executor (or the hub) needs to run commands.
+#[derive(Clone)]
+struct ExecCtx {
+    store: Arc<Store>,
+    models: Option<Arc<ModelRuntime>>,
+    gate: Arc<CommandGate>,
+    engine: Engine,
+    shared: Arc<Shared>,
+    jobs: Arc<JobQueue>,
+    hub: Arc<PollHub>,
+}
+
+fn run_executor(ctx: ExecCtx) {
+    while let Some(job) = ctx.jobs.pop() {
+        match job {
+            Job::Request { ticket, req } => match execute_mux(req, &ctx) {
+                Exec::Done(resp) => ctx.shared.complete(ticket, resp),
+                Exec::Park(p) => ctx.hub.register(ticket, p),
+            },
+            Job::Resume { ticket, mut cont, poll_result } => {
+                cont.done.push(Response::Bool(poll_result));
+                match run_batch(cont, &ctx) {
+                    Exec::Done(resp) => ctx.shared.complete(ticket, resp),
+                    Exec::Park(p) => ctx.hub.register(ticket, p),
+                }
+            }
+        }
+    }
+}
+
+/// Execute one command, parking instead of blocking: a `PollKeys` whose
+/// keys aren't there yet returns a [`Park`] for the hub rather than
+/// sleeping the executor.
+fn execute_mux(req: Request, ctx: &ExecCtx) -> Exec {
+    match req {
+        Request::PollKeys { keys, timeout_ms, initial_us, cap_us } => {
+            match poll_once(keys, timeout_ms, initial_us, cap_us, Instant::now(), ctx) {
+                Ok(resp) => Exec::Done(resp),
+                Err(park) => Exec::Park(park),
+            }
+        }
+        Request::Batch(entries) => {
+            let n = entries.len();
+            run_batch(
+                BatchCont {
+                    rest: entries.into_iter(),
+                    done: Vec::with_capacity(n),
+                    start: Instant::now(),
+                },
+                ctx,
+            )
+        }
+        other => Exec::Done(exec_one(other, ctx)),
+    }
+}
+
+/// Run one non-poll, non-batch command under the gate.  A `Retention`
+/// command re-arms the hub's TTL sweeper afterwards so policy changes
+/// take effect on the timer immediately.
+fn exec_one(req: Request, ctx: &ExecCtx) -> Response {
+    let ttl_kick = matches!(req, Request::Retention { .. });
+    let resp = {
+        let _g = ctx.gate.enter();
+        execute(req, &ctx.store, ctx.models.as_deref(), ctx.engine)
+    };
+    if ttl_kick {
+        ctx.hub.set_ttl(ctx.store.retention().ttl());
+    }
+    resp
+}
+
+/// Probe a `PollKeys` once under the gate; park it if the keys aren't all
+/// present and the budget hasn't run out.  `start` anchors the deadline —
+/// `Instant::now()` for a bare poll, the batch start for polls inside one.
+fn poll_once(
+    keys: Vec<String>,
+    timeout_ms: u64,
+    initial_us: u64,
+    cap_us: u64,
+    start: Instant,
+    ctx: &ExecCtx,
+) -> std::result::Result<Response, Park> {
+    let present = {
+        let _g = ctx.gate.enter();
+        ctx.store.exists_all(&keys)
+    };
+    if present {
+        return Ok(Response::Bool(true));
+    }
+    // Clamp the client-controlled budget (24 h ceiling) so a hostile
+    // timeout can't overflow `Instant + Duration`.
+    let deadline = start + Duration::from_millis(timeout_ms.min(86_400_000));
+    if Instant::now() >= deadline || ctx.shared.stop.load(Ordering::Relaxed) {
+        return Ok(Response::Bool(false));
+    }
+    let interval = Duration::from_micros(initial_us).clamp(POLL_INTERVAL_FLOOR, POLL_INTERVAL_CEIL);
+    let cap = Duration::from_micros(cap_us).clamp(interval, POLL_INTERVAL_CEIL);
+    Err(Park { keys, deadline, interval, cap, batch: None })
+}
+
+/// Run a batch's remaining entries in order, taking the gate per entry (a
+/// batch is a pipeline, not a transaction).  Parks — with the continuation
+/// attached — when a poll entry has to wait.
+fn run_batch(mut cont: BatchCont, ctx: &ExecCtx) -> Exec {
+    loop {
+        let Some(entry) = cont.rest.next() else {
+            return Exec::Done(Response::Batch(cont.done));
+        };
+        match entry {
+            Request::PollKeys { keys, timeout_ms, initial_us, cap_us } => {
+                match poll_once(keys, timeout_ms, initial_us, cap_us, cont.start, ctx) {
+                    Ok(resp) => cont.done.push(resp),
+                    Err(mut park) => {
+                        park.batch = Some(cont);
+                        return Exec::Park(park);
+                    }
+                }
+            }
+            // The codec rejects nested batches on decode; defense in depth
+            // against a hand-rolled client.
+            Request::Batch(_) => cont.done.push(Response::Error("nested batch request".into())),
+            other => cont.done.push(exec_one(other, ctx)),
+        }
+    }
+}
+
+/// A parked `PollKeys` owned by the hub.
+struct Waiter {
+    ticket: Ticket,
+    keys: Vec<String>,
+    deadline: Instant,
+    interval: Duration,
+    cap: Duration,
+    next_probe: Instant,
+    batch: Option<BatchCont>,
+}
+
+struct HubState {
+    waiters: Vec<Waiter>,
+    ttl_period: Option<Duration>,
+    next_sweep: Option<Instant>,
+    stopped: bool,
+}
+
+/// Timer hub: owns parked poll waiters and the background TTL sweep.  One
+/// thread sleeps to the earliest timer; registrations and policy changes
+/// nudge it through the condvar.
+struct PollHub {
+    state: Mutex<HubState>,
+    cv: Condvar,
+}
+
+impl PollHub {
+    fn new() -> PollHub {
+        PollHub {
+            state: Mutex::new(HubState {
+                waiters: Vec::new(),
+                ttl_period: None,
+                next_sweep: None,
+                stopped: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn register(&self, ticket: Ticket, p: Park) {
+        let now = Instant::now();
+        let next_probe = now + p.interval.min(p.deadline.saturating_duration_since(now));
+        self.register_waiter(Waiter {
+            ticket,
+            keys: p.keys,
+            deadline: p.deadline,
+            interval: p.interval,
+            cap: p.cap,
+            next_probe,
+            batch: p.batch,
+        });
+    }
+
+    fn register_waiter(&self, w: Waiter) {
+        let mut s = self.state.lock().unwrap();
+        s.waiters.push(w);
+        self.cv.notify_one();
+    }
+
+    /// (Re)arm the background TTL sweeper: period `ttl/4` clamped to
+    /// 10 ms..1 s, or off when no TTL policy is active.
+    fn set_ttl(&self, ttl: Option<Duration>) {
+        let mut s = self.state.lock().unwrap();
+        match ttl {
+            Some(ttl) => {
+                let period = (ttl / 4).clamp(Duration::from_millis(10), Duration::from_secs(1));
+                s.ttl_period = Some(period);
+                s.next_sweep = Some(Instant::now() + period);
+            }
+            None => {
+                s.ttl_period = None;
+                s.next_sweep = None;
+            }
+        }
+        self.cv.notify_one();
+    }
+
+    fn stop(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.stopped = true;
+        self.cv.notify_all();
+    }
+}
+
+fn run_hub(ctx: ExecCtx) {
+    let hub = Arc::clone(&ctx.hub);
+    let mut due: Vec<Waiter> = Vec::new();
+    loop {
+        let mut sweep = false;
+        let stopping;
+        {
+            let mut s = hub.state.lock().unwrap();
+            loop {
+                if s.stopped {
+                    // Resolve every remaining waiter so no connection hangs
+                    // through shutdown.
+                    due.append(&mut s.waiters);
+                    break;
+                }
+                let now = Instant::now();
+                let mut i = 0;
+                while i < s.waiters.len() {
+                    if s.waiters[i].next_probe <= now {
+                        due.push(s.waiters.swap_remove(i));
+                    } else {
+                        i += 1;
+                    }
+                }
+                if let Some(t) = s.next_sweep {
+                    if t <= now {
+                        sweep = true;
+                        s.next_sweep = s.ttl_period.map(|p| now + p);
+                    }
+                }
+                if !due.is_empty() || sweep {
+                    break;
+                }
+                // Sleep to the earliest timer, or indefinitely if none —
+                // an idle hub makes zero wakeups.
+                let earliest = s.waiters.iter().map(|w| w.next_probe).chain(s.next_sweep).min();
+                s = match earliest {
+                    None => hub.cv.wait(s).unwrap(),
+                    Some(t) => {
+                        let now = Instant::now();
+                        if t <= now {
+                            continue;
+                        }
+                        hub.cv.wait_timeout(s, t - now).unwrap().0
+                    }
+                };
+            }
+            stopping = s.stopped;
+        }
+        // Probes and sweeps run outside the hub lock: they take the
+        // command gate and store locks.
+        if sweep {
+            ctx.store.expire_ttl();
+        }
+        for w in due.drain(..) {
+            probe_waiter(w, stopping, &ctx);
+        }
+        if stopping {
+            return;
+        }
+    }
+}
+
+/// Probe one due waiter.  Resolved waiters complete directly (bare polls)
+/// or resume their batch on the executor pool; unresolved ones re-park
+/// with doubled backoff.
+fn probe_waiter(mut w: Waiter, stopping: bool, ctx: &ExecCtx) {
+    let present = {
+        let _g = ctx.gate.enter();
+        ctx.store.exists_all(&w.keys)
+    };
+    let now = Instant::now();
+    if present || now >= w.deadline || stopping || ctx.shared.stop.load(Ordering::Relaxed) {
+        match w.batch.take() {
+            None => ctx.shared.complete(w.ticket, Response::Bool(present)),
+            Some(cont) => {
+                ctx.jobs.push(Job::Resume { ticket: w.ticket, cont, poll_result: present })
+            }
+        }
+        return;
+    }
+    w.interval = (w.interval * 2).min(w.cap);
+    w.next_probe = now + w.interval.min(w.deadline.saturating_duration_since(now));
+    ctx.hub.register_waiter(w);
+}
+
+// ---------------------------------------------------------------------------
+// Reactor: the single event-loop thread owning all sockets.
+// ---------------------------------------------------------------------------
+
+/// An outbound segment: either bytes owned by the outbox (headers and
+/// small replies, coalesced) or a refcounted view of a store buffer
+/// (large tensor payloads, zero-copy).
+enum SegBuf {
+    Owned(Vec<u8>),
+    Shared(Bytes),
+}
+
+impl SegBuf {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            SegBuf::Owned(v) => v,
+            SegBuf::Shared(b) => b,
+        }
+    }
+}
+
+struct OutSeg {
+    data: SegBuf,
+    off: usize,
+}
+
+/// Direct-read mode for a frame body larger than the staging buffer:
+/// bytes land straight in the allocation the store will keep.
+struct BodyRead {
+    tag: u32,
+    buf: Vec<u8>,
+    got: usize,
+}
+
+/// Work queued behind the currently executing untagged request, keeping
+/// legacy pipelined frames strictly in order.
+enum LegacyJob {
+    Run(Request),
+    Reply(Response),
+}
+
+struct Conn {
+    stream: FaultStream<TcpStream>,
+    fd: RawFd,
+    /// Staging buffer for reads; `rpos..` is unparsed.
+    rbuf: Vec<u8>,
+    rpos: usize,
+    direct: Option<BodyRead>,
+    outbox: VecDeque<OutSeg>,
+    legacy_q: VecDeque<LegacyJob>,
+    /// An untagged request is dispatched and unanswered; further untagged
+    /// frames queue behind it.
+    legacy_busy: bool,
+    /// Dispatched-but-unanswered requests (tagged + untagged + queued).
+    in_flight: usize,
+    read_on: bool,
+    write_on: bool,
+    /// Set while a frame is partially received; drives the stall killer.
+    partial_since: Option<Instant>,
+}
+
+/// Reactor state that connection handling needs alongside a `&mut Conn`
+/// (kept separate from the connection map so the borrows split).
+struct ReactorCtx {
+    poller: Poller,
+    jobs: Arc<JobQueue>,
+    shared: Arc<Shared>,
+    store: Arc<Store>,
+    /// Connections currently holding a partial frame; the event loop only
+    /// uses a wait timeout when this is non-zero.
+    n_partial: usize,
+    stall_timeout: Duration,
+}
+
+struct Reactor {
+    ctx: ReactorCtx,
+    conns: HashMap<u64, Conn>,
+    listener: TcpListener,
+    wake_rx: WakeReceiver,
+    fault: Option<Arc<FaultPlan>>,
+    next_token: u64,
+}
+
+enum Parsed {
+    Frame { tag: u32, body: Vec<u8> },
+    Direct,
+    NeedMore,
+}
+
+enum Filled {
+    Bytes,
+    WouldBlock,
+    Closed,
+    Failed,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            // Idle server: no partial frames means no timers here — sleep
+            // until the OS has something (completions arrive via the waker).
+            let timeout =
+                if self.ctx.n_partial > 0 { Some(self.ctx.stall_timeout) } else { None };
+            events.clear();
+            if self.ctx.poller.wait(timeout, &mut events).is_err() {
+                break;
+            }
+            for ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.wake_rx.drain(),
+                    t => self.conn_event(t, ev.writable, ev.readable || ev.hangup),
+                }
+            }
+            self.drain_completions();
+            if self.ctx.n_partial > 0 {
+                self.kill_stalled();
+            }
+            if self.ctx.shared.stop.load(Ordering::Relaxed) {
+                break;
+            }
+        }
+        // Dropping the reactor closes the listener (port released) and
+        // every connection socket.
+    }
+
+    /// Drain the accept backlog.  Readiness-driven: the first connect
+    /// after any idle period is served at event latency, not after an
+    /// accept-backoff sleep.
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((sock, _peer)) => {
+                    sock.set_nodelay(true).ok();
+                    if sock.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let fd = sock.as_raw_fd();
+                    // Each connection draws its own decision stream from
+                    // the plan; `None` is a passthrough wrapper.
+                    let conn_faults = self.fault.as_ref().map(|p| p.connection());
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self.ctx.poller.register(fd, token, true, false).is_err() {
+                        continue; // drop the socket
+                    }
+                    self.conns.insert(
+                        token,
+                        Conn {
+                            stream: FaultStream::over(sock, conn_faults),
+                            fd,
+                            rbuf: Vec::new(),
+                            rpos: 0,
+                            direct: None,
+                            outbox: VecDeque::new(),
+                            legacy_q: VecDeque::new(),
+                            legacy_busy: false,
+                            in_flight: 0,
+                            read_on: true,
+                            write_on: false,
+                            partial_since: None,
+                        },
+                    );
+                    // Any bytes already queued on the socket re-announce
+                    // through the level-triggered poller next wait.
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn conn_event(&mut self, token: u64, writable: bool, readable: bool) {
+        let Some(conn) = self.conns.get_mut(&token) else {
+            return;
+        };
+        let mut alive = true;
+        if writable {
+            alive = flush_outbox(conn);
+        }
+        if alive && readable {
+            alive = pump_conn(&mut self.ctx, token, conn);
+        }
+        if alive {
+            let conn = self.conns.get_mut(&token).unwrap();
+            alive = sync_interest(&mut self.ctx, conn, token);
+        }
+        if !alive {
+            self.close_conn(token);
+        }
+    }
+
+    /// Deliver finished requests back to their connections and flush.
+    fn drain_completions(&mut self) {
+        let pending = {
+            let mut g = self.ctx.shared.completions.lock().unwrap();
+            std::mem::take(&mut *g)
+        };
+        for c in pending {
+            let Some(conn) = self.conns.get_mut(&c.ticket.token) else {
+                continue; // connection died while the request ran
+            };
+            let was_paused = conn.in_flight >= MAX_IN_FLIGHT;
+            on_complete(&mut self.ctx, c.ticket.token, conn, c.ticket.tag, &c.resp);
+            let mut alive = flush_outbox(conn);
+            if alive && was_paused && conn.in_flight < MAX_IN_FLIGHT {
+                // Reading was paused at the in-flight cap: bytes already
+                // staged hold frames no readiness event will re-announce,
+                // so pump directly now that there is headroom.
+                alive = pump_conn(&mut self.ctx, c.ticket.token, conn);
+            }
+            if alive {
+                let conn = self.conns.get_mut(&c.ticket.token).unwrap();
+                alive = sync_interest(&mut self.ctx, conn, c.ticket.token);
+            }
+            if !alive {
+                self.close_conn(c.ticket.token);
+            }
+        }
+    }
+
+    /// Reap connections that sat on a partial frame past the stall
+    /// deadline without progress.
+    fn kill_stalled(&mut self) {
+        let now = Instant::now();
+        let stall = self.ctx.stall_timeout;
+        let stalled: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| matches!(c.partial_since, Some(t) if now.duration_since(t) >= stall))
+            .map(|(&t, _)| t)
+            .collect();
+        for t in stalled {
+            self.close_conn(t);
+        }
+    }
+
+    fn close_conn(&mut self, token: u64) {
+        if let Some(conn) = self.conns.remove(&token) {
+            if conn.partial_since.is_some() {
+                self.ctx.n_partial -= 1;
+            }
+            let _ = self.ctx.poller.deregister(conn.fd);
+        }
+    }
+}
+
+/// Read and dispatch as much as the socket and the in-flight cap allow.
+/// Returns `false` when the connection should close.
+fn pump_conn(ctx: &mut ReactorCtx, token: u64, conn: &mut Conn) -> bool {
+    let mut progressed = false;
+    let alive = loop {
+        // Direct-mode body read: the header named a payload beyond what
+        // staging held; bytes go straight into its final allocation.
+        if let Some(body) = &mut conn.direct {
+            match conn.stream.read(&mut body.buf[body.got..]) {
+                Ok(0) => break false,
+                Ok(n) => {
+                    body.got += n;
+                    progressed = true;
+                    if body.got == body.buf.len() {
+                        let BodyRead { tag, buf, .. } = conn.direct.take().unwrap();
+                        dispatch_frame(ctx, token, conn, tag, buf);
+                    }
+                    continue;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break true,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break false,
+            }
+        }
+        if conn.in_flight >= MAX_IN_FLIGHT {
+            // Backpressure: stop parsing (and reading — see
+            // `sync_interest`) until completions drain.
+            break true;
+        }
+        match parse_one(conn) {
+            Ok(Parsed::Frame { tag, body }) => {
+                progressed = true;
+                dispatch_frame(ctx, token, conn, tag, body);
+            }
+            Ok(Parsed::Direct) => progressed = true,
+            Ok(Parsed::NeedMore) => match fill_staging(conn) {
+                Filled::Bytes => progressed = true,
+                Filled::WouldBlock => break true,
+                Filled::Closed | Filled::Failed => break false,
+            },
+            Err(()) => break false, // oversize/corrupt length word
+        }
+    };
+    note_partial(ctx, conn, progressed);
+    alive
+}
+
+/// Try to lift one frame out of the staging buffer.
+fn parse_one(conn: &mut Conn) -> std::result::Result<Parsed, ()> {
+    let avail = conn.rbuf.len() - conn.rpos;
+    if avail < 4 {
+        return Ok(Parsed::NeedMore);
+    }
+    let word = u32::from_le_bytes(conn.rbuf[conn.rpos..conn.rpos + 4].try_into().unwrap());
+    let tagged = word & FRAME_TAG_FLAG != 0;
+    let header = if tagged { 8 } else { 4 };
+    if avail < header {
+        return Ok(Parsed::NeedMore);
+    }
+    let body_len = (word & !FRAME_TAG_FLAG) as usize;
+    if body_len > MAX_FRAME {
+        return Err(()); // corrupt stream; drop the connection
+    }
+    let tag = if tagged {
+        u32::from_le_bytes(conn.rbuf[conn.rpos + 4..conn.rpos + 8].try_into().unwrap())
+    } else {
+        0
+    };
+    let start = conn.rpos + header;
+    if conn.rbuf.len() - start >= body_len {
+        // Copy the body out right-sized: payload frames hand this exact
+        // allocation to the store, so capacity from unrelated frames must
+        // not ride along.
+        let body = conn.rbuf[start..start + body_len].to_vec();
+        conn.rpos = start + body_len;
+        Ok(Parsed::Frame { tag, body })
+    } else {
+        // Large body: switch to direct reads into a right-sized buffer,
+        // seeded with whatever staging already holds.
+        let mut buf = Vec::with_capacity(body_len);
+        buf.extend_from_slice(&conn.rbuf[start..]);
+        let got = buf.len();
+        buf.resize(body_len, 0);
+        conn.rbuf.clear();
+        conn.rpos = 0;
+        conn.direct = Some(BodyRead { tag, buf, got });
+        Ok(Parsed::Direct)
+    }
+}
+
+/// Refill the staging buffer with one read.
+fn fill_staging(conn: &mut Conn) -> Filled {
+    if conn.rpos > 0 {
+        // Compact consumed bytes so a long-lived connection's buffer
+        // doesn't grow without bound.
+        conn.rbuf.drain(..conn.rpos);
+        conn.rpos = 0;
+    }
+    let old = conn.rbuf.len();
+    conn.rbuf.resize(old + READ_CHUNK, 0);
+    let r = conn.stream.read(&mut conn.rbuf[old..]);
+    match r {
+        Ok(0) => {
+            conn.rbuf.truncate(old);
+            Filled::Closed
+        }
+        Ok(n) => {
+            conn.rbuf.truncate(old + n);
+            Filled::Bytes
+        }
+        Err(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::Interrupted =>
+        {
+            // Interrupted reads retry on the next level-triggered event.
+            conn.rbuf.truncate(old);
+            Filled::WouldBlock
+        }
+        Err(_) => {
+            conn.rbuf.truncate(old);
+            Filled::Failed
+        }
+    }
+}
+
+/// Decode one frame and hand it to the executor pool (or queue it behind
+/// the running untagged request, preserving legacy in-order semantics).
+fn dispatch_frame(ctx: &mut ReactorCtx, token: u64, conn: &mut Conn, tag: u32, body: Vec<u8>) {
+    // One frame == one client round trip (a batch is still one frame).
+    ctx.store.counters.frames.fetch_add(1, Ordering::Relaxed);
+    let decoded = if Request::frame_holds_payload(&body) {
+        // Hand the frame to the store wholesale: the decoded tensor's
+        // payload is a view into it and the store keeps that single
+        // allocation alive by refcount — zero copies between socket and
+        // store.  Tensors put inside one Batch frame all alias this
+        // allocation, so it stays resident until the *last* of them is
+        // overwritten or deleted; the intended publish pattern — every
+        // rank republishing under stable keys each snapshot — retires
+        // whole batches together, so the coupling is benign there.
+        let shared = Bytes::from_vec(body);
+        Request::decode_shared(&shared)
+    } else {
+        Request::decode(&body)
+    };
+    match decoded {
+        Err(e) => {
+            let resp = Response::Error(e.to_string());
+            if tag == 0 && conn.legacy_busy {
+                // Keep the error in order behind queued untagged work.
+                conn.in_flight += 1;
+                conn.legacy_q.push_back(LegacyJob::Reply(resp));
+            } else {
+                queue_reply(conn, tag, &resp);
+            }
+        }
+        Ok(req) => {
+            conn.in_flight += 1;
+            let ticket = Ticket { token, tag };
+            if tag == 0 {
+                if conn.legacy_busy {
+                    conn.legacy_q.push_back(LegacyJob::Run(req));
+                } else {
+                    conn.legacy_busy = true;
+                    ctx.jobs.push(Job::Request { ticket, req });
+                }
+            } else {
+                ctx.jobs.push(Job::Request { ticket, req });
+            }
+        }
+    }
+}
+
+/// A completed request: queue its reply and release queued legacy work.
+fn on_complete(ctx: &mut ReactorCtx, token: u64, conn: &mut Conn, tag: u32, resp: &Response) {
+    queue_reply(conn, tag, resp);
+    conn.in_flight = conn.in_flight.saturating_sub(1);
+    if tag == 0 {
+        conn.legacy_busy = false;
+        while let Some(job) = conn.legacy_q.pop_front() {
+            match job {
+                LegacyJob::Reply(r) => {
+                    queue_reply(conn, 0, &r);
+                    conn.in_flight = conn.in_flight.saturating_sub(1);
+                }
+                LegacyJob::Run(req) => {
+                    conn.legacy_busy = true;
+                    ctx.jobs.push(Job::Request { ticket: Ticket { token, tag: 0 }, req });
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Serialize one reply into the connection's outbox.  Headers and small
+/// payloads coalesce into owned segments; large tensor payloads are
+/// queued as refcounted views of the store's buffers (zero-copy).
+fn queue_reply(conn: &mut Conn, tag: u32, resp: &Response) {
+    let body = resp.body_wire_size();
+    if body > MAX_FRAME {
+        // A batch of individually legal tensors can exceed the frame cap
+        // in aggregate; answer with an error the client can handle rather
+        // than killing the connection on the unsendable reply.
+        let err = Response::Error(format!(
+            "reply of {body} bytes exceeds the {MAX_FRAME} byte frame limit; split the batch"
+        ));
+        queue_reply(conn, tag, &err);
+        return;
+    }
+    let mut cur = Vec::with_capacity(64.max(body.min(SEG_SHARED_MIN)) + 8);
+    if tag == 0 {
+        cur.extend_from_slice(&(body as u32).to_le_bytes());
+    } else {
+        cur.extend_from_slice(&((body as u32) | FRAME_TAG_FLAG).to_le_bytes());
+        cur.extend_from_slice(&tag.to_le_bytes());
+    }
+    push_reply_body(conn, &mut cur, resp);
+    if !cur.is_empty() {
+        conn.outbox.push_back(OutSeg { data: SegBuf::Owned(cur), off: 0 });
+    }
+}
+
+fn push_reply_body(conn: &mut Conn, cur: &mut Vec<u8>, resp: &Response) {
+    match resp {
+        Response::Tensor(t) => {
+            message::encode_tensor_response_header_into(cur, t);
+            if t.data.len() >= SEG_SHARED_MIN {
+                if !cur.is_empty() {
+                    let seg = OutSeg { data: SegBuf::Owned(std::mem::take(cur)), off: 0 };
+                    conn.outbox.push_back(seg);
+                }
+                conn.outbox.push_back(OutSeg { data: SegBuf::Shared(t.data.clone()), off: 0 });
+            } else {
+                cur.extend_from_slice(&t.data);
+            }
+        }
+        Response::Batch(entries) => {
+            message::encode_batch_response_header_into(cur, entries.len());
+            for e in entries {
+                push_reply_body(conn, cur, e);
+            }
+        }
+        other => other.encode(cur),
+    }
+}
+
+/// Write as much of the outbox as the socket accepts.  Returns `false`
+/// when the connection should close.
+fn flush_outbox(conn: &mut Conn) -> bool {
+    loop {
+        let Some(seg) = conn.outbox.front_mut() else {
+            return true;
+        };
+        let len = seg.data.as_slice().len();
+        if seg.off >= len {
+            conn.outbox.pop_front();
+            continue;
+        }
+        match conn.stream.write(&seg.data.as_slice()[seg.off..]) {
+            Ok(0) => return false,
+            Ok(n) => seg.off += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Align poller interest with connection state: read while under the
+/// in-flight cap, write while the outbox is non-empty.
+fn sync_interest(ctx: &mut ReactorCtx, conn: &mut Conn, token: u64) -> bool {
+    let want_read = conn.in_flight < MAX_IN_FLIGHT;
+    let want_write = !conn.outbox.is_empty();
+    if want_read != conn.read_on || want_write != conn.write_on {
+        if ctx.poller.rearm(conn.fd, token, want_read, want_write).is_err() {
+            return false;
+        }
+        conn.read_on = want_read;
+        conn.write_on = want_write;
+    }
+    true
+}
+
+/// Track whether this connection holds a partial frame (drives the stall
+/// killer and the event loop's wait timeout).
+fn note_partial(ctx: &mut ReactorCtx, conn: &mut Conn, progressed: bool) {
+    let paused = conn.in_flight >= MAX_IN_FLIGHT;
+    let partial = !paused && (conn.direct.is_some() || conn.rpos < conn.rbuf.len());
+    match (conn.partial_since.is_some(), partial) {
+        (false, true) => {
+            conn.partial_since = Some(Instant::now());
+            ctx.n_partial += 1;
+        }
+        (true, false) => {
+            conn.partial_since = None;
+            ctx.n_partial -= 1;
+        }
+        (true, true) if progressed => conn.partial_since = Some(Instant::now()),
+        _ => {}
+    }
+}
+
 /// A running database server.  Dropping the handle shuts it down.
 pub struct DbServer {
     pub addr: SocketAddr,
     store: Arc<Store>,
     models: Option<Arc<ModelRuntime>>,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    jobs: Arc<JobQueue>,
+    hub: Arc<PollHub>,
+    reactor_thread: Option<JoinHandle<()>>,
+    exec_threads: Vec<JoinHandle<()>>,
+    hub_thread: Option<JoinHandle<()>>,
     pub config: ServerConfig,
     /// Set by [`DbServer::simulate_crash`]: teardown skips the clean
     /// shutdown spill barrier, like a real `kill -9` would.
@@ -145,6 +1144,7 @@ impl DbServer {
     pub fn start_with(config: ServerConfig, models: Option<Arc<ModelRuntime>>) -> Result<DbServer> {
         let listener = TcpListener::bind(config.addr)?;
         let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
         let store = Arc::new(Store::new());
         // Spill first, so the very first window retirement already lands
         // in the cold tier (opening also crash-recovers an existing log).
@@ -154,87 +1154,76 @@ impl DbServer {
         if !config.retention.is_unbounded() {
             store.set_retention(config.retention);
         }
-        let stop = Arc::new(AtomicBool::new(false));
         let gate = Arc::new(CommandGate::new(config.engine));
-
-        let accept_thread = {
-            let store = Arc::clone(&store);
-            let models = models.clone();
-            let stop = Arc::clone(&stop);
-            let engine = config.engine;
-            let backoff_max = config.accept_backoff_max;
-            let read_timeout = config.conn_read_timeout;
-            let fault = config.fault.clone();
-            std::thread::Builder::new()
-                .name(format!("db-accept-{}", addr.port()))
-                .spawn(move || {
-                    // Poll for shutdown with a nonblocking accept loop.  The
-                    // sleep between polls backs off adaptively: a busy server
-                    // accepts with ~1 ms latency, an idle one decays to
-                    // `accept_backoff_max` between wakeups (kernel backlog
-                    // still completes handshakes meanwhile, so connects are
-                    // never dropped, just served up to one backoff later).
-                    listener.set_nonblocking(true).ok();
-                    let mut backoff = ACCEPT_BACKOFF_MIN;
-                    loop {
-                        if stop.load(Ordering::Relaxed) {
-                            break;
-                        }
-                        match listener.accept() {
-                            Ok((sock, _peer)) => {
-                                backoff = ACCEPT_BACKOFF_MIN;
-                                sock.set_nodelay(true).ok();
-                                let store = Arc::clone(&store);
-                                let models = models.clone();
-                                let gate = Arc::clone(&gate);
-                                let stop = Arc::clone(&stop);
-                                // Each connection draws its own decision
-                                // stream from the plan; `None` serves the
-                                // plain socket (no shim in the type at all).
-                                let conn_faults = fault.as_ref().map(|p| p.connection());
-                                std::thread::Builder::new()
-                                    .name("db-conn".into())
-                                    .spawn(move || {
-                                        let _ = match conn_faults {
-                                            Some(f) => serve_conn(
-                                                FaultStream::over(sock, Some(f)),
-                                                &store,
-                                                models.as_deref(),
-                                                &gate,
-                                                &stop,
-                                                engine,
-                                                read_timeout,
-                                            ),
-                                            None => serve_conn(
-                                                sock,
-                                                &store,
-                                                models.as_deref(),
-                                                &gate,
-                                                &stop,
-                                                engine,
-                                                read_timeout,
-                                            ),
-                                        };
-                                    })
-                                    .ok();
-                            }
-                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                                std::thread::sleep(backoff);
-                                backoff = (backoff * 2).min(backoff_max);
-                            }
-                            Err(_) => break,
-                        }
-                    }
-                })
-                .map_err(Error::Io)?
+        let (wake, wake_rx) = waker().map_err(Error::Io)?;
+        let shared = Arc::new(Shared {
+            completions: Mutex::new(Vec::new()),
+            waker: wake,
+            stop: AtomicBool::new(false),
+        });
+        let jobs = Arc::new(JobQueue::new());
+        let hub = Arc::new(PollHub::new());
+        hub.set_ttl(store.retention().ttl());
+        let ctx = ExecCtx {
+            store: Arc::clone(&store),
+            models: models.clone(),
+            gate,
+            engine: config.engine,
+            shared: Arc::clone(&shared),
+            jobs: Arc::clone(&jobs),
+            hub: Arc::clone(&hub),
         };
-
+        let n_exec = config.engine.exec_threads(config.cores).clamp(1, 16);
+        let mut exec_threads = Vec::with_capacity(n_exec);
+        for i in 0..n_exec {
+            let ctx = ctx.clone();
+            exec_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("db-exec-{i}"))
+                    .spawn(move || run_executor(ctx))
+                    .map_err(Error::Io)?,
+            );
+        }
+        let hub_thread = std::thread::Builder::new()
+            .name("db-hub".into())
+            .spawn(move || run_hub(ctx))
+            .map_err(Error::Io)?;
+        let mut poller = Poller::new().map_err(Error::Io)?;
+        poller
+            .register(listener.as_raw_fd(), TOKEN_LISTENER, true, false)
+            .map_err(Error::Io)?;
+        poller
+            .register(wake_rx.as_raw_fd(), TOKEN_WAKER, true, false)
+            .map_err(Error::Io)?;
+        let reactor = Reactor {
+            ctx: ReactorCtx {
+                poller,
+                jobs: Arc::clone(&jobs),
+                shared: Arc::clone(&shared),
+                store: Arc::clone(&store),
+                n_partial: 0,
+                stall_timeout: config.conn_read_timeout,
+            },
+            conns: HashMap::new(),
+            listener,
+            wake_rx,
+            fault: config.fault.clone(),
+            next_token: FIRST_CONN_TOKEN,
+        };
+        let reactor_thread = std::thread::Builder::new()
+            .name(format!("db-reactor-{}", addr.port()))
+            .spawn(move || reactor.run())
+            .map_err(Error::Io)?;
         Ok(DbServer {
             addr,
             store,
             models,
-            stop,
-            accept_thread: Some(accept_thread),
+            shared,
+            jobs,
+            hub,
+            reactor_thread: Some(reactor_thread),
+            exec_threads,
+            hub_thread: Some(hub_thread),
             config,
             crashed: false,
         })
@@ -250,12 +1239,29 @@ impl DbServer {
         self.models.as_ref()
     }
 
-    pub fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.accept_thread.take() {
+    /// Stop all threads and close every socket (idempotent).  Shutdown is
+    /// signal-driven — the reactor wakes on the self-pipe and the hub on
+    /// its condvar — so it completes at event latency, not after a poll
+    /// interval.
+    fn teardown(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        self.shared.waker.wake();
+        self.hub.stop();
+        if let Some(h) = self.reactor_thread.take() {
             let _ = h.join();
         }
-        // Drain the spill writer before teardown: every record the
+        self.jobs.close();
+        for h in self.exec_threads.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.hub_thread.take() {
+            let _ = h.join();
+        }
+    }
+
+    pub fn shutdown(&mut self) {
+        self.teardown();
+        // Drain the spill writer before returning: every record the
         // retention pipeline enqueued is on disk when shutdown returns, so
         // a clean exit never loses queued cold-tier data (no-op without a
         // spill config).  A *crashed* server gets no such courtesy — only
@@ -267,21 +1273,18 @@ impl DbServer {
     }
 
     /// Kill the server the way `kill -9` would, as far as in-process
-    /// simulation allows: stop accepting, release the listener port (a
+    /// simulation allows: stop serving, release the listener port (a
     /// restarted server can rebind it), and *skip* the clean-shutdown
     /// spill barrier so queued cold-tier records are dropped on the floor.
-    /// In-flight connection threads wind down at their next idle poll; to
-    /// sever them mid-operation deterministically, pair this with
-    /// [`FaultPlan::kill`] on the server's fault plan.
+    /// To sever client I/O mid-operation deterministically, pair this with
+    /// [`FaultPlan::kill`] on the server's fault plan (done here when the
+    /// server owns a plan).
     pub fn simulate_crash(&mut self) {
         self.crashed = true;
         if let Some(p) = &self.config.fault {
             p.kill();
         }
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.accept_thread.take() {
-            let _ = h.join();
-        }
+        self.teardown();
     }
 }
 
@@ -291,195 +1294,11 @@ impl Drop for DbServer {
     }
 }
 
-/// Generic over [`ConnStream`] so the same loop serves plain sockets and
-/// fault-injected ones — the chaos battery exercises exactly the code the
-/// production path runs.
-fn serve_conn<S: ConnStream>(
-    sock: S,
-    store: &Store,
-    models: Option<&ModelRuntime>,
-    gate: &CommandGate,
-    stop: &AtomicBool,
-    engine: Engine,
-    read_timeout: Duration,
-) -> Result<()> {
-    sock.set_stream_read_timeout(Some(read_timeout))?;
-    let mut writer = sock.try_clone_stream()?;
-    let mut reader = BufReader::with_capacity(256 * 1024, sock);
-    // Scratch frame buffer, reused across requests the server fully
-    // consumes; payload-carrying frames are handed over to the store
-    // instead (see below), which leaves a fresh buffer behind.
-    let mut scratch: Vec<u8> = Vec::new();
-    let mut out_buf = Vec::with_capacity(64 * 1024);
-    loop {
-        if stop.load(Ordering::Relaxed) {
-            return Ok(());
-        }
-        match read_frame_into(&mut reader, &mut scratch) {
-            Ok(Some(_)) => {}
-            Ok(None) => return Ok(()), // client closed
-            Err(Error::Io(ref e))
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                continue; // idle poll; re-check stop flag
-            }
-            Err(e) => return Err(e),
-        }
-        // One frame == one client round trip (a batch is still one frame).
-        store.counters.frames.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let mut handed_over: Option<Bytes> = None;
-        let decoded = if Request::frame_holds_payload(&scratch) {
-            // Take ownership of the frame: the decoded tensor's payload is
-            // a view into it and the store keeps that single allocation
-            // alive by refcount — zero copies between socket and store.
-            // (On put-heavy connections scratch is consumed every request,
-            // so the per-frame allocation moves to the store rather than
-            // being amortized — it is the tensor's own storage either way.)
-            // Shrink first so a capacity inherited from an earlier larger
-            // frame isn't pinned for the stored tensor's lifetime; this is
-            // a no-op when scratch was sized for this frame.
-            //
-            // Tensors put inside one Batch frame all alias this single
-            // allocation, so it stays resident until the *last* of them is
-            // overwritten or deleted (and n_bytes accounts per-tensor, not
-            // per-allocation).  The intended publish pattern — every rank
-            // republishing under stable keys each snapshot — retires whole
-            // batches together, so the coupling is benign there; callers
-            // batching puts with very different lifetimes should use
-            // separate put_tensor calls instead.
-            scratch.shrink_to_fit();
-            let body = Bytes::from_vec(std::mem::take(&mut scratch));
-            let req = Request::decode_shared(&body);
-            handed_over = Some(body);
-            req
-        } else {
-            Request::decode(&scratch)
-        };
-        let resp = match decoded {
-            Err(e) => Response::Error(e.to_string()),
-            Ok(req) => execute_conn(req, store, models, gate, stop, engine),
-        };
-        if let Some(body) = handed_over.take() {
-            // The hand-over was speculative (first opcode only).  If
-            // nothing retained a view — a read-only batch, or a failed
-            // decode — the refcount is back to 1 and the allocation comes
-            // home as next round's scratch buffer.
-            if let Ok(v) = body.try_unwrap_vec() {
-                scratch = v;
-            }
-        }
-        write_response(&mut writer, &mut out_buf, &resp)?;
-    }
-}
-
-/// Initial probe interval floor and backoff ceiling for server-side
-/// `PollKeys` waits, applied to whatever the client requested.
-const POLL_INTERVAL_FLOOR: std::time::Duration = std::time::Duration::from_micros(50);
-const POLL_INTERVAL_CEIL: std::time::Duration = std::time::Duration::from_millis(250);
-
-/// Execute one command on behalf of a connection thread.  This is the layer
-/// that may *block*: `PollKeys` waits for keys with capped exponential
-/// backoff, re-entering the [`CommandGate`] per probe so producers on other
-/// connections keep making progress; a `Batch` runs its entries in order,
-/// taking the gate per entry (a batch is a pipeline, not a transaction).
-fn execute_conn(
-    req: Request,
-    store: &Store,
-    models: Option<&ModelRuntime>,
-    gate: &CommandGate,
-    stop: &AtomicBool,
-    engine: Engine,
-) -> Response {
-    match req {
-        Request::PollKeys { keys, timeout_ms, initial_us, cap_us } => {
-            // Clamp the client-controlled budget (24 h ceiling) so a
-            // hostile timeout can't overflow `Instant + Duration`.
-            let timeout = std::time::Duration::from_millis(timeout_ms.min(86_400_000));
-            let deadline = std::time::Instant::now() + timeout;
-            let mut interval = std::time::Duration::from_micros(initial_us)
-                .clamp(POLL_INTERVAL_FLOOR, POLL_INTERVAL_CEIL);
-            let cap = std::time::Duration::from_micros(cap_us)
-                .clamp(interval, POLL_INTERVAL_CEIL);
-            loop {
-                let present = {
-                    let _g = gate.enter();
-                    store.exists_all(&keys)
-                };
-                if present {
-                    return Response::Bool(true);
-                }
-                let now = std::time::Instant::now();
-                if now >= deadline || stop.load(Ordering::Relaxed) {
-                    return Response::Bool(false);
-                }
-                std::thread::sleep(interval.min(deadline - now));
-                interval = (interval * 2).min(cap);
-            }
-        }
-        Request::Batch(entries) => Response::Batch(
-            entries
-                .into_iter()
-                .map(|e| execute_conn(e, store, models, gate, stop, engine))
-                .collect(),
-        ),
-        other => {
-            let _g = gate.enter(); // redis: serialize command execution
-            execute(other, store, models, engine)
-        }
-    }
-}
-
-/// Write one response frame.  Tensor payloads — bare or inside a batch —
-/// are streamed from the store's shared buffers through a [`FrameSink`]:
-/// headers coalesce in `scratch`, payloads go to the socket uncopied.
-fn write_response<W: std::io::Write>(
-    w: &mut W,
-    scratch: &mut Vec<u8>,
-    resp: &Response,
-) -> Result<()> {
-    let body = resp.body_wire_size();
-    if body > crate::proto::MAX_FRAME {
-        // A batch of individually legal tensors can exceed the frame cap
-        // in aggregate; answer with an error the client can handle rather
-        // than killing the connection on the unsendable reply.
-        let err = Response::Error(format!(
-            "reply of {body} bytes exceeds the {} byte frame limit; split the batch",
-            crate::proto::MAX_FRAME
-        ));
-        let mut sink = FrameSink::begin(w, scratch, err.body_wire_size())?;
-        sink.encode_with(|buf| err.encode(buf))?;
-        return sink.finish();
-    }
-    let mut sink = FrameSink::begin(w, scratch, body)?;
-    sink_response(&mut sink, resp)?;
-    sink.finish()
-}
-
-fn sink_response<W: std::io::Write>(sink: &mut FrameSink<'_, W>, resp: &Response) -> Result<()> {
-    match resp {
-        Response::Tensor(t) => {
-            sink.encode_with(|buf| message::encode_tensor_response_header_into(buf, t))?;
-            sink.write(&t.data)
-        }
-        Response::Batch(entries) => {
-            sink.encode_with(|buf| {
-                message::encode_batch_response_header_into(buf, entries.len())
-            })?;
-            for e in entries {
-                sink_response(sink, e)?;
-            }
-            Ok(())
-        }
-        other => sink.encode_with(|buf| other.encode(buf)),
-    }
-}
-
 /// Execute one decoded command (shared by the TCP path and the unit tests).
 ///
 /// This layer never blocks: `PollKeys` is a single all-exist probe here (the
-/// waiting loop lives in the connection layer, where sleeping doesn't hold
-/// the command gate).
+/// waiting lives in the executor/hub layer, where parking doesn't hold the
+/// command gate).
 pub fn execute(
     req: Request,
     store: &Store,
@@ -576,9 +1395,9 @@ pub fn execute(
             Err(e) => Response::Error(e.to_string()),
         },
         Request::Info => {
-            // Opportunistic TTL sweep: stalled producers are reclaimed even
-            // when no other field is writing into their index shard (no-op
-            // unless a TTL policy is active).
+            // Opportunistic TTL sweep: keeps INFO counters exact even if
+            // the background sweeper hasn't fired yet (no-op unless a TTL
+            // policy is active).
             store.expire_ttl();
             // Spill barrier: every eviction that happened-before this INFO
             // is durable and counted, so the reply's spill counters are

@@ -30,7 +30,11 @@
 //!   the window: their stale snapshots age out instead of pinning memory
 //!   forever.  Expiry runs on generation boundaries of the owning index
 //!   shard, during byte-cap eviction (expired data is the first victim),
-//!   and on demand via [`Store::expire_ttl`] (the server sweeps on `INFO`).
+//!   and on demand via [`Store::expire_ttl`] — which the server's
+//!   timer-driven background sweeper calls periodically whenever a TTL
+//!   policy is active (plus opportunistically on `INFO`), so stalled
+//!   producers are reclaimed on wall-clock time, not only when traffic
+//!   happens to cross a generation boundary.
 //!
 //! Metadata entries are not byte-accounted (they are tiny strings) and are
 //! never evicted.  All limits default to 0 (= the seed's unbounded append
@@ -48,14 +52,22 @@
 //! only run on generation boundaries (a put that opens a new generation).
 //! Byte-cap pressure is handled with an atomic byte *reservation*
 //! ([`Store::try_reserve`]): a put that fits under the cap never takes any
-//! global lock, and only puts that must evict serialize on the single
-//! `evict_gate` mutex (other fields' non-evicting puts keep flowing).
+//! global lock, and only puts that must evict serialize on their field's
+//! **eviction gate** — one gate per index shard (`evict_gates`), so two
+//! saturated fields shed load concurrently instead of queueing on a single
+//! global gate (other fields' non-evicting puts keep flowing either way).
+//! Two evictors may race toward the same victim; eviction is idempotent
+//! (a generation already gone is skipped and the loop re-reserves), so the
+//! only cost of the race is a retry, never double-accounting.
 //!
-//! Lock order (outer → inner): `evict_gate` → one index shard mutex → data
-//! shard mutexes.  An evictor (the only holder of `evict_gate`) locks index
-//! shards one at a time while scanning; every other path holds at most one
-//! index shard lock and only acquires data shard locks under it, so the
-//! ordering is acyclic and eviction can never deadlock against writes.
+//! Lock order (outer → inner): eviction gate(s) → one index shard mutex →
+//! data shard mutexes.  An evictor holds exactly *one* gate (its key's) and
+//! locks index shards one at a time while scanning; policy changes
+//! (`set_retention`, `flush_all`) take **all** gates in index order, which
+//! excludes every evictor without a cycle (evictors never take a second
+//! gate).  Every other path holds at most one index shard lock and only
+//! acquires data shard locks under it, so the ordering is acyclic and
+//! eviction can never deadlock against writes.
 //!
 //! Concurrency caveat (documented, deliberate): the byte cap is enforced
 //! per reservation against the key's indexed size, with the replaced
@@ -79,7 +91,7 @@
 //! `ColdGet`/`ColdList`).  Explicit deletes (`del`/`del_keys`) and
 //! `flush_all` do *not* spill — only the retention pipeline's victims do.
 //!
-//! The spill handle's mutex is a leaf in the lock order (`evict_gate` →
+//! The spill handle's mutex is a leaf in the lock order (eviction gate →
 //! index shard → data shard → spill handle): it is only ever taken to
 //! clone the channel sender / shared state, never while calling back into
 //! the store.
@@ -135,7 +147,9 @@ impl RetentionConfig {
         self.window == 0 && self.max_bytes == 0 && self.ttl_ms == 0
     }
 
-    fn ttl(&self) -> Option<Duration> {
+    /// The TTL as a `Duration`, `None` when disabled.  Public so the
+    /// server's background sweeper can derive its timer period from it.
+    pub fn ttl(&self) -> Option<Duration> {
         (self.ttl_ms > 0).then(|| Duration::from_millis(self.ttl_ms))
     }
 }
@@ -367,9 +381,11 @@ pub struct Store {
     cfg_ttl_ms: AtomicU64,
     /// Field-sharded retention index (see module docs).
     index: Vec<Mutex<IndexShard>>,
-    /// Serializes byte-cap eviction and policy changes.  Puts that fit
-    /// under the cap never take it.
-    evict_gate: Mutex<()>,
+    /// Per-field eviction gates (one per index shard): a put that must
+    /// evict serializes only against evictors of its *own* field's shard,
+    /// so saturated fields shed load concurrently.  Policy changes take
+    /// all gates in order.  Puts that fit under the cap take none.
+    evict_gates: Vec<Mutex<()>>,
     /// Global LRU recency clock for untracked keys.
     lru_tick: AtomicU64,
     /// Spill-to-disk cold tier (writer channel + shared read state),
@@ -429,7 +445,7 @@ impl Store {
             index: (0..N_INDEX_SHARDS)
                 .map(|_| Mutex::new(IndexShard::default()))
                 .collect(),
-            evict_gate: Mutex::new(()),
+            evict_gates: (0..N_INDEX_SHARDS).map(|_| Mutex::new(())).collect(),
             lru_tick: AtomicU64::new(0),
             spill: Mutex::new(None),
             spill_on: AtomicBool::new(false),
@@ -541,7 +557,7 @@ impl Store {
         self.cfg_window.store(cfg.window, Ordering::SeqCst);
         self.cfg_max_bytes.store(cfg.max_bytes, Ordering::SeqCst);
         self.cfg_ttl_ms.store(cfg.ttl_ms, Ordering::SeqCst);
-        let _gate = self.evict_gate.lock().unwrap();
+        let _gates = self.lock_all_gates();
         if cfg.is_unbounded() {
             for sh in &self.index {
                 sh.lock().unwrap().clear();
@@ -569,6 +585,14 @@ impl Store {
 
     pub fn retention(&self) -> RetentionConfig {
         self.config()
+    }
+
+    /// Take every eviction gate in index order — the policy-change barrier
+    /// that excludes all concurrent evictors (each holds exactly one gate
+    /// and never acquires another, so the ascending acquisition is
+    /// cycle-free).
+    fn lock_all_gates(&self) -> Vec<std::sync::MutexGuard<'_, ()>> {
+        self.evict_gates.iter().map(|g| g.lock().unwrap()).collect()
     }
 
     /// Replace `key`'s tensor in its data shard, returning the replaced
@@ -702,11 +726,13 @@ impl Store {
         Ok(())
     }
 
-    /// Evict (under the single evict gate) until a `new_bytes` write of
-    /// `key` is reserved under the byte cap.  Victim order: TTL-expired
+    /// Evict (under `key`'s field eviction gate) until a `new_bytes` write
+    /// of `key` is reserved under the byte cap.  Victim order: TTL-expired
     /// data, then the globally oldest evictable generation, then the LRU
     /// untracked key.  Returns the reservation's uncharged size estimate
-    /// for the caller to reconcile after the insert.
+    /// for the caller to reconcile after the insert.  Evictors of distinct
+    /// fields run concurrently; a victim raced away by another gate's
+    /// evictor is skipped idempotently and the loop re-reserves.
     fn make_room(&self, key: &str, new_bytes: u64, cfg: &RetentionConfig) -> Result<u64> {
         let cap = cfg.max_bytes;
         if new_bytes > cap {
@@ -718,7 +744,7 @@ impl Store {
         if let Some(estimate) = self.try_reserve(key, new_bytes, cap) {
             return Ok(estimate);
         }
-        let _gate = self.evict_gate.lock().unwrap();
+        let _gate = self.evict_gates[index_slot(key)].lock().unwrap();
         let mut swept_ttl = false;
         loop {
             if let Some(estimate) = self.try_reserve(key, new_bytes, cap) {
@@ -935,7 +961,7 @@ impl Store {
     }
 
     /// Apply the current policy to the resident set (used when the policy
-    /// changes; caller holds the evict gate): window retirement per field,
+    /// changes; caller holds every eviction gate): window retirement per field,
     /// TTL expiry, then best-effort eviction down to the byte cap.
     /// Anything left over the cap is protected and will backpressure
     /// future puts instead.
@@ -1111,7 +1137,7 @@ impl Store {
 
     pub fn flush_all(&self) {
         self.counters.ops.fetch_add(1, Ordering::Relaxed);
-        let _gate = self.evict_gate.lock().unwrap();
+        let _gates = self.lock_all_gates();
         for sh in &self.index {
             sh.lock().unwrap().clear();
         }
@@ -1196,7 +1222,8 @@ mod tests {
         let s = Store::new();
         s.put_tensor("a", t(vec![1.0])).unwrap();
         s.put_meta("b", "x");
-        let have = |ks: &[&str]| s.exists_all(&ks.iter().map(|k| k.to_string()).collect::<Vec<_>>());
+        let have =
+            |ks: &[&str]| s.exists_all(&ks.iter().map(|k| k.to_string()).collect::<Vec<_>>());
         assert!(have(&["a", "b"]));
         assert!(!have(&["a", "b", "c"]));
         assert!(have(&[]), "vacuously true on no keys");
@@ -1635,6 +1662,44 @@ mod tests {
         rx2.recv_timeout(std::time::Duration::from_secs(10))
             .expect("put completes once the shard lock is released");
         blocked.join().unwrap();
+    }
+
+    #[test]
+    fn evicting_puts_do_not_serialize_on_one_global_gate() {
+        // The acceptance property of per-field eviction gates: hold one
+        // index slot's gate and prove an *evicting* put whose key hashes to
+        // a different slot still completes — under the old single
+        // `evict_gate` it would block forever.  LRU untracked keys keep
+        // the victim selection independent of window bookkeeping.
+        let s = Arc::new(Store::new());
+        let payload = 32usize; // 128 bytes per tensor
+        s.set_retention(RetentionConfig { window: 0, max_bytes: 256, ttl_ms: 0 });
+        s.put_tensor("c0", t(vec![1.0; payload])).unwrap();
+        s.put_tensor("c1", t(vec![1.0; payload])).unwrap();
+        assert_eq!(s.n_bytes(), 256, "at the cap; the next distinct put must evict");
+
+        let held_slot = index_slot("blocked");
+        let w_key = (0..64)
+            .map(|i| format!("w{i}"))
+            .find(|k| index_slot(k) != held_slot && k.as_str() != "c0" && k.as_str() != "c1")
+            .expect("a key hashing away from the held slot");
+
+        let guard = s.evict_gates[held_slot].lock().unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let writer = {
+            let s = Arc::clone(&s);
+            let key = w_key.clone();
+            std::thread::spawn(move || {
+                s.put_tensor(&key, t(vec![2.0; payload])).unwrap();
+                tx.send(()).unwrap();
+            })
+        };
+        rx.recv_timeout(std::time::Duration::from_secs(10))
+            .expect("an evicting put must not wait on another field's eviction gate");
+        writer.join().unwrap();
+        drop(guard);
+        assert!(s.n_bytes() <= 256, "cap still enforced after the concurrent eviction");
+        assert!(s.exists(&w_key), "the evicting put landed");
     }
 
     #[test]

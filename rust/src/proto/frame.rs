@@ -10,6 +10,18 @@
 //! * [`begin_split_frame`]/[`end_split_frame`] write a frame as a small
 //!   copied header plus a borrowed payload slice, so a `get_tensor` reply
 //!   never re-materializes the payload in an output buffer.
+//!
+//! **Tagged frames** extend the format for connection multiplexing: bit 31
+//! of the length word ([`FRAME_TAG_FLAG`]) marks a frame that carries a
+//! u32-LE request tag between the length prefix and the body.  Replies to
+//! tagged requests echo the tag, so one socket can hold many requests in
+//! flight and pair possibly out-of-order replies.  Tag 0 is reserved for
+//! the legacy untagged round-trip: [`write_tagged_frame`] with tag 0 emits
+//! bytes identical to [`write_frame`], and [`read_frame_into_tagged`] maps
+//! an unflagged frame to tag 0 — so pre-multiplexing peers interoperate
+//! unchanged.  The flag bit is unambiguous because [`MAX_FRAME`] keeps
+//! legitimate lengths below it (a legacy reader rejects a flagged length
+//! as oversize rather than desyncing).
 
 use std::io::{Read, Write};
 
@@ -19,6 +31,11 @@ use crate::error::{Error, Result};
 /// a per-rank training tensor (hundreds of MB would indicate a protocol
 /// error or an attack, so we refuse it rather than OOM).
 pub const MAX_FRAME: usize = 1 << 30; // 1 GiB
+
+/// Bit 31 of the length word: this frame carries a u32-LE request tag
+/// between the length prefix and the body.  Never set on legacy frames —
+/// `MAX_FRAME` keeps real lengths clear of it.
+pub const FRAME_TAG_FLAG: u32 = 1 << 31;
 
 /// Message of the protocol error produced when a read times out *mid-frame*
 /// (bytes already consumed, stream position lost).  Exported so the client
@@ -35,6 +52,53 @@ pub fn write_frame<W: Write>(w: &mut W, body: &[u8]) -> Result<()> {
     w.write_all(body)?;
     w.flush()?;
     Ok(())
+}
+
+/// Write one tagged frame: flagged u32-LE length, u32-LE tag, body.  Tag 0
+/// degrades to the legacy untagged encoding, byte-identical to
+/// [`write_frame`] — the compat rule that lets one writer serve both peers.
+pub fn write_tagged_frame<W: Write>(w: &mut W, tag: u32, body: &[u8]) -> Result<()> {
+    if tag == 0 {
+        return write_frame(w, body);
+    }
+    if body.len() > MAX_FRAME {
+        return Err(Error::Protocol(format!("frame too large: {} bytes", body.len())));
+    }
+    w.write_all(&((body.len() as u32) | FRAME_TAG_FLAG).to_le_bytes())?;
+    w.write_all(&tag.to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame body into `scratch`, returning `(tag, body_len)` — tag 0
+/// for a legacy unflagged frame; `Ok(None)` on clean EOF at a frame
+/// boundary.  Timeout semantics match [`read_frame_into`].
+pub fn read_frame_into_tagged<R: Read>(
+    r: &mut R,
+    scratch: &mut Vec<u8>,
+) -> Result<Option<(u32, usize)>> {
+    let mut len_buf = [0u8; 4];
+    match r.read(&mut len_buf[..1])? {
+        0 => return Ok(None),
+        1 => {}
+        _ => unreachable!(),
+    }
+    read_exact_mid_frame(r, &mut len_buf[1..])?;
+    let word = u32::from_le_bytes(len_buf);
+    let (tag, len) = if word & FRAME_TAG_FLAG != 0 {
+        let mut tag_buf = [0u8; 4];
+        read_exact_mid_frame(r, &mut tag_buf)?;
+        (u32::from_le_bytes(tag_buf), (word & !FRAME_TAG_FLAG) as usize)
+    } else {
+        (0, word as usize)
+    };
+    if len > MAX_FRAME {
+        return Err(Error::Protocol(format!("frame too large: {len} bytes")));
+    }
+    scratch.resize(len, 0);
+    read_exact_mid_frame(r, &mut scratch[..])?;
+    Ok(Some((tag, len)))
 }
 
 /// Start a split frame in `buf`: clears it and reserves the 4-byte length
@@ -93,6 +157,27 @@ impl<'a, W: Write> FrameSink<'a, W> {
         }
         scratch.clear();
         scratch.extend_from_slice(&(body_len as u32).to_le_bytes());
+        Ok(FrameSink { w, pending: scratch, remaining: body_len })
+    }
+
+    /// Start a *tagged* frame of exactly `body_len` body bytes.  Tag 0
+    /// delegates to [`FrameSink::begin`] — the same compat rule as
+    /// [`write_tagged_frame`].
+    pub fn begin_tagged(
+        w: &'a mut W,
+        scratch: &'a mut Vec<u8>,
+        tag: u32,
+        body_len: usize,
+    ) -> Result<Self> {
+        if tag == 0 {
+            return Self::begin(w, scratch, body_len);
+        }
+        if body_len > MAX_FRAME {
+            return Err(Error::Protocol(format!("frame too large: {body_len} bytes")));
+        }
+        scratch.clear();
+        scratch.extend_from_slice(&((body_len as u32) | FRAME_TAG_FLAG).to_le_bytes());
+        scratch.extend_from_slice(&tag.to_le_bytes());
         Ok(FrameSink { w, pending: scratch, remaining: body_len })
     }
 
@@ -339,5 +424,79 @@ mod tests {
         buf.extend_from_slice(b"x");
         let mut c = Cursor::new(buf);
         assert!(read_frame(&mut c).is_err());
+    }
+
+    #[test]
+    fn tagged_roundtrip_preserves_tag() {
+        let mut buf = Vec::new();
+        write_tagged_frame(&mut buf, 7, b"hello").unwrap();
+        write_tagged_frame(&mut buf, u32::MAX, b"").unwrap();
+        write_frame(&mut buf, b"legacy").unwrap();
+        let mut c = Cursor::new(buf);
+        let mut scratch = Vec::new();
+        assert_eq!(read_frame_into_tagged(&mut c, &mut scratch).unwrap(), Some((7, 5)));
+        assert_eq!(scratch, b"hello");
+        assert_eq!(read_frame_into_tagged(&mut c, &mut scratch).unwrap(), Some((u32::MAX, 0)));
+        // Legacy unflagged frames read as tag 0 through the same reader.
+        assert_eq!(read_frame_into_tagged(&mut c, &mut scratch).unwrap(), Some((0, 6)));
+        assert_eq!(scratch, b"legacy");
+        assert_eq!(read_frame_into_tagged(&mut c, &mut scratch).unwrap(), None, "clean EOF");
+    }
+
+    #[test]
+    fn tag_zero_is_byte_identical_to_legacy() {
+        let mut tagged = Vec::new();
+        write_tagged_frame(&mut tagged, 0, b"payload").unwrap();
+        let mut legacy = Vec::new();
+        write_frame(&mut legacy, b"payload").unwrap();
+        assert_eq!(tagged, legacy, "tag 0 is the legacy encoding");
+    }
+
+    #[test]
+    fn legacy_reader_rejects_tagged_frames_as_oversize() {
+        // A pre-multiplexing reader sees the flag bit as an absurd length
+        // and refuses the frame instead of desyncing on the tag word.
+        let mut buf = Vec::new();
+        write_tagged_frame(&mut buf, 3, b"x").unwrap();
+        let mut c = Cursor::new(buf);
+        assert!(read_frame(&mut c).is_err());
+    }
+
+    #[test]
+    fn sink_begin_tagged_matches_write_tagged_frame() {
+        let body = {
+            let mut b = vec![1u8, 2, 3];
+            b.extend_from_slice(&vec![9u8; SINK_COALESCE + 5]);
+            b
+        };
+        let mut contiguous = Vec::new();
+        write_tagged_frame(&mut contiguous, 42, &body).unwrap();
+
+        let mut sunk = Vec::new();
+        let mut scratch = Vec::new();
+        let mut sink = FrameSink::begin_tagged(&mut sunk, &mut scratch, 42, body.len()).unwrap();
+        sink.write(&body[..3]).unwrap();
+        sink.write(&body[3..]).unwrap();
+        sink.finish().unwrap();
+        assert_eq!(sunk, contiguous, "tagged sink output is byte-identical");
+
+        let mut sunk0 = Vec::new();
+        let mut scratch0 = Vec::new();
+        let mut sink = FrameSink::begin_tagged(&mut sunk0, &mut scratch0, 0, 2).unwrap();
+        sink.write(&[5, 6]).unwrap();
+        sink.finish().unwrap();
+        let mut legacy = Vec::new();
+        write_frame(&mut legacy, &[5, 6]).unwrap();
+        assert_eq!(sunk0, legacy, "tag 0 sink degrades to the legacy frame");
+    }
+
+    #[test]
+    fn truncated_tag_word_is_error() {
+        let mut buf = Vec::new();
+        write_tagged_frame(&mut buf, 9, b"abc").unwrap();
+        buf.truncate(6); // length word + half the tag
+        let mut c = Cursor::new(buf);
+        let mut scratch = Vec::new();
+        assert!(read_frame_into_tagged(&mut c, &mut scratch).is_err());
     }
 }

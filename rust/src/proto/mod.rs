@@ -4,19 +4,27 @@
 //! equivalent compact binary protocol:
 //!
 //! ```text
-//! frame   := u32-LE body_len | body
+//! frame   := u32-LE body_len | body                      (legacy, tag 0)
+//! frame   := u32-LE (body_len|TAG) | u32-LE tag | body   (tagged, TAG = bit 31)
 //! body    := u8 opcode | fields...
 //! string  := u32-LE len | utf8 bytes
 //! tensor  := u8 dtype | u8 ndim | u32-LE dims[ndim] | u64-LE payload_len | payload bytes
 //! ```
 //!
-//! Requests and responses are symmetric frames, strictly request/response
-//! per connection (one SmartRedis client per simulation rank, as in the
-//! paper).  Pipelining happens *inside* a frame instead of across frames: a
-//! [`Request::Batch`] carries many commands and is answered by one
-//! [`Response::Batch`] with per-entry results, and the
-//! [`Request::MGetTensors`] / [`Request::PollKeys`] fast paths collapse the
-//! dataloader's per-epoch gather and wait loops to one round trip each.
+//! Requests and responses are symmetric frames.  An *untagged* frame is
+//! the legacy strict request/response round trip (one SmartRedis client
+//! per simulation rank, as in the paper).  A *tagged* frame — length word
+//! with [`frame::FRAME_TAG_FLAG`] set, followed by a nonzero u32 tag —
+//! multiplexes: one socket carries many in-flight requests whose replies
+//! may return out of order, each echoing its request's tag.  Tag 0 is
+//! reserved to mean "untagged" and encodes as the legacy format
+//! byte-for-byte, so old clients and servers interoperate unchanged.
+//!
+//! Pipelining also happens *inside* a frame: a [`Request::Batch`] carries
+//! many commands and is answered by one [`Response::Batch`] with
+//! per-entry results, and the [`Request::MGetTensors`] /
+//! [`Request::PollKeys`] fast paths collapse the dataloader's per-epoch
+//! gather and wait loops to one round trip each.
 //!
 //! ## Zero-copy data plane
 //!
@@ -40,8 +48,9 @@
 pub mod frame;
 pub mod message;
 
-pub use frame::{begin_split_frame, end_split_frame, read_frame, read_frame_into, write_frame,
-                FrameSink, MAX_FRAME};
+pub use frame::{begin_split_frame, end_split_frame, read_frame, read_frame_into,
+                read_frame_into_tagged, write_frame, write_tagged_frame, FrameSink,
+                FRAME_TAG_FLAG, MAX_FRAME};
 pub use message::{
     DbInfo, Device, FieldPressure, ModelDeviceStat, ModelEntry, Request, Response, MAX_BATCH,
 };

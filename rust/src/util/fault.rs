@@ -16,9 +16,13 @@
 //! plan is seeded from `(plan seed, k)`), and a decision is only consumed
 //! by an op that actually moved bytes — idle read polls (`WouldBlock`)
 //! draw nothing, so the server's read-timeout cadence cannot perturb the
-//! sequence.  The same seed therefore yields the same *decision sequence*
-//! per connection; what varies run-to-run is only how the OS chunks the
-//! byte stream across reads.
+//! sequence.  Writes draw *before* attempting the kernel write (a truncate
+//! must fire on the attempt), so a nonblocking `WouldBlock` write parks its
+//! decision and the retry re-uses it instead of drawing again — the event
+//! loop's retry cadence cannot perturb the sequence either.  The same seed
+//! therefore yields the same *decision sequence* per connection; what
+//! varies run-to-run is only how the OS chunks the byte stream across
+//! reads.
 //!
 //! Fault vocabulary:
 //! - **sever** — the op fails with `ConnectionReset` and every later op on
@@ -145,6 +149,7 @@ impl FaultPlan {
                 severed: false,
                 ops: 0,
                 write_ops: 0,
+                pending_write: None,
             }),
         })
     }
@@ -184,6 +189,9 @@ struct ConnState {
     /// Byte-moving ops decided so far (reads that returned data + writes).
     ops: u64,
     write_ops: u64,
+    /// Decision drawn for a write the kernel then refused (`WouldBlock`);
+    /// the retry consumes this instead of drawing again.
+    pending_write: Option<FaultDecision>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -257,6 +265,14 @@ impl ConnFaults {
         } else {
             FaultDecision::Pass
         }
+    }
+
+    fn take_pending_write(&self) -> Option<FaultDecision> {
+        self.inner.lock().expect("fault state lock").pending_write.take()
+    }
+
+    fn park_pending_write(&self, d: FaultDecision) {
+        self.inner.lock().expect("fault state lock").pending_write = Some(d);
     }
 }
 
@@ -335,11 +351,28 @@ impl<S: Write> Write for FaultStream<S> {
         if buf.is_empty() {
             return self.inner.write(buf);
         }
-        match f.decide(true, buf.len()) {
-            FaultDecision::Pass => self.inner.write(buf),
+        // A decision parked by an earlier `WouldBlock` retry is consumed
+        // first; otherwise draw.  Either way exactly one decision per write
+        // that the kernel eventually accepts.
+        let decision = f.take_pending_write().unwrap_or_else(|| f.decide(true, buf.len()));
+        match decision {
+            FaultDecision::Pass => match self.inner.write(buf) {
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    f.park_pending_write(FaultDecision::Pass);
+                    Err(e)
+                }
+                r => r,
+            },
             FaultDecision::Delay(d) => {
                 std::thread::sleep(d);
-                self.inner.write(buf)
+                match self.inner.write(buf) {
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        // The delay is already paid; the retry passes clean.
+                        f.park_pending_write(FaultDecision::Pass);
+                        Err(e)
+                    }
+                    r => r,
+                }
             }
             FaultDecision::Sever => Err(sever_err("injected fault: write severed")),
             FaultDecision::Truncate(n) => {
@@ -359,33 +392,6 @@ impl<S: Write> Write for FaultStream<S> {
 
     fn flush(&mut self) -> io::Result<()> {
         self.inner.flush()
-    }
-}
-
-/// The socket operations the server's per-connection loop needs, so one
-/// code path serves plain `TcpStream`s and fault-injected [`FaultStream`]s.
-pub trait ConnStream: Read + Write + Send + Sized + 'static {
-    fn try_clone_stream(&self) -> io::Result<Self>;
-    fn set_stream_read_timeout(&self, d: Option<Duration>) -> io::Result<()>;
-}
-
-impl ConnStream for TcpStream {
-    fn try_clone_stream(&self) -> io::Result<TcpStream> {
-        self.try_clone()
-    }
-
-    fn set_stream_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
-        self.set_read_timeout(d)
-    }
-}
-
-impl ConnStream for FaultStream<TcpStream> {
-    fn try_clone_stream(&self) -> io::Result<Self> {
-        self.try_clone()
-    }
-
-    fn set_stream_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
-        self.set_read_timeout(d)
     }
 }
 
@@ -509,6 +515,48 @@ mod tests {
         assert_eq!(eof.read(&mut buf).unwrap(), 0, "EOF passes through undecided");
         let mut live = FaultStream::over(&b"data"[..], Some(plan.connection()));
         assert_eq!(live.read(&mut buf).unwrap_err().kind(), io::ErrorKind::ConnectionReset);
+    }
+
+    /// Sink that refuses the first write with `WouldBlock`, like a full
+    /// nonblocking socket buffer, then accepts everything.
+    struct FullOnce {
+        out: Vec<u8>,
+        refusals_left: usize,
+    }
+
+    impl Write for FullOnce {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.refusals_left > 0 {
+                self.refusals_left -= 1;
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "kernel buffer full"));
+            }
+            self.out.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn wouldblock_write_retry_reuses_its_decision() {
+        // Plan severs on decided op 2.  The first write draws op 1 (Pass),
+        // gets WouldBlock, and retries: the retry must re-use that parked
+        // decision, so the *second* buffer — not the retry — draws the
+        // severing op 2.
+        let plan = Arc::new(FaultPlan::new(FaultConfig {
+            seed: 7,
+            sever_after_ops: Some(1),
+            ..FaultConfig::default()
+        }));
+        let sink = FullOnce { out: Vec::new(), refusals_left: 1 };
+        let mut s = FaultStream::over(sink, Some(plan.connection()));
+        assert_eq!(s.write(b"aaaa").unwrap_err().kind(), io::ErrorKind::WouldBlock);
+        assert_eq!(s.write(b"aaaa").unwrap(), 4, "retry passes on the parked decision");
+        assert_eq!(s.write(b"bbbb").unwrap_err().kind(), io::ErrorKind::ConnectionReset);
+        assert_eq!(s.get_ref().out, b"aaaa");
+        assert_eq!(plan.counters().severed_conns, 1);
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! Connection-multiplexing tests: many tagged requests in flight on ONE
+//! socket, with replies paired by tag rather than arrival order — plus the
+//! latency bugs the async core fixed (batch polls summing timeouts, idle
+//! connections pinning threads, slow shutdown) pinned as regressions.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use situ::client::{Client, DataStore, PollConfig};
+use situ::db::{DbServer, Engine, ServerConfig};
+use situ::proto::{read_frame, write_frame, Request, Response};
+use situ::tensor::Tensor;
+use situ::util::fault::{FaultConfig, FaultPlan};
+
+fn start(engine: Engine) -> DbServer {
+    DbServer::start(ServerConfig {
+        engine,
+        with_models: false,
+        conn_read_timeout: Duration::from_millis(50),
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn t(v: Vec<f32>) -> Tensor {
+    Tensor::from_f32(&[v.len()], v).unwrap()
+}
+
+fn get(key: &str) -> Request {
+    Request::GetTensor { key: key.to_string() }
+}
+
+fn poll(key: &str, timeout_ms: u64) -> Request {
+    Request::PollKeys {
+        keys: vec![key.to_string()],
+        timeout_ms,
+        initial_us: 1_000,
+        cap_us: 20_000,
+    }
+}
+
+/// N tagged requests in flight on one socket, replies collected in REVERSE
+/// send order: every reply must pair with its own request's tag, byte-exact
+/// payloads, on both engines.
+#[test]
+fn tagged_replies_pair_by_tag_not_order() {
+    for engine in [Engine::Redis, Engine::KeyDb] {
+        let server = start(engine);
+        let mut c = Client::connect(server.addr).unwrap();
+        let n = 32usize;
+        for i in 0..n {
+            c.put_tensor(&format!("k{i}"), &t(vec![i as f32; 8 + i])).unwrap();
+        }
+        let tags: Vec<u32> =
+            (0..n).map(|i| c.send_tagged(&get(&format!("k{i}"))).unwrap()).collect();
+        for (i, tag) in tags.iter().enumerate().rev() {
+            match c.recv_tagged(*tag).unwrap() {
+                Response::Tensor(got) => {
+                    assert_eq!(got, t(vec![i as f32; 8 + i]), "tag {tag} ↔ k{i}");
+                }
+                other => panic!("k{i}: expected tensor, got {other:?}"),
+            }
+        }
+    }
+}
+
+/// Mixed put/get/poll/batch requests interleaved on one socket — the full
+/// opcode spread the multiplexer must keep straight.
+#[test]
+fn mixed_request_kinds_interleave() {
+    let server = start(Engine::Redis);
+    let mut c = Client::connect(server.addr).unwrap();
+    let put = Request::PutTensor { key: "a".into(), tensor: t(vec![1.0, 2.0]) };
+    let batch = Request::Batch(vec![
+        Request::PutTensor { key: "b".into(), tensor: t(vec![3.0]) },
+        Request::Exists { key: "a".into() },
+    ]);
+    let t_put = c.send_tagged(&put).unwrap();
+    let t_poll = c.send_tagged(&poll("a", 2_000)).unwrap();
+    let t_batch = c.send_tagged(&batch).unwrap();
+    let t_get = c.send_tagged(&get("a")).unwrap();
+
+    // Collect out of send order on purpose.
+    assert!(matches!(c.recv_tagged(t_put).unwrap(), Response::Ok));
+    match c.recv_tagged(t_batch).unwrap() {
+        Response::Batch(rs) => {
+            assert!(matches!(rs[0], Response::Ok));
+            assert!(matches!(rs[1], Response::Bool(true)));
+        }
+        other => panic!("expected batch reply, got {other:?}"),
+    }
+    assert!(matches!(c.recv_tagged(t_poll).unwrap(), Response::Bool(true)));
+    match c.recv_tagged(t_get).unwrap() {
+        Response::Tensor(got) => assert_eq!(got, t(vec![1.0, 2.0])),
+        other => panic!("expected tensor, got {other:?}"),
+    }
+}
+
+/// The no-head-of-line-blocking proof: a parked poll on one socket must NOT
+/// stall a later get on the SAME socket.  The get answers while the poll is
+/// still waiting; producing the key then resolves the poll.
+#[test]
+fn parked_poll_does_not_block_same_socket() {
+    let server = start(Engine::Redis);
+    let mut c = Client::connect(server.addr).unwrap();
+    c.put_tensor("ready", &t(vec![9.0])).unwrap();
+
+    let t_poll = c.send_tagged(&poll("late", 10_000)).unwrap();
+    let t_get = c.send_tagged(&get("ready")).unwrap();
+
+    // Under the old serial loop this would block ~10 s behind the poll.
+    let started = Instant::now();
+    match c.recv_tagged(t_get).unwrap() {
+        Response::Tensor(got) => assert_eq!(got, t(vec![9.0])),
+        other => panic!("expected tensor, got {other:?}"),
+    }
+    assert!(
+        started.elapsed() < Duration::from_secs(2),
+        "get stalled {:?} behind a parked poll",
+        started.elapsed()
+    );
+
+    let mut producer = Client::connect(server.addr).unwrap();
+    producer.put_tensor("late", &t(vec![1.0])).unwrap();
+    assert!(matches!(c.recv_tagged(t_poll).unwrap(), Response::Bool(true)));
+}
+
+/// Tagged interleaving stays byte-exact when every socket op may be delayed
+/// by a seeded fault plan (delay-only: reordering pressure, no data loss).
+#[test]
+fn interleaving_byte_exact_under_seeded_delays() {
+    let plan = Arc::new(FaultPlan::new(FaultConfig {
+        seed: 42,
+        delay_p: 0.3,
+        delay: Duration::from_micros(300),
+        ..FaultConfig::default()
+    }));
+    let server = DbServer::start(ServerConfig {
+        engine: Engine::KeyDb,
+        with_models: false,
+        conn_read_timeout: Duration::from_millis(250),
+        fault: Some(plan.clone()),
+        ..Default::default()
+    })
+    .unwrap();
+    let mut c = Client::connect(server.addr).unwrap();
+    let n = 24usize;
+    for round in 0..4 {
+        let reqs: Vec<Request> = (0..n)
+            .map(|i| Request::PutTensor {
+                key: format!("r{round}i{i}"),
+                tensor: t(vec![(round * n + i) as f32; 16]),
+            })
+            .collect();
+        for r in c.call_pipelined(&reqs).unwrap() {
+            assert!(matches!(r, Response::Ok));
+        }
+        let gets: Vec<Request> = (0..n).map(|i| get(&format!("r{round}i{i}"))).collect();
+        for (i, r) in c.call_pipelined(&gets).unwrap().into_iter().enumerate() {
+            match r {
+                Response::Tensor(got) => {
+                    assert_eq!(got, t(vec![(round * n + i) as f32; 16]));
+                }
+                other => panic!("round {round} i {i}: {other:?}"),
+            }
+        }
+    }
+    assert!(plan.counters().delayed_ops > 0, "plan never fired — test is vacuous");
+}
+
+/// A scripted sever mid-conversation surfaces as a clean error on recv —
+/// never a hang (the reactor closes the conn; the client sees EOF).
+#[test]
+fn severed_connection_errors_cleanly() {
+    let plan = Arc::new(FaultPlan::new(FaultConfig {
+        seed: 7,
+        sever_after_ops: Some(40),
+        ..FaultConfig::default()
+    }));
+    let server = DbServer::start(ServerConfig {
+        engine: Engine::Redis,
+        with_models: false,
+        conn_read_timeout: Duration::from_millis(250),
+        fault: Some(plan),
+        ..Default::default()
+    })
+    .unwrap();
+    let mut c =
+        Client::connect_with(server.addr, Some(Duration::from_secs(5)), None).unwrap();
+    let started = Instant::now();
+    let mut failed = false;
+    'outer: for round in 0..200 {
+        let Ok(tag) = c.send_tagged(&get(&format!("missing{round}"))) else {
+            failed = true;
+            break 'outer;
+        };
+        if c.recv_tagged(tag).is_err() {
+            failed = true;
+            break 'outer;
+        }
+    }
+    assert!(failed, "scripted sever never surfaced");
+    assert!(started.elapsed() < Duration::from_secs(10), "sever turned into a hang");
+}
+
+/// Legacy untagged clients still round-trip against the multiplexed server,
+/// and back-to-back untagged frames keep strict FIFO reply order (the
+/// legacy ordering contract).
+#[test]
+fn legacy_untagged_clients_roundtrip_in_order() {
+    let server = start(Engine::Redis);
+
+    // The plain Client API is itself an untagged (tag-0) peer.
+    let mut c = Client::connect(server.addr).unwrap();
+    c.put_tensor("legacy", &t(vec![4.0, 2.0])).unwrap();
+    assert_eq!(c.get_tensor("legacy").unwrap(), t(vec![4.0, 2.0]));
+
+    // Raw socket: two untagged frames written back-to-back, replies must
+    // come back in request order (PutMeta's Ok before GetMeta's value).
+    let mut sock = TcpStream::connect(server.addr).unwrap();
+    let mut buf = Vec::new();
+    Request::PutMeta { key: "step".into(), value: "17".into() }.encode(&mut buf);
+    write_frame(&mut sock, &buf).unwrap();
+    buf.clear();
+    Request::GetMeta { key: "step".into() }.encode(&mut buf);
+    write_frame(&mut sock, &buf).unwrap();
+
+    let first = read_frame(&mut sock).unwrap().expect("server closed");
+    assert!(matches!(Response::decode(&first).unwrap(), Response::Ok));
+    let second = read_frame(&mut sock).unwrap().expect("server closed");
+    match Response::decode(&second).unwrap() {
+        Response::Meta(v) => assert_eq!(v, "17"),
+        other => panic!("expected meta reply, got {other:?}"),
+    }
+    drop(sock);
+}
+
+/// Regression for the batch-poll latency bug: a batch of polls on absent
+/// keys must wait ≈ the MAX entry timeout (entries share the batch's
+/// deadline clock), not the SUM of entry timeouts.
+#[test]
+fn batch_poll_waits_bounded_by_max_not_sum() {
+    let server = start(Engine::Redis);
+    let mut c = Client::connect(server.addr).unwrap();
+    let entries: Vec<Request> = (0..3).map(|i| poll(&format!("absent{i}"), 500)).collect();
+    let started = Instant::now();
+    let resp = c.call(&Request::Batch(entries)).unwrap();
+    let elapsed = started.elapsed();
+    match resp {
+        Response::Batch(rs) => {
+            assert_eq!(rs.len(), 3);
+            for r in &rs {
+                assert!(matches!(r, Response::Bool(false)), "absent key polled true: {r:?}");
+            }
+        }
+        other => panic!("expected batch reply, got {other:?}"),
+    }
+    assert!(elapsed >= Duration::from_millis(380), "polls returned early: {elapsed:?}");
+    // Sum of timeouts would be 1500 ms; shared deadline keeps it ≈ 500 ms.
+    assert!(elapsed < Duration::from_millis(1100), "batch polls summed timeouts: {elapsed:?}");
+}
+
+/// A bare (non-batch) poll still honours its own timeout through the parked
+/// waiter path, and the client's poll_key maps the timeout to an error.
+#[test]
+fn bare_poll_timeout_preserved() {
+    let server = start(Engine::Redis);
+    let mut c = Client::connect(server.addr).unwrap();
+    let cfg = PollConfig::new(
+        Duration::from_millis(1),
+        Duration::from_millis(10),
+        Duration::from_millis(120),
+    );
+    let started = Instant::now();
+    assert!(c.poll_key("never", &cfg).is_err());
+    let elapsed = started.elapsed();
+    assert!(elapsed >= Duration::from_millis(90), "timed out early: {elapsed:?}");
+    assert!(elapsed < Duration::from_secs(2), "overslept: {elapsed:?}");
+}
+
+/// Idle connections cost nothing and don't delay shutdown: with a LONG
+/// conn_read_timeout and a fleet of idle sockets, shutdown is signal-driven
+/// and prompt (the old accept/read timeout ladder made this scale with the
+/// configured timeouts).
+#[test]
+fn shutdown_with_idle_connections_is_prompt() {
+    let mut server = DbServer::start(ServerConfig {
+        engine: Engine::KeyDb,
+        with_models: false,
+        conn_read_timeout: Duration::from_secs(30),
+        accept_backoff_max: Duration::from_secs(5),
+        ..Default::default()
+    })
+    .unwrap();
+    let mut idlers: Vec<Client> = (0..8).map(|_| Client::connect(server.addr).unwrap()).collect();
+    // One of them does real work so the conns are demonstrably live.
+    idlers[0].put_tensor("x", &t(vec![1.0])).unwrap();
+    let started = Instant::now();
+    server.shutdown();
+    let elapsed = started.elapsed();
+    assert!(elapsed < Duration::from_secs(1), "shutdown took {elapsed:?} with idle conns");
+    drop(idlers);
+}
