@@ -35,7 +35,6 @@ fn start_shards(n: usize) -> Vec<DbServer> {
                 engine: Engine::KeyDb,
                 with_models: false,
                 conn_read_timeout: Duration::from_millis(50),
-                accept_backoff_max: Duration::from_millis(5),
                 ..Default::default()
             })
             .expect("shard")

@@ -17,10 +17,19 @@
 //!    byte-exact with a seeded delay plan active on every socket op.
 //! 5. **Batch-poll bound** — a batch of polls waits ≈ max(entry timeouts),
 //!    never the sum.
+//! 6. **Multi-reactor sweep** — the co-located shape against a 4-reactor
+//!    server; the fixed thread budget must hold with the connections
+//!    spread across reactors.
+//! 7. **Gather fan-out structure** — a cluster `mget` spanning 3 shards
+//!    issues its per-shard sub-batches in ONE multiplexed round (one
+//!    request frame per shard), asserted from the mux and frame counters.
+//! 8. **Write-triggered wakeup** — a poll parked on a 200 ms backoff
+//!    interval resolves within milliseconds of the satisfying put, via the
+//!    hub's key-indexed waiter map rather than the probe clock.
 //!
 //! `SITU_BENCH_SMOKE=1` shortens the sweep for CI (and keeps the socket
 //! count inside default fd limits); `SITU_BENCH_JSON=path` records the
-//! numbers (the BENCH_PR8.json acceptance record).  The full 10k point
+//! numbers (the BENCH_PR8/PR9 acceptance records).  The full 10k point
 //! wants ~4 GiB of socket buffers and a generous `ulimit -n`.
 
 use std::net::SocketAddr;
@@ -343,6 +352,33 @@ fn main() {
         cl_points.push(p);
     }
     cl_table.print();
+
+    // --- experiment 7: gather fan-out structure ----------------------------
+    // One mget spanning every shard must cost exactly ONE multiplexed round
+    // (per-shard sub-batches issued before any reply is collected) and ONE
+    // request frame per shard — the max-of-shards, not sum-of-shards shape.
+    let frames_of = |s: &DbServer| {
+        s.store().counters.frames.load(std::sync::atomic::Ordering::Relaxed)
+    };
+    let mut fan = ClusterClient::connect_with(&shard_addrs, ClusterConfig::default())
+        .expect("fanout client");
+    // Warm the routed connections so lazy dials don't blur the deltas.
+    fan.get_tensor("cc0").expect("warm gather conn");
+    let frames_before: Vec<u64> = shards.iter().map(frames_of).collect();
+    let (rounds_before, subs_before) = fan.mux_counters();
+    let gather_keys: Vec<String> = (0..n_keys).map(|i| format!("cc{i}")).collect();
+    let got = fan.mget_tensors(&gather_keys).expect("fanout gather");
+    assert_eq!(got.len(), n_keys, "gather dropped entries");
+    let (rounds_after, subs_after) = fan.mux_counters();
+    let fanout_rounds = rounds_after - rounds_before;
+    let fanout_subs = subs_after - subs_before;
+    let fanout_frames: Vec<u64> = shards
+        .iter()
+        .zip(&frames_before)
+        .map(|(s, b)| frames_of(s) - b)
+        .collect();
+    drop(fan);
+
     for s in &mut shards {
         s.shutdown();
     }
@@ -350,13 +386,98 @@ fn main() {
     // --- experiment 4: tagged interleave under faults ----------------------
     let (byte_exact, delayed_ops) = fault_interleave(if smoke { 64 } else { 512 });
 
-    let mut gate_table =
-        Table::new("gates", &["cold p99 ms", "batch 3×poll secs", "byte exact", "delayed ops"]);
+    // --- experiment 6: multi-reactor co-located sweep ----------------------
+    let mut mr_server = DbServer::start(ServerConfig {
+        engine: Engine::KeyDb,
+        with_models: false,
+        reactors: 4,
+        ..Default::default()
+    })
+    .expect("multi-reactor server");
+    let mr_reactors = mr_server.reactors();
+    assert_eq!(mr_reactors, 4, "4-reactor topology requested");
+    {
+        let mut seed = Client::connect(mr_server.addr).expect("mr seed connect");
+        for i in 0..n_keys {
+            seed.put_tensor(&format!("k{i}"), &payload(i, elems)).expect("mr seed put");
+        }
+    }
+    let mr_sweep: Vec<usize> = if smoke { vec![64, 128] } else { vec![64, 256, 1024] };
+    let mut mr_table = Table::new(
+        "co-located, 4 reactors: throughput / p99 vs concurrent connections",
+        &["clients", "ops", "secs", "ops/s", "p99 ms", "os threads"],
+    );
+    let mut mr_points = Vec::new();
+    for &c in &mr_sweep {
+        let ops_per_conn = if smoke { (256 / c).max(4) } else { (4096 / c).max(8) };
+        let p = colocated_point(mr_server.addr, c, ops_per_conn, n_keys);
+        mr_table.row(&[
+            p.clients.to_string(),
+            p.ops.to_string(),
+            format!("{:.3}", p.secs),
+            format!("{:.0}", p.ops_per_sec),
+            format!("{:.3}", p.p99_ms),
+            p.threads.map_or("n/a".into(), |t| t.to_string()),
+        ]);
+        mr_points.push(p);
+    }
+    mr_table.print();
+
+    // --- experiment 8: write-triggered poll wakeup -------------------------
+    // initial == cap == 200 ms: once the immediate verification probe
+    // misses, the probe clock alone could not answer for another 200 ms.
+    // The put must resolve the parked waiter through the hub's key index.
+    let wake_samples = if smoke { 10 } else { 50 };
+    let mut wake_lats: Vec<Duration> = Vec::with_capacity(wake_samples);
+    {
+        let mut waiter = Client::connect(mr_server.addr).expect("waiter connect");
+        let mut producer = Client::connect(mr_server.addr).expect("producer connect");
+        for i in 0..wake_samples {
+            let key = format!("wake{i}");
+            let tag = waiter
+                .send_tagged(&Request::PollKeys {
+                    keys: vec![key.clone()],
+                    timeout_ms: 5_000,
+                    initial_us: 200_000,
+                    cap_us: 200_000,
+                })
+                .expect("park poll");
+            // Let the waiter park and its verification probe miss first.
+            std::thread::sleep(Duration::from_millis(10));
+            let t0 = Instant::now();
+            producer.put_tensor(&key, &payload(i, 4)).expect("waking put");
+            match waiter.recv_tagged(tag).expect("poll reply") {
+                Response::Bool(true) => wake_lats.push(t0.elapsed()),
+                other => panic!("expected Bool(true), got {other:?}"),
+            }
+        }
+    }
+    let wake_p99_ms = p99_ms(&mut wake_lats);
+    let hub_wakeups = mr_server.poll_write_wakeups();
+    mr_server.shutdown();
+
+    let mut gate_table = Table::new(
+        "gates",
+        &[
+            "cold p99 ms",
+            "batch 3×poll secs",
+            "byte exact",
+            "delayed ops",
+            "fanout rounds",
+            "fanout subs",
+            "wake p99 ms",
+            "hub wakeups",
+        ],
+    );
     gate_table.row(&[
         format!("{cold_p99_ms:.3}"),
         format!("{batch_secs:.3}"),
         byte_exact.to_string(),
         delayed_ops.to_string(),
+        fanout_rounds.to_string(),
+        fanout_subs.to_string(),
+        format!("{wake_p99_ms:.3}"),
+        hub_wakeups.to_string(),
     ]);
     gate_table.print();
 
@@ -379,6 +500,29 @@ fn main() {
     let max_secs = poll_ms as f64 / 1e3;
     assert!(batch_secs < 2.2 * max_secs, "batch polls summed timeouts: {batch_secs:.3}s");
     assert!(batch_secs >= 0.7 * max_secs, "batch polls returned early: {batch_secs:.3}s");
+    // The thread gate survives reactor sharding: 4 reactors add 3 threads
+    // to the budget, not one per connection.
+    for p in &mr_points {
+        if p.clients >= 64 {
+            if let Some(t) = p.threads {
+                assert!(t < 100, "{t} threads with {} connections on 4 reactors", p.clients);
+            }
+        }
+    }
+    // A full-cluster gather is ONE multiplexed round: every shard's
+    // sub-batch in flight together, one request frame per shard.
+    assert_eq!(fanout_rounds, 1, "gather took {fanout_rounds} fan-out rounds, want 1");
+    assert_eq!(fanout_subs, 3, "gather issued {fanout_subs} sub-batches, want one per shard");
+    for (i, d) in fanout_frames.iter().enumerate() {
+        assert_eq!(*d, 1, "shard {i} saw {d} request frames for one gather, want 1");
+    }
+    // Writes resolve parked waiters through the hub's key index: within
+    // milliseconds of the put, strictly before the 200 ms probe clock.
+    assert!(
+        wake_p99_ms < 50.0,
+        "write wakeup p99 {wake_p99_ms:.3} ms — probe clock, not key-indexed wakeup"
+    );
+    assert!(hub_wakeups > 0, "poll hub never saw a write notification");
 
     if let Ok(path) = std::env::var("SITU_BENCH_JSON") {
         let point_json = |p: &Point| {
@@ -415,7 +559,23 @@ fn main() {
                 if i + 1 == cl_points.len() { "" } else { "," }
             ));
         }
+        s.push_str("  ],\n  \"colocated_4_reactors\": [\n");
+        for (i, p) in mr_points.iter().enumerate() {
+            s.push_str(&format!(
+                "    {}{}\n",
+                point_json(p),
+                if i + 1 == mr_points.len() { "" } else { "," }
+            ));
+        }
         s.push_str("  ],\n");
+        s.push_str(&format!(
+            "  \"fanout\": {{\"rounds\": {fanout_rounds}, \"sub_batches\": {fanout_subs}, \
+             \"frames_per_shard\": {fanout_frames:?}}},\n"
+        ));
+        s.push_str(&format!(
+            "  \"write_wakeup\": {{\"samples\": {wake_samples}, \"p99_ms\": {wake_p99_ms:.4}, \
+             \"hub_wakeups\": {hub_wakeups}}},\n"
+        ));
         s.push_str(&format!(
             "  \"cold_accept\": {{\"samples\": {}, \"p50_ms\": {cold_p50_ms:.4}, \
              \"p99_ms\": {cold_p99_ms:.4}}},\n",
@@ -424,8 +584,12 @@ fn main() {
         s.push_str(&format!(
             "  \"gates\": {{\"cold_accept_p99_under_10ms\": {}, \"byte_exact_under_faults\": \
              {byte_exact}, \"delayed_ops\": {delayed_ops}, \"batch_poll_secs\": {batch_secs:.4}, \
-             \"batch_poll_entry_timeout_secs\": {max_secs:.4}}}\n",
-            cold_p99_ms < 10.0
+             \"batch_poll_entry_timeout_secs\": {max_secs:.4}, \
+             \"thread_budget_holds_with_4_reactors\": true, \"gather_one_round\": \
+             {}, \"write_wakeup_p99_under_50ms\": {}}}\n",
+            cold_p99_ms < 10.0,
+            fanout_rounds == 1 && fanout_subs == 3,
+            wake_p99_ms < 50.0
         ));
         s.push_str("}\n");
         std::fs::write(&path, &s).expect("write SITU_BENCH_JSON");

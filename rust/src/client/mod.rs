@@ -70,7 +70,7 @@ pub mod backpressure;
 
 pub use backpressure::{GovernorConfig, GovernorStats, PublishGovernor, RetryClass, RetryPolicy};
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpStream};
 use std::sync::Arc;
@@ -413,7 +413,16 @@ pub struct Client {
     /// Tagged replies read off the socket while waiting for a different
     /// tag, held for their `recv_tagged` calls.
     pending: HashMap<u32, Response>,
+    /// Tags issued by [`Client::send_tagged`] whose replies have not been
+    /// collected yet.  A reply bearing a tag outside this set is a
+    /// protocol violation and fails the connection instead of being
+    /// stashed forever.
+    outstanding: HashSet<u32>,
 }
+
+/// Cap on out-of-order replies held for later [`Client::recv_tagged`]
+/// calls: a misbehaving server cannot grow client memory without bound.
+const MAX_STASHED_REPLIES: usize = 4096;
 
 impl Client {
     /// Connect (the paper's `SmartRedis client initialization`, measured at
@@ -449,6 +458,7 @@ impl Client {
             io_timeout,
             next_tag: 0,
             pending: HashMap::new(),
+            outstanding: HashSet::new(),
         })
     }
 
@@ -522,11 +532,33 @@ impl Client {
             if tag == 0 {
                 return Ok(resp);
             }
-            self.pending.insert(tag, resp);
+            self.stash_reply(tag, resp)?;
         }
     }
 
-    fn call(&mut self, req: &Request) -> Result<Response> {
+    /// Stash an out-of-order reply for the call that will ask for it.
+    /// Rejects tagged replies this client never issued a request for, and
+    /// bounds the stash — either way the connection is desynced or the
+    /// server misbehaving, and failing beats unbounded memory growth.
+    fn stash_reply(&mut self, tag: u32, resp: Response) -> Result<()> {
+        if tag != 0 && !self.outstanding.contains(&tag) {
+            return Err(Error::Protocol(format!(
+                "reply for unknown tag {tag} (no such request in flight)"
+            )));
+        }
+        if self.pending.len() >= MAX_STASHED_REPLIES {
+            return Err(Error::Protocol(format!(
+                "more than {MAX_STASHED_REPLIES} uncollected replies stashed; \
+                 connection is desynced"
+            )));
+        }
+        self.pending.insert(tag, resp);
+        Ok(())
+    }
+
+    /// Send one request as a legacy untagged frame and block for its
+    /// reply — the one-command building block behind [`DataStore`].
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
         self.buf.clear();
         req.encode(&mut self.buf);
         crate::proto::frame::write_frame(&mut self.writer, &self.buf)?;
@@ -599,6 +631,7 @@ impl Client {
             other => sink.encode_with(|b| other.encode(b))?,
         }
         sink.finish()?;
+        self.outstanding.insert(tag);
         Ok(tag)
     }
 
@@ -608,14 +641,16 @@ impl Client {
     /// order, independent of the order the server finished them in.
     pub fn recv_tagged(&mut self, tag: u32) -> Result<Response> {
         if let Some(resp) = self.pending.remove(&tag) {
+            self.outstanding.remove(&tag);
             return Ok(resp);
         }
         loop {
             let (got, resp) = self.read_any_reply()?;
             if got == tag {
+                self.outstanding.remove(&tag);
                 return Ok(resp);
             }
-            self.pending.insert(got, resp);
+            self.stash_reply(got, resp)?;
         }
     }
 
@@ -1003,6 +1038,12 @@ pub struct ClusterClient {
     cfg: ClusterConfig,
     stats: FailoverStats,
     last_errors: Vec<ShardError>,
+    /// Multiplexed fan-out rounds issued (one per logical operation or
+    /// replica offset): every sub-batch in a round is on the wire before
+    /// any reply is read.
+    mux_rounds: u64,
+    /// Per-shard sub-batches sent across all fan-out rounds.
+    mux_subs: u64,
 }
 
 impl ClusterClient {
@@ -1031,6 +1072,8 @@ impl ClusterClient {
             cfg,
             stats: FailoverStats::default(),
             last_errors: Vec::new(),
+            mux_rounds: 0,
+            mux_subs: 0,
         })
     }
 
@@ -1083,6 +1126,52 @@ impl ClusterClient {
         res
     }
 
+    /// Pass 1 of a multiplexed fan-out: put every job's request on the
+    /// wire as one tagged frame, breaker-gated per shard, without reading
+    /// any reply.  Returns each job's tag (or its send-side error) in job
+    /// order; [`ClusterClient::mux_recv`] collects the replies.
+    fn mux_send(&mut self, jobs: &[(usize, Request)]) -> Vec<Result<u32>> {
+        let cfg = self.cfg.clone();
+        if !jobs.is_empty() {
+            self.mux_rounds += 1;
+            self.mux_subs += jobs.len() as u64;
+        }
+        jobs.iter()
+            .map(|(shard, req)| {
+                let res = match self.shards[*shard].get(&cfg, &mut self.stats) {
+                    Ok(c) => c.send_tagged(req),
+                    Err(e) => Err(e),
+                };
+                self.shards[*shard].note(&res, &cfg);
+                res
+            })
+            .collect()
+    }
+
+    /// Pass 2 of a multiplexed fan-out: block for one job's reply.
+    /// Deliberately *not* the breaker-gated `get`: the tag lives on the
+    /// connection that sent it, and a reconnect here would orphan the
+    /// in-flight reply.
+    fn mux_recv(&mut self, shard: usize, tag: u32) -> Result<Response> {
+        let cfg = self.cfg.clone();
+        let res = match self.shards[shard].client.as_mut() {
+            Some(c) => c.recv_tagged(tag),
+            None => Err(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::NotConnected,
+                format!("shard {} dropped mid fan-out", self.shards[shard].addr),
+            ))),
+        };
+        self.shards[shard].note(&res, &cfg);
+        res
+    }
+
+    /// `(fan-out rounds, per-shard sub-batches)` issued through the
+    /// multiplexed paths so far.  Benches assert on the deltas: a 3-shard
+    /// gather is one round of three sub-batches, not three rounds.
+    pub fn mux_counters(&self) -> (u64, u64) {
+        (self.mux_rounds, self.mux_subs)
+    }
+
     /// Record a degraded (partial) success: count it and keep the
     /// per-shard error report for [`ClusterClient::shard_errors`].
     fn note_degraded(&mut self, errs: &[(usize, Error)]) {
@@ -1093,21 +1182,24 @@ impl ClusterClient {
             .collect();
     }
 
-    /// Apply a write to every replica target of `key`.  Succeeds if at
-    /// least one copy landed (further copies count as replicated writes);
-    /// fails only when *no* target took it, preferring a `Busy` error — the
-    /// one failure the publish-side retry loops know how to wait out.
-    fn replicated_write(
-        &mut self,
-        key: &str,
-        mut op: impl FnMut(&mut Client) -> Result<()>,
-    ) -> Result<()> {
+    /// Apply a write to every replica target of `key` in **one multiplexed
+    /// round**: all per-target frames go on the wire tagged before any
+    /// reply is read, so a replicated write costs the slowest target, not
+    /// the sum (tensor payloads are refcounted — the clones share one
+    /// buffer).  Succeeds if at least one copy landed (further copies
+    /// count as replicated writes); fails only when *no* target took it,
+    /// preferring a `Busy` error — the one failure the publish-side retry
+    /// loops know how to wait out.
+    fn replicated_write(&mut self, key: &str, op: Request) -> Result<()> {
         self.last_errors.clear();
         let targets = self.targets(key);
+        let sends: Vec<(usize, Request)> = targets.iter().map(|&s| (s, op.clone())).collect();
+        let tags = self.mux_send(&sends);
         let mut ok = 0usize;
         let mut errs: Vec<(usize, Error)> = Vec::new();
-        for (off, &shard) in targets.iter().enumerate() {
-            match self.on_shard(shard, &mut op) {
+        for (off, (&shard, tag)) in targets.iter().zip(tags).enumerate() {
+            let res = tag.and_then(|t| self.mux_recv(shard, t)).and_then(|r| r.expect_ok());
+            match res {
                 Ok(()) => {
                     ok += 1;
                     if off > 0 {
@@ -1248,10 +1340,13 @@ impl ClusterClient {
 }
 
 impl DataStore for ClusterClient {
-    /// Fans out to every replica target; succeeds when at least one copy
-    /// landed.
+    /// Fans out to every replica target in one multiplexed round; succeeds
+    /// when at least one copy landed.
     fn put_tensor(&mut self, key: &str, t: &Tensor) -> Result<()> {
-        self.replicated_write(key, |c| c.put_tensor(key, t))
+        self.replicated_write(
+            key,
+            Request::PutTensor { key: key.to_string(), tensor: t.clone() },
+        )
     }
 
     /// Primary first, then each replica on a miss or transport error.
@@ -1259,20 +1354,36 @@ impl DataStore for ClusterClient {
         self.read_any(key, |c| c.get_tensor(key), |_| false)
     }
 
-    /// One `MGetTensors` round trip per shard that owns any of the keys;
-    /// sub-batches that hit a dead shard or a missing key fall back to
+    /// One tagged `MGetTensors` sub-batch per shard that owns any of the
+    /// keys, all on the wire before any reply is read — the gather's
+    /// wall-clock is the slowest shard, not the sum of all shards.
+    /// Sub-batches that hit a dead shard or a missing key fall back to
     /// per-key [`DataStore::get_tensor`], which walks the replicas.
     fn mget_tensors(&mut self, keys: &[String]) -> Result<Vec<Tensor>> {
         check_batch_len(keys.len())?;
         let by_shard = self.partition_keys(keys);
         let mut out: Vec<Option<Tensor>> = keys.iter().map(|_| None).collect();
         let mut retry: Vec<usize> = Vec::new();
+        let mut jobs: Vec<(usize, Vec<usize>)> = Vec::new();
+        let mut sends: Vec<(usize, Request)> = Vec::new();
         for (shard, idxs) in by_shard.into_iter().enumerate() {
             if idxs.is_empty() {
                 continue;
             }
             let sub: Vec<String> = idxs.iter().map(|&i| keys[i].clone()).collect();
-            match self.on_shard(shard, |c| c.mget_tensors(&sub)) {
+            sends.push((shard, Request::MGetTensors { keys: sub }));
+            jobs.push((shard, idxs));
+        }
+        let tags = self.mux_send(&sends);
+        for ((shard, idxs), tag) in jobs.into_iter().zip(tags) {
+            let res = tag.and_then(|t| self.mux_recv(shard, t)).and_then(|r| {
+                r.expect_batch(idxs.len())?
+                    .into_iter()
+                    .zip(idxs.iter())
+                    .map(|(r, &i)| r.expect_tensor(&keys[i]))
+                    .collect::<Result<Vec<Tensor>>>()
+            });
+            match res {
                 Ok(got) => {
                     for (i, t) in idxs.into_iter().zip(got) {
                         out[i] = Some(t);
@@ -1433,7 +1544,10 @@ impl DataStore for ClusterClient {
 
     /// Fans out to every replica target, like `put_tensor`.
     fn put_meta(&mut self, key: &str, value: &str) -> Result<()> {
-        self.replicated_write(key, |c| c.put_meta(key, value))
+        self.replicated_write(
+            key,
+            Request::PutMeta { key: key.to_string(), value: value.to_string() },
+        )
     }
 
     /// Primary first, then replicas; `Ok(None)` is a miss that falls
@@ -1683,15 +1797,16 @@ impl DataStore for ClusterClient {
     /// entry must carry a routing key ([`Request::routing_key`]); use the
     /// dedicated trait methods for whole-database operations.
     ///
-    /// With replication there is one *round* of pipelined sub-batches per
-    /// replica offset — a batched put costs one extra frame per replica,
-    /// not one extra round trip per key.  Writes run in every round (fan
-    /// out); reads only re-run while they lack an authoritative answer
-    /// (primary dead or key missing there), and per entry the best-ranked
-    /// response wins ([`resp_rank`]): success > miss > busy > error.  An
-    /// entry that got *no* response — every target shard unreachable —
-    /// fails the call with the first transport error, which is also the
-    /// clean `replicas = 1` degradation.
+    /// With replication there is one *round* of sub-batches per replica
+    /// offset, and each round is **multiplexed**: every shard's sub-batch
+    /// is sent as one tagged frame before any reply is read, so a round
+    /// costs the slowest shard, not the sum of all shards.  Writes run in
+    /// every round (fan out); reads only re-run while they lack an
+    /// authoritative answer (primary dead or key missing there), and per
+    /// entry the best-ranked response wins ([`resp_rank`]): success > miss
+    /// > busy > error.  An entry that got *no* response — every target
+    /// shard unreachable — fails the call with the first transport error,
+    /// which is also the clean `replicas = 1` degradation.
     fn execute(&mut self, pipeline: Pipeline) -> Result<Vec<Response>> {
         let reqs = pipeline.into_requests();
         let n = reqs.len();
@@ -1721,12 +1836,24 @@ impl DataStore for ClusterClient {
                     by_shard[(primary[i] + off) % nsh].push(i);
                 }
             }
+            // One multiplexed round: all sub-batches on the wire, then all
+            // replies collected — max-of-shards, not sum-of-shards.
+            let mut jobs: Vec<(usize, Vec<usize>)> = Vec::new();
+            let mut sends: Vec<(usize, Request)> = Vec::new();
             for (shard, idxs) in by_shard.into_iter().enumerate() {
                 if idxs.is_empty() {
                     continue;
                 }
                 let sub: Vec<Request> = idxs.iter().map(|&i| reqs[i].clone()).collect();
-                match self.on_shard(shard, |c| c.exec_requests(&sub)) {
+                sends.push((shard, Request::Batch(sub)));
+                jobs.push((shard, idxs));
+            }
+            let tags = self.mux_send(&sends);
+            for ((shard, idxs), tag) in jobs.into_iter().zip(tags) {
+                let res = tag
+                    .and_then(|t| self.mux_recv(shard, t))
+                    .and_then(|r| r.expect_batch(idxs.len()));
+                match res {
                     Ok(resps) => {
                         for (&i, r) in idxs.iter().zip(resps) {
                             let rank = resp_rank(&r);
@@ -1767,5 +1894,69 @@ impl DataStore for ClusterClient {
             }
         }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::frame::write_tagged_frame;
+    use std::io::Read as _;
+    use std::net::TcpListener;
+
+    /// A raw-socket fake server that answers with a tag the client never
+    /// issued: the reply must fail the connection cleanly instead of being
+    /// stashed forever (unbounded memory on a misbehaving server).
+    #[test]
+    fn unknown_tag_reply_is_a_protocol_error() {
+        let listener = TcpListener::bind("127.0.0.1:0".parse::<SocketAddr>().unwrap()).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            // Swallow (part of) the client's request frame, then reply
+            // with a never-issued tag.
+            let mut junk = [0u8; 64];
+            let _ = sock.read(&mut junk);
+            let mut body = Vec::new();
+            Response::Ok.encode(&mut body);
+            write_tagged_frame(&mut sock, 9999, &body).unwrap();
+            // Hold the socket open so the client fails on the tag check,
+            // not on EOF.
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let mut c = Client::connect_with(addr, Some(Duration::from_secs(2)), None).unwrap();
+        let tag = c.send_tagged(&Request::Info).unwrap();
+        match c.recv_tagged(tag) {
+            Err(Error::Protocol(m)) => {
+                assert!(m.contains("unknown tag"), "unexpected message: {m}")
+            }
+            other => panic!("expected a protocol error, got {other:?}"),
+        }
+        server.join().unwrap();
+    }
+
+    /// Same shape, but the bogus reply arrives while the client is blocked
+    /// in the legacy `read_response` path — the guard covers both loops.
+    #[test]
+    fn unknown_tag_reply_fails_legacy_reads_too() {
+        let listener = TcpListener::bind("127.0.0.1:0".parse::<SocketAddr>().unwrap()).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            let mut junk = [0u8; 64];
+            let _ = sock.read(&mut junk);
+            let mut body = Vec::new();
+            Response::Ok.encode(&mut body);
+            write_tagged_frame(&mut sock, 7, &body).unwrap();
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let mut c = Client::connect_with(addr, Some(Duration::from_secs(2)), None).unwrap();
+        match c.call(&Request::Info) {
+            Err(Error::Protocol(m)) => {
+                assert!(m.contains("unknown tag"), "unexpected message: {m}")
+            }
+            other => panic!("expected a protocol error, got {other:?}"),
+        }
+        server.join().unwrap();
     }
 }

@@ -88,6 +88,10 @@ pub struct RunConfig {
     /// [`crate::util::fault::FaultConfig::with_intensity`]); ignored when
     /// `chaos_seed` is 0.
     pub chaos_intensity: f64,
+    /// Reactor (I/O event loop) threads per database server.  0 = auto:
+    /// defer to the `SITU_REACTORS` environment variable capped at the
+    /// server's cores, defaulting to one reactor (the seed behavior).
+    pub reactors: usize,
 }
 
 impl Default for RunConfig {
@@ -114,6 +118,7 @@ impl Default for RunConfig {
             replicas: 1,
             chaos_seed: 0,
             chaos_intensity: 1.0,
+            reactors: 0,
         }
     }
 }
@@ -164,6 +169,7 @@ impl RunConfig {
         c.replicas = a.usize_or("replicas", c.replicas)?;
         c.chaos_seed = a.usize_or("chaos-seed", c.chaos_seed as usize)? as u64;
         c.chaos_intensity = a.f64_or("chaos-intensity", c.chaos_intensity)?;
+        c.reactors = a.usize_or("reactors", c.reactors)?;
         if let Some(e) = a.str_opt("engine") {
             c.engine = Engine::parse(e)
                 .ok_or_else(|| Error::Invalid(format!("unknown engine '{e}'")))?;
@@ -254,6 +260,14 @@ mod tests {
         assert_eq!((c.replicas, c.chaos_seed), (1, 0));
         let a = Args::parse(["x", "--replicas", "0"].map(String::from)).unwrap();
         assert!(RunConfig::from_args(&a).is_err(), "replicas 0 is rejected");
+    }
+
+    #[test]
+    fn parses_reactor_flag() {
+        let c = parse("bench --reactors 4");
+        assert_eq!(c.reactors, 4);
+        // 0 = auto (env-driven, one reactor when unset) — the default.
+        assert_eq!(RunConfig::default().reactors, 0);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! readable fd.
 
 use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener};
 use std::os::unix::io::{AsRawFd, RawFd};
 use std::os::unix::net::UnixStream;
 use std::time::Duration;
@@ -275,6 +276,169 @@ mod imp {
     }
 }
 
+/// Bind a TCP listener with `SO_REUSEPORT` set *before* the bind, so
+/// several listeners can share one address and the kernel load-balances
+/// accepted connections across them — the reactor-sharding accept path.
+///
+/// `std::net::TcpListener::bind` cannot express this (the option must be
+/// set between `socket(2)` and `bind(2)`), so the socket is built by hand
+/// through the same no-`libc`-crate FFI discipline as the poller.  Returns
+/// [`io::ErrorKind::Unsupported`] on targets without the option; callers
+/// fall back to a single acceptor that hands sockets to the other reactors
+/// over their doorbells.
+pub fn bind_reuseport(addr: SocketAddr) -> io::Result<TcpListener> {
+    imp_sock::bind_reuseport(addr)
+}
+
+/// Runtime capability probe: whether [`bind_reuseport`] works here (one
+/// throwaway ephemeral-port bind, checked once per server start).
+pub fn reuseport_available() -> bool {
+    bind_reuseport("127.0.0.1:0".parse().unwrap()).is_ok()
+}
+
+#[cfg(target_os = "linux")]
+mod imp_sock {
+    use std::io;
+    use std::mem;
+    use std::net::{SocketAddr, TcpListener};
+    use std::os::raw::{c_int, c_uint, c_ushort, c_void};
+    use std::os::unix::io::FromRawFd;
+
+    const AF_INET: c_int = 2;
+    const AF_INET6: c_int = 10;
+    const SOCK_STREAM: c_int = 1;
+    const SOCK_CLOEXEC: c_int = 0o2000000;
+    const SOL_SOCKET: c_int = 1;
+    const SO_REUSEADDR: c_int = 2;
+    const SO_REUSEPORT: c_int = 15;
+    const LISTEN_BACKLOG: c_int = 1024;
+
+    /// `struct sockaddr_in`: port and address stored in network byte order
+    /// (the address as raw memory-order octets).
+    #[repr(C)]
+    struct SockaddrIn {
+        sin_family: c_ushort,
+        sin_port: u16,
+        sin_addr: u32,
+        sin_zero: [u8; 8],
+    }
+
+    #[repr(C)]
+    struct SockaddrIn6 {
+        sin6_family: c_ushort,
+        sin6_port: u16,
+        sin6_flowinfo: u32,
+        sin6_addr: [u8; 16],
+        sin6_scope_id: u32,
+    }
+
+    extern "C" {
+        fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+        fn setsockopt(
+            fd: c_int,
+            level: c_int,
+            name: c_int,
+            val: *const c_void,
+            len: c_uint,
+        ) -> c_int;
+        fn bind(fd: c_int, addr: *const c_void, len: c_uint) -> c_int;
+        fn listen(fd: c_int, backlog: c_int) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    /// Closes the fd on early-error return paths; forgotten once the fd's
+    /// ownership transfers to the `TcpListener`.
+    struct FdGuard(c_int);
+
+    impl Drop for FdGuard {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.0);
+            }
+        }
+    }
+
+    pub fn bind_reuseport(addr: SocketAddr) -> io::Result<TcpListener> {
+        let family = match addr {
+            SocketAddr::V4(_) => AF_INET,
+            SocketAddr::V6(_) => AF_INET6,
+        };
+        unsafe {
+            let fd = socket(family, SOCK_STREAM | SOCK_CLOEXEC, 0);
+            if fd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            let guard = FdGuard(fd);
+            let one: c_int = 1;
+            for opt in [SO_REUSEADDR, SO_REUSEPORT] {
+                if setsockopt(
+                    fd,
+                    SOL_SOCKET,
+                    opt,
+                    &one as *const c_int as *const c_void,
+                    mem::size_of::<c_int>() as c_uint,
+                ) < 0
+                {
+                    return Err(io::Error::last_os_error());
+                }
+            }
+            let bound = match addr {
+                SocketAddr::V4(v4) => {
+                    let sa = SockaddrIn {
+                        sin_family: AF_INET as c_ushort,
+                        sin_port: v4.port().to_be(),
+                        sin_addr: u32::from_ne_bytes(v4.ip().octets()),
+                        sin_zero: [0; 8],
+                    };
+                    bind(
+                        fd,
+                        &sa as *const SockaddrIn as *const c_void,
+                        mem::size_of::<SockaddrIn>() as c_uint,
+                    )
+                }
+                SocketAddr::V6(v6) => {
+                    let sa = SockaddrIn6 {
+                        sin6_family: AF_INET6 as c_ushort,
+                        sin6_port: v6.port().to_be(),
+                        sin6_flowinfo: v6.flowinfo(),
+                        sin6_addr: v6.ip().octets(),
+                        sin6_scope_id: v6.scope_id(),
+                    };
+                    bind(
+                        fd,
+                        &sa as *const SockaddrIn6 as *const c_void,
+                        mem::size_of::<SockaddrIn6>() as c_uint,
+                    )
+                }
+            };
+            if bound < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            if listen(fd, LISTEN_BACKLOG) < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            mem::forget(guard);
+            Ok(TcpListener::from_raw_fd(fd))
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod imp_sock {
+    use std::io;
+    use std::net::{SocketAddr, TcpListener};
+
+    /// `SO_REUSEPORT` exists on the BSDs but does not load-balance accepts
+    /// the way the sharded-accept path needs; report unsupported so the
+    /// server takes the acceptor-handoff fallback.
+    pub fn bind_reuseport(_addr: SocketAddr) -> io::Result<TcpListener> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "SO_REUSEPORT accept sharding is only wired up on Linux",
+        ))
+    }
+}
+
 /// Write half of the reactor's self-wake pipe.  Cheap, clonable via `Arc`,
 /// callable from any thread; coalesces (a full pipe means a wake is already
 /// pending, so `WouldBlock` is ignored).
@@ -361,6 +525,30 @@ mod tests {
         assert!(events.iter().any(|e| e.token == 1 && e.writable));
         poller.deregister(a.as_raw_fd()).unwrap();
         drop(b);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn reuseport_listeners_share_one_port() {
+        assert!(reuseport_available());
+        let a = bind_reuseport("127.0.0.1:0".parse().unwrap()).unwrap();
+        let addr = a.local_addr().unwrap();
+        assert_ne!(addr.port(), 0, "ephemeral bind resolved to a real port");
+        let b = bind_reuseport(addr).unwrap();
+        assert_eq!(b.local_addr().unwrap(), addr);
+        a.set_nonblocking(true).unwrap();
+        b.set_nonblocking(true).unwrap();
+        let _c = std::net::TcpStream::connect(addr).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        let mut accepted = false;
+        while Instant::now() < deadline {
+            if a.accept().is_ok() || b.accept().is_ok() {
+                accepted = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(accepted, "one of the two shared listeners took the connection");
     }
 
     #[test]

@@ -5,20 +5,29 @@
 //!
 //! The core is readiness-driven, not thread-per-connection:
 //!
-//! * **One reactor thread** owns the listener, every connection socket and
-//!   an epoll-style [`Poller`] (see [`crate::db::event`]).  It accepts,
-//!   reads frames, writes replies, and sleeps until the OS reports
-//!   readiness — an idle server (and every idle connection) costs zero
-//!   wakeups, where the previous design woke each connection thread once
-//!   per `conn_read_timeout` just to re-check the stop flag.
+//! * **A fixed set of reactor threads** (`ServerConfig::reactors`, default
+//!   one; `SITU_REACTORS` caps at `cores`) each owns a disjoint set of
+//!   connection sockets and an epoll-style [`Poller`] (see
+//!   [`crate::db::event`]).  A reactor accepts, reads frames, writes
+//!   replies, and sleeps until the OS reports readiness — an idle server
+//!   (and every idle connection) costs zero wakeups.  With several
+//!   reactors, each owns its own `SO_REUSEPORT` listener and the kernel
+//!   balances accepts across them; where the option is unavailable,
+//!   reactor 0 owns the only listener and deals accepted sockets to its
+//!   peers round-robin through their doorbells.  A connection lives on one
+//!   reactor for its lifetime, so per-connection state is never shared.
 //! * **A small executor pool** (`engine.exec_threads(cores)`, clamped to
-//!   16) runs decoded commands through the engine's [`CommandGate`].  The
-//!   Redis engine keeps its single-executor semantics; KeyDb gets one
-//!   executor per configured core.
+//!   16) runs decoded commands through the engine's [`CommandGate`],
+//!   pulling from one queue fed by every reactor.  The Redis engine keeps
+//!   its single-executor semantics; KeyDb gets one executor per configured
+//!   core.
 //! * **One poll-hub timer thread** owns parked `PollKeys` waits and the
 //!   background TTL sweeper.  A poll that misses its first probe parks as
-//!   a timer-driven waiter instead of sleeping an OS thread, and is
-//!   re-probed with the same capped exponential backoff as before.
+//!   a timer-driven waiter instead of sleeping an OS thread.  Waiters are
+//!   indexed by key: the store's write observer nudges the hub the moment
+//!   a watched key lands, so a parked poll resolves at write latency; the
+//!   capped exponential backoff probe clock remains as the fallback that
+//!   covers timeouts and TTL expiry.
 //!
 //! # Multiplexing
 //!
@@ -55,14 +64,16 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::unix::io::{AsRawFd, RawFd};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::ai::ModelRuntime;
 use crate::db::engine::{CommandGate, Engine};
-use crate::db::event::{waker, Event, Poller, WakeReceiver, Waker};
+use crate::db::event::{
+    bind_reuseport, reuseport_available, waker, Event, Poller, WakeReceiver, Waker,
+};
 use crate::db::spill::SpillConfig;
 use crate::db::store::{RetentionConfig, Store};
 use crate::error::{Error, Result};
@@ -139,8 +150,17 @@ pub struct ServerConfig {
     pub conn_read_timeout: Duration,
     /// Vestigial: the accept path is readiness-driven and no longer backs
     /// off.  Retained so existing configs keep compiling; the value is
-    /// ignored.
+    /// ignored, and setting it to anything but the default logs a one-time
+    /// deprecation warning at startup.
     pub accept_backoff_max: Duration,
+    /// Reactor (I/O event loop) threads.  `0` — the default — defers to
+    /// the `SITU_REACTORS` environment variable capped at [`Self::cores`],
+    /// falling back to a single reactor when the variable is unset.  With
+    /// more than one reactor each thread owns its own `SO_REUSEPORT`
+    /// listener (kernel-balanced accepts); where the option is
+    /// unavailable, reactor 0 owns the only listener and deals accepted
+    /// sockets to its peers round-robin through their doorbells.
+    pub reactors: usize,
     /// Optional seeded fault schedule: every accepted connection is served
     /// through a [`FaultStream`] drawing decisions from this plan (see
     /// [`crate::util::fault`]).  `None` (the default) serves plain sockets
@@ -159,35 +179,70 @@ impl Default for ServerConfig {
             spill: None,
             conn_read_timeout: CONN_READ_TIMEOUT,
             accept_backoff_max: ACCEPT_BACKOFF_MAX,
+            reactors: 0,
             fault: None,
         }
     }
 }
 
-/// Identifies one in-flight request: connection token + request tag.
+/// Resolve the configured reactor count: an explicit `config.reactors`
+/// wins; `0` defers to `min(cores, SITU_REACTORS)` when the environment
+/// variable is set, else a single reactor (the pre-sharding behavior).
+fn resolve_reactors(config: &ServerConfig) -> usize {
+    let n = if config.reactors > 0 {
+        config.reactors
+    } else {
+        match std::env::var("SITU_REACTORS").ok().and_then(|v| v.parse::<usize>().ok()) {
+            Some(n) if n > 0 => n.min(config.cores.max(1)),
+            _ => 1,
+        }
+    };
+    n.clamp(1, 64)
+}
+
+/// Identifies one in-flight request: owning reactor + connection token +
+/// request tag.
 #[derive(Debug, Clone, Copy)]
 struct Ticket {
+    reactor: u32,
     token: u64,
     tag: u32,
 }
 
-/// A finished request on its way back to the reactor.
+/// A finished request on its way back to its reactor.
 struct Completion {
     ticket: Ticket,
     resp: Response,
 }
 
-/// State shared between the reactor, executors and the poll hub.
-struct Shared {
+/// One reactor's mailboxes, paired with its doorbell: finished requests,
+/// and (in the acceptor-handoff fallback) freshly accepted sockets
+/// awaiting adoption.
+struct ReactorShared {
     completions: Mutex<Vec<Completion>>,
+    /// Sockets handed over by reactor 0 when `SO_REUSEPORT` is
+    /// unavailable; the owning reactor adopts them on its next wakeup.
+    inbox: Mutex<Vec<TcpStream>>,
     waker: Waker,
+}
+
+/// State shared between the reactors, executors and the poll hub.
+struct Shared {
+    reactors: Vec<ReactorShared>,
     stop: AtomicBool,
 }
 
 impl Shared {
     fn complete(&self, ticket: Ticket, resp: Response) {
-        self.completions.lock().unwrap().push(Completion { ticket, resp });
-        self.waker.wake();
+        let r = &self.reactors[ticket.reactor as usize];
+        r.completions.lock().unwrap().push(Completion { ticket, resp });
+        r.waker.wake();
+    }
+
+    fn wake_all(&self) {
+        for r in &self.reactors {
+            r.waker.wake();
+        }
     }
 }
 
@@ -398,55 +453,116 @@ struct Waiter {
     interval: Duration,
     cap: Duration,
     next_probe: Instant,
+    /// The next probe is a *verification* (fresh registration closing the
+    /// miss→put race, or a write wakeup), not a backoff expiry: a miss
+    /// re-arms the current interval instead of doubling it, so wakeups
+    /// never inflate the backoff clock.
+    skip_backoff: bool,
     batch: Option<BatchCont>,
 }
 
 struct HubState {
-    waiters: Vec<Waiter>,
+    /// Waiter slab, keyed by a hub-local id.
+    waiters: HashMap<u64, Waiter>,
+    /// key → ids of waiters watching it (the write-wakeup index).  A
+    /// waiter appears under every one of its keys; entries are scrubbed
+    /// when the waiter is removed.
+    by_key: HashMap<String, Vec<u64>>,
+    next_id: u64,
     ttl_period: Option<Duration>,
     next_sweep: Option<Instant>,
     stopped: bool,
 }
 
 /// Timer hub: owns parked poll waiters and the background TTL sweep.  One
-/// thread sleeps to the earliest timer; registrations and policy changes
-/// nudge it through the condvar.
+/// thread sleeps to the earliest timer; registrations, policy changes and
+/// write notifications nudge it through the condvar.
 struct PollHub {
     state: Mutex<HubState>,
     cv: Condvar,
+    /// Parked-waiter count readable without the lock: `notify_key` on the
+    /// put hot path bails on one atomic load when nobody is waiting.
+    parked: AtomicUsize,
+    /// Write notifications that advanced at least one parked waiter —
+    /// i.e. resolutions delivered strictly before the waiter's next
+    /// backoff probe.  The structural gate for the write-wakeup path.
+    write_wakeups: AtomicU64,
 }
 
 impl PollHub {
     fn new() -> PollHub {
         PollHub {
             state: Mutex::new(HubState {
-                waiters: Vec::new(),
+                waiters: HashMap::new(),
+                by_key: HashMap::new(),
+                next_id: 0,
                 ttl_period: None,
                 next_sweep: None,
                 stopped: false,
             }),
             cv: Condvar::new(),
+            parked: AtomicUsize::new(0),
+            write_wakeups: AtomicU64::new(0),
         }
     }
 
     fn register(&self, ticket: Ticket, p: Park) {
-        let now = Instant::now();
-        let next_probe = now + p.interval.min(p.deadline.saturating_duration_since(now));
+        // Park with an immediate verification probe: a key that landed in
+        // the window between the executor's miss and this registration
+        // (when `notify_key` had no waiter to find) is caught on the hub's
+        // next pass instead of a full backoff interval later.
         self.register_waiter(Waiter {
             ticket,
             keys: p.keys,
             deadline: p.deadline,
             interval: p.interval,
             cap: p.cap,
-            next_probe,
+            next_probe: Instant::now(),
+            skip_backoff: true,
             batch: p.batch,
         });
     }
 
     fn register_waiter(&self, w: Waiter) {
         let mut s = self.state.lock().unwrap();
-        s.waiters.push(w);
+        let id = s.next_id;
+        s.next_id += 1;
+        for k in &w.keys {
+            s.by_key.entry(k.clone()).or_default().push(id);
+        }
+        s.waiters.insert(id, w);
+        self.parked.store(s.waiters.len(), Ordering::Release);
         self.cv.notify_one();
+    }
+
+    /// Wake every waiter parked on `key`: mark it due now so the hub's
+    /// next pass probes (and resolves) it.  Invoked by the store's write
+    /// observer after each successful put; when nothing is parked the cost
+    /// is a single atomic load.
+    fn notify_key(&self, key: &str) {
+        if self.parked.load(Ordering::Acquire) == 0 {
+            return;
+        }
+        let mut s = self.state.lock().unwrap();
+        let ids = match s.by_key.get(key) {
+            Some(ids) => ids.clone(),
+            None => return,
+        };
+        let now = Instant::now();
+        let mut hit = false;
+        for id in ids {
+            if let Some(w) = s.waiters.get_mut(&id) {
+                if w.next_probe > now {
+                    w.next_probe = now;
+                    w.skip_backoff = true;
+                    hit = true;
+                }
+            }
+        }
+        if hit {
+            self.write_wakeups.fetch_add(1, Ordering::Relaxed);
+            self.cv.notify_one();
+        }
     }
 
     /// (Re)arm the background TTL sweeper: period `ttl/4` clamped to
@@ -486,17 +602,21 @@ fn run_hub(ctx: ExecCtx) {
                 if s.stopped {
                     // Resolve every remaining waiter so no connection hangs
                     // through shutdown.
-                    due.append(&mut s.waiters);
+                    let ids: Vec<u64> = s.waiters.keys().copied().collect();
+                    for id in ids {
+                        due.push(remove_waiter(&mut s, id));
+                    }
                     break;
                 }
                 let now = Instant::now();
-                let mut i = 0;
-                while i < s.waiters.len() {
-                    if s.waiters[i].next_probe <= now {
-                        due.push(s.waiters.swap_remove(i));
-                    } else {
-                        i += 1;
-                    }
+                let due_ids: Vec<u64> = s
+                    .waiters
+                    .iter()
+                    .filter(|(_, w)| w.next_probe <= now)
+                    .map(|(&id, _)| id)
+                    .collect();
+                for id in due_ids {
+                    due.push(remove_waiter(&mut s, id));
                 }
                 if let Some(t) = s.next_sweep {
                     if t <= now {
@@ -509,7 +629,8 @@ fn run_hub(ctx: ExecCtx) {
                 }
                 // Sleep to the earliest timer, or indefinitely if none —
                 // an idle hub makes zero wakeups.
-                let earliest = s.waiters.iter().map(|w| w.next_probe).chain(s.next_sweep).min();
+                let earliest =
+                    s.waiters.values().map(|w| w.next_probe).chain(s.next_sweep).min();
                 s = match earliest {
                     None => hub.cv.wait(s).unwrap(),
                     Some(t) => {
@@ -521,6 +642,7 @@ fn run_hub(ctx: ExecCtx) {
                     }
                 };
             }
+            hub.parked.store(s.waiters.len(), Ordering::Release);
             stopping = s.stopped;
         }
         // Probes and sweeps run outside the hub lock: they take the
@@ -537,9 +659,24 @@ fn run_hub(ctx: ExecCtx) {
     }
 }
 
+/// Remove one waiter from the slab, scrubbing its key-index entries.
+fn remove_waiter(s: &mut HubState, id: u64) -> Waiter {
+    let w = s.waiters.remove(&id).expect("due waiter id is valid");
+    for k in &w.keys {
+        if let Some(ids) = s.by_key.get_mut(k) {
+            ids.retain(|&i| i != id);
+            if ids.is_empty() {
+                s.by_key.remove(k);
+            }
+        }
+    }
+    w
+}
+
 /// Probe one due waiter.  Resolved waiters complete directly (bare polls)
-/// or resume their batch on the executor pool; unresolved ones re-park
-/// with doubled backoff.
+/// or resume their batch on the executor pool; unresolved ones re-park —
+/// with doubled backoff when a real backoff interval expired, unchanged
+/// when the probe was a registration/write-wakeup verification.
 fn probe_waiter(mut w: Waiter, stopping: bool, ctx: &ExecCtx) {
     let present = {
         let _g = ctx.gate.enter();
@@ -555,13 +692,17 @@ fn probe_waiter(mut w: Waiter, stopping: bool, ctx: &ExecCtx) {
         }
         return;
     }
-    w.interval = (w.interval * 2).min(w.cap);
+    if w.skip_backoff {
+        w.skip_backoff = false;
+    } else {
+        w.interval = (w.interval * 2).min(w.cap);
+    }
     w.next_probe = now + w.interval.min(w.deadline.saturating_duration_since(now));
     ctx.hub.register_waiter(w);
 }
 
 // ---------------------------------------------------------------------------
-// Reactor: the single event-loop thread owning all sockets.
+// Reactor: an event-loop thread owning a disjoint shard of the sockets.
 // ---------------------------------------------------------------------------
 
 /// An outbound segment: either bytes owned by the outbox (headers and
@@ -628,6 +769,9 @@ struct ReactorCtx {
     jobs: Arc<JobQueue>,
     shared: Arc<Shared>,
     store: Arc<Store>,
+    /// This reactor's index, stamped into every [`Ticket`] so completions
+    /// route back to the owning event loop.
+    reactor: u32,
     /// Connections currently holding a partial frame; the event loop only
     /// uses a wait timeout when this is non-zero.
     n_partial: usize,
@@ -637,10 +781,18 @@ struct ReactorCtx {
 struct Reactor {
     ctx: ReactorCtx,
     conns: HashMap<u64, Conn>,
-    listener: TcpListener,
+    /// `None` on reactors 1.. in the acceptor-handoff fallback, where only
+    /// reactor 0 listens.
+    listener: Option<TcpListener>,
     wake_rx: WakeReceiver,
     fault: Option<Arc<FaultPlan>>,
     next_token: u64,
+    index: usize,
+    n_reactors: usize,
+    /// Deal accepted sockets round-robin to peer inboxes instead of
+    /// adopting them all (set on reactor 0 in the fallback mode only).
+    handoff: bool,
+    next_rr: usize,
 }
 
 enum Parsed {
@@ -675,6 +827,7 @@ impl Reactor {
                     t => self.conn_event(t, ev.writable, ev.readable || ev.hangup),
                 }
             }
+            self.drain_inbox();
             self.drain_completions();
             if self.ctx.n_partial > 0 {
                 self.kill_stalled();
@@ -689,49 +842,88 @@ impl Reactor {
 
     /// Drain the accept backlog.  Readiness-driven: the first connect
     /// after any idle period is served at event latency, not after an
-    /// accept-backoff sleep.
+    /// accept-backoff sleep.  With `SO_REUSEPORT` sharding every reactor
+    /// runs this against its own listener; in the fallback mode only
+    /// reactor 0 listens and deals accepted sockets round-robin to its
+    /// peers through their inboxes.
     fn accept_ready(&mut self) {
         loop {
-            match self.listener.accept() {
+            let Some(listener) = &self.listener else {
+                return;
+            };
+            match listener.accept() {
                 Ok((sock, _peer)) => {
-                    sock.set_nodelay(true).ok();
-                    if sock.set_nonblocking(true).is_err() {
+                    if !self.handoff {
+                        self.adopt(sock);
                         continue;
                     }
-                    let fd = sock.as_raw_fd();
-                    // Each connection draws its own decision stream from
-                    // the plan; `None` is a passthrough wrapper.
-                    let conn_faults = self.fault.as_ref().map(|p| p.connection());
-                    let token = self.next_token;
-                    self.next_token += 1;
-                    if self.ctx.poller.register(fd, token, true, false).is_err() {
-                        continue; // drop the socket
+                    let target = self.next_rr % self.n_reactors;
+                    self.next_rr = self.next_rr.wrapping_add(1);
+                    if target == self.index {
+                        self.adopt(sock);
+                    } else {
+                        let slot = &self.ctx.shared.reactors[target];
+                        slot.inbox.lock().unwrap().push(sock);
+                        slot.waker.wake();
                     }
-                    self.conns.insert(
-                        token,
-                        Conn {
-                            stream: FaultStream::over(sock, conn_faults),
-                            fd,
-                            rbuf: Vec::new(),
-                            rpos: 0,
-                            direct: None,
-                            outbox: VecDeque::new(),
-                            legacy_q: VecDeque::new(),
-                            legacy_busy: false,
-                            in_flight: 0,
-                            read_on: true,
-                            write_on: false,
-                            partial_since: None,
-                        },
-                    );
-                    // Any bytes already queued on the socket re-announce
-                    // through the level-triggered poller next wait.
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                 Err(_) => break,
             }
         }
+    }
+
+    /// Adopt sockets handed over by the accepting reactor (the
+    /// non-`SO_REUSEPORT` fallback); a no-op in reuseport mode.
+    fn drain_inbox(&mut self) {
+        if self.n_reactors == 1 {
+            return;
+        }
+        let handed = {
+            let mut g = self.ctx.shared.reactors[self.index].inbox.lock().unwrap();
+            std::mem::take(&mut *g)
+        };
+        for sock in handed {
+            self.adopt(sock);
+        }
+    }
+
+    /// Take ownership of a freshly accepted socket: nonblocking mode,
+    /// fault plan, poller registration, connection-table entry.
+    fn adopt(&mut self, sock: TcpStream) {
+        sock.set_nodelay(true).ok();
+        if sock.set_nonblocking(true).is_err() {
+            return;
+        }
+        let fd = sock.as_raw_fd();
+        // Each connection draws its own decision stream from the plan;
+        // `None` is a passthrough wrapper.
+        let conn_faults = self.fault.as_ref().map(|p| p.connection());
+        let token = self.next_token;
+        self.next_token += 1;
+        if self.ctx.poller.register(fd, token, true, false).is_err() {
+            return; // drop the socket
+        }
+        self.conns.insert(
+            token,
+            Conn {
+                stream: FaultStream::over(sock, conn_faults),
+                fd,
+                rbuf: Vec::new(),
+                rpos: 0,
+                direct: None,
+                outbox: VecDeque::new(),
+                legacy_q: VecDeque::new(),
+                legacy_busy: false,
+                in_flight: 0,
+                read_on: true,
+                write_on: false,
+                partial_since: None,
+            },
+        );
+        // Any bytes already queued on the socket re-announce through the
+        // level-triggered poller next wait.
     }
 
     fn conn_event(&mut self, token: u64, writable: bool, readable: bool) {
@@ -757,7 +949,7 @@ impl Reactor {
     /// Deliver finished requests back to their connections and flush.
     fn drain_completions(&mut self) {
         let pending = {
-            let mut g = self.ctx.shared.completions.lock().unwrap();
+            let mut g = self.ctx.shared.reactors[self.index].completions.lock().unwrap();
             std::mem::take(&mut *g)
         };
         for c in pending {
@@ -966,7 +1158,7 @@ fn dispatch_frame(ctx: &mut ReactorCtx, token: u64, conn: &mut Conn, tag: u32, b
         }
         Ok(req) => {
             conn.in_flight += 1;
-            let ticket = Ticket { token, tag };
+            let ticket = Ticket { reactor: ctx.reactor, token, tag };
             if tag == 0 {
                 if conn.legacy_busy {
                     conn.legacy_q.push_back(LegacyJob::Run(req));
@@ -995,7 +1187,8 @@ fn on_complete(ctx: &mut ReactorCtx, token: u64, conn: &mut Conn, tag: u32, resp
                 }
                 LegacyJob::Run(req) => {
                     conn.legacy_busy = true;
-                    ctx.jobs.push(Job::Request { ticket: Ticket { token, tag: 0 }, req });
+                    let ticket = Ticket { reactor: ctx.reactor, token, tag: 0 };
+                    ctx.jobs.push(Job::Request { ticket, req });
                     break;
                 }
             }
@@ -1119,7 +1312,7 @@ pub struct DbServer {
     shared: Arc<Shared>,
     jobs: Arc<JobQueue>,
     hub: Arc<PollHub>,
-    reactor_thread: Option<JoinHandle<()>>,
+    reactor_threads: Vec<JoinHandle<()>>,
     exec_threads: Vec<JoinHandle<()>>,
     hub_thread: Option<JoinHandle<()>>,
     pub config: ServerConfig,
@@ -1142,9 +1335,43 @@ impl DbServer {
     /// Start a server sharing an existing model runtime (co-located
     /// deployments reuse one PJRT executor across components).
     pub fn start_with(config: ServerConfig, models: Option<Arc<ModelRuntime>>) -> Result<DbServer> {
-        let listener = TcpListener::bind(config.addr)?;
-        let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
+        if config.accept_backoff_max != ACCEPT_BACKOFF_MAX {
+            // The knob is dead — accepts are readiness-driven, there is no
+            // backoff ladder — but callers may still set it.  Warn once per
+            // process, not per server.
+            static BACKOFF_WARN: std::sync::Once = std::sync::Once::new();
+            BACKOFF_WARN.call_once(|| {
+                eprintln!(
+                    "situ-db: ServerConfig::accept_backoff_max is deprecated and \
+                     ignored (accepts are readiness-driven); stop setting it"
+                );
+            });
+        }
+        let n_reactors = resolve_reactors(&config);
+        // Listener strategy: one reactor binds plainly.  Several reactors
+        // prefer one SO_REUSEPORT listener each (kernel-balanced accepts);
+        // where the option is unavailable, reactor 0 owns the only
+        // listener and deals accepted sockets to its peers.
+        let mut listeners: Vec<Option<TcpListener>> = Vec::with_capacity(n_reactors);
+        let handoff;
+        if n_reactors > 1 && reuseport_available() {
+            let first = bind_reuseport(config.addr).map_err(Error::Io)?;
+            let bound = first.local_addr()?;
+            listeners.push(Some(first));
+            for _ in 1..n_reactors {
+                listeners.push(Some(bind_reuseport(bound).map_err(Error::Io)?));
+            }
+            handoff = false;
+        } else {
+            listeners.push(Some(TcpListener::bind(config.addr)?));
+            listeners.resize_with(n_reactors, || None);
+            handoff = n_reactors > 1;
+        }
+        let addr =
+            listeners[0].as_ref().expect("reactor 0 always owns a listener").local_addr()?;
+        for l in listeners.iter().flatten() {
+            l.set_nonblocking(true)?;
+        }
         let store = Arc::new(Store::new());
         // Spill first, so the very first window retirement already lands
         // in the cold tier (opening also crash-recovers an existing log).
@@ -1155,15 +1382,28 @@ impl DbServer {
             store.set_retention(config.retention);
         }
         let gate = Arc::new(CommandGate::new(config.engine));
-        let (wake, wake_rx) = waker().map_err(Error::Io)?;
-        let shared = Arc::new(Shared {
-            completions: Mutex::new(Vec::new()),
-            waker: wake,
-            stop: AtomicBool::new(false),
-        });
+        let mut reactor_shared = Vec::with_capacity(n_reactors);
+        let mut wake_rxs = Vec::with_capacity(n_reactors);
+        for _ in 0..n_reactors {
+            let (wake, wake_rx) = waker().map_err(Error::Io)?;
+            reactor_shared.push(ReactorShared {
+                completions: Mutex::new(Vec::new()),
+                inbox: Mutex::new(Vec::new()),
+                waker: wake,
+            });
+            wake_rxs.push(wake_rx);
+        }
+        let shared = Arc::new(Shared { reactors: reactor_shared, stop: AtomicBool::new(false) });
         let jobs = Arc::new(JobQueue::new());
         let hub = Arc::new(PollHub::new());
         hub.set_ttl(store.retention().ttl());
+        // Write-triggered poll wakeup: every landed put nudges the hub so
+        // parked waiters on that key resolve now, not at their next
+        // backoff probe.
+        {
+            let hub = Arc::clone(&hub);
+            store.set_write_observer(Arc::new(move |key: &str| hub.notify_key(key)));
+        }
         let ctx = ExecCtx {
             store: Arc::clone(&store),
             models: models.clone(),
@@ -1188,32 +1428,44 @@ impl DbServer {
             .name("db-hub".into())
             .spawn(move || run_hub(ctx))
             .map_err(Error::Io)?;
-        let mut poller = Poller::new().map_err(Error::Io)?;
-        poller
-            .register(listener.as_raw_fd(), TOKEN_LISTENER, true, false)
-            .map_err(Error::Io)?;
-        poller
-            .register(wake_rx.as_raw_fd(), TOKEN_WAKER, true, false)
-            .map_err(Error::Io)?;
-        let reactor = Reactor {
-            ctx: ReactorCtx {
-                poller,
-                jobs: Arc::clone(&jobs),
-                shared: Arc::clone(&shared),
-                store: Arc::clone(&store),
-                n_partial: 0,
-                stall_timeout: config.conn_read_timeout,
-            },
-            conns: HashMap::new(),
-            listener,
-            wake_rx,
-            fault: config.fault.clone(),
-            next_token: FIRST_CONN_TOKEN,
-        };
-        let reactor_thread = std::thread::Builder::new()
-            .name(format!("db-reactor-{}", addr.port()))
-            .spawn(move || reactor.run())
-            .map_err(Error::Io)?;
+        let mut reactor_threads = Vec::with_capacity(n_reactors);
+        for (i, (listener, wake_rx)) in listeners.into_iter().zip(wake_rxs).enumerate() {
+            let mut poller = Poller::new().map_err(Error::Io)?;
+            if let Some(l) = &listener {
+                poller
+                    .register(l.as_raw_fd(), TOKEN_LISTENER, true, false)
+                    .map_err(Error::Io)?;
+            }
+            poller
+                .register(wake_rx.as_raw_fd(), TOKEN_WAKER, true, false)
+                .map_err(Error::Io)?;
+            let reactor = Reactor {
+                ctx: ReactorCtx {
+                    poller,
+                    jobs: Arc::clone(&jobs),
+                    shared: Arc::clone(&shared),
+                    store: Arc::clone(&store),
+                    reactor: i as u32,
+                    n_partial: 0,
+                    stall_timeout: config.conn_read_timeout,
+                },
+                conns: HashMap::new(),
+                listener,
+                wake_rx,
+                fault: config.fault.clone(),
+                next_token: FIRST_CONN_TOKEN,
+                index: i,
+                n_reactors,
+                handoff: handoff && i == 0,
+                next_rr: 0,
+            };
+            reactor_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("db-reactor-{}-{i}", addr.port()))
+                    .spawn(move || reactor.run())
+                    .map_err(Error::Io)?,
+            );
+        }
         Ok(DbServer {
             addr,
             store,
@@ -1221,7 +1473,7 @@ impl DbServer {
             shared,
             jobs,
             hub,
-            reactor_thread: Some(reactor_thread),
+            reactor_threads,
             exec_threads,
             hub_thread: Some(hub_thread),
             config,
@@ -1239,15 +1491,28 @@ impl DbServer {
         self.models.as_ref()
     }
 
+    /// Write notifications that advanced a parked `PollKeys` waiter —
+    /// i.e. poll resolutions delivered at write latency, strictly before
+    /// the waiter's next backoff probe would have fired.  Benches use this
+    /// to gate the write-wakeup path structurally.
+    pub fn poll_write_wakeups(&self) -> u64 {
+        self.hub.write_wakeups.load(Ordering::Relaxed)
+    }
+
+    /// The number of reactor threads this server is running.
+    pub fn reactors(&self) -> usize {
+        self.reactor_threads.len()
+    }
+
     /// Stop all threads and close every socket (idempotent).  Shutdown is
     /// signal-driven — the reactor wakes on the self-pipe and the hub on
     /// its condvar — so it completes at event latency, not after a poll
     /// interval.
     fn teardown(&mut self) {
         self.shared.stop.store(true, Ordering::Relaxed);
-        self.shared.waker.wake();
+        self.shared.wake_all();
         self.hub.stop();
-        if let Some(h) = self.reactor_thread.take() {
+        for h in self.reactor_threads.drain(..) {
             let _ = h.join();
         }
         self.jobs.close();

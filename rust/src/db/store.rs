@@ -98,7 +98,7 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::db::spill::{self, SpillConfig, SpillMsg, SpillShared};
@@ -393,6 +393,13 @@ pub struct Store {
     spill: Mutex<Option<SpillHandle>>,
     /// Lock-free "spill is on" flag checked by the eviction paths.
     spill_on: AtomicBool,
+    /// Write observer, set at most once (by the server, which points it at
+    /// the poll hub's key wakeup).  Invoked after every successful
+    /// `put_tensor` / `put_meta` with the key that just landed — the seam
+    /// that lets parked `PollKeys` waiters resolve at write time instead of
+    /// at their next backoff probe.  Unset (every bare `Store::new`), the
+    /// hot path pays one atomic load.
+    write_observer: OnceLock<Arc<dyn Fn(&str) + Send + Sync>>,
     pub counters: Counters,
 }
 
@@ -449,7 +456,23 @@ impl Store {
             lru_tick: AtomicU64::new(0),
             spill: Mutex::new(None),
             spill_on: AtomicBool::new(false),
+            write_observer: OnceLock::new(),
             counters: Counters::default(),
+        }
+    }
+
+    /// Install the write observer (idempotent-ignore after the first call —
+    /// a store serves exactly one server for its lifetime).  Called outside
+    /// every store lock and invoked the same way, so the observer may take
+    /// its own locks freely.
+    pub fn set_write_observer(&self, f: Arc<dyn Fn(&str) + Send + Sync>) {
+        let _ = self.write_observer.set(f);
+    }
+
+    /// Fire the write observer for a key that just became visible.
+    fn notify_write(&self, key: &str) {
+        if let Some(f) = self.write_observer.get() {
+            f(key);
         }
     }
 
@@ -672,6 +695,7 @@ impl Store {
                     Instant::now(),
                 );
             }
+            self.notify_write(key);
             return Ok(());
         }
 
@@ -723,6 +747,10 @@ impl Store {
                 self.expire_shard_locked(&mut idx, ttl, now);
             }
         }
+        // Notify outside the index shard lock: the observer takes the poll
+        // hub's lock and must stay a leaf in the lock order.
+        drop(idx);
+        self.notify_write(key);
         Ok(())
     }
 
@@ -1110,8 +1138,13 @@ impl Store {
 
     pub fn put_meta(&self, key: &str, value: &str) {
         self.counters.ops.fetch_add(1, Ordering::Relaxed);
-        let mut s = self.shard(key).lock().unwrap();
-        s.metas.insert(key.to_string(), value.to_string());
+        {
+            let mut s = self.shard(key).lock().unwrap();
+            s.metas.insert(key.to_string(), value.to_string());
+        }
+        // `exists_all` answers true for metadata too, so metadata writes
+        // must wake parked pollers just like tensor writes.
+        self.notify_write(key);
     }
 
     pub fn get_meta(&self, key: &str) -> Result<String> {

@@ -70,6 +70,7 @@ fn print_help() {
 USAGE: situ <command> [flags]
 
   serve            --port 7700 --engine redis|keydb --cores 8 [--no-models]
+                   [--reactors N]
                    [--retention-window W] [--max-bytes B] [--ttl-ms T]
                    [--spill-dir DIR --spill-max-bytes B]
                    [--chaos-seed S --chaos-intensity F]
@@ -135,10 +136,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         spill,
         fault: fault.clone(),
+        reactors: args.usize_or("reactors", 0)?,
         ..Default::default()
     };
     let mut server = DbServer::start(cfg.clone())?;
-    println!("situ db listening on {} (engine={})", server.addr, engine.name());
+    println!(
+        "situ db listening on {} (engine={}, reactors={})",
+        server.addr,
+        engine.name(),
+        server.reactors()
+    );
     // Tests parse this line from a pipe (`--port 0` prints the real port),
     // and piped stdout is block-buffered — flush or they hang.
     std::io::stdout().flush().ok();

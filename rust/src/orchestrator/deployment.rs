@@ -23,6 +23,9 @@ pub struct DbSpec {
     /// Spill-to-disk cold tier for this instance (its own subdirectory of
     /// the run's `--spill-dir`, so instances never share a segment log).
     pub spill: Option<SpillConfig>,
+    /// Reactor threads for this instance (0 = auto; see
+    /// [`ServerConfig::reactors`]).
+    pub reactors: usize,
 }
 
 /// The resolved plan.
@@ -70,6 +73,7 @@ impl DeploymentPlan {
                     with_models,
                     retention,
                     spill: spill_for(node),
+                    reactors: cfg.reactors,
                 })
                 .collect(),
             Deployment::Clustered { db_nodes } => (0..db_nodes.max(1))
@@ -80,6 +84,7 @@ impl DeploymentPlan {
                     with_models,
                     retention,
                     spill: spill_for(cfg.nodes + i),
+                    reactors: cfg.reactors,
                 })
                 .collect(),
         };
@@ -115,6 +120,7 @@ impl DeploymentPlan {
                 retention: d.retention,
                 spill: d.spill.clone(),
                 fault: self.fault_plan_for(d.node),
+                reactors: d.reactors,
                 ..Default::default()
             })
             .collect()

@@ -53,7 +53,6 @@ fn shard_config() -> ServerConfig {
         engine: Engine::KeyDb,
         with_models: false,
         conn_read_timeout: Duration::from_millis(50),
-        accept_backoff_max: Duration::from_millis(5),
         ..Default::default()
     }
 }

@@ -19,7 +19,6 @@ fn start(engine: Engine) -> DbServer {
         engine,
         with_models: false,
         conn_read_timeout: Duration::from_millis(50),
-        accept_backoff_max: Duration::from_millis(5),
         ..Default::default()
     })
     .unwrap()
@@ -733,7 +732,6 @@ fn cluster_info_merges_spill_counters_and_routes_cold_reads() {
             retention: RetentionConfig::windowed(1, 0),
             spill: Some(situ::db::SpillConfig::new(base.join(format!("shard{i}")))),
             conn_read_timeout: Duration::from_millis(50),
-            accept_backoff_max: Duration::from_millis(5),
             ..Default::default()
         })
         .unwrap()
@@ -832,7 +830,6 @@ fn configured_timeouts_speed_up_teardown() {
         engine: Engine::Redis,
         with_models: false,
         conn_read_timeout: Duration::from_millis(25),
-        accept_backoff_max: Duration::from_millis(5),
         ..Default::default()
     })
     .unwrap();

@@ -2,6 +2,10 @@
 //! socket, with replies paired by tag rather than arrival order — plus the
 //! latency bugs the async core fixed (batch polls summing timeouts, idle
 //! connections pinning threads, slow shutdown) pinned as regressions.
+//!
+//! The battery runs under both the single-reactor seed topology and a
+//! 4-reactor shard (see [`reactor_counts`]): tag pairing, ordering, and
+//! fault semantics must be indistinguishable across reactor counts.
 
 use std::net::TcpStream;
 use std::sync::Arc;
@@ -13,14 +17,32 @@ use situ::proto::{read_frame, write_frame, Request, Response};
 use situ::tensor::Tensor;
 use situ::util::fault::{FaultConfig, FaultPlan};
 
-fn start(engine: Engine) -> DbServer {
+/// Reactor counts the battery sweeps.  `SITU_REACTORS=N` pins the whole
+/// battery to one count (the CI matrix uses this to re-run the suite
+/// against a 4-way shard); unset, each parameterized test covers both
+/// the single-reactor seed topology and a 4-reactor server.
+fn reactor_counts() -> Vec<usize> {
+    match std::env::var("SITU_REACTORS").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) if n > 0 => vec![n],
+        _ => vec![1, 4],
+    }
+}
+
+fn start_n(engine: Engine, reactors: usize) -> DbServer {
     DbServer::start(ServerConfig {
         engine,
         with_models: false,
         conn_read_timeout: Duration::from_millis(50),
+        reactors,
         ..Default::default()
     })
     .unwrap()
+}
+
+/// `reactors: 0` = auto, so the non-parameterized tests also follow the
+/// `SITU_REACTORS` knob when the CI matrix sets it.
+fn start(engine: Engine) -> DbServer {
+    start_n(engine, 0)
 }
 
 fn t(v: Vec<f32>) -> Tensor {
@@ -45,21 +67,23 @@ fn poll(key: &str, timeout_ms: u64) -> Request {
 /// payloads, on both engines.
 #[test]
 fn tagged_replies_pair_by_tag_not_order() {
-    for engine in [Engine::Redis, Engine::KeyDb] {
-        let server = start(engine);
-        let mut c = Client::connect(server.addr).unwrap();
-        let n = 32usize;
-        for i in 0..n {
-            c.put_tensor(&format!("k{i}"), &t(vec![i as f32; 8 + i])).unwrap();
-        }
-        let tags: Vec<u32> =
-            (0..n).map(|i| c.send_tagged(&get(&format!("k{i}"))).unwrap()).collect();
-        for (i, tag) in tags.iter().enumerate().rev() {
-            match c.recv_tagged(*tag).unwrap() {
-                Response::Tensor(got) => {
-                    assert_eq!(got, t(vec![i as f32; 8 + i]), "tag {tag} ↔ k{i}");
+    for reactors in reactor_counts() {
+        for engine in [Engine::Redis, Engine::KeyDb] {
+            let server = start_n(engine, reactors);
+            let mut c = Client::connect(server.addr).unwrap();
+            let n = 32usize;
+            for i in 0..n {
+                c.put_tensor(&format!("k{i}"), &t(vec![i as f32; 8 + i])).unwrap();
+            }
+            let tags: Vec<u32> =
+                (0..n).map(|i| c.send_tagged(&get(&format!("k{i}"))).unwrap()).collect();
+            for (i, tag) in tags.iter().enumerate().rev() {
+                match c.recv_tagged(*tag).unwrap() {
+                    Response::Tensor(got) => {
+                        assert_eq!(got, t(vec![i as f32; 8 + i]), "tag {tag} ↔ k{i}");
+                    }
+                    other => panic!("k{i}: expected tensor, got {other:?}"),
                 }
-                other => panic!("k{i}: expected tensor, got {other:?}"),
             }
         }
     }
@@ -69,31 +93,33 @@ fn tagged_replies_pair_by_tag_not_order() {
 /// opcode spread the multiplexer must keep straight.
 #[test]
 fn mixed_request_kinds_interleave() {
-    let server = start(Engine::Redis);
-    let mut c = Client::connect(server.addr).unwrap();
-    let put = Request::PutTensor { key: "a".into(), tensor: t(vec![1.0, 2.0]) };
-    let batch = Request::Batch(vec![
-        Request::PutTensor { key: "b".into(), tensor: t(vec![3.0]) },
-        Request::Exists { key: "a".into() },
-    ]);
-    let t_put = c.send_tagged(&put).unwrap();
-    let t_poll = c.send_tagged(&poll("a", 2_000)).unwrap();
-    let t_batch = c.send_tagged(&batch).unwrap();
-    let t_get = c.send_tagged(&get("a")).unwrap();
+    for reactors in reactor_counts() {
+        let server = start_n(Engine::Redis, reactors);
+        let mut c = Client::connect(server.addr).unwrap();
+        let put = Request::PutTensor { key: "a".into(), tensor: t(vec![1.0, 2.0]) };
+        let batch = Request::Batch(vec![
+            Request::PutTensor { key: "b".into(), tensor: t(vec![3.0]) },
+            Request::Exists { key: "a".into() },
+        ]);
+        let t_put = c.send_tagged(&put).unwrap();
+        let t_poll = c.send_tagged(&poll("a", 2_000)).unwrap();
+        let t_batch = c.send_tagged(&batch).unwrap();
+        let t_get = c.send_tagged(&get("a")).unwrap();
 
-    // Collect out of send order on purpose.
-    assert!(matches!(c.recv_tagged(t_put).unwrap(), Response::Ok));
-    match c.recv_tagged(t_batch).unwrap() {
-        Response::Batch(rs) => {
-            assert!(matches!(rs[0], Response::Ok));
-            assert!(matches!(rs[1], Response::Bool(true)));
+        // Collect out of send order on purpose.
+        assert!(matches!(c.recv_tagged(t_put).unwrap(), Response::Ok));
+        match c.recv_tagged(t_batch).unwrap() {
+            Response::Batch(rs) => {
+                assert!(matches!(rs[0], Response::Ok));
+                assert!(matches!(rs[1], Response::Bool(true)));
+            }
+            other => panic!("expected batch reply, got {other:?}"),
         }
-        other => panic!("expected batch reply, got {other:?}"),
-    }
-    assert!(matches!(c.recv_tagged(t_poll).unwrap(), Response::Bool(true)));
-    match c.recv_tagged(t_get).unwrap() {
-        Response::Tensor(got) => assert_eq!(got, t(vec![1.0, 2.0])),
-        other => panic!("expected tensor, got {other:?}"),
+        assert!(matches!(c.recv_tagged(t_poll).unwrap(), Response::Bool(true)));
+        match c.recv_tagged(t_get).unwrap() {
+            Response::Tensor(got) => assert_eq!(got, t(vec![1.0, 2.0])),
+            other => panic!("expected tensor, got {other:?}"),
+        }
     }
 }
 
@@ -102,28 +128,83 @@ fn mixed_request_kinds_interleave() {
 /// still waiting; producing the key then resolves the poll.
 #[test]
 fn parked_poll_does_not_block_same_socket() {
-    let server = start(Engine::Redis);
-    let mut c = Client::connect(server.addr).unwrap();
-    c.put_tensor("ready", &t(vec![9.0])).unwrap();
+    for reactors in reactor_counts() {
+        let server = start_n(Engine::Redis, reactors);
+        let mut c = Client::connect(server.addr).unwrap();
+        c.put_tensor("ready", &t(vec![9.0])).unwrap();
 
-    let t_poll = c.send_tagged(&poll("late", 10_000)).unwrap();
-    let t_get = c.send_tagged(&get("ready")).unwrap();
+        let t_poll = c.send_tagged(&poll("late", 10_000)).unwrap();
+        let t_get = c.send_tagged(&get("ready")).unwrap();
 
-    // Under the old serial loop this would block ~10 s behind the poll.
-    let started = Instant::now();
-    match c.recv_tagged(t_get).unwrap() {
-        Response::Tensor(got) => assert_eq!(got, t(vec![9.0])),
-        other => panic!("expected tensor, got {other:?}"),
+        // Under the old serial loop this would block ~10 s behind the poll.
+        let started = Instant::now();
+        match c.recv_tagged(t_get).unwrap() {
+            Response::Tensor(got) => assert_eq!(got, t(vec![9.0])),
+            other => panic!("expected tensor, got {other:?}"),
+        }
+        assert!(
+            started.elapsed() < Duration::from_secs(2),
+            "get stalled {:?} behind a parked poll",
+            started.elapsed()
+        );
+
+        // The producer may land on a DIFFERENT reactor than the waiter:
+        // the write-wakeup path goes through the shared store/hub, so
+        // the parked poll must resolve regardless.
+        let mut producer = Client::connect(server.addr).unwrap();
+        producer.put_tensor("late", &t(vec![1.0])).unwrap();
+        assert!(matches!(c.recv_tagged(t_poll).unwrap(), Response::Bool(true)));
     }
-    assert!(
-        started.elapsed() < Duration::from_secs(2),
-        "get stalled {:?} behind a parked poll",
-        started.elapsed()
-    );
+}
+
+/// Write-triggered wakeup: a poll parked with a LONG backoff interval must
+/// resolve within milliseconds of the satisfying put — strictly before the
+/// next backoff probe would have fired — because `put_tensor` notifies the
+/// poll hub directly instead of leaving the waiter to its probe clock.
+#[test]
+fn write_wakeup_beats_the_backoff_clock() {
+    let server = start(Engine::KeyDb);
+    let mut c = Client::connect(server.addr).unwrap();
+    // initial == cap == 200 ms: after the immediate verification probe
+    // misses, the next probe-clock chance is a full 200 ms away.
+    let slow_poll = Request::PollKeys {
+        keys: vec!["wk".to_string()],
+        timeout_ms: 5_000,
+        initial_us: 200_000,
+        cap_us: 200_000,
+    };
+    let tag = c.send_tagged(&slow_poll).unwrap();
+    std::thread::sleep(Duration::from_millis(50));
 
     let mut producer = Client::connect(server.addr).unwrap();
-    producer.put_tensor("late", &t(vec![1.0])).unwrap();
-    assert!(matches!(c.recv_tagged(t_poll).unwrap(), Response::Bool(true)));
+    let put_at = Instant::now();
+    producer.put_tensor("wk", &t(vec![7.0])).unwrap();
+    assert!(matches!(c.recv_tagged(tag).unwrap(), Response::Bool(true)));
+    let latency = put_at.elapsed();
+    assert!(
+        latency < Duration::from_millis(150),
+        "poll resolved {latency:?} after the put — backoff clock, not write wakeup"
+    );
+    assert!(
+        server.poll_write_wakeups() >= 1,
+        "write never reached the poll hub's waiter map"
+    );
+
+    // Probe-clock fallback still owns expiry: an absent key times out at
+    // its own deadline even though no write ever wakes it.
+    let started = Instant::now();
+    let tag = c
+        .send_tagged(&Request::PollKeys {
+            keys: vec!["never".to_string()],
+            timeout_ms: 300,
+            initial_us: 50_000,
+            cap_us: 100_000,
+        })
+        .unwrap();
+    assert!(matches!(c.recv_tagged(tag).unwrap(), Response::Bool(false)));
+    let elapsed = started.elapsed();
+    assert!(elapsed >= Duration::from_millis(200), "expired early: {elapsed:?}");
+    assert!(elapsed < Duration::from_secs(2), "overslept: {elapsed:?}");
 }
 
 /// Tagged interleaving stays byte-exact when every socket op may be delayed
@@ -163,6 +244,85 @@ fn interleaving_byte_exact_under_seeded_delays() {
                     assert_eq!(got, t(vec![(round * n + i) as f32; 16]));
                 }
                 other => panic!("round {round} i {i}: {other:?}"),
+            }
+        }
+    }
+    assert!(plan.counters().delayed_ops > 0, "plan never fired — test is vacuous");
+}
+
+/// Cross-reactor interleave: a fleet of connections lands across FOUR
+/// reactors (SO_REUSEPORT hashing, or round-robin handoff where reuseport
+/// is unavailable) while a seeded fault plan delays socket ops.  Every
+/// connection's tagged replies must still pair by tag with byte-exact
+/// payloads — reactor boundaries add no reordering or cross-talk.
+#[test]
+fn cross_reactor_interleaving_byte_exact_under_seeded_delays() {
+    let plan = Arc::new(FaultPlan::new(FaultConfig {
+        seed: 1999,
+        delay_p: 0.25,
+        delay: Duration::from_micros(300),
+        ..FaultConfig::default()
+    }));
+    let server = DbServer::start(ServerConfig {
+        engine: Engine::KeyDb,
+        with_models: false,
+        conn_read_timeout: Duration::from_millis(250),
+        fault: Some(plan.clone()),
+        reactors: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(server.reactors(), 4, "sharded topology requested");
+
+    let mut clients: Vec<Client> =
+        (0..8).map(|_| Client::connect(server.addr).unwrap()).collect();
+    let val = |ci: usize, round: usize, i: usize| (ci * 1000 + round * 100 + i) as f32;
+    for round in 0..3usize {
+        // Phase 1: every client floods its reactor with tagged puts before
+        // anyone collects, maximizing concurrent in-flight work.
+        let put_tags: Vec<Vec<u32>> = clients
+            .iter_mut()
+            .enumerate()
+            .map(|(ci, c)| {
+                (0..12)
+                    .map(|i| {
+                        c.send_tagged(&Request::PutTensor {
+                            key: format!("x{ci}r{round}i{i}"),
+                            tensor: t(vec![val(ci, round, i); 16]),
+                        })
+                        .unwrap()
+                    })
+                    .collect()
+            })
+            .collect();
+        for (ci, c) in clients.iter_mut().enumerate() {
+            for tag in &put_tags[ci] {
+                assert!(
+                    matches!(c.recv_tagged(*tag).unwrap(), Response::Ok),
+                    "client {ci} put tag {tag} failed"
+                );
+            }
+        }
+        // Phase 2: read everything back, collecting in REVERSE send order.
+        let get_tags: Vec<Vec<u32>> = clients
+            .iter_mut()
+            .enumerate()
+            .map(|(ci, c)| {
+                (0..12)
+                    .map(|i| c.send_tagged(&get(&format!("x{ci}r{round}i{i}"))).unwrap())
+                    .collect()
+            })
+            .collect();
+        for (ci, c) in clients.iter_mut().enumerate() {
+            for (i, tag) in get_tags[ci].iter().enumerate().rev() {
+                match c.recv_tagged(*tag).unwrap() {
+                    Response::Tensor(got) => assert_eq!(
+                        got,
+                        t(vec![val(ci, round, i); 16]),
+                        "client {ci} round {round} i {i}"
+                    ),
+                    other => panic!("client {ci} i {i}: expected tensor, got {other:?}"),
+                }
             }
         }
     }
@@ -209,31 +369,33 @@ fn severed_connection_errors_cleanly() {
 /// legacy ordering contract).
 #[test]
 fn legacy_untagged_clients_roundtrip_in_order() {
-    let server = start(Engine::Redis);
+    for reactors in reactor_counts() {
+        let server = start_n(Engine::Redis, reactors);
 
-    // The plain Client API is itself an untagged (tag-0) peer.
-    let mut c = Client::connect(server.addr).unwrap();
-    c.put_tensor("legacy", &t(vec![4.0, 2.0])).unwrap();
-    assert_eq!(c.get_tensor("legacy").unwrap(), t(vec![4.0, 2.0]));
+        // The plain Client API is itself an untagged (tag-0) peer.
+        let mut c = Client::connect(server.addr).unwrap();
+        c.put_tensor("legacy", &t(vec![4.0, 2.0])).unwrap();
+        assert_eq!(c.get_tensor("legacy").unwrap(), t(vec![4.0, 2.0]));
 
-    // Raw socket: two untagged frames written back-to-back, replies must
-    // come back in request order (PutMeta's Ok before GetMeta's value).
-    let mut sock = TcpStream::connect(server.addr).unwrap();
-    let mut buf = Vec::new();
-    Request::PutMeta { key: "step".into(), value: "17".into() }.encode(&mut buf);
-    write_frame(&mut sock, &buf).unwrap();
-    buf.clear();
-    Request::GetMeta { key: "step".into() }.encode(&mut buf);
-    write_frame(&mut sock, &buf).unwrap();
+        // Raw socket: two untagged frames written back-to-back, replies must
+        // come back in request order (PutMeta's Ok before GetMeta's value).
+        let mut sock = TcpStream::connect(server.addr).unwrap();
+        let mut buf = Vec::new();
+        Request::PutMeta { key: "step".into(), value: "17".into() }.encode(&mut buf);
+        write_frame(&mut sock, &buf).unwrap();
+        buf.clear();
+        Request::GetMeta { key: "step".into() }.encode(&mut buf);
+        write_frame(&mut sock, &buf).unwrap();
 
-    let first = read_frame(&mut sock).unwrap().expect("server closed");
-    assert!(matches!(Response::decode(&first).unwrap(), Response::Ok));
-    let second = read_frame(&mut sock).unwrap().expect("server closed");
-    match Response::decode(&second).unwrap() {
-        Response::Meta(v) => assert_eq!(v, "17"),
-        other => panic!("expected meta reply, got {other:?}"),
+        let first = read_frame(&mut sock).unwrap().expect("server closed");
+        assert!(matches!(Response::decode(&first).unwrap(), Response::Ok));
+        let second = read_frame(&mut sock).unwrap().expect("server closed");
+        match Response::decode(&second).unwrap() {
+            Response::Meta(v) => assert_eq!(v, "17"),
+            other => panic!("expected meta reply, got {other:?}"),
+        }
+        drop(sock);
     }
-    drop(sock);
 }
 
 /// Regression for the batch-poll latency bug: a batch of polls on absent
@@ -289,7 +451,6 @@ fn shutdown_with_idle_connections_is_prompt() {
         engine: Engine::KeyDb,
         with_models: false,
         conn_read_timeout: Duration::from_secs(30),
-        accept_backoff_max: Duration::from_secs(5),
         ..Default::default()
     })
     .unwrap();

@@ -45,7 +45,6 @@ fn start_spill_server(window: u64, spill: SpillConfig) -> DbServer {
         retention: RetentionConfig::windowed(window, 0),
         spill: Some(spill),
         conn_read_timeout: Duration::from_millis(50),
-        accept_backoff_max: Duration::from_millis(5),
         ..Default::default()
     })
     .unwrap()
@@ -272,7 +271,6 @@ fn gather_window_falls_back_to_the_cold_tier() {
         with_models: false,
         retention: RetentionConfig::windowed(1, 0),
         conn_read_timeout: Duration::from_millis(50),
-        accept_backoff_max: Duration::from_millis(5),
         ..Default::default()
     })
     .unwrap();
