@@ -1,0 +1,221 @@
+//! fig_reshard — live 3 → 4 reshard: zero-loss cutover and transfer cost.
+//!
+//! One experiment over a 4-server cluster seeded as 3 enforced shards:
+//!
+//! 1. write every generation at `replicas = 2` under the 3-shard table;
+//! 2. gather a training window (the trainer's read path);
+//! 3. `reshard` the cluster live onto all 4 shards;
+//! 4. gather the same window again and re-read every key.
+//!
+//! Gates:
+//!
+//! - **Zero loss** — every key byte-exact after the cutover, and the
+//!   post-reshard gather equals the pre-reshard gather tensor-for-tensor.
+//! - **Transfer cost is max-of-shards** — each streamed window costs one
+//!   read round plus **one** multiplexed tagged write round covering the
+//!   whole destination ring, so `transfer_rounds ≤ 2 × windows` — it does
+//!   not scale with the ring width (`replicas`), which is the claim the
+//!   multiplexed fan-out earns.
+//! - **Completeness** — `moved_keys` equals the number of distinct keys
+//!   hashing into the ranges that changed owner (computed independently
+//!   from the slot tables).
+//!
+//! `SITU_BENCH_SMOKE=1` shortens the run for CI; `SITU_BENCH_JSON=path`
+//! records the numbers (the BENCH_PR10.json acceptance record).
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use situ::client::{tensor_key, ClusterClient, ClusterConfig, DataStore};
+use situ::db::cluster::{hash_slot, SlotEpoch};
+use situ::db::{DbServer, Engine, ServerConfig};
+use situ::ml::DataLoader;
+use situ::orchestrator::{reshard, ReshardConfig};
+use situ::telemetry::Table;
+use situ::tensor::Tensor;
+
+fn payload(gen: u64, rank: usize, elems: usize) -> Tensor {
+    let vals: Vec<f32> = (0..elems)
+        .map(|i| (gen * 100_000 + rank as u64 * 1000 + i as u64) as f32)
+        .collect();
+    Tensor::from_f32(&[elems], vals).unwrap()
+}
+
+fn start_shards(n: usize) -> Vec<DbServer> {
+    (0..n)
+        .map(|_| {
+            DbServer::start(ServerConfig {
+                engine: Engine::KeyDb,
+                with_models: false,
+                conn_read_timeout: Duration::from_millis(50),
+                ..Default::default()
+            })
+            .expect("shard")
+        })
+        .collect()
+}
+
+fn connect(addrs: &[SocketAddr], replicas: usize) -> ClusterClient {
+    let mut c = ClusterClient::connect_with(
+        addrs,
+        ClusterConfig { replicas, ..ClusterConfig::default() },
+    )
+    .expect("cluster client");
+    c.refresh_slot_table().expect("fetch slot table");
+    c
+}
+
+fn main() {
+    let smoke = std::env::var("SITU_BENCH_SMOKE").is_ok();
+    let gens: u64 = std::env::var("SITU_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 16 } else { 120 });
+    let ranks = 4usize;
+    let elems = 4 * 1024usize; // 16 KiB per tensor
+    let window = 8usize;
+
+    let mut servers = start_shards(4);
+    let addrs: Vec<SocketAddr> = servers.iter().map(|s| s.addr).collect();
+    let first3 = addrs[..3].to_vec();
+
+    // Seed: converge the 3 original shards on a committed epoch table,
+    // then load every generation under it.
+    let seeded = reshard(&ReshardConfig {
+        addrs: first3,
+        from_shards: 0,
+        to_shards: 0,
+        replicas: 2,
+        window: 0,
+    })
+    .expect("seed 3-shard table");
+    assert_eq!(seeded.moved_keys, 0);
+
+    let mut c = connect(&addrs, 2);
+    let write_start = Instant::now();
+    for gen in 0..gens {
+        for rank in 0..ranks {
+            c.put_tensor(&tensor_key("fr", rank, gen), &payload(gen, rank, elems)).unwrap();
+        }
+    }
+    let write_secs = write_start.elapsed().as_secs_f64();
+
+    let latest = gens - 1;
+    let win = gens.min(4);
+    let mut dl = DataLoader::new(connect(&addrs, 2), (0..ranks).collect(), "fr", 5);
+    let before = dl.gather_window(latest, win).expect("pre-reshard gather");
+
+    // The measured live reshard, 3 → 4.
+    let reshard_start = Instant::now();
+    let report = reshard(&ReshardConfig {
+        addrs: addrs.clone(),
+        from_shards: 0,
+        to_shards: 0,
+        replicas: 2,
+        window,
+    })
+    .expect("live reshard");
+    let reshard_secs = reshard_start.elapsed().as_secs_f64();
+
+    // Windowed-loader parity across the cutover.
+    let after = dl.gather_window(latest, win).expect("post-reshard gather");
+    assert_eq!(before.len(), after.len());
+    let mut parity_mismatch = 0u64;
+    for (b, a) in before.iter().zip(&after) {
+        if b != a {
+            parity_mismatch += 1;
+        }
+    }
+
+    // Full zero-loss sweep against ground truth through a fresh client.
+    let mut post = connect(&addrs, 2);
+    let mut lost = 0u64;
+    for gen in 0..gens {
+        for rank in 0..ranks {
+            match post.get_tensor(&tensor_key("fr", rank, gen)) {
+                Ok(t) if t == payload(gen, rank, elems) => {}
+                _ => lost += 1,
+            }
+        }
+    }
+
+    // Independent accounting: which keys were in ranges that changed
+    // owner, and how many streaming windows that implies per range.
+    let moves = SlotEpoch::initial(3).moved_ranges(&SlotEpoch::initial(4));
+    let mut moved_expected = 0u64;
+    let mut windows_expected = 0u64;
+    for &(lo, hi, _, _) in &moves {
+        let in_range = (0..gens)
+            .flat_map(|g| (0..ranks).map(move |r| tensor_key("fr", r, g)))
+            .filter(|k| (lo..=hi).contains(&hash_slot(k)))
+            .count() as u64;
+        moved_expected += in_range;
+        windows_expected += in_range.div_ceil(window as u64);
+    }
+
+    let mut table = Table::new(
+        "live reshard 3 -> 4 (replicas = 2)",
+        &["keys", "moved", "rounds", "windows", "reshard secs", "MB/s", "lost"],
+    );
+    table.row(&[
+        (gens * ranks as u64).to_string(),
+        report.moved_keys.to_string(),
+        report.transfer_rounds.to_string(),
+        windows_expected.to_string(),
+        format!("{reshard_secs:.3}"),
+        format!("{:.1}", report.moved_bytes as f64 / 1e6 / reshard_secs.max(1e-9)),
+        lost.to_string(),
+    ]);
+    table.print();
+
+    // The fig_reshard gates.
+    assert_eq!(lost, 0, "zero-loss cutover is the acceptance gate");
+    assert_eq!(parity_mismatch, 0, "the training window reads identically across the cutover");
+    assert_eq!(
+        report.moved_keys, moved_expected,
+        "every key in a moved range streamed exactly once"
+    );
+    assert!(
+        report.transfer_rounds <= 2 * windows_expected,
+        "transfer cost is max-of-shards: {} rounds for {} windows (a write round \
+         covers the whole destination ring via tagged multiplexing)",
+        report.transfer_rounds,
+        windows_expected
+    );
+    assert_eq!(report.from_epoch + 2, report.to_epoch, "install + commit");
+    assert!(report.unreachable_shards.is_empty());
+
+    if let Ok(path) = std::env::var("SITU_BENCH_JSON") {
+        let mut s = String::from("{\n  \"bench\": \"fig_reshard\",\n");
+        s.push_str(&format!(
+            "  \"config\": {{\"gens\": {gens}, \"ranks\": {ranks}, \"payload_bytes\": {}, \
+             \"shards_from\": 3, \"shards_to\": 4, \"replicas\": 2, \"window\": {window}}},\n",
+            elems * 4
+        ));
+        s.push_str(&format!(
+            "  \"reshard\": {{\"from_epoch\": {}, \"to_epoch\": {}, \"moved_ranges\": {}, \
+             \"moved_keys\": {}, \"moved_bytes\": {}, \"transfer_rounds\": {}, \
+             \"windows_expected\": {windows_expected}, \"secs\": {reshard_secs:.6}, \
+             \"stream_mb_per_sec\": {:.2}}},\n",
+            report.from_epoch,
+            report.to_epoch,
+            report.moved_ranges,
+            report.moved_keys,
+            report.moved_bytes,
+            report.transfer_rounds,
+            report.moved_bytes as f64 / 1e6 / reshard_secs.max(1e-9),
+        ));
+        s.push_str(&format!(
+            "  \"verify\": {{\"keys\": {}, \"lost\": {lost}, \"gather_parity_mismatch\": \
+             {parity_mismatch}, \"write_secs\": {write_secs:.6}}}\n",
+            gens * ranks as u64
+        ));
+        s.push_str("}\n");
+        std::fs::write(&path, &s).expect("write SITU_BENCH_JSON");
+        println!("bench results written to {path}");
+    }
+
+    for s in &mut servers {
+        s.shutdown();
+    }
+}

@@ -65,6 +65,16 @@
 //! [`FailoverStats`] and folded into the aggregated [`DbInfo`].  The chaos
 //! battery drives this path deterministically by planting a seeded
 //! [`crate::util::fault::FaultPlan`] under the real sockets.
+//!
+//! ## Elastic resharding
+//!
+//! Routing is by an **epoch-versioned slot table**
+//! ([`crate::db::cluster::SlotEpoch`]), not a static shard count.  A shard
+//! asked for a slot it no longer owns answers `moved: <epoch>`; the client
+//! refetches the table ([`ClusterClient::refresh_slot_table`]), adopts the
+//! newest epoch, and retries, so a live reshard is invisible to callers.
+//! While a slot is mid-migration, reads additionally fall back to the old
+//! owner's ring.  See `docs/cluster.md` for the full protocol.
 
 pub mod backpressure;
 
@@ -76,7 +86,7 @@ use std::net::{SocketAddr, TcpStream};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::db::cluster::SlotMap;
+use crate::db::cluster::{hash_slot, SlotEpoch};
 use crate::db::store::RetentionConfig;
 use crate::error::{Error, Result};
 use crate::proto::frame::{
@@ -418,6 +428,11 @@ pub struct Client {
     /// protocol violation and fails the connection instead of being
     /// stashed forever.
     outstanding: HashSet<u32>,
+    /// Tags the owner abandoned ([`Client::forget_tags`]) before
+    /// collecting: their replies are still legitimately in flight, so the
+    /// read loops drain and drop them on arrival instead of stashing them
+    /// until the bounded stash fills and poisons the connection.
+    forgotten: HashSet<u32>,
 }
 
 /// Cap on out-of-order replies held for later [`Client::recv_tagged`]
@@ -459,6 +474,7 @@ impl Client {
             next_tag: 0,
             pending: HashMap::new(),
             outstanding: HashSet::new(),
+            forgotten: HashSet::new(),
         })
     }
 
@@ -541,6 +557,13 @@ impl Client {
     /// bounds the stash — either way the connection is desynced or the
     /// server misbehaving, and failing beats unbounded memory growth.
     fn stash_reply(&mut self, tag: u32, resp: Response) -> Result<()> {
+        if self.forgotten.remove(&tag) {
+            // An abandoned request's reply finally arrived: drop it.  The
+            // connection stays healthy — the frame was well-formed, its
+            // owner just stopped caring about the answer.
+            drop(resp);
+            return Ok(());
+        }
         if tag != 0 && !self.outstanding.contains(&tag) {
             return Err(Error::Protocol(format!(
                 "reply for unknown tag {tag} (no such request in flight)"
@@ -654,16 +677,94 @@ impl Client {
         }
     }
 
+    /// Abandon in-flight tagged requests whose replies will never be
+    /// collected (a fan-out aborted mid-collect).  Each tag is un-issued:
+    /// a reply already stashed is dropped now, one still in flight is
+    /// drained and dropped when it arrives.  Without this, abandoned
+    /// replies accumulate in the bounded stash until it fills and every
+    /// later read fails — a slow leak that poisons the connection.
+    pub fn forget_tags(&mut self, tags: impl IntoIterator<Item = u32>) {
+        for tag in tags {
+            if self.outstanding.remove(&tag) && self.pending.remove(&tag).is_none() {
+                self.forgotten.insert(tag);
+            }
+        }
+    }
+
+    /// Issued-but-uncollected tag count (abandoned tags excluded).
+    pub fn outstanding_tags(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Out-of-order replies currently held for later `recv_tagged` calls.
+    pub fn stashed_replies(&self) -> usize {
+        self.pending.len()
+    }
+
     /// Send every request tagged back-to-back, then collect the replies —
     /// one round of socket writes followed by one round of reads, with
     /// the server free to work on all of them concurrently.  Results come
-    /// back in *request* order regardless of completion order.
+    /// back in *request* order regardless of completion order.  An error
+    /// partway through forgets the tags that will never be collected.
     pub fn call_pipelined(&mut self, reqs: &[Request]) -> Result<Vec<Response>> {
-        let tags = reqs
-            .iter()
-            .map(|r| self.send_tagged(r))
-            .collect::<Result<Vec<u32>>>()?;
-        tags.into_iter().map(|t| self.recv_tagged(t)).collect()
+        let mut tags = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            match self.send_tagged(r) {
+                Ok(t) => tags.push(t),
+                Err(e) => {
+                    self.forget_tags(tags);
+                    return Err(e);
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(tags.len());
+        for (i, &t) in tags.iter().enumerate() {
+            match self.recv_tagged(t) {
+                Ok(r) => out.push(r),
+                Err(e) => {
+                    self.forget_tags(tags[i + 1..].iter().copied());
+                    return Err(e);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Fetch the shard's installed slot-ownership table: `(shard index,
+    /// table)`, where shard `u16::MAX` plus an empty table means none is
+    /// installed (the server then serves every key unconditionally).
+    pub fn cluster_epoch(&mut self) -> Result<(u16, SlotEpoch)> {
+        self.call(&Request::ClusterEpoch { install: None })?
+            .expect_epoch_table()
+    }
+
+    /// Install a slot-ownership table on the shard (no-op if it already
+    /// holds a newer epoch) and return what is installed afterwards —
+    /// install doubles as fetch, so a raced installer learns the winning
+    /// table from the reply.
+    pub fn install_epoch(
+        &mut self,
+        shard: u16,
+        replicas: u16,
+        table: SlotEpoch,
+    ) -> Result<(u16, SlotEpoch)> {
+        self.call(&Request::ClusterEpoch { install: Some((shard, replicas, table)) })?
+            .expect_epoch_table()
+    }
+
+    /// List this shard's resident tensor keys hashing into `lo..=hi`, in
+    /// generation order — the transfer manifest for a slot-range
+    /// migration or replica backfill.
+    pub fn export_slots(&mut self, lo: u16, hi: u16) -> Result<Vec<String>> {
+        self.call(&Request::ExportSlots { lo, hi })?.expect_keys()
+    }
+
+    /// Write a tensor straight into this shard's cold tier (the
+    /// generation-retirement path: exactly one shard archives each
+    /// retired key).
+    pub fn cold_put(&mut self, key: &str, t: &Tensor) -> Result<()> {
+        self.call(&Request::ColdPut { key: key.to_string(), tensor: t.clone() })?
+            .expect_ok()
     }
 }
 
@@ -1025,16 +1126,26 @@ fn resp_rank(r: &Response) -> u8 {
 }
 
 /// Client for the clustered deployment: routes each key to the owning shard
-/// via the redis-cluster hash-slot map, and implements the complete
-/// [`DataStore`] surface — multi-key operations are partitioned per shard
-/// and reassembled, models are broadcast to every shard, `info` aggregates.
+/// via an **epoch-versioned** redis-cluster hash-slot table, and implements
+/// the complete [`DataStore`] surface — multi-key operations are
+/// partitioned per shard and reassembled, models are broadcast to every
+/// shard, `info` aggregates.
+///
+/// The table starts as the static even split over the address list
+/// ([`SlotEpoch::initial`] — byte-identical routing to the pre-elastic
+/// client).  When a live reshard moves slots, a shard that no longer owns
+/// a key answers `moved: <epoch>`; the client then refetches the table
+/// from the cluster ([`ClusterClient::refresh_slot_table`]), adopts the
+/// newest epoch, and retries — callers never see the move.  While a slot
+/// is mid-migration, reads additionally fall back to the *old* owner's
+/// ring, so data that has not streamed over yet is still served.
 ///
 /// With [`ClusterConfig::replicas`] > 1, writes fan out to the owner plus
 /// the next shards in ring order and reads fail over along the same ring;
 /// see the module docs for the full failure semantics.
 pub struct ClusterClient {
     shards: Vec<ShardConn>,
-    slots: SlotMap,
+    table: SlotEpoch,
     cfg: ClusterConfig,
     stats: FailoverStats,
     last_errors: Vec<ShardError>,
@@ -1044,6 +1155,25 @@ pub struct ClusterClient {
     mux_rounds: u64,
     /// Per-shard sub-batches sent across all fan-out rounds.
     mux_subs: u64,
+    /// Slot-table refetches triggered by `moved:` bounces (transparent
+    /// reshard handovers the caller never saw).
+    epoch_refreshes: u64,
+}
+
+/// How many times an operation refetches the slot table and retries after
+/// a `moved:` bounce before surfacing the error.  Each refetch asks every
+/// shard and adopts the max epoch, so one round normally suffices; the
+/// bound only matters when the shard that bounced us dies before anyone
+/// learns its table.
+const MAX_MOVED_RETRIES: usize = 3;
+
+/// The epoch a [`Response::Error`] pipeline entry carries when a shard
+/// bounced the command for a slot it no longer owns.
+fn moved_epoch(r: &Response) -> Option<u64> {
+    match r {
+        Response::Error(m) => m.strip_prefix("moved: ").and_then(|s| s.parse().ok()),
+        _ => None,
+    }
 }
 
 impl ClusterClient {
@@ -1067,13 +1197,14 @@ impl ClusterClient {
             s.get(&cfg, &mut ignored)?;
         }
         Ok(ClusterClient {
-            slots: SlotMap::new(shards.len()),
+            table: SlotEpoch::initial(shards.len()),
             shards,
             cfg,
             stats: FailoverStats::default(),
             last_errors: Vec::new(),
             mux_rounds: 0,
             mux_subs: 0,
+            epoch_refreshes: 0,
         })
     }
 
@@ -1097,21 +1228,261 @@ impl ClusterClient {
         &self.last_errors
     }
 
+    /// Epoch of the slot table this client is currently routing by.
+    pub fn epoch(&self) -> u64 {
+        self.table.epoch
+    }
+
+    /// The slot table this client is currently routing by.
+    pub fn slot_table(&self) -> &SlotEpoch {
+        &self.table
+    }
+
+    /// Slot-table refetches forced by `moved:` bounces so far — each one
+    /// is a reshard handover the caller never saw.
+    pub fn epoch_refreshes(&self) -> u64 {
+        self.epoch_refreshes
+    }
+
+    /// Shards participating in the replica ring: the table's member count,
+    /// not the address-list length — a client may hold addresses for
+    /// shards the current table does not yet assign slots to (e.g. a
+    /// just-added shard before the reshard that populates it).
+    fn ring_n(&self) -> usize {
+        self.table.n_shards().min(self.shards.len()).max(1)
+    }
+
+    /// Adopt a slot table fetched from (or pushed by) the cluster.  Older
+    /// epochs are ignored; a table referencing shards beyond the address
+    /// list is rejected — this client cannot reach them, so routing by it
+    /// would be worse than staying stale.
+    pub fn adopt_slot_table(&mut self, table: SlotEpoch) -> Result<()> {
+        if table.assignments.is_empty() || table.epoch < self.table.epoch {
+            return Ok(());
+        }
+        table.validate().map_err(Error::Protocol)?;
+        if table.n_shards() > self.shards.len() {
+            return Err(Error::Invalid(format!(
+                "slot table (epoch {}) references {} shards but this client \
+                 only has {} addresses; reconnect with the full address list",
+                table.epoch,
+                table.n_shards(),
+                self.shards.len()
+            )));
+        }
+        self.table = table;
+        Ok(())
+    }
+
+    /// Ask every reachable shard for its installed table and adopt the
+    /// newest epoch seen.  Returns the epoch routing now uses.  Shards
+    /// with no table installed answer with the unset sentinel and are
+    /// skipped — a cluster that never resharded keeps the static split.
+    pub fn refresh_slot_table(&mut self) -> Result<u64> {
+        let got = self.broadcast_collect(|c| c.cluster_epoch())?;
+        let mut best: Option<SlotEpoch> = None;
+        for (_, (_, table)) in got {
+            if table.assignments.is_empty() {
+                continue;
+            }
+            if best.as_ref().map_or(true, |b| table.epoch > b.epoch) {
+                best = Some(table);
+            }
+        }
+        if let Some(t) = best {
+            self.adopt_slot_table(t)?;
+        }
+        Ok(self.table.epoch)
+    }
+
+    /// Run `op`, and on a `moved:` bounce refetch the slot table and
+    /// retry — the transparent half of the reshard protocol.  Bounded:
+    /// each refetch adopts the cluster-wide max epoch, so repeat bounces
+    /// mean the bouncing shard's table is unreachable, and the error
+    /// surfaces rather than spinning.
+    fn moved_retry<T>(
+        &mut self,
+        mut op: impl FnMut(&mut ClusterClient) -> Result<T>,
+    ) -> Result<T> {
+        for _ in 0..MAX_MOVED_RETRIES {
+            match op(self) {
+                Err(Error::Moved(_)) => {
+                    self.epoch_refreshes += 1;
+                    self.refresh_slot_table()?;
+                }
+                other => return other,
+            }
+        }
+        op(self)
+    }
+
     /// Shards holding copies of `key`: the hash-slot owner plus the next
     /// `replicas − 1` shards in ring order.
     fn targets(&self, key: &str) -> Vec<usize> {
-        let primary = self.slots.shard_for_key(key);
-        let n = self.shards.len();
-        (0..self.cfg.replicas).map(|i| (primary + i) % n).collect()
+        let primary = self.table.shard_for_key(key);
+        let n = self.ring_n();
+        (0..self.cfg.replicas.min(n)).map(|i| (primary + i) % n).collect()
+    }
+
+    /// Read-side targets: the owner's ring, then — while the key's slot
+    /// is mid-migration — the *old* owner's ring, so reads reach data the
+    /// transfer has not landed on the new owner yet.
+    fn read_targets(&self, key: &str) -> Vec<usize> {
+        let mut t = self.targets(key);
+        if let Some(old) = self.table.fallback_for_slot(hash_slot(key)) {
+            let n = self.ring_n();
+            for i in 0..self.cfg.replicas.min(n) {
+                let s = (old + i) % n;
+                if !t.contains(&s) {
+                    t.push(s);
+                }
+            }
+        }
+        t
     }
 
     /// Partition indices `0..keys.len()` by owning (primary) shard.
     fn partition_keys(&self, keys: &[String]) -> Vec<Vec<usize>> {
         let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
         for (i, k) in keys.iter().enumerate() {
-            by_shard[self.slots.shard_for_key(k)].push(i);
+            by_shard[self.table.shard_for_key(k)].push(i);
         }
         by_shard
+    }
+
+    /// Forget one tag on one shard's live connection (the abandoned-round
+    /// cleanup half of [`Client::forget_tags`]).
+    fn forget_tag(&mut self, shard: usize, tag: u32) {
+        if let Some(c) = self.shards[shard].client.as_mut() {
+            c.forget_tags([tag]);
+        }
+    }
+
+    /// One pass of [`DataStore::poll_keys`] under the current slot table.
+    fn poll_keys_once(&mut self, keys: &[String], poll: &PollConfig) -> Result<()> {
+        let deadline = Instant::now() + poll.max_wait;
+        let by_shard = self.partition_keys(keys);
+        let nsh = self.ring_n();
+        let timeout = || {
+            Error::Timeout(format!(
+                "keys {keys:?} not all present after {:?}",
+                poll.max_wait
+            ))
+        };
+        for (shard, idxs) in by_shard.into_iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let sub: Vec<String> = idxs.iter().map(|&i| keys[i].clone()).collect();
+            let mut last: Option<Error> = None;
+            let mut done = false;
+            for off in 0..self.cfg.replicas.min(nsh) {
+                let target = (shard + off) % nsh;
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                let budget = PollConfig { max_wait: remaining, ..*poll };
+                match self.on_shard(target, |c| c.poll_keys(&sub, &budget)) {
+                    Ok(()) => {
+                        if off > 0 {
+                            self.stats.read_failovers += 1;
+                        }
+                        done = true;
+                        break;
+                    }
+                    Err(e) if e.is_transient_io() => last = Some(e),
+                    // Rewrite per-shard timeouts to name the whole key set.
+                    Err(Error::Timeout(_)) => last = Some(timeout()),
+                    Err(e) => return Err(e),
+                }
+            }
+            if !done {
+                return Err(last.unwrap_or_else(timeout));
+            }
+        }
+        Ok(())
+    }
+
+    /// One pass of [`DataStore::del_keys`]: one batched round trip per
+    /// (shard, replica offset), per-key presence OR-ed across copies.
+    fn del_keys_once(&mut self, keys: &[String]) -> Result<u64> {
+        self.last_errors.clear();
+        let by_shard = self.partition_keys(keys);
+        let nsh = self.ring_n();
+        let mut deleted = vec![false; keys.len()];
+        let mut reached = vec![false; keys.len()];
+        let mut errs: Vec<(usize, Error)> = Vec::new();
+        let mut moved: Option<u64> = None;
+        for off in 0..self.cfg.replicas.min(nsh) {
+            for (shard, idxs) in by_shard.iter().enumerate() {
+                if idxs.is_empty() {
+                    continue;
+                }
+                let target = (shard + off) % nsh;
+                let sub: Vec<Request> = idxs
+                    .iter()
+                    .map(|&i| Request::DelTensor { key: keys[i].clone() })
+                    .collect();
+                match self.on_shard(target, |c| c.exec_requests(&sub)) {
+                    Ok(resps) => {
+                        for (&i, r) in idxs.iter().zip(resps) {
+                            match r.expect_deleted() {
+                                Ok(b) => {
+                                    reached[i] = true;
+                                    deleted[i] |= b;
+                                }
+                                Err(Error::Moved(ep)) => {
+                                    moved = Some(moved.map_or(ep, |m| m.max(ep)));
+                                }
+                                Err(_) => {}
+                            }
+                        }
+                    }
+                    Err(e) => errs.push((target, e)),
+                }
+            }
+        }
+        if let Some(i) = reached.iter().position(|&r| !r) {
+            // An entry that only ever bounced was not unreachable — the
+            // table is stale; surface the bounce so the wrapper refetches
+            // and re-runs the delete against the current owners.
+            if let Some(ep) = moved {
+                return Err(Error::Moved(ep));
+            }
+            return Err(match errs.into_iter().next() {
+                Some((_, e)) => e,
+                None => Error::KeyNotFound(keys[i].clone()),
+            });
+        }
+        if !errs.is_empty() {
+            self.note_degraded(&errs);
+        }
+        Ok(deleted.iter().filter(|&&b| b).count() as u64)
+    }
+
+    /// One delete pass over every replica target of `key`; `true` if any
+    /// copy existed.
+    fn del_tensor_once(&mut self, key: &str) -> Result<bool> {
+        self.last_errors.clear();
+        let targets = self.targets(key);
+        let mut any = false;
+        let mut reached = false;
+        let mut errs: Vec<(usize, Error)> = Vec::new();
+        for &shard in &targets {
+            match self.on_shard(shard, |c| c.del_tensor(key)) {
+                Ok(b) => {
+                    reached = true;
+                    any |= b;
+                }
+                Err(e) => errs.push((shard, e)),
+            }
+        }
+        if !reached {
+            let pick = errs.iter().position(|(_, e)| matches!(e, Error::Moved(_)));
+            return Err(errs.swap_remove(pick.unwrap_or(0)).1);
+        }
+        if !errs.is_empty() {
+            self.note_degraded(&errs);
+        }
+        Ok(any)
     }
 
     /// Run `op` against shard `i` through the breaker, recording the
@@ -1210,8 +1581,15 @@ impl ClusterClient {
             }
         }
         if ok == 0 {
-            let busy = errs.iter().position(|(_, e)| matches!(e, Error::Busy(_)));
-            return Err(errs.swap_remove(busy.unwrap_or(0)).1);
+            // Moved first (a stale table is cheap to fix and the retry
+            // wrapper resolves it before the caller sees anything), then
+            // Busy — the one failure the publish-side retry loops know
+            // how to wait out.
+            let pick = errs
+                .iter()
+                .position(|(_, e)| matches!(e, Error::Moved(_)))
+                .or_else(|| errs.iter().position(|(_, e)| matches!(e, Error::Busy(_))));
+            return Err(errs.swap_remove(pick.unwrap_or(0)).1);
         }
         if !errs.is_empty() {
             self.note_degraded(&errs);
@@ -1219,21 +1597,34 @@ impl ClusterClient {
         Ok(())
     }
 
-    /// Try a read on each replica target in ring order, advancing past dead
-    /// targets (transient I/O) and authoritative misses; a success on a
-    /// non-primary target counts as a read failover.  If every reachable
-    /// copy reported a miss, the miss wins (callers can fall back to the
-    /// cold tier); only when *no* target answered does the transport error
-    /// surface.
+    /// Try a read on each replica target in ring order — including, while
+    /// the key's slot is mid-migration, the old owner's ring — advancing
+    /// past dead targets (transient I/O) and authoritative misses; a
+    /// success on a non-primary target counts as a read failover.  If
+    /// every reachable copy reported a miss, the miss wins (callers can
+    /// fall back to the cold tier); only when *no* target answered does
+    /// the transport error surface.
     fn read_any<T>(
         &mut self,
+        key: &str,
+        op: impl FnMut(&mut Client) -> Result<T>,
+        is_miss: impl Fn(&T) -> bool,
+    ) -> Result<T> {
+        let targets = self.read_targets(key);
+        self.read_any_on(&targets, key, op, is_miss)
+    }
+
+    /// [`ClusterClient::read_any`] over an explicit target walk order.
+    fn read_any_on<T>(
+        &mut self,
+        targets: &[usize],
         key: &str,
         mut op: impl FnMut(&mut Client) -> Result<T>,
         is_miss: impl Fn(&T) -> bool,
     ) -> Result<T> {
-        let targets = self.targets(key);
         let mut miss: Option<T> = None;
         let mut not_found: Option<Error> = None;
+        let mut moved: Option<Error> = None;
         let mut io_err: Option<Error> = None;
         for (off, &shard) in targets.iter().enumerate() {
             match self.on_shard(shard, &mut op) {
@@ -1249,6 +1640,12 @@ impl ClusterClient {
                     return Ok(v);
                 }
                 Err(e @ Error::KeyNotFound(_)) => not_found = Some(e),
+                // A `moved:` bounce from one target must not end the walk:
+                // mid-migration the new ring bounces misses while the old
+                // ring still holds the data, so keep walking.  It only
+                // surfaces when nothing answered — and then ahead of a
+                // transport error, because a table refetch can fix it.
+                Err(e @ Error::Moved(_)) => moved = Some(e),
                 Err(e) if e.is_transient_io() => io_err = Some(e),
                 Err(e) => return Err(e),
             }
@@ -1257,6 +1654,7 @@ impl ClusterClient {
             return Ok(v);
         }
         Err(not_found
+            .or(moved)
             .or(io_err)
             .unwrap_or_else(|| Error::KeyNotFound(key.to_string())))
     }
@@ -1337,21 +1735,123 @@ impl ClusterClient {
         all.dedup();
         Ok(all)
     }
+
+    /// One routing pass of [`DataStore::execute`] over the entries at
+    /// `idxs`: partition per owning shard under the current table, one
+    /// multiplexed round per replica offset (max-of-shards, not
+    /// sum-of-shards), best-ranked response per entry.  With `route_old`,
+    /// entries route to their slot's *old* owner instead (the mid-
+    /// migration read fallback); entries whose slot is not migrating
+    /// route normally.
+    fn execute_subset(
+        &mut self,
+        reqs: &[Request],
+        idxs: Vec<usize>,
+        route_old: bool,
+    ) -> Result<Vec<Response>> {
+        let primary: Vec<usize> = idxs
+            .iter()
+            .map(|&i| {
+                let slot = hash_slot(reqs[i].routing_key().expect("validated by execute"));
+                if route_old {
+                    self.table
+                        .fallback_for_slot(slot)
+                        .unwrap_or_else(|| self.table.shard_for_slot(slot))
+                } else {
+                    self.table.shard_for_slot(slot)
+                }
+            })
+            .collect();
+        let writes: Vec<bool> = idxs.iter().map(|&i| is_write_request(&reqs[i])).collect();
+        let nsh = self.ring_n();
+        let m = idxs.len();
+        let mut best: Vec<Option<Response>> = (0..m).map(|_| None).collect();
+        let mut first_io: Option<Error> = None;
+        for off in 0..self.cfg.replicas.min(nsh) {
+            let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+            for j in 0..m {
+                let needs = writes[j]
+                    || best[j].as_ref().map_or(true, |b| resp_rank(b) < 3);
+                if needs {
+                    by_shard[(primary[j] + off) % nsh].push(j);
+                }
+            }
+            // One multiplexed round: all sub-batches on the wire, then all
+            // replies collected — max-of-shards, not sum-of-shards.
+            let mut jobs: Vec<(usize, Vec<usize>)> = Vec::new();
+            let mut sends: Vec<(usize, Request)> = Vec::new();
+            for (shard, js) in by_shard.into_iter().enumerate() {
+                if js.is_empty() {
+                    continue;
+                }
+                let sub: Vec<Request> =
+                    js.iter().map(|&j| reqs[idxs[j]].clone()).collect();
+                sends.push((shard, Request::Batch(sub)));
+                jobs.push((shard, js));
+            }
+            let tags = self.mux_send(&sends);
+            for ((shard, js), tag) in jobs.into_iter().zip(tags) {
+                let res = tag
+                    .and_then(|t| self.mux_recv(shard, t))
+                    .and_then(|r| r.expect_batch(js.len()));
+                match res {
+                    Ok(resps) => {
+                        for (&j, r) in js.iter().zip(resps) {
+                            let rank = resp_rank(&r);
+                            if off > 0 && rank == 3 {
+                                if writes[j] {
+                                    self.stats.replicated_writes += 1;
+                                } else {
+                                    self.stats.read_failovers += 1;
+                                }
+                            }
+                            let better =
+                                best[j].as_ref().map_or(true, |b| rank > resp_rank(b));
+                            if better {
+                                best[j] = Some(r);
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        if first_io.is_none() {
+                            first_io = Some(e);
+                        }
+                    }
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(m);
+        for b in best {
+            match b {
+                Some(r) => out.push(r),
+                None => {
+                    return Err(first_io.take().unwrap_or_else(|| {
+                        Error::Io(std::io::Error::new(
+                            std::io::ErrorKind::NotConnected,
+                            "no shard reachable for pipeline entry",
+                        ))
+                    }))
+                }
+            }
+        }
+        Ok(out)
+    }
 }
 
 impl DataStore for ClusterClient {
     /// Fans out to every replica target in one multiplexed round; succeeds
-    /// when at least one copy landed.
+    /// when at least one copy landed.  A `moved:` bounce refetches the
+    /// slot table and retries transparently.
     fn put_tensor(&mut self, key: &str, t: &Tensor) -> Result<()> {
-        self.replicated_write(
-            key,
-            Request::PutTensor { key: key.to_string(), tensor: t.clone() },
-        )
+        let req = Request::PutTensor { key: key.to_string(), tensor: t.clone() };
+        self.moved_retry(|s| s.replicated_write(key, req.clone()))
     }
 
-    /// Primary first, then each replica on a miss or transport error.
+    /// Primary first, then each replica on a miss or transport error —
+    /// falling back to the old owner's ring mid-migration, and refetching
+    /// the table on a `moved:` bounce.
     fn get_tensor(&mut self, key: &str) -> Result<Tensor> {
-        self.read_any(key, |c| c.get_tensor(key), |_| false)
+        self.moved_retry(|s| s.read_any(key, |c| c.get_tensor(key), |_| false))
     }
 
     /// One tagged `MGetTensors` sub-batch per shard that owns any of the
@@ -1375,7 +1875,8 @@ impl DataStore for ClusterClient {
             jobs.push((shard, idxs));
         }
         let tags = self.mux_send(&sends);
-        for ((shard, idxs), tag) in jobs.into_iter().zip(tags) {
+        let mut pairs = jobs.into_iter().zip(tags);
+        while let Some(((shard, idxs), tag)) = pairs.next() {
             let res = tag.and_then(|t| self.mux_recv(shard, t)).and_then(|r| {
                 r.expect_batch(idxs.len())?
                     .into_iter()
@@ -1389,15 +1890,30 @@ impl DataStore for ClusterClient {
                         out[i] = Some(t);
                     }
                 }
-                // The whole sub-batch failed (shard down, or one key
-                // missing aborts the batch): retry key-by-key with
-                // failover.  Misses are the exception path, so the extra
-                // round trips only happen when something already went
-                // wrong.
-                Err(e) if e.is_transient_io() || matches!(e, Error::KeyNotFound(_)) => {
+                // The whole sub-batch failed (shard down, one key missing
+                // aborts the batch, or the shard no longer owns a slot):
+                // retry key-by-key with failover — the single-key path
+                // walks the replicas and resolves `moved:` bounces.
+                // Misses are the exception path, so the extra round trips
+                // only happen when something already went wrong.
+                Err(e)
+                    if e.is_transient_io()
+                        || matches!(e, Error::KeyNotFound(_) | Error::Moved(_)) =>
+                {
                     retry.extend(idxs);
                 }
-                Err(e) => return Err(e),
+                Err(e) => {
+                    // Aborting the round mid-collect: un-issue the tags we
+                    // will never read, so their replies are drained on
+                    // arrival instead of rotting in the bounded stash
+                    // until it poisons the connection.
+                    for ((s, _), t) in pairs.by_ref() {
+                        if let Ok(t) = t {
+                            self.forget_tag(s, t);
+                        }
+                    }
+                    return Err(e);
+                }
             }
         }
         for i in retry {
@@ -1406,79 +1922,22 @@ impl DataStore for ClusterClient {
         Ok(out.into_iter().map(|t| t.expect("all partitions filled")).collect())
     }
 
-    /// Deletes every replica copy; `true` if any copy existed.
+    /// Deletes every replica copy; `true` if any copy existed.  Refetches
+    /// the slot table and retries on a `moved:` bounce.
     fn del_tensor(&mut self, key: &str) -> Result<bool> {
-        self.last_errors.clear();
-        let targets = self.targets(key);
-        let mut any = false;
-        let mut reached = false;
-        let mut errs: Vec<(usize, Error)> = Vec::new();
-        for &shard in &targets {
-            match self.on_shard(shard, |c| c.del_tensor(key)) {
-                Ok(b) => {
-                    reached = true;
-                    any |= b;
-                }
-                Err(e) => errs.push((shard, e)),
-            }
-        }
-        if !reached {
-            return Err(errs.swap_remove(0).1);
-        }
-        if !errs.is_empty() {
-            self.note_degraded(&errs);
-        }
-        Ok(any)
+        self.moved_retry(|s| s.del_tensor_once(key))
     }
 
     /// One batched round trip per (shard, replica offset); per-key
     /// presence is OR-ed across copies so a key deleted from two replicas
     /// still counts once.  Errors only if some key was unreachable on
-    /// *every* copy.
+    /// *every* copy; a `moved:` bounce refetches the table and retries.
     fn del_keys(&mut self, keys: &[String]) -> Result<u64> {
         if keys.is_empty() {
             return Ok(0);
         }
         check_batch_len(keys.len())?;
-        self.last_errors.clear();
-        let by_shard = self.partition_keys(keys);
-        let nsh = self.shards.len();
-        let mut deleted = vec![false; keys.len()];
-        let mut reached = vec![false; keys.len()];
-        let mut errs: Vec<(usize, Error)> = Vec::new();
-        for off in 0..self.cfg.replicas {
-            for (shard, idxs) in by_shard.iter().enumerate() {
-                if idxs.is_empty() {
-                    continue;
-                }
-                let target = (shard + off) % nsh;
-                let sub: Vec<Request> = idxs
-                    .iter()
-                    .map(|&i| Request::DelTensor { key: keys[i].clone() })
-                    .collect();
-                match self.on_shard(target, |c| c.exec_requests(&sub)) {
-                    Ok(resps) => {
-                        for (&i, r) in idxs.iter().zip(resps) {
-                            if let Ok(b) = r.expect_deleted() {
-                                reached[i] = true;
-                                deleted[i] |= b;
-                            }
-                        }
-                    }
-                    Err(e) => errs.push((target, e)),
-                }
-            }
-        }
-        if let Some(i) = reached.iter().position(|&r| !r) {
-            return Err(match errs.into_iter().next() {
-                Some((_, e)) => e,
-                None => Error::KeyNotFound(keys[i].clone()),
-            });
-        }
-        if !errs.is_empty() {
-            self.note_degraded(&errs);
-        }
-        Ok(deleted.iter().filter(|&&b| b).count() as u64)
+        self.moved_retry(|s| s.del_keys_once(keys))
     }
 
     /// Broadcast: each shard instance applies the policy to its own store.
@@ -1493,67 +1952,45 @@ impl DataStore for ClusterClient {
 
     /// `true` if any reachable copy has the key.
     fn exists(&mut self, key: &str) -> Result<bool> {
-        self.read_any(key, |c| c.exists(key), |&b| !b)
+        self.moved_retry(|s| s.read_any(key, |c| c.exists(key), |&b| !b))
     }
 
     /// One blocking `PollKeys` per shard that owns any of the keys; the
     /// total budget is shared (each shard gets what remains of `max_wait`).
     /// A dead primary fails over to its replicas — writes fanned out to
     /// them, so the keys appear there too.
+    ///
+    /// Polls carry no ownership check (a shard legitimately answers for
+    /// keys it merely replicates), so a client whose table went stale
+    /// *while parked* cannot be bounced mid-poll; instead, a timed-out
+    /// poll refetches the table, and if the epoch advanced — the keys may
+    /// have been landing on the new owner the whole time — the poll is
+    /// retried once against the fresh routing.
     fn poll_keys(&mut self, keys: &[String], poll: &PollConfig) -> Result<()> {
-        let deadline = Instant::now() + poll.max_wait;
-        let by_shard = self.partition_keys(keys);
-        let nsh = self.shards.len();
-        let timeout = || {
-            Error::Timeout(format!(
-                "keys {keys:?} not all present after {:?}",
-                poll.max_wait
-            ))
-        };
-        for (shard, idxs) in by_shard.into_iter().enumerate() {
-            if idxs.is_empty() {
-                continue;
-            }
-            let sub: Vec<String> = idxs.iter().map(|&i| keys[i].clone()).collect();
-            let mut last: Option<Error> = None;
-            let mut done = false;
-            for off in 0..self.cfg.replicas {
-                let target = (shard + off) % nsh;
-                let remaining = deadline.saturating_duration_since(Instant::now());
-                let budget = PollConfig { max_wait: remaining, ..*poll };
-                match self.on_shard(target, |c| c.poll_keys(&sub, &budget)) {
-                    Ok(()) => {
-                        if off > 0 {
-                            self.stats.read_failovers += 1;
-                        }
-                        done = true;
-                        break;
-                    }
-                    Err(e) if e.is_transient_io() => last = Some(e),
-                    // Rewrite per-shard timeouts to name the whole key set.
-                    Err(Error::Timeout(_)) => last = Some(timeout()),
-                    Err(e) => return Err(e),
+        match self.poll_keys_once(keys, poll) {
+            Err(Error::Timeout(m)) => {
+                let before = self.table.epoch;
+                if self.refresh_slot_table().unwrap_or(before) > before {
+                    self.epoch_refreshes += 1;
+                    self.poll_keys_once(keys, poll)
+                } else {
+                    Err(Error::Timeout(m))
                 }
             }
-            if !done {
-                return Err(last.unwrap_or_else(timeout));
-            }
+            other => other,
         }
-        Ok(())
     }
 
     /// Fans out to every replica target, like `put_tensor`.
     fn put_meta(&mut self, key: &str, value: &str) -> Result<()> {
-        self.replicated_write(
-            key,
-            Request::PutMeta { key: key.to_string(), value: value.to_string() },
-        )
+        let req = Request::PutMeta { key: key.to_string(), value: value.to_string() };
+        self.moved_retry(|s| s.replicated_write(key, req.clone()))
     }
 
     /// Primary first, then replicas; `Ok(None)` is a miss that falls
     /// through to the next copy.
     fn get_meta(&mut self, key: &str) -> Result<Option<String>> {
-        self.read_any(key, |c| c.get_meta(key), |v| v.is_none())
+        self.moved_retry(|s| s.read_any(key, |c| c.get_meta(key), |v| v.is_none()))
     }
 
     /// Keys across all reachable shards (merged + sorted + deduped —
@@ -1568,11 +2005,21 @@ impl DataStore for ClusterClient {
         self.merged_keys(|c| c.cold_list(prefix))
     }
 
-    /// A key spills on the shard that evicted it, so cold routing equals
-    /// hot routing — including the replica walk: each copy's shard may
-    /// have spilled its copy independently.
+    /// A key spills on the shard that evicted it, so cold routing starts
+    /// where hot routing points — the replica walk included, since each
+    /// copy's shard may have spilled its copy independently.  But the
+    /// cold tier is **node-local and never migrates**: after a reshard
+    /// (or a generation retired to a single anchor shard) the spill may
+    /// live on a shard the current table no longer points at, so a ring
+    /// miss widens to the remaining shards before reporting not-found.
     fn cold_get(&mut self, key: &str) -> Result<Tensor> {
-        self.read_any(key, |c| c.cold_get(key), |_| false)
+        let mut order = self.read_targets(key);
+        for s in 0..self.shards.len() {
+            if !order.contains(&s) {
+                order.push(s);
+            }
+        }
+        self.read_any_on(&order, key, |c| c.cold_get(key), |_| false)
     }
 
     /// Models are broadcast to every shard, so `run_model` can execute
@@ -1603,11 +2050,11 @@ impl DataStore for ClusterClient {
     ) -> Result<()> {
         let target = in_keys
             .first()
-            .map(|k| self.slots.shard_for_key(k))
+            .map(|k| self.table.shard_for_key(k))
             .unwrap_or(0);
         let mut staged: Vec<&String> = Vec::new();
         for k in in_keys {
-            if self.slots.shard_for_key(k) != target {
+            if self.table.shard_for_key(k) != target {
                 // Failover-aware read; the staged copy is transient, so it
                 // goes to the target only (not replicated).
                 let t = self.get_tensor(k)?;
@@ -1619,7 +2066,7 @@ impl DataStore for ClusterClient {
             c.run_model_version(key, version, in_keys, out_keys, device)
         })?;
         for k in out_keys {
-            let owner = self.slots.shard_for_key(k);
+            let owner = self.table.shard_for_key(k);
             if owner != target {
                 let t = self.on_shard(target, |c| c.get_tensor(k))?;
                 // Outputs are real data: replicate them like any write so
@@ -1811,85 +2258,60 @@ impl DataStore for ClusterClient {
         let reqs = pipeline.into_requests();
         let n = reqs.len();
         check_batch_len(n)?;
-        let mut primary = Vec::with_capacity(n);
         for (i, r) in reqs.iter().enumerate() {
-            match r.routing_key() {
-                Some(k) => primary.push(self.slots.shard_for_key(k)),
-                None => {
-                    return Err(Error::Invalid(format!(
-                        "pipeline entry {i} has no routing key ({r:?}); \
-                         use the dedicated ClusterClient method instead"
-                    )))
-                }
+            if r.routing_key().is_none() {
+                return Err(Error::Invalid(format!(
+                    "pipeline entry {i} has no routing key ({r:?}); \
+                     use the dedicated ClusterClient method instead"
+                )));
             }
         }
-        let writes: Vec<bool> = reqs.iter().map(is_write_request).collect();
-        let nsh = self.shards.len();
-        let mut best: Vec<Option<Response>> = (0..n).map(|_| None).collect();
-        let mut first_io: Option<Error> = None;
-        for off in 0..self.cfg.replicas {
-            let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); nsh];
-            for i in 0..n {
-                let needs = writes[i]
-                    || best[i].as_ref().map_or(true, |b| resp_rank(b) < 3);
-                if needs {
-                    by_shard[(primary[i] + off) % nsh].push(i);
-                }
+        let mut out = self.execute_subset(&reqs, (0..n).collect(), false)?;
+        // Entries bounced by a shard that no longer owns their slot are
+        // re-routed through a refreshed table.  Only the bounced entries
+        // re-run, so writes that already applied are not replayed (a
+        // replayed `DelTensor` would flip its result to `false`).  Bounced
+        // *reads* re-run against the old owner's ring: mid-migration the
+        // new ring bounces misses for keys the transfer has not landed
+        // yet, and the old ring is where those keys still live.
+        for _ in 0..MAX_MOVED_RETRIES {
+            let moved: Vec<usize> =
+                (0..n).filter(|&i| moved_epoch(&out[i]).is_some()).collect();
+            if moved.is_empty() {
+                break;
             }
-            // One multiplexed round: all sub-batches on the wire, then all
-            // replies collected — max-of-shards, not sum-of-shards.
-            let mut jobs: Vec<(usize, Vec<usize>)> = Vec::new();
-            let mut sends: Vec<(usize, Request)> = Vec::new();
-            for (shard, idxs) in by_shard.into_iter().enumerate() {
+            self.epoch_refreshes += 1;
+            self.refresh_slot_table()?;
+            let (writes, reads): (Vec<usize>, Vec<usize>) =
+                moved.into_iter().partition(|&i| is_write_request(&reqs[i]));
+            for (idxs, route_old) in [(writes, false), (reads, true)] {
                 if idxs.is_empty() {
                     continue;
                 }
-                let sub: Vec<Request> = idxs.iter().map(|&i| reqs[i].clone()).collect();
-                sends.push((shard, Request::Batch(sub)));
-                jobs.push((shard, idxs));
-            }
-            let tags = self.mux_send(&sends);
-            for ((shard, idxs), tag) in jobs.into_iter().zip(tags) {
-                let res = tag
-                    .and_then(|t| self.mux_recv(shard, t))
-                    .and_then(|r| r.expect_batch(idxs.len()));
-                match res {
-                    Ok(resps) => {
-                        for (&i, r) in idxs.iter().zip(resps) {
-                            let rank = resp_rank(&r);
-                            if off > 0 && rank == 3 {
-                                if writes[i] {
-                                    self.stats.replicated_writes += 1;
-                                } else {
-                                    self.stats.read_failovers += 1;
-                                }
-                            }
-                            let better =
-                                best[i].as_ref().map_or(true, |b| rank > resp_rank(b));
-                            if better {
-                                best[i] = Some(r);
-                            }
-                        }
-                    }
-                    Err(e) => {
-                        if first_io.is_none() {
-                            first_io = Some(e);
-                        }
-                    }
+                let redo = self.execute_subset(&reqs, idxs.clone(), route_old)?;
+                for (i, r) in idxs.into_iter().zip(redo) {
+                    out[i] = r;
                 }
             }
         }
-        let mut out = Vec::with_capacity(n);
-        for b in best {
-            match b {
-                Some(r) => out.push(r),
-                None => {
-                    return Err(first_io.take().unwrap_or_else(|| {
-                        Error::Io(std::io::Error::new(
-                            std::io::ErrorKind::NotConnected,
-                            "no shard reachable for pipeline entry",
-                        ))
-                    }))
+        // Reads that missed while their slot is mid-migration re-run
+        // against the old owner's ring — the transfer may simply not have
+        // landed their key on the new owner yet.
+        let lagging: Vec<usize> = (0..n)
+            .filter(|&i| {
+                !is_write_request(&reqs[i])
+                    && matches!(&out[i], Response::NotFound | Response::Bool(false))
+                    && reqs[i]
+                        .routing_key()
+                        .map(|k| self.table.fallback_for_slot(hash_slot(k)).is_some())
+                        .unwrap_or(false)
+            })
+            .collect();
+        if !lagging.is_empty() {
+            let redo = self.execute_subset(&reqs, lagging.clone(), true)?;
+            for (i, r) in lagging.into_iter().zip(redo) {
+                if resp_rank(&r) == 3 {
+                    out[i] = r;
                 }
             }
         }
@@ -1957,6 +2379,61 @@ mod tests {
             }
             other => panic!("expected a protocol error, got {other:?}"),
         }
+        server.join().unwrap();
+    }
+
+    /// Abandoning in-flight tags must not leak: a reply already stashed is
+    /// dropped at [`Client::forget_tags`] time, and one still in flight is
+    /// drained and dropped when it arrives — instead of accumulating in
+    /// the bounded stash until it fills and poisons the connection (the
+    /// failure mode when a cluster fan-out aborts mid-collect).
+    #[test]
+    fn forgotten_tag_replies_are_drained_not_stashed() {
+        let listener = TcpListener::bind("127.0.0.1:0".parse::<SocketAddr>().unwrap()).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            // Swallow (part of) the client's request frames; TCP buffers
+            // absorb the rest — this fake never parses its input.
+            let mut junk = [0u8; 256];
+            let _ = sock.read(&mut junk);
+            let reply = |sock: &mut std::net::TcpStream, tag: u32, r: Response| {
+                let mut body = Vec::new();
+                r.encode(&mut body);
+                write_tagged_frame(sock, tag, &body).unwrap();
+            };
+            // Out-of-order completion: tag 1 first (will be stashed while
+            // the client waits for tag 3), then tag 3, then the abandoned
+            // tag 2, then the untagged reply for the follow-up call.
+            reply(&mut sock, 1, Response::Ok);
+            reply(&mut sock, 3, Response::Bool(true));
+            reply(&mut sock, 2, Response::Ok);
+            reply(&mut sock, 0, Response::Ok);
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let mut c = Client::connect_with(addr, Some(Duration::from_secs(2)), None).unwrap();
+        let t1 = c.send_tagged(&Request::Info).unwrap();
+        let t2 = c.send_tagged(&Request::Info).unwrap();
+        let t3 = c.send_tagged(&Request::Info).unwrap();
+        assert_eq!((t1, t2, t3), (1, 2, 3));
+        // Collecting tag 3 first forces tag 1's reply through the stash.
+        match c.recv_tagged(t3).unwrap() {
+            Response::Bool(true) => {}
+            other => panic!("expected tag 3's reply, got {other:?}"),
+        }
+        assert_eq!(c.stashed_replies(), 1, "tag 1's reply should be stashed");
+        // Abandon both: the stashed reply is dropped now, the in-flight
+        // one (tag 2) when it arrives.
+        c.forget_tags([t1, t2]);
+        assert_eq!(c.stashed_replies(), 0, "forgetting must drop the stashed reply");
+        // The follow-up call reads past tag 2's late reply (drained, not
+        // stashed, not a protocol error) to its own untagged answer.
+        match c.call(&Request::Info).unwrap() {
+            Response::Ok => {}
+            other => panic!("expected the untagged reply, got {other:?}"),
+        }
+        assert_eq!(c.stashed_replies(), 0, "drained reply must not be stashed");
+        assert_eq!(c.outstanding_tags(), 0, "no tags left outstanding");
         server.join().unwrap();
     }
 }

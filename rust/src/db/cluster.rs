@@ -77,6 +77,177 @@ impl SlotMap {
     }
 }
 
+/// One contiguous slot range and its owner inside a [`SlotEpoch`] table.
+///
+/// `from` marks a range mid-migration: `shard` is the new owner (all
+/// writes route there), while reads may still fall back to `from` until
+/// the driver commits the cutover (data has landed on `shard`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlotAssign {
+    /// Inclusive slot range bounds.
+    pub lo: u16,
+    pub hi: u16,
+    /// Owning shard (write target).
+    pub shard: u16,
+    /// Previous owner while the range's data is still streaming over.
+    pub from: Option<u16>,
+}
+
+/// Epoch-versioned slot-ownership table: the elastic replacement for
+/// [`SlotMap`].  Assignments are sorted, disjoint, and tile
+/// `[0, N_SLOTS)` — [`Self::validate`] enforces it, and every
+/// constructor in this module produces tables that pass.
+///
+/// Epoch 0 with `n` shards ([`Self::initial`]) routes byte-identically
+/// to `SlotMap::new(n)`; higher epochs are produced only by the reshard
+/// driver (`epoch` strictly increases on every membership/ownership
+/// change, so "newer table" and "higher epoch" are the same statement).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlotEpoch {
+    pub epoch: u64,
+    pub assignments: Vec<SlotAssign>,
+}
+
+impl SlotEpoch {
+    /// The static even split at epoch 0 — exactly [`SlotMap::new`]'s
+    /// layout, so a cluster that never reshards routes as it always has.
+    pub fn initial(n_shards: usize) -> SlotEpoch {
+        let sm = SlotMap::new(n_shards);
+        let assignments = (0..n_shards)
+            .map(|s| {
+                let (lo, hi) = sm.slot_range(s);
+                SlotAssign { lo, hi, shard: s as u16, from: None }
+            })
+            .collect();
+        SlotEpoch { epoch: 0, assignments }
+    }
+
+    /// Build a table from a per-slot ownership function, compressing
+    /// maximal runs of identical `(shard, from)` into one assignment.
+    fn from_slot_fn(epoch: u64, f: impl Fn(u16) -> (u16, Option<u16>)) -> SlotEpoch {
+        let mut assignments: Vec<SlotAssign> = Vec::new();
+        for slot in 0..N_SLOTS {
+            let (shard, from) = f(slot);
+            match assignments.last_mut() {
+                Some(a) if a.shard == shard && a.from == from && a.hi + 1 == slot => a.hi = slot,
+                _ => assignments.push(SlotAssign { lo: slot, hi: slot, shard, from }),
+            }
+        }
+        SlotEpoch { epoch, assignments }
+    }
+
+    /// Highest shard index referenced (owners and migration sources),
+    /// plus one — the minimum shard-list length a client needs.
+    pub fn n_shards(&self) -> usize {
+        self.assignments
+            .iter()
+            .map(|a| a.shard.max(a.from.unwrap_or(0)) as usize + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Highest *owning* shard index plus one — the membership the cluster
+    /// is heading to.  Differs from [`SlotEpoch::n_shards`] only while a
+    /// shrink is in flight (migration sources above every owner); the
+    /// server accepts replicated writes under either ring modulus so the
+    /// drain's streaming writes land where the committed table will expect
+    /// them.
+    pub fn owner_count(&self) -> usize {
+        self.assignments
+            .iter()
+            .map(|a| a.shard as usize + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// The assignment covering `slot` (tables always tile, so this never
+    /// fails on a validated table).
+    pub fn assign_for_slot(&self, slot: u16) -> &SlotAssign {
+        let i = self
+            .assignments
+            .partition_point(|a| a.hi < slot);
+        &self.assignments[i]
+    }
+
+    /// Current owner (write target) of a slot.
+    pub fn shard_for_slot(&self, slot: u16) -> usize {
+        self.assign_for_slot(slot).shard as usize
+    }
+
+    pub fn shard_for_key(&self, key: &str) -> usize {
+        self.shard_for_slot(hash_slot(key))
+    }
+
+    /// Old owner of a mid-migration slot, if any — the read-fallback
+    /// target until the range's data has landed on the new owner.
+    pub fn fallback_for_slot(&self, slot: u16) -> Option<usize> {
+        self.assign_for_slot(slot).from.map(|s| s as usize)
+    }
+
+    /// Structural invariants every table on the wire must satisfy:
+    /// sorted, disjoint, tiling `[0, N_SLOTS)`, no self-migration.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut next = 0u32;
+        for a in &self.assignments {
+            if a.lo as u32 != next {
+                return Err(format!("gap/overlap at slot {next}: next range starts at {}", a.lo));
+            }
+            if a.hi < a.lo {
+                return Err(format!("inverted range {}..={}", a.lo, a.hi));
+            }
+            if a.from == Some(a.shard) {
+                return Err(format!("range {}..={} migrates to itself", a.lo, a.hi));
+            }
+            next = a.hi as u32 + 1;
+        }
+        if next != N_SLOTS as u32 {
+            return Err(format!("table covers [0, {next}), wants [0, {})", N_SLOTS));
+        }
+        Ok(())
+    }
+
+    /// Maximal contiguous ranges whose owner differs between `self` and
+    /// `target`, as `(lo, hi, old_owner, new_owner)` — the reshard
+    /// driver's transfer work list.
+    pub fn moved_ranges(&self, target: &SlotEpoch) -> Vec<(u16, u16, u16, u16)> {
+        let mut moves: Vec<(u16, u16, u16, u16)> = Vec::new();
+        for slot in 0..N_SLOTS {
+            let old = self.shard_for_slot(slot) as u16;
+            let new = target.shard_for_slot(slot) as u16;
+            if old == new {
+                continue;
+            }
+            match moves.last_mut() {
+                Some((_, hi, o, n)) if *o == old && *n == new && *hi + 1 == slot => *hi = slot,
+                _ => moves.push((slot, slot, old, new)),
+            }
+        }
+        moves
+    }
+
+    /// Next-epoch table with `moves` marked mid-migration: each moved
+    /// range is owned by its new shard with `from` pointing at the old
+    /// one.  Ranges not listed keep their current owner (and lose any
+    /// stale migration marker — one migration is in flight at a time).
+    pub fn with_moves(&self, moves: &[(u16, u16, u16, u16)]) -> SlotEpoch {
+        Self::from_slot_fn(self.epoch + 1, |slot| {
+            for &(lo, hi, old, new) in moves {
+                if slot >= lo && slot <= hi {
+                    return (new, Some(old));
+                }
+            }
+            (self.shard_for_slot(slot) as u16, None)
+        })
+    }
+
+    /// Next-epoch table committing every in-flight migration: ownership
+    /// unchanged, all `from` markers cleared (data has landed; reads no
+    /// longer fall back).
+    pub fn committed(&self) -> SlotEpoch {
+        Self::from_slot_fn(self.epoch + 1, |slot| (self.shard_for_slot(slot) as u16, None))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,5 +310,87 @@ mod tests {
     fn shard_for_key_stable() {
         let sm = SlotMap::new(16);
         assert_eq!(sm.shard_for_key("x"), sm.shard_for_key("x"));
+    }
+
+    #[test]
+    fn prop_epoch0_routes_identically_to_static_slotmap() {
+        // The elastic table at epoch 0 must be a drop-in for SlotMap: same
+        // owner for every slot (hence byte-identical request routing), and
+        // the assignment ranges are exactly SlotMap's preimages.
+        check("epoch0 == slotmap", 25, |g: &mut Gen| {
+            let n = g.usize_in(1..=64);
+            let sm = SlotMap::new(n);
+            let ep = SlotEpoch::initial(n);
+            assert_eq!(ep.epoch, 0);
+            assert_eq!(ep.n_shards(), n);
+            ep.validate().unwrap();
+            for slot in 0..N_SLOTS {
+                assert_eq!(ep.shard_for_slot(slot), sm.shard_for_slot(slot));
+                assert_eq!(ep.fallback_for_slot(slot), None);
+            }
+            for (s, a) in ep.assignments.iter().enumerate() {
+                assert_eq!((a.lo, a.hi), sm.slot_range(s));
+            }
+            // And the key path composes through the same hash.
+            for i in 0..200 {
+                let k = format!("f_rank{}_step{}", i % 7, i);
+                assert_eq!(ep.shard_for_key(&k), sm.shard_for_key(&k));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_resharded_table_partition_complete_and_disjoint() {
+        // After a reshard (n -> m shards, mid-migration and committed):
+        // every slot owned by exactly one shard, ranges still tile
+        // [0, N_SLOTS), and moved_ranges covers exactly the disagreement.
+        check("reshard partition", 25, |g: &mut Gen| {
+            let n = g.usize_in(1..=16);
+            let m = g.usize_in(1..=16);
+            let from = SlotEpoch::initial(n);
+            let target = SlotEpoch::initial(m);
+            let moves = from.moved_ranges(&target);
+            let mid = from.with_moves(&moves);
+            mid.validate().unwrap();
+            assert_eq!(mid.epoch, from.epoch + 1);
+            let committed = mid.committed();
+            committed.validate().unwrap();
+            assert_eq!(committed.epoch, mid.epoch + 1);
+            let mut covered = 0u32;
+            for a in &committed.assignments {
+                covered += (a.hi - a.lo + 1) as u32;
+            }
+            assert_eq!(covered, N_SLOTS as u32);
+            for slot in 0..N_SLOTS {
+                // Mid-migration ownership is already the target layout,
+                // with the fallback pointing at the old owner iff moved.
+                assert_eq!(mid.shard_for_slot(slot), target.shard_for_slot(slot));
+                let moved = from.shard_for_slot(slot) != target.shard_for_slot(slot);
+                assert_eq!(
+                    mid.fallback_for_slot(slot),
+                    moved.then_some(from.shard_for_slot(slot)),
+                );
+                // Committed: same owners, no fallback anywhere.
+                assert_eq!(committed.shard_for_slot(slot), target.shard_for_slot(slot));
+                assert_eq!(committed.fallback_for_slot(slot), None);
+            }
+            // moved_ranges is a partition of the disagreement set.
+            let mut in_moves = vec![false; N_SLOTS as usize];
+            for (lo, hi, old, new) in moves {
+                assert_ne!(old, new);
+                for s in lo..=hi {
+                    assert!(!in_moves[s as usize], "overlapping move at {s}");
+                    in_moves[s as usize] = true;
+                    assert_eq!(from.shard_for_slot(s), old as usize);
+                    assert_eq!(target.shard_for_slot(s), new as usize);
+                }
+            }
+            for slot in 0..N_SLOTS {
+                assert_eq!(
+                    in_moves[slot as usize],
+                    from.shard_for_slot(slot) != target.shard_for_slot(slot),
+                );
+            }
+        });
     }
 }

@@ -74,20 +74,15 @@ use crate::db::engine::{CommandGate, Engine};
 use crate::db::event::{
     bind_reuseport, reuseport_available, waker, Event, Poller, WakeReceiver, Waker,
 };
+use crate::db::cluster::SlotEpoch;
 use crate::db::spill::SpillConfig;
-use crate::db::store::{RetentionConfig, Store};
+use crate::db::store::{Ownership, RetentionConfig, Store};
 use crate::error::{Error, Result};
 use crate::proto::frame::FRAME_TAG_FLAG;
 use crate::proto::{message, DbInfo, Request, Response, MAX_FRAME};
 use crate::runtime::Executor;
 use crate::tensor::Bytes;
 use crate::util::fault::{FaultPlan, FaultStream};
-
-/// Historical accept-backoff ceiling, kept as the default for the
-/// (now vestigial) [`ServerConfig::accept_backoff_max`] knob.  Accepts are
-/// readiness-driven — there is no backoff ladder to configure anymore —
-/// but existing callers still set the field, so it stays in the config.
-const ACCEPT_BACKOFF_MAX: Duration = Duration::from_millis(50);
 
 /// Default mid-frame stall deadline on connection sockets.  With the
 /// event loop, an *idle* connection costs nothing regardless of this
@@ -148,11 +143,6 @@ pub struct ServerConfig {
     /// it.  Idle connections (no partial frame) are exempt and cost zero
     /// wakeups (defaults documented on `CONN_READ_TIMEOUT`).
     pub conn_read_timeout: Duration,
-    /// Vestigial: the accept path is readiness-driven and no longer backs
-    /// off.  Retained so existing configs keep compiling; the value is
-    /// ignored, and setting it to anything but the default logs a one-time
-    /// deprecation warning at startup.
-    pub accept_backoff_max: Duration,
     /// Reactor (I/O event loop) threads.  `0` — the default — defers to
     /// the `SITU_REACTORS` environment variable capped at [`Self::cores`],
     /// falling back to a single reactor when the variable is unset.  With
@@ -178,7 +168,6 @@ impl Default for ServerConfig {
             retention: RetentionConfig::UNBOUNDED,
             spill: None,
             conn_read_timeout: CONN_READ_TIMEOUT,
-            accept_backoff_max: ACCEPT_BACKOFF_MAX,
             reactors: 0,
             fault: None,
         }
@@ -1335,18 +1324,6 @@ impl DbServer {
     /// Start a server sharing an existing model runtime (co-located
     /// deployments reuse one PJRT executor across components).
     pub fn start_with(config: ServerConfig, models: Option<Arc<ModelRuntime>>) -> Result<DbServer> {
-        if config.accept_backoff_max != ACCEPT_BACKOFF_MAX {
-            // The knob is dead — accepts are readiness-driven, there is no
-            // backoff ladder — but callers may still set it.  Warn once per
-            // process, not per server.
-            static BACKOFF_WARN: std::sync::Once = std::sync::Once::new();
-            BACKOFF_WARN.call_once(|| {
-                eprintln!(
-                    "situ-db: ServerConfig::accept_backoff_max is deprecated and \
-                     ignored (accepts are readiness-driven); stop setting it"
-                );
-            });
-        }
         let n_reactors = resolve_reactors(&config);
         // Listener strategy: one reactor binds plainly.  Several reactors
         // prefer one SO_REUSEPORT listener each (kernel-balanced accepts);
@@ -1577,6 +1554,19 @@ pub fn execute(
                 .map(|e| execute(e, store, models, engine))
                 .collect(),
         ),
+        // Keyed data ops pass the slot-ownership admission check
+        // (`Store::check_owned`) first: with an epoch table installed, a
+        // shard that no longer owns the key's slot rejects the op with a
+        // `moved: <epoch>` error so stale clients refetch their table.
+        // Deletes (`DelTensor` is enforced, `DelKeys` is not), aggregate
+        // ops, `PollKeys` probes, and the node-local cold tier are exempt —
+        // see docs/cluster.md for the exact rules.
+        // MGetTensors is deliberately NOT ownership-checked: the reshard
+        // driver streams surviving replica copies with it, and a replica's
+        // placement under a *previous* ring modulus is not derivable from
+        // the current table. Stale clients are still corrected because the
+        // per-key fallback path they take on a miss is the enforced
+        // GetTensor, which bounces with `moved:` and triggers a refetch.
         Request::MGetTensors { keys } => Response::Batch(
             keys.iter()
                 .map(|k| match store.get_tensor(k) {
@@ -1587,32 +1577,55 @@ pub fn execute(
                 .collect(),
         ),
         Request::PollKeys { keys, .. } => Response::Bool(store.exists_all(&keys)),
-        Request::PutTensor { key, tensor } => match store.put_tensor(&key, tensor) {
-            Ok(()) => Response::Ok,
-            Err(e) => Response::Error(e.to_string()),
-        },
-        Request::GetTensor { key } => match store.get_tensor(&key) {
-            Ok(t) => Response::Tensor(t),
-            Err(Error::KeyNotFound(_)) => Response::NotFound,
-            Err(e) => Response::Error(e.to_string()),
-        },
+        Request::PutTensor { key, tensor } => {
+            match store.check_owned(&key, true).and_then(|_| store.put_tensor(&key, tensor)) {
+                Ok(()) => Response::Ok,
+                Err(e) => Response::Error(e.to_string()),
+            }
+        }
+        Request::GetTensor { key } => {
+            match store.check_owned(&key, false).and_then(|_| store.get_tensor(&key)) {
+                Ok(t) => Response::Tensor(t),
+                // A miss on a mid-migration slot is not authoritative when
+                // this shard is only a *new*-ring member — the transfer may
+                // not have landed the key yet.  Bounce instead, so clients
+                // holding a pre-migration table refetch and fall back to
+                // the old owner rather than trusting a hollow `NotFound`.
+                Err(Error::KeyNotFound(_)) => match store.migrating_miss(&key) {
+                    Some(ep) => Response::Error(Error::Moved(ep).to_string()),
+                    None => Response::NotFound,
+                },
+                Err(e) => Response::Error(e.to_string()),
+            }
+        }
         Request::DelTensor { key } => {
+            if let Err(e) = store.check_owned(&key, true) {
+                return Response::Error(e.to_string());
+            }
             if store.del_tensor(&key) {
                 Response::Ok
             } else {
                 Response::NotFound
             }
         }
-        Request::Exists { key } => Response::Bool(store.exists(&key)),
-        Request::PutMeta { key, value } => {
-            store.put_meta(&key, &value);
-            Response::Ok
-        }
-        Request::GetMeta { key } => match store.get_meta(&key) {
-            Ok(v) => Response::Meta(v),
-            Err(Error::KeyNotFound(_)) => Response::NotFound,
+        Request::Exists { key } => match store.check_owned(&key, false) {
+            Ok(()) => Response::Bool(store.exists(&key)),
             Err(e) => Response::Error(e.to_string()),
         },
+        Request::PutMeta { key, value } => match store.check_owned(&key, true) {
+            Ok(()) => {
+                store.put_meta(&key, &value);
+                Response::Ok
+            }
+            Err(e) => Response::Error(e.to_string()),
+        },
+        Request::GetMeta { key } => {
+            match store.check_owned(&key, false).and_then(|_| store.get_meta(&key)) {
+                Ok(v) => Response::Meta(v),
+                Err(Error::KeyNotFound(_)) => Response::NotFound,
+                Err(e) => Response::Error(e.to_string()),
+            }
+        }
         Request::ListKeys { prefix } => Response::Keys(store.list_keys(&prefix)),
         Request::PutModel { key, hlo_text } => match models {
             None => Response::Error("model runtime disabled on this server".into()),
@@ -1718,6 +1731,30 @@ pub fn execute(
             store.flush_all();
             Response::Ok
         }
+        Request::ClusterEpoch { install } => {
+            if let Some((shard, replicas, table)) = install {
+                // Decode range-checks fields; revalidate the structural
+                // invariants (tiling, no self-migration) before adopting.
+                if let Err(e) = table.validate() {
+                    return Response::Error(format!("invalid slot table: {e}"));
+                }
+                store.install_ownership(Ownership { shard, replicas, table });
+            }
+            match store.ownership() {
+                Some(own) => {
+                    Response::EpochTable { shard: own.shard, table: own.table.clone() }
+                }
+                None => Response::EpochTable {
+                    shard: u16::MAX,
+                    table: SlotEpoch { epoch: 0, assignments: Vec::new() },
+                },
+            }
+        }
+        Request::ExportSlots { lo, hi } => Response::Keys(store.keys_in_slots(lo, hi)),
+        Request::ColdPut { key, tensor } => match store.cold_put(&key, tensor) {
+            Ok(()) => Response::Ok,
+            Err(e) => Response::Error(e.to_string()),
+        },
     }
 }
 

@@ -401,6 +401,16 @@ fn segment_path(dir: &Path, id: u64) -> PathBuf {
     dir.join(format!("seg-{id:08}.spill"))
 }
 
+/// Sequence number parsed back out of a `seg-NNNNNNNN.spill` file name.
+fn segment_seq(path: &Path) -> Option<u64> {
+    path.file_name()?
+        .to_str()?
+        .strip_prefix("seg-")?
+        .strip_suffix(".spill")?
+        .parse()
+        .ok()
+}
+
 /// A sealed (no longer appended-to) segment — the unit the cold byte cap
 /// deletes, oldest first.
 #[derive(Debug, Clone)]
@@ -1016,16 +1026,23 @@ impl Backend {
     }
 
     /// Best-effort age ordering for the cap's victim queue across
-    /// restarts: segments are append-only, so a sealed file's mtime is its
-    /// seal time.  Without this, recovered groups would be queued in
-    /// directory-name order and the cap could delete a field's *newest*
-    /// history before another field's oldest.
+    /// restarts.  Segments are append-only, so a sealed file's mtime is
+    /// its seal time — but mtime is coarse (whole seconds on many
+    /// filesystems), and a group that rotates tiny segments quickly seals
+    /// several inside one tick, leaving their relative order to the
+    /// directory listing.  The sequence number in the `seg-NNNNNNNN.spill`
+    /// name breaks those ties: within a group it *is* seal order, so the
+    /// sort key is (mtime, sequence), with unparseable names sorting after
+    /// their same-tick peers.  Without any of this, recovered groups would
+    /// queue in directory-name order and the cap could delete a field's
+    /// *newest* history before another field's oldest.
     fn sort_sealed_by_age(sealed: &mut VecDeque<SealedSegment>) {
         let mut v: Vec<SealedSegment> = sealed.drain(..).collect();
-        v.sort_by_key(|s| {
-            std::fs::metadata(&*s.path)
+        v.sort_by_cached_key(|s| {
+            let mtime = std::fs::metadata(&*s.path)
                 .and_then(|m| m.modified())
-                .unwrap_or(std::time::SystemTime::UNIX_EPOCH)
+                .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            (mtime, segment_seq(&s.path).unwrap_or(u64::MAX))
         });
         sealed.extend(v);
     }
@@ -1246,6 +1263,88 @@ mod tests {
         w.append("x_rank0_step0", &t(vec![1.0])).unwrap();
         w.flush().unwrap();
         assert_eq!(replay_segment(w.active_segment()).unwrap().records.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Pin every segment file's mtime to one instant, simulating segments
+    /// sealed faster than the filesystem's (often 1 s) mtime resolution.
+    fn equalize_mtimes(dir: &Path) {
+        let when =
+            std::time::SystemTime::UNIX_EPOCH + std::time::Duration::from_secs(1_700_000_000);
+        for (_, p) in list_segments(dir).unwrap() {
+            std::fs::File::options()
+                .write(true)
+                .open(&p)
+                .and_then(|f| f.set_modified(when))
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn sealed_age_order_survives_coarse_mtime_ties() {
+        let dir = tmp_dir("mtime_ties");
+        let (mut w, _) = SpillWriter::open(&dir, 64, |_, _| {}).unwrap();
+        let mut sealed: Vec<SealedSegment> = Vec::new();
+        for i in 0..6 {
+            if let Some(s) = w.append(&format!("f_rank0_step{i}"), &t(vec![0.0; 16])).unwrap().sealed
+            {
+                sealed.push(s);
+            }
+        }
+        w.flush().unwrap();
+        drop(w);
+        assert_eq!(sealed.len(), 6);
+        equalize_mtimes(&dir);
+        // Regression: with identical mtimes the old sort had no signal at
+        // all, so any scrambled recovery order survived and the cap could
+        // drop the newest history first.
+        let mut q: VecDeque<SealedSegment> = VecDeque::new();
+        for &i in &[3usize, 0, 5, 1, 4, 2] {
+            q.push_back(sealed[i].clone());
+        }
+        Backend::sort_sealed_by_age(&mut q);
+        let order: Vec<u64> = q.iter().map(|s| segment_seq(&s.path).unwrap()).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5], "sequence number breaks mtime ties");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restart_cap_drops_oldest_segments_first_under_fast_rotation() {
+        let dir = tmp_dir("cap_oldest");
+        let group = dir.join("field");
+        {
+            // Rotate six tiny segments back-to-back — all sealed within
+            // one mtime tick on filesystems with coarse timestamps.
+            let (mut w, _) = SpillWriter::open(&group, 64, |_, _| {}).unwrap();
+            for i in 0..6 {
+                w.append(&format!("field_rank0_step{i}"), &t(vec![i as f32; 16])).unwrap();
+            }
+            w.flush().unwrap();
+        }
+        equalize_mtimes(&group);
+        let seg_bytes = std::fs::metadata(group.join("seg-00000000.spill")).unwrap().len();
+        // Budget for roughly three sealed segments (plus the empty active
+        // one): restart must delete the *oldest* three to fit.
+        let (backend, shared) = Backend::open(SpillConfig {
+            dir: dir.clone(),
+            max_bytes: seg_bytes * 3 + seg_bytes / 2,
+            segment_bytes: 64,
+        })
+        .unwrap();
+        assert!(
+            shared.stats.dropped_segments.load(Ordering::Relaxed) >= 3,
+            "restart cap enforcement ran"
+        );
+        let survivors: Vec<u64> =
+            list_segments(&group).unwrap().into_iter().map(|(id, _)| id).collect();
+        for old in 0..3 {
+            assert!(!survivors.contains(&old), "seg {old} (oldest) must be a victim");
+        }
+        assert!(
+            survivors.contains(&5),
+            "the newest sealed segment must survive, got {survivors:?}"
+        );
+        drop(backend);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

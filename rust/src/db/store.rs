@@ -101,6 +101,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
+use crate::db::cluster::{hash_slot, SlotEpoch};
 use crate::db::spill::{self, SpillConfig, SpillMsg, SpillShared};
 use crate::error::{Error, Result};
 use crate::proto::message::FieldPressure;
@@ -400,7 +401,39 @@ pub struct Store {
     /// at their next backoff probe.  Unset (every bare `Store::new`), the
     /// hot path pays one atomic load.
     write_observer: OnceLock<Arc<dyn Fn(&str) + Send + Sync>>,
+    /// Epoch-versioned slot ownership (the cluster's elastic routing
+    /// table), installed over the wire by `ClusterEpoch`.  `None` until the
+    /// first install — a standalone or legacy-static server serves every
+    /// slot.  `owned_gate` mirrors `is_some()` so the keyed hot paths pay
+    /// one relaxed atomic load while no table is installed.
+    ownership: Mutex<Option<Arc<Ownership>>>,
+    owned_gate: AtomicBool,
     pub counters: Counters,
+}
+
+/// A shard's view of the cluster's slot ownership: the epoch table plus its
+/// own identity within it and the cluster's replication factor (so writes
+/// that land here because this shard is a ring *successor* of the slot's
+/// owner are accepted, not bounced as moved).
+pub struct Ownership {
+    /// This server's shard index within `table`.
+    pub shard: u16,
+    /// Replication factor the cluster client writes with (>= 1).
+    pub replicas: u16,
+    pub table: SlotEpoch,
+}
+
+impl Ownership {
+    /// Whether `shard` is within the `replicas`-wide successor ring that
+    /// starts at `owner` (wrapping over `n` shards) — the set of shards a
+    /// replicated write of an owned slot legitimately lands on.
+    fn in_ring(&self, owner: u16, n: u16, shard: u16) -> bool {
+        if n == 0 {
+            return false;
+        }
+        let dist = (shard as u32 + n as u32 - owner as u32) % n as u32;
+        dist < self.replicas.max(1).min(n) as u32
+    }
 }
 
 /// Handle on a running spill tier: the channel the eviction paths feed,
@@ -457,7 +490,107 @@ impl Store {
             spill: Mutex::new(None),
             spill_on: AtomicBool::new(false),
             write_observer: OnceLock::new(),
+            ownership: Mutex::new(None),
+            owned_gate: AtomicBool::new(false),
             counters: Counters::default(),
+        }
+    }
+
+    /// Install a slot-ownership table if it is not older than the one
+    /// already installed (equal epochs re-install — the driver uses that to
+    /// refresh `shard`/`replicas` idempotently).  Returns the table that is
+    /// current *after* the call, so an install with a stale epoch doubles
+    /// as a fetch of the newer one.
+    pub fn install_ownership(&self, own: Ownership) -> Arc<Ownership> {
+        let mut g = self.ownership.lock().unwrap();
+        let newer = match g.as_ref() {
+            Some(cur) => own.table.epoch >= cur.table.epoch,
+            None => true,
+        };
+        if newer {
+            *g = Some(Arc::new(own));
+            self.owned_gate.store(true, Ordering::Release);
+        }
+        Arc::clone(g.as_ref().unwrap())
+    }
+
+    /// The currently installed ownership view, if any.
+    pub fn ownership(&self) -> Option<Arc<Ownership>> {
+        if !self.owned_gate.load(Ordering::Acquire) {
+            return None;
+        }
+        self.ownership.lock().unwrap().clone()
+    }
+
+    /// Slot-ownership admission check for a keyed operation.  With no table
+    /// installed every key is served (standalone / legacy-static mode).
+    /// With a table: a shard serves keys whose slot it owns (or holds as a
+    /// ring successor of the owner, up to the replication factor); during a
+    /// migration the *old* owner ring keeps serving reads — the fallback
+    /// that makes cutover lossless — but bounces writes to the new owner.
+    /// Everything else is rejected with [`Error::Moved`] carrying the
+    /// current epoch, telling a stale client to refetch its table.
+    pub fn check_owned(&self, key: &str, write: bool) -> Result<()> {
+        if !self.owned_gate.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let Some(own) = self.ownership() else { return Ok(()) };
+        let slot = hash_slot(key);
+        let a = own.table.assign_for_slot(slot);
+        let n = own.table.n_shards() as u16;
+        // A shard whose index is outside the table's membership has been
+        // drained out by a shrink: the ring arithmetic below would alias
+        // it onto `shard % n` and let it serve keys it no longer holds
+        // (its copies were deleted at cutover), so it bounces everything.
+        if own.shard >= n {
+            return Err(Error::Moved(own.table.epoch));
+        }
+        if own.in_ring(a.shard, n, own.shard) {
+            return Ok(());
+        }
+        // Mid-shrink the two moduli differ: migration sources sit above
+        // every owner, so the ring under the *final* membership
+        // (`owner_count`) is narrower than under `n_shards`.  Writes into
+        // that final ring are what the drain streams (and what clients on
+        // the committed table will send) — accept them under either
+        // modulus (but never on a shard the final membership drops).
+        let oc = own.table.owner_count() as u16;
+        if oc != n && own.shard < oc && own.in_ring(a.shard, oc, own.shard) {
+            return Ok(());
+        }
+        if let Some(old) = a.from {
+            if !write && own.in_ring(old, n, own.shard) {
+                return Ok(());
+            }
+        }
+        Err(Error::Moved(own.table.epoch))
+    }
+
+    /// Whether a *miss* on `key` must bounce instead of answering
+    /// `NotFound`: the key's slot is mid-migration and this shard is only
+    /// a member of the **new** owner ring — the transfer may simply not
+    /// have landed the key here yet, so a miss is not authoritative.  A
+    /// client holding a pre-migration table would otherwise read a
+    /// confident `NotFound` from the new ring and never consult the old
+    /// owner.  Members of the old (`from`) ring answer misses honestly:
+    /// they are where the data lives until cutover, so their miss is
+    /// authoritative.  Returns the epoch to carry in the bounce.
+    pub fn migrating_miss(&self, key: &str) -> Option<u64> {
+        if !self.owned_gate.load(Ordering::Relaxed) {
+            return None;
+        }
+        let own = self.ownership()?;
+        let slot = hash_slot(key);
+        let a = own.table.assign_for_slot(slot);
+        let old = a.from?;
+        let n = own.table.n_shards() as u16;
+        let oc = own.table.owner_count() as u16;
+        let in_new = (own.shard < n && own.in_ring(a.shard, n, own.shard))
+            || (oc != n && own.shard < oc && own.in_ring(a.shard, oc, own.shard));
+        if in_new && !own.in_ring(old, n, own.shard) {
+            Some(own.table.epoch)
+        } else {
+            None
         }
     }
 
@@ -1154,6 +1287,66 @@ impl Store {
             .get(key)
             .cloned()
             .ok_or_else(|| Error::KeyNotFound(key.to_string()))
+    }
+
+    /// All resident tensor keys whose hash slot falls in `[lo, hi]`,
+    /// generation-ordered: step keys sort by `(field, step, key)` so a
+    /// reshard transfer window moves whole generations together (and in
+    /// step order, oldest first), untracked keys sort lexically among
+    /// themselves.  The reshard driver's per-range export manifest
+    /// (`ExportSlots`).  Metadata keys are not exported — they are
+    /// node-local coordination state, not governed data.
+    pub fn keys_in_slots(&self, lo: u16, hi: u16) -> Vec<String> {
+        self.counters.ops.fetch_add(1, Ordering::Relaxed);
+        let mut out = Vec::new();
+        for sh in &self.shards {
+            let s = sh.lock().unwrap();
+            out.extend(
+                s.tensors
+                    .keys()
+                    .filter(|k| {
+                        let slot = hash_slot(k);
+                        lo <= slot && slot <= hi
+                    })
+                    .cloned(),
+            );
+        }
+        fn gen_order(k: &str) -> (&str, u64, &str) {
+            match parse_step_key(k) {
+                Some((field, step)) => (field, step, k),
+                None => (k, 0, k),
+            }
+        }
+        out.sort_by(|a, b| gen_order(a).cmp(&gen_order(b)));
+        out
+    }
+
+    /// Append a tensor directly to the cold tier, bypassing the resident
+    /// store — the cluster-wide retirement path, which lands every member
+    /// of a retired generation in exactly one shard's spill log.  Fails
+    /// when no spill directory is configured (the caller picked the wrong
+    /// shard) or the writer's backlog budget is exhausted (backpressure,
+    /// retryable).
+    pub fn cold_put(&self, key: &str, t: Tensor) -> Result<()> {
+        t.validate()?;
+        self.counters.ops.fetch_add(1, Ordering::Relaxed);
+        let bytes = t.nbytes() as u64;
+        let g = self.spill.lock().unwrap();
+        let Some(h) = g.as_ref() else {
+            return Err(Error::Invalid(format!(
+                "cold_put {key}: no cold tier configured on this shard"
+            )));
+        };
+        if !h.shared.try_reserve_pending(bytes) {
+            return Err(Error::Busy(format!(
+                "cold tier backlog over budget ({bytes} bytes pending append)"
+            )));
+        }
+        h.tx
+            .send(SpillMsg::Record { key: key.to_string(), tensor: t })
+            .map_err(|_| Error::Invalid("spill writer thread is gone".into()))?;
+        h.shared.mark_dirty();
+        Ok(())
     }
 
     /// All tensor keys with a prefix, sorted (dataloader discovery).

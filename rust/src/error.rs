@@ -31,6 +31,12 @@ pub enum Error {
     /// retention policy allows.  Backpressure, not corruption — the caller
     /// may retry once the consumer has advanced (or raise the cap/window).
     Busy(String),
+    /// The shard no longer owns the request's hash slot: the cluster is at
+    /// the carried ownership epoch and the client's routing table is
+    /// stale.  Refetch the table and retry — the data moved, it isn't
+    /// gone.  The cluster client handles this transparently; user code
+    /// only sees it if it dials shards directly.
+    Moved(u64),
 }
 
 impl Error {
@@ -71,9 +77,11 @@ impl fmt::Display for Error {
             Error::Remote(m) => write!(f, "remote error: {m}"),
             Error::Invalid(m) => write!(f, "invalid: {m}"),
             Error::Timeout(m) => write!(f, "timeout: {m}"),
-            // The "busy: " prefix is load-bearing: remote errors travel as
-            // strings and the client maps it back to `Error::Busy`.
+            // The "busy: " / "moved: " prefixes are load-bearing: remote
+            // errors travel as strings and the client maps them back to
+            // `Error::Busy` / `Error::Moved`.
             Error::Busy(m) => write!(f, "busy: {m}"),
+            Error::Moved(epoch) => write!(f, "moved: {epoch}"),
         }
     }
 }

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   serve        run a database server
 //!   info         query a running database
+//!   reshard      live-rebalance cluster slots (or backfill a restarted shard)
+//!   retire       archive one generation to exactly one cold tier, drop hot copies
 //!   calibrate    measure real DB + PJRT costs, print CostModel constants
 //!   train        end-to-end in-situ training (paper §4, scaled)
 //!   bench-transfer / bench-inference   DES scaling sweeps (Figs 3-6, 8)
@@ -50,6 +52,8 @@ fn run(args: &Args) -> Result<()> {
     match args.command.as_deref() {
         Some("serve") => cmd_serve(args),
         Some("info") => cmd_info(args),
+        Some("reshard") => cmd_reshard(args),
+        Some("retire") => cmd_retire(args),
         Some("calibrate") => cmd_calibrate(args),
         Some("train") => cmd_train(args),
         Some("hybrid") => cmd_hybrid(args),
@@ -83,6 +87,21 @@ USAGE: situ <command> [flags]
                    and spill-to-disk cold-tier counters; or
                    --addrs a:p,b:p,... [--replicas N]  aggregate a cluster
                    (adds client-side replication/failover counters)
+  reshard          --addrs a:p,b:p,...  [--from N] [--replicas R] [--window K]
+                   live-rebalance the cluster to an even slot split over the
+                   given (full) address list: installs an epoch-versioned
+                   ownership table, streams moved slot ranges between shards
+                   in pipelined windows with old-owner read fallback, then
+                   commits and cleans up — zero governed-data loss under
+                   load.  --from N seeds the pre-reshard shard count for a
+                   cluster that never held a table; --to N shrinks onto the
+                   first N shards (the full list is still needed to drain
+                   the rest).
+                   --backfill S  instead repopulates restarted shard S from
+                   its replica ring (same streaming path)
+  retire           --addrs a:p,b:p,... --field F --step N
+                   archive generation N of field F to exactly one cold tier
+                   (each key's slot owner), then delete every hot copy
   calibrate        [--artifacts DIR]   measure real costs, print CostModel
   train            [--epochs N --sim-ranks R --ml-ranks M --steps S]
                    [--window W --overwrite --retention-window W --db-max-bytes B
@@ -252,6 +271,93 @@ fn cmd_info(args: &Args) -> Result<()> {
     if !i.fields.is_empty() {
         situ::telemetry::field_pressure_table(&i).print();
     }
+    Ok(())
+}
+
+fn parse_addrs(args: &Args) -> Result<Vec<SocketAddr>> {
+    args.str_opt("addrs")
+        .ok_or_else(|| Error::Invalid("--addrs a:p,b:p,... is required".into()))?
+        .split(',')
+        .map(|s| s.trim().parse::<SocketAddr>())
+        .collect::<std::result::Result<Vec<_>, _>>()
+        .map_err(|_| Error::Invalid("bad --addrs".into()))
+}
+
+/// Live-rebalance the cluster (`situ reshard`), or with `--backfill S`
+/// repopulate a restarted shard through the same streaming machinery.
+fn cmd_reshard(args: &Args) -> Result<()> {
+    let addrs = parse_addrs(args)?;
+    let replicas = args.usize_or("replicas", 1)?;
+    let window = args.usize_or("window", 0)?;
+    if let Some(shard) = args.str_opt("backfill") {
+        let shard = shard
+            .parse::<usize>()
+            .map_err(|_| Error::Invalid("bad --backfill shard index".into()))?;
+        let rep = situ::orchestrator::backfill(&situ::orchestrator::BackfillConfig {
+            addrs,
+            shard,
+            replicas,
+            window,
+        })?;
+        println!(
+            "backfilled shard {shard}: epoch={} ranges={} keys={} bytes={} rounds={}",
+            rep.epoch,
+            rep.ranges,
+            rep.keys,
+            fmt::bytes(rep.bytes),
+            rep.transfer_rounds
+        );
+        return Ok(());
+    }
+    let rep = situ::orchestrator::reshard(&situ::orchestrator::ReshardConfig {
+        addrs,
+        from_shards: args.usize_or("from", 0)?,
+        to_shards: args.usize_or("to", 0)?,
+        replicas,
+        window,
+    })?;
+    println!(
+        "resharded: epoch {} -> {} moved_ranges={} keys={} bytes={} rounds={}",
+        rep.from_epoch,
+        rep.to_epoch,
+        rep.moved_ranges,
+        rep.moved_keys,
+        fmt::bytes(rep.moved_bytes),
+        rep.transfer_rounds
+    );
+    if !rep.unreachable_shards.is_empty() {
+        eprintln!(
+            "warning: shards {:?} were unreachable during the reshard; run \
+             `situ reshard --backfill <shard>` once they are back",
+            rep.unreachable_shards
+        );
+    }
+    Ok(())
+}
+
+/// Retire one governed generation to exactly one cold tier cluster-wide.
+fn cmd_retire(args: &Args) -> Result<()> {
+    let addrs = parse_addrs(args)?;
+    let field = args
+        .str_opt("field")
+        .ok_or_else(|| Error::Invalid("--field is required".into()))?
+        .to_string();
+    let step = args.usize_or("step", usize::MAX)?;
+    if step == usize::MAX {
+        return Err(Error::Invalid("--step is required".into()));
+    }
+    let rep = situ::orchestrator::retire_generation(&situ::orchestrator::RetireConfig {
+        addrs,
+        field,
+        step: step as u64,
+    })?;
+    println!(
+        "retired step {step}: archived={} bytes={} deleted_copies={} missing={}",
+        rep.archived,
+        fmt::bytes(rep.archived_bytes),
+        rep.deleted_copies,
+        rep.missing
+    );
     Ok(())
 }
 

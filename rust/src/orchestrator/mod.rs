@@ -4,8 +4,13 @@
 
 pub mod deployment;
 pub mod driver;
+pub mod reshard;
 
 pub use deployment::DeploymentPlan;
 pub use driver::{
     Driver, HybridServingConfig, HybridServingReport, InSituTrainingConfig, InSituTrainingReport,
+};
+pub use reshard::{
+    backfill, reshard, retire_generation, BackfillConfig, BackfillReport, ReshardConfig,
+    ReshardReport, RetireConfig, RetireReport,
 };

@@ -1,0 +1,646 @@
+//! Driver-coordinated elastic-cluster operations.
+//!
+//! Three jobs share one streaming engine ([`stream_range`]):
+//!
+//! - [`reshard`] — live topology change (grow or shrink the shard count).
+//!   Computes the moved slot ranges between the installed table and the
+//!   even split over the new address list, installs the *migrating* table
+//!   (epoch `e+1`, `from` markers set) on every shard, streams each moved
+//!   range from the old owner's ring to the new owner's ring, installs the
+//!   *committed* table (epoch `e+2`, markers cleared), then deletes the
+//!   transferred copies from ring members that no longer serve them.
+//! - [`backfill`] — repopulate a restarted (empty) shard from its ring
+//!   peers, using the same manifest + windowed streaming path.
+//! - [`retire_generation`] — archive one governed generation to **exactly
+//!   one** cold tier (each key's current slot owner) and then delete every
+//!   hot copy cluster-wide.
+//!
+//! ## Why ordering gives zero loss
+//!
+//! The migrating table is installed on the old owner **before** the
+//! transfer manifest is taken.  From that moment the old owner bounces
+//! writes for the moved slots with `moved: <epoch>`, so clients re-route
+//! to the new ring and the manifest is a complete snapshot of everything
+//! that will ever live on the old side.  Reads keep working throughout:
+//! stale clients are bounced to refetch, fresh clients fall back to the
+//! old ring for keys the stream has not landed yet.
+//!
+//! ## Transfer cost
+//!
+//! Each window is one pipelined read batch from the source plus one
+//! **multiplexed tagged write round** across the destination ring — the
+//! window's wall-clock cost is the *max* over destinations, not the sum
+//! (`benches/fig_reshard.rs` gates this as rounds, not per-shard sends).
+//!
+//! ## Fault tolerance
+//!
+//! Every per-shard RPC is allowed to fail: an unreachable source is
+//! skipped (later sources cover its keys — with `--replicas 2` every
+//! moved key has a second copy somewhere), an unreachable destination is
+//! skipped as long as at least one ring member takes each key, and an
+//! unreachable shard misses the table install (it picks the table up at
+//! `backfill` time).  The one hard failure is a key that *no* destination
+//! accepted — that aborts the reshard with the migrating table still
+//! installed, so reads keep falling back to the old owner and the
+//! operation can simply be re-run.
+
+use std::collections::{BTreeSet, HashSet};
+use std::net::SocketAddr;
+
+use crate::client::{Client, DataStore};
+use crate::db::cluster::SlotEpoch;
+use crate::error::{Error, Result};
+use crate::proto::{Request, Response};
+use crate::tensor::Tensor;
+
+/// Keys per transfer window when the caller does not pick one.
+pub const DEFAULT_WINDOW: usize = 64;
+
+/// Inputs for [`reshard`].
+#[derive(Debug, Clone)]
+pub struct ReshardConfig {
+    /// The **full** post-reshard address list; index is the shard id.
+    pub addrs: Vec<SocketAddr>,
+    /// Shard count before the reshard.  Only consulted when no epoch
+    /// table is installed anywhere yet (a cluster that has never been
+    /// resharded); `0` means "assume the cluster already spans `addrs`".
+    pub from_shards: usize,
+    /// Shard count after the reshard (`0` = `addrs.len()`).  Pass fewer
+    /// than `addrs.len()` to *shrink*: the surplus shards' slots stream
+    /// back onto the survivors, but the full address list is still needed
+    /// to reach the shards being drained.
+    pub to_shards: usize,
+    /// Replication factor (clamped to `1..=addrs.len()`); must match what
+    /// the writing clients use.
+    pub replicas: usize,
+    /// Keys per transfer window (`0` → [`DEFAULT_WINDOW`]).
+    pub window: usize,
+}
+
+/// What [`reshard`] did.
+#[derive(Debug, Clone)]
+pub struct ReshardReport {
+    /// Epoch of the table the reshard started from (0 = static split).
+    pub from_epoch: u64,
+    /// Committed epoch every reachable shard ended on.
+    pub to_epoch: u64,
+    /// Contiguous slot ranges that changed owner.
+    pub moved_ranges: usize,
+    /// Tensors streamed to their new ring.
+    pub moved_keys: u64,
+    /// Payload bytes streamed.
+    pub moved_bytes: u64,
+    /// Read + write rounds spent streaming (each write round covers the
+    /// whole destination ring via tagged multiplexing).
+    pub transfer_rounds: u64,
+    /// Shards that could not be reached during the run (they missed the
+    /// install and/or their copies; `backfill` heals them on restart).
+    pub unreachable_shards: Vec<usize>,
+}
+
+/// Inputs for [`backfill`].
+#[derive(Debug, Clone)]
+pub struct BackfillConfig {
+    /// The full cluster address list; index is the shard id.
+    pub addrs: Vec<SocketAddr>,
+    /// The restarted (empty) shard to repopulate.
+    pub shard: usize,
+    /// Replication factor the cluster runs with.
+    pub replicas: usize,
+    /// Keys per transfer window (`0` → [`DEFAULT_WINDOW`]).
+    pub window: usize,
+}
+
+/// What [`backfill`] did.
+#[derive(Debug, Clone)]
+pub struct BackfillReport {
+    /// Epoch of the table the shard was (re-)enrolled under.
+    pub epoch: u64,
+    /// Slot ranges whose ring contains the shard.
+    pub ranges: usize,
+    /// Tensors restored onto the shard.
+    pub keys: u64,
+    /// Payload bytes restored.
+    pub bytes: u64,
+    /// Read + write rounds spent streaming.
+    pub transfer_rounds: u64,
+}
+
+/// Inputs for [`retire_generation`].
+#[derive(Debug, Clone)]
+pub struct RetireConfig {
+    /// The full cluster address list; index is the shard id.
+    pub addrs: Vec<SocketAddr>,
+    /// Field whose generation is being retired (keys are
+    /// `{field}_rank{r}_step{step}`).
+    pub field: String,
+    /// The generation (simulation step) to retire.
+    pub step: u64,
+}
+
+/// What [`retire_generation`] did.
+#[derive(Debug, Clone)]
+pub struct RetireReport {
+    /// Keys archived to a cold tier (exactly one copy each).
+    pub archived: u64,
+    /// Payload bytes archived.
+    pub archived_bytes: u64,
+    /// Hot copies deleted cluster-wide (replicas make this larger than
+    /// `archived`).
+    pub deleted_copies: u64,
+    /// Keys of the generation that were already gone everywhere.
+    pub missing: u64,
+}
+
+/// Lazily-connected per-shard admin connections.  A failed RPC drops the
+/// connection; the next use reconnects, so a shard that comes back
+/// mid-operation rejoins transparently.
+struct Fleet {
+    addrs: Vec<SocketAddr>,
+    conns: Vec<Option<Client>>,
+}
+
+impl Fleet {
+    fn new(addrs: &[SocketAddr]) -> Fleet {
+        Fleet { addrs: addrs.to_vec(), conns: addrs.iter().map(|_| None).collect() }
+    }
+
+    fn len(&self) -> usize {
+        self.addrs.len()
+    }
+
+    fn client(&mut self, shard: usize) -> Result<&mut Client> {
+        if self.conns[shard].is_none() {
+            self.conns[shard] = Some(Client::connect(self.addrs[shard])?);
+        }
+        Ok(self.conns[shard].as_mut().expect("just connected"))
+    }
+
+    /// Forget a connection after a failed RPC — the stream may be
+    /// desynced, and reconnecting is the only safe retry.
+    fn drop_conn(&mut self, shard: usize) {
+        self.conns[shard] = None;
+    }
+}
+
+/// The replica ring for `owner` under a membership of `n` shards.
+fn ring(owner: usize, replicas: usize, n: usize) -> Vec<usize> {
+    let n = n.max(1);
+    (0..replicas.max(1).min(n)).map(|i| (owner + i) % n).collect()
+}
+
+/// Highest-epoch table installed on any reachable shard, if any.
+fn installed_table(fleet: &mut Fleet) -> Option<SlotEpoch> {
+    let mut best: Option<SlotEpoch> = None;
+    for i in 0..fleet.len() {
+        let table = match fleet.client(i).and_then(|c| c.cluster_epoch()) {
+            Ok((_, t)) => t,
+            Err(_) => {
+                fleet.drop_conn(i);
+                continue;
+            }
+        };
+        if table.assignments.is_empty() {
+            continue;
+        }
+        if best.as_ref().map_or(true, |b| table.epoch > b.epoch) {
+            best = Some(table);
+        }
+    }
+    best
+}
+
+/// Install `table` on every reachable shard (each learns its own index).
+/// Returns the shards that could not be reached; errors only when *no*
+/// shard took the install.
+fn install_all(fleet: &mut Fleet, replicas: usize, table: &SlotEpoch) -> Result<Vec<usize>> {
+    let mut missed = Vec::new();
+    let mut landed = 0usize;
+    for i in 0..fleet.len() {
+        let r = fleet
+            .client(i)
+            .and_then(|c| c.install_epoch(i as u16, replicas as u16, table.clone()));
+        match r {
+            Ok(_) => landed += 1,
+            Err(_) => {
+                fleet.drop_conn(i);
+                missed.push(i);
+            }
+        }
+    }
+    if landed == 0 {
+        return Err(Error::Invalid(format!(
+            "no shard reachable to install epoch {}",
+            table.epoch
+        )));
+    }
+    Ok(missed)
+}
+
+/// Streaming counters shared by the three entry points.
+#[derive(Default)]
+struct Transfer {
+    keys: u64,
+    bytes: u64,
+    rounds: u64,
+}
+
+/// Stream every key hashing into `lo..=hi` that any shard in `sources`
+/// holds onto every shard in `dests`, `window` keys at a time.  `done`
+/// dedupes across sources (replica copies of the same key stream once)
+/// and doubles as the caller's transfer manifest.
+///
+/// Sources are consulted in order; an unreachable one is skipped.  Each
+/// window is one `MGetTensors` read from the source plus one multiplexed
+/// tagged `Batch(PutTensor..)` round across the destinations.  A key that
+/// lands on zero destinations is a hard error — the caller must not
+/// proceed to a state where the source copies get deleted.
+fn stream_range(
+    fleet: &mut Fleet,
+    sources: &[usize],
+    dests: &[usize],
+    lo: u16,
+    hi: u16,
+    window: usize,
+    done: &mut HashSet<String>,
+    xfer: &mut Transfer,
+) -> Result<()> {
+    let window = window.max(1);
+    for &src in sources {
+        let manifest = match fleet.client(src).and_then(|c| c.export_slots(lo, hi)) {
+            Ok(keys) => keys,
+            Err(_) => {
+                // Dead or desynced source: its keys either already
+                // streamed from an earlier source or stream from a later
+                // replica holder.
+                fleet.drop_conn(src);
+                continue;
+            }
+        };
+        let manifest: Vec<String> =
+            manifest.into_iter().filter(|k| !done.contains(k)).collect();
+        for win in manifest.chunks(window) {
+            // Read round: bulk-fetch from the source.  MGetTensors is
+            // ownership-exempt, so a surviving replica whose placement the
+            // new table cannot describe is still readable here.
+            let resp = match fleet
+                .client(src)
+                .and_then(|c| c.call(&Request::MGetTensors { keys: win.to_vec() }))
+            {
+                Ok(r) => r,
+                Err(_) => {
+                    fleet.drop_conn(src);
+                    break;
+                }
+            };
+            xfer.rounds += 1;
+            let mut pairs: Vec<(&String, Tensor)> = Vec::with_capacity(win.len());
+            for (key, entry) in win.iter().zip(resp.expect_batch(win.len())?) {
+                match entry {
+                    Response::Tensor(t) => pairs.push((key, t)),
+                    // Evicted between manifest and read: the retention
+                    // policy retired it, which is governance, not loss.
+                    Response::NotFound => {}
+                    other => {
+                        other.expect_ok()?;
+                        return Err(Error::Protocol(
+                            "unexpected MGetTensors entry during reshard".into(),
+                        ));
+                    }
+                }
+            }
+            if pairs.is_empty() {
+                continue;
+            }
+            // Write round: one tagged batch per destination, all in
+            // flight before any reply is collected — max-of-ring cost.
+            let batch = Request::Batch(
+                pairs
+                    .iter()
+                    .map(|(k, t)| Request::PutTensor { key: (*k).clone(), tensor: t.clone() })
+                    .collect(),
+            );
+            let mut tags: Vec<(usize, u32)> = Vec::with_capacity(dests.len());
+            for &d in dests {
+                match fleet.client(d).and_then(|c| c.send_tagged(&batch)) {
+                    Ok(t) => tags.push((d, t)),
+                    Err(_) => fleet.drop_conn(d),
+                }
+            }
+            xfer.rounds += 1;
+            let mut landed = vec![0usize; pairs.len()];
+            for (d, tag) in tags {
+                let per = match fleet.client(d) {
+                    Ok(c) => c
+                        .recv_tagged(tag)
+                        .and_then(|r| r.expect_batch(pairs.len()))
+                        .ok(),
+                    Err(_) => None,
+                };
+                match per {
+                    Some(entries) => {
+                        for (j, e) in entries.into_iter().enumerate() {
+                            if e.expect_ok().is_ok() {
+                                landed[j] += 1;
+                            }
+                        }
+                    }
+                    None => fleet.drop_conn(d),
+                }
+            }
+            for (j, (key, t)) in pairs.into_iter().enumerate() {
+                if landed[j] == 0 {
+                    return Err(Error::Invalid(format!(
+                        "transfer of {key} landed on no destination shard; \
+                         aborting before any source copy is dropped"
+                    )));
+                }
+                xfer.keys += 1;
+                xfer.bytes += t.data.len() as u64;
+                done.insert(key.clone());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Live-reshard the cluster to the even slot split over `cfg.addrs`.
+/// Safe to re-run after a partial failure: the computation starts from
+/// whatever table is installed, and streaming is idempotent.
+pub fn reshard(cfg: &ReshardConfig) -> Result<ReshardReport> {
+    let n = cfg.addrs.len();
+    if n == 0 {
+        return Err(Error::Invalid("reshard needs at least one shard address".into()));
+    }
+    let replicas = cfg.replicas.clamp(1, n);
+    let window = if cfg.window == 0 { DEFAULT_WINDOW } else { cfg.window };
+    let mut fleet = Fleet::new(&cfg.addrs);
+
+    let cur = installed_table(&mut fleet).unwrap_or_else(|| {
+        SlotEpoch::initial(if cfg.from_shards == 0 { n } else { cfg.from_shards })
+    });
+    let from_epoch = cur.epoch;
+    let old_n = cur.n_shards().max(1);
+    if old_n > n {
+        return Err(Error::Invalid(format!(
+            "installed table spans {old_n} shards but only {n} addresses were \
+             given; pass the full cluster address list"
+        )));
+    }
+
+    let to = if cfg.to_shards == 0 { n } else { cfg.to_shards };
+    if to > n {
+        return Err(Error::Invalid(format!(
+            "--to {to} exceeds the {n} addresses given"
+        )));
+    }
+    let target = SlotEpoch::initial(to);
+    let moves = cur.moved_ranges(&target);
+    if moves.is_empty() {
+        // Topology already matches — still converge every shard on a
+        // committed table so ownership is enforced at one epoch.
+        let committed = cur.committed();
+        let unreachable = install_all(&mut fleet, replicas, &committed)?;
+        return Ok(ReshardReport {
+            from_epoch,
+            to_epoch: committed.epoch,
+            moved_ranges: 0,
+            moved_keys: 0,
+            moved_bytes: 0,
+            transfer_rounds: 0,
+            unreachable_shards: unreachable,
+        });
+    }
+
+    // Phase 1 — cutover for writes.  Once the old owner holds the
+    // migrating table it bounces writes for the moved slots, so the
+    // manifests taken below are complete snapshots.
+    let migrating = cur.with_moves(&moves);
+    let mut unreachable = install_all(&mut fleet, replicas, &migrating)?;
+
+    // Phase 2 — stream each moved range old ring → new ring.
+    let mut xfer = Transfer::default();
+    let mut manifests: Vec<(u16, Vec<usize>, Vec<usize>, HashSet<String>)> = Vec::new();
+    for &(lo, hi, old, new) in &moves {
+        // Source order: the old owner's ring under the *old* membership
+        // count (that is where the copies were written), then every other
+        // shard — a surviving replica of a crashed owner can sit on a
+        // shard no ring under the new membership describes.
+        let mut sources = ring(old as usize, replicas, old_n);
+        for s in 0..n {
+            if !sources.contains(&s) {
+                sources.push(s);
+            }
+        }
+        // Destination ring under the *final* membership (`to`), which is
+        // what the committed table will enforce; during the migration the
+        // server accepts writes under either modulus (`check_owned`).
+        let dests = ring(new as usize, replicas, to);
+        let mut done = HashSet::new();
+        stream_range(&mut fleet, &sources, &dests, lo, hi, window, &mut done, &mut xfer)?;
+        manifests.push((lo, ring(old as usize, replicas, old_n), dests, done));
+    }
+
+    // Phase 3 — commit: clear the `from` markers so reads stop falling
+    // back and misses become authoritative.
+    let committed = migrating.committed();
+    for i in install_all(&mut fleet, replicas, &committed)? {
+        if !unreachable.contains(&i) {
+            unreachable.push(i);
+        }
+    }
+
+    // Phase 4 — drop the transferred copies from old-ring members that
+    // are not part of the new ring.  Best-effort: a copy that survives a
+    // failed delete is unreachable garbage (reads no longer route there),
+    // reclaimed by retention or the shard's next backfill.  Deleting
+    // *after* commit keeps the fallback reads of phase 2/3 lossless, at
+    // the cost of a brief window where `DelKeys` on the old copy races
+    // the cleanup (documented in docs/cluster.md).
+    for (_lo, old_ring, dests, done) in &manifests {
+        if done.is_empty() {
+            continue;
+        }
+        let keys: Vec<String> = done.iter().cloned().collect();
+        for &m in old_ring {
+            if dests.contains(&m) {
+                continue;
+            }
+            if fleet.client(m).and_then(|c| c.del_keys(&keys)).is_err() {
+                fleet.drop_conn(m);
+            }
+        }
+    }
+
+    Ok(ReshardReport {
+        from_epoch,
+        to_epoch: committed.epoch,
+        moved_ranges: moves.len(),
+        moved_keys: xfer.keys,
+        moved_bytes: xfer.bytes,
+        transfer_rounds: xfer.rounds,
+        unreachable_shards: unreachable,
+    })
+}
+
+/// Repopulate a restarted (empty) shard from its ring peers and re-enroll
+/// it under the cluster's current epoch table.
+pub fn backfill(cfg: &BackfillConfig) -> Result<BackfillReport> {
+    let n = cfg.addrs.len();
+    if cfg.shard >= n {
+        return Err(Error::Invalid(format!(
+            "backfill target {} out of range ({n} addresses)",
+            cfg.shard
+        )));
+    }
+    let replicas = cfg.replicas.clamp(1, n);
+    let window = if cfg.window == 0 { DEFAULT_WINDOW } else { cfg.window };
+    let mut fleet = Fleet::new(&cfg.addrs);
+
+    let table = installed_table(&mut fleet).unwrap_or_else(|| SlotEpoch::initial(n));
+    // The restart wiped the shard's installed table along with its data —
+    // put it back first so the shard enforces ownership like its peers.
+    fleet
+        .client(cfg.shard)?
+        .install_epoch(cfg.shard as u16, replicas as u16, table.clone())?;
+
+    let m = table.n_shards().max(1);
+    let mut xfer = Transfer::default();
+    let mut ranges = 0usize;
+    for a in &table.assignments {
+        let r = ring(a.shard as usize, replicas, m);
+        if !r.contains(&cfg.shard) {
+            continue;
+        }
+        ranges += 1;
+        // Ring peers first (they hold the replicas), then everyone else
+        // in case copies are mid-flight from an unfinished reshard.
+        let mut sources: Vec<usize> = r.iter().copied().filter(|&s| s != cfg.shard).collect();
+        for s in 0..n {
+            if s != cfg.shard && !sources.contains(&s) {
+                sources.push(s);
+            }
+        }
+        let mut done = HashSet::new();
+        stream_range(
+            &mut fleet,
+            &sources,
+            &[cfg.shard],
+            a.lo,
+            a.hi,
+            window,
+            &mut done,
+            &mut xfer,
+        )?;
+    }
+    Ok(BackfillReport {
+        epoch: table.epoch,
+        ranges,
+        keys: xfer.keys,
+        bytes: xfer.bytes,
+        transfer_rounds: xfer.rounds,
+    })
+}
+
+/// Retire one governed generation cluster-wide: archive each key to the
+/// cold tier of its current slot owner (**exactly one** archived copy per
+/// key), then delete every hot copy.  A key is only deleted once its
+/// archive write was acknowledged.
+pub fn retire_generation(cfg: &RetireConfig) -> Result<RetireReport> {
+    let n = cfg.addrs.len();
+    if n == 0 {
+        return Err(Error::Invalid("retire needs at least one shard address".into()));
+    }
+    let mut fleet = Fleet::new(&cfg.addrs);
+    let table = installed_table(&mut fleet).unwrap_or_else(|| SlotEpoch::initial(n));
+    let m = table.n_shards().max(1).min(n);
+
+    // The generation's keys, unioned across every reachable shard —
+    // replicas produce duplicates, the set removes them.
+    let prefix = format!("{}_rank", cfg.field);
+    let suffix = format!("_step{}", cfg.step);
+    let mut keys: BTreeSet<String> = BTreeSet::new();
+    for i in 0..n {
+        match fleet.client(i).and_then(|c| c.list_keys(&prefix)) {
+            Ok(ks) => keys.extend(ks.into_iter().filter(|k| k.ends_with(&suffix))),
+            Err(_) => fleet.drop_conn(i),
+        }
+    }
+
+    let mut report = RetireReport {
+        archived: 0,
+        archived_bytes: 0,
+        deleted_copies: 0,
+        missing: 0,
+    };
+    let mut archived: Vec<String> = Vec::new();
+    for key in &keys {
+        // The deterministic archive home: the key's current slot owner.
+        let anchor = table.shard_for_key(key) % n;
+        // Find a readable copy — anchor's ring first, then any shard;
+        // hot tier first, then an existing cold copy.
+        let mut holders = ring(anchor, m, m);
+        for s in 0..n {
+            if !holders.contains(&s) {
+                holders.push(s);
+            }
+        }
+        let mut tensor: Option<Tensor> = None;
+        let mut already_cold_at_anchor = false;
+        'find: for pass in 0..2 {
+            for &h in &holders {
+                let req = if pass == 0 {
+                    Request::MGetTensors { keys: vec![key.clone()] }
+                } else {
+                    Request::ColdGet { key: key.clone() }
+                };
+                let got = match fleet.client(h).and_then(|c| c.call(&req)) {
+                    Ok(r) => r,
+                    Err(_) => {
+                        fleet.drop_conn(h);
+                        continue;
+                    }
+                };
+                let entry = if pass == 0 {
+                    got.expect_batch(1)?.pop().expect("arity checked")
+                } else {
+                    got
+                };
+                match entry {
+                    Response::Tensor(t) => {
+                        already_cold_at_anchor = pass == 1 && h == anchor;
+                        tensor = Some(t);
+                        break 'find;
+                    }
+                    _ => continue,
+                }
+            }
+        }
+        let Some(t) = tensor else {
+            report.missing += 1;
+            continue;
+        };
+        if !already_cold_at_anchor {
+            // Exactly-once placement: only the anchor archives.  If the
+            // anchor is down or has no cold tier configured, fail rather
+            // than delete the hot copies.
+            fleet.client(anchor)?.cold_put(key, &t)?;
+        }
+        report.archived += 1;
+        report.archived_bytes += t.data.len() as u64;
+        archived.push(key.clone());
+    }
+
+    // Delete the hot copies of everything that is safely archived, on
+    // every shard (the wire `DelKeys` op is ownership-exempt — it is the
+    // driver's cleanup primitive).
+    if !archived.is_empty() {
+        for i in 0..n {
+            match fleet.client(i).and_then(|c| c.del_keys(&archived)) {
+                Ok(d) => report.deleted_copies += d,
+                Err(_) => fleet.drop_conn(i),
+            }
+        }
+    }
+    Ok(report)
+}

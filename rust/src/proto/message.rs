@@ -29,6 +29,7 @@
 //!   and hand the borrowed payload slice straight to
 //!   [`crate::proto::frame::end_split_frame`].
 
+use crate::db::cluster::{SlotAssign, SlotEpoch, N_SLOTS};
 use crate::error::{Error, Result};
 use crate::tensor::{Bytes, DType, Tensor};
 
@@ -219,6 +220,27 @@ pub enum Request {
     /// Per-device execution statistics of the model runtime (the registry's
     /// `DeviceStats` accumulators).  Replies [`Response::ModelStats`].
     ModelStats,
+    /// Epoch-versioned slot-ownership exchange.  With `install` empty this
+    /// is a fetch: the server replies [`Response::EpochTable`] with
+    /// whatever table (possibly none — `shard == u16::MAX`, epoch 0) it
+    /// currently holds.  With `install = Some((shard, replicas, table))`
+    /// the server adopts `table`, its own shard index `shard`, and the
+    /// cluster's replication factor `replicas` (so it accepts writes for
+    /// slots it holds as a ring successor, not only as primary) *if* the
+    /// table's epoch is not older than the installed one, then replies its
+    /// (possibly unchanged) `EpochTable` — so install doubles as fetch and
+    /// a concurrent stale installer learns the newer epoch from the reply.
+    ClusterEpoch { install: Option<(u16, u16, SlotEpoch)> },
+    /// List every resident tensor key whose hash slot falls in
+    /// `[lo, hi]` — the reshard driver's per-range export manifest.
+    /// Replies [`Response::Keys`], generation-ordered per field so a
+    /// transfer window moves whole generations together.
+    ExportSlots { lo: u16, hi: u16 },
+    /// Append a tensor directly to this server's cold tier (bypassing the
+    /// resident store): the cluster-wide retirement path lands every
+    /// member of a retired generation in exactly one shard's spill log.
+    /// Replies `Ok`, or an error when no spill directory is configured.
+    ColdPut { key: String, tensor: Tensor },
 }
 
 /// Database-to-client replies.
@@ -242,6 +264,11 @@ pub enum Response {
     ModelStats(Vec<ModelDeviceStat>),
     /// Version number assigned by a `PutModel` publish.
     Version(u64),
+    /// Reply to `ClusterEpoch`: the server's shard index within the
+    /// installed table (`u16::MAX` when no table was ever installed — a
+    /// standalone server) and the table itself (epoch 0 with no
+    /// assignments when unset).
+    EpochTable { shard: u16, table: SlotEpoch },
 }
 
 // --- encoding helpers -------------------------------------------------------
@@ -304,6 +331,23 @@ fn str_wire_size(s: &str) -> usize {
 /// payload bytes.
 fn tensor_wire_size(t: &Tensor) -> usize {
     1 + 1 + 4 * t.shape.len() + 8 + t.data.len()
+}
+
+/// Slot-ownership table: epoch u64, count u32, then per assignment
+/// `lo, hi, shard, from` as u32 (`from == u32::MAX` means none).
+fn put_slot_epoch(buf: &mut Vec<u8>, t: &SlotEpoch) {
+    buf.extend_from_slice(&t.epoch.to_le_bytes());
+    buf.extend_from_slice(&(t.assignments.len() as u32).to_le_bytes());
+    for a in &t.assignments {
+        buf.extend_from_slice(&(a.lo as u32).to_le_bytes());
+        buf.extend_from_slice(&(a.hi as u32).to_le_bytes());
+        buf.extend_from_slice(&(a.shard as u32).to_le_bytes());
+        buf.extend_from_slice(&a.from.map(|s| s as u32).unwrap_or(u32::MAX).to_le_bytes());
+    }
+}
+
+fn slot_epoch_wire_size(t: &SlotEpoch) -> usize {
+    8 + 4 + 16 * t.assignments.len()
 }
 
 /// Byte-cursor used for decoding.  When constructed over a shared frame
@@ -414,6 +458,41 @@ impl<'a> Cur<'a> {
         Ok(t)
     }
 
+    /// Slot-ownership table (see [`put_slot_epoch`]).  Structurally
+    /// validated on decode — a malformed table is a protocol error, never
+    /// installed routing state.  Empty assignments are the "no table
+    /// installed" sentinel and skip range validation.
+    fn slot_epoch(&mut self) -> Result<SlotEpoch> {
+        let epoch = self.u64()?;
+        let n = self.u32()? as usize;
+        if n > N_SLOTS as usize {
+            return Err(Error::Protocol(format!("slot table of {n} ranges exceeds {N_SLOTS}")));
+        }
+        let mut assignments = Vec::with_capacity(n);
+        for _ in 0..n {
+            let lo = self.u32()?;
+            let hi = self.u32()?;
+            let shard = self.u32()?;
+            let from = self.u32()?;
+            if lo >= N_SLOTS as u32 || hi >= N_SLOTS as u32 || shard > u16::MAX as u32 {
+                return Err(Error::Protocol("slot assignment out of range".into()));
+            }
+            assignments.push(SlotAssign {
+                lo: lo as u16,
+                hi: hi as u16,
+                shard: shard as u16,
+                from: (from != u32::MAX)
+                    .then(|| u16::try_from(from).map_err(|_| Error::Protocol("bad from shard".into())))
+                    .transpose()?,
+            });
+        }
+        let table = SlotEpoch { epoch, assignments };
+        if !table.assignments.is_empty() {
+            table.validate().map_err(Error::Protocol)?;
+        }
+        Ok(table)
+    }
+
     fn done(&self) -> Result<()> {
         if self.i == self.b.len() {
             Ok(())
@@ -491,6 +570,9 @@ mod req_op {
     pub const COLD_GET: u8 = 18;
     pub const LIST_MODELS: u8 = 19;
     pub const MODEL_STATS: u8 = 20;
+    pub const CLUSTER_EPOCH: u8 = 21;
+    pub const EXPORT_SLOTS: u8 = 22;
+    pub const COLD_PUT: u8 = 23;
 }
 
 impl Request {
@@ -578,6 +660,28 @@ impl Request {
             }
             Request::ListModels => buf.push(req_op::LIST_MODELS),
             Request::ModelStats => buf.push(req_op::MODEL_STATS),
+            Request::ClusterEpoch { install } => {
+                buf.push(req_op::CLUSTER_EPOCH);
+                match install {
+                    None => buf.push(0),
+                    Some((shard, replicas, table)) => {
+                        buf.push(1);
+                        buf.extend_from_slice(&(*shard as u32).to_le_bytes());
+                        buf.extend_from_slice(&(*replicas as u32).to_le_bytes());
+                        put_slot_epoch(buf, table);
+                    }
+                }
+            }
+            Request::ExportSlots { lo, hi } => {
+                buf.push(req_op::EXPORT_SLOTS);
+                buf.extend_from_slice(&(*lo as u32).to_le_bytes());
+                buf.extend_from_slice(&(*hi as u32).to_le_bytes());
+            }
+            Request::ColdPut { key, tensor } => {
+                buf.push(req_op::COLD_PUT);
+                put_str(buf, key);
+                put_tensor(buf, tensor);
+            }
         }
     }
 
@@ -600,7 +704,12 @@ impl Request {
     /// one).  The server uses this to choose between recycling its scratch
     /// read buffer and handing the frame over to the store.
     pub fn frame_holds_payload(body: &[u8]) -> bool {
-        matches!(body.first(), Some(&req_op::PUT_TENSOR) | Some(&req_op::BATCH))
+        matches!(
+            body.first(),
+            // ColdPut's payload outlives execution too: the spill writer
+            // thread holds the bytes until they hit the segment log.
+            Some(&req_op::PUT_TENSOR) | Some(&req_op::BATCH) | Some(&req_op::COLD_PUT)
+        )
     }
 
     fn decode_cur(mut c: Cur<'_>) -> Result<Request> {
@@ -677,6 +786,37 @@ impl Request {
             req_op::COLD_GET => Request::ColdGet { key: c.str()? },
             req_op::LIST_MODELS => Request::ListModels,
             req_op::MODEL_STATS => Request::ModelStats,
+            req_op::CLUSTER_EPOCH => {
+                let install = match c.u8()? {
+                    0 => None,
+                    1 => {
+                        let shard = c.u32()?;
+                        if shard > u16::MAX as u32 {
+                            return Err(Error::Protocol(format!("bad shard index {shard}")));
+                        }
+                        let replicas = c.u32()?;
+                        if replicas == 0 || replicas > u16::MAX as u32 {
+                            return Err(Error::Protocol(format!("bad replica count {replicas}")));
+                        }
+                        let table = c.slot_epoch()?;
+                        if table.assignments.is_empty() {
+                            return Err(Error::Protocol("cannot install an empty table".into()));
+                        }
+                        Some((shard as u16, replicas as u16, table))
+                    }
+                    f => return Err(Error::Protocol(format!("bad install flag {f}"))),
+                };
+                Request::ClusterEpoch { install }
+            }
+            req_op::EXPORT_SLOTS => {
+                let lo = c.u32()?;
+                let hi = c.u32()?;
+                if lo >= N_SLOTS as u32 || hi >= N_SLOTS as u32 || lo > hi {
+                    return Err(Error::Protocol(format!("bad slot range {lo}..={hi}")));
+                }
+                Request::ExportSlots { lo: lo as u16, hi: hi as u16 }
+            }
+            req_op::COLD_PUT => Request::ColdPut { key: c.str()?, tensor: c.tensor()? },
             _ => return Err(Error::Protocol(format!("unknown request opcode {op}"))),
         };
         Ok(req)
@@ -712,6 +852,13 @@ impl Request {
             | Request::ColdList { .. }
             | Request::ListModels
             | Request::ModelStats => None,
+            // Control-plane and transfer ops are driver-directed at a
+            // specific shard (`on_shard`), never slot-routed: ColdPut in
+            // particular deliberately lands on the retirement anchor, not
+            // wherever its key would currently hash.
+            Request::ClusterEpoch { .. }
+            | Request::ExportSlots { .. }
+            | Request::ColdPut { .. } => None,
         }
     }
 
@@ -745,6 +892,12 @@ impl Request {
             Request::Retention { .. } => 24,
             Request::ColdList { prefix } => str_wire_size(prefix),
             Request::ColdGet { key } => str_wire_size(key),
+            Request::ClusterEpoch { install } => match install {
+                None => 1,
+                Some((_, _, table)) => 1 + 4 + 4 + slot_epoch_wire_size(table),
+            },
+            Request::ExportSlots { .. } => 8,
+            Request::ColdPut { key, tensor } => str_wire_size(key) + tensor_wire_size(tensor),
         };
         1 + fields // opcode + fields
     }
@@ -773,6 +926,7 @@ mod resp_op {
     pub const MODELS: u8 = 10;
     pub const MODEL_STATS: u8 = 11;
     pub const VERSION: u8 = 12;
+    pub const EPOCH_TABLE: u8 = 13;
 }
 
 impl Response {
@@ -875,6 +1029,12 @@ impl Response {
             Response::Version(v) => {
                 buf.push(resp_op::VERSION);
                 buf.extend_from_slice(&v.to_le_bytes());
+            }
+            Response::EpochTable { shard, table } => {
+                buf.push(resp_op::EPOCH_TABLE);
+                let s = if *shard == u16::MAX { u32::MAX } else { *shard as u32 };
+                buf.extend_from_slice(&s.to_le_bytes());
+                put_slot_epoch(buf, table);
             }
         }
     }
@@ -1044,6 +1204,17 @@ impl Response {
                 Response::ModelStats(ds)
             }
             resp_op::VERSION => Response::Version(c.u64()?),
+            resp_op::EPOCH_TABLE => {
+                let s = c.u32()?;
+                let shard = if s == u32::MAX {
+                    u16::MAX
+                } else if s < u16::MAX as u32 {
+                    s as u16
+                } else {
+                    return Err(Error::Protocol(format!("bad shard index {s}")));
+                };
+                Response::EpochTable { shard, table: c.slot_epoch()? }
+            }
             _ => return Err(Error::Protocol(format!("unknown response opcode {op}"))),
         };
         Ok(resp)
@@ -1077,6 +1248,7 @@ impl Response {
             // 1 device byte + 7 u64/f64 fields per row.
             Response::ModelStats(ds) => 4 + ds.len() * 57,
             Response::Version(_) => 8,
+            Response::EpochTable { table, .. } => 4 + slot_epoch_wire_size(table),
         };
         1 + fields
     }
@@ -1098,7 +1270,12 @@ impl Response {
             // producers can distinguish "retry later" from real failures.
             Response::Error(m) => match m.strip_prefix("busy: ") {
                 Some(rest) => Error::Busy(rest.to_string()),
-                None => Error::Remote(m),
+                // A shard rejecting a slot it no longer owns reports the
+                // epoch it is at; the cluster client refetches and retries.
+                None => match m.strip_prefix("moved: ").and_then(|r| r.parse::<u64>().ok()) {
+                    Some(epoch) => Error::Moved(epoch),
+                    None => Error::Remote(m),
+                },
             },
             other => Error::Protocol(format!("expected {want}, got {other:?}")),
         }
@@ -1184,6 +1361,15 @@ impl Response {
         match self {
             Response::ModelStats(ds) => Ok(ds),
             other => Err(other.unexpected("ModelStats")),
+        }
+    }
+
+    /// `EpochTable` → `(shard, table)` (`shard == u16::MAX` when the
+    /// server has no installed identity).
+    pub fn expect_epoch_table(self) -> Result<(u16, SlotEpoch)> {
+        match self {
+            Response::EpochTable { shard, table } => Ok((shard, table)),
+            other => Err(other.unexpected("EpochTable")),
         }
     }
 

@@ -58,8 +58,22 @@ pub use message::{
 #[cfg(test)]
 mod tests {
     use super::message::*;
+    use crate::db::cluster::{SlotAssign, SlotEpoch, N_SLOTS};
     use crate::tensor::{Bytes, DType, Tensor};
     use crate::util::propcheck::{check, Gen};
+
+    /// A small but structurally valid epoch table: three shards, the middle
+    /// range mid-migration (shard 2 taking over from shard 1).
+    fn sample_table() -> SlotEpoch {
+        SlotEpoch {
+            epoch: 7,
+            assignments: vec![
+                SlotAssign { lo: 0, hi: 5000, shard: 0, from: None },
+                SlotAssign { lo: 5001, hi: 11000, shard: 2, from: Some(1) },
+                SlotAssign { lo: 11001, hi: N_SLOTS - 1, shard: 2, from: None },
+            ],
+        }
+    }
 
     fn roundtrip_req(r: &Request) -> Request {
         let mut buf = Vec::new();
@@ -121,6 +135,13 @@ mod tests {
             Request::ColdGet { key: "f_rank0_step0".into() },
             Request::ListModels,
             Request::ModelStats,
+            Request::ClusterEpoch { install: None },
+            Request::ClusterEpoch { install: Some((2, 2, sample_table())) },
+            Request::ExportSlots { lo: 5001, hi: 11000 },
+            Request::ColdPut {
+                key: "f_rank0_step1".into(),
+                tensor: Tensor::from_f32(&[2], vec![4.0, 5.0]).unwrap(),
+            },
         ]
     }
 
@@ -233,6 +254,13 @@ mod tests {
                 },
             ]),
             Response::Version(4),
+            Response::EpochTable { shard: 2, table: sample_table() },
+            // The "no table installed" sentinel a standalone server replies
+            // with: shard unset, epoch 0, no assignments.
+            Response::EpochTable {
+                shard: u16::MAX,
+                table: SlotEpoch { epoch: 0, assignments: Vec::new() },
+            },
         ]
     }
 
@@ -712,6 +740,54 @@ mod tests {
             b.len()
         });
         assert!(r.routing_key().is_none(), "retention ops are whole-database");
+    }
+
+    #[test]
+    fn cluster_ops_are_driver_directed_and_strict() {
+        use crate::error::Error;
+        // The elastic-cluster ops are always aimed at a specific shard via
+        // on_shard, never slot-routed.
+        for r in [
+            Request::ClusterEpoch { install: None },
+            Request::ClusterEpoch { install: Some((0, 1, sample_table())) },
+            Request::ExportSlots { lo: 0, hi: 100 },
+            Request::ColdPut {
+                key: "k".into(),
+                tensor: Tensor::from_f32(&[1], vec![1.0]).unwrap(),
+            },
+        ] {
+            assert!(r.routing_key().is_none(), "{r:?} must not slot-route");
+            assert_eq!(roundtrip_req(&r), r);
+        }
+        // ColdPut carries a payload the spill writer retains past
+        // execution, so its frame must be handed over wholesale.
+        let mut buf = Vec::new();
+        Request::ColdPut { key: "k".into(), tensor: Tensor::from_f32(&[1], vec![2.0]).unwrap() }
+            .encode(&mut buf);
+        assert!(Request::frame_holds_payload(&buf));
+        // Installing an empty table is a protocol error (empty means "no
+        // table" and only appears in replies); an inverted export range too.
+        let mut buf = Vec::new();
+        Request::ClusterEpoch {
+            install: Some((0, 1, SlotEpoch { epoch: 3, assignments: Vec::new() })),
+        }
+        .encode(&mut buf);
+        assert!(Request::decode(&buf).is_err(), "empty install must be rejected");
+        let mut buf = Vec::new();
+        Request::ExportSlots { lo: 9, hi: 3 }.encode(&mut buf);
+        assert!(Request::decode(&buf).is_err(), "inverted slot range must be rejected");
+        // The "moved: <epoch>" reply string maps back to Error::Moved, the
+        // signal the cluster client retries on after a table refetch.
+        assert!(matches!(
+            Response::Error("moved: 42".into()).expect_ok(),
+            Err(Error::Moved(42))
+        ));
+        let (shard, table) = Response::EpochTable { shard: 1, table: sample_table() }
+            .expect_epoch_table()
+            .unwrap();
+        assert_eq!(shard, 1);
+        assert_eq!(table, sample_table());
+        assert!(Response::Ok.expect_epoch_table().is_err());
     }
 
     #[test]

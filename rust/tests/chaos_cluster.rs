@@ -27,6 +27,7 @@
 
 use std::io::{BufRead, BufReader, Write as _};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -35,8 +36,10 @@ use situ::client::{
 };
 use situ::db::{DbServer, Engine, RetentionConfig, ServerConfig, SpillConfig};
 use situ::ml::DataLoader;
+use situ::orchestrator::{backfill, reshard, BackfillConfig, ReshardConfig};
 use situ::tensor::Tensor;
 use situ::util::fault::{FaultConfig, FaultPlan};
+use situ::Error;
 
 fn chaos_steps() -> u64 {
     std::env::var("SITU_CHAOS_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(10)
@@ -499,4 +502,300 @@ fn real_process_kill_fails_over_with_zero_replicated_loss() {
         c.put_tensor(&tensor_key("pk", rank, gens), &payload(gens, rank)).unwrap();
     }
     assert_generations_byte_exact(&mut c, "pk", gens + 1, ranks);
+}
+
+// --- tentpole: live reshard under load ----------------------------------
+
+/// Converge a cluster that has never resharded onto a committed epoch
+/// table spanning `shard_addrs` (a no-move reshard), so slot ownership is
+/// enforced before the test starts moving data.  Returns the epoch.
+fn install_initial_table(shard_addrs: &[SocketAddr], replicas: usize) -> u64 {
+    let report = reshard(&ReshardConfig {
+        addrs: shard_addrs.to_vec(),
+        from_shards: 0,
+        to_shards: 0,
+        replicas,
+        window: 0,
+    })
+    .unwrap();
+    assert_eq!(report.moved_keys, 0, "a topology no-op moves no data");
+    report.to_epoch
+}
+
+/// A cluster client that has fetched the installed slot table (production
+/// clients refresh at startup; without it, routing starts from the static
+/// even split over the whole address list).
+fn cluster_with_table(shard_addrs: &[SocketAddr], replicas: usize) -> ClusterClient {
+    let mut c = replicated(shard_addrs, replicas);
+    c.refresh_slot_table().unwrap();
+    c
+}
+
+/// Grow a loaded 3-shard cluster to 4 while a writer and a windowed
+/// reader hammer it, then shrink back: zero governed generations lost,
+/// no client ever surfaces an error, every shard converges on the
+/// committed epoch, and stale clients are either bounced into a refetch
+/// (full address list) or told to reconnect (short address list).
+#[test]
+fn live_reshard_3_to_4_under_load_loses_nothing() {
+    let gens = chaos_steps().max(6);
+    let ranks = 4usize;
+    let mut servers = start_shards(4);
+    let all = addrs(&servers);
+    let first3 = all[..3].to_vec();
+
+    // The cluster starts as 3 enforced shards; the 4th server is up but
+    // owns no slots yet.
+    assert_eq!(install_initial_table(&first3, 2), 1);
+    let mut c = cluster_with_table(&all, 2);
+    assert_eq!(c.epoch(), 1);
+    write_generations(&mut c, "rs", gens, ranks);
+
+    // Concurrent load across the cutover: a writer streaming fresh
+    // generations and a reader gathering training windows.  Neither is
+    // allowed to surface a single error or a non-exact byte.
+    let stop = Arc::new(AtomicBool::new(false));
+    let w_stop = Arc::clone(&stop);
+    let w_addrs = all.clone();
+    let writer = std::thread::spawn(move || {
+        let mut wc = cluster_with_table(&w_addrs, 2);
+        let mut done = 0u64;
+        while !w_stop.load(Ordering::Relaxed) && done < 10_000 {
+            for rank in 0..2usize {
+                let key = tensor_key("live", rank, done);
+                wc.put_tensor(&key, &payload(done, rank))
+                    .unwrap_or_else(|e| panic!("write {key} errored mid-reshard: {e}"));
+            }
+            done += 1;
+        }
+        done
+    });
+    let r_stop = Arc::clone(&stop);
+    let r_addrs = all.clone();
+    let latest = gens - 1;
+    let window = gens.min(4);
+    let reader = std::thread::spawn(move || {
+        let rc = cluster_with_table(&r_addrs, 2);
+        let mut dl = DataLoader::new(rc, (0..4usize).collect(), "rs", 13);
+        let mut sweeps = 0u64;
+        loop {
+            let got = dl
+                .gather_window(latest, window)
+                .unwrap_or_else(|e| panic!("gather errored mid-reshard: {e}"));
+            let mut it = got.iter();
+            for gen in (latest + 1 - window)..=latest {
+                for rank in 0..4usize {
+                    assert_eq!(
+                        it.next().unwrap(),
+                        &payload(gen, rank),
+                        "gather diverged mid-reshard at gen {gen} rank {rank}"
+                    );
+                }
+            }
+            sweeps += 1;
+            if r_stop.load(Ordering::Relaxed) {
+                return sweeps;
+            }
+        }
+    });
+
+    // Grow 3 → 4, live.
+    let report = reshard(&ReshardConfig {
+        addrs: all.clone(),
+        from_shards: 0,
+        to_shards: 0,
+        replicas: 2,
+        window: 8,
+    })
+    .unwrap();
+    assert_eq!(report.from_epoch, 1);
+    assert_eq!(report.to_epoch, 3, "install + commit bump the epoch twice");
+    assert!(report.moved_ranges >= 1 && report.moved_keys > 0, "a grow moves data: {report:?}");
+    assert!(report.unreachable_shards.is_empty(), "every shard was up: {report:?}");
+
+    stop.store(true, Ordering::Relaxed);
+    let live_gens = writer.join().unwrap();
+    let sweeps = reader.join().unwrap();
+    assert!(sweeps > 0, "the reader must have gathered at least once");
+
+    // Every shard converged on the committed epoch.
+    for &a in &all {
+        let (_, table) = Client::connect(a).unwrap().cluster_epoch().unwrap();
+        assert_eq!(table.epoch, 3, "shard at {a} did not converge");
+    }
+
+    // Everything written before *and during* the reshard reads back
+    // byte-exact through a fresh client on the new table.
+    let mut after = cluster_with_table(&all, 2);
+    assert_eq!(after.epoch(), 3);
+    assert_generations_byte_exact(&mut after, "rs", gens, ranks);
+    for gen in 0..live_gens {
+        for rank in 0..2usize {
+            let key = tensor_key("live", rank, gen);
+            let got = after.get_tensor(&key).unwrap_or_else(|e| panic!("lost {key}: {e}"));
+            assert_eq!(got, payload(gen, rank), "mid-reshard write {key} not byte-exact");
+        }
+    }
+    // The new shard actually took ownership: some pre-reshard key now
+    // routes to it and its streamed copy is served directly.
+    let (mg, mr) = (0..gens)
+        .flat_map(|g| (0..ranks).map(move |r| (g, r)))
+        .find(|&(g, r)| after.slot_table().shard_for_key(&tensor_key("rs", r, g)) == 3)
+        .expect("some pre-reshard key must now be owned by the new shard");
+    assert_eq!(
+        Client::connect(all[3]).unwrap().get_tensor(&tensor_key("rs", mr, mg)).unwrap(),
+        payload(mg, mr),
+        "the new owner serves its streamed copy"
+    );
+
+    // A client still holding only the original 3 addresses cannot adopt
+    // the 4-shard table — it gets the designed reconnect error instead of
+    // silently misrouting to a truncated ring.
+    let mut short = replicated(&first3, 2);
+    match short.refresh_slot_table() {
+        Err(Error::Invalid(m)) => assert!(m.contains("full address list"), "{m}"),
+        other => panic!("short-list client must be told to reconnect, got {other:?}"),
+    }
+
+    // A single-replica probe pinned to the stale 4-shard table: after the
+    // shrink below, its only target for this key is the drained shard,
+    // so the read *must* ride a `moved:` bounce into a refetch.
+    let mut probe = cluster_with_table(&all, 1);
+    assert_eq!(probe.epoch(), 3);
+    let (pg, pr) = (0..gens)
+        .flat_map(|g| (0..ranks).map(move |r| (g, r)))
+        .find(|&(g, r)| probe.slot_table().shard_for_key(&tensor_key("rs", r, g)) == 3)
+        .expect("some key is owned by shard 3 under the 4-shard table");
+    let probe_key = tensor_key("rs", pr, pg);
+    assert_eq!(probe.get_tensor(&probe_key).unwrap(), payload(pg, pr));
+    assert_eq!(probe.epoch_refreshes(), 0, "fresh table, no bounce yet");
+
+    // Shrink 4 → 3: the drained shard's slots stream back to survivors.
+    let report = reshard(&ReshardConfig {
+        addrs: all.clone(),
+        from_shards: 0,
+        to_shards: 3,
+        replicas: 2,
+        window: 0,
+    })
+    .unwrap();
+    assert_eq!(report.from_epoch, 3);
+    assert_eq!(report.to_epoch, 5);
+    assert!(report.moved_keys > 0, "the drain moves the shard's data back: {report:?}");
+
+    let got = probe.get_tensor(&probe_key).unwrap_or_else(|e| panic!("stale probe read: {e}"));
+    assert_eq!(got, payload(pg, pr), "the bounced read still returns the exact data");
+    assert!(probe.epoch_refreshes() > 0, "the drained shard's bounce forced a refetch");
+    assert_eq!(probe.epoch(), 5);
+    assert!(probe.slot_table().shard_for_key(&probe_key) < 3, "owner is a survivor now");
+
+    // Post-shrink: all generations byte-exact, every shard (including the
+    // drained one) converged on the committed epoch.
+    let mut c3 = cluster_with_table(&all, 2);
+    assert_eq!(c3.epoch(), 5);
+    assert_generations_byte_exact(&mut c3, "rs", gens, ranks);
+    for &a in &all {
+        let (_, table) = Client::connect(a).unwrap().cluster_epoch().unwrap();
+        assert_eq!(table.epoch, 5, "shard at {a} did not converge after the shrink");
+    }
+    for s in &mut servers {
+        s.shutdown();
+    }
+}
+
+// --- tentpole: shard killed mid-reshard, then backfilled ----------------
+
+/// Kill a shard concurrently with a 3 → 4 reshard (`--replicas 2`): the
+/// stream falls over to the surviving replica copies, the reshard
+/// completes with zero replicated-data loss, the live shards converge on
+/// the committed epoch — and the restarted shard is healed by the same
+/// streaming path (`situ reshard --backfill`).
+#[test]
+fn shard_kill_mid_reshard_loses_no_replicated_data_and_backfill_heals() {
+    let gens = chaos_steps().max(6);
+    let ranks = 4usize;
+    let mut servers = start_shards(4);
+    let all = addrs(&servers);
+    let first3 = all[..3].to_vec();
+    assert_eq!(install_initial_table(&first3, 2), 1);
+    let mut c = cluster_with_table(&all, 2);
+    write_generations(&mut c, "mk", gens, ranks);
+
+    // Kill shard 1 while the reshard runs.  Whatever the interleaving —
+    // before the install, mid-stream, during cleanup — every one of its
+    // keys has a live copy on its ring successor.
+    let victim_addr = all[1];
+    let victim = servers.remove(1);
+    let killer = std::thread::spawn(move || {
+        let mut v = victim;
+        std::thread::sleep(Duration::from_millis(2));
+        v.simulate_crash();
+        v
+    });
+    let report = reshard(&ReshardConfig {
+        addrs: all.clone(),
+        from_shards: 0,
+        to_shards: 0,
+        replicas: 2,
+        window: 4,
+    })
+    .unwrap_or_else(|e| panic!("reshard must survive a single shard kill: {e}"));
+    let _victim = killer.join().unwrap();
+    assert_eq!(report.to_epoch, 3);
+    assert!(
+        report.unreachable_shards.iter().all(|&s| s == 1),
+        "only the killed shard may be missed: {report:?}"
+    );
+
+    // Zero replicated loss, shard still dead.  (A brand-new ClusterClient
+    // cannot connect while a shard is down, so the pre-kill client
+    // refreshes onto the committed table instead.)
+    c.refresh_slot_table().unwrap();
+    assert_eq!(c.epoch(), 3);
+    assert_generations_byte_exact(&mut c, "mk", gens, ranks);
+    for (i, &a) in all.iter().enumerate() {
+        if i == 1 {
+            continue;
+        }
+        let (_, table) = Client::connect(a).unwrap().cluster_epoch().unwrap();
+        assert_eq!(table.epoch, 3, "live shard {i} did not converge");
+    }
+
+    // Restart the shard empty and stream it back to health — the same
+    // windowed transfer path the reshard itself used.
+    let mut restarted = DbServer::start(ServerConfig { addr: victim_addr, ..shard_config() })
+        .unwrap_or_else(|e| panic!("rebind {victim_addr}: {e}"));
+    let heal =
+        backfill(&BackfillConfig { addrs: all.clone(), shard: 1, replicas: 2, window: 0 })
+            .unwrap();
+    assert_eq!(heal.epoch, 3, "backfill re-enrolls under the committed table");
+    assert!(heal.ranges > 0 && heal.keys > 0, "shard 1 sits in replica rings: {heal:?}");
+    let (_, table) = Client::connect(victim_addr).unwrap().cluster_epoch().unwrap();
+    assert_eq!(table.epoch, 3, "the restarted shard holds the table again");
+
+    // The restarted shard serves its own keys directly, byte-exact.
+    let mut direct = Client::connect(victim_addr).unwrap();
+    let mut served = 0usize;
+    for gen in 0..gens {
+        for rank in 0..ranks {
+            let key = tensor_key("mk", rank, gen);
+            if c.slot_table().shard_for_key(&key) == 1 {
+                assert_eq!(
+                    direct.get_tensor(&key).unwrap(),
+                    payload(gen, rank),
+                    "backfilled copy of {key} not byte-exact"
+                );
+                served += 1;
+            }
+        }
+    }
+    assert!(served > 0, "some key must be owned by the restarted shard");
+
+    // And the cluster as a whole is whole again.
+    std::thread::sleep(Duration::from_millis(300)); // > breaker cooldown
+    assert_generations_byte_exact(&mut c, "mk", gens, ranks);
+    restarted.shutdown();
+    for s in &mut servers {
+        s.shutdown();
+    }
 }
